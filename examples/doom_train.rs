@@ -1,0 +1,109 @@
+//! Tables 1 & 2 driver: doom_lite (ViZDoom CIG track-1 stand-in).
+//!
+//! Two-stage training per the paper's §4.2: stage 1 trains navigation
+//! with exploration shaping (fire disabled) — here folded into the
+//! curriculum by starting CSP training from scratch with entropy bonus;
+//! stage 2 is the CSP-MARL deathmatch league with uniform sampling over
+//! the most recent 50 models.  After training, the checkpoint is
+//! evaluated in the paper's four settings:
+//!   Table 1:  1 MyPlayer + 7 builtin bots
+//!   Table 2a: 1 MyPlayer + 1 F1 + 6 bots
+//!   Table 2b: 2 MyPlayer + 2 F1 + 4 bots
+//!   Table 2c: 4 MyPlayer + 4 F1
+//!
+//!     cargo run --release --example doom_train -- [steps] [matches]
+
+use std::sync::Arc;
+use std::time::Duration;
+use tleague::config::RunConfig;
+use tleague::envs::doom_lite::bots::{BuiltinBot, DoomPolicy, F1Bot};
+use tleague::eval::{doom_match, NnPolicy};
+use tleague::model_pool::ModelPoolClient;
+use tleague::orchestrator::Deployment;
+use tleague::runtime::Engine;
+
+fn eval_setting(
+    engine: &Arc<Engine>,
+    params: &[f32],
+    label: &str,
+    n_my: u64,
+    n_f1: u64,
+    n_bots: u64,
+    matches: u64,
+) -> anyhow::Result<()> {
+    let mut my_best = Vec::new();
+    let mut f1_best = Vec::new();
+    for g in 0..matches {
+        let mut nn: Vec<NnPolicy> = (0..n_my)
+            .map(|i| {
+                NnPolicy::new(engine.clone(), "doom_lite", params.to_vec(), g * 10 + i)
+            })
+            .collect();
+        let mut bots: Vec<Box<dyn DoomPolicy>> = Vec::new();
+        for i in 0..n_f1 {
+            bots.push(Box::new(F1Bot::new(g * 20 + i)));
+        }
+        for i in 0..n_bots {
+            bots.push(Box::new(BuiltinBot::new(g * 30 + i)));
+        }
+        let frags = doom_match(1000 + g, &mut nn, &mut bots)?;
+        my_best.push(*frags[..n_my as usize].iter().max().unwrap());
+        if n_f1 > 0 {
+            f1_best.push(
+                *frags[n_my as usize..(n_my + n_f1) as usize].iter().max().unwrap(),
+            );
+        }
+    }
+    let avg = |v: &[i32]| v.iter().sum::<i32>() as f64 / v.len().max(1) as f64;
+    println!("-- {label}: {n_my} MyPlayer + {n_f1} F1 + {n_bots} bots --");
+    println!("  MyPlayer best FRAG: {my_best:?}  avg {:.1}", avg(&my_best));
+    if !f1_best.is_empty() {
+        println!("  F1       best FRAG: {f1_best:?}  avg {:.1}", avg(&f1_best));
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let total_steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let matches: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    let engine = Arc::new(Engine::load("artifacts")?);
+    let mut cfg = RunConfig::default();
+    cfg.env = "doom_lite".into();
+    cfg.game_mgr = "uniform".into(); // paper: uniform over most recent 50
+    cfg.opponents_per_episode = 7;
+    cfg.actors_per_learner = 4;
+    cfg.total_steps = total_steps;
+    cfg.period_steps = (total_steps / 5).max(10);
+    cfg.publish_every = 4;
+    cfg.gamma = 0.995;
+    cfg.hp_overrides.insert("lr".into(), 8e-4);
+    cfg.hp_overrides.insert("ent_coef".into(), 0.015);
+    cfg.seed = 9;
+
+    println!("== doom_lite CSP league: {total_steps} learner steps, 8-player FFA ==");
+    let dep = Deployment::start(cfg, engine.clone())?;
+    while !dep.learners_done() {
+        std::thread::sleep(Duration::from_secs(2));
+        let lstats = dep.league_stats();
+        let ts = dep.learner_status[0].stats.lock().unwrap().clone();
+        println!(
+            "steps={:4} pool={:2} episodes={:4} frames={:7} loss={:+.3} ent={:.3}",
+            dep.total_learner_steps(), lstats.pool_size, lstats.episodes,
+            lstats.frames, ts.loss, ts.entropy
+        );
+    }
+    let pool = ModelPoolClient::connect(&dep.pool_addrs);
+    let params = pool.get_latest(0)?.expect("trained model").params;
+    let mut dep = dep;
+    dep.shutdown();
+
+    println!("\n== Table 1 ==");
+    eval_setting(&engine, &params, "Table 1", 1, 0, 7, matches)?;
+    println!("\n== Table 2 ==");
+    eval_setting(&engine, &params, "Table 2 top", 1, 1, 6, matches)?;
+    eval_setting(&engine, &params, "Table 2 middle", 2, 2, 4, matches)?;
+    eval_setting(&engine, &params, "Table 2 bottom", 4, 4, 0, matches)?;
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Perf/leak probe behind EXPERIMENTS.md §Perf rows 1–2: RSS stability
+//! of the buffer-based PJRT path and the cached-params inference
+//! speedup.
+//!
+//!     cargo run --release --example perf_probe
+
+use std::sync::Arc;
+use std::time::Instant;
+use tleague::runtime::Engine;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
+    line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+
+fn main() {
+    let engine = Arc::new(Engine::load("artifacts").unwrap());
+    let params = engine.init_params("pommerman").unwrap();
+    let obs = vec![0.1f32; 2 * 980];
+    println!("start rss={:.0} MB", rss_mb());
+    let t0 = Instant::now();
+    for i in 0..2000 {
+        let _ = engine.infer("pommerman", 1, &params, &obs).unwrap();
+        if i % 1000 == 999 {
+            println!("uncached iter {i}: rss={:.0} MB", rss_mb());
+        }
+    }
+    let uncached = t0.elapsed().as_secs_f64() / 2000.0;
+    let t0 = Instant::now();
+    for i in 0..2000 {
+        let _ = engine
+            .infer_cached("pommerman", 1, 7, &params, &obs)
+            .unwrap();
+        if i % 1000 == 999 {
+            println!("cached   iter {i}: rss={:.0} MB", rss_mb());
+        }
+    }
+    let cached = t0.elapsed().as_secs_f64() / 2000.0;
+    println!(
+        "infer b1 pommerman: uncached {:.3} ms, cached {:.3} ms ({:.2}x)",
+        uncached * 1e3,
+        cached * 1e3,
+        uncached / cached
+    );
+    println!("(rss must stay flat: the literal-arg execute path leaked ~2.9 MB/call)");
+}

@@ -1,0 +1,104 @@
+//! END-TO-END DRIVER (Fig 4 of the paper): Pommerman Team-mode CSP-MARL.
+//!
+//! Trains a ~770k-parameter centralized-value team policy with PPO and
+//! the paper's 35% self-play + 65% PFSP opponent sampling, through the
+//! full distributed stack (LeagueMgr / ModelPool / Learner / Actors).
+//! At every checkpoint the current model is evaluated against
+//! SimpleAgent (win-rate, tie = 0.5) and the Navocado stand-in (W/L/T) —
+//! the two curves of the paper's Figure 4.
+//!
+//!     cargo run --release --example pommerman_train -- [steps] [eval-games]
+
+use std::sync::Arc;
+use std::time::Duration;
+use tleague::config::RunConfig;
+use tleague::envs::pommerman::agents::{Navocado, ScriptedPolicy, SimpleAgent};
+use tleague::eval::{pommerman_record, NnPolicy};
+use tleague::model_pool::ModelPoolClient;
+use tleague::orchestrator::Deployment;
+use tleague::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let total_steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let eval_games: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(20);
+
+    let engine = Arc::new(Engine::load("artifacts")?);
+    let mut cfg = RunConfig::default();
+    cfg.env = "pommerman".into();
+    cfg.game_mgr = "sp_pfsp".into(); // the paper's 35/65 mixture
+    cfg.actors_per_learner = 6;
+    cfg.total_steps = total_steps;
+    cfg.period_steps = (total_steps / 6).max(10);
+    cfg.publish_every = 4;
+    cfg.gamma = 0.995;
+    cfg.hp_overrides.insert("lr".into(), 1e-3);
+    cfg.hp_overrides.insert("ent_coef".into(), 0.012);
+    cfg.seed = 3;
+
+    println!("== Fig-4 driver: Pommerman Team, PPO + SP/PFSP, {total_steps} learner steps ==");
+    let dep = Deployment::start(cfg, engine.clone())?;
+    let pool = ModelPoolClient::connect(&dep.pool_addrs);
+
+    let n_checkpoints = 6u64;
+    let every = (total_steps / n_checkpoints).max(1);
+    let mut next_eval = 0u64;
+    let mut curve: Vec<(u64, f64, (u32, u32, u32))> = Vec::new();
+    loop {
+        let steps = dep.total_learner_steps();
+        if steps >= next_eval || dep.learners_done() {
+            if let Some(blob) = pool.get_latest(0)? {
+                let mut nn =
+                    NnPolicy::new(engine.clone(), "pommerman", blob.params, steps);
+                let mut mk_simple = |s: u64| {
+                    Box::new(SimpleAgent::new(s)) as Box<dyn ScriptedPolicy>
+                };
+                let (w, l, t) =
+                    pommerman_record(&mut nn, &mut mk_simple, eval_games, steps)?;
+                let winrate = (w as f64 + 0.5 * t as f64) / eval_games as f64;
+                let mut nn2 = NnPolicy::new(
+                    engine.clone(),
+                    "pommerman",
+                    pool.get_latest(0)?.unwrap().params,
+                    steps + 1,
+                );
+                let mut mk_nav = |s: u64| {
+                    Box::new(Navocado::new(s)) as Box<dyn ScriptedPolicy>
+                };
+                let nav =
+                    pommerman_record(&mut nn2, &mut mk_nav, eval_games, steps)?;
+                let lstats = dep.league_stats();
+                let ts = dep.learner_status[0].stats.lock().unwrap().clone();
+                println!(
+                    "iter {steps:5}  pool={:2} episodes={:5} loss={:+.3} ent={:.3} | \
+                     vs Simple: winrate {winrate:.2} | vs Navocado: {}/{}/{} (W/L/T)",
+                    lstats.pool_size, lstats.episodes, ts.loss, ts.entropy,
+                    nav.0, nav.1, nav.2
+                );
+                curve.push((steps, winrate, nav));
+            }
+            next_eval += every;
+        }
+        if dep.learners_done() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(500));
+    }
+
+    println!("\n== Fig-4 (left): win-rate vs SimpleAgent (tie = 0.5 win) ==");
+    println!("{:>8} {:>10}", "iter", "winrate");
+    for (s, w, _) in &curve {
+        println!("{s:>8} {w:>10.2}");
+    }
+    println!("\n== Fig-4 (right): W/L/T vs Navocado stand-in ==");
+    println!("{:>8} {:>5} {:>6} {:>5}", "iter", "wins", "losses", "ties");
+    for (s, _, (w, l, t)) in &curve {
+        println!("{s:>8} {w:>5} {l:>6} {t:>5}");
+    }
+    let first = curve.first().map(|c| c.1).unwrap_or(0.0);
+    let last = curve.last().map(|c| c.1).unwrap_or(0.0);
+    println!("\nwin-rate vs SimpleAgent: {first:.2} -> {last:.2}");
+    let mut dep = dep;
+    dep.shutdown();
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: the smallest full-stack TLeague run.
+//!
+//! Launches a complete league on Rock-Paper-Scissors — ModelPool,
+//! LeagueMgr (uniform opponent sampling), one PPO Learner, two Actors —
+//! trains for 60 learner steps, and prints the league state.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+use std::time::Duration;
+use tleague::config::RunConfig;
+use tleague::orchestrator::Deployment;
+use tleague::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::load("artifacts")?);
+
+    let mut cfg = RunConfig::default();
+    cfg.env = "rps".into();
+    cfg.game_mgr = "uniform".into();
+    cfg.actors_per_learner = 2;
+    cfg.total_steps = 60;
+    cfg.period_steps = 15; // freeze a model into the pool every 15 steps
+    cfg.publish_every = 3;
+
+    println!("== TLeague quickstart: CSP-MARL on Rock-Paper-Scissors ==");
+    let mut dep = Deployment::start(cfg, engine)?;
+    while !dep.learners_done() {
+        std::thread::sleep(Duration::from_millis(500));
+        let stats = dep.league_stats();
+        let ls = dep.learner_status[0].stats.lock().unwrap().clone();
+        println!(
+            "steps={:3}  pool={:2}  episodes={:5}  loss={:+.4}  entropy={:.3}",
+            dep.total_learner_steps(),
+            stats.pool_size,
+            stats.episodes,
+            ls.loss,
+            ls.entropy
+        );
+    }
+    let stats = dep.league_stats();
+    println!("\nleague finished: {} frozen models, {} episodes, {} frames",
+             stats.pool_size, stats.episodes, stats.frames);
+    println!("current learning model: {}", stats.current[0]);
+    dep.shutdown();
+    Ok(())
+}

@@ -1,0 +1,160 @@
+"""RL algorithms as pure jax functions over flat parameter vectors.
+
+PPO and V-trace learners (the two proxy algorithms TLeague ships, 2),
+built on the Pallas kernels:
+  - advantages / value targets: gae_pallas / vtrace_pallas (stop-gradient)
+  - PPO per-sample terms incl. backward: ppo_terms_pallas (custom_vjp)
+
+Hyper-parameters arrive as a runtime vector (envs_spec.HP_LAYOUT) so the
+HyperMgr / PBT can change them between learning periods without
+recompiling artifacts.  ``discounts`` fold gamma and termination on the
+Rust side: discount_t = gamma * (1 - done_t).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import nets
+from .envs_spec import HP_LAYOUT
+from .kernels.gae import gae_pallas
+from .kernels.vtrace import vtrace_pallas
+from .kernels.ppo_loss import ppo_terms_pallas
+from .kernels import ref as kref
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def hp_get(hp, name):
+    return hp[HP_LAYOUT.index(name)]
+
+
+def adam_step(params, m, v, step, grads, lr):
+    """One fused Adam update over the flat vectors; step is f32[1]."""
+    t = step[0] + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+    mhat = m / (1.0 - ADAM_B1 ** t)
+    vhat = v / (1.0 - ADAM_B2 ** t)
+    params = params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return params, m, v, jnp.reshape(t, (1,))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = jnp.sqrt(jnp.sum(grads * grads) + 1e-12)
+    scale = jnp.where(max_norm > 0.0,
+                      jnp.minimum(1.0, max_norm / gn), 1.0)
+    return grads * scale, gn
+
+
+def _normalize(adv):
+    return (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+
+
+def ppo_loss(params, hp, batch, spec, use_pallas=True):
+    """PPO clipped-surrogate loss.
+
+    batch (time-major):
+      obs           [T+1, B, D]   (team: [T+1, B, 2, D])
+      actions       [T,   B] i32  (team: [T, B, 2])
+      behavior_logp [T,   B]      (team: [T, B, 2])
+      rewards       [T,   B]
+      discounts     [T,   B]
+    Returns (loss, stats[8]).
+    """
+    obs, actions, behavior_logp, rewards, discounts = batch
+    T = rewards.shape[0]
+    B = rewards.shape[1]
+    apply_fn = nets.make_apply(spec)
+    logits, values = apply_fn(params, obs)   # [T+1,B,(2,)A], [T+1,B]
+
+    vals_c = jax.lax.stop_gradient(values)
+    adv = gae_pallas(rewards, discounts, vals_c, hp_get(hp, "lam"))
+    ret = adv + vals_c[:-1]
+    adv_n = _normalize(adv)
+
+    A = spec["act_dim"]
+    if spec["team"]:
+        # Team = one meta-agent stepped by two shared-weight forward passes
+        # (paper 4.3): per-agent policy terms share the team advantage;
+        # the value loss is on the single centralized value.
+        lg = logits[:-1].reshape(T * B * 2, A)
+        ac = actions.reshape(T * B * 2)
+        lpo = behavior_logp.reshape(T * B * 2)
+        ad = jnp.repeat(adv_n.reshape(T * B), 2)
+        # per-sample value/ret arrays must align with the policy samples for
+        # the fused kernel; weight the duplicated value loss by 0.5.
+        va = jnp.repeat(values[:-1].reshape(T * B), 2)
+        re = jnp.repeat(ret.reshape(T * B), 2)
+        v_dup = 0.5
+    else:
+        lg = logits[:-1].reshape(T * B, A)
+        ac = actions.reshape(T * B)
+        lpo = behavior_logp.reshape(T * B)
+        ad = adv_n.reshape(T * B)
+        va = values[:-1].reshape(T * B)
+        re = ret.reshape(T * B)
+        v_dup = 1.0
+
+    terms = ppo_terms_pallas if use_pallas else (
+        lambda *a: kref.ppo_terms_ref(*a[:7]))
+    pol, vl, ent, kl = terms(lg, ac, lpo, ad, va,
+                             jax.lax.stop_gradient(re),
+                             hp_get(hp, "clip_eps"))
+    pol_loss = jnp.mean(pol)
+    v_loss = v_dup * jnp.mean(vl)
+    entropy = jnp.mean(ent)
+    loss = pol_loss + hp_get(hp, "vf_coef") * v_loss \
+        - hp_get(hp, "ent_coef") * entropy
+    stats = jnp.stack([loss, pol_loss, v_loss, entropy, jnp.mean(kl),
+                       jnp.max(kl), jnp.mean(adv), jnp.std(adv)])
+    return loss, stats
+
+
+def vtrace_loss(params, hp, batch, spec):
+    """V-trace actor-critic loss (IMPALA); solo nets only.
+
+    Same batch layout as ppo_loss.  log_rho = logp_target - logp_behavior.
+    """
+    obs, actions, behavior_logp, rewards, discounts = batch
+    T, B = rewards.shape
+    apply_fn = nets.make_apply(spec)
+    logits, values = apply_fn(params, obs)
+    A = spec["act_dim"]
+    lg = logits[:-1].reshape(T * B, A)
+    ac = actions.reshape(T * B)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    lp_all = lg - logz[:, None]
+    logp = jnp.take_along_axis(
+        lp_all, ac[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    log_rhos = (logp.reshape(T, B) - behavior_logp)
+    vals_c = jax.lax.stop_gradient(values)
+    vs, pg_adv = vtrace_pallas(
+        jax.lax.stop_gradient(log_rhos), rewards, discounts, vals_c,
+        hp_get(hp, "lam"), hp_get(hp, "rho_bar"), hp_get(hp, "c_bar"))
+    pol_loss = -jnp.mean(pg_adv.reshape(-1) * logp)
+    v_loss = 0.5 * jnp.mean(
+        jnp.square(values[:-1] - vs))
+    p = jnp.exp(lp_all)
+    entropy = jnp.mean(-jnp.sum(p * lp_all, axis=-1))
+    loss = pol_loss + hp_get(hp, "vf_coef") * v_loss \
+        - hp_get(hp, "ent_coef") * entropy
+    kl = behavior_logp.reshape(-1) - logp
+    stats = jnp.stack([loss, pol_loss, v_loss, entropy, jnp.mean(kl),
+                       jnp.max(kl), jnp.mean(pg_adv), jnp.std(pg_adv)])
+    return loss, stats
+
+
+def grads_of(loss_fn, params, hp, batch, spec, **kw):
+    (loss, stats), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, hp, batch, spec, **kw)
+    grads, gn = clip_by_global_norm(grads, hp_get(hp, "grad_clip"))
+    stats = jnp.concatenate([stats, jnp.stack([gn])])
+    return grads, stats
+
+
+def train_step(loss_fn, params, m, v, step, hp, batch, spec, **kw):
+    """Fused train step: grads + clip + Adam, all in-graph."""
+    grads, stats = grads_of(loss_fn, params, hp, batch, spec, **kw)
+    params, m, v, step = adam_step(params, m, v, step, grads,
+                                   hp_get(hp, "lr"))
+    return params, m, v, step, stats

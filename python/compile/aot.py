@@ -1,0 +1,104 @@
+"""AOT compiler: lower every artifact to HLO text + write the manifest.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` 0.1.6 rust crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as:  cd python && python -m compile.aot --out ../artifacts
+The Makefile skips the run when artifacts are newer than the sources.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import algo, model
+from .envs_spec import ENV_SPECS, HP_LAYOUT, HP_DEFAULTS
+
+# Which envs get which artifacts.  V-trace is demonstrated on the solo
+# envs the paper used IMPALA-style training for; the split grad/apply
+# path (Horovod design point) is emitted for every env so multi-learner
+# runs are possible everywhere.
+VTRACE_ENVS = ("doom_lite", "pong2p", "synthetic")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def emit(out_dir, name, fn, example, io, manifest_arts):
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    text = lower(fn, example)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest_arts[name] = dict(file=name + ".hlo.txt", **io)
+    print(f"  {name}: {len(text) // 1024} KiB")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--envs", default=",".join(ENV_SPECS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = dict(hp_layout=HP_LAYOUT, hp_defaults=HP_DEFAULTS, envs={})
+    for env in args.envs.split(","):
+        spec = ENV_SPECS[env]
+        print(f"[aot] {env}: obs={spec['obs_dim']} act={spec['act_dim']} "
+              f"hidden={spec['hidden']} team={spec['team']}")
+        arts = {}
+
+        for b in sorted({1, spec["infer_b"]}):
+            fn, ex, io = model.make_infer(spec, b)
+            emit(args.out, f"infer_{env}_b{b}", fn, ex, io, arts)
+
+        fn, ex, io = model.make_train(spec, algo.ppo_loss)
+        emit(args.out, f"train_ppo_{env}", fn, ex, io, arts)
+
+        fn, ex, io = model.make_grad(spec, algo.ppo_loss)
+        emit(args.out, f"grad_ppo_{env}", fn, ex, io, arts)
+
+        fn, ex, io = model.make_apply_adam(spec)
+        emit(args.out, f"apply_adam_{env}", fn, ex, io, arts)
+
+        if env in VTRACE_ENVS:
+            fn, ex, io = model.make_train(spec, algo.vtrace_loss)
+            emit(args.out, f"train_vtrace_{env}", fn, ex, io, arts)
+
+        params = model.init_state(spec, seed=17)
+        init_file = f"init_{env}.f32"
+        params.astype("<f4").tofile(os.path.join(args.out, init_file))
+
+        from . import nets
+        manifest["envs"][env] = dict(
+            obs_dim=spec["obs_dim"], act_dim=spec["act_dim"],
+            hidden=spec["hidden"], team=spec["team"],
+            param_count=nets.param_count(nets.specs_for(spec)),
+            train_t=spec["train_t"], train_b=spec["train_b"],
+            infer_b=spec["infer_b"],
+            init_params=init_file,
+            init_sha=hashlib.sha256(params.tobytes()).hexdigest()[:16],
+            artifacts=arts,
+        )
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Per-environment network / batch specifications.
+
+This is the single source of truth for the shapes the AOT artifacts are
+compiled with.  The Rust side reads the same numbers from
+``artifacts/manifest.json`` (written by aot.py) and its env encoders are
+unit-tested against them.
+
+Observation encodings (must match rust/src/envs/*):
+  - rps:        4 dummy features (one-step matrix game; obs is constant).
+  - pong2p:     8 features (ball x/y/vx/vy, self paddle y/vy, opp paddle y, side).
+  - pommerman:  9x9 fogged egocentric view x 12 channels + 8 self attributes.
+  - doom_lite:  24 rays x 5 channels (wall depth, enemy, pickup, projectile,
+                wall-normal) + 8 self attributes.
+  - synthetic:  1024 opaque features (throughput benchmarking; Table 3).
+"""
+
+ENV_SPECS = {
+    "rps": dict(
+        obs_dim=4, act_dim=3, hidden=[32],
+        train_t=1, train_b=256, infer_b=32,
+        team=False,
+    ),
+    "pong2p": dict(
+        obs_dim=8, act_dim=3, hidden=[64, 64],
+        train_t=16, train_b=32, infer_b=32,
+        team=False,
+    ),
+    "pommerman": dict(
+        obs_dim=9 * 9 * 12 + 8, act_dim=6, hidden=[512, 256],
+        train_t=16, train_b=32, infer_b=32,
+        team=True,  # centralized value over the 2 teammates (paper 4.3)
+    ),
+    "doom_lite": dict(
+        obs_dim=24 * 5 + 8, act_dim=6, hidden=[256, 128],
+        train_t=16, train_b=32, infer_b=32,
+        team=False,
+    ),
+    "synthetic": dict(
+        obs_dim=1024, act_dim=16, hidden=[2048, 2048],
+        train_t=8, train_b=16, infer_b=32,
+        team=False,
+    ),
+}
+
+# Hyper-parameter vector layout fed to every train/grad artifact at runtime.
+# Kept as a runtime input (not baked constants) so the HyperMgr / PBT can
+# perturb them without recompiling artifacts.
+HP_LAYOUT = [
+    "lr",         # Adam learning rate
+    "clip_eps",   # PPO clip epsilon
+    "vf_coef",    # value-loss coefficient
+    "ent_coef",   # entropy bonus coefficient
+    "lam",        # GAE / V-trace lambda
+    "grad_clip",  # global-norm gradient clip (<=0 disables)
+    "rho_bar",    # V-trace rho clip
+    "c_bar",      # V-trace c clip
+]
+
+HP_DEFAULTS = {
+    "lr": 3e-4, "clip_eps": 0.2, "vf_coef": 0.5, "ent_coef": 0.01,
+    "lam": 0.95, "grad_clip": 1.0, "rho_bar": 1.0, "c_bar": 1.0,
+}

@@ -1,0 +1,79 @@
+"""Pallas kernel: Generalized Advantage Estimation reverse scan.
+
+The scan is sequential in T and embarrassingly parallel in B, so the grid
+tiles the batch dimension: each program instance owns a [T, B_TILE] block
+held entirely in VMEM and runs the reverse recurrence in registers.
+
+TPU sizing (DESIGN.md "Hardware adaptation"): with T=16, B_TILE=128 the
+working set is 4 arrays x 16x128 x 4B = 32 KiB, far below the ~16 MiB VMEM
+budget; the kernel is bandwidth-bound (element-wise, MXU idle) and its win
+over the jnp reference is fusing the reward/discount/value streams into a
+single HBM pass instead of one per scan step.
+
+Runs with interpret=True on CPU (Mosaic custom-calls are TPU-only).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_B_TILE = 128
+
+
+def _gae_kernel(lam_ref, rew_ref, disc_ref, val_ref, adv_ref):
+    # Blocks: rew/disc/adv [T, Bt]; val [T+1, Bt]; lam [1, 1].
+    T = rew_ref.shape[0]
+    lam = lam_ref[0, 0]
+
+    def body(i, acc):
+        t = T - 1 - i
+        rew = pl.load(rew_ref, (pl.ds(t, 1), slice(None)))
+        disc = pl.load(disc_ref, (pl.ds(t, 1), slice(None)))
+        v_t = pl.load(val_ref, (pl.ds(t, 1), slice(None)))
+        v_tp1 = pl.load(val_ref, (pl.ds(t + 1, 1), slice(None)))
+        delta = rew + disc * v_tp1 - v_t
+        acc = delta + disc * lam * acc
+        pl.store(adv_ref, (pl.ds(t, 1), slice(None)), acc)
+        return acc
+
+    acc0 = jnp.zeros((1, rew_ref.shape[1]), jnp.float32)
+    jax.lax.fori_loop(0, T, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile",))
+def gae_pallas(rewards, discounts, values, lam, b_tile=DEFAULT_B_TILE):
+    """GAE advantages via the Pallas kernel.
+
+    Args:
+      rewards, discounts: [T, B] f32 (discounts = gamma * (1 - done)).
+      values: [T+1, B] f32 (last row = bootstrap value).
+      lam: scalar f32 (traced; runtime-tunable by the HyperMgr).
+      b_tile: batch tile width (static).
+    Returns advantages [T, B] f32.
+    """
+    T, B = rewards.shape
+    bt = min(b_tile, B)
+    if B % bt != 0:  # pad batch to a tile multiple, strip after
+        pad = bt - B % bt
+        rewards = jnp.pad(rewards, ((0, 0), (0, pad)))
+        discounts = jnp.pad(discounts, ((0, 0), (0, pad)))
+        values = jnp.pad(values, ((0, 0), (0, pad)))
+    bp = rewards.shape[1]
+    lam_arr = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _gae_kernel,
+        grid=(bp // bt,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((T, bt), lambda i: (0, i)),
+            pl.BlockSpec((T, bt), lambda i: (0, i)),
+            pl.BlockSpec((T + 1, bt), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((T, bt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((T, bp), jnp.float32),
+        interpret=True,
+    )(lam_arr, rewards, discounts, values)
+    return out[:, :B]

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: slow, obvious implementations used by
+pytest to validate the Pallas kernels (gae.py, vtrace.py, ppo_loss.py) and
+by the model when ``use_pallas=False`` (debugging escape hatch).
+
+All sequence tensors are TIME-MAJOR: rewards/discounts are [T, B], values
+are [T+1, B] (the extra row is the bootstrap value of the final
+observation).  ``discounts`` already folds gamma and episode termination:
+discount_t = gamma * (1 - done_t).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gae_ref(rewards, discounts, values, lam):
+    """Generalized Advantage Estimation, reverse scan.
+
+    adv_t = delta_t + discount_t * lam * adv_{t+1}
+    delta_t = r_t + discount_t * V_{t+1} - V_t
+
+    Returns advantages [T, B] (NOT value-normalized).
+    """
+    rewards, discounts, values = (jnp.asarray(rewards),
+                                  jnp.asarray(discounts), jnp.asarray(values))
+    T = rewards.shape[0]
+
+    def step(acc, t):
+        delta = rewards[t] + discounts[t] * values[t + 1] - values[t]
+        acc = delta + discounts[t] * lam * acc
+        return acc, acc
+
+    _, advs = jax.lax.scan(step, jnp.zeros_like(rewards[0]),
+                           jnp.arange(T - 1, -1, -1))
+    return advs[::-1]
+
+
+def vtrace_ref(log_rhos, rewards, discounts, values, lam, rho_bar, c_bar):
+    """V-trace targets and policy-gradient advantages (IMPALA eq. 1).
+
+    vs_t = V_t + delta_t + discount_t * c_t * (vs_{t+1} - V_{t+1})
+    delta_t = rho_t * (r_t + discount_t * V_{t+1} - V_t)
+    pg_adv_t = rho_t * (r_t + discount_t * vs_{t+1} - V_t)
+
+    with rho_t = min(rho_bar, e^{log_rho_t}), c_t = lam * min(c_bar, e^{log_rho_t}).
+    Returns (vs [T, B], pg_adv [T, B]).
+    """
+    log_rhos, rewards, discounts, values = (
+        jnp.asarray(log_rhos), jnp.asarray(rewards),
+        jnp.asarray(discounts), jnp.asarray(values))
+    T = rewards.shape[0]
+    rhos = jnp.minimum(rho_bar, jnp.exp(log_rhos))
+    cs = lam * jnp.minimum(c_bar, jnp.exp(log_rhos))
+
+    def step(acc, t):
+        # acc = vs_{t+1} - V_{t+1}
+        delta = rhos[t] * (rewards[t] + discounts[t] * values[t + 1] - values[t])
+        acc_t = delta + discounts[t] * cs[t] * acc
+        return acc_t, acc_t
+
+    _, diffs = jax.lax.scan(step, jnp.zeros_like(rewards[0]),
+                            jnp.arange(T - 1, -1, -1))
+    diffs = diffs[::-1]                        # vs_t - V_t, [T, B]
+    vs = diffs + values[:-1]
+    vs_tp1 = jnp.concatenate([vs[1:], values[-1:]], axis=0)
+    pg_adv = rhos * (rewards + discounts * vs_tp1 - values[:-1])
+    return vs, pg_adv
+
+
+def ppo_terms_ref(logits, actions, logp_old, adv, value, ret, clip_eps):
+    """Per-sample PPO terms; the fused-kernel oracle.
+
+    Args (N = flattened T*B samples, A = action count):
+      logits  [N, A] current policy logits
+      actions [N]    int32 actions taken by the behaviour policy
+      logp_old[N]    behaviour-policy log-prob of those actions
+      adv     [N]    advantages (constant w.r.t. params)
+      value   [N]    current value predictions
+      ret     [N]    value targets (constant)
+      clip_eps       PPO clip epsilon
+    Returns (pol_loss [N], v_loss [N], entropy [N], approx_kl [N]).
+    """
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    logp_all = logits - logz[:, None]
+    logp = jnp.take_along_axis(logp_all, actions[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    ratio = jnp.exp(logp - logp_old)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    pol_loss = -jnp.minimum(ratio * adv, clipped * adv)
+    v_loss = 0.5 * jnp.square(value - ret)
+    p = jnp.exp(logp_all)
+    entropy = -jnp.sum(p * logp_all, axis=-1)
+    approx_kl = logp_old - logp
+    return pol_loss, v_loss, entropy, approx_kl
+
+
+def ppo_scalar_ref(logits, actions, logp_old, adv, value, ret,
+                   clip_eps, vf_coef, ent_coef):
+    """Scalar PPO loss used as the autodiff oracle for the fused kernel."""
+    pol, vl, ent, _ = ppo_terms_ref(logits, actions, logp_old, adv, value,
+                                    ret, clip_eps)
+    return jnp.mean(pol) + vf_coef * jnp.mean(vl) - ent_coef * jnp.mean(ent)

@@ -1,0 +1,96 @@
+"""Pallas kernel: V-trace targets + policy-gradient advantages (IMPALA).
+
+Same tiling strategy as gae.py: grid over batch tiles, reverse recurrence
+over T inside the kernel.  Two outputs are produced in one pass: the value
+targets vs_t and the policy-gradient advantages
+
+    vs_t     = V_t + delta_t + disc_t * c_t * (vs_{t+1} - V_{t+1})
+    delta_t  = rho_t * (r_t + disc_t * V_{t+1} - V_t)
+    pg_adv_t = rho_t * (r_t + disc_t * vs_{t+1} - V_t)
+
+with rho_t = min(rho_bar, e^{log_rho_t}) and c_t = lam * min(c_bar, e^{log_rho_t}).
+The recurrence carries acc = vs_{t+1} - V_{t+1}, from which vs_{t+1} is
+reconstructed for the pg term, so values are read once per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_B_TILE = 128
+
+
+def _vtrace_kernel(hp_ref, lrho_ref, rew_ref, disc_ref, val_ref,
+                   vs_ref, pg_ref):
+    # Blocks: lrho/rew/disc/vs/pg [T, Bt]; val [T+1, Bt]; hp [1, 3]=(lam, rho_bar, c_bar)
+    T = rew_ref.shape[0]
+    lam = hp_ref[0, 0]
+    rho_bar = hp_ref[0, 1]
+    c_bar = hp_ref[0, 2]
+
+    def body(i, acc):
+        t = T - 1 - i
+        lrho = pl.load(lrho_ref, (pl.ds(t, 1), slice(None)))
+        rew = pl.load(rew_ref, (pl.ds(t, 1), slice(None)))
+        disc = pl.load(disc_ref, (pl.ds(t, 1), slice(None)))
+        v_t = pl.load(val_ref, (pl.ds(t, 1), slice(None)))
+        v_tp1 = pl.load(val_ref, (pl.ds(t + 1, 1), slice(None)))
+        rho = jnp.minimum(rho_bar, jnp.exp(lrho))
+        c = lam * jnp.minimum(c_bar, jnp.exp(lrho))
+        delta = rho * (rew + disc * v_tp1 - v_t)
+        # acc (incoming) = vs_{t+1} - V_{t+1}
+        vs_tp1 = acc + v_tp1
+        pg = rho * (rew + disc * vs_tp1 - v_t)
+        acc = delta + disc * c * acc           # now vs_t - V_t
+        pl.store(vs_ref, (pl.ds(t, 1), slice(None)), acc + v_t)
+        pl.store(pg_ref, (pl.ds(t, 1), slice(None)), pg)
+        return acc
+
+    acc0 = jnp.zeros((1, rew_ref.shape[1]), jnp.float32)
+    jax.lax.fori_loop(0, T, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("b_tile",))
+def vtrace_pallas(log_rhos, rewards, discounts, values, lam, rho_bar, c_bar,
+                  b_tile=DEFAULT_B_TILE):
+    """V-trace (vs, pg_adv) via the Pallas kernel; all seq args time-major.
+
+    log_rhos/rewards/discounts: [T, B]; values: [T+1, B];
+    lam/rho_bar/c_bar: scalars (traced).  Returns (vs [T,B], pg_adv [T,B]).
+    """
+    T, B = rewards.shape
+    bt = min(b_tile, B)
+    if B % bt != 0:
+        pad = bt - B % bt
+        log_rhos = jnp.pad(log_rhos, ((0, 0), (0, pad)))
+        rewards = jnp.pad(rewards, ((0, 0), (0, pad)))
+        discounts = jnp.pad(discounts, ((0, 0), (0, pad)))
+        values = jnp.pad(values, ((0, 0), (0, pad)))
+    bp = rewards.shape[1]
+    hp = jnp.stack([jnp.asarray(lam, jnp.float32),
+                    jnp.asarray(rho_bar, jnp.float32),
+                    jnp.asarray(c_bar, jnp.float32)]).reshape(1, 3)
+    vs, pg = pl.pallas_call(
+        _vtrace_kernel,
+        grid=(bp // bt,),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            pl.BlockSpec((T, bt), lambda i: (0, i)),
+            pl.BlockSpec((T, bt), lambda i: (0, i)),
+            pl.BlockSpec((T, bt), lambda i: (0, i)),
+            pl.BlockSpec((T + 1, bt), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, bt), lambda i: (0, i)),
+            pl.BlockSpec((T, bt), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, bp), jnp.float32),
+            jax.ShapeDtypeStruct((T, bp), jnp.float32),
+        ],
+        interpret=True,
+    )(hp, log_rhos, rewards, discounts, values)
+    return vs[:, :B], pg[:, :B]

@@ -1,0 +1,150 @@
+"""Artifact entry points: the exact functions AOT-lowered to HLO text.
+
+Each maker returns (fn, example_args, io_spec) where io_spec is the
+manifest fragment describing the ordered input/output literals the Rust
+runtime will feed/read.  Shapes are fixed at lowering time (PJRT
+executables are static-shape); the per-env values come from envs_spec.
+
+Artifact set per env:
+  infer_b{1,IB}   (params, obs)                      -> (logits, value)
+  train_ppo       (params, m, v, step, hp, batch...) -> (params', m', v',
+                                                         step', stats[9])
+  grad_ppo        (params, hp, batch...)             -> (grads, stats[9])
+  apply_adam      (params, m, v, step, hp, grads)    -> (params', m', v', step')
+  train_vtrace    same as train_ppo (solo envs only)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import algo, nets
+from .envs_spec import HP_LAYOUT
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dt=F32):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def _io(name, shape, dt="f32"):
+    return [name, [int(s) for s in shape], dt]
+
+
+def _batch_shapes(spec):
+    T, B, D = spec["train_t"], spec["train_b"], spec["obs_dim"]
+    if spec["team"]:
+        return dict(obs=(T + 1, B, 2, D), actions=(T, B, 2),
+                    behavior_logp=(T, B, 2), rewards=(T, B),
+                    discounts=(T, B))
+    return dict(obs=(T + 1, B, D), actions=(T, B),
+                behavior_logp=(T, B), rewards=(T, B), discounts=(T, B))
+
+
+def batch_io(spec):
+    shp = _batch_shapes(spec)
+    return [
+        _io("obs", shp["obs"]),
+        _io("actions", shp["actions"], "i32"),
+        _io("behavior_logp", shp["behavior_logp"]),
+        _io("rewards", shp["rewards"]),
+        _io("discounts", shp["discounts"]),
+    ]
+
+
+def _batch_example(spec):
+    shp = _batch_shapes(spec)
+    return (_sds(shp["obs"]), _sds(shp["actions"], I32),
+            _sds(shp["behavior_logp"]), _sds(shp["rewards"]),
+            _sds(shp["discounts"]))
+
+
+def make_infer(spec, batch):
+    P = nets.param_count(nets.specs_for(spec))
+    D, A = spec["obs_dim"], spec["act_dim"]
+    apply_fn = nets.make_apply(spec)
+    if spec["team"]:
+        obs_shape, log_shape, val_shape = (batch, 2, D), (batch, 2, A), (batch,)
+    else:
+        obs_shape, log_shape, val_shape = (batch, D), (batch, A), (batch,)
+
+    def infer(params, obs):
+        logits, value = apply_fn(params, obs)
+        return logits, value
+
+    example = (_sds((P,)), _sds(obs_shape))
+    io = dict(
+        inputs=[_io("params", (P,)), _io("obs", obs_shape)],
+        outputs=[_io("logits", log_shape), _io("value", val_shape)],
+    )
+    return infer, example, io
+
+
+def _opt_io(P):
+    return [_io("params", (P,)), _io("adam_m", (P,)), _io("adam_v", (P,)),
+            _io("step", (1,)), _io("hp", (len(HP_LAYOUT),))]
+
+
+def make_train(spec, loss_fn, use_pallas=True):
+    P = nets.param_count(nets.specs_for(spec))
+
+    def train(params, m, v, step, hp, obs, actions, behavior_logp,
+              rewards, discounts):
+        batch = (obs, actions, behavior_logp, rewards, discounts)
+        kw = {"use_pallas": use_pallas} if loss_fn is algo.ppo_loss else {}
+        return algo.train_step(loss_fn, params, m, v, step, hp, batch,
+                               spec, **kw)
+
+    example = (_sds((P,)), _sds((P,)), _sds((P,)), _sds((1,)),
+               _sds((len(HP_LAYOUT),))) + _batch_example(spec)
+    io = dict(
+        inputs=_opt_io(P) + batch_io(spec),
+        outputs=[_io("params", (P,)), _io("adam_m", (P,)),
+                 _io("adam_v", (P,)), _io("step", (1,)),
+                 _io("stats", (9,))],
+    )
+    return train, example, io
+
+
+def make_grad(spec, loss_fn, use_pallas=True):
+    P = nets.param_count(nets.specs_for(spec))
+
+    def grad(params, hp, obs, actions, behavior_logp, rewards, discounts):
+        batch = (obs, actions, behavior_logp, rewards, discounts)
+        kw = {"use_pallas": use_pallas} if loss_fn is algo.ppo_loss else {}
+        return algo.grads_of(loss_fn, params, hp, batch, spec, **kw)
+
+    example = (_sds((P,)), _sds((len(HP_LAYOUT),))) + _batch_example(spec)
+    io = dict(
+        inputs=[_io("params", (P,)), _io("hp", (len(HP_LAYOUT),))]
+        + batch_io(spec),
+        outputs=[_io("grads", (P,)), _io("stats", (9,))],
+    )
+    return grad, example, io
+
+
+def make_apply_adam(spec):
+    P = nets.param_count(nets.specs_for(spec))
+
+    def apply_adam(params, m, v, step, hp, grads):
+        lr = algo.hp_get(hp, "lr")
+        p2, m2, v2, s2 = algo.adam_step(params, m, v, step, grads, lr)
+        return p2, m2, v2, s2
+
+    example = (_sds((P,)), _sds((P,)), _sds((P,)), _sds((1,)),
+               _sds((len(HP_LAYOUT),)), _sds((P,)))
+    io = dict(
+        inputs=_opt_io(P) + [_io("grads", (P,))],
+        outputs=[_io("params", (P,)), _io("adam_m", (P,)),
+                 _io("adam_v", (P,)), _io("step", (1,))],
+    )
+    return apply_adam, example, io
+
+
+def init_state(spec, seed=0):
+    """Initial (params, m, v, step) as numpy, for artifacts/init_<env>.f32."""
+    specs = nets.specs_for(spec)
+    params = nets.init_params(seed, specs)
+    return params

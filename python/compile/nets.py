@@ -1,0 +1,112 @@
+"""Policy-value networks with a FLAT parameter vector.
+
+All parameters live in a single f32 vector ``params_flat[P]``; the apply
+functions unflatten with static slices.  This is the contract that keeps
+the Rust side fully generic (DESIGN.md "Parameter representation"): the
+ModelPool stores one Vec<f32> per version, allreduce is a vector average,
+and artifact I/O is a fixed literal list.
+
+Two architectures (mirroring the paper's TPolicies use):
+  - solo net: shared MLP torso -> policy head (logits) + value head.
+  - team net (Pommerman 4.3): per-agent shared-weight torso -> per-agent
+    policy head; CENTRALIZED value head over the concatenated teammate
+    torso embeddings (the paper's cooperation mechanism).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def param_specs(obs_dim, act_dim, hidden, team=False):
+    """Ordered list of (name, shape) defining the flat layout."""
+    specs = []
+    d = obs_dim
+    for i, h in enumerate(hidden):
+        specs.append((f"torso{i}/w", (d, h)))
+        specs.append((f"torso{i}/b", (h,)))
+        d = h
+    specs.append(("policy/w", (d, act_dim)))
+    specs.append(("policy/b", (act_dim,)))
+    if team:
+        # centralized value: input = concat of the 2 teammates' embeddings
+        specs.append(("value0/w", (2 * d, d)))
+        specs.append(("value0/b", (d,)))
+    specs.append(("value/w", (d, 1)))
+    specs.append(("value/b", (1,)))
+    return specs
+
+
+def param_count(specs):
+    return int(sum(int(np.prod(s)) for _, s in specs))
+
+
+def init_params(seed, specs):
+    """He-scaled gaussian init, numpy only (runs once at build time)."""
+    rng = np.random.RandomState(seed)
+    chunks = []
+    for name, shape in specs:
+        if name.endswith("/b"):
+            chunks.append(np.zeros(shape, np.float32))
+        else:
+            fan_in = shape[0]
+            scale = np.sqrt(2.0 / fan_in)
+            if name.startswith(("policy", "value")):
+                scale *= 0.1  # small heads: near-uniform initial policy
+            chunks.append(
+                (rng.randn(*shape) * scale).astype(np.float32))
+    return np.concatenate([c.reshape(-1) for c in chunks])
+
+
+def unflatten(flat, specs):
+    out = {}
+    off = 0
+    for name, shape in specs:
+        n = int(np.prod(shape))
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def _torso(p, obs, hidden):
+    h = obs
+    for i in range(len(hidden)):
+        h = jnp.maximum(h @ p[f"torso{i}/w"] + p[f"torso{i}/b"], 0.0)
+    return h
+
+
+def apply_solo(flat, obs, spec):
+    """obs [..., D] -> (logits [..., A], value [...])."""
+    specs = param_specs(spec["obs_dim"], spec["act_dim"], spec["hidden"])
+    p = unflatten(flat, specs)
+    h = _torso(p, obs, spec["hidden"])
+    logits = h @ p["policy/w"] + p["policy/b"]
+    value = (h @ p["value/w"] + p["value/b"])[..., 0]
+    return logits, value
+
+
+def apply_team(flat, obs, spec):
+    """obs [..., 2, D] -> (logits [..., 2, A], value [...]).
+
+    Policy is decentralized (shared weights, own observation); value is
+    centralized over both teammates' embeddings.
+    """
+    specs = param_specs(spec["obs_dim"], spec["act_dim"], spec["hidden"],
+                        team=True)
+    p = unflatten(flat, specs)
+    h = _torso(p, obs, spec["hidden"])            # [..., 2, H]
+    logits = h @ p["policy/w"] + p["policy/b"]    # [..., 2, A]
+    hc = jnp.concatenate([h[..., 0, :], h[..., 1, :]], axis=-1)
+    hv = jnp.maximum(hc @ p["value0/w"] + p["value0/b"], 0.0)
+    value = (hv @ p["value/w"] + p["value/b"])[..., 0]
+    return logits, value
+
+
+def make_apply(spec):
+    if spec["team"]:
+        return lambda flat, obs: apply_team(flat, obs, spec)
+    return lambda flat, obs: apply_solo(flat, obs, spec)
+
+
+def specs_for(spec):
+    return param_specs(spec["obs_dim"], spec["act_dim"], spec["hidden"],
+                       team=spec["team"])

@@ -1,0 +1,161 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes and value regimes; every property asserts
+allclose against the pure-jnp reference in kernels/ref.py.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gae import gae_pallas
+from compile.kernels.vtrace import vtrace_pallas
+from compile.kernels.ppo_loss import ppo_terms_pallas
+
+SET = dict(max_examples=25, deadline=None)
+
+
+def _seq_data(seed, T, B, reward_scale=1.0):
+    rng = np.random.RandomState(seed)
+    rewards = (rng.randn(T, B) * reward_scale).astype(np.float32)
+    # mix of mid-episode terminations and gamma discounting
+    done = rng.rand(T, B) < 0.1
+    discounts = (0.99 * (1.0 - done)).astype(np.float32)
+    values = rng.randn(T + 1, B).astype(np.float32)
+    return rewards, discounts, values
+
+
+class TestGAE:
+    @settings(**SET)
+    @given(seed=st.integers(0, 2**31 - 1), T=st.integers(1, 40),
+           B=st.integers(1, 200), lam=st.floats(0.0, 1.0))
+    def test_matches_ref(self, seed, T, B, lam):
+        rewards, discounts, values = _seq_data(seed, T, B)
+        got = gae_pallas(rewards, discounts, values, lam)
+        want = ref.gae_ref(rewards, discounts, values, lam)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_termination_blocks_bootstrap(self):
+        # A done at t cuts the recursion: adv_t = r_t - V_t exactly.
+        T, B = 4, 1
+        rewards = np.ones((T, B), np.float32)
+        discounts = np.zeros((T, B), np.float32)  # every step terminal
+        values = np.full((T + 1, B), 5.0, np.float32)
+        adv = np.asarray(gae_pallas(rewards, discounts, values, 0.95))
+        np.testing.assert_allclose(adv, 1.0 - 5.0)
+
+    def test_lambda0_is_td_error(self):
+        rewards, discounts, values = _seq_data(3, 8, 16)
+        adv = np.asarray(gae_pallas(rewards, discounts, values, 0.0))
+        td = rewards + discounts * values[1:] - values[:-1]
+        np.testing.assert_allclose(adv, td, rtol=1e-5, atol=1e-6)
+
+    def test_batch_padding_edge(self):
+        # B not a multiple of the tile: padding must not leak.
+        for B in (1, 127, 129, 255):
+            rewards, discounts, values = _seq_data(B, 4, B)
+            got = gae_pallas(rewards, discounts, values, 0.9)
+            want = ref.gae_ref(rewards, discounts, values, 0.9)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestVtrace:
+    @settings(**SET)
+    @given(seed=st.integers(0, 2**31 - 1), T=st.integers(1, 32),
+           B=st.integers(1, 150), lam=st.floats(0.5, 1.0),
+           rho_bar=st.floats(0.5, 2.0), c_bar=st.floats(0.5, 2.0))
+    def test_matches_ref(self, seed, T, B, lam, rho_bar, c_bar):
+        rewards, discounts, values = _seq_data(seed, T, B)
+        rng = np.random.RandomState(seed + 1)
+        log_rhos = (rng.randn(T, B) * 0.4).astype(np.float32)
+        vs1, pg1 = vtrace_pallas(log_rhos, rewards, discounts, values,
+                                 lam, rho_bar, c_bar)
+        vs2, pg2 = ref.vtrace_ref(log_rhos, rewards, discounts, values,
+                                  lam, rho_bar, c_bar)
+        np.testing.assert_allclose(vs1, vs2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(pg1, pg2, rtol=1e-4, atol=1e-4)
+
+    def test_on_policy_reduces_to_lambda_return(self):
+        # log_rho = 0, rho_bar = c_bar = 1: vs - V == GAE advantages.
+        rewards, discounts, values = _seq_data(7, 12, 33)
+        zeros = np.zeros_like(rewards)
+        vs, _ = vtrace_pallas(zeros, rewards, discounts, values,
+                              0.95, 1.0, 1.0)
+        adv = ref.gae_ref(rewards, discounts, values, 0.95)
+        np.testing.assert_allclose(np.asarray(vs) - values[:-1], adv,
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestPPOFused:
+    def _data(self, seed, N, A):
+        rng = np.random.RandomState(seed)
+        logits = rng.randn(N, A).astype(np.float32)
+        actions = rng.randint(0, A, N).astype(np.int32)
+        logp_old = (rng.randn(N) * 0.5 - 1.5).astype(np.float32)
+        adv = rng.randn(N).astype(np.float32)
+        value = rng.randn(N).astype(np.float32)
+        ret = rng.randn(N).astype(np.float32)
+        return logits, actions, logp_old, adv, value, ret
+
+    @settings(**SET)
+    @given(seed=st.integers(0, 2**31 - 1), N=st.integers(1, 400),
+           A=st.integers(2, 16), clip=st.floats(0.05, 0.5))
+    def test_forward_matches_ref(self, seed, N, A, clip):
+        args = self._data(seed, N, A)
+        got = ppo_terms_pallas(*args, clip)
+        want = ref.ppo_terms_ref(*args, clip)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), N=st.integers(1, 300),
+           A=st.integers(2, 12), clip=st.floats(0.05, 0.5))
+    def test_backward_matches_autodiff(self, seed, N, A, clip):
+        logits, actions, logp_old, adv, value, ret = self._data(seed, N, A)
+        vf, ent = 0.5, 0.013
+
+        def loss_pallas(lg, v):
+            p, vl, e, _ = ppo_terms_pallas(lg, actions, logp_old, adv, v,
+                                           ret, clip)
+            return jnp.mean(p) + vf * jnp.mean(vl) - ent * jnp.mean(e)
+
+        def loss_ref(lg, v):
+            return ref.ppo_scalar_ref(lg, actions, logp_old, adv, v, ret,
+                                      clip, vf, ent)
+
+        g1 = jax.grad(loss_pallas, argnums=(0, 1))(logits, value)
+        g2 = jax.grad(loss_ref, argnums=(0, 1))(logits, value)
+        np.testing.assert_allclose(g1[0], g2[0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(g1[1], g2[1], rtol=1e-4, atol=1e-5)
+
+    def test_clip_gradient_is_zero_outside_region(self):
+        # ratio far above 1+eps with positive adv: clipped branch active,
+        # policy gradient must vanish.
+        N, A = 4, 3
+        logits = np.zeros((N, A), np.float32)
+        actions = np.zeros(N, np.int32)
+        # logp under uniform policy = -log 3; make logp_old much smaller
+        logp_old = np.full(N, -8.0, np.float32)
+        adv = np.ones(N, np.float32)
+        value = np.zeros(N, np.float32)
+        ret = np.zeros(N, np.float32)
+
+        def pol_only(lg):
+            p, _, _, _ = ppo_terms_pallas(lg, actions, logp_old, adv,
+                                          value, ret, 0.2)
+            return jnp.mean(p)
+
+        g = jax.grad(pol_only)(jnp.asarray(logits))
+        np.testing.assert_allclose(g, 0.0, atol=1e-7)
+
+    def test_entropy_max_at_uniform(self):
+        N, A = 2, 5
+        logits = np.zeros((N, A), np.float32)
+        args = (jnp.asarray(logits), np.zeros(N, np.int32),
+                np.zeros(N, np.float32), np.zeros(N, np.float32),
+                np.zeros(N, np.float32), np.zeros(N, np.float32))
+        _, _, ent, _ = ppo_terms_pallas(*args, 0.2)
+        np.testing.assert_allclose(ent, np.log(A), rtol=1e-5)

@@ -1,0 +1,202 @@
+"""L2 model/algorithm tests: shape contracts, learning sanity, manifest."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import algo, model, nets
+from compile.envs_spec import ENV_SPECS, HP_LAYOUT, HP_DEFAULTS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _hp(**over):
+    d = dict(HP_DEFAULTS)
+    d.update(over)
+    return jnp.asarray([d[k] for k in HP_LAYOUT], jnp.float32)
+
+
+def _fake_batch(spec, seed=0):
+    rng = np.random.RandomState(seed)
+    T, B, D, A = (spec["train_t"], spec["train_b"], spec["obs_dim"],
+                  spec["act_dim"])
+    n_ag = (2,) if spec["team"] else ()
+    obs = rng.randn(T + 1, B, *n_ag, D).astype(np.float32)
+    actions = rng.randint(0, A, (T, B) + n_ag).astype(np.int32)
+    behavior_logp = np.full((T, B) + n_ag, -np.log(A), np.float32)
+    rewards = rng.randn(T, B).astype(np.float32) * 0.1
+    discounts = np.full((T, B), 0.99, np.float32)
+    return (obs, actions, behavior_logp, rewards, discounts)
+
+
+class TestNets:
+    @pytest.mark.parametrize("env", list(ENV_SPECS))
+    def test_apply_shapes(self, env):
+        spec = ENV_SPECS[env]
+        flat = nets.init_params(0, nets.specs_for(spec))
+        B = 5
+        if spec["team"]:
+            obs = np.zeros((B, 2, spec["obs_dim"]), np.float32)
+            logits, value = nets.apply_team(jnp.asarray(flat), obs, spec)
+            assert logits.shape == (B, 2, spec["act_dim"])
+        else:
+            obs = np.zeros((B, spec["obs_dim"]), np.float32)
+            logits, value = nets.apply_solo(jnp.asarray(flat), obs, spec)
+            assert logits.shape == (B, spec["act_dim"])
+        assert value.shape == (B,)
+
+    def test_flat_roundtrip(self):
+        spec = ENV_SPECS["pong2p"]
+        specs = nets.specs_for(spec)
+        flat = nets.init_params(3, specs)
+        parts = nets.unflatten(flat, specs)
+        total = sum(int(np.prod(s)) for _, s in specs)
+        assert flat.shape == (total,)
+        assert parts["policy/w"].shape == (64, 3)
+
+    def test_init_is_deterministic(self):
+        spec = ENV_SPECS["rps"]
+        a = nets.init_params(17, nets.specs_for(spec))
+        b = nets.init_params(17, nets.specs_for(spec))
+        np.testing.assert_array_equal(a, b)
+
+    def test_team_value_is_centralized(self):
+        # perturbing teammate B's obs must change the (shared) value
+        spec = ENV_SPECS["pommerman"]
+        flat = jnp.asarray(nets.init_params(0, nets.specs_for(spec)))
+        obs = np.random.RandomState(0).randn(1, 2, spec["obs_dim"]) \
+            .astype(np.float32)
+        _, v1 = nets.apply_team(flat, obs, spec)
+        obs2 = obs.copy()
+        obs2[0, 1] += 1.0
+        _, v2 = nets.apply_team(flat, obs2, spec)
+        assert abs(float(v1[0]) - float(v2[0])) > 1e-6
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("env", ["rps", "pong2p", "pommerman"])
+    def test_ppo_loss_decreases_on_fixed_batch(self, env):
+        spec = ENV_SPECS[env]
+        params = jnp.asarray(nets.init_params(0, nets.specs_for(spec)))
+        m = jnp.zeros_like(params)
+        v = jnp.zeros_like(params)
+        step = jnp.zeros((1,), jnp.float32)
+        hp = _hp(lr=1e-3, ent_coef=0.0)
+        batch = _fake_batch(spec)
+        losses = []
+        for _ in range(8):
+            params, m, v, step, stats = algo.train_step(
+                algo.ppo_loss, params, m, v, step, hp, batch, spec)
+            losses.append(float(stats[0]))
+        assert losses[-1] < losses[0], losses
+        assert float(step[0]) == 8.0
+
+    @pytest.mark.parametrize("loss", ["ppo", "vtrace"])
+    def test_policy_learns_rewarded_action(self, loss):
+        # reward action 0 (+1) over others (-1): after training, the
+        # policy must put more probability on action 0.  This is a real
+        # learning-signal test; raw loss curves are not monotone for
+        # V-trace because the vs targets move with the value net.
+        spec = ENV_SPECS["pong2p"]
+        loss_fn = algo.ppo_loss if loss == "ppo" else algo.vtrace_loss
+        params = jnp.asarray(nets.init_params(0, nets.specs_for(spec)))
+        m = jnp.zeros_like(params)
+        v = jnp.zeros_like(params)
+        step = jnp.zeros((1,), jnp.float32)
+        hp = _hp(lr=2e-3, ent_coef=0.0)
+        obs, actions, blogp, rewards, discounts = _fake_batch(spec)
+        rewards = np.where(actions == 0, 1.0, -1.0).astype(np.float32)
+        discounts = np.zeros_like(discounts)  # bandit-style credit
+        batch = (obs, actions, blogp, rewards, discounts)
+
+        def p0(params):
+            logits, _ = nets.apply_solo(params, obs[0], spec)
+            p = np.exp(np.asarray(logits))
+            p /= p.sum(-1, keepdims=True)
+            return float(p[:, 0].mean())
+
+        before = p0(params)
+        for _ in range(30):
+            params, m, v, step, _ = algo.train_step(
+                loss_fn, params, m, v, step, hp, batch, spec)
+        after = p0(params)
+        assert after > before + 0.05, (before, after)
+
+    def test_pallas_and_ref_losses_agree(self):
+        spec = ENV_SPECS["pong2p"]
+        params = jnp.asarray(nets.init_params(1, nets.specs_for(spec)))
+        hp = _hp()
+        batch = _fake_batch(spec, seed=2)
+        l1, s1 = algo.ppo_loss(params, hp, batch, spec, use_pallas=True)
+        l2, s2 = algo.ppo_loss(params, hp, batch, spec, use_pallas=False)
+        np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-4)
+
+    def test_grad_plus_apply_equals_fused(self):
+        # the split path (grad -> allreduce -> apply) must match the fused
+        # train step exactly when run single-learner.
+        spec = ENV_SPECS["rps"]
+        params = jnp.asarray(nets.init_params(5, nets.specs_for(spec)))
+        m = jnp.zeros_like(params)
+        v = jnp.zeros_like(params)
+        step = jnp.zeros((1,), jnp.float32)
+        hp = _hp()
+        batch = _fake_batch(spec, seed=9)
+        p1, m1, v1, s1, _ = algo.train_step(
+            algo.ppo_loss, params, m, v, step, hp, batch, spec)
+        grads, _ = algo.grads_of(algo.ppo_loss, params, hp, batch, spec)
+        p2, m2, v2, s2 = algo.adam_step(params, m, v, step, grads,
+                                        algo.hp_get(hp, "lr"))
+        np.testing.assert_allclose(p1, p2, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(s1, s2)
+
+    def test_grad_clip_bounds_update(self):
+        spec = ENV_SPECS["rps"]
+        params = jnp.asarray(nets.init_params(2, nets.specs_for(spec)))
+        hp = _hp(grad_clip=1e-3)
+        batch = _fake_batch(spec, seed=4)
+        grads, stats = algo.grads_of(algo.ppo_loss, params, hp, batch, spec)
+        gn = float(jnp.sqrt(jnp.sum(grads * grads)))
+        assert gn <= 1e-3 * 1.01
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(ART, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_every_env_present(self, manifest):
+        assert set(manifest["envs"]) == set(ENV_SPECS)
+
+    def test_param_counts(self, manifest):
+        for env, spec in ENV_SPECS.items():
+            P = nets.param_count(nets.specs_for(spec))
+            assert manifest["envs"][env]["param_count"] == P
+
+    def test_artifact_files_exist_and_shapes(self, manifest):
+        for env, ment in manifest["envs"].items():
+            for name, art in ment["artifacts"].items():
+                path = os.path.join(ART, art["file"])
+                assert os.path.exists(path), path
+                for label, shape, dt in art["inputs"] + art["outputs"]:
+                    assert all(int(s) > 0 for s in shape), (name, label)
+                    assert dt in ("f32", "i32")
+
+    def test_init_params_match_manifest(self, manifest):
+        import hashlib
+        for env, ment in manifest["envs"].items():
+            raw = np.fromfile(os.path.join(ART, ment["init_params"]),
+                              dtype="<f4")
+            assert raw.shape == (ment["param_count"],)
+            sha = hashlib.sha256(raw.astype("<f4").tobytes()).hexdigest()
+            assert sha[:16] == ment["init_sha"]
+
+    def test_hp_layout_stable(self, manifest):
+        assert manifest["hp_layout"] == HP_LAYOUT

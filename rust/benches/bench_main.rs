@@ -1,0 +1,281 @@
+//! Benchmark harness (criterion is unavailable offline; this is a
+//! hand-rolled runner with warmup + median/mean reporting, wired to
+//! `cargo bench`).  Groups:
+//!
+//!   codec       — trajectory encode/decode throughput (transport hot path)
+//!   assemble    — batch assembly (learner hot path)
+//!   envs        — env step cost per environment (actor hot path)
+//!   infer       — PJRT inference: batch-1 vs batch-32 (ablation A2)
+//!   train       — PJRT train-step latency per env
+//!   samplers    — GameMgr opponent-sampling cost (ablation A1 substrate)
+//!   replay      — blocking vs ratio replay modes (ablation A3)
+//!
+//! Filter with `cargo bench -- <substring>`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use tleague::envs::{self, MultiAgentEnv};
+use tleague::league::game_mgr::make_game_mgr;
+use tleague::league::payoff::PayoffMatrix;
+use tleague::learner::replay::{assemble, ReplayMem, ReplayMode};
+use tleague::proto::{ModelKey, Msg, TrajSegment};
+use tleague::runtime::{Engine, Tensor};
+use tleague::util::codec::Wire;
+use tleague::util::rng::Pcg32;
+
+struct Bench {
+    filter: String,
+    rows: Vec<(String, f64, f64, String)>,
+}
+
+impl Bench {
+    fn new() -> Bench {
+        let filter = std::env::args()
+            .skip(1)
+            .find(|a| !a.starts_with('-'))
+            .unwrap_or_default();
+        Bench { filter, rows: Vec::new() }
+    }
+
+    /// Run `f` repeatedly; report median iter time and a throughput note.
+    fn bench<F: FnMut() -> u64>(&mut self, name: &str, unit: &str, mut f: F) {
+        if !self.filter.is_empty() && !name.contains(&self.filter) {
+            return;
+        }
+        // warmup
+        let mut units = 0;
+        for _ in 0..3 {
+            units = f();
+        }
+        let mut times = Vec::new();
+        let target_iters = 10usize;
+        for _ in 0..target_iters {
+            let t0 = Instant::now();
+            units = f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(f64::total_cmp);
+        let median = times[times.len() / 2];
+        let rate = units as f64 / median;
+        println!(
+            "{name:<44} {:>10.3} ms/iter   {:>12.0} {unit}/s",
+            median * 1e3,
+            rate
+        );
+        self.rows
+            .push((name.to_string(), median * 1e3, rate, unit.to_string()));
+    }
+}
+
+fn sample_seg(t: usize, na: usize, d: usize, rng: &mut Pcg32) -> TrajSegment {
+    TrajSegment {
+        model_key: ModelKey::new(0, 1),
+        t: t as u32,
+        n_agents: na as u32,
+        obs: (0..(t + 1) * na * d).map(|_| rng.next_f32()).collect(),
+        actions: (0..t * na).map(|_| rng.below(6) as i32).collect(),
+        behavior_logp: (0..t * na).map(|_| -rng.next_f32()).collect(),
+        rewards: (0..t).map(|_| rng.next_f32()).collect(),
+        discounts: vec![0.99; t],
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Pcg32::new(1, 1);
+
+    // ---- codec ---------------------------------------------------------
+    let seg = sample_seg(16, 2, 980, &mut rng);
+    let msg = Msg::Traj(seg.clone());
+    let bytes = msg.to_bytes();
+    println!("\n# codec (pommerman-sized segment: {} KiB)", bytes.len() / 1024);
+    b.bench("codec/encode_traj_segment", "seg", || {
+        let mut n = 0;
+        for _ in 0..100 {
+            let buf = msg.to_bytes();
+            std::hint::black_box(&buf);
+            n += 1;
+        }
+        n
+    });
+    b.bench("codec/decode_traj_segment", "seg", || {
+        let mut n = 0;
+        for _ in 0..100 {
+            let m = Msg::from_bytes(&bytes).unwrap();
+            std::hint::black_box(&m);
+            n += 1;
+        }
+        n
+    });
+
+    // ---- batch assembly --------------------------------------------------
+    println!("\n# learner batch assembly");
+    let segs: Vec<TrajSegment> =
+        (0..32).map(|_| sample_seg(16, 2, 980, &mut rng)).collect();
+    b.bench("assemble/pommerman_32x16", "batch", || {
+        let mut n = 0;
+        for _ in 0..20 {
+            let batch = assemble(&segs, 980).unwrap();
+            std::hint::black_box(&batch);
+            n += 1;
+        }
+        n
+    });
+
+    // ---- env stepping -----------------------------------------------------
+    println!("\n# env step cost (drives Table-3 in-game fps)");
+    for env_name in ["rps", "pong2p", "pommerman", "doom_lite", "synthetic"] {
+        let mut env = envs::make(env_name, 1).unwrap();
+        let mut obs = env.reset();
+        let n_agents = env.n_agents();
+        let act_dim = env.act_dim();
+        let mut t = 0usize;
+        b.bench(&format!("envs/{env_name}/step"), "step", move || {
+            let mut n = 0;
+            for _ in 0..200 {
+                let acts: Vec<usize> =
+                    (0..n_agents).map(|i| (t + i) % act_dim).collect();
+                let s = env.step(&acts);
+                t += 1;
+                if s.done {
+                    obs = env.reset();
+                } else {
+                    obs = s.obs;
+                }
+                n += 1;
+            }
+            std::hint::black_box(&obs);
+            n
+        });
+    }
+
+    // ---- PJRT inference + training ------------------------------------
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine = Arc::new(Engine::load(&dir).unwrap());
+        println!("\n# PJRT inference: batch-1 vs batch-32 (InfServer ablation A2)");
+        for env_name in ["pommerman", "doom_lite"] {
+            let m = engine.manifest.env(env_name).unwrap().clone();
+            let params = engine.init_params(env_name).unwrap();
+            let na = m.n_agents();
+            let obs1 = vec![0.1f32; na * m.obs_dim];
+            let eng = engine.clone();
+            let p2 = params.clone();
+            let en = env_name.to_string();
+            b.bench(&format!("infer/{env_name}/b1"), "row", move || {
+                let mut n = 0;
+                for _ in 0..20 {
+                    let out = eng.infer(&en, 1, &p2, &obs1).unwrap();
+                    std::hint::black_box(&out);
+                    n += 1;
+                }
+                n
+            });
+            let obs32 = vec![0.1f32; m.infer_b * na * m.obs_dim];
+            let eng = engine.clone();
+            let en = env_name.to_string();
+            let ib = m.infer_b as u64;
+            b.bench(&format!("infer/{env_name}/b32"), "row", move || {
+                let mut n = 0;
+                for _ in 0..20 {
+                    let out = eng.infer(&en, 32, &params, &obs32).unwrap();
+                    std::hint::black_box(&out);
+                    n += ib;
+                }
+                n
+            });
+        }
+
+        println!("\n# PJRT train step (frames/s = cfps upper bound per learner)");
+        for env_name in ["rps", "pommerman", "doom_lite"] {
+            let m = engine.manifest.env(env_name).unwrap().clone();
+            let p = m.param_count;
+            let na = m.n_agents();
+            let (t, bsz, d) = (m.train_t, m.train_b, m.obs_dim);
+            let params = engine.init_params(env_name).unwrap();
+            let hp = engine.manifest.default_hp();
+            let inputs: Vec<Tensor> = vec![
+                Tensor::F32(params),
+                Tensor::F32(vec![0.0; p]),
+                Tensor::F32(vec![0.0; p]),
+                Tensor::F32(vec![0.0]),
+                Tensor::F32(hp),
+                Tensor::F32(vec![0.1; (t + 1) * bsz * na * d]),
+                Tensor::I32(vec![1; t * bsz * na]),
+                Tensor::F32(vec![-1.0; t * bsz * na]),
+                Tensor::F32(vec![0.1; t * bsz]),
+                Tensor::F32(vec![0.99; t * bsz]),
+            ];
+            let eng = engine.clone();
+            let art = format!("train_ppo_{env_name}");
+            let en = env_name.to_string();
+            let frames = (t * bsz) as u64;
+            b.bench(&format!("train/{env_name}/ppo_step"), "frame", move || {
+                let out = eng.run(&en, &art, &inputs).unwrap();
+                std::hint::black_box(&out);
+                frames
+            });
+        }
+    } else {
+        println!("\n(artifacts not built; skipping PJRT benches)");
+    }
+
+    // ---- opponent samplers ----------------------------------------------
+    println!("\n# GameMgr samplers over a 200-model pool (ablation A1)");
+    let pool: Vec<ModelKey> = (0..200).map(|v| ModelKey::new(0, v)).collect();
+    let mut payoff = PayoffMatrix::new();
+    let mut prng = Pcg32::new(7, 7);
+    for _ in 0..2000 {
+        let a = pool[prng.below(200) as usize];
+        let bq = pool[prng.below(200) as usize];
+        payoff.record(a, bq, prng.next_f32());
+    }
+    let payoff = Arc::new(payoff);
+    for name in ["selfplay", "uniform", "pfsp", "sp_pfsp", "elo_match"] {
+        let mut mgr = make_game_mgr(name).unwrap();
+        let pool = pool.clone();
+        let payoff2 = payoff.clone();
+        let mut rng2 = Pcg32::new(9, 9);
+        let learner = ModelKey::new(0, 200);
+        b.bench(&format!("samplers/{name}"), "sample", move || {
+            let mut n = 0;
+            for _ in 0..1000 {
+                let ops =
+                    mgr.sample_opponents(learner, 1, &pool, &payoff2, &mut rng2);
+                std::hint::black_box(&ops);
+                n += 1;
+            }
+            n
+        });
+    }
+
+    // ---- replay modes ----------------------------------------------------
+    println!("\n# replay memory: blocking vs ratio (ablation A3)");
+    for (label, mode) in [
+        ("blocking", ReplayMode::Blocking),
+        ("ratio4", ReplayMode::Ratio { max_reuse: 4 }),
+    ] {
+        let mut rng3 = Pcg32::new(3, 3);
+        let segs: Vec<TrajSegment> =
+            (0..256).map(|_| sample_seg(16, 1, 128, &mut rng3)).collect();
+        b.bench(&format!("replay/{label}"), "sample", move || {
+            let mut mem = ReplayMem::new(mode, 4096, 1);
+            for s in &segs {
+                mem.push(s.clone());
+            }
+            let mut n = 0;
+            while let Some(batch) = mem.sample(32) {
+                std::hint::black_box(&batch);
+                n += 1;
+                if n > 64 {
+                    break;
+                }
+            }
+            n
+        });
+    }
+
+    println!("\n{} benches run", b.rows.len());
+}

@@ -1,0 +1,405 @@
+//! Actor: produces trajectories (paper §3.2).
+//!
+//! Embeds the Env and the Agents.  At each episode beginning it
+//! requests a task from the LeagueMgr (which learning policy, which
+//! opponent(s)); at episode end it reports the outcome.  During the
+//! loop, the learning agent's trajectory segments (length L = the
+//! manifest's train_t, spanning episode boundaries IMPALA-style) are
+//! pushed to the Learner, and policy parameters are pulled from the
+//! ModelPool.  Forward passes run either on a local PJRT engine or are
+//! delegated to a remote InfServer.
+
+use crate::envs::{self, MultiAgentEnv};
+use crate::inference::infer_remote;
+use crate::league::LeagueClient;
+use crate::model_pool::ModelPoolClient;
+use crate::proto::{MatchOutcome, ModelKey, TaskSpec, TrajSegment};
+use crate::runtime::Engine;
+use crate::transport::{PushClient, ReqClient};
+use crate::util::metrics::Meter;
+use crate::util::rng::{log_softmax_at, Pcg32};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// How this actor evaluates policies.
+pub enum PolicyBackend {
+    Local(Arc<Engine>),
+    Remote(ReqClient),
+}
+
+/// Which env slots the learning (meta-)agent controls and how the
+/// opponents group.  E.g. Pommerman Team: learner = [0, 2] acting as
+/// one meta-agent, one opponent controlling [1, 3].
+#[derive(Clone, Debug)]
+pub struct RoleLayout {
+    pub learner_slots: Vec<usize>,
+    pub opponent_groups: Vec<Vec<usize>>,
+}
+
+pub fn role_layout(env_name: &str, n_agents: usize) -> RoleLayout {
+    match env_name {
+        "pommerman" => RoleLayout {
+            learner_slots: vec![0, 2],
+            opponent_groups: vec![vec![1, 3]],
+        },
+        "pommerman_ffa" => RoleLayout {
+            learner_slots: vec![0],
+            opponent_groups: (1..4).map(|i| vec![i]).collect(),
+        },
+        _ => RoleLayout {
+            learner_slots: vec![0],
+            opponent_groups: (1..n_agents).map(|i| vec![i]).collect(),
+        },
+    }
+}
+
+pub struct ActorConfig {
+    /// env factory name (envs::make)
+    pub env: String,
+    /// "<agent>/<name>" — the prefix routes LeagueMgr tasks
+    pub actor_id: String,
+    pub seed: u64,
+    pub gamma: f32,
+    /// pull fresh learning-model params every N episodes
+    pub refresh_every: u32,
+    /// trajectory segment length; 0 = read from the local engine's
+    /// manifest (required explicitly for the Remote backend)
+    pub train_t: usize,
+}
+
+impl Default for ActorConfig {
+    fn default() -> Self {
+        ActorConfig {
+            env: "rps".into(),
+            actor_id: "0/actor".into(),
+            seed: 0,
+            gamma: 0.99,
+            refresh_every: 1,
+            train_t: 0,
+        }
+    }
+}
+
+struct SegBuffer {
+    obs: Vec<f32>,
+    actions: Vec<i32>,
+    logp: Vec<f32>,
+    rewards: Vec<f32>,
+    discounts: Vec<f32>,
+    steps: usize,
+}
+
+impl SegBuffer {
+    fn new() -> Self {
+        SegBuffer {
+            obs: Vec::new(),
+            actions: Vec::new(),
+            logp: Vec::new(),
+            rewards: Vec::new(),
+            discounts: Vec::new(),
+            steps: 0,
+        }
+    }
+    fn clear(&mut self) {
+        self.obs.clear();
+        self.actions.clear();
+        self.logp.clear();
+        self.rewards.clear();
+        self.discounts.clear();
+        self.steps = 0;
+    }
+}
+
+pub struct Actor {
+    pub cfg: ActorConfig,
+    env: Box<dyn MultiAgentEnv>,
+    layout: RoleLayout,
+    backend: PolicyBackend,
+    league: LeagueClient,
+    pool: ModelPoolClient,
+    push: PushClient,
+    manifest_env: String,
+    train_t: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    /// host params + device-buffer cache id (bumped on refresh)
+    params: HashMap<ModelKey, (Arc<Vec<f32>>, u64)>,
+    task: Option<TaskSpec>,
+    seg: SegBuffer,
+    cur_obs: Vec<Vec<f32>>,
+    episode_steps: u32,
+    episodes_done: u32,
+    rng: Pcg32,
+    pub frames: Meter,
+    pub episodes: Meter,
+}
+
+impl Actor {
+    pub fn new(
+        cfg: ActorConfig,
+        backend: PolicyBackend,
+        league_addr: &str,
+        pool_addrs: &[String],
+        learner_data_addr: &str,
+    ) -> Result<Actor> {
+        let env = envs::make(&cfg.env, cfg.seed)?;
+        let layout = role_layout(&cfg.env, env.n_agents());
+        let manifest_env = envs::manifest_name(&cfg.env).to_string();
+        let (train_t, obs_dim, act_dim) = match &backend {
+            PolicyBackend::Local(engine) => {
+                let m = engine.manifest.env(&manifest_env)?;
+                let t = if cfg.train_t > 0 { cfg.train_t } else { m.train_t };
+                (t, m.obs_dim, m.act_dim)
+            }
+            PolicyBackend::Remote(_) => {
+                anyhow::ensure!(
+                    cfg.train_t > 0,
+                    "ActorConfig.train_t must be set for the Remote backend"
+                );
+                (cfg.train_t, env.obs_dim(), env.act_dim())
+            }
+        };
+        anyhow::ensure!(
+            obs_dim == env.obs_dim() && act_dim == env.act_dim(),
+            "env/manifest shape mismatch for {}: {}x{} vs {}x{}",
+            cfg.env, obs_dim, act_dim, env.obs_dim(), env.act_dim()
+        );
+        let rng = Pcg32::from_label(cfg.seed, &cfg.actor_id);
+        Ok(Actor {
+            env,
+            layout,
+            backend,
+            league: LeagueClient::connect(league_addr),
+            pool: ModelPoolClient::connect(pool_addrs),
+            push: PushClient::connect(learner_data_addr),
+            manifest_env,
+            train_t,
+            obs_dim,
+            act_dim,
+            params: HashMap::new(),
+            task: None,
+            seg: SegBuffer::new(),
+            cur_obs: Vec::new(),
+            episode_steps: 0,
+            episodes_done: 0,
+            rng,
+            frames: Meter::new(),
+            episodes: Meter::new(),
+            cfg,
+        })
+    }
+
+    /// Override the segment length (tests / throughput harness).
+    pub fn set_train_t(&mut self, t: usize) {
+        self.train_t = t;
+    }
+
+    fn fetch_params(&mut self, key: ModelKey, force: bool) -> Result<Arc<Vec<f32>>> {
+        if !force {
+            if let Some((p, _)) = self.params.get(&key) {
+                return Ok(p.clone());
+            }
+        }
+        let blob = self
+            .pool
+            .get(key)?
+            .or_else(|| self.pool.get_latest(key.agent).ok().flatten())
+            .with_context(|| format!("model {key} not in pool"))?;
+        let p = Arc::new(blob.params);
+        let id = crate::runtime::new_cache_id();
+        if let Some((_, old_id)) = self.params.insert(key, (p.clone(), id)) {
+            if let PolicyBackend::Local(engine) = &self.backend {
+                engine.evict_cached(old_id);
+            }
+        }
+        // bound the cache (frozen models accumulate over a long run)
+        if self.params.len() > 64 {
+            let drop_key = *self.params.keys().next().unwrap();
+            if let Some((_, old_id)) = self.params.remove(&drop_key) {
+                if let PolicyBackend::Local(engine) = &self.backend {
+                    engine.evict_cached(old_id);
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    fn begin_task(&mut self) -> Result<()> {
+        let task = self.league.request_actor_task(&self.cfg.actor_id)?;
+        let refresh = self.episodes_done % self.cfg.refresh_every.max(1) == 0;
+        self.fetch_params(task.learner_key, refresh)?;
+        for &op in &task.opponents {
+            self.fetch_params(op, false)?;
+        }
+        self.task = Some(task);
+        Ok(())
+    }
+
+    /// Forward pass for `rows` observations under `key`'s policy.
+    fn infer(&mut self, key: ModelKey, obs: &[f32], rows: u32) -> Result<Vec<f32>> {
+        match &self.backend {
+            PolicyBackend::Local(engine) => {
+                let (params, id) =
+                    self.params.get(&key).context("params not cached")?;
+                let (logits, _value) =
+                    engine.infer_cached(&self.manifest_env, 1, *id, params, obs)?;
+                let _ = rows;
+                Ok(logits)
+            }
+            PolicyBackend::Remote(client) => {
+                let (logits, _value) = infer_remote(client, key, obs, rows)?;
+                Ok(logits)
+            }
+        }
+    }
+
+    /// Sample actions for a group of slots sharing one policy; returns
+    /// (actions per slot, logp per slot).
+    fn act_group(
+        &mut self,
+        key: ModelKey,
+        slots: &[usize],
+    ) -> Result<(Vec<usize>, Vec<f32>)> {
+        let mut obs = Vec::with_capacity(slots.len() * self.obs_dim);
+        for &s in slots {
+            obs.extend_from_slice(&self.cur_obs[s]);
+        }
+        let logits = self.infer(key, &obs, slots.len() as u32)?;
+        let a = self.act_dim;
+        let mut actions = Vec::with_capacity(slots.len());
+        let mut logps = Vec::with_capacity(slots.len());
+        for (i, _) in slots.iter().enumerate() {
+            let row = &logits[i * a..(i + 1) * a];
+            let act = self.rng.sample_logits(row);
+            actions.push(act);
+            logps.push(log_softmax_at(row, act));
+        }
+        Ok((actions, logps))
+    }
+
+    fn push_segment(&mut self) -> Result<()> {
+        let task = self.task.as_ref().unwrap();
+        let na = self.layout.learner_slots.len() as u32;
+        // bootstrap obs = current learner-slot observations
+        let mut obs = std::mem::take(&mut self.seg.obs);
+        for &s in &self.layout.learner_slots {
+            obs.extend_from_slice(&self.cur_obs[s]);
+        }
+        let seg = TrajSegment {
+            model_key: task.learner_key,
+            t: self.seg.steps as u32,
+            n_agents: na,
+            obs,
+            actions: std::mem::take(&mut self.seg.actions),
+            behavior_logp: std::mem::take(&mut self.seg.logp),
+            rewards: std::mem::take(&mut self.seg.rewards),
+            discounts: std::mem::take(&mut self.seg.discounts),
+        };
+        self.seg.clear();
+        self.push.push(&crate::proto::Msg::Traj(seg))
+    }
+
+    /// Advance the env by one step (all agents act).  Returns true at
+    /// episode end.
+    pub fn step_once(&mut self) -> Result<bool> {
+        if self.task.is_none() {
+            self.begin_task()?;
+            self.cur_obs = self.env.reset();
+            self.episode_steps = 0;
+        }
+        let task = self.task.as_ref().unwrap().clone();
+        let n = self.env.n_agents();
+        let mut actions = vec![0usize; n];
+
+        // learning meta-agent
+        let (l_acts, l_logps) =
+            self.act_group(task.learner_key, &self.layout.learner_slots.clone())?;
+        for (i, &s) in self.layout.learner_slots.iter().enumerate() {
+            actions[s] = l_acts[i];
+        }
+        // opponents
+        for (gi, group) in self.layout.opponent_groups.clone().iter().enumerate() {
+            let key = task.opponents.get(gi).copied().unwrap_or(task.learner_key);
+            let (o_acts, _) = self.act_group(key, group)?;
+            for (i, &s) in group.iter().enumerate() {
+                actions[s] = o_acts[i];
+            }
+        }
+
+        // record obs+action+logp for the learning agent BEFORE stepping
+        for &s in &self.layout.learner_slots {
+            self.seg.obs.extend_from_slice(&self.cur_obs[s]);
+        }
+        for (i, _) in self.layout.learner_slots.iter().enumerate() {
+            self.seg.actions.push(l_acts[i] as i32);
+            self.seg.logp.push(l_logps[i]);
+        }
+
+        let step = self.env.step(&actions);
+        self.episode_steps += 1;
+        self.frames.add(1);
+
+        // team reward = mean over learner slots
+        let r: f32 = self
+            .layout
+            .learner_slots
+            .iter()
+            .map(|&s| step.rewards[s])
+            .sum::<f32>()
+            / self.layout.learner_slots.len() as f32;
+        self.seg.rewards.push(r);
+        self.seg.discounts.push(if step.done {
+            0.0
+        } else {
+            self.cfg.gamma
+        });
+        self.seg.steps += 1;
+        self.cur_obs = step.obs;
+
+        if self.seg.steps >= self.train_t {
+            self.push_segment()?;
+        }
+
+        if step.done {
+            let outcome = step
+                .info
+                .outcome
+                .as_ref()
+                .map(|o| {
+                    self.layout
+                        .learner_slots
+                        .iter()
+                        .map(|&s| o[s])
+                        .sum::<f32>()
+                        / self.layout.learner_slots.len() as f32
+                })
+                .unwrap_or(0.5);
+            self.league.report_outcome(MatchOutcome {
+                task_id: task.task_id,
+                learner_key: task.learner_key,
+                opponents: task.opponents.clone(),
+                outcome,
+                episode_len: self.episode_steps,
+                frames: self.episode_steps as u64,
+            })?;
+            self.episodes.add(1);
+            self.episodes_done += 1;
+            self.task = None; // next step_once() starts a fresh task
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Run until `stop` or `max_frames` env steps.
+    pub fn run(&mut self, max_frames: u64, stop: &AtomicBool) -> Result<u64> {
+        let start = self.frames.count();
+        while self.frames.count() - start < max_frames
+            && !stop.load(Ordering::Relaxed)
+        {
+            self.step_once()?;
+        }
+        Ok(self.frames.count() - start)
+    }
+}

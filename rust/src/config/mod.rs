@@ -1,0 +1,197 @@
+//! Run configuration: the yml.jinja2-equivalent of the paper's §3.4.
+//!
+//! A JSON spec declares the whole training run — env, module replica
+//! counts (M_A actors per learner, M_L learners, M_M model pools, M_G
+//! learning agents), algorithm + sampler choices, and hyper-parameter
+//! overrides.  The kube-lite orchestrator consumes this to launch the
+//! league, mirroring "I want 56 Learners and 8 InfServers, each Learner
+//! corresponds to 16 actors ..." from the paper.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub env: String,
+    /// parallel learning agents (M_G)
+    pub n_agents: u32,
+    /// learners per agent (M_L)
+    pub learners_per_agent: usize,
+    /// actors per learner (M_A)
+    pub actors_per_learner: usize,
+    /// model-pool replicas (M_M)
+    pub model_pools: usize,
+    pub inf_servers: usize,
+    pub game_mgr: String,
+    pub algo: String,
+    pub opponents_per_episode: usize,
+    pub gamma: f32,
+    pub publish_every: u64,
+    pub period_steps: u64,
+    pub total_steps: u64,
+    pub replay_mode: String, // "blocking" | "ratio:<n>"
+    pub seed: u64,
+    pub hp_overrides: BTreeMap<String, f32>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            env: "rps".into(),
+            n_agents: 1,
+            learners_per_agent: 1,
+            actors_per_learner: 2,
+            model_pools: 1,
+            inf_servers: 0,
+            game_mgr: "uniform".into(),
+            algo: "ppo".into(),
+            opponents_per_episode: 1,
+            gamma: 0.99,
+            publish_every: 4,
+            period_steps: 50,
+            total_steps: 200,
+            replay_mode: "blocking".into(),
+            seed: 0,
+            hp_overrides: BTreeMap::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json(text: &str) -> Result<RunConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = RunConfig::default();
+        let get_num = |j: &Json, k: &str, d: f64| -> f64 {
+            j.get(k).and_then(|v| v.as_f64()).unwrap_or(d)
+        };
+        if let Some(env) = j.get("env").and_then(|v| v.as_str()) {
+            cfg.env = env.to_string();
+        }
+        cfg.n_agents = get_num(&j, "n_agents", cfg.n_agents as f64) as u32;
+        cfg.learners_per_agent =
+            get_num(&j, "learners_per_agent", cfg.learners_per_agent as f64) as usize;
+        cfg.actors_per_learner =
+            get_num(&j, "actors_per_learner", cfg.actors_per_learner as f64) as usize;
+        cfg.model_pools = get_num(&j, "model_pools", cfg.model_pools as f64) as usize;
+        cfg.inf_servers = get_num(&j, "inf_servers", cfg.inf_servers as f64) as usize;
+        if let Some(s) = j.get("game_mgr").and_then(|v| v.as_str()) {
+            cfg.game_mgr = s.to_string();
+        }
+        if let Some(s) = j.get("algo").and_then(|v| v.as_str()) {
+            cfg.algo = s.to_string();
+        }
+        cfg.opponents_per_episode = get_num(
+            &j,
+            "opponents_per_episode",
+            cfg.opponents_per_episode as f64,
+        ) as usize;
+        cfg.gamma = get_num(&j, "gamma", cfg.gamma as f64) as f32;
+        cfg.publish_every = get_num(&j, "publish_every", cfg.publish_every as f64) as u64;
+        cfg.period_steps = get_num(&j, "period_steps", cfg.period_steps as f64) as u64;
+        cfg.total_steps = get_num(&j, "total_steps", cfg.total_steps as f64) as u64;
+        if let Some(s) = j.get("replay_mode").and_then(|v| v.as_str()) {
+            cfg.replay_mode = s.to_string();
+        }
+        cfg.seed = get_num(&j, "seed", cfg.seed as f64) as u64;
+        if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
+            for (k, v) in obj {
+                cfg.hp_overrides
+                    .insert(k.clone(), v.as_f64().context("hp value")? as f32);
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path}"))?;
+        Self::from_json(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n_agents >= 1, "n_agents >= 1");
+        anyhow::ensure!(self.learners_per_agent >= 1, "learners_per_agent >= 1");
+        anyhow::ensure!(self.model_pools >= 1, "model_pools >= 1");
+        anyhow::ensure!(
+            matches!(self.algo.as_str(), "ppo" | "vtrace"),
+            "algo must be ppo|vtrace"
+        );
+        anyhow::ensure!(
+            self.replay_mode == "blocking" || self.replay_mode.starts_with("ratio:"),
+            "replay_mode must be 'blocking' or 'ratio:<n>'"
+        );
+        Ok(())
+    }
+
+    pub fn replay_mode(&self) -> crate::learner::replay::ReplayMode {
+        use crate::learner::replay::ReplayMode;
+        if let Some(n) = self.replay_mode.strip_prefix("ratio:") {
+            ReplayMode::Ratio { max_reuse: n.parse().unwrap_or(2) }
+        } else {
+            ReplayMode::Blocking
+        }
+    }
+
+    /// Opponents per episode implied by the env if not set explicitly.
+    pub fn effective_opponents(&self) -> usize {
+        if self.opponents_per_episode > 0 {
+            return self.opponents_per_episode;
+        }
+        match self.env.as_str() {
+            "doom_lite" => 7,
+            "pommerman_ffa" => 3,
+            _ => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let cfg = RunConfig::from_json(
+            r#"{
+            "env": "pommerman", "n_agents": 2, "learners_per_agent": 2,
+            "actors_per_learner": 4, "model_pools": 2, "inf_servers": 1,
+            "game_mgr": "sp_pfsp", "algo": "ppo", "gamma": 0.995,
+            "publish_every": 8, "period_steps": 100, "total_steps": 1000,
+            "replay_mode": "ratio:3", "seed": 7,
+            "hp": {"lr": 0.001, "ent_coef": 0.02}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.env, "pommerman");
+        assert_eq!(cfg.learners_per_agent, 2);
+        assert_eq!(cfg.hp_overrides["lr"], 0.001);
+        assert!(matches!(
+            cfg.replay_mode(),
+            crate::learner::replay::ReplayMode::Ratio { max_reuse: 3 }
+        ));
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let cfg = RunConfig::from_json(r#"{"env": "rps"}"#).unwrap();
+        assert_eq!(cfg.actors_per_learner, 2);
+        assert_eq!(cfg.algo, "ppo");
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::from_json(r#"{"algo": "dqn"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"replay_mode": "nope"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"n_agents": 0}"#).is_err());
+    }
+
+    #[test]
+    fn env_implies_opponents() {
+        let mut cfg = RunConfig::default();
+        cfg.opponents_per_episode = 0;
+        cfg.env = "doom_lite".into();
+        assert_eq!(cfg.effective_opponents(), 7);
+    }
+}

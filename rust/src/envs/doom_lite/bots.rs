@@ -1,0 +1,264 @@
+//! Scripted doom_lite opponents.
+//!
+//! - [`BuiltinBot`]: the "builtin bots" of ViZDoom's CIG deathmatch —
+//!   wander the maze, engage on sight (Table 1's opposition).
+//! - [`F1Bot`]: stand-in for "F1", the CIG-2016 track-1 champion
+//!   (closed checkpoint): better aim (leads the target), keeps
+//!   preferred range, strafes around incoming rockets, retreats when
+//!   outnumbered.  Table 2's opposition.
+
+use super::{
+    DoomLite, ACT_BACK, ACT_FIRE, ACT_FWD, ACT_IDLE, ACT_TURN_L, ACT_TURN_R,
+    FOV, ROCKET_SPEED,
+};
+use crate::util::rng::Pcg32;
+
+fn norm_angle(mut a: f32) -> f32 {
+    while a > std::f32::consts::PI {
+        a -= std::f32::consts::TAU;
+    }
+    while a < -std::f32::consts::PI {
+        a += std::f32::consts::TAU;
+    }
+    a
+}
+
+/// Nearest visible enemy: (index, distance, bearing error).
+fn nearest_visible(env: &DoomLite, who: usize) -> Option<(usize, f32, f32)> {
+    let me = &env.players[who];
+    let mut best: Option<(usize, f32, f32)> = None;
+    for (i, p) in env.players.iter().enumerate() {
+        if i == who || !p.alive {
+            continue;
+        }
+        let rel = (p.pos.0 - me.pos.0, p.pos.1 - me.pos.1);
+        let dist = (rel.0 * rel.0 + rel.1 * rel.1).sqrt();
+        let bearing = norm_angle(rel.1.atan2(rel.0) - me.angle);
+        if bearing.abs() > FOV {
+            continue; // outside (generous) field of view
+        }
+        // line-of-sight check
+        let (d, hit) = env.raycast(me.pos, me.angle + bearing, who);
+        if hit == Some(i) || d >= dist - 0.5 {
+            if best.map_or(true, |(_, bd, _)| dist < bd) {
+                best = Some((i, dist, bearing));
+            }
+        }
+    }
+    best
+}
+
+pub trait DoomPolicy: Send {
+    fn act(&mut self, env: &DoomLite, who: usize) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+pub struct BuiltinBot {
+    rng: Pcg32,
+    wander_turn: i32,
+    wander_dir: i32,
+}
+
+impl BuiltinBot {
+    pub fn new(seed: u64) -> Self {
+        BuiltinBot {
+            rng: Pcg32::from_label(seed, "doom-bot"),
+            wander_turn: 0,
+            wander_dir: 1,
+        }
+    }
+}
+
+impl DoomPolicy for BuiltinBot {
+    fn act(&mut self, env: &DoomLite, who: usize) -> usize {
+        let me = &env.players[who];
+        if !me.alive {
+            return ACT_IDLE;
+        }
+        if let Some((_, dist, bearing)) = nearest_visible(env, who) {
+            // threshold > TURN_SPEED/2, else aim oscillates forever
+            if bearing.abs() > 0.2 {
+                return if bearing > 0.0 { ACT_TURN_R } else { ACT_TURN_L };
+            }
+            if me.cooldown == 0 && dist < 9.0 {
+                return ACT_FIRE;
+            }
+            return ACT_FWD;
+        }
+        // wander: forward unless blocked, occasional random turns
+        let (d, _) = env.raycast(me.pos, me.angle, who);
+        if d < 1.2 || self.wander_turn > 0 {
+            if self.wander_turn == 0 {
+                self.wander_turn = 2 + self.rng.below(4) as i32;
+                self.wander_dir = if self.rng.chance(0.5) { 1 } else { -1 };
+            }
+            self.wander_turn -= 1;
+            return if self.wander_dir > 0 { ACT_TURN_R } else { ACT_TURN_L };
+        }
+        if self.rng.chance(0.05) {
+            self.wander_turn = 1 + self.rng.below(3) as i32;
+        }
+        ACT_FWD
+    }
+
+    fn name(&self) -> &'static str {
+        "builtin"
+    }
+}
+
+pub struct F1Bot {
+    rng: Pcg32,
+    strafe_dir: i32,
+    wander_turn: i32,
+}
+
+impl F1Bot {
+    pub fn new(seed: u64) -> Self {
+        F1Bot {
+            rng: Pcg32::from_label(seed, "doom-f1"),
+            strafe_dir: 1,
+            wander_turn: 0,
+        }
+    }
+}
+
+impl DoomPolicy for F1Bot {
+    fn act(&mut self, env: &DoomLite, who: usize) -> usize {
+        let me = &env.players[who];
+        if !me.alive {
+            return ACT_IDLE;
+        }
+        // rocket evasion: an incoming rocket about to arrive -> burst
+        // forward to leave the splash zone (turning alone cannot dodge)
+        for r in &env.rockets {
+            if r.owner == who {
+                continue;
+            }
+            let rel = (me.pos.0 - r.pos.0, me.pos.1 - r.pos.1);
+            let dist = (rel.0 * rel.0 + rel.1 * rel.1).sqrt();
+            if dist < 2.2 {
+                let heading = r.vel.1.atan2(r.vel.0);
+                let to_me = rel.1.atan2(rel.0);
+                if norm_angle(heading - to_me).abs() < 0.35 {
+                    let (d, _) = env.raycast(me.pos, me.angle, who);
+                    return if d > 1.0 { ACT_FWD } else { ACT_BACK };
+                }
+            }
+        }
+        if let Some((e, dist, bearing)) = nearest_visible(env, who) {
+            // lead the target: aim where the enemy will be
+            let enemy = &env.players[e];
+            let tof = dist / ROCKET_SPEED;
+            // half-lead: bots alternate moving/turning, full lead overshoots
+            let ev = (enemy.angle.cos() * 0.08, enemy.angle.sin() * 0.08);
+            let future = (enemy.pos.0 + ev.0 * tof, enemy.pos.1 + ev.1 * tof);
+            let lead_bearing = norm_angle(
+                (future.1 - me.pos.1).atan2(future.0 - me.pos.0) - me.angle,
+            );
+            if lead_bearing.abs() > 0.2 {
+                return if lead_bearing > 0.0 { ACT_TURN_R } else { ACT_TURN_L };
+            }
+            if me.cooldown == 0 && dist < 10.0 {
+                return ACT_FIRE;
+            }
+            // range keeping while reloading: close if far, back off
+            // point-blank, otherwise hold the aim (don't break it)
+            if dist > 6.0 {
+                return ACT_FWD;
+            }
+            if dist < 2.5 {
+                return ACT_BACK;
+            }
+            let _ = bearing;
+            return ACT_IDLE;
+        }
+        // patrol like the builtin, slightly less random
+        let (d, _) = env.raycast(me.pos, me.angle, who);
+        if d < 1.5 || self.wander_turn > 0 {
+            if self.wander_turn == 0 {
+                self.wander_turn = 2 + self.rng.below(3) as i32;
+            }
+            self.wander_turn -= 1;
+            return ACT_TURN_R;
+        }
+        if self.rng.chance(0.03) {
+            self.wander_turn = 1 + self.rng.below(2) as i32;
+        }
+        ACT_FWD
+    }
+
+    fn name(&self) -> &'static str {
+        "f1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::MultiAgentEnv;
+
+    /// Run one full match with the given per-player policies, return FRAGs.
+    pub fn run_match(
+        env: &mut DoomLite,
+        pols: &mut [Box<dyn DoomPolicy>],
+        steps: usize,
+    ) -> Vec<i32> {
+        env.reset();
+        for _ in 0..steps {
+            let acts: Vec<usize> =
+                (0..env.n_agents()).map(|i| pols[i].act(env, i)).collect();
+            let s = env.step(&acts);
+            if s.done {
+                break;
+            }
+        }
+        env.frags()
+    }
+
+    #[test]
+    fn bots_score_frags_against_idlers() {
+        let mut env = DoomLite::new(11, 4);
+        let mut pols: Vec<Box<dyn DoomPolicy>> = vec![
+            Box::new(BuiltinBot::new(1)),
+            Box::new(Idle),
+            Box::new(Idle),
+            Box::new(Idle),
+        ];
+        let frags = run_match(&mut env, &mut pols, 800);
+        assert!(frags[0] > 0, "bot should frag idlers: {frags:?}");
+    }
+
+    #[test]
+    fn f1_outperforms_builtin_on_average() {
+        let mut total_f1 = 0i32;
+        let mut total_bot = 0i32;
+        for seed in 0..4 {
+            let mut env = DoomLite::new(100 + seed, 4);
+            let mut pols: Vec<Box<dyn DoomPolicy>> = vec![
+                Box::new(F1Bot::new(seed)),
+                Box::new(BuiltinBot::new(seed + 10)),
+                Box::new(BuiltinBot::new(seed + 20)),
+                Box::new(BuiltinBot::new(seed + 30)),
+            ];
+            let frags = run_match(&mut env, &mut pols, 1200);
+            total_f1 += frags[0];
+            total_bot += frags[1] + frags[2] + frags[3];
+        }
+        let avg_bot = total_bot as f64 / 12.0;
+        assert!(
+            total_f1 as f64 / 4.0 >= avg_bot,
+            "F1 avg {} < builtin avg {avg_bot}",
+            total_f1 as f64 / 4.0
+        );
+    }
+
+    struct Idle;
+    impl DoomPolicy for Idle {
+        fn act(&mut self, _e: &DoomLite, _w: usize) -> usize {
+            ACT_IDLE
+        }
+        fn name(&self) -> &'static str {
+            "idle"
+        }
+    }
+}

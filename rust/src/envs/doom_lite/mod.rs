@@ -1,0 +1,632 @@
+//! doom_lite: ViZDoom CIG-2016 track-1 stand-in (DESIGN.md substitution 1).
+//!
+//! A 2-D tile-maze deathmatch: 8 players, rockets with splash damage
+//! (suicides are possible, so FRAG = kills − suicides is meaningful),
+//! respawns, fixed-length match, ranked by FRAG — the protocol of the
+//! paper's §4.2.  Observations are egocentric ray casts (depth + entity
+//! channels), the stand-in for the first-person RGB screen.  Actions (6):
+//! idle, turn-left, turn-right, move-forward, move-backward, fire.
+//!
+//! All simulation is synchronous (the paper's fairness note): every
+//! agent acts, then the world ticks once.
+
+pub mod bots;
+
+use super::{Info, MultiAgentEnv, Step};
+use crate::util::rng::Pcg32;
+
+pub const MAZE: usize = 24;
+pub const N_RAYS: usize = 24;
+pub const RAY_CH: usize = 5;
+pub const OBS_DIM: usize = N_RAYS * RAY_CH + 8;
+pub const FOV: f32 = 1.6; // radians (~92 deg)
+pub const MAX_DEPTH: f32 = 12.0;
+pub const MOVE_SPEED: f32 = 0.22;
+pub const TURN_SPEED: f32 = 0.35;
+pub const ROCKET_SPEED: f32 = 0.8;
+pub const SPLASH_RADIUS: f32 = 1.1;
+pub const FIRE_COOLDOWN: i32 = 6;
+pub const RESPAWN_DELAY: i32 = 12;
+pub const MATCH_STEPS: usize = 2100; // ≙ 10 min at 17.5 eff. fps / 5
+
+pub const ACT_IDLE: usize = 0;
+pub const ACT_TURN_L: usize = 1;
+pub const ACT_TURN_R: usize = 2;
+pub const ACT_FWD: usize = 3;
+pub const ACT_BACK: usize = 4;
+pub const ACT_FIRE: usize = 5;
+
+#[derive(Clone, Debug)]
+pub struct Player {
+    pub pos: (f32, f32),
+    pub angle: f32,
+    pub alive: bool,
+    pub respawn_in: i32,
+    pub cooldown: i32,
+    pub kills: i32,
+    pub suicides: i32,
+    pub deaths: i32,
+}
+
+impl Player {
+    pub fn frag(&self) -> i32 {
+        self.kills - self.suicides
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Rocket {
+    pub pos: (f32, f32),
+    pub vel: (f32, f32),
+    pub owner: usize,
+}
+
+pub struct DoomLite {
+    rng: Pcg32,
+    pub walls: Vec<bool>, // MAZE*MAZE
+    pub players: Vec<Player>,
+    pub rockets: Vec<Rocket>,
+    pub steps: usize,
+    n_players: usize,
+    done: bool,
+    /// navigation-stage reward shaping (stage 1 of the paper's two-stage
+    /// training): exploration bonus, firing disabled
+    pub nav_mode: bool,
+    visited: Vec<Vec<bool>>, // per player, per cell
+}
+
+fn widx(x: i32, y: i32) -> usize {
+    y as usize * MAZE + x as usize
+}
+
+impl DoomLite {
+    pub fn new(seed: u64, n_players: usize) -> Self {
+        assert!((2..=8).contains(&n_players));
+        let mut env = DoomLite {
+            rng: Pcg32::from_label(seed, "doom"),
+            walls: vec![false; MAZE * MAZE],
+            players: Vec::new(),
+            rockets: Vec::new(),
+            steps: 0,
+            n_players,
+            done: true,
+            nav_mode: false,
+            visited: vec![vec![false; MAZE * MAZE]; n_players],
+        };
+        env.gen_maze();
+        env
+    }
+
+    fn gen_maze(&mut self) {
+        // border walls + random interior pillars/segments, with a
+        // connectivity pass that knocks holes until the maze is connected
+        self.walls.fill(false);
+        for i in 0..MAZE as i32 {
+            for &(x, y) in &[(i, 0), (i, MAZE as i32 - 1), (0, i), (MAZE as i32 - 1, i)] {
+                self.walls[widx(x, y)] = true;
+            }
+        }
+        for _ in 0..42 {
+            let x = 2 + self.rng.below(MAZE as u32 - 4) as i32;
+            let y = 2 + self.rng.below(MAZE as u32 - 4) as i32;
+            let horiz = self.rng.chance(0.5);
+            let len = 2 + self.rng.below(4) as i32;
+            for k in 0..len {
+                let (wx, wy) = if horiz { (x + k, y) } else { (x, y + k) };
+                if wx < MAZE as i32 - 1 && wy < MAZE as i32 - 1 {
+                    self.walls[widx(wx, wy)] = true;
+                }
+            }
+        }
+        // connectivity: flood fill from first free cell, open walls
+        // adjacent to unreached regions until all free cells reachable
+        loop {
+            let mut seen = vec![false; MAZE * MAZE];
+            let start = (0..MAZE * MAZE).find(|&i| !self.walls[i]);
+            let Some(start) = start else { break };
+            let mut q = std::collections::VecDeque::from([start]);
+            seen[start] = true;
+            while let Some(i) = q.pop_front() {
+                let (x, y) = ((i % MAZE) as i32, (i / MAZE) as i32);
+                for (dx, dy) in [(1, 0), (-1, 0), (0, 1), (0, -1)] {
+                    let (nx, ny) = (x + dx, y + dy);
+                    if (0..MAZE as i32).contains(&nx)
+                        && (0..MAZE as i32).contains(&ny)
+                    {
+                        let ni = widx(nx, ny);
+                        if !self.walls[ni] && !seen[ni] {
+                            seen[ni] = true;
+                            q.push_back(ni);
+                        }
+                    }
+                }
+            }
+            // find an unreached free cell adjacent to a reached one via a wall
+            let mut fixed = false;
+            'outer: for y in 1..MAZE as i32 - 1 {
+                for x in 1..MAZE as i32 - 1 {
+                    let i = widx(x, y);
+                    if self.walls[i] {
+                        let near_seen = [(1, 0), (-1, 0), (0, 1), (0, -1)]
+                            .iter()
+                            .any(|(dx, dy)| {
+                                let ni = widx(x + dx, y + dy);
+                                !self.walls[ni] && seen[ni]
+                            });
+                        let near_unseen = [(1, 0), (-1, 0), (0, 1), (0, -1)]
+                            .iter()
+                            .any(|(dx, dy)| {
+                                let ni = widx(x + dx, y + dy);
+                                !self.walls[ni] && !seen[ni]
+                            });
+                        if near_seen && near_unseen {
+                            self.walls[i] = false;
+                            fixed = true;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            if !fixed {
+                break;
+            }
+        }
+    }
+
+    pub fn is_wall_at(&self, x: f32, y: f32) -> bool {
+        let (cx, cy) = (x.floor() as i32, y.floor() as i32);
+        if !(0..MAZE as i32).contains(&cx) || !(0..MAZE as i32).contains(&cy) {
+            return true;
+        }
+        self.walls[widx(cx, cy)]
+    }
+
+    fn free_spawn(&mut self) -> (f32, f32) {
+        loop {
+            let x = 1.5 + self.rng.next_f32() * (MAZE as f32 - 3.0);
+            let y = 1.5 + self.rng.next_f32() * (MAZE as f32 - 3.0);
+            if !self.is_wall_at(x, y) {
+                return (x, y);
+            }
+        }
+    }
+
+    fn spawn_players(&mut self) {
+        self.players.clear();
+        for _ in 0..self.n_players {
+            let pos = self.free_spawn();
+            let angle = self.rng.next_f32() * std::f32::consts::TAU;
+            self.players.push(Player {
+                pos,
+                angle,
+                alive: true,
+                respawn_in: 0,
+                cooldown: 0,
+                kills: 0,
+                suicides: 0,
+                deaths: 0,
+            });
+        }
+    }
+
+    /// Cast a ray from `pos` along `angle`; returns (depth, hit_player).
+    pub fn raycast(&self, pos: (f32, f32), angle: f32, skip: usize) -> (f32, Option<usize>) {
+        let (dx, dy) = (angle.cos(), angle.sin());
+        let step = 0.1f32;
+        let mut t = step;
+        while t < MAX_DEPTH {
+            let (x, y) = (pos.0 + dx * t, pos.1 + dy * t);
+            if self.is_wall_at(x, y) {
+                return (t, None);
+            }
+            for (i, p) in self.players.iter().enumerate() {
+                if i != skip && p.alive {
+                    let d2 = (p.pos.0 - x) * (p.pos.0 - x)
+                        + (p.pos.1 - y) * (p.pos.1 - y);
+                    if d2 < 0.25 {
+                        return (t, Some(i));
+                    }
+                }
+            }
+            t += step;
+        }
+        (MAX_DEPTH, None)
+    }
+
+    pub fn encode_obs(&self, who: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; OBS_DIM];
+        let me = &self.players[who];
+        for r in 0..N_RAYS {
+            let frac = r as f32 / (N_RAYS - 1) as f32 - 0.5;
+            let angle = me.angle + frac * FOV;
+            let (depth, hit) = self.raycast(me.pos, angle, who);
+            let base = r * RAY_CH;
+            out[base] = 1.0 - depth / MAX_DEPTH; // wall proximity
+            if let Some(e) = hit {
+                out[base + 1] = 1.0; // enemy visible on this ray
+                out[base + 2] = 1.0 - depth / MAX_DEPTH; // enemy proximity
+                let _ = e;
+            }
+            // rockets along this ray
+            for rk in &self.rockets {
+                let rel = (rk.pos.0 - me.pos.0, rk.pos.1 - me.pos.1);
+                let dist = (rel.0 * rel.0 + rel.1 * rel.1).sqrt();
+                if dist < MAX_DEPTH {
+                    let ra = rel.1.atan2(rel.0);
+                    let mut da = ra - angle;
+                    while da > std::f32::consts::PI {
+                        da -= std::f32::consts::TAU;
+                    }
+                    while da < -std::f32::consts::PI {
+                        da += std::f32::consts::TAU;
+                    }
+                    if da.abs() < FOV / N_RAYS as f32 {
+                        out[base + 3] = (1.0 - dist / MAX_DEPTH).max(out[base + 3]);
+                    }
+                }
+            }
+            // wall-normal-ish: depth gradient helps steering
+            out[base + 4] = depth / MAX_DEPTH;
+        }
+        let base = N_RAYS * RAY_CH;
+        out[base] = me.alive as u8 as f32;
+        out[base + 1] = (me.cooldown as f32 / FIRE_COOLDOWN as f32).min(1.0);
+        out[base + 2] = me.pos.0 / MAZE as f32;
+        out[base + 3] = me.pos.1 / MAZE as f32;
+        out[base + 4] = (me.angle / std::f32::consts::TAU).rem_euclid(1.0);
+        out[base + 5] = self.steps as f32 / MATCH_STEPS as f32;
+        out[base + 6] = me.frag() as f32 / 30.0;
+        out[base + 7] = if self.nav_mode { 1.0 } else { 0.0 };
+        out
+    }
+
+    fn all_obs(&self) -> Vec<Vec<f32>> {
+        (0..self.n_players).map(|i| self.encode_obs(i)).collect()
+    }
+
+    pub fn frags(&self) -> Vec<i32> {
+        self.players.iter().map(|p| p.frag()).collect()
+    }
+}
+
+impl MultiAgentEnv for DoomLite {
+    fn n_agents(&self) -> usize {
+        self.n_players
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        6
+    }
+    fn max_steps(&self) -> usize {
+        MATCH_STEPS
+    }
+
+    fn reset(&mut self) -> Vec<Vec<f32>> {
+        self.gen_maze();
+        self.spawn_players();
+        self.rockets.clear();
+        self.steps = 0;
+        self.done = false;
+        for v in self.visited.iter_mut() {
+            v.fill(false);
+        }
+        self.all_obs()
+    }
+
+    fn step(&mut self, actions: &[usize]) -> Step {
+        assert!(!self.done, "step after done");
+        assert_eq!(actions.len(), self.n_players);
+        self.steps += 1;
+        let mut rewards = vec![0.0f32; self.n_players];
+
+        // respawns + cooldowns
+        for i in 0..self.n_players {
+            let p = &mut self.players[i];
+            if p.cooldown > 0 {
+                p.cooldown -= 1;
+            }
+            if !p.alive {
+                p.respawn_in -= 1;
+                if p.respawn_in <= 0 {
+                    let pos = self.free_spawn();
+                    let p = &mut self.players[i];
+                    p.pos = pos;
+                    p.alive = true;
+                }
+            }
+        }
+
+        // actions
+        for i in 0..self.n_players {
+            if !self.players[i].alive {
+                continue;
+            }
+            match actions[i] {
+                ACT_TURN_L => self.players[i].angle -= TURN_SPEED,
+                ACT_TURN_R => self.players[i].angle += TURN_SPEED,
+                ACT_FWD | ACT_BACK => {
+                    let sgn = if actions[i] == ACT_FWD { 1.0 } else { -0.6 };
+                    let p = &self.players[i];
+                    let nx = p.pos.0 + p.angle.cos() * MOVE_SPEED * sgn;
+                    let ny = p.pos.1 + p.angle.sin() * MOVE_SPEED * sgn;
+                    if !self.is_wall_at(nx, ny) {
+                        self.players[i].pos = (nx, ny);
+                    } else if !self.is_wall_at(nx, p.pos.1) {
+                        self.players[i].pos.0 = nx; // wall slide
+                    } else if !self.is_wall_at(p.pos.0, ny) {
+                        self.players[i].pos.1 = ny;
+                    }
+                }
+                ACT_FIRE if !self.nav_mode => {
+                    let p = &mut self.players[i];
+                    if p.cooldown == 0 {
+                        p.cooldown = FIRE_COOLDOWN;
+                        let vel = (p.angle.cos() * ROCKET_SPEED,
+                                   p.angle.sin() * ROCKET_SPEED);
+                        let pos = (p.pos.0 + vel.0, p.pos.1 + vel.1);
+                        self.rockets.push(Rocket { pos, vel, owner: i });
+                    }
+                }
+                _ => {}
+            }
+            // nav-mode exploration bonus (stage-1 reward shaping, §4.2)
+            if self.nav_mode {
+                let p = &self.players[i];
+                let ci = widx(p.pos.0.floor() as i32, p.pos.1.floor() as i32);
+                if !self.visited[i][ci] {
+                    self.visited[i][ci] = true;
+                    rewards[i] += 0.1;
+                }
+            }
+        }
+
+        // rocket flight + detonation (sub-stepped to avoid tunneling)
+        let mut exploded: Vec<((f32, f32), usize)> = Vec::new();
+        let walls = &self.walls;
+        let players_snapshot: Vec<(bool, (f32, f32))> =
+            self.players.iter().map(|p| (p.alive, p.pos)).collect();
+        let mut live_rockets = Vec::with_capacity(self.rockets.len());
+        'rockets: for mut r in self.rockets.drain(..) {
+            for substep in 0..3 {
+                // check-then-advance: a rocket spawned inside a wall
+                // detonates at its spawn point (point-blank suicide)
+                if substep > 0 {
+                    r.pos.0 += r.vel.0 / 2.0;
+                    r.pos.1 += r.vel.1 / 2.0;
+                }
+                let (cx, cy) = (r.pos.0.floor() as i32, r.pos.1.floor() as i32);
+                let in_wall = !(0..MAZE as i32).contains(&cx)
+                    || !(0..MAZE as i32).contains(&cy)
+                    || walls[widx(cx, cy)];
+                let direct_hit = players_snapshot.iter().enumerate().any(
+                    |(i, (alive, pos))| {
+                        *alive
+                            && i != r.owner
+                            && (pos.0 - r.pos.0).powi(2)
+                                + (pos.1 - r.pos.1).powi(2)
+                                < 0.3
+                    },
+                );
+                if in_wall || direct_hit {
+                    exploded.push((r.pos, r.owner));
+                    continue 'rockets;
+                }
+            }
+            live_rockets.push(r);
+        }
+        self.rockets = live_rockets;
+
+        // splash damage (single-hit kill within radius — incl. the owner:
+        // that's where suicides come from)
+        for (pos, owner) in exploded {
+            for i in 0..self.n_players {
+                let p = &self.players[i];
+                if !p.alive {
+                    continue;
+                }
+                let d2 = (p.pos.0 - pos.0).powi(2) + (p.pos.1 - pos.1).powi(2);
+                if d2 < SPLASH_RADIUS * SPLASH_RADIUS {
+                    let p = &mut self.players[i];
+                    p.alive = false;
+                    p.respawn_in = RESPAWN_DELAY;
+                    p.deaths += 1;
+                    if i == owner {
+                        self.players[owner].suicides += 1;
+                        rewards[owner] -= 1.0;
+                    } else {
+                        self.players[owner].kills += 1;
+                        rewards[owner] += 1.0;
+                        rewards[i] -= 0.2;
+                    }
+                }
+            }
+        }
+
+        let done = self.steps >= MATCH_STEPS;
+        self.done = done;
+        let info = if done {
+            // rank by FRAG: winner(s) get 1.0, last 0.0, linear between
+            let frags = self.frags();
+            let max = *frags.iter().max().unwrap();
+            let min = *frags.iter().min().unwrap();
+            let outcome = frags
+                .iter()
+                .map(|&f| {
+                    if max == min {
+                        0.5
+                    } else {
+                        (f - min) as f32 / (max - min) as f32
+                    }
+                })
+                .collect();
+            Info { outcome: Some(outcome), frags: Some(frags) }
+        } else {
+            Info::default()
+        };
+        Step { obs: self.all_obs(), rewards, done, info }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maze_is_connected() {
+        for seed in 0..5 {
+            let env = DoomLite::new(seed, 8);
+            let free: Vec<usize> =
+                (0..MAZE * MAZE).filter(|&i| !env.walls[i]).collect();
+            let mut seen = vec![false; MAZE * MAZE];
+            let mut q = std::collections::VecDeque::from([free[0]]);
+            seen[free[0]] = true;
+            let mut count = 1;
+            while let Some(i) = q.pop_front() {
+                let (x, y) = ((i % MAZE) as i32, (i / MAZE) as i32);
+                for (dx, dy) in [(1, 0), (-1, 0), (0, 1), (0, -1)] {
+                    let (nx, ny) = (x + dx, y + dy);
+                    if (0..MAZE as i32).contains(&nx)
+                        && (0..MAZE as i32).contains(&ny)
+                    {
+                        let ni = widx(nx, ny);
+                        if !env.walls[ni] && !seen[ni] {
+                            seen[ni] = true;
+                            count += 1;
+                            q.push_back(ni);
+                        }
+                    }
+                }
+            }
+            assert_eq!(count, free.len(), "seed {seed}: maze disconnected");
+        }
+    }
+
+    #[test]
+    fn players_stay_in_maze() {
+        let mut env = DoomLite::new(1, 8);
+        env.reset();
+        for t in 0..300 {
+            let acts: Vec<usize> = (0..8).map(|i| (t + i) % 6).collect();
+            env.step(&acts);
+            for p in &env.players {
+                assert!(!env.is_wall_at(p.pos.0, p.pos.1));
+            }
+        }
+    }
+
+    #[test]
+    fn firing_kills_and_scores_frag() {
+        let mut env = DoomLite::new(2, 2);
+        env.reset();
+        // place shooter facing victim point-blank in open space
+        env.walls.fill(false);
+        for i in 0..MAZE as i32 {
+            for &(x, y) in
+                &[(i, 0), (i, MAZE as i32 - 1), (0, i), (MAZE as i32 - 1, i)]
+            {
+                env.walls[widx(x, y)] = true;
+            }
+        }
+        env.players[0].pos = (5.0, 5.0);
+        env.players[0].angle = 0.0;
+        env.players[1].pos = (8.0, 5.0);
+        let mut killed = false;
+        for _ in 0..20 {
+            let s = env.step(&vec![ACT_FIRE, ACT_IDLE]);
+            if !env.players[1].alive || env.players[1].deaths > 0 {
+                killed = true;
+                assert_eq!(env.players[0].kills, 1);
+                assert!(s.rewards[0] > 0.9);
+                break;
+            }
+        }
+        assert!(killed, "point-blank rocket must kill");
+    }
+
+    #[test]
+    fn suicide_counts_negative_frag() {
+        let mut env = DoomLite::new(3, 2);
+        env.reset();
+        env.walls.fill(false);
+        for i in 0..MAZE as i32 {
+            for &(x, y) in
+                &[(i, 0), (i, MAZE as i32 - 1), (0, i), (MAZE as i32 - 1, i)]
+            {
+                env.walls[widx(x, y)] = true;
+            }
+        }
+        // face a wall point-blank: splash catches the shooter
+        env.players[0].pos = (1.6, 5.0);
+        env.players[0].angle = std::f32::consts::PI; // toward x=0 wall
+        env.players[1].pos = (20.0, 20.0);
+        for _ in 0..5 {
+            env.step(&vec![ACT_FIRE, ACT_IDLE]);
+            if env.players[0].suicides > 0 {
+                break;
+            }
+        }
+        assert!(env.players[0].suicides >= 1, "wall-blast suicide expected");
+        assert!(env.players[0].frag() < 0);
+    }
+
+    #[test]
+    fn respawn_after_delay() {
+        let mut env = DoomLite::new(4, 2);
+        env.reset();
+        env.players[1].alive = false;
+        env.players[1].respawn_in = 2;
+        env.step(&vec![ACT_IDLE; 2]);
+        assert!(!env.players[1].alive);
+        env.step(&vec![ACT_IDLE; 2]);
+        assert!(env.players[1].alive, "must respawn after delay");
+    }
+
+    #[test]
+    fn nav_mode_rewards_exploration_and_blocks_fire() {
+        let mut env = DoomLite::new(5, 2);
+        env.nav_mode = true;
+        env.reset();
+        let s = env.step(&vec![ACT_FWD, ACT_FIRE]);
+        assert!(env.rockets.is_empty(), "fire disabled in nav mode");
+        assert!(s.rewards[0] >= 0.0);
+        // moving into fresh cells pays out
+        let mut total = 0.0;
+        for _ in 0..50 {
+            let s = env.step(&vec![ACT_FWD, ACT_IDLE]);
+            total += s.rewards[0];
+        }
+        assert!(total > 0.0, "exploration must earn reward");
+    }
+
+    #[test]
+    fn obs_dim_matches_spec() {
+        let mut env = DoomLite::new(6, 8);
+        let obs = env.reset();
+        assert_eq!(obs[0].len(), OBS_DIM);
+        assert_eq!(OBS_DIM, 24 * 5 + 8);
+    }
+
+    #[test]
+    fn raycast_sees_walls_and_players() {
+        let mut env = DoomLite::new(7, 2);
+        env.reset();
+        env.walls.fill(false);
+        for i in 0..MAZE as i32 {
+            for &(x, y) in
+                &[(i, 0), (i, MAZE as i32 - 1), (0, i), (MAZE as i32 - 1, i)]
+            {
+                env.walls[widx(x, y)] = true;
+            }
+        }
+        env.players[0].pos = (5.0, 5.0);
+        env.players[1].pos = (9.0, 5.0);
+        let (d, hit) = env.raycast((5.0, 5.0), 0.0, 0);
+        assert!(hit == Some(1), "should see player 1, got {hit:?}");
+        assert!((d - 4.0).abs() < 0.6, "depth ~4, got {d}");
+        let (d, hit) = env.raycast((5.0, 5.0), std::f32::consts::PI, 0);
+        assert!(hit.is_none());
+        assert!(d < 5.0, "wall within depth, got {d}");
+    }
+}

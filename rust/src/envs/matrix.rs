@@ -1,0 +1,188 @@
+//! One-step matrix games (Rock-Paper-Scissors and friends).
+//!
+//! These validate the FSP argument of the paper's §3.1: independent RL
+//! circulates over pure strategies on RPS while fictitious self-play
+//! converges to the Nash equilibrium.  The obs is a constant vector
+//! (one-step game: a single state); the episode ends after one joint
+//! action, with the payoff as the reward.
+
+use super::{Info, MultiAgentEnv, Step};
+use crate::util::rng::Pcg32;
+
+/// Two-player zero-sum matrix game.  `payoff[i][j]` is player 0's
+/// payoff when p0 plays i and p1 plays j; player 1 receives the
+/// negation (r^1 + r^2 = 0, the competitive mode of §3.1).
+pub struct MatrixGame {
+    pub name: &'static str,
+    payoff: Vec<Vec<f32>>,
+    obs_dim: usize,
+    #[allow(dead_code)]
+    rng: Pcg32,
+    done: bool,
+}
+
+impl MatrixGame {
+    pub fn new(name: &'static str, payoff: Vec<Vec<f32>>, seed: u64) -> Self {
+        let n = payoff.len();
+        assert!(payoff.iter().all(|row| row.len() == n));
+        MatrixGame {
+            name,
+            payoff,
+            obs_dim: 4,
+            rng: Pcg32::from_label(seed, "matrix"),
+            done: true,
+        }
+    }
+
+    /// Rock-Paper-Scissors: the canonical circulating game.
+    pub fn rps(seed: u64) -> Self {
+        Self::new(
+            "rps",
+            vec![
+                vec![0.0, -1.0, 1.0],
+                vec![1.0, 0.0, -1.0],
+                vec![-1.0, 1.0, 0.0],
+            ],
+            seed,
+        )
+    }
+
+    /// Biased RPS (asymmetric payoffs, NE != uniform): rock wins double.
+    pub fn biased_rps(seed: u64) -> Self {
+        Self::new(
+            "biased_rps",
+            vec![
+                vec![0.0, -1.0, 2.0],
+                vec![1.0, 0.0, -1.0],
+                vec![-2.0, 1.0, 0.0],
+            ],
+            seed,
+        )
+    }
+
+    pub fn payoff(&self, a0: usize, a1: usize) -> f32 {
+        self.payoff[a0][a1]
+    }
+
+    /// Expected payoff of mixed strategy `p` vs `q` (player-0 view).
+    pub fn expected_payoff(&self, p: &[f64], q: &[f64]) -> f64 {
+        let n = self.payoff.len();
+        let mut total = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                total += p[i] * q[j] * self.payoff[i][j] as f64;
+            }
+        }
+        total
+    }
+
+    /// Exploitability of a symmetric strategy `p`: how much the best
+    /// pure response earns against it.  0 at the NE of a symmetric
+    /// zero-sum game; this is the convergence metric for experiment V1.
+    pub fn exploitability(&self, p: &[f64]) -> f64 {
+        let n = self.payoff.len();
+        (0..n)
+            .map(|br| {
+                (0..n)
+                    .map(|j| p[j] * -self.payoff[br][j] as f64)
+                    .sum::<f64>()
+                    // br is player-1's action: player-1 payoff = -payoff[j][br]
+            })
+            .fold(f64::NEG_INFINITY, f64::max)
+            .max(
+                (0..n)
+                    .map(|br| {
+                        (0..n)
+                            .map(|j| p[j] * self.payoff[br][j] as f64)
+                            .sum::<f64>()
+                    })
+                    .fold(f64::NEG_INFINITY, f64::max),
+            )
+    }
+}
+
+impl MultiAgentEnv for MatrixGame {
+    fn n_agents(&self) -> usize {
+        2
+    }
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+    fn act_dim(&self) -> usize {
+        self.payoff.len()
+    }
+    fn max_steps(&self) -> usize {
+        1
+    }
+
+    fn reset(&mut self) -> Vec<Vec<f32>> {
+        self.done = false;
+        vec![vec![1.0, 0.0, 0.0, 0.0]; 2]
+    }
+
+    fn step(&mut self, actions: &[usize]) -> Step {
+        assert!(!self.done, "step after done");
+        assert_eq!(actions.len(), 2);
+        self.done = true;
+        let r0 = self.payoff[actions[0]][actions[1]];
+        let outcome = if r0 > 0.0 {
+            vec![1.0, 0.0]
+        } else if r0 < 0.0 {
+            vec![0.0, 1.0]
+        } else {
+            vec![0.5, 0.5]
+        };
+        Step {
+            obs: vec![vec![1.0, 0.0, 0.0, 0.0]; 2],
+            rewards: vec![r0, -r0],
+            done: true,
+            info: Info { outcome: Some(outcome), frags: None },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rps_is_zero_sum_and_cyclic() {
+        let mut g = MatrixGame::rps(0);
+        g.reset();
+        let s = g.step(&[0, 1]); // rock vs paper: p1 wins
+        assert_eq!(s.rewards, vec![-1.0, 1.0]);
+        assert_eq!(s.info.outcome.unwrap(), vec![0.0, 1.0]);
+        for a in 0..3 {
+            for b in 0..3 {
+                let g = MatrixGame::rps(0);
+                assert_eq!(g.payoff(a, b), -g.payoff(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_is_rps_nash() {
+        let g = MatrixGame::rps(0);
+        let uniform = [1.0 / 3.0; 3];
+        assert!(g.exploitability(&uniform).abs() < 1e-9);
+        // pure rock is exploitable by paper (payoff 1)
+        assert!((g.exploitability(&[1.0, 0.0, 0.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_payoff_symmetric_zero() {
+        let g = MatrixGame::rps(0);
+        let u = [1.0 / 3.0; 3];
+        assert!(g.expected_payoff(&u, &u).abs() < 1e-12);
+    }
+
+    #[test]
+    fn biased_rps_nash_not_uniform() {
+        let g = MatrixGame::biased_rps(0);
+        let uniform = [1.0 / 3.0; 3];
+        assert!(g.exploitability(&uniform) > 0.05);
+        // analytic NE of this biased game: (1/4, 1/2, 1/4)
+        let ne = [0.25, 0.5, 0.25];
+        assert!(g.exploitability(&ne).abs() < 1e-9);
+    }
+}

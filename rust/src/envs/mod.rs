@@ -1,0 +1,137 @@
+//! Multi-agent environments (the Arena toolbox of the paper, §3.5).
+//!
+//! The trait mirrors the paper's OpenAI-gym-compatible multi-agent
+//! contract (§3.2):
+//!
+//! ```text
+//! l_obs = env.reset()                           # episode beginning
+//! l_obs, l_rwd, done, info = env.step(l_act)    # in-episode stepping
+//! ```
+//!
+//! Environments: `matrix` (RPS & friends — FSP validation), `pong2p`
+//! (the paper's extension example), `pommerman` (NeurIPS-18 Team mode),
+//! `doom_lite` (ViZDoom CIG-2016 track-1 stand-in), `synthetic`
+//! (calibrated step cost for the Table-3 throughput harness).
+
+pub mod doom_lite;
+pub mod matrix;
+pub mod pommerman;
+pub mod pong2p;
+pub mod synthetic;
+
+use anyhow::{bail, Result};
+
+/// Extra episode info (the paper's `info` dict).  `outcome` is set at
+/// episode end: per-agent 1.0 win / 0.5 tie / 0.0 loss.
+#[derive(Clone, Debug, Default)]
+pub struct Info {
+    pub outcome: Option<Vec<f32>>,
+    /// per-agent FRAG (kills - suicides), doom_lite only
+    pub frags: Option<Vec<i32>>,
+}
+
+pub struct Step {
+    pub obs: Vec<Vec<f32>>,
+    pub rewards: Vec<f32>,
+    pub done: bool,
+    pub info: Info,
+}
+
+pub trait MultiAgentEnv: Send {
+    fn n_agents(&self) -> usize;
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    /// Hard cap on episode length (steps) — used for buffer sizing.
+    fn max_steps(&self) -> usize;
+    fn reset(&mut self) -> Vec<Vec<f32>>;
+    fn step(&mut self, actions: &[usize]) -> Step;
+}
+
+/// Instantiate an env by manifest name.  `seed` drives all env
+/// randomness (map layout, spawn order, ...).
+pub fn make(name: &str, seed: u64) -> Result<Box<dyn MultiAgentEnv>> {
+    Ok(match name {
+        "rps" => Box::new(matrix::MatrixGame::rps(seed)),
+        "pong2p" => Box::new(pong2p::Pong2p::new(seed)),
+        "pommerman" => Box::new(pommerman::Pommerman::team(seed)),
+        "pommerman_ffa" => Box::new(pommerman::Pommerman::ffa(seed)),
+        "doom_lite" => Box::new(doom_lite::DoomLite::new(seed, 8)),
+        "synthetic" => Box::new(synthetic::Synthetic::new(seed)),
+        other => bail!("unknown env '{other}'"),
+    })
+}
+
+/// The manifest env name an env maps to (pommerman_ffa shares the
+/// pommerman artifacts).
+pub fn manifest_name(env: &str) -> &str {
+    match env {
+        "pommerman_ffa" => "pommerman",
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_every_env() {
+        for name in ["rps", "pong2p", "pommerman", "pommerman_ffa",
+                     "doom_lite", "synthetic"] {
+            let mut env = make(name, 7).unwrap();
+            let obs = env.reset();
+            assert_eq!(obs.len(), env.n_agents(), "{name}");
+            for o in &obs {
+                assert_eq!(o.len(), env.obs_dim(), "{name}");
+                assert!(o.iter().all(|x| x.is_finite()), "{name}");
+            }
+        }
+        assert!(make("nope", 0).is_err());
+    }
+
+    #[test]
+    fn episodes_terminate_and_emit_outcome() {
+        for name in ["rps", "pong2p", "pommerman", "doom_lite"] {
+            let mut env = make(name, 3).unwrap();
+            env.reset();
+            let mut steps = 0;
+            loop {
+                let acts: Vec<usize> = (0..env.n_agents())
+                    .map(|i| (steps + i) % env.act_dim())
+                    .collect();
+                let s = env.step(&acts);
+                steps += 1;
+                assert!(steps <= env.max_steps(), "{name} overran max_steps");
+                assert_eq!(s.rewards.len(), env.n_agents(), "{name}");
+                if s.done {
+                    let out = s.info.outcome.expect("outcome at episode end");
+                    assert_eq!(out.len(), env.n_agents(), "{name}");
+                    for &o in &out {
+                        assert!((0.0..=1.0).contains(&o), "{name}: {o}");
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_rollout() {
+        for name in ["pommerman", "doom_lite", "pong2p"] {
+            let mut a = make(name, 42).unwrap();
+            let mut b = make(name, 42).unwrap();
+            assert_eq!(a.reset(), b.reset(), "{name}");
+            for t in 0..50 {
+                let acts: Vec<usize> =
+                    (0..a.n_agents()).map(|i| (t * 3 + i) % a.act_dim()).collect();
+                let sa = a.step(&acts);
+                let sb = b.step(&acts);
+                assert_eq!(sa.obs, sb.obs, "{name} diverged at {t}");
+                assert_eq!(sa.rewards, sb.rewards, "{name}");
+                if sa.done {
+                    break;
+                }
+            }
+        }
+    }
+}

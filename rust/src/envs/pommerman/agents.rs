@@ -1,0 +1,435 @@
+//! Scripted Pommerman opponents.
+//!
+//! - [`SimpleAgent`]: re-implementation of the competition's rule-based
+//!   builtin AI (bomb evasion via BFS, item pickup, wood bombing,
+//!   opportunistic attacks).  The paper's Fig-4 left curve is win-rate
+//!   against this agent.
+//! - [`Navocado`]: stand-in for the NeurIPS-18 top learning agent (the
+//!   real checkpoint is closed): SimpleAgent plus escape-checked bomb
+//!   placement, enemy chasing, and teammate target splitting.  Fig-4
+//!   right reports W/L/T against it.
+
+use super::{
+    action_delta, in_bounds, Pommerman, ACT_BOMB, ACT_DOWN, ACT_IDLE,
+    ACT_LEFT, ACT_RIGHT, ACT_UP, BOMB_LIFE, SIZE,
+};
+use crate::util::rng::Pcg32;
+
+const MOVES: [usize; 4] = [ACT_UP, ACT_DOWN, ACT_LEFT, ACT_RIGHT];
+
+fn idx(x: i32, y: i32) -> usize {
+    y as usize * SIZE + x as usize
+}
+
+/// BFS distances from `start` over currently-walkable cells; cells under
+/// imminent blast (danger <= horizon) are impassable.
+fn bfs(env: &Pommerman, start: (i32, i32), danger: &[i32], horizon: i32) -> Vec<i32> {
+    let mut dist = vec![i32::MAX; SIZE * SIZE];
+    let mut queue = std::collections::VecDeque::new();
+    dist[idx(start.0, start.1)] = 0;
+    queue.push_back(start);
+    while let Some((x, y)) = queue.pop_front() {
+        let d = dist[idx(x, y)];
+        for (dx, dy) in [(1, 0), (-1, 0), (0, 1), (0, -1)] {
+            let (nx, ny) = (x + dx, y + dy);
+            if !in_bounds(nx, ny) || dist[idx(nx, ny)] != i32::MAX {
+                continue;
+            }
+            if !env.passable(nx, ny) || env.flames[idx(nx, ny)] > 0 {
+                continue;
+            }
+            // entering a cell whose blast fires before we'd leave is suicide
+            if danger[idx(nx, ny)] <= horizon.min(d + 2) {
+                continue;
+            }
+            dist[idx(nx, ny)] = d + 1;
+            queue.push_back((nx, ny));
+        }
+    }
+    dist
+}
+
+/// First move of a shortest path from `start` to any cell satisfying
+/// `target`; None if unreachable.
+fn step_toward<F: Fn(i32, i32) -> bool>(
+    env: &Pommerman,
+    start: (i32, i32),
+    danger: &[i32],
+    target: F,
+) -> Option<usize> {
+    let dist = bfs(env, start, danger, 2);
+    let mut best: Option<((i32, i32), i32)> = None;
+    for y in 0..SIZE as i32 {
+        for x in 0..SIZE as i32 {
+            if dist[idx(x, y)] != i32::MAX && target(x, y) {
+                if best.map_or(true, |(_, bd)| dist[idx(x, y)] < bd) {
+                    best = Some(((x, y), dist[idx(x, y)]));
+                }
+            }
+        }
+    }
+    let (goal, _) = best?;
+    if goal == start {
+        return Some(ACT_IDLE);
+    }
+    // walk back from goal to start
+    let mut cur = goal;
+    loop {
+        let d = dist[idx(cur.0, cur.1)];
+        let mut prev = None;
+        for (dx, dy) in [(1, 0), (-1, 0), (0, 1), (0, -1)] {
+            let (px, py) = (cur.0 + dx, cur.1 + dy);
+            if in_bounds(px, py) && dist[idx(px, py)] == d - 1 {
+                prev = Some((px, py));
+                break;
+            }
+        }
+        let p = prev?;
+        if p == start {
+            for &a in &MOVES {
+                let (dx, dy) = action_delta(a);
+                if (start.0 + dx, start.1 + dy) == cur {
+                    return Some(a);
+                }
+            }
+            return None;
+        }
+        cur = p;
+    }
+}
+
+/// Would placing a bomb at `pos` leave an escape route?
+fn bomb_is_escapable(env: &Pommerman, who: usize, pos: (i32, i32)) -> bool {
+    let mut sim_danger = env.danger_map();
+    let blast = env.agents[who].blast;
+    // overlay the hypothetical bomb's blast at BOMB_LIFE
+    for (dx, dy) in [(0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)] {
+        for r in 0..=blast {
+            if r == 0 && (dx, dy) != (0, 0) {
+                continue;
+            }
+            let (x, y) = (pos.0 + dx * r, pos.1 + dy * r);
+            if !in_bounds(x, y) {
+                break;
+            }
+            if env.board[idx(x, y)] == super::Cell::Rigid {
+                break;
+            }
+            sim_danger[idx(x, y)] = sim_danger[idx(x, y)].min(BOMB_LIFE);
+            if env.board[idx(x, y)] == super::Cell::Wood {
+                break;
+            }
+            if (dx, dy) == (0, 0) {
+                break;
+            }
+        }
+    }
+    // BFS: can we reach a safe cell within BOMB_LIFE steps?
+    let dist = bfs(env, pos, &sim_danger, 0);
+    for y in 0..SIZE as i32 {
+        for x in 0..SIZE as i32 {
+            let i = idx(x, y);
+            if sim_danger[i] == i32::MAX
+                && dist[i] != i32::MAX
+                && dist[i] < BOMB_LIFE
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+pub trait ScriptedPolicy: Send {
+    fn act(&mut self, env: &Pommerman, who: usize) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+pub struct RandomAgent {
+    rng: Pcg32,
+}
+
+impl RandomAgent {
+    pub fn new(seed: u64) -> Self {
+        RandomAgent { rng: Pcg32::from_label(seed, "pom-random") }
+    }
+}
+
+impl ScriptedPolicy for RandomAgent {
+    fn act(&mut self, _env: &Pommerman, _who: usize) -> usize {
+        self.rng.below(6) as usize
+    }
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+pub struct SimpleAgent {
+    rng: Pcg32,
+}
+
+impl SimpleAgent {
+    pub fn new(seed: u64) -> Self {
+        SimpleAgent { rng: Pcg32::from_label(seed, "pom-simple") }
+    }
+
+    fn safe_moves(&self, env: &Pommerman, who: usize, danger: &[i32]) -> Vec<usize> {
+        let me = env.agents[who].pos;
+        let mut out = Vec::new();
+        for &a in &MOVES {
+            let (dx, dy) = action_delta(a);
+            let (nx, ny) = (me.0 + dx, me.1 + dy);
+            if env.passable(nx, ny)
+                && env.agent_at(nx, ny).is_none()
+                && env.flames[idx(nx, ny)] == 0
+                && danger[idx(nx, ny)] > 2
+            {
+                out.push(a);
+            }
+        }
+        out
+    }
+}
+
+impl ScriptedPolicy for SimpleAgent {
+    fn act(&mut self, env: &Pommerman, who: usize) -> usize {
+        let me = env.agents[who];
+        if !me.alive {
+            return ACT_IDLE;
+        }
+        let danger = env.danger_map();
+        let my_i = idx(me.pos.0, me.pos.1);
+
+        // 1. evade imminent blasts
+        if danger[my_i] != i32::MAX {
+            if let Some(a) = step_toward(env, me.pos, &danger, |x, y| {
+                danger[idx(x, y)] == i32::MAX
+            }) {
+                return a;
+            }
+            let safe = self.safe_moves(env, who, &danger);
+            if !safe.is_empty() {
+                return *self.rng.choose(&safe);
+            }
+            return ACT_IDLE;
+        }
+
+        // 2. attack an adjacent enemy
+        if me.ammo > 0 {
+            let enemy_close = (0..4).any(|e| {
+                e != who
+                    && !env.same_team(who, e)
+                    && env.agents[e].alive
+                    && (env.agents[e].pos.0 - me.pos.0).abs()
+                        + (env.agents[e].pos.1 - me.pos.1).abs()
+                        <= 2
+            });
+            if enemy_close && bomb_is_escapable(env, who, me.pos) {
+                return ACT_BOMB;
+            }
+        }
+
+        // 3. pick up a nearby item
+        if let Some(a) = step_toward(env, me.pos, &danger, |x, y| {
+            env.items[idx(x, y)].is_some()
+        }) {
+            if a != ACT_IDLE {
+                return a;
+            }
+        }
+
+        // 4. bomb adjacent wood
+        if me.ammo > 0 {
+            let wood_adj = MOVES.iter().any(|&a| {
+                let (dx, dy) = action_delta(a);
+                let (nx, ny) = (me.pos.0 + dx, me.pos.1 + dy);
+                in_bounds(nx, ny) && env.board[idx(nx, ny)] == super::Cell::Wood
+            });
+            if wood_adj && bomb_is_escapable(env, who, me.pos) {
+                return ACT_BOMB;
+            }
+        }
+
+        // 5. wander safely
+        let safe = self.safe_moves(env, who, &danger);
+        if safe.is_empty() {
+            ACT_IDLE
+        } else {
+            *self.rng.choose(&safe)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "simple"
+    }
+}
+
+/// Stronger scripted agent standing in for the NeurIPS-18 "Navocado".
+pub struct Navocado {
+    inner: SimpleAgent,
+}
+
+impl Navocado {
+    pub fn new(seed: u64) -> Self {
+        Navocado { inner: SimpleAgent::new(seed ^ 0x6e61_766f) }
+    }
+}
+
+impl ScriptedPolicy for Navocado {
+    fn act(&mut self, env: &Pommerman, who: usize) -> usize {
+        let me = env.agents[who];
+        if !me.alive {
+            return ACT_IDLE;
+        }
+        let danger = env.danger_map();
+        let my_i = idx(me.pos.0, me.pos.1);
+
+        // evasion first (shared with SimpleAgent)
+        if danger[my_i] != i32::MAX {
+            return self.inner.act(env, who);
+        }
+
+        // target selection: teammates split enemies (0 takes nearest,
+        // 2 takes the other when both alive)
+        let mut enemies: Vec<usize> = (0..4)
+            .filter(|&e| e != who && !env.same_team(who, e) && env.agents[e].alive)
+            .collect();
+        enemies.sort_by_key(|&e| {
+            (env.agents[e].pos.0 - me.pos.0).abs()
+                + (env.agents[e].pos.1 - me.pos.1).abs()
+        });
+        let mate = Pommerman::teammate(who);
+        let target = if enemies.len() >= 2
+            && env.mode == super::Mode::Team
+            && env.agents[mate].alive
+            && who > mate
+        {
+            enemies[1]
+        } else {
+            enemies.first().copied().unwrap_or(who)
+        };
+
+        if target != who {
+            let tp = env.agents[target].pos;
+            let dist = (tp.0 - me.pos.0).abs() + (tp.1 - me.pos.1).abs();
+            // in blast line and close: bomb (only if escapable)
+            let aligned = (tp.0 == me.pos.0 && (tp.1 - me.pos.1).abs() <= me.blast)
+                || (tp.1 == me.pos.1 && (tp.0 - me.pos.0).abs() <= me.blast);
+            if me.ammo > 0 && aligned && dist <= me.blast
+                && bomb_is_escapable(env, who, me.pos)
+            {
+                return ACT_BOMB;
+            }
+            // chase
+            if dist > 2 {
+                if let Some(a) = step_toward(env, me.pos, &danger, |x, y| {
+                    (x - tp.0).abs() + (y - tp.1).abs() <= 1
+                }) {
+                    if a != ACT_IDLE {
+                        return a;
+                    }
+                }
+            }
+        }
+        // fall back to SimpleAgent behaviour (items, wood, wander)
+        self.inner.act(env, who)
+    }
+
+    fn name(&self) -> &'static str {
+        "navocado"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::MultiAgentEnv;
+
+    fn play(
+        mut mk0: impl FnMut(u64) -> Box<dyn ScriptedPolicy>,
+        mut mk1: impl FnMut(u64) -> Box<dyn ScriptedPolicy>,
+        games: u64,
+    ) -> (f64, f64) {
+        // team 0 (agents 0,2) uses mk0; team 1 (agents 1,3) uses mk1.
+        let mut score0 = 0.0;
+        for g in 0..games {
+            let mut env = Pommerman::team(g);
+            env.reset();
+            let mut pols: Vec<Box<dyn ScriptedPolicy>> = vec![
+                mk0(g * 4), mk1(g * 4 + 1), mk0(g * 4 + 2), mk1(g * 4 + 3),
+            ];
+            loop {
+                let acts: Vec<usize> =
+                    (0..4).map(|i| pols[i].act(&env, i)).collect();
+                let s = env.step(&acts);
+                if s.done {
+                    score0 += s.info.outcome.unwrap()[0] as f64;
+                    break;
+                }
+            }
+        }
+        (score0 / games as f64, 1.0 - score0 / games as f64)
+    }
+
+    #[test]
+    fn simple_agent_survives_own_bombs() {
+        // simple vs idle: simple agents should essentially never die to
+        // their own bombs; give them at worst a high non-loss rate.
+        let (s, _) = play(
+            |s| Box::new(SimpleAgent::new(s)),
+            |_| Box::new(IdleAgent),
+            8,
+        );
+        assert!(s >= 0.5, "simple vs idle scored {s}");
+    }
+
+    #[test]
+    fn simple_beats_random() {
+        let (s, _) = play(
+            |s| Box::new(SimpleAgent::new(s)),
+            |s| Box::new(RandomAgent::new(s)),
+            10,
+        );
+        assert!(s > 0.6, "simple vs random scored only {s}");
+    }
+
+    #[test]
+    fn navocado_at_least_matches_simple() {
+        let (n, _) = play(
+            |s| Box::new(Navocado::new(s)),
+            |s| Box::new(SimpleAgent::new(s)),
+            16,
+        );
+        assert!(n >= 0.45, "navocado vs simple scored {n}");
+    }
+
+    struct IdleAgent;
+    impl ScriptedPolicy for IdleAgent {
+        fn act(&mut self, _e: &Pommerman, _w: usize) -> usize {
+            ACT_IDLE
+        }
+        fn name(&self) -> &'static str {
+            "idle"
+        }
+    }
+
+    #[test]
+    fn escape_check_rejects_corner_trap() {
+        let mut env = Pommerman::team(0);
+        env.reset();
+        // box an agent into a 1-cell pocket: bombing would be suicide
+        env.board.fill(super::super::Cell::Rigid);
+        env.board[idx(1, 1)] = super::super::Cell::Passage;
+        env.agents[0].pos = (1, 1);
+        env.bombs.clear();
+        assert!(!bomb_is_escapable(&env, 0, (1, 1)));
+        // open a corridor longer than the blast: now escapable
+        for x in 1..=8 {
+            env.board[idx(x, 1)] = super::super::Cell::Passage;
+        }
+        for y in 1..=3 {
+            env.board[idx(8, y)] = super::super::Cell::Passage;
+        }
+        assert!(bomb_is_escapable(&env, 0, (1, 1)));
+    }
+}

@@ -1,0 +1,874 @@
+//! Pommerman (NeurIPS-2018 competition rules, re-implemented).
+//!
+//! 11x11 board, 4 agents, bombs with chained explosions, rigid/wooden
+//! walls, power-ups (extra ammo / blast range / kick), 800-step tie.
+//! Modes: FFA (everyone for themselves) and Team (0,2 vs 1,3 — the
+//! paper's §4.3 experiment).  Observations are 9x9 egocentric fogged
+//! views + self attributes, exactly the encoding in
+//! python/compile/envs_spec.py (9*9*12 + 8 = 980 features).
+//!
+//! The engine is deterministic given the seed: board layout, item
+//! placement and tie-breaking all come from one PCG stream.
+
+pub mod agents;
+
+use super::{Info, MultiAgentEnv, Step};
+use crate::util::rng::Pcg32;
+
+pub const SIZE: usize = 11;
+pub const VIEW: usize = 9;
+pub const MAX_STEPS: usize = 800;
+pub const BOMB_LIFE: i32 = 9;
+pub const FLAME_LIFE: i32 = 2;
+pub const DEFAULT_BLAST: i32 = 2;
+pub const DEFAULT_AMMO: i32 = 1;
+pub const OBS_DIM: usize = VIEW * VIEW * 12 + 8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cell {
+    Passage,
+    Rigid,
+    Wood,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ItemKind {
+    ExtraBomb,
+    IncrRange,
+    Kick,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Bomb {
+    pub pos: (i32, i32),
+    pub owner: usize,
+    pub timer: i32,
+    pub blast: i32,
+    /// kick velocity (dx, dy); (0,0) when at rest
+    pub vel: (i32, i32),
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct AgentState {
+    pub pos: (i32, i32),
+    pub ammo: i32,
+    pub blast: i32,
+    pub can_kick: bool,
+    pub alive: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Ffa,
+    Team,
+}
+
+/// Actions (paper §4.3): Idle, Up, Down, Left, Right, Bomb.
+pub const ACT_IDLE: usize = 0;
+pub const ACT_UP: usize = 1;
+pub const ACT_DOWN: usize = 2;
+pub const ACT_LEFT: usize = 3;
+pub const ACT_RIGHT: usize = 4;
+pub const ACT_BOMB: usize = 5;
+
+pub fn action_delta(a: usize) -> (i32, i32) {
+    match a {
+        ACT_UP => (0, -1),
+        ACT_DOWN => (0, 1),
+        ACT_LEFT => (-1, 0),
+        ACT_RIGHT => (1, 0),
+        _ => (0, 0),
+    }
+}
+
+pub struct Pommerman {
+    pub mode: Mode,
+    rng: Pcg32,
+    seed: u64,
+    pub board: Vec<Cell>,
+    pub items: Vec<Option<ItemKind>>, // revealed items on passage cells
+    hidden: Vec<Option<ItemKind>>,    // items hidden under wood
+    pub bombs: Vec<Bomb>,
+    pub flames: Vec<i32>, // per-cell flame timer (0 = none)
+    pub agents: [AgentState; 4],
+    pub steps: usize,
+    done: bool,
+    /// dense shaping rewards on top of the win/loss signal (training aid)
+    pub shaping: bool,
+}
+
+fn idx(x: i32, y: i32) -> usize {
+    debug_assert!(in_bounds(x, y));
+    y as usize * SIZE + x as usize
+}
+
+pub fn in_bounds(x: i32, y: i32) -> bool {
+    (0..SIZE as i32).contains(&x) && (0..SIZE as i32).contains(&y)
+}
+
+impl Pommerman {
+    pub fn team(seed: u64) -> Self {
+        Self::new(seed, Mode::Team)
+    }
+    pub fn ffa(seed: u64) -> Self {
+        Self::new(seed, Mode::Ffa)
+    }
+
+    pub fn new(seed: u64, mode: Mode) -> Self {
+        let mut env = Pommerman {
+            mode,
+            rng: Pcg32::from_label(seed, "pommerman"),
+            seed,
+            board: vec![Cell::Passage; SIZE * SIZE],
+            items: vec![None; SIZE * SIZE],
+            hidden: vec![None; SIZE * SIZE],
+            bombs: Vec::new(),
+            flames: vec![0; SIZE * SIZE],
+            agents: [AgentState {
+                pos: (0, 0),
+                ammo: DEFAULT_AMMO,
+                blast: DEFAULT_BLAST,
+                can_kick: false,
+                alive: true,
+            }; 4],
+            steps: 0,
+            done: true,
+            shaping: true,
+        };
+        env.generate();
+        env
+    }
+
+    /// Teammate of `i` in Team mode (0<->2, 1<->3).
+    pub fn teammate(i: usize) -> usize {
+        (i + 2) % 4
+    }
+    pub fn same_team(&self, a: usize, b: usize) -> bool {
+        self.mode == Mode::Team && (a % 2) == (b % 2)
+    }
+
+    fn generate(&mut self) {
+        // deterministic regen per episode: advance the seed stream
+        let mut rng = Pcg32::from_label(
+            self.seed.wrapping_add(self.steps as u64),
+            "pommerman-board",
+        );
+        self.board.fill(Cell::Passage);
+        self.items.fill(None);
+        self.hidden.fill(None);
+        self.bombs.clear();
+        self.flames.fill(0);
+
+        // corner spawns (classic layout)
+        let corners = [(1, 1), (SIZE as i32 - 2, 1), (SIZE as i32 - 2, SIZE as i32 - 2), (1, SIZE as i32 - 2)];
+        // order: agent 0 TL, 1 TR, 2 BR, 3 BL so teams (0,2)/(1,3) are diagonal
+        for (i, &c) in corners.iter().enumerate() {
+            self.agents[i] = AgentState {
+                pos: c,
+                ammo: DEFAULT_AMMO,
+                blast: DEFAULT_BLAST,
+                can_kick: false,
+                alive: true,
+            };
+        }
+
+        // symmetric walls: draw in one half, mirror across the diagonal
+        for y in 0..SIZE as i32 {
+            for x in 0..=y {
+                let r = rng.next_f32();
+                let cell = if r < 0.18 {
+                    Cell::Rigid
+                } else if r < 0.45 {
+                    Cell::Wood
+                } else {
+                    Cell::Passage
+                };
+                self.board[idx(x, y)] = cell;
+                self.board[idx(y, x)] = cell;
+            }
+        }
+        // carve the spawn pockets: corner + 2 cells along each edge
+        for &(cx, cy) in &corners {
+            for (dx, dy) in [(0, 0), (1, 0), (2, 0), (-1, 0), (-2, 0),
+                             (0, 1), (0, 2), (0, -1), (0, -2)] {
+                let (x, y) = (cx + dx, cy + dy);
+                if in_bounds(x, y) {
+                    self.board[idx(x, y)] = Cell::Passage;
+                }
+            }
+        }
+        // hide items under ~half the wood
+        for i in 0..SIZE * SIZE {
+            if self.board[i] == Cell::Wood && rng.chance(0.5) {
+                self.hidden[i] = Some(match rng.below(3) {
+                    0 => ItemKind::ExtraBomb,
+                    1 => ItemKind::IncrRange,
+                    _ => ItemKind::Kick,
+                });
+            }
+        }
+    }
+
+    pub fn bomb_at(&self, x: i32, y: i32) -> Option<usize> {
+        self.bombs.iter().position(|b| b.pos == (x, y))
+    }
+
+    pub fn agent_at(&self, x: i32, y: i32) -> Option<usize> {
+        self.agents
+            .iter()
+            .position(|a| a.alive && a.pos == (x, y))
+    }
+
+    pub fn passable(&self, x: i32, y: i32) -> bool {
+        in_bounds(x, y)
+            && self.board[idx(x, y)] == Cell::Passage
+            && self.bomb_at(x, y).is_none()
+    }
+
+    /// Per-cell "steps until a blast covers this cell" (i32::MAX = safe).
+    /// Used by both the obs encoder (danger channel) and scripted agents.
+    pub fn danger_map(&self) -> Vec<i32> {
+        let mut danger = vec![i32::MAX; SIZE * SIZE];
+        // iterate to fixpoint for chains: a bomb caught in another blast
+        // fires at the earlier time
+        let mut fire_at: Vec<i32> = self.bombs.iter().map(|b| b.timer).collect();
+        loop {
+            let mut changed = false;
+            for (bi, b) in self.bombs.iter().enumerate() {
+                let t = fire_at[bi];
+                for (dx, dy) in [(0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)] {
+                    for r in 0..=b.blast {
+                        if r == 0 && (dx, dy) != (0, 0) {
+                            continue;
+                        }
+                        let (x, y) = (b.pos.0 + dx * r, b.pos.1 + dy * r);
+                        if !in_bounds(x, y) {
+                            break;
+                        }
+                        let cell = self.board[idx(x, y)];
+                        if cell == Cell::Rigid {
+                            break;
+                        }
+                        if danger[idx(x, y)] > t {
+                            danger[idx(x, y)] = t;
+                            changed = true;
+                        }
+                        if let Some(oi) = self.bomb_at(x, y) {
+                            if fire_at[oi] > t {
+                                fire_at[oi] = t;
+                                changed = true;
+                            }
+                        }
+                        if cell == Cell::Wood {
+                            break;
+                        }
+                        if (dx, dy) == (0, 0) {
+                            break;
+                        }
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        danger
+    }
+
+    fn explode(&mut self, rewards: &mut [f32; 4]) {
+        // collect bombs due now, with chain propagation
+        let mut due: Vec<usize> = self
+            .bombs
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.timer <= 0)
+            .map(|(i, _)| i)
+            .collect();
+        if due.is_empty() {
+            return;
+        }
+        let mut exploded = vec![false; self.bombs.len()];
+        let mut blast_cells: Vec<(usize, usize)> = Vec::new(); // (cell, owner)
+        while let Some(bi) = due.pop() {
+            if exploded[bi] {
+                continue;
+            }
+            exploded[bi] = true;
+            let b = self.bombs[bi];
+            for (dx, dy) in [(0, 0), (1, 0), (-1, 0), (0, 1), (0, -1)] {
+                for r in 0..=b.blast {
+                    if r == 0 && (dx, dy) != (0, 0) {
+                        continue;
+                    }
+                    let (x, y) = (b.pos.0 + dx * r, b.pos.1 + dy * r);
+                    if !in_bounds(x, y) {
+                        break;
+                    }
+                    let cell = self.board[idx(x, y)];
+                    if cell == Cell::Rigid {
+                        break;
+                    }
+                    blast_cells.push((idx(x, y), b.owner));
+                    if let Some(oi) = self.bomb_at(x, y) {
+                        if !exploded[oi] {
+                            due.push(oi); // chain
+                        }
+                    }
+                    if cell == Cell::Wood {
+                        break;
+                    }
+                    if (dx, dy) == (0, 0) {
+                        break;
+                    }
+                }
+            }
+        }
+        // apply blasts
+        for &(ci, owner) in &blast_cells {
+            self.flames[ci] = FLAME_LIFE;
+            if self.board[ci] == Cell::Wood {
+                self.board[ci] = Cell::Passage;
+                if let Some(item) = self.hidden[ci].take() {
+                    self.items[ci] = Some(item);
+                }
+                if self.shaping {
+                    rewards[owner] += 0.02;
+                }
+            }
+        }
+        // refund ammo + drop exploded bombs
+        let mut kept = Vec::with_capacity(self.bombs.len());
+        for (i, b) in self.bombs.drain(..).enumerate() {
+            if exploded[i] {
+                self.agents[b.owner].ammo += 1;
+            } else {
+                kept.push(b);
+            }
+        }
+        self.bombs = kept;
+    }
+
+    fn kill_agents_on_flames(&mut self, rewards: &mut [f32; 4]) {
+        for i in 0..4 {
+            if !self.agents[i].alive {
+                continue;
+            }
+            let (x, y) = self.agents[i].pos;
+            if self.flames[idx(x, y)] > 0 {
+                self.agents[i].alive = false;
+                if self.shaping {
+                    rewards[i] -= 0.5;
+                    // credit enemies (not precise attribution; cheap proxy)
+                    for j in 0..4 {
+                        if j != i && !self.same_team(i, j) && self.agents[j].alive {
+                            rewards[j] += 0.2;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn team_alive(&self, team: usize) -> bool {
+        (0..4).any(|i| i % 2 == team && self.agents[i].alive)
+    }
+
+    fn episode_result(&self) -> Option<Vec<f32>> {
+        let t0 = self.team_alive(0);
+        let t1 = self.team_alive(1);
+        match self.mode {
+            Mode::Team => {
+                if t0 && t1 && self.steps < MAX_STEPS {
+                    None
+                } else if t0 && !t1 {
+                    Some(vec![1.0, 0.0, 1.0, 0.0])
+                } else if t1 && !t0 {
+                    Some(vec![0.0, 1.0, 0.0, 1.0])
+                } else {
+                    Some(vec![0.5; 4])
+                }
+            }
+            Mode::Ffa => {
+                let alive: Vec<usize> =
+                    (0..4).filter(|&i| self.agents[i].alive).collect();
+                if alive.len() > 1 && self.steps < MAX_STEPS {
+                    None
+                } else if alive.len() == 1 {
+                    let mut out = vec![0.0; 4];
+                    out[alive[0]] = 1.0;
+                    Some(out)
+                } else {
+                    // timeout or simultaneous death: survivors tie
+                    let mut out = vec![0.0; 4];
+                    for &i in &alive {
+                        out[i] = 0.5;
+                    }
+                    if alive.is_empty() {
+                        out = vec![0.25; 4];
+                    }
+                    Some(out)
+                }
+            }
+        }
+    }
+
+    /// 9x9x12 egocentric view + 8 attributes for agent `who`.
+    pub fn encode_obs(&self, who: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; OBS_DIM];
+        let me = &self.agents[who];
+        let (cx, cy) = me.pos;
+        let half = VIEW as i32 / 2;
+        let danger = self.danger_map();
+        let ch = |c: usize, vx: usize, vy: usize| c * VIEW * VIEW + vy * VIEW + vx;
+        for vy in 0..VIEW {
+            for vx in 0..VIEW {
+                let x = cx - half + vx as i32;
+                let y = cy - half + vy as i32;
+                if !in_bounds(x, y) {
+                    out[ch(10, vx, vy)] = 1.0; // out-of-bounds
+                    continue;
+                }
+                let i = idx(x, y);
+                match self.board[i] {
+                    Cell::Passage => out[ch(0, vx, vy)] = 1.0,
+                    Cell::Rigid => out[ch(1, vx, vy)] = 1.0,
+                    Cell::Wood => out[ch(2, vx, vy)] = 1.0,
+                }
+                if let Some(bi) = self.bomb_at(x, y) {
+                    let b = &self.bombs[bi];
+                    out[ch(3, vx, vy)] = b.timer as f32 / BOMB_LIFE as f32;
+                    out[ch(9, vx, vy)] = b.blast as f32 / 5.0;
+                }
+                if self.flames[i] > 0 {
+                    out[ch(4, vx, vy)] = 1.0;
+                }
+                if self.items[i].is_some() {
+                    out[ch(5, vx, vy)] = 1.0;
+                }
+                if let Some(a) = self.agent_at(x, y) {
+                    if a == who {
+                        out[ch(6, vx, vy)] = 1.0;
+                    } else if self.same_team(who, a) {
+                        out[ch(7, vx, vy)] = 1.0;
+                    } else {
+                        out[ch(8, vx, vy)] = 1.0;
+                    }
+                }
+                if danger[i] != i32::MAX {
+                    out[ch(11, vx, vy)] =
+                        1.0 - (danger[i] as f32 / BOMB_LIFE as f32).min(1.0);
+                }
+            }
+        }
+        let base = VIEW * VIEW * 12;
+        out[base] = me.ammo as f32 / 3.0;
+        out[base + 1] = me.blast as f32 / 5.0;
+        out[base + 2] = me.can_kick as u8 as f32;
+        out[base + 3] = me.alive as u8 as f32;
+        let mate = Self::teammate(who);
+        out[base + 4] = if self.mode == Mode::Team {
+            self.agents[mate].alive as u8 as f32
+        } else {
+            0.0
+        };
+        let enemies_alive = (0..4)
+            .filter(|&i| i != who && !self.same_team(who, i) && self.agents[i].alive)
+            .count();
+        out[base + 5] = enemies_alive as f32 / 3.0;
+        out[base + 6] = self.steps as f32 / MAX_STEPS as f32;
+        out[base + 7] = if self.mode == Mode::Team { 1.0 } else { 0.0 };
+        out
+    }
+
+    fn all_obs(&self) -> Vec<Vec<f32>> {
+        (0..4).map(|i| self.encode_obs(i)).collect()
+    }
+}
+
+impl MultiAgentEnv for Pommerman {
+    fn n_agents(&self) -> usize {
+        4
+    }
+    fn obs_dim(&self) -> usize {
+        OBS_DIM
+    }
+    fn act_dim(&self) -> usize {
+        6
+    }
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self) -> Vec<Vec<f32>> {
+        // fresh board each episode; seed advanced so layouts differ
+        self.seed = self.seed.wrapping_add(0x9e37_79b9);
+        self.steps = 0;
+        self.done = false;
+        self.generate();
+        self.all_obs()
+    }
+
+    fn step(&mut self, actions: &[usize]) -> Step {
+        assert!(!self.done, "step after done");
+        assert_eq!(actions.len(), 4);
+        self.steps += 1;
+        let mut rewards = [0.0f32; 4];
+
+        // 1. flames decay
+        for f in self.flames.iter_mut() {
+            if *f > 0 {
+                *f -= 1;
+            }
+        }
+
+        // 2. bomb placement (before movement, classic rules)
+        for i in 0..4 {
+            let a = &mut self.agents[i];
+            if a.alive
+                && actions[i] == ACT_BOMB
+                && a.ammo > 0
+                && self.bombs.iter().all(|b| b.pos != a.pos)
+            {
+                let blast = a.blast;
+                let pos = a.pos;
+                a.ammo -= 1;
+                self.bombs.push(Bomb {
+                    pos,
+                    owner: i,
+                    timer: BOMB_LIFE,
+                    blast,
+                    vel: (0, 0),
+                });
+            }
+        }
+
+        // 3. agent movement with collision resolution
+        let mut desired: Vec<(i32, i32)> = (0..4)
+            .map(|i| {
+                let a = &self.agents[i];
+                if !a.alive || actions[i] == ACT_BOMB || actions[i] == ACT_IDLE {
+                    return a.pos;
+                }
+                let (dx, dy) = action_delta(actions[i]);
+                let (nx, ny) = (a.pos.0 + dx, a.pos.1 + dy);
+                if !in_bounds(nx, ny) || self.board[idx(nx, ny)] != Cell::Passage {
+                    return a.pos;
+                }
+                if let Some(bi) = self.bomb_at(nx, ny) {
+                    // kick if empowered and space behind the bomb is free
+                    if a.can_kick {
+                        let (bx, by) = (nx + dx, ny + dy);
+                        if self.passable(bx, by) && self.agent_at(bx, by).is_none() {
+                            self.bombs[bi].vel = (dx, dy);
+                            return (nx, ny);
+                        }
+                    }
+                    let _ = bi;
+                    return a.pos;
+                }
+                (nx, ny)
+            })
+            .collect();
+        // two agents to the same cell: both bounce
+        loop {
+            let mut conflicted = false;
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    if self.agents[i].alive
+                        && self.agents[j].alive
+                        && desired[i] == desired[j]
+                    {
+                        desired[i] = self.agents[i].pos;
+                        desired[j] = self.agents[j].pos;
+                        conflicted = true;
+                    }
+                }
+            }
+            // swap-through is also forbidden
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    if self.agents[i].alive
+                        && self.agents[j].alive
+                        && desired[i] == self.agents[j].pos
+                        && desired[j] == self.agents[i].pos
+                    {
+                        desired[i] = self.agents[i].pos;
+                        desired[j] = self.agents[j].pos;
+                        conflicted = true;
+                    }
+                }
+            }
+            if !conflicted {
+                break;
+            }
+        }
+        for i in 0..4 {
+            if !self.agents[i].alive {
+                continue;
+            }
+            self.agents[i].pos = desired[i];
+            // item pickup
+            let (x, y) = desired[i];
+            if let Some(item) = self.items[idx(x, y)].take() {
+                match item {
+                    ItemKind::ExtraBomb => self.agents[i].ammo += 1,
+                    ItemKind::IncrRange => self.agents[i].blast += 1,
+                    ItemKind::Kick => self.agents[i].can_kick = true,
+                }
+                if self.shaping {
+                    rewards[i] += 0.05;
+                }
+            }
+        }
+
+        // 4. kicked bombs slide
+        for bi in 0..self.bombs.len() {
+            let b = self.bombs[bi];
+            if b.vel == (0, 0) {
+                continue;
+            }
+            let (nx, ny) = (b.pos.0 + b.vel.0, b.pos.1 + b.vel.1);
+            if in_bounds(nx, ny)
+                && self.board[idx(nx, ny)] == Cell::Passage
+                && self.agent_at(nx, ny).is_none()
+                && self
+                    .bombs
+                    .iter()
+                    .enumerate()
+                    .all(|(oi, o)| oi == bi || o.pos != (nx, ny))
+            {
+                self.bombs[bi].pos = (nx, ny);
+            } else {
+                self.bombs[bi].vel = (0, 0);
+            }
+        }
+
+        // 5. timers + explosions + deaths
+        for b in self.bombs.iter_mut() {
+            b.timer -= 1;
+        }
+        self.explode(&mut rewards);
+        self.kill_agents_on_flames(&mut rewards);
+
+        // 6. outcome
+        let result = self.episode_result();
+        let done = result.is_some();
+        self.done = done;
+        let mut rew = rewards.to_vec();
+        if let Some(out) = &result {
+            for i in 0..4 {
+                rew[i] += out[i] * 2.0 - 1.0; // +1 win, 0 tie, -1 loss
+            }
+        }
+        Step {
+            obs: self.all_obs(),
+            rewards: rew,
+            done,
+            info: Info { outcome: result, frags: None },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh(seed: u64) -> Pommerman {
+        let mut env = Pommerman::team(seed);
+        env.reset();
+        env
+    }
+
+    #[test]
+    fn board_has_free_spawns() {
+        for seed in 0..20 {
+            let env = fresh(seed);
+            for a in &env.agents {
+                assert_eq!(env.board[idx(a.pos.0, a.pos.1)], Cell::Passage);
+                // at least one free neighbour
+                let free = [(1, 0), (-1, 0), (0, 1), (0, -1)]
+                    .iter()
+                    .filter(|(dx, dy)| env.passable(a.pos.0 + dx, a.pos.1 + dy))
+                    .count();
+                assert!(free >= 1, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn bomb_explodes_after_life_and_refunds_ammo() {
+        let mut env = fresh(1);
+        let a0 = env.agents[0].pos;
+        let idle = [ACT_IDLE; 4];
+        let mut acts = idle;
+        acts[0] = ACT_BOMB;
+        env.step(&acts.to_vec());
+        assert_eq!(env.bombs.len(), 1);
+        assert_eq!(env.agents[0].ammo, 0);
+        // walk agent 0 away so it survives: move right/down repeatedly
+        for t in 0..BOMB_LIFE {
+            let mut acts = idle;
+            acts[0] = if t % 2 == 0 { ACT_RIGHT } else { ACT_DOWN };
+            if env.done {
+                break;
+            }
+            env.step(&acts.to_vec());
+        }
+        assert!(env.bombs.is_empty(), "bomb must have exploded");
+        assert_eq!(env.agents[0].ammo, 1, "ammo refunded");
+        let _ = a0;
+    }
+
+    #[test]
+    fn flame_kills_idle_owner() {
+        let mut env = fresh(2);
+        env.shaping = false;
+        let idle = [ACT_IDLE; 4];
+        let mut acts = idle;
+        acts[0] = ACT_BOMB;
+        env.step(&acts.to_vec());
+        for _ in 0..BOMB_LIFE {
+            if env.done {
+                break;
+            }
+            env.step(&idle.to_vec());
+        }
+        assert!(!env.agents[0].alive, "idle bomber must die in own blast");
+    }
+
+    #[test]
+    fn rigid_blocks_blast() {
+        let mut env = fresh(3);
+        // construct a controlled scene
+        env.board.fill(Cell::Passage);
+        env.board[idx(5, 4)] = Cell::Rigid;
+        env.bombs.clear();
+        env.bombs.push(Bomb {
+            pos: (5, 5),
+            owner: 0,
+            timer: 1,
+            blast: 3,
+            vel: (0, 0),
+        });
+        env.agents[0].pos = (0, 0);
+        env.agents[1].pos = (10, 10);
+        env.agents[2].pos = (0, 10);
+        env.agents[3].pos = (10, 0);
+        let mut rewards = [0.0; 4];
+        for b in env.bombs.iter_mut() {
+            b.timer -= 1;
+        }
+        env.explode(&mut rewards);
+        assert!(env.flames[idx(5, 5)] > 0);
+        assert!(env.flames[idx(4, 5)] > 0);
+        assert_eq!(env.flames[idx(5, 3)], 0, "rigid wall blocks flame");
+        assert_eq!(env.flames[idx(5, 4)], 0, "rigid cell itself unburnt");
+    }
+
+    #[test]
+    fn wood_stops_blast_and_reveals_item() {
+        let mut env = fresh(4);
+        env.board.fill(Cell::Passage);
+        env.board[idx(5, 3)] = Cell::Wood;
+        env.hidden[idx(5, 3)] = Some(ItemKind::Kick);
+        env.bombs.clear();
+        env.bombs.push(Bomb {
+            pos: (5, 5),
+            owner: 0,
+            timer: 0,
+            blast: 4,
+            vel: (0, 0),
+        });
+        env.agents[0].pos = (0, 0);
+        env.agents[1].pos = (10, 10);
+        env.agents[2].pos = (0, 10);
+        env.agents[3].pos = (10, 0);
+        let mut rewards = [0.0; 4];
+        env.explode(&mut rewards);
+        assert_eq!(env.board[idx(5, 3)], Cell::Passage, "wood destroyed");
+        assert_eq!(env.items[idx(5, 3)], Some(ItemKind::Kick));
+        assert_eq!(env.flames[idx(5, 2)], 0, "blast stops at wood");
+    }
+
+    #[test]
+    fn chain_explosions() {
+        let mut env = fresh(5);
+        env.board.fill(Cell::Passage);
+        env.bombs.clear();
+        env.bombs.push(Bomb { pos: (5, 5), owner: 0, timer: 0, blast: 2, vel: (0, 0) });
+        env.bombs.push(Bomb { pos: (7, 5), owner: 1, timer: 9, blast: 2, vel: (0, 0) });
+        env.agents[0].pos = (0, 0);
+        env.agents[1].pos = (10, 10);
+        env.agents[2].pos = (0, 10);
+        env.agents[3].pos = (10, 0);
+        let mut rewards = [0.0; 4];
+        env.explode(&mut rewards);
+        assert!(env.bombs.is_empty(), "chained bomb must also explode");
+        assert!(env.flames[idx(9, 5)] > 0, "chained blast extends");
+    }
+
+    #[test]
+    fn team_outcome_when_opponents_die() {
+        let mut env = fresh(6);
+        env.agents[1].alive = false;
+        env.agents[3].alive = false;
+        let s = env.step(&vec![ACT_IDLE; 4]);
+        assert!(s.done);
+        assert_eq!(s.info.outcome.unwrap(), vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn tie_at_step_cap() {
+        let mut env = fresh(7);
+        env.steps = MAX_STEPS - 1;
+        let s = env.step(&vec![ACT_IDLE; 4]);
+        assert!(s.done);
+        assert_eq!(s.info.outcome.unwrap(), vec![0.5; 4]);
+    }
+
+    #[test]
+    fn obs_dim_matches_manifest_spec() {
+        let env = fresh(8);
+        assert_eq!(env.encode_obs(0).len(), OBS_DIM);
+        assert_eq!(OBS_DIM, 9 * 9 * 12 + 8);
+    }
+
+    #[test]
+    fn obs_self_channel_is_centered() {
+        let env = fresh(9);
+        let obs = env.encode_obs(2);
+        let center = 6 * VIEW * VIEW + (VIEW / 2) * VIEW + VIEW / 2;
+        assert_eq!(obs[center], 1.0, "self channel must mark the center");
+    }
+
+    #[test]
+    fn danger_map_marks_blast_cross() {
+        let mut env = fresh(10);
+        env.board.fill(Cell::Passage);
+        env.bombs.clear();
+        env.bombs.push(Bomb { pos: (5, 5), owner: 0, timer: 4, blast: 2, vel: (0, 0) });
+        let d = env.danger_map();
+        assert_eq!(d[idx(5, 5)], 4);
+        assert_eq!(d[idx(7, 5)], 4);
+        assert_eq!(d[idx(5, 7)], 4);
+        assert_eq!(d[idx(8, 5)], i32::MAX, "outside blast radius");
+        assert_eq!(d[idx(6, 6)], i32::MAX, "diagonal is safe");
+    }
+
+    #[test]
+    fn movement_collision_bounces_both() {
+        let mut env = fresh(11);
+        env.board.fill(Cell::Passage);
+        env.bombs.clear();
+        env.agents[0].pos = (4, 5);
+        env.agents[1].pos = (6, 5);
+        env.agents[2].pos = (0, 0);
+        env.agents[3].pos = (10, 10);
+        let mut acts = vec![ACT_IDLE; 4];
+        acts[0] = ACT_RIGHT;
+        acts[1] = ACT_LEFT;
+        env.step(&acts);
+        assert_eq!(env.agents[0].pos, (4, 5));
+        assert_eq!(env.agents[1].pos, (6, 5));
+    }
+}

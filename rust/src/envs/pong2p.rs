@@ -1,0 +1,225 @@
+//! Pong-2p: the minimal two-player env the paper uses as its
+//! "Adding New Env" extension example (§3.6).  Also the fastest real
+//! env, so integration tests train against it.
+//!
+//! Continuous-state paddle game on the unit square.  Obs (8): ball
+//! x/y/vx/vy, own paddle y/vy, opponent paddle y, side flag.  Actions
+//! (3): stay / up / down.  First to `TARGET` points wins; hard step cap
+//! ends the episode in a tie on points.
+
+use super::{Info, MultiAgentEnv, Step};
+use crate::util::rng::Pcg32;
+
+const PADDLE_H: f32 = 0.2;
+const PADDLE_SPEED: f32 = 0.035;
+const BALL_SPEED: f32 = 0.02;
+const TARGET: u32 = 3;
+const MAX_STEPS: usize = 3000;
+
+pub struct Pong2p {
+    rng: Pcg32,
+    ball: [f32; 4],     // x, y, vx, vy
+    paddles: [f32; 2],  // y centers; player 0 at x=0, player 1 at x=1
+    pvel: [f32; 2],
+    score: [u32; 2],
+    steps: usize,
+}
+
+impl Pong2p {
+    pub fn new(seed: u64) -> Self {
+        Pong2p {
+            rng: Pcg32::from_label(seed, "pong2p"),
+            ball: [0.5, 0.5, BALL_SPEED, 0.0],
+            paddles: [0.5, 0.5],
+            pvel: [0.0, 0.0],
+            score: [0, 0],
+            steps: 0,
+        }
+    }
+
+    fn serve(&mut self, towards: usize) {
+        let angle = self.rng.range_f32(-0.6, 0.6);
+        let dir = if towards == 0 { -1.0 } else { 1.0 };
+        self.ball = [
+            0.5,
+            self.rng.range_f32(0.3, 0.7),
+            dir * BALL_SPEED * angle.cos(),
+            BALL_SPEED * angle.sin(),
+        ];
+    }
+
+    fn obs_for(&self, who: usize) -> Vec<f32> {
+        // egocentric: mirror x for player 1 so both see the same frame
+        let (bx, bvx) = if who == 0 {
+            (self.ball[0], self.ball[2])
+        } else {
+            (1.0 - self.ball[0], -self.ball[2])
+        };
+        vec![
+            bx,
+            self.ball[1],
+            bvx / BALL_SPEED,
+            self.ball[3] / BALL_SPEED,
+            self.paddles[who],
+            self.pvel[who] / PADDLE_SPEED,
+            self.paddles[1 - who],
+            if who == 0 { 0.0 } else { 1.0 },
+        ]
+    }
+
+    fn all_obs(&self) -> Vec<Vec<f32>> {
+        vec![self.obs_for(0), self.obs_for(1)]
+    }
+}
+
+impl MultiAgentEnv for Pong2p {
+    fn n_agents(&self) -> usize {
+        2
+    }
+    fn obs_dim(&self) -> usize {
+        8
+    }
+    fn act_dim(&self) -> usize {
+        3
+    }
+    fn max_steps(&self) -> usize {
+        MAX_STEPS
+    }
+
+    fn reset(&mut self) -> Vec<Vec<f32>> {
+        self.score = [0, 0];
+        self.steps = 0;
+        self.paddles = [0.5, 0.5];
+        self.pvel = [0.0, 0.0];
+        let towards = (self.rng.below(2)) as usize;
+        self.serve(towards);
+        self.all_obs()
+    }
+
+    fn step(&mut self, actions: &[usize]) -> Step {
+        self.steps += 1;
+        let mut rewards = vec![0.0f32; 2];
+        for (i, &a) in actions.iter().enumerate() {
+            self.pvel[i] = match a {
+                1 => PADDLE_SPEED,
+                2 => -PADDLE_SPEED,
+                _ => 0.0,
+            };
+            self.paddles[i] = (self.paddles[i] + self.pvel[i])
+                .clamp(PADDLE_H / 2.0, 1.0 - PADDLE_H / 2.0);
+        }
+        // ball motion + wall bounce
+        self.ball[0] += self.ball[2];
+        self.ball[1] += self.ball[3];
+        if self.ball[1] <= 0.0 || self.ball[1] >= 1.0 {
+            self.ball[3] = -self.ball[3];
+            self.ball[1] = self.ball[1].clamp(0.0, 1.0);
+        }
+        // paddle collision / scoring
+        let mut point: Option<usize> = None;
+        if self.ball[0] <= 0.0 {
+            if (self.ball[1] - self.paddles[0]).abs() <= PADDLE_H / 2.0 {
+                self.ball[2] = self.ball[2].abs();
+                // english: deflect by hit offset
+                self.ball[3] += (self.ball[1] - self.paddles[0]) * 0.08;
+                rewards[0] += 0.1; // shaped return for rally
+            } else {
+                point = Some(1);
+            }
+        } else if self.ball[0] >= 1.0 {
+            if (self.ball[1] - self.paddles[1]).abs() <= PADDLE_H / 2.0 {
+                self.ball[2] = -self.ball[2].abs();
+                self.ball[3] += (self.ball[1] - self.paddles[1]) * 0.08;
+                rewards[1] += 0.1;
+            } else {
+                point = Some(0);
+            }
+        }
+        if let Some(w) = point {
+            self.score[w] += 1;
+            rewards[w] += 1.0;
+            rewards[1 - w] -= 1.0;
+            self.serve(1 - w);
+        }
+        let done = self.score.iter().any(|&s| s >= TARGET)
+            || self.steps >= MAX_STEPS;
+        let info = if done {
+            let outcome = match self.score[0].cmp(&self.score[1]) {
+                std::cmp::Ordering::Greater => vec![1.0, 0.0],
+                std::cmp::Ordering::Less => vec![0.0, 1.0],
+                std::cmp::Ordering::Equal => vec![0.5, 0.5],
+            };
+            Info { outcome: Some(outcome), frags: None }
+        } else {
+            Info::default()
+        };
+        Step { obs: self.all_obs(), rewards, done, info }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ball_stays_in_bounds() {
+        let mut env = Pong2p::new(1);
+        env.reset();
+        for t in 0..2000 {
+            let s = env.step(&[t % 3, (t + 1) % 3]);
+            assert!((-0.05..=1.05).contains(&env.ball[0]));
+            assert!((-0.05..=1.05).contains(&env.ball[1]));
+            if s.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn zero_sum_on_points() {
+        let mut env = Pong2p::new(2);
+        env.reset();
+        loop {
+            // both paddles idle: points get scored quickly
+            let s = env.step(&[0, 0]);
+            let point_r: f32 = s
+                .rewards
+                .iter()
+                .filter(|r| r.abs() >= 0.9)
+                .sum();
+            assert!(point_r.abs() < 1e-6, "point rewards must cancel");
+            if s.done {
+                return;
+            }
+        }
+    }
+
+    #[test]
+    fn tracker_beats_idler() {
+        // a paddle that follows the ball should beat an idle one
+        let mut wins = 0;
+        for seed in 0..10 {
+            let mut env = Pong2p::new(seed);
+            let mut obs = env.reset();
+            loop {
+                let me = &obs[0];
+                let act0 = if me[1] > me[4] + 0.02 {
+                    1
+                } else if me[1] < me[4] - 0.02 {
+                    2
+                } else {
+                    0
+                };
+                let s = env.step(&[act0, 0]);
+                obs = s.obs;
+                if s.done {
+                    if s.info.outcome.unwrap()[0] == 1.0 {
+                        wins += 1;
+                    }
+                    break;
+                }
+            }
+        }
+        assert!(wins >= 8, "tracker won only {wins}/10");
+    }
+}

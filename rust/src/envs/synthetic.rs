@@ -1,0 +1,136 @@
+//! Synthetic heavy environment for the Table-3 throughput harness.
+//!
+//! Stands in for the paper's closed/heavy envs (SC2 full game, Dota 2):
+//! a configurable per-step CPU cost and a large opaque observation so
+//! the Actor→Learner data plane is exercised at realistic frame sizes.
+//! The "game" is a trivial 2-player score race so outcomes exist.
+
+use super::{Info, MultiAgentEnv, Step};
+use crate::util::rng::Pcg32;
+
+pub struct Synthetic {
+    rng: Pcg32,
+    obs_dim: usize,
+    act_dim: usize,
+    /// busy-work iterations per step, calibrating in-game fps
+    step_cost: u64,
+    episode_len: usize,
+    steps: usize,
+    scores: [f32; 2],
+    scratch: Vec<f32>,
+}
+
+impl Synthetic {
+    pub fn new(seed: u64) -> Self {
+        Self::with_cost(seed, 2_000, 256)
+    }
+
+    /// `step_cost` = busy-loop iterations (models game-core simulation
+    /// cost); `episode_len` = fixed episode length in steps.
+    pub fn with_cost(seed: u64, step_cost: u64, episode_len: usize) -> Self {
+        let obs_dim = 1024;
+        Synthetic {
+            rng: Pcg32::from_label(seed, "synthetic"),
+            obs_dim,
+            act_dim: 16,
+            step_cost,
+            episode_len,
+            steps: 0,
+            scores: [0.0, 0.0],
+            scratch: vec![0.0; obs_dim],
+        }
+    }
+
+    fn gen_obs(&mut self) -> Vec<Vec<f32>> {
+        // cheap pseudo-features; regenerated per agent per step
+        (0..2)
+            .map(|a| {
+                let mut v = self.scratch.clone();
+                let base = self.rng.next_f32();
+                for (i, x) in v.iter_mut().enumerate() {
+                    *x = base + (i as f32 * 0.001) + a as f32;
+                }
+                v
+            })
+            .collect()
+    }
+}
+
+impl MultiAgentEnv for Synthetic {
+    fn n_agents(&self) -> usize {
+        2
+    }
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+    fn max_steps(&self) -> usize {
+        self.episode_len
+    }
+
+    fn reset(&mut self) -> Vec<Vec<f32>> {
+        self.steps = 0;
+        self.scores = [0.0, 0.0];
+        self.gen_obs()
+    }
+
+    fn step(&mut self, actions: &[usize]) -> Step {
+        self.steps += 1;
+        // simulate game-core cost (SC2 steps are milliseconds of C++)
+        let mut acc = 0u64;
+        for i in 0..self.step_cost {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+
+        let r0 = if actions[0] > actions[1] {
+            0.01
+        } else if actions[1] > actions[0] {
+            -0.01
+        } else {
+            0.0
+        };
+        self.scores[0] += r0;
+        self.scores[1] -= r0;
+        let done = self.steps >= self.episode_len;
+        let info = if done {
+            let outcome = match self.scores[0]
+                .partial_cmp(&self.scores[1])
+                .unwrap()
+            {
+                std::cmp::Ordering::Greater => vec![1.0, 0.0],
+                std::cmp::Ordering::Less => vec![0.0, 1.0],
+                std::cmp::Ordering::Equal => vec![0.5, 0.5],
+            };
+            Info { outcome: Some(outcome), frags: None }
+        } else {
+            Info::default()
+        };
+        Step { obs: self.gen_obs(), rewards: vec![r0, -r0], done, info }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_episode_length() {
+        let mut env = Synthetic::with_cost(0, 10, 32);
+        env.reset();
+        for t in 0..32 {
+            let s = env.step(&[0, 1]);
+            assert_eq!(s.done, t == 31);
+        }
+    }
+
+    #[test]
+    fn obs_sized_to_spec() {
+        let mut env = Synthetic::new(0);
+        let obs = env.reset();
+        assert_eq!(obs[0].len(), 1024);
+        assert_eq!(obs.len(), 2);
+    }
+}

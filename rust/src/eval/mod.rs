@@ -1,0 +1,235 @@
+//! Evaluation harness: regenerates the paper's result tables/figures.
+//!
+//! - doom_lite FRAG matches (Tables 1 & 2): trained policy + scripted
+//!   bots in one synchronous match, ranked by kills − suicides.
+//! - Pommerman win-rate curves (Fig 4): trained team vs SimpleAgent /
+//!   Navocado over N games (tie = 0.5 win vs SimpleAgent; W/L/T vs
+//!   Navocado), evaluated at checkpoints during training.
+//! - Matrix-game exploitability (experiment V1): empirical policy
+//!   mixture vs the NE.
+
+use crate::envs::doom_lite::bots::DoomPolicy;
+use crate::envs::doom_lite::DoomLite;
+use crate::envs::matrix::MatrixGame;
+use crate::envs::pommerman::agents::ScriptedPolicy;
+use crate::envs::pommerman::Pommerman;
+use crate::envs::MultiAgentEnv;
+use crate::runtime::Engine;
+use crate::util::rng::{log_softmax_at, Pcg32};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A policy driven by NN params through the runtime (greedy-ish
+/// sampling with temperature via Gumbel).
+pub struct NnPolicy {
+    pub engine: Arc<Engine>,
+    pub env: String,
+    pub params: Vec<f32>,
+    buf_id: u64,
+    pub rng: Pcg32,
+}
+
+impl Drop for NnPolicy {
+    fn drop(&mut self) {
+        self.engine.evict_cached(self.buf_id);
+    }
+}
+
+impl NnPolicy {
+    pub fn new(engine: Arc<Engine>, env: &str, params: Vec<f32>, seed: u64) -> Self {
+        NnPolicy {
+            engine,
+            env: env.to_string(),
+            params,
+            buf_id: crate::runtime::new_cache_id(),
+            rng: Pcg32::from_label(seed, "nn-policy"),
+        }
+    }
+
+    /// Sample one action for a single observation row.
+    pub fn act(&mut self, obs: &[f32]) -> Result<usize> {
+        let (logits, _v) =
+            self.engine
+                .infer_cached(&self.env, 1, self.buf_id, &self.params, obs)?;
+        Ok(self.rng.sample_logits(&logits))
+    }
+
+    /// Team forward pass (pommerman): obs [2*D] -> 2 actions.
+    pub fn act_team(&mut self, obs: &[f32]) -> Result<[usize; 2]> {
+        let (logits, _v) =
+            self.engine
+                .infer_cached(&self.env, 1, self.buf_id, &self.params, obs)?;
+        let a = logits.len() / 2;
+        Ok([
+            self.rng.sample_logits(&logits[..a]),
+            self.rng.sample_logits(&logits[a..]),
+        ])
+    }
+
+    /// Mean policy distribution over a set of observations (used for
+    /// the RPS mixture / exploitability analysis).
+    pub fn distribution(&mut self, obs: &[f32]) -> Result<Vec<f64>> {
+        let (logits, _v) = self.engine.infer(&self.env, 1, &self.params, obs)?;
+        let probs: Vec<f64> = (0..logits.len())
+            .map(|a| log_softmax_at(&logits, a).exp() as f64)
+            .collect();
+        Ok(probs)
+    }
+}
+
+/// One doom_lite match: slot 0.. control by `nn_slots` NN policies, the
+/// rest by scripted `bots`.  Returns final FRAGs per slot.
+pub fn doom_match(
+    seed: u64,
+    nn: &mut [NnPolicy],
+    bots: &mut [Box<dyn DoomPolicy>],
+) -> Result<Vec<i32>> {
+    let n = nn.len() + bots.len();
+    let mut env = DoomLite::new(seed, n);
+    let mut obs = env.reset();
+    loop {
+        let mut actions = vec![0usize; n];
+        for (i, p) in nn.iter_mut().enumerate() {
+            actions[i] = p.act(&obs[i])?;
+        }
+        for (j, b) in bots.iter_mut().enumerate() {
+            actions[nn.len() + j] = b.act(&env, nn.len() + j);
+        }
+        let step = env.step(&actions);
+        obs = step.obs;
+        if step.done {
+            return Ok(step.info.frags.unwrap());
+        }
+    }
+}
+
+/// Pommerman eval game: NN team (slots 0,2) vs scripted team (1,3).
+/// Returns the NN team's outcome (1 / 0.5 / 0).
+pub fn pommerman_game(
+    seed: u64,
+    nn: &mut NnPolicy,
+    mk_opponent: &mut dyn FnMut(u64) -> Box<dyn ScriptedPolicy>,
+) -> Result<f32> {
+    let mut env = Pommerman::team(seed);
+    let mut obs = env.reset();
+    let mut op1 = mk_opponent(seed * 2 + 1);
+    let mut op3 = mk_opponent(seed * 2 + 2);
+    loop {
+        let mut team_obs = Vec::with_capacity(obs[0].len() * 2);
+        team_obs.extend_from_slice(&obs[0]);
+        team_obs.extend_from_slice(&obs[2]);
+        let nn_acts = nn.act_team(&team_obs)?;
+        let actions = vec![
+            nn_acts[0],
+            op1.act(&env, 1),
+            nn_acts[1],
+            op3.act(&env, 3),
+        ];
+        let step = env.step(&actions);
+        obs = step.obs;
+        if step.done {
+            let o = step.info.outcome.unwrap();
+            return Ok(o[0]);
+        }
+    }
+}
+
+/// Win/Loss/Tie record over `games` pommerman evaluations.
+pub fn pommerman_record(
+    nn: &mut NnPolicy,
+    mk_opponent: &mut dyn FnMut(u64) -> Box<dyn ScriptedPolicy>,
+    games: u64,
+    seed0: u64,
+) -> Result<(u32, u32, u32)> {
+    let (mut w, mut l, mut t) = (0, 0, 0);
+    for g in 0..games {
+        match pommerman_game(seed0 + g, nn, mk_opponent)? {
+            o if o >= 1.0 => w += 1,
+            o if o <= 0.0 => l += 1,
+            _ => t += 1,
+        }
+    }
+    Ok((w, l, t))
+}
+
+/// Empirical mixed strategy of an RPS policy (one-step game: the obs is
+/// constant, so the distribution IS the strategy).
+pub fn rps_strategy(nn: &mut NnPolicy) -> Result<Vec<f64>> {
+    nn.distribution(&[1.0, 0.0, 0.0, 0.0])
+}
+
+/// Exploitability of the average strategy of a pool of RPS policies —
+/// the FSP convergence metric (paper §3.1 / experiment V1).
+pub fn rps_pool_exploitability(
+    game: &MatrixGame,
+    strategies: &[Vec<f64>],
+) -> f64 {
+    let n = game.act_dim();
+    let mut avg = vec![0.0; n];
+    for s in strategies {
+        for i in 0..n {
+            avg[i] += s[i] / strategies.len() as f64;
+        }
+    }
+    game.exploitability(&avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::doom_lite::bots::BuiltinBot;
+    use crate::envs::pommerman::agents::SimpleAgent;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Arc<Engine>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Arc::new(Engine::load(dir).unwrap()))
+    }
+
+    #[test]
+    fn doom_match_produces_frags() {
+        let Some(engine) = engine() else { return };
+        let params = engine.init_params("doom_lite").unwrap();
+        let mut nn = vec![NnPolicy::new(engine, "doom_lite", params, 1)];
+        let mut bots: Vec<Box<dyn DoomPolicy>> =
+            (0..3).map(|i| Box::new(BuiltinBot::new(i)) as _).collect();
+        let frags = doom_match(5, &mut nn, &mut bots).unwrap();
+        assert_eq!(frags.len(), 4);
+    }
+
+    #[test]
+    fn pommerman_record_sums_to_games() {
+        let Some(engine) = engine() else { return };
+        let params = engine.init_params("pommerman").unwrap();
+        let mut nn = NnPolicy::new(engine, "pommerman", params, 2);
+        let mut mk = |s: u64| Box::new(SimpleAgent::new(s)) as Box<dyn ScriptedPolicy>;
+        let (w, l, t) = pommerman_record(&mut nn, &mut mk, 3, 0).unwrap();
+        assert_eq!(w + l + t, 3);
+    }
+
+    #[test]
+    fn rps_strategy_is_distribution() {
+        let Some(engine) = engine() else { return };
+        let params = engine.init_params("rps").unwrap();
+        let mut nn = NnPolicy::new(engine, "rps", params, 3);
+        let s = rps_strategy(&mut nn).unwrap();
+        assert_eq!(s.len(), 3);
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn exploitability_of_uniform_pool_is_zero() {
+        let game = MatrixGame::rps(0);
+        let pool = vec![
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ];
+        assert!(rps_pool_exploitability(&game, &pool).abs() < 1e-9);
+        let pure = vec![vec![1.0, 0.0, 0.0]];
+        assert!(rps_pool_exploitability(&game, &pure) > 0.9);
+    }
+}

@@ -1,0 +1,388 @@
+//! InfServer: batched remote inference (paper §3.2).
+//!
+//! Actors delegate their neural-net forward passes here; the server
+//! collects observations from many actors into one batch (size- or
+//! timeout-triggered) and runs the `infer_<env>_b{B}` artifact — the
+//! SEED-RL design point the paper adopts: batch-32 forward passes are
+//! far cheaper per row than 32 batch-1 passes (ablation A2).
+//!
+//! Parameters are fetched from the ModelPool and cached: frozen models
+//! forever, the in-training model with a short TTL so actors follow the
+//! learner's updates.
+
+use crate::model_pool::ModelPoolClient;
+use crate::proto::{ModelKey, Msg};
+use crate::runtime::{Engine, Tensor};
+use crate::transport::RepServer;
+use crate::util::metrics::Meter;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Pending {
+    key: ModelKey,
+    obs: Vec<f32>,
+    reply: mpsc::Sender<Msg>,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct Queue {
+    items: Vec<Pending>,
+}
+
+pub struct InfServerConfig {
+    pub env: String,
+    /// slots per forward pass (manifest infer_b)
+    pub batch: usize,
+    /// max time the oldest request waits before a partial batch runs
+    pub max_wait: Duration,
+    /// TTL for the non-frozen (learning) model's cached params
+    pub refresh: Duration,
+}
+
+pub struct InfServer {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    _server: RepServer,
+    /// rows served / batches run — exposes the batching efficiency
+    pub rows_meter: Arc<Meter>,
+    pub batch_meter: Arc<Meter>,
+}
+
+struct CacheEntry {
+    params: Arc<Vec<f32>>,
+    /// device-buffer cache id (bumped on every refetch)
+    buf_id: u64,
+    frozen: bool,
+    fetched: Instant,
+}
+
+impl InfServer {
+    pub fn start(
+        bind: &str,
+        cfg: InfServerConfig,
+        engine: Arc<Engine>,
+        pool_addrs: &[String],
+    ) -> Result<InfServer> {
+        let queue = Arc::new((Mutex::new(Queue::default()), Condvar::new()));
+        let q2 = queue.clone();
+        let server = RepServer::serve(bind, move |msg| match msg {
+            Msg::InferReq { key, obs, rows } => {
+                let (tx, rx) = mpsc::channel();
+                {
+                    let (lock, cv) = &*q2;
+                    lock.lock().unwrap().items.push(Pending {
+                        key,
+                        obs,
+                        reply: tx,
+                        enqueued: Instant::now(),
+                    });
+                    cv.notify_one();
+                }
+                let _ = rows;
+                rx.recv_timeout(Duration::from_secs(30))
+                    .unwrap_or(Msg::Err("infserver timeout".into()))
+            }
+            Msg::Ping => Msg::Pong,
+            other => Msg::Err(format!("infserver: unexpected {other:?}")),
+        })?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let rows_meter = Arc::new(Meter::new());
+        let batch_meter = Arc::new(Meter::new());
+        let pool = ModelPoolClient::connect(pool_addrs);
+        let stop2 = stop.clone();
+        let rm = rows_meter.clone();
+        let bm = batch_meter.clone();
+        let addr = server.addr.clone();
+        let batcher = std::thread::Builder::new()
+            .name("infserver-batcher".into())
+            .spawn(move || {
+                let mut cache: HashMap<ModelKey, CacheEntry> = HashMap::new();
+                while !stop2.load(Ordering::Relaxed) {
+                    let batch = {
+                        let (lock, cv) = &*queue;
+                        let mut q = lock.lock().unwrap();
+                        while q.items.is_empty() && !stop2.load(Ordering::Relaxed)
+                        {
+                            let (g, _t) = cv
+                                .wait_timeout(q, Duration::from_millis(20))
+                                .unwrap();
+                            q = g;
+                        }
+                        if q.items.is_empty() {
+                            continue;
+                        }
+                        // run when full OR the oldest request is stale
+                        let oldest = q.items[0].enqueued.elapsed();
+                        if q.items.len() < cfg.batch && oldest < cfg.max_wait {
+                            drop(q);
+                            std::thread::sleep(Duration::from_micros(300));
+                            continue;
+                        }
+                        // take up to `batch` items of the majority key
+                        let key = q.items[0].key;
+                        let mut taken = Vec::new();
+                        let mut rest = Vec::new();
+                        for item in q.items.drain(..) {
+                            if item.key == key && taken.len() < cfg.batch {
+                                taken.push(item);
+                            } else {
+                                rest.push(item);
+                            }
+                        }
+                        q.items = rest;
+                        taken
+                    };
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let key = batch[0].key;
+                    let params = Self::params_for(
+                        &mut cache, &pool, &engine, key, cfg.refresh,
+                    );
+                    let reply_err = |items: &[Pending], e: &str| {
+                        for it in items {
+                            let _ = it.reply.send(Msg::Err(e.to_string()));
+                        }
+                    };
+                    let Some((params, buf_id)) = params else {
+                        reply_err(&batch, "model not found");
+                        continue;
+                    };
+                    match Self::run_batch(&engine, &cfg, &params, buf_id, &batch) {
+                        Ok(()) => {
+                            rm.add(batch.len() as u64);
+                            bm.add(1);
+                        }
+                        Err(e) => reply_err(&batch, &format!("{e}")),
+                    }
+                }
+            })?;
+
+        Ok(InfServer {
+            addr,
+            stop,
+            batcher: Some(batcher),
+            _server: server,
+            rows_meter,
+            batch_meter,
+        })
+    }
+
+    fn params_for(
+        cache: &mut HashMap<ModelKey, CacheEntry>,
+        pool: &ModelPoolClient,
+        engine: &Engine,
+        key: ModelKey,
+        ttl: Duration,
+    ) -> Option<(Arc<Vec<f32>>, u64)> {
+        if let Some(e) = cache.get(&key) {
+            if e.frozen || e.fetched.elapsed() < ttl {
+                return Some((e.params.clone(), e.buf_id));
+            }
+        }
+        match pool.get(key) {
+            Ok(Some(blob)) => {
+                let params = Arc::new(blob.params);
+                let buf_id = crate::runtime::new_cache_id();
+                if let Some(old) = cache.insert(
+                    key,
+                    CacheEntry {
+                        params: params.clone(),
+                        buf_id,
+                        frozen: blob.frozen,
+                        fetched: Instant::now(),
+                    },
+                ) {
+                    engine.evict_cached(old.buf_id);
+                }
+                Some((params, buf_id))
+            }
+            _ => cache.get(&key).map(|e| (e.params.clone(), e.buf_id)),
+        }
+    }
+
+    fn run_batch(
+        engine: &Engine,
+        cfg: &InfServerConfig,
+        params: &[f32],
+        buf_id: u64,
+        batch: &[Pending],
+    ) -> Result<()> {
+        let slot = batch[0].obs.len(); // rows-per-slot * D
+        let mut obs = vec![0.0f32; cfg.batch * slot];
+        for (i, p) in batch.iter().enumerate() {
+            obs[i * slot..(i + 1) * slot].copy_from_slice(&p.obs);
+        }
+        let (logits, value) =
+            engine.infer_cached(&cfg.env, cfg.batch, buf_id, params, &obs)?;
+        let lslot = logits.len() / cfg.batch;
+        let vslot = value.len() / cfg.batch;
+        for (i, p) in batch.iter().enumerate() {
+            let _ = p.reply.send(Msg::InferResp {
+                logits: logits[i * lslot..(i + 1) * lslot].to_vec(),
+                value: value[i * vslot..(i + 1) * vslot].to_vec(),
+            });
+        }
+        Ok(())
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.batcher.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for InfServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// used by tests and the actor's remote backend
+pub fn infer_remote(
+    client: &crate::transport::ReqClient,
+    key: ModelKey,
+    obs: &[f32],
+    rows: u32,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    match client.request(&Msg::InferReq { key, obs: obs.to_vec(), rows })? {
+        Msg::InferResp { logits, value } => Ok((logits, value)),
+        other => anyhow::bail!("infer: unexpected reply {other:?}"),
+    }
+}
+
+#[allow(unused_imports)]
+use Tensor as _TensorUnused;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_pool::ModelPoolServer;
+    use crate::proto::ModelBlob;
+    use crate::transport::ReqClient;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Arc<Engine>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Arc::new(Engine::load(dir).unwrap()))
+    }
+
+    #[test]
+    fn batched_inference_matches_local() {
+        let Some(engine) = engine() else { return };
+        let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let pc = ModelPoolClient::connect(&[pool.addr.clone()]);
+        let params = engine.init_params("rps").unwrap();
+        let key = ModelKey::new(0, 1);
+        pc.put(ModelBlob { key, params: params.clone(), hp: vec![], frozen: true })
+            .unwrap();
+
+        let m = engine.manifest.env("rps").unwrap().clone();
+        let server = InfServer::start(
+            "127.0.0.1:0",
+            InfServerConfig {
+                env: "rps".into(),
+                batch: m.infer_b,
+                max_wait: Duration::from_millis(2),
+                refresh: Duration::from_millis(50),
+            },
+            engine.clone(),
+            &[pool.addr.clone()],
+        )
+        .unwrap();
+
+        let client = ReqClient::connect(&server.addr);
+        let obs = vec![1.0f32, 0.0, 0.0, 0.0];
+        let (logits, value) = infer_remote(&client, key, &obs, 1).unwrap();
+        let (l_local, v_local) = engine.infer("rps", 1, &params, &obs).unwrap();
+        assert_eq!(logits.len(), m.act_dim);
+        for (a, b) in logits.iter().zip(&l_local) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        assert!((value[0] - v_local[0]).abs() < 1e-4);
+    }
+
+    #[test]
+    fn many_concurrent_clients_get_batched() {
+        let Some(engine) = engine() else { return };
+        let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let pc = ModelPoolClient::connect(&[pool.addr.clone()]);
+        let params = engine.init_params("rps").unwrap();
+        let key = ModelKey::new(0, 1);
+        pc.put(ModelBlob { key, params, hp: vec![], frozen: true }).unwrap();
+        let m = engine.manifest.env("rps").unwrap().clone();
+        let server = InfServer::start(
+            "127.0.0.1:0",
+            InfServerConfig {
+                env: "rps".into(),
+                batch: m.infer_b,
+                max_wait: Duration::from_millis(5),
+                refresh: Duration::from_millis(50),
+            },
+            engine,
+            &[pool.addr.clone()],
+        )
+        .unwrap();
+        let addr = server.addr.clone();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let c = ReqClient::connect(&addr);
+                    for _ in 0..12 {
+                        let (l, _) =
+                            infer_remote(&c, key, &[1.0, 0.0, 0.0, 0.0], 1)
+                                .unwrap();
+                        assert_eq!(l.len(), 3);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let rows = server.rows_meter.count();
+        let batches = server.batch_meter.count();
+        assert_eq!(rows, 96);
+        assert!(batches < rows, "some batching must happen: {batches} batches");
+    }
+
+    #[test]
+    fn unknown_model_reports_error() {
+        let Some(engine) = engine() else { return };
+        let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let server = InfServer::start(
+            "127.0.0.1:0",
+            InfServerConfig {
+                env: "rps".into(),
+                batch: 4,
+                max_wait: Duration::from_millis(1),
+                refresh: Duration::from_millis(50),
+            },
+            engine,
+            &[pool.addr.clone()],
+        )
+        .unwrap();
+        let c = ReqClient::connect(&server.addr);
+        let reply = c
+            .request(&Msg::InferReq {
+                key: ModelKey::new(9, 9),
+                obs: vec![0.0; 4],
+                rows: 1,
+            })
+            .unwrap();
+        assert!(matches!(reply, Msg::Err(_)));
+    }
+}

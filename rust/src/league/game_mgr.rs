@@ -1,0 +1,406 @@
+//! GameMgr: opponent-sampling algorithms (paper §3.1 + §3.2).
+//!
+//! Each implementation answers one question per task request: given the
+//! current learning model and the frozen pool M (with its payoff
+//! matrix), which opponent(s) should this episode be played against?
+//!
+//! Shipped samplers (mirroring the paper's list):
+//!  - [`SelfPlay`]         — always the current model (the naive baseline
+//!                           that circulates on RPS; §3.1)
+//!  - [`UniformRecent`]    — uniform over the most recent K frozen models
+//!                           (the ViZDoom §4.2 setting, K = 50)
+//!  - [`Pfsp`]             — Prioritized FSP: weight ∝ f(winrate), the
+//!                           AlphaStar f_hard weighting
+//!  - [`SpPfspMix`]        — 35% pure self-play + 65% PFSP (the Pommerman
+//!                           §4.3 / AlphaStar Main-Agent setting)
+//!  - [`EloMatch`]         — Gaussian Elo matchmaking (Quake-III PBT)
+//!  - [`AgentExploiter`]   — AlphaStar league roles: main agents mix
+//!                           SP+PFSP, exploiters target the main agent
+
+use super::payoff::PayoffMatrix;
+use crate::proto::ModelKey;
+use crate::util::rng::Pcg32;
+
+pub trait GameMgr: Send {
+    /// Sample `n_opponents` opponents for the learning agent `learner`.
+    fn sample_opponents(
+        &mut self,
+        learner: ModelKey,
+        n_opponents: usize,
+        pool: &[ModelKey],
+        payoff: &PayoffMatrix,
+        rng: &mut Pcg32,
+    ) -> Vec<ModelKey>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Always play the current model against itself.
+pub struct SelfPlay;
+
+impl GameMgr for SelfPlay {
+    fn sample_opponents(
+        &mut self,
+        learner: ModelKey,
+        n: usize,
+        _pool: &[ModelKey],
+        _payoff: &PayoffMatrix,
+        _rng: &mut Pcg32,
+    ) -> Vec<ModelKey> {
+        vec![learner; n]
+    }
+    fn name(&self) -> &'static str {
+        "selfplay"
+    }
+}
+
+/// Uniform over the most recent `k` frozen models.
+pub struct UniformRecent {
+    pub k: usize,
+}
+
+impl GameMgr for UniformRecent {
+    fn sample_opponents(
+        &mut self,
+        learner: ModelKey,
+        n: usize,
+        pool: &[ModelKey],
+        _payoff: &PayoffMatrix,
+        rng: &mut Pcg32,
+    ) -> Vec<ModelKey> {
+        if pool.is_empty() {
+            return vec![learner; n];
+        }
+        let start = pool.len().saturating_sub(self.k);
+        let recent = &pool[start..];
+        (0..n).map(|_| *rng.choose(recent)).collect()
+    }
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// PFSP weighting functions (AlphaStar supplementary).
+#[derive(Clone, Copy, Debug)]
+pub enum PfspWeight {
+    /// f_hard(p) = (1-p)^2 — focus on opponents we lose to
+    Hard,
+    /// f_var(p) = p(1-p) — focus on even matches
+    Var,
+    /// uniform
+    Flat,
+}
+
+impl PfspWeight {
+    pub fn weight(self, winrate: f64) -> f64 {
+        match self {
+            PfspWeight::Hard => (1.0 - winrate).powi(2),
+            PfspWeight::Var => winrate * (1.0 - winrate),
+            PfspWeight::Flat => 1.0,
+        }
+    }
+}
+
+/// Prioritized Fictitious Self-Play.
+pub struct Pfsp {
+    pub weighting: PfspWeight,
+}
+
+impl GameMgr for Pfsp {
+    fn sample_opponents(
+        &mut self,
+        learner: ModelKey,
+        n: usize,
+        pool: &[ModelKey],
+        payoff: &PayoffMatrix,
+        rng: &mut Pcg32,
+    ) -> Vec<ModelKey> {
+        if pool.is_empty() {
+            return vec![learner; n];
+        }
+        let weights: Vec<f64> = pool
+            .iter()
+            .map(|&op| self.weighting.weight(payoff.winrate(learner, op)) + 1e-3)
+            .collect();
+        (0..n).map(|_| pool[rng.weighted(&weights)]).collect()
+    }
+    fn name(&self) -> &'static str {
+        "pfsp"
+    }
+}
+
+/// p_sp self-play + (1 - p_sp) PFSP — the paper's Pommerman sampler
+/// ("35% pure self-play and 65% PFSP", §4.3).
+pub struct SpPfspMix {
+    pub p_sp: f64,
+    pub pfsp: Pfsp,
+}
+
+impl SpPfspMix {
+    pub fn paper() -> Self {
+        SpPfspMix { p_sp: 0.35, pfsp: Pfsp { weighting: PfspWeight::Hard } }
+    }
+}
+
+impl GameMgr for SpPfspMix {
+    fn sample_opponents(
+        &mut self,
+        learner: ModelKey,
+        n: usize,
+        pool: &[ModelKey],
+        payoff: &PayoffMatrix,
+        rng: &mut Pcg32,
+    ) -> Vec<ModelKey> {
+        (0..n)
+            .map(|_| {
+                if pool.is_empty() || rng.chance(self.p_sp) {
+                    learner
+                } else {
+                    self.pfsp
+                        .sample_opponents(learner, 1, pool, payoff, rng)[0]
+                }
+            })
+            .collect()
+    }
+    fn name(&self) -> &'static str {
+        "sp_pfsp"
+    }
+}
+
+/// Gaussian Elo matchmaking (Quake III / PBT): opponents whose Elo is
+/// within ~sigma of the learner are preferred.
+pub struct EloMatch {
+    pub sigma: f64,
+}
+
+impl GameMgr for EloMatch {
+    fn sample_opponents(
+        &mut self,
+        learner: ModelKey,
+        n: usize,
+        pool: &[ModelKey],
+        payoff: &PayoffMatrix,
+        rng: &mut Pcg32,
+    ) -> Vec<ModelKey> {
+        if pool.is_empty() {
+            return vec![learner; n];
+        }
+        let my_elo = payoff.elo(learner);
+        let weights: Vec<f64> = pool
+            .iter()
+            .map(|&op| {
+                let d = (payoff.elo(op) - my_elo) / self.sigma;
+                (-0.5 * d * d).exp() + 1e-6
+            })
+            .collect();
+        (0..n).map(|_| pool[rng.weighted(&weights)]).collect()
+    }
+    fn name(&self) -> &'static str {
+        "elo_match"
+    }
+}
+
+/// AlphaStar-style league roles.  Agent id 0 is the Main Agent
+/// (SP+PFSP); odd agent ids are Main Exploiters (always target the main
+/// agent's CURRENT model); other even ids are League Exploiters (PFSP
+/// over the whole pool).
+pub struct AgentExploiter {
+    main: SpPfspMix,
+    league: Pfsp,
+}
+
+impl Default for AgentExploiter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AgentExploiter {
+    pub fn new() -> Self {
+        AgentExploiter {
+            main: SpPfspMix::paper(),
+            league: Pfsp { weighting: PfspWeight::Hard },
+        }
+    }
+
+    pub fn role(agent: u32) -> &'static str {
+        if agent == 0 {
+            "main"
+        } else if agent % 2 == 1 {
+            "main_exploiter"
+        } else {
+            "league_exploiter"
+        }
+    }
+}
+
+impl GameMgr for AgentExploiter {
+    fn sample_opponents(
+        &mut self,
+        learner: ModelKey,
+        n: usize,
+        pool: &[ModelKey],
+        payoff: &PayoffMatrix,
+        rng: &mut Pcg32,
+    ) -> Vec<ModelKey> {
+        match Self::role(learner.agent) {
+            "main" => self.main.sample_opponents(learner, n, pool, payoff, rng),
+            "main_exploiter" => {
+                // latest model of agent 0 (current main), falling back to
+                // the most recent frozen main model
+                let main_latest = pool
+                    .iter()
+                    .rev()
+                    .find(|k| k.agent == 0)
+                    .copied()
+                    .unwrap_or(learner);
+                vec![main_latest; n]
+            }
+            _ => self.league.sample_opponents(learner, n, pool, payoff, rng),
+        }
+    }
+    fn name(&self) -> &'static str {
+        "agent_exploiter"
+    }
+}
+
+/// Build a sampler by config name.
+pub fn make_game_mgr(name: &str) -> anyhow::Result<Box<dyn GameMgr>> {
+    Ok(match name {
+        "selfplay" => Box::new(SelfPlay),
+        "uniform" => Box::new(UniformRecent { k: 50 }),
+        "pfsp" => Box::new(Pfsp { weighting: PfspWeight::Hard }),
+        "pfsp_var" => Box::new(Pfsp { weighting: PfspWeight::Var }),
+        "sp_pfsp" => Box::new(SpPfspMix::paper()),
+        "elo_match" => Box::new(EloMatch { sigma: 200.0 }),
+        "agent_exploiter" => Box::new(AgentExploiter::new()),
+        other => anyhow::bail!("unknown game_mgr '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn k(v: u32) -> ModelKey {
+        ModelKey::new(0, v)
+    }
+
+    #[test]
+    fn selfplay_returns_learner() {
+        let mut g = SelfPlay;
+        let mut rng = Pcg32::new(1, 1);
+        let pool = vec![k(1), k(2)];
+        let ops = g.sample_opponents(k(9), 3, &pool, &PayoffMatrix::new(), &mut rng);
+        assert_eq!(ops, vec![k(9); 3]);
+    }
+
+    #[test]
+    fn uniform_restricts_to_recent_k() {
+        let mut g = UniformRecent { k: 3 };
+        let mut rng = Pcg32::new(2, 1);
+        let pool: Vec<ModelKey> = (0..10).map(k).collect();
+        for _ in 0..200 {
+            let ops = g.sample_opponents(k(10), 1, &pool, &PayoffMatrix::new(), &mut rng);
+            assert!(ops[0].version >= 7, "sampled {:?}", ops[0]);
+        }
+    }
+
+    #[test]
+    fn pfsp_hard_prefers_hard_opponents() {
+        let mut payoff = PayoffMatrix::new();
+        // learner k(10) crushes k(1), loses to k(2)
+        for _ in 0..30 {
+            payoff.record(k(10), k(1), 1.0);
+            payoff.record(k(10), k(2), 0.0);
+        }
+        let mut g = Pfsp { weighting: PfspWeight::Hard };
+        let mut rng = Pcg32::new(3, 1);
+        let pool = vec![k(1), k(2)];
+        let mut hard = 0;
+        for _ in 0..300 {
+            if g.sample_opponents(k(10), 1, &pool, &payoff, &mut rng)[0] == k(2) {
+                hard += 1;
+            }
+        }
+        assert!(hard > 270, "hard opponent sampled only {hard}/300");
+    }
+
+    #[test]
+    fn mix_ratio_is_respected() {
+        let mut g = SpPfspMix::paper();
+        let mut rng = Pcg32::new(4, 1);
+        let pool = vec![k(1), k(2), k(3)];
+        let payoff = PayoffMatrix::new();
+        let mut sp = 0;
+        let n = 2000;
+        for _ in 0..n {
+            if g.sample_opponents(k(10), 1, &pool, &payoff, &mut rng)[0] == k(10) {
+                sp += 1;
+            }
+        }
+        let frac = sp as f64 / n as f64;
+        assert!((frac - 0.35).abs() < 0.05, "self-play fraction {frac}");
+    }
+
+    #[test]
+    fn elo_match_prefers_close_elo() {
+        let mut payoff = PayoffMatrix::new();
+        payoff.add_model(k(1));
+        payoff.add_model(k(2));
+        payoff.add_model(k(10));
+        // k(2) beats k(1) a lot: large Elo gap
+        for _ in 0..60 {
+            payoff.record(k(2), k(1), 1.0);
+        }
+        // learner plays k(2) evenly: learner Elo ≈ k(2)'s
+        for _ in 0..30 {
+            payoff.record(k(10), k(2), 1.0);
+            payoff.record(k(10), k(2), 0.0);
+        }
+        let mut g = EloMatch { sigma: 100.0 };
+        let mut rng = Pcg32::new(5, 1);
+        let pool = vec![k(1), k(2)];
+        let mut close = 0;
+        for _ in 0..300 {
+            if g.sample_opponents(k(10), 1, &pool, &payoff, &mut rng)[0] == k(2) {
+                close += 1;
+            }
+        }
+        assert!(close > 200, "close-Elo opponent sampled {close}/300");
+    }
+
+    #[test]
+    fn exploiter_targets_main() {
+        let mut g = AgentExploiter::new();
+        let mut rng = Pcg32::new(6, 1);
+        let pool = vec![
+            ModelKey::new(0, 1),
+            ModelKey::new(1, 1),
+            ModelKey::new(0, 2),
+        ];
+        let payoff = PayoffMatrix::new();
+        let ops = g.sample_opponents(ModelKey::new(1, 5), 2, &pool, &payoff, &mut rng);
+        assert_eq!(ops, vec![ModelKey::new(0, 2); 2], "exploiter must hit latest main");
+    }
+
+    #[test]
+    fn samplers_never_panic_on_any_pool() {
+        forall(100, "gamemgr-total", |rng| {
+            let pool: Vec<ModelKey> = (0..rng.below(8))
+                .map(|i| ModelKey::new(rng.below(3), i))
+                .collect();
+            let payoff = PayoffMatrix::new();
+            for name in ["selfplay", "uniform", "pfsp", "sp_pfsp", "elo_match",
+                         "agent_exploiter"] {
+                let mut g = make_game_mgr(name).unwrap();
+                let n = 1 + rng.below(7) as usize;
+                let ops = g.sample_opponents(
+                    ModelKey::new(0, 99), n, &pool, &payoff, rng);
+                crate::prop_assert!(ops.len() == n, "{name} wrong count");
+            }
+            Ok(())
+        });
+    }
+}

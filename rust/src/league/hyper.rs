@@ -1,0 +1,175 @@
+//! HyperMgr: per-model hyper-parameters + PBT perturbation (§3.2).
+//!
+//! Each model version carries its own hp vector (layout =
+//! manifest.hp_layout).  On freeze, the next version inherits the hp;
+//! with PBT enabled, underperforming agents copy the best agent's hp
+//! ("exploit") and jitter the continuous entries ("explore"), as in the
+//! Quake-III population-based training the paper cites.
+
+use crate::proto::ModelKey;
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+pub struct HyperMgr {
+    pub layout: Vec<String>,
+    hp: BTreeMap<ModelKey, Vec<f32>>,
+    default: Vec<f32>,
+    /// indices of entries PBT is allowed to perturb (e.g. lr, ent_coef)
+    pub perturbable: Vec<usize>,
+    pub pbt_enabled: bool,
+    rng: Pcg32,
+}
+
+impl HyperMgr {
+    pub fn new(layout: Vec<String>, default: Vec<f32>, seed: u64) -> Self {
+        assert_eq!(layout.len(), default.len());
+        let perturbable = layout
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| matches!(k.as_str(), "lr" | "ent_coef" | "lam"))
+            .map(|(i, _)| i)
+            .collect();
+        HyperMgr {
+            layout,
+            hp: BTreeMap::new(),
+            default,
+            perturbable,
+            pbt_enabled: false,
+            rng: Pcg32::from_label(seed, "hyper"),
+        }
+    }
+
+    pub fn get(&self, key: ModelKey) -> Vec<f32> {
+        self.hp.get(&key).cloned().unwrap_or_else(|| self.default.clone())
+    }
+
+    pub fn set(&mut self, key: ModelKey, hp: Vec<f32>) {
+        assert_eq!(hp.len(), self.layout.len());
+        self.hp.insert(key, hp);
+    }
+
+    pub fn override_named(&mut self, key: ModelKey, name: &str, value: f32) {
+        let mut hp = self.get(key);
+        if let Some(i) = self.layout.iter().position(|k| k == name) {
+            hp[i] = value;
+            self.set(key, hp);
+        }
+    }
+
+    /// New version inherits its predecessor's hp.
+    pub fn inherit(&mut self, from: ModelKey, to: ModelKey) {
+        let hp = self.get(from);
+        self.set(to, hp);
+    }
+
+    /// PBT step for `key`: if its score is in the bottom fraction of
+    /// `population` (scored by `score_of`), copy the best member's hp
+    /// and perturb (x0.8 / x1.2) the perturbable entries.
+    /// Returns true if the hp changed.
+    pub fn pbt_step<F: Fn(ModelKey) -> f64>(
+        &mut self,
+        key: ModelKey,
+        population: &[ModelKey],
+        score_of: F,
+    ) -> bool {
+        if !self.pbt_enabled || population.len() < 2 {
+            return false;
+        }
+        let my = score_of(key);
+        let best = population
+            .iter()
+            .copied()
+            .max_by(|a, b| score_of(*a).total_cmp(&score_of(*b)))
+            .unwrap();
+        let best_score = score_of(best);
+        // exploit if clearly dominated
+        if best == key || best_score - my < 0.1 {
+            return false;
+        }
+        let mut hp = self.get(best);
+        for &i in &self.perturbable {
+            let f = if self.rng.chance(0.5) { 0.8 } else { 1.2 };
+            hp[i] *= f;
+        }
+        self.set(key, hp);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> HyperMgr {
+        HyperMgr::new(
+            vec!["lr".into(), "clip_eps".into(), "ent_coef".into()],
+            vec![3e-4, 0.2, 0.01],
+            7,
+        )
+    }
+
+    fn k(a: u32, v: u32) -> ModelKey {
+        ModelKey::new(a, v)
+    }
+
+    #[test]
+    fn default_and_set() {
+        let mut m = mgr();
+        assert_eq!(m.get(k(0, 0)), vec![3e-4, 0.2, 0.01]);
+        m.set(k(0, 1), vec![1e-3, 0.1, 0.02]);
+        assert_eq!(m.get(k(0, 1))[0], 1e-3);
+    }
+
+    #[test]
+    fn inherit_copies() {
+        let mut m = mgr();
+        m.set(k(0, 3), vec![5e-4, 0.3, 0.05]);
+        m.inherit(k(0, 3), k(0, 4));
+        assert_eq!(m.get(k(0, 4)), vec![5e-4, 0.3, 0.05]);
+    }
+
+    #[test]
+    fn override_named_works() {
+        let mut m = mgr();
+        m.override_named(k(1, 0), "ent_coef", 0.5);
+        assert_eq!(m.get(k(1, 0))[2], 0.5);
+        assert_eq!(m.get(k(1, 0))[0], 3e-4, "others untouched");
+    }
+
+    #[test]
+    fn pbt_copies_winner_and_perturbs() {
+        let mut m = mgr();
+        m.pbt_enabled = true;
+        m.set(k(0, 0), vec![9e-4, 0.2, 0.03]);
+        m.set(k(1, 0), vec![1e-5, 0.2, 0.0]);
+        let pop = vec![k(0, 0), k(1, 0)];
+        let changed = m.pbt_step(k(1, 0), &pop, |key| {
+            if key.agent == 0 {
+                0.9
+            } else {
+                0.2
+            }
+        });
+        assert!(changed);
+        let hp = m.get(k(1, 0));
+        // lr copied from winner then x0.8 or x1.2
+        assert!(
+            (hp[0] - 9e-4 * 0.8).abs() < 1e-9 || (hp[0] - 9e-4 * 1.2).abs() < 1e-9,
+            "lr {}",
+            hp[0]
+        );
+        // clip_eps not perturbable: exact copy
+        assert_eq!(hp[1], 0.2);
+    }
+
+    #[test]
+    fn pbt_noop_for_winner_or_disabled() {
+        let mut m = mgr();
+        let pop = vec![k(0, 0), k(1, 0)];
+        assert!(!m.pbt_step(k(1, 0), &pop, |_| 0.5), "disabled: noop");
+        m.pbt_enabled = true;
+        assert!(!m.pbt_step(k(0, 0), &pop, |key| {
+            if key.agent == 0 { 0.9 } else { 0.1 }
+        }), "winner keeps its hp");
+    }
+}

@@ -1,0 +1,342 @@
+//! LeagueMgr: sponsors the training and coordinates the other modules
+//! (paper §3.2).  Owns the GameMgr (opponent sampling over the frozen
+//! pool + payoff matrix) and the HyperMgr (per-model hyper-parameters),
+//! issues tasks to Actors and Learners, ingests match outcomes, and
+//! freezes learner models into the opponent pool at period boundaries.
+
+pub mod game_mgr;
+pub mod hyper;
+pub mod payoff;
+
+use crate::proto::{MatchOutcome, ModelKey, Msg, TaskSpec};
+use crate::transport::{RepServer, ReqClient};
+use crate::util::metrics::Meter;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Result};
+use game_mgr::GameMgr;
+use hyper::HyperMgr;
+use payoff::PayoffMatrix;
+use std::sync::{Arc, Mutex};
+
+pub struct LeagueConfig {
+    /// number of parallel learning agents (M_G)
+    pub n_agents: u32,
+    /// opponents per episode (1 for 1v1 envs, 7 for doom_lite FFA, ...)
+    pub n_opponents: usize,
+    pub game_mgr: String,
+    pub hp_layout: Vec<String>,
+    pub hp_default: Vec<f32>,
+    pub seed: u64,
+}
+
+struct LeagueState {
+    pool: Vec<ModelKey>, // frozen models, freeze order
+    current: Vec<ModelKey>,
+    payoff: PayoffMatrix,
+    game_mgr: Box<dyn GameMgr>,
+    hyper: HyperMgr,
+    rng: Pcg32,
+    next_task: u64,
+    n_opponents: usize,
+    episodes: u64,
+    frames: u64,
+}
+
+/// Shared league statistics snapshot.
+#[derive(Clone, Debug)]
+pub struct LeagueStats {
+    pub pool_size: usize,
+    pub episodes: u64,
+    pub frames: u64,
+    pub total_matches: u64,
+    pub current: Vec<ModelKey>,
+}
+
+pub struct LeagueMgrServer {
+    pub addr: String,
+    state: Arc<Mutex<LeagueState>>,
+    pub task_meter: Meter,
+    _server: RepServer,
+}
+
+impl LeagueMgrServer {
+    pub fn start(bind: &str, cfg: LeagueConfig) -> Result<LeagueMgrServer> {
+        let mut state = LeagueState {
+            pool: Vec::new(),
+            current: (0..cfg.n_agents).map(|a| ModelKey::new(a, 1)).collect(),
+            payoff: PayoffMatrix::new(),
+            game_mgr: game_mgr::make_game_mgr(&cfg.game_mgr)?,
+            hyper: HyperMgr::new(cfg.hp_layout, cfg.hp_default, cfg.seed),
+            rng: Pcg32::from_label(cfg.seed, "league"),
+            next_task: 1,
+            n_opponents: cfg.n_opponents,
+            episodes: 0,
+            frames: 0,
+        };
+        // seed models (version 0) enter the pool immediately so FSP has
+        // a mixture to sample from ("initial size of the pool is one")
+        for a in 0..cfg.n_agents {
+            let seed_key = ModelKey::new(a, 0);
+            state.pool.push(seed_key);
+            state.payoff.add_model(seed_key);
+        }
+        let state = Arc::new(Mutex::new(state));
+        let s2 = state.clone();
+        let server = RepServer::serve(bind, move |msg| {
+            let mut st = s2.lock().unwrap();
+            match msg {
+                Msg::RequestActorTask { actor_id } => {
+                    // actor_id convention: "<agent>/<name>"
+                    let agent: u32 = actor_id
+                        .split('/')
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(0);
+                    let learner_key = st.current[agent as usize % st.current.len()];
+                    let pool: Vec<ModelKey> = st.pool.clone();
+                    let n = st.n_opponents;
+                    let task_id = st.next_task;
+                    st.next_task += 1;
+                    let LeagueState { game_mgr, payoff, rng, hyper, .. } = &mut *st;
+                    let opponents =
+                        game_mgr.sample_opponents(learner_key, n, &pool, payoff, rng);
+                    let hp = hyper.get(learner_key);
+                    Msg::Task(TaskSpec { task_id, learner_key, opponents, hp })
+                }
+                Msg::ReportOutcome(o) => {
+                    st.episodes += 1;
+                    st.frames += o.frames;
+                    for &op in &o.opponents {
+                        st.payoff.record(o.learner_key, op, o.outcome);
+                    }
+                    Msg::Ok
+                }
+                Msg::RequestLearnerTask { learner_id } => {
+                    let key = st.current[learner_id as usize % st.current.len()];
+                    let hp = st.hyper.get(key);
+                    Msg::Task(TaskSpec {
+                        task_id: 0,
+                        learner_key: key,
+                        opponents: vec![],
+                        hp,
+                    })
+                }
+                Msg::NotifyPeriodDone { key } => {
+                    // freeze `key` into the pool; advance the agent's version
+                    if !st.pool.contains(&key) {
+                        st.pool.push(key);
+                        st.payoff.add_model(key);
+                    }
+                    let next = ModelKey::new(key.agent, key.version + 1);
+                    st.hyper.inherit(key, next);
+                    // PBT across the learning agents (scored by pool winrate)
+                    let population: Vec<ModelKey> = st.current.clone();
+                    let scores: std::collections::BTreeMap<ModelKey, f64> =
+                        population
+                            .iter()
+                            .map(|&k| (k, st.payoff.pool_winrate(k)))
+                            .collect();
+                    st.hyper.pbt_step(next, &population, |k| {
+                        scores.get(&k).copied().unwrap_or(0.5)
+                    });
+                    if let Some(cur) =
+                        st.current.get_mut(key.agent as usize)
+                    {
+                        *cur = next;
+                    }
+                    Msg::Ok
+                }
+                Msg::Ping => Msg::Pong,
+                other => Msg::Err(format!("league: unexpected {other:?}")),
+            }
+        })?;
+        Ok(LeagueMgrServer {
+            addr: server.addr.clone(),
+            state,
+            task_meter: Meter::new(),
+            _server: server,
+        })
+    }
+
+    pub fn stats(&self) -> LeagueStats {
+        let st = self.state.lock().unwrap();
+        LeagueStats {
+            pool_size: st.pool.len(),
+            episodes: st.episodes,
+            frames: st.frames,
+            total_matches: st.payoff.total_games(),
+            current: st.current.clone(),
+        }
+    }
+
+    /// Read-only view of the payoff matrix (copied) for analysis/benches.
+    pub fn winrate(&self, row: ModelKey, col: ModelKey) -> f64 {
+        self.state.lock().unwrap().payoff.winrate(row, col)
+    }
+
+    pub fn elo(&self, key: ModelKey) -> f64 {
+        self.state.lock().unwrap().payoff.elo(key)
+    }
+
+    pub fn pool(&self) -> Vec<ModelKey> {
+        self.state.lock().unwrap().pool.clone()
+    }
+
+    pub fn enable_pbt(&self) {
+        self.state.lock().unwrap().hyper.pbt_enabled = true;
+    }
+}
+
+/// Typed client for the LeagueMgr service.
+pub struct LeagueClient {
+    req: ReqClient,
+}
+
+impl LeagueClient {
+    pub fn connect(addr: &str) -> LeagueClient {
+        LeagueClient { req: ReqClient::connect(addr) }
+    }
+
+    pub fn request_actor_task(&self, actor_id: &str) -> Result<TaskSpec> {
+        match self.req.request(&Msg::RequestActorTask {
+            actor_id: actor_id.to_string(),
+        })? {
+            Msg::Task(t) => Ok(t),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn report_outcome(&self, outcome: MatchOutcome) -> Result<()> {
+        match self.req.request(&Msg::ReportOutcome(outcome))? {
+            Msg::Ok => Ok(()),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn request_learner_task(&self, learner_id: u32) -> Result<TaskSpec> {
+        match self.req.request(&Msg::RequestLearnerTask { learner_id })? {
+            Msg::Task(t) => Ok(t),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn notify_period_done(&self, key: ModelKey) -> Result<()> {
+        match self.req.request(&Msg::NotifyPeriodDone { key })? {
+            Msg::Ok => Ok(()),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn league(game_mgr: &str) -> LeagueMgrServer {
+        LeagueMgrServer::start(
+            "127.0.0.1:0",
+            LeagueConfig {
+                n_agents: 1,
+                n_opponents: 1,
+                game_mgr: game_mgr.into(),
+                hp_layout: vec!["lr".into()],
+                hp_default: vec![3e-4],
+                seed: 1,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn task_cycle_and_freeze() {
+        let server = league("uniform");
+        let client = LeagueClient::connect(&server.addr);
+
+        let t = client.request_actor_task("0/a0").unwrap();
+        assert_eq!(t.learner_key, ModelKey::new(0, 1));
+        // only the seed model is frozen
+        assert_eq!(t.opponents, vec![ModelKey::new(0, 0)]);
+        assert_eq!(t.hp, vec![3e-4]);
+
+        client
+            .report_outcome(MatchOutcome {
+                task_id: t.task_id,
+                learner_key: t.learner_key,
+                opponents: t.opponents.clone(),
+                outcome: 1.0,
+                episode_len: 10,
+                frames: 10,
+            })
+            .unwrap();
+        let stats = server.stats();
+        assert_eq!(stats.episodes, 1);
+        assert_eq!(stats.frames, 10);
+
+        // learner finishes its period: model frozen, version bumped
+        client.notify_period_done(ModelKey::new(0, 1)).unwrap();
+        let t2 = client.request_learner_task(0).unwrap();
+        assert_eq!(t2.learner_key, ModelKey::new(0, 2));
+        assert_eq!(server.pool(), vec![ModelKey::new(0, 0), ModelKey::new(0, 1)]);
+    }
+
+    #[test]
+    fn freeze_is_idempotent() {
+        let server = league("uniform");
+        let client = LeagueClient::connect(&server.addr);
+        client.notify_period_done(ModelKey::new(0, 1)).unwrap();
+        client.notify_period_done(ModelKey::new(0, 1)).unwrap();
+        assert_eq!(server.pool().len(), 2, "no duplicate pool entries");
+    }
+
+    #[test]
+    fn outcomes_drive_winrate() {
+        let server = league("pfsp");
+        let client = LeagueClient::connect(&server.addr);
+        let me = ModelKey::new(0, 1);
+        let seed = ModelKey::new(0, 0);
+        for _ in 0..10 {
+            client
+                .report_outcome(MatchOutcome {
+                    task_id: 0,
+                    learner_key: me,
+                    opponents: vec![seed],
+                    outcome: 1.0,
+                    episode_len: 1,
+                    frames: 1,
+                })
+                .unwrap();
+        }
+        assert!(server.winrate(me, seed) > 0.9);
+        assert!(server.elo(me) > server.elo(seed));
+    }
+
+    #[test]
+    fn multi_agent_versions_are_independent() {
+        let server = LeagueMgrServer::start(
+            "127.0.0.1:0",
+            LeagueConfig {
+                n_agents: 3,
+                n_opponents: 2,
+                game_mgr: "agent_exploiter".into(),
+                hp_layout: vec!["lr".into()],
+                hp_default: vec![3e-4],
+                seed: 2,
+            },
+        )
+        .unwrap();
+        let client = LeagueClient::connect(&server.addr);
+        client.notify_period_done(ModelKey::new(1, 1)).unwrap();
+        assert_eq!(
+            client.request_learner_task(0).unwrap().learner_key,
+            ModelKey::new(0, 1)
+        );
+        assert_eq!(
+            client.request_learner_task(1).unwrap().learner_key,
+            ModelKey::new(1, 2)
+        );
+        // actor for agent 1 gets tasks for agent 1
+        let t = client.request_actor_task("1/x").unwrap();
+        assert_eq!(t.learner_key.agent, 1);
+        assert_eq!(t.opponents.len(), 2);
+    }
+}

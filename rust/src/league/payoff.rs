@@ -1,0 +1,147 @@
+//! Payoff matrix + Elo ratings over the model pool.
+//!
+//! The GameMgr (paper §3.2) "maintains a payoff matrix for all the
+//! models stored in the pool M".  Outcomes are 1 / 0.5 / 0 from the
+//! row player's perspective; win-rates use a weak uniform prior so
+//! fresh pairs aren't treated as certainly-even or certainly-lost.
+
+use crate::proto::ModelKey;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairStats {
+    pub games: u32,
+    /// sum of outcomes (win=1, tie=0.5) for the row player
+    pub score: f64,
+}
+
+#[derive(Default)]
+pub struct PayoffMatrix {
+    pairs: BTreeMap<(ModelKey, ModelKey), PairStats>,
+    elo: BTreeMap<ModelKey, f64>,
+    pub elo_k: f64,
+}
+
+pub const ELO_BASE: f64 = 1200.0;
+
+impl PayoffMatrix {
+    pub fn new() -> Self {
+        PayoffMatrix { pairs: BTreeMap::new(), elo: BTreeMap::new(), elo_k: 16.0 }
+    }
+
+    pub fn add_model(&mut self, key: ModelKey) {
+        self.elo.entry(key).or_insert(ELO_BASE);
+    }
+
+    pub fn models(&self) -> Vec<ModelKey> {
+        self.elo.keys().copied().collect()
+    }
+
+    /// Record `outcome` (row player's view) for row vs col.
+    pub fn record(&mut self, row: ModelKey, col: ModelKey, outcome: f32) {
+        let e = self.pairs.entry((row, col)).or_default();
+        e.games += 1;
+        e.score += outcome as f64;
+        // mirrored entry keeps lookups one-sided
+        let m = self.pairs.entry((col, row)).or_default();
+        m.games += 1;
+        m.score += 1.0 - outcome as f64;
+        // Elo update
+        let ra = *self.elo.entry(row).or_insert(ELO_BASE);
+        let rb = *self.elo.entry(col).or_insert(ELO_BASE);
+        let expect = 1.0 / (1.0 + 10f64.powf((rb - ra) / 400.0));
+        let delta = self.elo_k * (outcome as f64 - expect);
+        *self.elo.get_mut(&row).unwrap() += delta;
+        *self.elo.get_mut(&col).unwrap() -= delta;
+    }
+
+    pub fn stats(&self, row: ModelKey, col: ModelKey) -> PairStats {
+        self.pairs.get(&(row, col)).copied().unwrap_or_default()
+    }
+
+    /// Win-rate of `row` against `col` with a uniform(1 game, 0.5) prior.
+    pub fn winrate(&self, row: ModelKey, col: ModelKey) -> f64 {
+        let s = self.stats(row, col);
+        (s.score + 0.5) / (s.games as f64 + 1.0)
+    }
+
+    /// Aggregate win-rate of `key` against the whole pool.
+    pub fn pool_winrate(&self, key: ModelKey) -> f64 {
+        let mut score = 0.0;
+        let mut games = 0u32;
+        for (&(r, _c), s) in self.pairs.range((key, ModelKey::new(0, 0))..) {
+            if r != key {
+                break;
+            }
+            score += s.score;
+            games += s.games;
+        }
+        (score + 0.5) / (games as f64 + 1.0)
+    }
+
+    pub fn elo(&self, key: ModelKey) -> f64 {
+        self.elo.get(&key).copied().unwrap_or(ELO_BASE)
+    }
+
+    pub fn total_games(&self) -> u64 {
+        // each match recorded twice (mirror)
+        self.pairs.values().map(|s| s.games as u64).sum::<u64>() / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(v: u32) -> ModelKey {
+        ModelKey::new(0, v)
+    }
+
+    #[test]
+    fn record_mirrors() {
+        let mut p = PayoffMatrix::new();
+        p.record(k(1), k(2), 1.0);
+        p.record(k(1), k(2), 0.0);
+        p.record(k(1), k(2), 1.0);
+        let s = p.stats(k(1), k(2));
+        assert_eq!(s.games, 3);
+        assert_eq!(s.score, 2.0);
+        let m = p.stats(k(2), k(1));
+        assert_eq!(m.games, 3);
+        assert_eq!(m.score, 1.0);
+    }
+
+    #[test]
+    fn winrate_prior_pulls_to_half() {
+        let p = PayoffMatrix::new();
+        assert_eq!(p.winrate(k(1), k(2)), 0.5);
+        let mut p = PayoffMatrix::new();
+        p.record(k(1), k(2), 1.0);
+        let w = p.winrate(k(1), k(2));
+        assert!(w > 0.5 && w < 1.0, "{w}");
+    }
+
+    #[test]
+    fn elo_moves_toward_winner() {
+        let mut p = PayoffMatrix::new();
+        p.add_model(k(1));
+        p.add_model(k(2));
+        for _ in 0..20 {
+            p.record(k(1), k(2), 1.0);
+        }
+        assert!(p.elo(k(1)) > p.elo(k(2)) + 100.0);
+        // zero-sum: total Elo conserved
+        assert!((p.elo(k(1)) + p.elo(k(2)) - 2.0 * ELO_BASE).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_winrate_aggregates() {
+        let mut p = PayoffMatrix::new();
+        p.record(k(1), k(2), 1.0);
+        p.record(k(1), k(3), 1.0);
+        p.record(k(1), k(4), 0.0);
+        let w = p.pool_winrate(k(1));
+        assert!((w - (2.0 + 0.5) / 4.0).abs() < 1e-9, "{w}");
+        assert_eq!(p.total_games(), 3);
+    }
+}

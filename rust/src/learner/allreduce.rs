@@ -1,0 +1,149 @@
+//! Synchronous ring-style allreduce for the multi-learner path.
+//!
+//! Substitutes the paper's Horovod/NCCL allreduce (§3.2): M_L learners
+//! compute gradients on their own batches, average them, and apply the
+//! same Adam step — keeping the replicas bit-identical ("strictly
+//! synchronized", so only the rank-0 learner talks to the LeagueMgr).
+//!
+//! The implementation is a shared-memory reduce: participants deposit
+//! their vector, the last arrival computes the mean, everyone leaves
+//! with the result.  (A TCP ring is unnecessary at this repo's scale;
+//! the module boundary is the same as Horovod's `allreduce(tensor)`.)
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Slot {
+    sum: Vec<f32>,
+    arrived: usize,
+    generation: u64,
+    departed: usize,
+}
+
+pub struct Allreduce {
+    n: usize,
+    slot: Mutex<Slot>,
+    cv: Condvar,
+}
+
+impl Allreduce {
+    pub fn new(n_participants: usize) -> Arc<Allreduce> {
+        assert!(n_participants >= 1);
+        Arc::new(Allreduce {
+            n: n_participants,
+            slot: Mutex::new(Slot {
+                sum: Vec::new(),
+                arrived: 0,
+                generation: 0,
+                departed: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn participants(&self) -> usize {
+        self.n
+    }
+
+    /// Average `buf` across all participants (in place).  Blocks until
+    /// every participant of this generation has arrived.
+    pub fn reduce(&self, buf: &mut [f32]) {
+        if self.n == 1 {
+            return;
+        }
+        let mut slot = self.slot.lock().unwrap();
+        // wait for the previous generation to fully drain
+        while slot.departed != 0 {
+            slot = self.cv.wait(slot).unwrap();
+        }
+        if slot.arrived == 0 {
+            slot.sum.clear();
+            slot.sum.extend_from_slice(buf);
+        } else {
+            assert_eq!(slot.sum.len(), buf.len(), "allreduce size mismatch");
+            for (s, &x) in slot.sum.iter_mut().zip(buf.iter()) {
+                *s += x;
+            }
+        }
+        slot.arrived += 1;
+        let my_gen = slot.generation;
+        if slot.arrived == self.n {
+            let inv = 1.0 / self.n as f32;
+            for s in slot.sum.iter_mut() {
+                *s *= inv;
+            }
+            slot.generation += 1;
+            slot.departed = self.n;
+            self.cv.notify_all();
+        } else {
+            while slot.generation == my_gen {
+                slot = self.cv.wait(slot).unwrap();
+            }
+        }
+        buf.copy_from_slice(&slot.sum);
+        slot.arrived -= 1;
+        slot.departed -= 1;
+        if slot.departed == 0 {
+            slot.arrived = 0;
+            self.cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_participant_is_identity() {
+        let ar = Allreduce::new(1);
+        let mut v = vec![1.0, 2.0];
+        ar.reduce(&mut v);
+        assert_eq!(v, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn averages_across_participants() {
+        let ar = Allreduce::new(4);
+        let handles: Vec<_> = (0..4)
+            .map(|r| {
+                let ar = ar.clone();
+                std::thread::spawn(move || {
+                    let mut v = vec![r as f32; 8];
+                    ar.reduce(&mut v);
+                    v
+                })
+            })
+            .collect();
+        for h in handles {
+            let v = h.join().unwrap();
+            assert_eq!(v, vec![1.5; 8], "mean of 0..4");
+        }
+    }
+
+    #[test]
+    fn repeated_generations_stay_consistent() {
+        let ar = Allreduce::new(3);
+        let handles: Vec<_> = (0..3)
+            .map(|r| {
+                let ar = ar.clone();
+                std::thread::spawn(move || {
+                    let mut results = Vec::new();
+                    for round in 0..50u32 {
+                        let mut v = vec![(r as f32) + round as f32];
+                        ar.reduce(&mut v);
+                        results.push(v[0]);
+                    }
+                    results
+                })
+            })
+            .collect();
+        let all: Vec<Vec<f32>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for round in 0..50usize {
+            let want = 1.0 + round as f32; // mean(0,1,2) + round
+            for r in &all {
+                assert_eq!(r[round], want, "round {round}");
+            }
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Learner: consumes trajectories, runs the AOT train step, publishes
+//! parameters (paper §3.2).
+//!
+//! Each Learner embeds a DataServer (the PULL endpoint) and a ReplayMem.
+//! The train step itself is the AOT artifact (L2 JAX graph + L1 Pallas
+//! kernels) executed via the PJRT runtime — one call per mini-batch.
+//!
+//! Multi-learner (M_L > 1): every rank computes gradients on its own
+//! batch (`grad_*` artifact), the group allreduce-averages them, and
+//! every rank applies the same Adam update (`apply_adam_*` artifact),
+//! keeping replicas bit-identical.  Only rank 0 talks to the LeagueMgr
+//! and ModelPool (the paper's "rank-0 machine in MPI semantics").
+
+pub mod allreduce;
+pub mod replay;
+
+use crate::league::LeagueClient;
+use crate::model_pool::ModelPoolClient;
+use crate::proto::{ModelBlob, ModelKey, Msg};
+use crate::runtime::{Engine, Tensor};
+use crate::transport::PullServer;
+use crate::util::metrics::Meter;
+use allreduce::Allreduce;
+use anyhow::{Context, Result};
+use replay::{ReplayMem, ReplayMode};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct LearnerConfig {
+    pub env: String,
+    pub agent: u32,
+    pub rank: usize,
+    pub algo: String, // "ppo" | "vtrace"
+    pub replay_mode: ReplayMode,
+    /// train steps between ModelPool publications
+    pub publish_every: u64,
+    /// train steps per learning period (then the model is frozen)
+    pub period_steps: u64,
+    pub replay_cap: usize,
+    pub seed: u64,
+}
+
+impl Default for LearnerConfig {
+    fn default() -> Self {
+        LearnerConfig {
+            env: "rps".into(),
+            agent: 0,
+            rank: 0,
+            algo: "ppo".into(),
+            replay_mode: ReplayMode::Blocking,
+            publish_every: 4,
+            period_steps: 32,
+            replay_cap: 4096,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-step training statistics (stats vector of the train artifact).
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub loss: f32,
+    pub pol_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub grad_norm: f32,
+    pub steps: u64,
+}
+
+pub struct Learner {
+    pub cfg: LearnerConfig,
+    engine: Arc<Engine>,
+    pool: ModelPoolClient,
+    league: LeagueClient,
+    data: PullServer,
+    replay: ReplayMem,
+    group: Option<Arc<Allreduce>>,
+    // optimizer state (flat, host-side)
+    params: Vec<f32>,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    opt_step: Vec<f32>,
+    hp: Vec<f32>,
+    pub key: ModelKey,
+    pub steps: u64,
+    pub rfps: Meter,
+    pub cfps: Meter,
+    pub last_stats: TrainStats,
+}
+
+impl Learner {
+    pub fn new(
+        cfg: LearnerConfig,
+        engine: Arc<Engine>,
+        pool_addrs: &[String],
+        league_addr: &str,
+        group: Option<Arc<Allreduce>>,
+    ) -> Result<Learner> {
+        let data = PullServer::bind("127.0.0.1:0", 1024)?;
+        let pool = ModelPoolClient::connect(pool_addrs);
+        let league = LeagueClient::connect(league_addr);
+        let task = league.request_learner_task(cfg.agent)?;
+        let m = engine.manifest.env(&cfg.env)?;
+        let p = m.param_count;
+        // resume from the pool if possible, else fresh init
+        let params = match pool.get_latest(cfg.agent)? {
+            Some(blob) if blob.params.len() == p => blob.params,
+            _ => engine.init_params(&cfg.env)?,
+        };
+        let replay = ReplayMem::new(cfg.replay_mode, cfg.replay_cap, cfg.seed);
+        let mut learner = Learner {
+            engine,
+            pool,
+            league,
+            data,
+            replay,
+            group,
+            params,
+            adam_m: vec![0.0; p],
+            adam_v: vec![0.0; p],
+            opt_step: vec![0.0],
+            hp: task.hp.clone(),
+            key: task.learner_key,
+            steps: 0,
+            rfps: Meter::new(),
+            cfps: Meter::new(),
+            last_stats: TrainStats::default(),
+            cfg,
+        };
+        if learner.cfg.rank == 0 {
+            learner.publish_seed()?;
+            learner.publish(false)?;
+        }
+        Ok(learner)
+    }
+
+    /// Address actors push trajectories to.
+    pub fn data_addr(&self) -> String {
+        self.data.addr.clone()
+    }
+
+    /// Publish the version-0 seed model (random init or, in general,
+    /// imitation-learned weights) as a frozen pool member.
+    fn publish_seed(&self) -> Result<()> {
+        let seed_key = ModelKey::new(self.cfg.agent, 0);
+        let init = self.engine.init_params(&self.cfg.env)?;
+        self.pool.put(ModelBlob {
+            key: seed_key,
+            params: init,
+            hp: self.hp.clone(),
+            frozen: true,
+        })
+    }
+
+    fn publish(&self, frozen: bool) -> Result<()> {
+        self.pool.put(ModelBlob {
+            key: self.key,
+            params: self.params.clone(),
+            hp: self.hp.clone(),
+            frozen,
+        })
+    }
+
+    /// Drain the data port into the replay memory (non-blocking).
+    pub fn ingest(&mut self) {
+        while let Some(msg) = self.data.try_recv() {
+            if let Msg::Traj(seg) = msg {
+                self.rfps.add(seg.t as u64);
+                self.replay.push(seg);
+            }
+        }
+    }
+
+    fn artifact(&self, kind: &str) -> String {
+        match kind {
+            "train" => format!("train_{}_{}", self.cfg.algo, self.cfg.env),
+            "grad" => format!("grad_{}_{}", self.cfg.algo, self.cfg.env),
+            "apply" => format!("apply_adam_{}", self.cfg.env),
+            _ => unreachable!(),
+        }
+    }
+
+    fn parse_stats(&mut self, stats: &[f32]) {
+        self.last_stats = TrainStats {
+            loss: stats[0],
+            pol_loss: stats[1],
+            v_loss: stats[2],
+            entropy: stats[3],
+            approx_kl: stats[4],
+            grad_norm: *stats.get(8).unwrap_or(&0.0),
+            steps: self.steps,
+        };
+    }
+
+    /// One training step; Ok(false) if there wasn't enough data yet.
+    pub fn train_once(&mut self) -> Result<bool> {
+        self.ingest();
+        let m = self.engine.manifest.env(&self.cfg.env)?.clone();
+        let Some(segs) = self.replay.sample(m.train_b) else {
+            std::thread::sleep(Duration::from_millis(2));
+            return Ok(false);
+        };
+        let batch = replay::assemble(&segs, m.obs_dim)?;
+        let frames = batch.frames;
+        if self.group.is_none() || self.group.as_ref().unwrap().participants() == 1 {
+            // fused path: grads + Adam in one artifact call
+            let mut inputs = vec![
+                Tensor::F32(std::mem::take(&mut self.params)),
+                Tensor::F32(std::mem::take(&mut self.adam_m)),
+                Tensor::F32(std::mem::take(&mut self.adam_v)),
+                Tensor::F32(std::mem::take(&mut self.opt_step)),
+                Tensor::F32(self.hp.clone()),
+            ];
+            inputs.extend(batch.tensors());
+            let out = self
+                .engine
+                .run(&self.cfg.env, &self.artifact("train"), &inputs)?;
+            let mut it = out.into_iter();
+            self.params = it.next().context("params")?.into_f32()?;
+            self.adam_m = it.next().context("m")?.into_f32()?;
+            self.adam_v = it.next().context("v")?.into_f32()?;
+            self.opt_step = it.next().context("step")?.into_f32()?;
+            let stats = it.next().context("stats")?.into_f32()?;
+            self.parse_stats(&stats);
+        } else {
+            // split path: grad -> allreduce -> apply (Horovod design point)
+            let mut inputs = vec![
+                Tensor::F32(self.params.clone()),
+                Tensor::F32(self.hp.clone()),
+            ];
+            inputs.extend(batch.tensors());
+            let out = self
+                .engine
+                .run(&self.cfg.env, &self.artifact("grad"), &inputs)?;
+            let mut it = out.into_iter();
+            let mut grads = it.next().context("grads")?.into_f32()?;
+            let stats = it.next().context("stats")?.into_f32()?;
+            self.group.as_ref().unwrap().reduce(&mut grads);
+            let inputs = vec![
+                Tensor::F32(std::mem::take(&mut self.params)),
+                Tensor::F32(std::mem::take(&mut self.adam_m)),
+                Tensor::F32(std::mem::take(&mut self.adam_v)),
+                Tensor::F32(std::mem::take(&mut self.opt_step)),
+                Tensor::F32(self.hp.clone()),
+                Tensor::F32(grads),
+            ];
+            let out = self
+                .engine
+                .run(&self.cfg.env, &self.artifact("apply"), &inputs)?;
+            let mut it = out.into_iter();
+            self.params = it.next().context("params")?.into_f32()?;
+            self.adam_m = it.next().context("m")?.into_f32()?;
+            self.adam_v = it.next().context("v")?.into_f32()?;
+            self.opt_step = it.next().context("step")?.into_f32()?;
+            self.parse_stats(&stats);
+        }
+        self.steps += 1;
+        self.cfps.add(frames);
+
+        if self.cfg.rank == 0 && self.steps % self.cfg.publish_every == 0 {
+            self.publish(false)?;
+        }
+        if self.steps % self.cfg.period_steps == 0 {
+            self.end_period()?;
+        }
+        Ok(true)
+    }
+
+    /// Learning-period boundary: freeze the model into the pool, fetch
+    /// the next version + possibly-PBT-perturbed hyper-parameters.
+    fn end_period(&mut self) -> Result<()> {
+        if self.cfg.rank == 0 {
+            self.publish(true)?;
+            self.league.notify_period_done(self.key)?;
+        }
+        // group barrier so non-rank-0 learners see the bumped version
+        if let Some(g) = &self.group {
+            let mut token = vec![0.0f32];
+            g.reduce(&mut token);
+        }
+        let task = self.league.request_learner_task(self.cfg.agent)?;
+        self.key = task.learner_key;
+        self.hp = task.hp;
+        if self.cfg.rank == 0 {
+            self.publish(false)?; // make the new version visible to actors
+        }
+        Ok(())
+    }
+
+    /// Train until `target_steps` or `stop`; returns steps done.
+    pub fn run(&mut self, target_steps: u64, stop: &AtomicBool) -> Result<u64> {
+        let start = self.steps;
+        while self.steps - start < target_steps && !stop.load(Ordering::Relaxed) {
+            self.train_once()?;
+        }
+        Ok(self.steps - start)
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+    pub fn replay_len(&self) -> usize {
+        self.replay.len()
+    }
+    pub fn rfps_count(&self) -> u64 {
+        self.replay.received
+    }
+    pub fn cfps_count(&self) -> u64 {
+        self.replay.consumed
+    }
+}

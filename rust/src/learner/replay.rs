@@ -1,0 +1,291 @@
+//! ReplayMem: trajectory buffer + batch assembly (paper §3.2, §4.4).
+//!
+//! Two consumption modes matching the paper's rfps/cfps discussion:
+//!  - `Blocking`: FIFO, every segment learned ~once — cfps ≈ rfps, best
+//!    on-policyness (the "blocking queue" the paper mentions).
+//!  - `Ratio { max_reuse }`: segments may be re-sampled up to max_reuse
+//!    times while fresh data trickles in — cfps/rfps ≈ reuse factor.
+//!
+//! Batch assembly converts B equally-shaped segments into the flat
+//! time-major buffers the train artifact expects.
+
+use crate::proto::TrajSegment;
+use crate::runtime::Tensor;
+use crate::util::rng::Pcg32;
+use std::collections::VecDeque;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReplayMode {
+    Blocking,
+    Ratio { max_reuse: u32 },
+}
+
+pub struct ReplayMem {
+    mode: ReplayMode,
+    cap: usize,
+    segs: VecDeque<(TrajSegment, u32)>, // (segment, times consumed)
+    rng: Pcg32,
+    pub received: u64,
+    pub consumed: u64,
+}
+
+impl ReplayMem {
+    pub fn new(mode: ReplayMode, cap: usize, seed: u64) -> Self {
+        ReplayMem {
+            mode,
+            cap: cap.max(1),
+            segs: VecDeque::new(),
+            rng: Pcg32::from_label(seed, "replay"),
+            received: 0,
+            consumed: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.segs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.segs.is_empty()
+    }
+
+    pub fn push(&mut self, seg: TrajSegment) {
+        self.received += 1;
+        if self.segs.len() >= self.cap {
+            self.segs.pop_front(); // drop oldest under backpressure
+        }
+        self.segs.push_back((seg, 0));
+    }
+
+    /// Try to take `n` segments for a batch; None if not enough data.
+    pub fn sample(&mut self, n: usize) -> Option<Vec<TrajSegment>> {
+        match self.mode {
+            ReplayMode::Blocking => {
+                if self.segs.len() < n {
+                    return None;
+                }
+                self.consumed += n as u64;
+                Some(
+                    (0..n)
+                        .map(|_| self.segs.pop_front().unwrap().0)
+                        .collect(),
+                )
+            }
+            ReplayMode::Ratio { max_reuse } => {
+                if self.segs.is_empty() {
+                    return None;
+                }
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    if self.segs.is_empty() {
+                        return if out.is_empty() { None } else { Some(out) };
+                    }
+                    let i = self.rng.below(self.segs.len() as u32) as usize;
+                    let (seg, used) = &mut self.segs[i];
+                    out.push(seg.clone());
+                    *used += 1;
+                    if *used >= max_reuse {
+                        self.segs.remove(i);
+                    }
+                }
+                self.consumed += out.len() as u64;
+                Some(out)
+            }
+        }
+    }
+}
+
+/// Flat time-major training batch (artifact input order).
+pub struct Batch {
+    pub obs: Vec<f32>,           // (T+1) * B * n_agents * D
+    pub actions: Vec<i32>,       // T * B * n_agents
+    pub behavior_logp: Vec<f32>, // T * B * n_agents
+    pub rewards: Vec<f32>,       // T * B
+    pub discounts: Vec<f32>,     // T * B
+    pub t: usize,
+    pub b: usize,
+    pub n_agents: usize,
+    pub frames: u64,
+}
+
+impl Batch {
+    pub fn tensors(&self) -> Vec<Tensor> {
+        vec![
+            Tensor::F32(self.obs.clone()),
+            Tensor::I32(self.actions.clone()),
+            Tensor::F32(self.behavior_logp.clone()),
+            Tensor::F32(self.rewards.clone()),
+            Tensor::F32(self.discounts.clone()),
+        ]
+    }
+}
+
+/// Interleave B segments (each time-major) into one time-major batch:
+/// out[t][b] = seg_b[t].  All segments must agree on (t, n_agents) and
+/// per-step sizes.
+pub fn assemble(segs: &[TrajSegment], obs_dim: usize) -> anyhow::Result<Batch> {
+    anyhow::ensure!(!segs.is_empty(), "empty batch");
+    let t = segs[0].t as usize;
+    let na = segs[0].n_agents as usize;
+    let b = segs.len();
+    for s in segs {
+        anyhow::ensure!(
+            s.t as usize == t && s.n_agents as usize == na,
+            "heterogeneous segments in batch"
+        );
+        anyhow::ensure!(
+            s.obs.len() == (t + 1) * na * obs_dim,
+            "segment obs len {} != {}",
+            s.obs.len(),
+            (t + 1) * na * obs_dim
+        );
+    }
+    let row = na * obs_dim;
+    let mut obs = vec![0.0f32; (t + 1) * b * row];
+    let mut actions = vec![0i32; t * b * na];
+    let mut behavior_logp = vec![0.0f32; t * b * na];
+    let mut rewards = vec![0.0f32; t * b];
+    let mut discounts = vec![0.0f32; t * b];
+    for (bi, s) in segs.iter().enumerate() {
+        for ti in 0..=t {
+            let dst = (ti * b + bi) * row;
+            let src = ti * row;
+            obs[dst..dst + row].copy_from_slice(&s.obs[src..src + row]);
+        }
+        for ti in 0..t {
+            let dst = (ti * b + bi) * na;
+            let src = ti * na;
+            actions[dst..dst + na].copy_from_slice(&s.actions[src..src + na]);
+            behavior_logp[dst..dst + na]
+                .copy_from_slice(&s.behavior_logp[src..src + na]);
+            rewards[ti * b + bi] = s.rewards[ti];
+            discounts[ti * b + bi] = s.discounts[ti];
+        }
+    }
+    Ok(Batch {
+        obs,
+        actions,
+        behavior_logp,
+        rewards,
+        discounts,
+        t,
+        b,
+        n_agents: na,
+        frames: (t * b) as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::ModelKey;
+
+    fn seg(t: usize, na: usize, d: usize, fill: f32) -> TrajSegment {
+        TrajSegment {
+            model_key: ModelKey::new(0, 1),
+            t: t as u32,
+            n_agents: na as u32,
+            obs: (0..(t + 1) * na * d).map(|i| fill + i as f32).collect(),
+            actions: (0..t * na).map(|i| i as i32).collect(),
+            behavior_logp: vec![-1.0; t * na],
+            rewards: (0..t).map(|i| fill * i as f32).collect(),
+            discounts: vec![0.99; t],
+        }
+    }
+
+    #[test]
+    fn blocking_is_fifo_exactly_once() {
+        let mut r = ReplayMem::new(ReplayMode::Blocking, 100, 0);
+        assert!(r.sample(1).is_none());
+        r.push(seg(2, 1, 3, 1.0));
+        r.push(seg(2, 1, 3, 2.0));
+        assert!(r.sample(3).is_none(), "insufficient data blocks");
+        let got = r.sample(2).unwrap();
+        assert_eq!(got[0].rewards[1], 1.0);
+        assert_eq!(got[1].rewards[1], 2.0);
+        assert!(r.is_empty());
+        assert_eq!(r.received, 2);
+        assert_eq!(r.consumed, 2);
+    }
+
+    #[test]
+    fn ratio_reuses_then_evicts() {
+        let mut r = ReplayMem::new(ReplayMode::Ratio { max_reuse: 3 }, 100, 1);
+        r.push(seg(2, 1, 3, 1.0));
+        let mut total = 0;
+        while r.sample(1).is_some() {
+            total += 1;
+            assert!(total <= 3, "reuse cap exceeded");
+        }
+        assert_eq!(total, 3);
+        assert_eq!(r.consumed, 3);
+    }
+
+    #[test]
+    fn capacity_drops_oldest() {
+        let mut r = ReplayMem::new(ReplayMode::Blocking, 2, 2);
+        r.push(seg(1, 1, 2, 1.0));
+        r.push(seg(1, 1, 2, 2.0));
+        r.push(seg(1, 1, 2, 3.0));
+        assert_eq!(r.len(), 2);
+        let got = r.sample(2).unwrap();
+        assert_eq!(got[0].obs[0], 2.0, "oldest dropped");
+    }
+
+    #[test]
+    fn assemble_interleaves_time_major() {
+        let d = 3;
+        let segs = vec![seg(2, 1, d, 100.0), seg(2, 1, d, 200.0)];
+        let batch = assemble(&segs, d).unwrap();
+        assert_eq!(batch.t, 2);
+        assert_eq!(batch.b, 2);
+        // obs[t=0][b=0] == seg0.obs[0..3], obs[t=0][b=1] == seg1.obs[0..3]
+        assert_eq!(&batch.obs[0..3], &[100.0, 101.0, 102.0]);
+        assert_eq!(&batch.obs[3..6], &[200.0, 201.0, 202.0]);
+        // obs[t=1][b=0] == seg0.obs[3..6]
+        assert_eq!(&batch.obs[6..9], &[103.0, 104.0, 105.0]);
+        // rewards [t=1][b=1] = 200*1
+        assert_eq!(batch.rewards[1 * 2 + 1], 200.0);
+        assert_eq!(batch.frames, 4);
+    }
+
+    #[test]
+    fn assemble_team_layout() {
+        let d = 2;
+        let segs = vec![seg(1, 2, d, 0.0)];
+        let batch = assemble(&segs, d).unwrap();
+        assert_eq!(batch.n_agents, 2);
+        assert_eq!(batch.obs.len(), 2 * 1 * 2 * 2);
+        assert_eq!(batch.actions.len(), 2);
+    }
+
+    #[test]
+    fn assemble_rejects_mismatched() {
+        let segs = vec![seg(2, 1, 3, 0.0), seg(3, 1, 3, 0.0)];
+        assert!(assemble(&segs, 3).is_err());
+        let segs = vec![seg(2, 1, 4, 0.0)];
+        assert!(assemble(&segs, 3).is_err());
+    }
+
+    #[test]
+    fn fuzz_assemble_roundtrip() {
+        crate::util::proptest::forall(50, "assemble-roundtrip", |rng| {
+            let t = 1 + rng.below(8) as usize;
+            let na = 1 + rng.below(2) as usize;
+            let d = 1 + rng.below(6) as usize;
+            let b = 1 + rng.below(5) as usize;
+            let segs: Vec<TrajSegment> =
+                (0..b).map(|i| seg(t, na, d, i as f32 * 1000.0)).collect();
+            let batch = assemble(&segs, d).map_err(|e| e.to_string())?;
+            // spot-check: every segment's step-0 obs appears at [0][bi]
+            for (bi, s) in segs.iter().enumerate() {
+                let row = na * d;
+                let dst = bi * row;
+                crate::prop_assert!(
+                    batch.obs[dst..dst + row] == s.obs[0..row],
+                    "b={bi} t=0 mismatch"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! # TLeague — Competitive Self-Play Distributed MARL (reproduction)
+//!
+//! Rust coordinator (L3) for the TLeague framework (Sun et al., 2020):
+//! LeagueMgr / GameMgr / HyperMgr / ModelPool / Actor / Learner /
+//! InfServer, plus the environments and orchestration substrate.  Neural
+//! compute (L2 JAX model + L1 Pallas kernels) is AOT-compiled to HLO
+//! text by `make artifacts` and executed through [`runtime::Engine`]
+//! (PJRT); Python is never on the training path.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod actor;
+pub mod config;
+pub mod envs;
+pub mod eval;
+pub mod inference;
+pub mod league;
+pub mod learner;
+pub mod model_pool;
+pub mod orchestrator;
+pub mod proto;
+pub mod runtime;
+pub mod transport;
+pub mod util;

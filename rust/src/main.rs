@@ -1,0 +1,216 @@
+//! tleague CLI: launch a league run, individual services, or evals.
+//!
+//! Subcommands:
+//!   run        --config <spec.json> [--artifacts DIR]   full league (kube-lite)
+//!   eval-doom  --checkpoint <f32 file> --setting 1|2a|2b|2c --games N
+//!   eval-rps   --artifacts DIR                           exploitability demo
+//!   league-mgr / model-pool                              standalone services
+//!   info       --artifacts DIR                           manifest summary
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::Duration;
+use tleague::config::RunConfig;
+use tleague::orchestrator::Deployment;
+use tleague::runtime::Engine;
+use tleague::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn engine(args: &Args) -> Result<Arc<Engine>> {
+    let dir = args.str_or("artifacts", "artifacts");
+    Ok(Arc::new(Engine::load(dir)?))
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("info") => cmd_info(&args),
+        Some("eval-doom") => cmd_eval_doom(&args),
+        Some("eval-rps") => cmd_eval_rps(&args),
+        Some("model-pool") => {
+            let s = tleague::model_pool::ModelPoolServer::start(
+                &args.str_or("bind", "127.0.0.1:9001"),
+            )?;
+            println!("model-pool listening on {}", s.addr);
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        Some("league-mgr") => {
+            let eng = engine(&args)?;
+            let s = tleague::league::LeagueMgrServer::start(
+                &args.str_or("bind", "127.0.0.1:9003"),
+                tleague::league::LeagueConfig {
+                    n_agents: args.usize_or("n-agents", 1) as u32,
+                    n_opponents: args.usize_or("n-opponents", 1),
+                    game_mgr: args.str_or("game-mgr", "uniform"),
+                    hp_layout: eng.manifest.hp_layout.clone(),
+                    hp_default: eng.manifest.default_hp(),
+                    seed: args.u64_or("seed", 0),
+                },
+            )?;
+            println!("league-mgr listening on {}", s.addr);
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'"),
+        None => {
+            println!(
+                "tleague — competitive self-play distributed MARL\n\
+                 usage: tleague <run|info|eval-doom|eval-rps|model-pool|league-mgr> [flags]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => {
+            let mut cfg = RunConfig::default();
+            cfg.env = args.str_or("env", "rps");
+            cfg.total_steps = args.u64_or("total-steps", 100);
+            cfg.period_steps = args.u64_or("period-steps", 25);
+            cfg.actors_per_learner = args.usize_or("actors", 2);
+            cfg.game_mgr = args.str_or("game-mgr", "uniform");
+            cfg
+        }
+    };
+    let eng = engine(args)?;
+    println!(
+        "launching league: env={} M_G={} M_L={} M_A={} sampler={}",
+        cfg.env, cfg.n_agents, cfg.learners_per_agent, cfg.actors_per_learner,
+        cfg.game_mgr
+    );
+    let mut dep = Deployment::start(cfg, eng)?;
+    let mut last = 0;
+    while !dep.learners_done() {
+        std::thread::sleep(Duration::from_secs(2));
+        let steps = dep.total_learner_steps();
+        let stats = dep.league_stats();
+        let s0 = &dep.learner_status[0];
+        let ts = s0.stats.lock().unwrap().clone();
+        println!(
+            "steps={steps} (+{}) pool={} episodes={} frames={} loss={:.4} ent={:.3}",
+            steps - last, stats.pool_size, stats.episodes, stats.frames,
+            ts.loss, ts.entropy
+        );
+        last = steps;
+    }
+    let stats = dep.league_stats();
+    println!(
+        "done: pool={} episodes={} frames={} actor restarts={}",
+        stats.pool_size,
+        stats.episodes,
+        stats.frames,
+        dep.restarts.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    dep.shutdown();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    println!("hp layout: {:?}", eng.manifest.hp_layout);
+    for (name, m) in &eng.manifest.envs {
+        println!(
+            "env {name}: obs={} act={} hidden={:?} team={} P={} T={} B={} artifacts={}",
+            m.obs_dim, m.act_dim, m.hidden, m.team, m.param_count, m.train_t,
+            m.train_b, m.artifacts.len()
+        );
+    }
+    Ok(())
+}
+
+fn load_checkpoint(path: &str, expected: usize) -> Result<Vec<f32>> {
+    let raw = std::fs::read(path).with_context(|| format!("read {path}"))?;
+    anyhow::ensure!(
+        raw.len() == expected * 4,
+        "checkpoint has {} bytes, want {}",
+        raw.len(),
+        expected * 4
+    );
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Tables 1 & 2: FRAG matches in doom_lite.
+fn cmd_eval_doom(args: &Args) -> Result<()> {
+    use tleague::envs::doom_lite::bots::{BuiltinBot, DoomPolicy, F1Bot};
+    use tleague::eval::{doom_match, NnPolicy};
+    let eng = engine(args)?;
+    let m = eng.manifest.env("doom_lite")?.clone();
+    let params = match args.get("checkpoint") {
+        Some(p) => load_checkpoint(p, m.param_count)?,
+        None => eng.init_params("doom_lite")?,
+    };
+    let games = args.u64_or("games", 5);
+    let setting = args.str_or("setting", "1");
+    // (n_my, n_f1, n_bots) per Table 1 / Table 2 rows
+    let (n_my, n_f1, n_bots) = match setting.as_str() {
+        "1" => (1, 0, 7),
+        "2a" => (1, 1, 6),
+        "2b" => (2, 2, 4),
+        "2c" => (4, 4, 0),
+        s => anyhow::bail!("setting must be 1|2a|2b|2c, got {s}"),
+    };
+    println!("setting {setting}: {n_my} MyPlayer + {n_f1} F1 + {n_bots} bots, {games} matches");
+    let mut my_best = Vec::new();
+    let mut f1_best = Vec::new();
+    for g in 0..games {
+        let mut nn: Vec<NnPolicy> = (0..n_my)
+            .map(|i| NnPolicy::new(eng.clone(), "doom_lite", params.clone(), g * 10 + i))
+            .collect();
+        let mut bots: Vec<Box<dyn DoomPolicy>> = Vec::new();
+        for i in 0..n_f1 {
+            bots.push(Box::new(F1Bot::new(g * 20 + i)));
+        }
+        for i in 0..n_bots {
+            bots.push(Box::new(BuiltinBot::new(g * 30 + i)));
+        }
+        let frags = doom_match(g, &mut nn, &mut bots)?;
+        let my = frags[..n_my as usize].iter().max().copied().unwrap_or(0);
+        my_best.push(my);
+        if n_f1 > 0 {
+            let f1 = frags[n_my as usize..(n_my + n_f1) as usize]
+                .iter()
+                .max()
+                .copied()
+                .unwrap();
+            f1_best.push(f1);
+        }
+        println!("  match {}: frags {:?}", g + 1, frags);
+    }
+    let avg = |v: &[i32]| v.iter().sum::<i32>() as f64 / v.len().max(1) as f64;
+    println!("MyPlayer best-FRAG per match: {my_best:?}  avg {:.1}", avg(&my_best));
+    if !f1_best.is_empty() {
+        println!("F1       best-FRAG per match: {f1_best:?}  avg {:.1}", avg(&f1_best));
+    }
+    Ok(())
+}
+
+/// Experiment V1: league-trained RPS pool exploitability.
+fn cmd_eval_rps(args: &Args) -> Result<()> {
+    use tleague::envs::matrix::MatrixGame;
+    use tleague::eval::{rps_pool_exploitability, rps_strategy, NnPolicy};
+    let eng = engine(args)?;
+    let params = eng.init_params("rps")?;
+    let mut nn = NnPolicy::new(eng, "rps", params, 0);
+    let s = rps_strategy(&mut nn)?;
+    let game = MatrixGame::rps(0);
+    println!("seed policy strategy: {s:?}");
+    println!("exploitability: {:.4}", rps_pool_exploitability(&game, &[s]));
+    println!("(run examples/rps_league for the full FSP-vs-selfplay curve)");
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! ModelPool: versioned in-memory parameter store (paper §3.2).
+//!
+//! "During the whole training lifecycle, ModelPool must respond to any
+//! parameter requesting (read) or updating (write) instantaneously" —
+//! parameters are kept in memory; up to M_M replicas run simultaneously
+//! and clients pick a random replica per read (load balancing), writing
+//! through to all replicas.
+
+use crate::proto::{ModelBlob, ModelKey, Msg};
+use crate::transport::{RepServer, ReqClient};
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Default)]
+struct Store {
+    blobs: BTreeMap<ModelKey, ModelBlob>,
+    latest: BTreeMap<u32, ModelKey>, // per-agent newest version
+}
+
+/// One ModelPool replica: a REQ/REP service over the in-memory store.
+pub struct ModelPoolServer {
+    pub addr: String,
+    store: Arc<Mutex<Store>>,
+    _server: RepServer,
+}
+
+impl ModelPoolServer {
+    pub fn start(bind: &str) -> Result<ModelPoolServer> {
+        let store = Arc::new(Mutex::new(Store::default()));
+        let s2 = store.clone();
+        let server = RepServer::serve(bind, move |msg| match msg {
+            Msg::PutModel(blob) => {
+                let mut st = s2.lock().unwrap();
+                let newer = st
+                    .latest
+                    .get(&blob.key.agent)
+                    .map_or(true, |cur| blob.key.version >= cur.version);
+                if newer {
+                    st.latest.insert(blob.key.agent, blob.key);
+                }
+                st.blobs.insert(blob.key, blob);
+                Msg::Ok
+            }
+            Msg::GetModel { key } => {
+                let st = s2.lock().unwrap();
+                match st.blobs.get(&key) {
+                    Some(b) => Msg::Model(b.clone()),
+                    None => Msg::NotFound,
+                }
+            }
+            Msg::GetLatest { agent } => {
+                let st = s2.lock().unwrap();
+                match st.latest.get(&agent).and_then(|k| st.blobs.get(k)) {
+                    Some(b) => Msg::Model(b.clone()),
+                    None => Msg::NotFound,
+                }
+            }
+            Msg::Ping => Msg::Pong,
+            other => Msg::Err(format!("model_pool: unexpected {other:?}")),
+        })?;
+        Ok(ModelPoolServer { addr: server.addr.clone(), store, _server: server })
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.store.lock().unwrap().blobs.len()
+    }
+}
+
+/// Client over one or more ModelPool replicas: writes go to every
+/// replica, reads go to a random one.
+pub struct ModelPoolClient {
+    replicas: Vec<ReqClient>,
+    rng: Mutex<Pcg32>,
+}
+
+impl ModelPoolClient {
+    pub fn connect(addrs: &[String]) -> ModelPoolClient {
+        assert!(!addrs.is_empty());
+        ModelPoolClient {
+            replicas: addrs.iter().map(|a| ReqClient::connect(a)).collect(),
+            rng: Mutex::new(Pcg32::from_label(0x6d70, "mp-client")),
+        }
+    }
+
+    fn pick(&self) -> &ReqClient {
+        let i = self.rng.lock().unwrap().below(self.replicas.len() as u32);
+        &self.replicas[i as usize]
+    }
+
+    pub fn put(&self, blob: ModelBlob) -> Result<()> {
+        for r in &self.replicas {
+            match r.request(&Msg::PutModel(blob.clone()))? {
+                Msg::Ok => {}
+                other => bail!("put: unexpected reply {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: ModelKey) -> Result<Option<ModelBlob>> {
+        match self.pick().request(&Msg::GetModel { key })? {
+            Msg::Model(b) => Ok(Some(b)),
+            Msg::NotFound => Ok(None),
+            other => bail!("get: unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn get_latest(&self, agent: u32) -> Result<Option<ModelBlob>> {
+        match self.pick().request(&Msg::GetLatest { agent })? {
+            Msg::Model(b) => Ok(Some(b)),
+            Msg::NotFound => Ok(None),
+            other => bail!("get_latest: unexpected reply {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(agent: u32, version: u32, val: f32) -> ModelBlob {
+        ModelBlob {
+            key: ModelKey::new(agent, version),
+            params: vec![val; 8],
+            hp: vec![3e-4],
+            frozen: false,
+        }
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let server = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        client.put(blob(0, 1, 1.5)).unwrap();
+        let got = client.get(ModelKey::new(0, 1)).unwrap().unwrap();
+        assert_eq!(got.params, vec![1.5; 8]);
+        assert!(client.get(ModelKey::new(0, 9)).unwrap().is_none());
+        assert_eq!(server.model_count(), 1);
+    }
+
+    #[test]
+    fn latest_tracks_highest_version() {
+        let server = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        client.put(blob(0, 1, 1.0)).unwrap();
+        client.put(blob(0, 3, 3.0)).unwrap();
+        client.put(blob(0, 2, 2.0)).unwrap(); // stale write must not win
+        let latest = client.get_latest(0).unwrap().unwrap();
+        assert_eq!(latest.key.version, 3);
+        assert!(client.get_latest(7).unwrap().is_none());
+    }
+
+    #[test]
+    fn replicated_writes_readable_from_any() {
+        let s1 = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let s2 = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let client = ModelPoolClient::connect(&[s1.addr.clone(), s2.addr.clone()]);
+        client.put(blob(1, 4, 4.0)).unwrap();
+        // both replicas hold the model, so any single-replica client sees it
+        for addr in [&s1.addr, &s2.addr] {
+            let c = ModelPoolClient::connect(&[addr.clone()]);
+            assert!(c.get(ModelKey::new(1, 4)).unwrap().is_some());
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_and_writers() {
+        let server = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr.clone();
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = ModelPoolClient::connect(&[addr]);
+                for v in 0..20 {
+                    c.put(blob(t, v, v as f32)).unwrap();
+                    let got = c.get(ModelKey::new(t, v)).unwrap().unwrap();
+                    assert_eq!(got.params[0], v as f32);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.model_count(), 80);
+    }
+}

@@ -1,0 +1,354 @@
+//! kube-lite: spec-driven deployment supervisor (paper §3.4 substitute).
+//!
+//! Takes a [`RunConfig`] and launches the whole league as supervised
+//! threads: M_M ModelPool replicas, the LeagueMgr, M_G x M_L Learners
+//! (with a per-agent allreduce group), optional InfServers, and
+//! M_G x M_L x M_A Actors.  Actors get k8s-Deployment semantics: they
+//! auto-restart on panic/error, and can be scaled up/down at runtime.
+
+use crate::actor::{Actor, ActorConfig, PolicyBackend};
+use crate::config::RunConfig;
+use crate::inference::{InfServer, InfServerConfig};
+use crate::league::{LeagueConfig, LeagueMgrServer, LeagueStats};
+use crate::learner::allreduce::Allreduce;
+use crate::learner::{Learner, LearnerConfig, TrainStats};
+use crate::model_pool::ModelPoolServer;
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Live status shared by a learner thread.
+#[derive(Default)]
+pub struct LearnerStatus {
+    pub steps: AtomicU64,
+    pub rfps_frames: AtomicU64,
+    pub cfps_frames: AtomicU64,
+    pub stats: Mutex<TrainStats>,
+    pub done: AtomicBool,
+}
+
+pub struct Deployment {
+    pub cfg: RunConfig,
+    pub engine: Arc<Engine>,
+    pub league: LeagueMgrServer,
+    pub pools: Vec<ModelPoolServer>,
+    pub pool_addrs: Vec<String>,
+    pub inf_addrs: Vec<String>,
+    inf_servers: Vec<InfServer>,
+    pub learner_status: Vec<Arc<LearnerStatus>>,
+    learner_handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    data_addrs: Vec<String>,
+    actor_stop: Arc<AtomicBool>,
+    actor_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    pub restarts: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    next_actor_id: AtomicU64,
+}
+
+impl Deployment {
+    /// Launch everything declared by `cfg`.  Returns once all services
+    /// are up and actors are running.
+    pub fn start(cfg: RunConfig, engine: Arc<Engine>) -> Result<Deployment> {
+        cfg.validate()?;
+        let pools: Vec<ModelPoolServer> = (0..cfg.model_pools)
+            .map(|_| ModelPoolServer::start("127.0.0.1:0"))
+            .collect::<Result<_>>()?;
+        let pool_addrs: Vec<String> = pools.iter().map(|p| p.addr.clone()).collect();
+
+        let league = LeagueMgrServer::start(
+            "127.0.0.1:0",
+            LeagueConfig {
+                n_agents: cfg.n_agents,
+                n_opponents: cfg.effective_opponents(),
+                game_mgr: cfg.game_mgr.clone(),
+                hp_layout: engine.manifest.hp_layout.clone(),
+                hp_default: {
+                    let mut hp = engine.manifest.default_hp();
+                    for (k, v) in &cfg.hp_overrides {
+                        if let Some(i) = engine.manifest.hp_index(k) {
+                            hp[i] = *v;
+                        }
+                    }
+                    hp
+                },
+                seed: cfg.seed,
+            },
+        )?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let actor_stop = Arc::new(AtomicBool::new(false));
+        let manifest_env = crate::envs::manifest_name(&cfg.env).to_string();
+
+        // ---- learners -------------------------------------------------
+        let mut learner_status = Vec::new();
+        let mut learner_handles = Vec::new();
+        let mut data_addrs = Vec::new();
+        for agent in 0..cfg.n_agents {
+            let group = Allreduce::new(cfg.learners_per_agent);
+            for rank in 0..cfg.learners_per_agent {
+                let status = Arc::new(LearnerStatus::default());
+                learner_status.push(status.clone());
+                let (tx, rx) = std::sync::mpsc::channel::<String>();
+                let lcfg = LearnerConfig {
+                    env: manifest_env.clone(),
+                    agent,
+                    rank,
+                    algo: cfg.algo.clone(),
+                    replay_mode: cfg.replay_mode(),
+                    publish_every: cfg.publish_every,
+                    period_steps: cfg.period_steps,
+                    replay_cap: 8192,
+                    seed: cfg.seed + agent as u64 * 100 + rank as u64,
+                };
+                let engine = engine.clone();
+                let pool_addrs2 = pool_addrs.clone();
+                let league_addr = league.addr.clone();
+                let group = group.clone();
+                let stop2 = stop.clone();
+                let total = cfg.total_steps;
+                let handle = std::thread::Builder::new()
+                    .name(format!("learner-{agent}-{rank}"))
+                    .spawn(move || -> Result<()> {
+                        let mut learner = Learner::new(
+                            lcfg,
+                            engine,
+                            &pool_addrs2,
+                            &league_addr,
+                            Some(group),
+                        )?;
+                        tx.send(learner.data_addr()).ok();
+                        while learner.steps < total && !stop2.load(Ordering::Relaxed)
+                        {
+                            learner.train_once()?;
+                            status
+                                .steps
+                                .store(learner.steps, Ordering::Relaxed);
+                            status.rfps_frames.store(
+                                learner.rfps.count(),
+                                Ordering::Relaxed,
+                            );
+                            status.cfps_frames.store(
+                                learner.cfps.count(),
+                                Ordering::Relaxed,
+                            );
+                            *status.stats.lock().unwrap() =
+                                learner.last_stats.clone();
+                        }
+                        status.done.store(true, Ordering::Relaxed);
+                        // keep the data port alive until global stop so
+                        // actors don't error out mid-shutdown
+                        while !stop2.load(Ordering::Relaxed) {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Ok(())
+                    })?;
+                learner_handles.push(handle);
+                data_addrs.push(rx.recv_timeout(Duration::from_secs(30))?);
+            }
+        }
+
+        // ---- inference servers ----------------------------------------
+        let mut inf_servers = Vec::new();
+        for _ in 0..cfg.inf_servers {
+            let m = engine.manifest.env(&manifest_env)?;
+            inf_servers.push(InfServer::start(
+                "127.0.0.1:0",
+                InfServerConfig {
+                    env: manifest_env.clone(),
+                    batch: m.infer_b,
+                    max_wait: Duration::from_millis(2),
+                    refresh: Duration::from_millis(50),
+                },
+                engine.clone(),
+                &pool_addrs,
+            )?);
+        }
+        let inf_addrs: Vec<String> =
+            inf_servers.iter().map(|s| s.addr.clone()).collect();
+
+        let deployment = Deployment {
+            cfg,
+            engine,
+            league,
+            pools,
+            pool_addrs,
+            inf_addrs,
+            inf_servers,
+            learner_status,
+            learner_handles,
+            data_addrs,
+            actor_stop,
+            actor_handles: Mutex::new(Vec::new()),
+            restarts: Arc::new(AtomicU64::new(0)),
+            stop,
+            next_actor_id: AtomicU64::new(0),
+        };
+
+        // ---- actors (M_A per learner) ----------------------------------
+        for li in 0..deployment.data_addrs.len() {
+            let agent = (li / deployment.cfg.learners_per_agent) as u32;
+            for _ in 0..deployment.cfg.actors_per_learner {
+                deployment.spawn_actor(agent, li);
+            }
+        }
+        Ok(deployment)
+    }
+
+    /// Scale up: add one supervised actor feeding learner `li`.
+    pub fn spawn_actor(&self, agent: u32, li: usize) {
+        let id = self.next_actor_id.fetch_add(1, Ordering::Relaxed);
+        let cfg = ActorConfig {
+            env: self.cfg.env.clone(),
+            actor_id: format!("{agent}/a{id}"),
+            seed: self.cfg.seed * 1000 + id,
+            gamma: self.cfg.gamma,
+            refresh_every: 1,
+            train_t: 0,
+        };
+        let engine = self.engine.clone();
+        let league_addr = self.league.addr.clone();
+        let pool_addrs = self.pool_addrs.clone();
+        let data_addr = self.data_addrs[li].clone();
+        let inf_addr = self.inf_addrs.get(id as usize % self.inf_addrs.len().max(1))
+            .cloned();
+        let stop = self.actor_stop.clone();
+        let restarts = self.restarts.clone();
+        let train_t = self
+            .engine
+            .manifest
+            .env(crate::envs::manifest_name(&self.cfg.env))
+            .map(|m| m.train_t)
+            .unwrap_or(16);
+        let handle = std::thread::Builder::new()
+            .name(format!("actor-{}", cfg.actor_id))
+            .spawn(move || {
+                // k8s Deployment semantics: restart on any failure
+                while !stop.load(Ordering::Relaxed) {
+                    let backend = match &inf_addr {
+                        Some(addr) => PolicyBackend::Remote(
+                            crate::transport::ReqClient::connect(addr),
+                        ),
+                        None => PolicyBackend::Local(engine.clone()),
+                    };
+                    let mut cfg2 = ActorConfig {
+                        env: cfg.env.clone(),
+                        actor_id: cfg.actor_id.clone(),
+                        seed: cfg.seed,
+                        gamma: cfg.gamma,
+                        refresh_every: cfg.refresh_every,
+                        train_t: cfg.train_t,
+                    };
+                    if inf_addr.is_some() {
+                        cfg2.train_t = train_t;
+                    }
+                    let run = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| -> Result<()> {
+                            let mut actor = Actor::new(
+                                cfg2,
+                                backend,
+                                &league_addr,
+                                &pool_addrs,
+                                &data_addr,
+                            )?;
+                            actor.run(u64::MAX, &stop)?;
+                            Ok(())
+                        }),
+                    );
+                    match run {
+                        Ok(Ok(())) => break, // clean stop
+                        Ok(Err(_)) | Err(_) => {
+                            if stop.load(Ordering::Relaxed) {
+                                break; // failures during shutdown are expected
+                            }
+                            restarts.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                    }
+                }
+            })
+            .expect("spawn actor");
+        self.actor_handles.lock().unwrap().push(handle);
+    }
+
+    pub fn league_stats(&self) -> LeagueStats {
+        self.league.stats()
+    }
+
+    pub fn learners_done(&self) -> bool {
+        self.learner_status
+            .iter()
+            .all(|s| s.done.load(Ordering::Relaxed))
+    }
+
+    pub fn total_learner_steps(&self) -> u64 {
+        self.learner_status
+            .iter()
+            .map(|s| s.steps.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Block until all learners hit total_steps (or `timeout`).
+    pub fn wait(&self, timeout: Duration) -> bool {
+        let start = std::time::Instant::now();
+        while !self.learners_done() {
+            if start.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        true
+    }
+
+    /// Stop everything: actors first, then learners/services.
+    pub fn shutdown(&mut self) {
+        self.actor_stop.store(true, Ordering::Relaxed);
+        for h in self.actor_handles.lock().unwrap().drain(..) {
+            h.join().ok();
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        for h in self.learner_handles.drain(..) {
+            let _ = h.join();
+        }
+        for s in self.inf_servers.iter_mut() {
+            s.shutdown();
+        }
+    }
+}
+
+impl Drop for Deployment {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Arc<Engine>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Arc::new(Engine::load(dir).unwrap()))
+    }
+
+    #[test]
+    fn deployment_runs_to_completion() {
+        let Some(engine) = engine() else { return };
+        let mut cfg = RunConfig::default();
+        cfg.env = "rps".into();
+        cfg.total_steps = 6;
+        cfg.period_steps = 3;
+        cfg.actors_per_learner = 2;
+        let mut dep = Deployment::start(cfg, engine).unwrap();
+        assert!(dep.wait(Duration::from_secs(120)), "did not finish");
+        assert_eq!(dep.total_learner_steps(), 6);
+        let stats = dep.league_stats();
+        assert!(stats.pool_size >= 2);
+        dep.shutdown();
+    }
+}

@@ -1,0 +1,408 @@
+//! Wire protocol: every message that crosses a module boundary.
+//!
+//! The paper defines its inter-process API in native Python over ZeroMQ
+//! (§3.3); here the equivalent contract is the `Msg` enum + `Wire` codec.
+//! One enum covers all four services (LeagueMgr, ModelPool, Learner data
+//! port, InfServer) so a single framed-socket layer serves everything.
+
+use crate::util::codec::{Cursor, Enc, Wire};
+use anyhow::{bail, Result};
+
+/// Identifies a model: which learning agent produced it + version number.
+/// Version 0 is the seed (random init or imitation-learned) policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelKey {
+    pub agent: u32,
+    pub version: u32,
+}
+
+impl ModelKey {
+    pub fn new(agent: u32, version: u32) -> Self {
+        ModelKey { agent, version }
+    }
+}
+
+impl std::fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "agt{:02}:{:04}", self.agent, self.version)
+    }
+}
+
+/// A task handed to an Actor at episode begin (§3.2): the learning
+/// policy, the sampled opponent(s), and the hyper-parameters attached to
+/// the learning model by the HyperMgr.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSpec {
+    pub task_id: u64,
+    pub learner_key: ModelKey,
+    /// Opponent model keys; empty for single-agent tasks, one for 1v1,
+    /// seven for doom_lite 8-player FFA, etc.
+    pub opponents: Vec<ModelKey>,
+    pub hp: Vec<f32>,
+}
+
+/// Episode result reported back to the LeagueMgr at episode end.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatchOutcome {
+    pub task_id: u64,
+    pub learner_key: ModelKey,
+    pub opponents: Vec<ModelKey>,
+    /// 1.0 win / 0.5 tie / 0.0 loss from the learning agent's view.
+    pub outcome: f32,
+    pub episode_len: u32,
+    pub frames: u64,
+}
+
+/// One trajectory segment (eq. 1 in the paper): L contiguous steps plus
+/// the bootstrap observation.  All tensors are flattened f32/i32 vectors;
+/// shapes are implied by the env manifest (T, obs_dim, n_agents).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrajSegment {
+    pub model_key: ModelKey,
+    /// number of time steps T (obs holds T+1 rows)
+    pub t: u32,
+    /// agents contributing observations per step (2 for team mode else 1)
+    pub n_agents: u32,
+    pub obs: Vec<f32>,          // (T+1) * n_agents * D
+    pub actions: Vec<i32>,      // T * n_agents
+    pub behavior_logp: Vec<f32>, // T * n_agents
+    pub rewards: Vec<f32>,      // T
+    pub discounts: Vec<f32>,    // T
+}
+
+/// Versioned parameters + attached hyperparams stored in the ModelPool.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelBlob {
+    pub key: ModelKey,
+    pub params: Vec<f32>,
+    pub hp: Vec<f32>,
+    /// true once the LeagueMgr froze this version into the opponent pool
+    pub frozen: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    // -- generic ---------------------------------------------------------
+    Ok,
+    Err(String),
+    Ping,
+    Pong,
+    Shutdown,
+    // -- LeagueMgr service ------------------------------------------------
+    RequestActorTask { actor_id: String },
+    Task(TaskSpec),
+    ReportOutcome(MatchOutcome),
+    RequestLearnerTask { learner_id: u32 },
+    /// Learner finished its learning period; LeagueMgr freezes the model.
+    NotifyPeriodDone { key: ModelKey },
+    // -- ModelPool service --------------------------------------------------
+    PutModel(ModelBlob),
+    GetModel { key: ModelKey },
+    GetLatest { agent: u32 },
+    Model(ModelBlob),
+    NotFound,
+    // -- Learner data port ---------------------------------------------------
+    Traj(TrajSegment),
+    // -- InfServer -------------------------------------------------------
+    InferReq { key: ModelKey, obs: Vec<f32>, rows: u32 },
+    InferResp { logits: Vec<f32>, value: Vec<f32> },
+}
+
+impl Wire for ModelKey {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u32(self.agent);
+        buf.put_u32(self.version);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(ModelKey { agent: cur.u32()?, version: cur.u32()? })
+    }
+}
+
+fn put_keys(buf: &mut Vec<u8>, keys: &[ModelKey]) {
+    buf.put_u32(keys.len() as u32);
+    for k in keys {
+        k.encode(buf);
+    }
+}
+
+fn get_keys(cur: &mut Cursor) -> Result<Vec<ModelKey>> {
+    let n = cur.u32()? as usize;
+    (0..n).map(|_| ModelKey::decode(cur)).collect()
+}
+
+impl Wire for TaskSpec {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u64(self.task_id);
+        self.learner_key.encode(buf);
+        put_keys(buf, &self.opponents);
+        buf.put_f32s(&self.hp);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(TaskSpec {
+            task_id: cur.u64()?,
+            learner_key: ModelKey::decode(cur)?,
+            opponents: get_keys(cur)?,
+            hp: cur.f32s()?,
+        })
+    }
+}
+
+impl Wire for MatchOutcome {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u64(self.task_id);
+        self.learner_key.encode(buf);
+        put_keys(buf, &self.opponents);
+        buf.put_f32(self.outcome);
+        buf.put_u32(self.episode_len);
+        buf.put_u64(self.frames);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(MatchOutcome {
+            task_id: cur.u64()?,
+            learner_key: ModelKey::decode(cur)?,
+            opponents: get_keys(cur)?,
+            outcome: cur.f32()?,
+            episode_len: cur.u32()?,
+            frames: cur.u64()?,
+        })
+    }
+}
+
+impl Wire for TrajSegment {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.model_key.encode(buf);
+        buf.put_u32(self.t);
+        buf.put_u32(self.n_agents);
+        buf.put_f32s(&self.obs);
+        buf.put_i32s(&self.actions);
+        buf.put_f32s(&self.behavior_logp);
+        buf.put_f32s(&self.rewards);
+        buf.put_f32s(&self.discounts);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(TrajSegment {
+            model_key: ModelKey::decode(cur)?,
+            t: cur.u32()?,
+            n_agents: cur.u32()?,
+            obs: cur.f32s()?,
+            actions: cur.i32s()?,
+            behavior_logp: cur.f32s()?,
+            rewards: cur.f32s()?,
+            discounts: cur.f32s()?,
+        })
+    }
+}
+
+impl Wire for ModelBlob {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.key.encode(buf);
+        buf.put_f32s(&self.params);
+        buf.put_f32s(&self.hp);
+        buf.put_u8(self.frozen as u8);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(ModelBlob {
+            key: ModelKey::decode(cur)?,
+            params: cur.f32s()?,
+            hp: cur.f32s()?,
+            frozen: cur.u8()? != 0,
+        })
+    }
+}
+
+impl Wire for Msg {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Msg::Ok => buf.put_u8(0),
+            Msg::Err(s) => {
+                buf.put_u8(1);
+                buf.put_str(s);
+            }
+            Msg::Ping => buf.put_u8(2),
+            Msg::Pong => buf.put_u8(3),
+            Msg::Shutdown => buf.put_u8(4),
+            Msg::RequestActorTask { actor_id } => {
+                buf.put_u8(10);
+                buf.put_str(actor_id);
+            }
+            Msg::Task(t) => {
+                buf.put_u8(11);
+                t.encode(buf);
+            }
+            Msg::ReportOutcome(o) => {
+                buf.put_u8(12);
+                o.encode(buf);
+            }
+            Msg::RequestLearnerTask { learner_id } => {
+                buf.put_u8(13);
+                buf.put_u32(*learner_id);
+            }
+            Msg::NotifyPeriodDone { key } => {
+                buf.put_u8(14);
+                key.encode(buf);
+            }
+            Msg::PutModel(b) => {
+                buf.put_u8(20);
+                b.encode(buf);
+            }
+            Msg::GetModel { key } => {
+                buf.put_u8(21);
+                key.encode(buf);
+            }
+            Msg::GetLatest { agent } => {
+                buf.put_u8(22);
+                buf.put_u32(*agent);
+            }
+            Msg::Model(b) => {
+                buf.put_u8(23);
+                b.encode(buf);
+            }
+            Msg::NotFound => buf.put_u8(24),
+            Msg::Traj(t) => {
+                buf.put_u8(30);
+                t.encode(buf);
+            }
+            Msg::InferReq { key, obs, rows } => {
+                buf.put_u8(40);
+                key.encode(buf);
+                buf.put_f32s(obs);
+                buf.put_u32(*rows);
+            }
+            Msg::InferResp { logits, value } => {
+                buf.put_u8(41);
+                buf.put_f32s(logits);
+                buf.put_f32s(value);
+            }
+        }
+    }
+
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let tag = cur.u8()?;
+        Ok(match tag {
+            0 => Msg::Ok,
+            1 => Msg::Err(cur.str()?),
+            2 => Msg::Ping,
+            3 => Msg::Pong,
+            4 => Msg::Shutdown,
+            10 => Msg::RequestActorTask { actor_id: cur.str()? },
+            11 => Msg::Task(TaskSpec::decode(cur)?),
+            12 => Msg::ReportOutcome(MatchOutcome::decode(cur)?),
+            13 => Msg::RequestLearnerTask { learner_id: cur.u32()? },
+            14 => Msg::NotifyPeriodDone { key: ModelKey::decode(cur)? },
+            20 => Msg::PutModel(ModelBlob::decode(cur)?),
+            21 => Msg::GetModel { key: ModelKey::decode(cur)? },
+            22 => Msg::GetLatest { agent: cur.u32()? },
+            23 => Msg::Model(ModelBlob::decode(cur)?),
+            24 => Msg::NotFound,
+            30 => Msg::Traj(TrajSegment::decode(cur)?),
+            40 => Msg::InferReq {
+                key: ModelKey::decode(cur)?,
+                obs: cur.f32s()?,
+                rows: cur.u32()?,
+            },
+            41 => Msg::InferResp { logits: cur.f32s()?, value: cur.f32s()? },
+            t => bail!("unknown msg tag {t}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn sample_traj(rng: &mut Pcg32) -> TrajSegment {
+        let t = 1 + rng.below(8);
+        let na = 1 + rng.below(2);
+        let d = 1 + rng.below(16) as usize;
+        let f = |rng: &mut Pcg32, n: usize| {
+            (0..n).map(|_| rng.next_f32()).collect::<Vec<_>>()
+        };
+        TrajSegment {
+            model_key: ModelKey::new(rng.below(4), rng.below(100)),
+            t,
+            n_agents: na,
+            obs: f(rng, (t as usize + 1) * na as usize * d),
+            actions: (0..t * na).map(|_| rng.below(6) as i32).collect(),
+            behavior_logp: f(rng, (t * na) as usize),
+            rewards: f(rng, t as usize),
+            discounts: f(rng, t as usize),
+        }
+    }
+
+    #[test]
+    fn msg_roundtrip_all_variants() {
+        let mut rng = Pcg32::new(3, 1);
+        let traj = sample_traj(&mut rng);
+        let blob = ModelBlob {
+            key: ModelKey::new(1, 7),
+            params: vec![1.0, -2.0],
+            hp: vec![3e-4],
+            frozen: true,
+        };
+        let msgs = vec![
+            Msg::Ok,
+            Msg::Err("boom".into()),
+            Msg::Ping,
+            Msg::Pong,
+            Msg::Shutdown,
+            Msg::RequestActorTask { actor_id: "a0".into() },
+            Msg::Task(TaskSpec {
+                task_id: 9,
+                learner_key: ModelKey::new(0, 3),
+                opponents: vec![ModelKey::new(0, 1), ModelKey::new(0, 2)],
+                hp: vec![0.1, 0.2],
+            }),
+            Msg::ReportOutcome(MatchOutcome {
+                task_id: 9,
+                learner_key: ModelKey::new(0, 3),
+                opponents: vec![ModelKey::new(0, 1)],
+                outcome: 0.5,
+                episode_len: 100,
+                frames: 800,
+            }),
+            Msg::RequestLearnerTask { learner_id: 2 },
+            Msg::NotifyPeriodDone { key: ModelKey::new(0, 4) },
+            Msg::PutModel(blob.clone()),
+            Msg::GetModel { key: ModelKey::new(1, 7) },
+            Msg::GetLatest { agent: 1 },
+            Msg::Model(blob),
+            Msg::NotFound,
+            Msg::Traj(traj),
+            Msg::InferReq {
+                key: ModelKey::new(0, 0),
+                obs: vec![0.5; 8],
+                rows: 1,
+            },
+            Msg::InferResp { logits: vec![1.0, 2.0], value: vec![0.3] },
+        ];
+        for m in msgs {
+            let bytes = m.to_bytes();
+            let back = Msg::from_bytes(&bytes).unwrap();
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn traj_roundtrip_fuzz() {
+        crate::util::proptest::forall(200, "traj-roundtrip", |rng| {
+            let t = sample_traj(rng);
+            let back = TrajSegment::from_bytes(&t.to_bytes())
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(t, back);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_unknown_tag() {
+        assert!(Msg::from_bytes(&[99]).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_trailing() {
+        let mut b = Msg::Ok.to_bytes();
+        b.push(0);
+        assert!(Msg::from_bytes(&b).is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! Artifact manifest: the shape contract between python/compile/aot.py
+//! and the Rust runtime.  Parsed from artifacts/manifest.json.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct EnvManifest {
+    pub name: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: Vec<usize>,
+    pub team: bool,
+    pub param_count: usize,
+    pub train_t: usize,
+    pub train_b: usize,
+    pub infer_b: usize,
+    pub init_params_file: String,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl EnvManifest {
+    /// Observations per env step fed to the net (2 for team mode).
+    pub fn n_agents(&self) -> usize {
+        if self.team {
+            2
+        } else {
+            1
+        }
+    }
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("env {} has no artifact '{name}'", self.name))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub hp_layout: Vec<String>,
+    pub hp_defaults: BTreeMap<String, f32>,
+    pub envs: BTreeMap<String, EnvManifest>,
+}
+
+fn tensors(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().context("tensor list")?;
+    arr.iter()
+        .map(|t| {
+            let t = t.as_arr().context("tensor triple")?;
+            if t.len() != 3 {
+                bail!("tensor spec must be [name, shape, dtype]");
+            }
+            let shape = t[1]
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = match t[2].as_str() {
+                Some("f32") => Dtype::F32,
+                Some("i32") => Dtype::I32,
+                other => bail!("bad dtype {other:?}"),
+            };
+            Ok(TensorSpec {
+                name: t[0].as_str().context("name")?.to_string(),
+                shape,
+                dtype,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let hp_layout = j
+            .req("hp_layout")?
+            .as_arr()
+            .context("hp_layout")?
+            .iter()
+            .map(|s| s.as_str().unwrap_or("").to_string())
+            .collect::<Vec<_>>();
+        let hp_defaults = j
+            .req("hp_defaults")?
+            .as_obj()
+            .context("hp_defaults")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(0.0) as f32))
+            .collect();
+        let mut envs = BTreeMap::new();
+        for (name, e) in j.req("envs")?.as_obj().context("envs")? {
+            let mut artifacts = BTreeMap::new();
+            for (aname, a) in e.req("artifacts")?.as_obj().context("artifacts")? {
+                artifacts.insert(
+                    aname.clone(),
+                    ArtifactSpec {
+                        name: aname.clone(),
+                        file: a.req("file")?.as_str().context("file")?.to_string(),
+                        inputs: tensors(a.req("inputs")?)?,
+                        outputs: tensors(a.req("outputs")?)?,
+                    },
+                );
+            }
+            envs.insert(
+                name.clone(),
+                EnvManifest {
+                    name: name.clone(),
+                    obs_dim: e.req("obs_dim")?.as_usize().context("obs_dim")?,
+                    act_dim: e.req("act_dim")?.as_usize().context("act_dim")?,
+                    hidden: e
+                        .req("hidden")?
+                        .as_arr()
+                        .context("hidden")?
+                        .iter()
+                        .map(|h| h.as_usize().unwrap_or(0))
+                        .collect(),
+                    team: e.req("team")?.as_bool().context("team")?,
+                    param_count: e.req("param_count")?.as_usize().context("P")?,
+                    train_t: e.req("train_t")?.as_usize().context("T")?,
+                    train_b: e.req("train_b")?.as_usize().context("B")?,
+                    infer_b: e.req("infer_b")?.as_usize().context("IB")?,
+                    init_params_file: e
+                        .req("init_params")?
+                        .as_str()
+                        .context("init_params")?
+                        .to_string(),
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { hp_layout, hp_defaults, envs })
+    }
+
+    pub fn env(&self, name: &str) -> Result<&EnvManifest> {
+        self.envs
+            .get(name)
+            .with_context(|| format!("manifest has no env '{name}'"))
+    }
+
+    /// Default hyperparameter vector in hp_layout order.
+    pub fn default_hp(&self) -> Vec<f32> {
+        self.hp_layout
+            .iter()
+            .map(|k| self.hp_defaults.get(k).copied().unwrap_or(0.0))
+            .collect()
+    }
+
+    pub fn hp_index(&self, name: &str) -> Option<usize> {
+        self.hp_layout.iter().position(|k| k == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "hp_layout": ["lr", "clip_eps"],
+      "hp_defaults": {"lr": 0.0003, "clip_eps": 0.2},
+      "envs": {
+        "toy": {
+          "obs_dim": 4, "act_dim": 3, "hidden": [32], "team": false,
+          "param_count": 295, "train_t": 1, "train_b": 256, "infer_b": 32,
+          "init_params": "init_toy.f32", "init_sha": "x",
+          "artifacts": {
+            "infer_toy_b1": {
+              "file": "infer_toy_b1.hlo.txt",
+              "inputs": [["params", [295], "f32"], ["obs", [1, 4], "f32"]],
+              "outputs": [["logits", [1, 3], "f32"], ["value", [1], "f32"]]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hp_layout, vec!["lr", "clip_eps"]);
+        assert_eq!(m.default_hp(), vec![0.0003, 0.2]);
+        let env = m.env("toy").unwrap();
+        assert_eq!(env.param_count, 295);
+        let art = env.artifact("infer_toy_b1").unwrap();
+        assert_eq!(art.inputs.len(), 2);
+        assert_eq!(art.inputs[1].elems(), 4);
+        assert_eq!(art.outputs[0].dtype, Dtype::F32);
+    }
+
+    #[test]
+    fn missing_env_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.env("nope").is_err());
+        assert!(m.env("toy").unwrap().artifact("nope").is_err());
+    }
+
+    #[test]
+    fn hp_index() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hp_index("clip_eps"), Some(1));
+        assert_eq!(m.hp_index("zzz"), None);
+    }
+}

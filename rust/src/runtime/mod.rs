@@ -1,0 +1,439 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Python is NEVER on this path — artifacts were lowered once by
+//! `make artifacts`.
+//!
+//! Thread-safety: the crate's `PjRtClient` is `Rc`-based (!Send).  An
+//! [`Engine`] owns the client plus every compiled executable and
+//! serializes all PJRT calls behind one `Mutex`; the `unsafe impl Send`
+//! is sound because the `Rc` refcount is only ever touched while holding
+//! that mutex (the underlying XLA CPU client itself is thread-safe).
+//! Modules that want parallel execution create their own `Engine`.
+
+pub mod manifest;
+
+use crate::util::metrics::Meter;
+use anyhow::{bail, Context, Result};
+use manifest::{ArtifactSpec, Dtype, Manifest};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Host-side tensor handed to / returned from an executable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(_) => Dtype::F32,
+            Tensor::I32(_) => Dtype::I32,
+        }
+    }
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// device-resident input buffers keyed by caller-provided id —
+    /// model parameters are uploaded once per version instead of per
+    /// call (they dominate transfer volume: ~3 MB vs ~8 KB of obs)
+    buffer_cache: HashMap<u64, xla::PjRtBuffer>,
+    cache_order: Vec<u64>,
+}
+
+/// Engine input: plain host tensor, or host tensor + stable cache id
+/// (the device buffer is reused across calls with the same id).
+pub enum In<'a> {
+    Host(&'a Tensor),
+    Cached(u64, &'a Tensor),
+}
+
+const BUFFER_CACHE_CAP: usize = 48;
+
+/// Process-unique id for [`In::Cached`] / [`Engine::infer_cached`]
+/// buffers (avoids collisions when many modules share one Engine).
+pub fn new_cache_id() -> u64 {
+    static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+    NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Compiled-artifact cache + executor.  One per module that needs
+/// compute (Learner, InfServer, local-inference Actor pool, eval).
+pub struct Engine {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    inner: Mutex<EngineInner>,
+    /// executions performed (for profiling / Table-3 accounting)
+    pub exec_meter: Meter,
+}
+
+// SAFETY: see module docs — all Rc clones/drops happen under `inner`'s
+// Mutex, and the C++ PJRT CPU client is itself thread-safe.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            dir,
+            manifest,
+            inner: Mutex::new(EngineInner {
+                client,
+                executables: HashMap::new(),
+                buffer_cache: HashMap::new(),
+                cache_order: Vec::new(),
+            }),
+            exec_meter: Meter::new(),
+        })
+    }
+
+    /// Initial flat parameter vector for `env` (little-endian f32 file
+    /// written by aot.py).
+    pub fn init_params(&self, env: &str) -> Result<Vec<f32>> {
+        let m = self.manifest.env(env)?;
+        let path = self.dir.join(&m.init_params_file);
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("read {path:?}"))?;
+        if raw.len() != m.param_count * 4 {
+            bail!(
+                "init params size mismatch: {} bytes for P={}",
+                raw.len(),
+                m.param_count
+            );
+        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Compile (once) and cache the named artifact of `env`.
+    fn ensure_compiled(&self, env: &str, artifact: &str) -> Result<ArtifactSpec> {
+        let spec = self.manifest.env(env)?.artifact(artifact)?.clone();
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.executables.contains_key(artifact) {
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("utf8 path")?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {artifact}: {e:?}"))?;
+            inner.executables.insert(artifact.to_string(), exe);
+        }
+        Ok(spec)
+    }
+
+    /// Execute `artifact` with host tensors; validates dtypes/lengths
+    /// against the manifest and returns the host output tensors.
+    pub fn run(&self, env: &str, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let ins: Vec<In> = inputs.iter().map(In::Host).collect();
+        self.run_in(env, artifact, &ins)
+    }
+
+    /// Like [`Engine::run`], but inputs tagged `In::Cached(id, _)` keep
+    /// their device buffer across calls (uploaded once per id) — the
+    /// policy-parameter fast path for actors / InfServer / eval.
+    ///
+    /// Implementation note: execution goes through `execute_b`
+    /// (device-buffer args) rather than `execute` (literal args) — the
+    /// xla crate's literal path leaks the implicit host→device buffers
+    /// (~one params-worth of memory per call; measured in
+    /// EXPERIMENTS.md §Perf), while `PjRtBuffer` has a sound `Drop`.
+    pub fn run_in(&self, env: &str, artifact: &str, inputs: &[In]) -> Result<Vec<Tensor>> {
+        let spec = self.ensure_compiled(env, artifact)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{artifact}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut arg_refs: Vec<(bool, usize, u64)> = Vec::with_capacity(inputs.len());
+        for (input, ts) in inputs.iter().zip(&spec.inputs) {
+            let (tensor, cache_id) = match input {
+                In::Host(t) => (*t, None),
+                In::Cached(id, t) => (*t, Some(*id)),
+            };
+            if tensor.len() != ts.elems() {
+                bail!(
+                    "{artifact}: input '{}' has {} elems, manifest wants {:?}",
+                    ts.name,
+                    tensor.len(),
+                    ts.shape
+                );
+            }
+            if tensor.dtype() != ts.dtype {
+                bail!("{artifact}: input '{}' dtype mismatch", ts.name);
+            }
+            if let Some(id) = cache_id {
+                if !inner.buffer_cache.contains_key(&id) {
+                    let buf = Self::upload(&inner.client, tensor, &ts.shape)?;
+                    inner.buffer_cache.insert(id, buf);
+                    inner.cache_order.push(id);
+                    while inner.cache_order.len() > BUFFER_CACHE_CAP {
+                        let evict = inner.cache_order.remove(0);
+                        inner.buffer_cache.remove(&evict);
+                    }
+                }
+                arg_refs.push((true, 0, id));
+            } else {
+                let buf = Self::upload(&inner.client, tensor, &ts.shape)?;
+                arg_refs.push((false, owned.len(), 0));
+                owned.push(buf);
+            }
+        }
+        let args: Vec<&xla::PjRtBuffer> = arg_refs
+            .iter()
+            .map(|&(cached, idx, id)| {
+                if cached {
+                    inner.buffer_cache.get(&id).unwrap()
+                } else {
+                    &owned[idx]
+                }
+            })
+            .collect();
+        let exe = inner.executables.get(artifact).unwrap();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow::anyhow!("execute {artifact}: {e:?}"))?;
+        self.exec_meter.add(1);
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        drop(args);
+        drop(owned);
+        drop(inner);
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("to_tuple: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{artifact}: executable returned {} outputs, manifest wants {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ts) in parts.into_iter().zip(&spec.outputs) {
+            let tensor = match ts.dtype {
+                Dtype::F32 => Tensor::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("out {}: {e:?}", ts.name))?,
+                ),
+                Dtype::I32 => Tensor::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("out {}: {e:?}", ts.name))?,
+                ),
+            };
+            if tensor.len() != ts.elems() {
+                bail!(
+                    "{artifact}: output '{}' has {} elems, manifest wants {:?}",
+                    ts.name,
+                    tensor.len(),
+                    ts.shape
+                );
+            }
+            out.push(tensor);
+        }
+        Ok(out)
+    }
+
+    fn upload(
+        client: &xla::PjRtClient,
+        tensor: &Tensor,
+        shape: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        let buf = match tensor {
+            Tensor::F32(v) => client.buffer_from_host_buffer(v, shape, None),
+            Tensor::I32(v) => client.buffer_from_host_buffer(v, shape, None),
+        };
+        buf.map_err(|e| anyhow::anyhow!("host->device: {e:?}"))
+    }
+
+    /// Convenience: run inference for a batch of observations.
+    /// Returns (logits, value) as flat vectors.
+    pub fn infer(
+        &self,
+        env: &str,
+        batch: usize,
+        params: &[f32],
+        obs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.infer_impl(env, batch, params, obs, None)
+    }
+
+    /// Inference with a device-cached parameter buffer: `params_id`
+    /// must change whenever `params` content changes.
+    pub fn infer_cached(
+        &self,
+        env: &str,
+        batch: usize,
+        params_id: u64,
+        params: &[f32],
+        obs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.infer_impl(env, batch, params, obs, Some(params_id))
+    }
+
+    fn infer_impl(
+        &self,
+        env: &str,
+        batch: usize,
+        params: &[f32],
+        obs: &[f32],
+        params_id: Option<u64>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let artifact = format!("infer_{env}_b{batch}");
+        let pt = Tensor::F32(params.to_vec());
+        let ot = Tensor::F32(obs.to_vec());
+        let ins = [
+            match params_id {
+                Some(id) => In::Cached(id, &pt),
+                None => In::Host(&pt),
+            },
+            In::Host(&ot),
+        ];
+        let out = self.run_in(env, &artifact, &ins)?;
+        let mut it = out.into_iter();
+        let logits = it.next().context("logits")?.into_f32()?;
+        let value = it.next().context("value")?.into_f32()?;
+        Ok((logits, value))
+    }
+
+    /// Drop a cached device buffer (e.g. when a model version retires).
+    pub fn evict_cached(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.buffer_cache.remove(&id);
+        inner.cache_order.retain(|&x| x != id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Option<Engine> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::load(dir).unwrap())
+    }
+
+    #[test]
+    fn loads_manifest_and_init_params() {
+        let Some(eng) = engine() else { return };
+        let m = eng.manifest.env("rps").unwrap();
+        let params = eng.init_params("rps").unwrap();
+        assert_eq!(params.len(), m.param_count);
+        assert!(params.iter().any(|&p| p != 0.0));
+    }
+
+    #[test]
+    fn infer_rps_shapes_and_determinism() {
+        let Some(eng) = engine() else { return };
+        let m = eng.manifest.env("rps").unwrap();
+        let params = eng.init_params("rps").unwrap();
+        let obs = vec![1.0f32; m.obs_dim];
+        let (l1, v1) = eng.infer("rps", 1, &params, &obs).unwrap();
+        let (l2, v2) = eng.infer("rps", 1, &params, &obs).unwrap();
+        assert_eq!(l1.len(), m.act_dim);
+        assert_eq!(v1.len(), 1);
+        assert_eq!(l1, l2);
+        assert_eq!(v1, v2);
+        assert_eq!(eng.exec_meter.count(), 2);
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(eng) = engine() else { return };
+        // wrong input count
+        assert!(eng.run("rps", "infer_rps_b1", &[]).is_err());
+        // wrong length
+        let bad = vec![Tensor::F32(vec![0.0; 3]), Tensor::F32(vec![0.0; 4])];
+        assert!(eng.run("rps", "infer_rps_b1", &bad).is_err());
+        // unknown artifact
+        assert!(eng.run("rps", "nope", &[]).is_err());
+    }
+
+    #[test]
+    fn train_step_runs_and_updates_params() {
+        let Some(eng) = engine() else { return };
+        let m = eng.manifest.env("rps").unwrap().clone();
+        let p = m.param_count;
+        let (t, b, d) = (m.train_t, m.train_b, m.obs_dim);
+        let params = eng.init_params("rps").unwrap();
+        let hp = eng.manifest.default_hp();
+        let inputs = vec![
+            Tensor::F32(params.clone()),
+            Tensor::F32(vec![0.0; p]),
+            Tensor::F32(vec![0.0; p]),
+            Tensor::F32(vec![0.0]),
+            Tensor::F32(hp),
+            Tensor::F32(vec![0.1; (t + 1) * b * d]),
+            Tensor::I32(vec![1; t * b]),
+            Tensor::F32(vec![-1.0986; t * b]), // log(1/3)
+            Tensor::F32(vec![1.0; t * b]),
+            Tensor::F32(vec![0.0; t * b]),
+        ];
+        let out = eng.run("rps", "train_ppo_rps", &inputs).unwrap();
+        assert_eq!(out.len(), 5);
+        let new_params = out[0].as_f32().unwrap();
+        assert_eq!(new_params.len(), p);
+        assert_ne!(new_params, &params[..], "params must move");
+        let step = out[3].as_f32().unwrap();
+        assert_eq!(step[0], 1.0);
+        let stats = out[4].as_f32().unwrap();
+        assert_eq!(stats.len(), 9);
+        assert!(stats[0].is_finite());
+    }
+}

@@ -1,0 +1,416 @@
+//! Message transport: the ZeroMQ-substitute (§3.3 of the paper).
+//!
+//! Three socket patterns TLeague uses, over length-prefixed TCP frames:
+//!   - REQ/REP  — task requests, ModelPool read/write (`ReqClient`/`RepServer`)
+//!   - PUSH/PULL — actor→learner trajectory streaming (`PushClient`/`PullServer`)
+//!   - (PUB/SUB is folded into REQ/REP polling: ModelPool reads are cheap)
+//!
+//! Frame format: u32 little-endian length + payload (a `Wire`-encoded
+//! `Msg`).  Every server spawns one thread per connection; this repo's
+//! scale (tens of actors per learner per machine) does not need epoll.
+
+use crate::proto::Msg;
+use crate::util::codec::Wire;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write as IoWrite};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub const MAX_FRAME: u32 = 512 << 20; // 512 MiB guard (synthetic params are 25 MiB)
+
+/// Write one length-prefixed frame.
+pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u32;
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame into `buf` (reused across calls).
+pub fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<()> {
+    let mut len_bytes = [0u8; 4];
+    stream.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes);
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
+    buf.resize(len as usize, 0);
+    stream.read_exact(buf)?;
+    Ok(())
+}
+
+/// Blocking request/response client with lazy (re)connect.
+pub struct ReqClient {
+    addr: String,
+    stream: Mutex<Option<TcpStream>>,
+}
+
+impl ReqClient {
+    pub fn connect(addr: &str) -> ReqClient {
+        ReqClient { addr: addr.to_string(), stream: Mutex::new(None) }
+    }
+
+    /// Send `msg`, wait for the reply.  Reconnects (with retry/backoff)
+    /// on broken connections — the k8s-restart story of the paper means
+    /// peers can briefly vanish.
+    pub fn request(&self, msg: &Msg) -> Result<Msg> {
+        let payload = msg.to_bytes();
+        let mut guard = self.stream.lock().unwrap();
+        let mut last_err = None;
+        for attempt in 0..40 {
+            if guard.is_none() {
+                match TcpStream::connect(&self.addr) {
+                    Ok(s) => {
+                        s.set_nodelay(true).ok();
+                        *guard = Some(s);
+                    }
+                    Err(e) => {
+                        last_err = Some(e.into());
+                        drop(guard);
+                        std::thread::sleep(Duration::from_millis(
+                            25 * (attempt + 1).min(10),
+                        ));
+                        guard = self.stream.lock().unwrap();
+                        continue;
+                    }
+                }
+            }
+            let stream = guard.as_mut().unwrap();
+            let ok = write_frame(stream, &payload).and_then(|_| {
+                let mut buf = Vec::new();
+                read_frame(stream, &mut buf)?;
+                Msg::from_bytes(&buf)
+            });
+            match ok {
+                Ok(reply) => return Ok(reply),
+                Err(e) => {
+                    *guard = None; // force reconnect
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| anyhow::anyhow!("request failed")))
+            .with_context(|| format!("req to {}", self.addr))
+    }
+}
+
+/// Request/response server: spawns a handler thread per connection.
+pub struct RepServer {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RepServer {
+    /// Bind to `addr` ("127.0.0.1:0" for an ephemeral port) and serve
+    /// `handler(msg) -> reply` until `shutdown()`.
+    pub fn serve<F>(addr: &str, handler: F) -> Result<RepServer>
+    where
+        F: Fn(Msg) -> Msg + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handler = Arc::new(handler);
+        let handle = std::thread::Builder::new()
+            .name(format!("rep@{local}"))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = handler.clone();
+                            let stop3 = stop2.clone();
+                            std::thread::spawn(move || {
+                                Self::conn_loop(stream, h, stop3);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(RepServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    fn conn_loop(
+        mut stream: TcpStream,
+        handler: Arc<dyn Fn(Msg) -> Msg + Send + Sync>,
+        stop: Arc<AtomicBool>,
+    ) {
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_millis(200)))
+            .ok();
+        let mut buf = Vec::new();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match read_frame(&mut stream, &mut buf) {
+                Ok(()) => {}
+                Err(e) => {
+                    // timeouts poll the stop flag; anything else ends the conn
+                    if let Some(io) = e.downcast_ref::<std::io::Error>() {
+                        if matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock
+                                | std::io::ErrorKind::TimedOut
+                        ) {
+                            continue;
+                        }
+                    }
+                    return;
+                }
+            }
+            let reply = match Msg::from_bytes(&buf) {
+                Ok(msg) => handler(msg),
+                Err(e) => Msg::Err(format!("decode: {e}")),
+            };
+            if write_frame(&mut stream, &reply.to_bytes()).is_err() {
+                return;
+            }
+        }
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for RepServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One-way streaming sender (actor side of trajectory PUSH).
+pub struct PushClient {
+    addr: String,
+    stream: Mutex<Option<TcpStream>>,
+}
+
+impl PushClient {
+    pub fn connect(addr: &str) -> PushClient {
+        PushClient { addr: addr.to_string(), stream: Mutex::new(None) }
+    }
+
+    pub fn push(&self, msg: &Msg) -> Result<()> {
+        let payload = msg.to_bytes();
+        let mut guard = self.stream.lock().unwrap();
+        for attempt in 0..40 {
+            if guard.is_none() {
+                match TcpStream::connect(&self.addr) {
+                    Ok(s) => {
+                        s.set_nodelay(true).ok();
+                        *guard = Some(s);
+                    }
+                    Err(_) => {
+                        drop(guard);
+                        std::thread::sleep(Duration::from_millis(
+                            25 * (attempt + 1).min(10),
+                        ));
+                        guard = self.stream.lock().unwrap();
+                        continue;
+                    }
+                }
+            }
+            match write_frame(guard.as_mut().unwrap(), &payload) {
+                Ok(()) => return Ok(()),
+                Err(_) => *guard = None,
+            }
+        }
+        bail!("push to {} failed", self.addr)
+    }
+}
+
+/// One-way streaming receiver (learner side of trajectory PULL); frames
+/// from all connections are funneled into one bounded queue, giving the
+/// blocking-queue backpressure the paper's on-policy mode relies on.
+pub struct PullServer {
+    pub addr: String,
+    rx: std::sync::mpsc::Receiver<Msg>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PullServer {
+    pub fn bind(addr: &str, queue_cap: usize) -> Result<PullServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = std::sync::mpsc::sync_channel(queue_cap);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("pull@{local}"))
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let tx = tx.clone();
+                            let stop3 = stop2.clone();
+                            std::thread::spawn(move || {
+                                Self::conn_loop(stream, tx, stop3);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(PullServer { addr: local, rx, stop, handle: Some(handle) })
+    }
+
+    fn conn_loop(
+        mut stream: TcpStream,
+        tx: std::sync::mpsc::SyncSender<Msg>,
+        stop: Arc<AtomicBool>,
+    ) {
+        stream
+            .set_read_timeout(Some(Duration::from_millis(200)))
+            .ok();
+        let mut buf = Vec::new();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match read_frame(&mut stream, &mut buf) {
+                Ok(()) => {
+                    if let Ok(msg) = Msg::from_bytes(&buf) {
+                        // blocking send = backpressure to the TCP socket,
+                        // which stalls the pushing actor (on-policy mode)
+                        if tx.send(msg).is_err() {
+                            return;
+                        }
+                    }
+                }
+                Err(e) => {
+                    if let Some(io) = e.downcast_ref::<std::io::Error>() {
+                        if matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock
+                                | std::io::ErrorKind::TimedOut
+                        ) {
+                            continue;
+                        }
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Option<Msg> {
+        self.rx.recv_timeout(d).ok()
+    }
+    pub fn try_recv(&self) -> Option<Msg> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for PullServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::{ModelKey, TrajSegment};
+
+    #[test]
+    fn req_rep_roundtrip() {
+        let server = RepServer::serve("127.0.0.1:0", |msg| match msg {
+            Msg::Ping => Msg::Pong,
+            other => Msg::Err(format!("unexpected {other:?}")),
+        })
+        .unwrap();
+        let client = ReqClient::connect(&server.addr);
+        for _ in 0..10 {
+            assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        }
+    }
+
+    #[test]
+    fn req_rep_many_clients() {
+        let server = RepServer::serve("127.0.0.1:0", |_| Msg::Ok).unwrap();
+        let addr = server.addr.clone();
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let c = ReqClient::connect(&addr);
+                    for _ in 0..50 {
+                        assert_eq!(c.request(&Msg::Ping).unwrap(), Msg::Ok);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn push_pull_stream() {
+        let server = PullServer::bind("127.0.0.1:0", 64).unwrap();
+        let client = PushClient::connect(&server.addr);
+        let seg = TrajSegment {
+            model_key: ModelKey::new(0, 1),
+            t: 2,
+            n_agents: 1,
+            obs: vec![0.0; 12],
+            actions: vec![1, 2],
+            behavior_logp: vec![-1.0, -1.0],
+            rewards: vec![0.5, -0.5],
+            discounts: vec![0.99, 0.0],
+        };
+        for _ in 0..20 {
+            client.push(&Msg::Traj(seg.clone())).unwrap();
+        }
+        let mut got = 0;
+        while got < 20 {
+            let msg = server
+                .recv_timeout(Duration::from_secs(5))
+                .expect("timed out");
+            assert!(matches!(msg, Msg::Traj(ref s) if *s == seg));
+            got += 1;
+        }
+    }
+
+    #[test]
+    fn client_survives_server_restart() {
+        let mut server = RepServer::serve("127.0.0.1:0", |_| Msg::Ok).unwrap();
+        let addr = server.addr.clone();
+        let client = ReqClient::connect(&addr);
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Ok);
+        server.shutdown();
+        // old per-connection threads poll the stop flag every 200ms;
+        // wait for them to drain before the client reconnects.
+        std::thread::sleep(Duration::from_millis(400));
+        // restart on the same port
+        let _server2 = RepServer::serve(&addr, |_| Msg::Pong).unwrap();
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+    }
+}

@@ -1,0 +1,207 @@
+//! Binary wire codec: little-endian, length-prefixed primitives.
+//!
+//! The paper serializes its inter-process messages with native Python
+//! pickling over ZeroMQ; here every wire message implements `Wire`
+//! (encode into a byte buffer / decode from a cursor).  Kept deliberately
+//! simple and allocation-friendly: the trajectory hot path reuses
+//! buffers (see transport + learner).
+
+use anyhow::{bail, Result};
+
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("codec underflow: need {n}, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+    pub fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        let mut v = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            v.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+    /// Zero-copy view used by the learner hot path: validates length,
+    /// returns the raw bytes to be memcpy'd straight into a batch buffer.
+    pub fn f32s_raw(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n * 4)
+    }
+    pub fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        let mut v = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            v.push(i32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(v)
+    }
+}
+
+pub trait Enc {
+    fn put_u8(&mut self, v: u8);
+    fn put_u32(&mut self, v: u32);
+    fn put_u64(&mut self, v: u64);
+    fn put_i32(&mut self, v: i32);
+    fn put_f32(&mut self, v: f32);
+    fn put_f64(&mut self, v: f64);
+    fn put_str(&mut self, v: &str);
+    fn put_bytes(&mut self, v: &[u8]);
+    fn put_f32s(&mut self, v: &[f32]);
+    fn put_i32s(&mut self, v: &[i32]);
+}
+
+impl Enc for Vec<u8> {
+    fn put_u8(&mut self, v: u8) {
+        self.push(v);
+    }
+    fn put_u32(&mut self, v: u32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_u64(&mut self, v: u64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_i32(&mut self, v: i32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_f32(&mut self, v: f32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_f64(&mut self, v: f64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_str(&mut self, v: &str) {
+        self.put_u32(v.len() as u32);
+        self.extend_from_slice(v.as_bytes());
+    }
+    fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.extend_from_slice(v);
+    }
+    fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u32(v.len() as u32);
+        self.reserve(v.len() * 4);
+        for &x in v {
+            self.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn put_i32s(&mut self, v: &[i32]) {
+        self.put_u32(v.len() as u32);
+        self.reserve(v.len() * 4);
+        for &x in v {
+            self.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Anything that can cross a transport boundary.
+pub trait Wire: Sized {
+    fn encode(&self, buf: &mut Vec<u8>);
+    fn decode(cur: &mut Cursor) -> Result<Self>;
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.encode(&mut buf);
+        buf
+    }
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut cur = Cursor::new(bytes);
+        let v = Self::decode(&mut cur)?;
+        if !cur.is_empty() {
+            bail!("codec: {} trailing bytes", cur.remaining());
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_primitives() {
+        let mut buf = Vec::new();
+        buf.put_u8(7);
+        buf.put_u32(0xdead_beef);
+        buf.put_i32(-42);
+        buf.put_f32(1.5);
+        buf.put_f64(-2.25);
+        buf.put_str("hello");
+        buf.put_f32s(&[1.0, 2.0, 3.0]);
+        buf.put_i32s(&[-1, 0, 1]);
+        let mut c = Cursor::new(&buf);
+        assert_eq!(c.u8().unwrap(), 7);
+        assert_eq!(c.u32().unwrap(), 0xdead_beef);
+        assert_eq!(c.i32().unwrap(), -42);
+        assert_eq!(c.f32().unwrap(), 1.5);
+        assert_eq!(c.f64().unwrap(), -2.25);
+        assert_eq!(c.str().unwrap(), "hello");
+        assert_eq!(c.f32s().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(c.i32s().unwrap(), vec![-1, 0, 1]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn underflow_errors() {
+        let buf = vec![1u8, 2];
+        let mut c = Cursor::new(&buf);
+        assert!(c.u32().is_err());
+    }
+
+    #[test]
+    fn f32s_raw_zero_copy() {
+        let mut buf = Vec::new();
+        buf.put_f32s(&[4.0, 5.0]);
+        let mut c = Cursor::new(&buf);
+        let raw = c.f32s_raw().unwrap();
+        assert_eq!(raw.len(), 8);
+        assert_eq!(f32::from_le_bytes(raw[0..4].try_into().unwrap()), 4.0);
+    }
+}

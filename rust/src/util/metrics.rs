@@ -1,0 +1,207 @@
+//! Throughput meters and rolling statistics.
+//!
+//! rfps / cfps — the paper's two headline throughput counters (§4.4):
+//! frames received from Actors vs frames consumed by the Learner.  All
+//! counters are lock-free atomics so the hot paths never block on
+//! metrics; a `MetricsHub` aggregates and renders Table-3-style rows.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Monotonic event counter with rate derivation.
+pub struct Meter {
+    count: AtomicU64,
+    start: Mutex<Instant>,
+}
+
+impl Default for Meter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Meter {
+    pub fn new() -> Self {
+        Meter { count: AtomicU64::new(0), start: Mutex::new(Instant::now()) }
+    }
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+    /// Events per second since creation / last reset.
+    pub fn rate(&self) -> f64 {
+        let secs = self.start.lock().unwrap().elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.count() as f64 / secs
+        }
+    }
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        *self.start.lock().unwrap() = Instant::now();
+    }
+}
+
+/// Windowed scalar statistic (mean/min/max over the recent window).
+#[derive(Default)]
+pub struct Rolling {
+    inner: Mutex<RollingInner>,
+}
+
+#[derive(Default)]
+struct RollingInner {
+    window: Vec<f64>,
+    cap: usize,
+    next: usize,
+    filled: bool,
+}
+
+impl Rolling {
+    pub fn with_capacity(cap: usize) -> Self {
+        Rolling {
+            inner: Mutex::new(RollingInner {
+                window: Vec::with_capacity(cap),
+                cap: cap.max(1),
+                next: 0,
+                filled: false,
+            }),
+        }
+    }
+    pub fn push(&self, v: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let cap = g.cap;
+        if g.window.len() < cap {
+            g.window.push(v);
+        } else {
+            let i = g.next;
+            g.window[i] = v;
+            g.next = (i + 1) % cap;
+            g.filled = true;
+        }
+    }
+    pub fn mean(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        if g.window.is_empty() {
+            return 0.0;
+        }
+        g.window.iter().sum::<f64>() / g.window.len() as f64
+    }
+    pub fn minmax(&self) -> (f64, f64) {
+        let g = self.inner.lock().unwrap();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in &g.window {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if g.window.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (lo, hi)
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().window.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Named registry shared across modules (one per process).
+#[derive(Default)]
+pub struct MetricsHub {
+    meters: Mutex<BTreeMap<String, std::sync::Arc<Meter>>>,
+    rollings: Mutex<BTreeMap<String, std::sync::Arc<Rolling>>>,
+}
+
+impl MetricsHub {
+    pub fn meter(&self, name: &str) -> std::sync::Arc<Meter> {
+        self.meters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Meter::new()))
+            .clone()
+    }
+    pub fn rolling(&self, name: &str) -> std::sync::Arc<Rolling> {
+        self.rollings
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Rolling::with_capacity(256)))
+            .clone()
+    }
+    /// "name=rate/s" report, sorted by name (used by the throughput table).
+    pub fn report(&self) -> Vec<(String, f64)> {
+        self.meters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, m)| (k.clone(), m.rate()))
+            .collect()
+    }
+}
+
+/// Simple wall-clock stopwatch used by the bench harness.
+pub struct Stopwatch(Instant);
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_counts() {
+        let m = Meter::new();
+        m.add(3);
+        m.add(4);
+        assert_eq!(m.count(), 7);
+        assert!(m.rate() > 0.0);
+        m.reset();
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn rolling_window_wraps() {
+        let r = Rolling::with_capacity(3);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.push(v);
+        }
+        // window now holds {4, 2, 3}
+        assert_eq!(r.len(), 3);
+        assert!((r.mean() - 3.0).abs() < 1e-9);
+        assert_eq!(r.minmax(), (2.0, 4.0));
+    }
+
+    #[test]
+    fn hub_shares_meters() {
+        let hub = MetricsHub::default();
+        hub.meter("rfps").add(10);
+        assert_eq!(hub.meter("rfps").count(), 10);
+        assert_eq!(hub.report().len(), 1);
+    }
+}

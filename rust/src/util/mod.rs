@@ -1,0 +1,9 @@
+//! Substrate utilities the offline crate set lacks: RNG, JSON, CLI
+//! parsing, binary codec, metrics, and a property-testing harness.
+
+pub mod cli;
+pub mod codec;
+pub mod json;
+pub mod metrics;
+pub mod proptest;
+pub mod rng;

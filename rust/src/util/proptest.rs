@@ -1,0 +1,75 @@
+//! Tiny property-based testing harness (no proptest crate offline).
+//!
+//! `forall(cases, |rng| ...)` runs a closure over many PCG-seeded cases;
+//! on failure it reports the failing seed so the case can be replayed
+//! deterministically with `replay(seed, ...)`.  Used by the coordinator
+//! invariants tests (routing, batching, payoff/Elo state, replay memory).
+
+use super::rng::Pcg32;
+
+/// Run `f` against `cases` independently seeded RNGs; panic with the seed
+/// on the first failure (an Err return or a panic inside `f`).
+pub fn forall<F>(cases: u64, label: &str, mut f: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Pcg32::from_label(seed, label);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{label}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F>(seed: u64, label: &str, mut f: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::from_label(seed, label);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{label}' failed at seed {seed}: {msg}");
+    }
+}
+
+/// Assertion helpers that return Err instead of panicking, so `forall`
+/// can attach the seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes() {
+        forall(50, "sum-commutes", |rng| {
+            let a = rng.next_u32() as u64;
+            let b = rng.next_u32() as u64;
+            prop_assert!(a + b == b + a, "bad {a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn forall_reports_seed() {
+        forall(5, "always-fails", |_rng| Err("nope".into()));
+    }
+}

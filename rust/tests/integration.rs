@@ -1,0 +1,365 @@
+//! End-to-end integration: LeagueMgr + ModelPool + Learner + Actors +
+//! (optionally) InfServer, all composing over real TCP + PJRT.
+//!
+//! These tests need `make artifacts` to have run; they skip otherwise.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tleague::actor::{Actor, ActorConfig, PolicyBackend};
+use tleague::inference::{InfServer, InfServerConfig};
+use tleague::league::{LeagueConfig, LeagueMgrServer};
+use tleague::learner::replay::ReplayMode;
+use tleague::learner::{Learner, LearnerConfig};
+use tleague::model_pool::ModelPoolServer;
+use tleague::proto::ModelKey;
+use tleague::runtime::Engine;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::load(dir).unwrap()))
+}
+
+fn league(env: &str, engine: &Engine, game_mgr: &str, n_opponents: usize)
+    -> LeagueMgrServer
+{
+    let _ = env;
+    LeagueMgrServer::start(
+        "127.0.0.1:0",
+        LeagueConfig {
+            n_agents: 1,
+            n_opponents,
+            game_mgr: game_mgr.into(),
+            hp_layout: engine.manifest.hp_layout.clone(),
+            hp_default: engine.manifest.default_hp(),
+            seed: 42,
+        },
+    )
+    .unwrap()
+}
+
+/// The core data-plane test: actors generate rps episodes, the learner
+/// trains through PJRT, models freeze into the pool, the payoff matrix
+/// fills in.
+#[test]
+fn full_stack_rps_league() {
+    let Some(engine) = engine() else { return };
+    let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+    let league = league("rps", &engine, "uniform", 1);
+    let pool_addrs = vec![pool.addr.clone()];
+
+    let mut learner = Learner::new(
+        LearnerConfig {
+            env: "rps".into(),
+            agent: 0,
+            rank: 0,
+            algo: "ppo".into(),
+            replay_mode: ReplayMode::Blocking,
+            publish_every: 2,
+            period_steps: 4,
+            replay_cap: 8192,
+            seed: 1,
+        },
+        engine.clone(),
+        &pool_addrs,
+        &league.addr,
+        None,
+    )
+    .unwrap();
+    let data_addr = learner.data_addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut actor_handles = Vec::new();
+    for a in 0..2u64 {
+        let engine = engine.clone();
+        let league_addr = league.addr.clone();
+        let pool_addrs = pool_addrs.clone();
+        let data_addr = data_addr.clone();
+        let stop = stop.clone();
+        actor_handles.push(std::thread::spawn(move || {
+            let mut actor = Actor::new(
+                ActorConfig {
+                    env: "rps".into(),
+                    actor_id: format!("0/actor{a}"),
+                    seed: 100 + a,
+                    gamma: 0.99,
+                    refresh_every: 1,
+                    train_t: 1,
+                },
+                PolicyBackend::Local(engine),
+                &league_addr,
+                &pool_addrs,
+                &data_addr,
+            )
+            .unwrap();
+            actor.run(u64::MAX, &stop).unwrap();
+        }));
+    }
+
+    // train for 10 steps (2.5 learning periods)
+    let steps = learner.run(10, &AtomicBool::new(false)).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    for h in actor_handles {
+        h.join().unwrap();
+    }
+
+    assert_eq!(steps, 10);
+    assert!(learner.last_stats.loss.is_finite());
+    assert!(learner.last_stats.entropy > 0.0, "policy must keep entropy");
+    // 10 steps / period 4 => at least 2 freezes beyond the seed
+    let lstats = league.stats();
+    assert!(lstats.pool_size >= 3, "pool {}", lstats.pool_size);
+    assert!(lstats.episodes > 0);
+    // learner advanced to a later version
+    assert!(learner.key.version >= 3, "key {}", learner.key);
+    // cfps == rfps frames consumed once in blocking mode (tolerate the
+    // segments still in flight/replay)
+    assert!(learner.cfps_count() <= learner.rfps_count());
+    // models are retrievable and correctly sized
+    let m = engine.manifest.env("rps").unwrap();
+    let client = tleague::model_pool::ModelPoolClient::connect(&pool_addrs);
+    let blob = client.get(ModelKey::new(0, 1)).unwrap().unwrap();
+    assert_eq!(blob.params.len(), m.param_count);
+    assert!(blob.frozen, "period-ended version must be frozen");
+}
+
+/// Pommerman team mode through the full stack: exercises the 2-agent
+/// meta-agent trajectory layout + centralized-value train artifact.
+#[test]
+fn full_stack_pommerman_team_smoke() {
+    let Some(engine) = engine() else { return };
+    let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+    let league = league("pommerman", &engine, "sp_pfsp", 1);
+    let pool_addrs = vec![pool.addr.clone()];
+
+    let mut learner = Learner::new(
+        LearnerConfig {
+            env: "pommerman".into(),
+            agent: 0,
+            rank: 0,
+            algo: "ppo".into(),
+            replay_mode: ReplayMode::Blocking,
+            publish_every: 2,
+            period_steps: 8,
+            replay_cap: 1024,
+            seed: 2,
+        },
+        engine.clone(),
+        &pool_addrs,
+        &league.addr,
+        None,
+    )
+    .unwrap();
+    let data_addr = learner.data_addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let engine2 = engine.clone();
+    let league_addr = league.addr.clone();
+    let pool_addrs2 = pool_addrs.clone();
+    let stop2 = stop.clone();
+    let h = std::thread::spawn(move || {
+        let mut actor = Actor::new(
+            ActorConfig {
+                env: "pommerman".into(),
+                actor_id: "0/pom".into(),
+                seed: 7,
+                gamma: 0.99,
+                refresh_every: 1,
+                train_t: 0,
+            },
+            PolicyBackend::Local(engine2),
+            &league_addr,
+            &pool_addrs2,
+            &data_addr,
+        )
+        .unwrap();
+        actor.run(u64::MAX, &stop2).unwrap();
+    });
+
+    let done = learner.run(2, &AtomicBool::new(false)).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    h.join().unwrap();
+    assert_eq!(done, 2);
+    assert!(learner.last_stats.loss.is_finite());
+}
+
+/// InfServer-backed actor: remote inference path composes with the
+/// league loop.
+#[test]
+fn full_stack_infserver_actor() {
+    let Some(engine) = engine() else { return };
+    let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+    let league = league("rps", &engine, "selfplay", 1);
+    let pool_addrs = vec![pool.addr.clone()];
+
+    let mut learner = Learner::new(
+        LearnerConfig {
+            env: "rps".into(),
+            agent: 0,
+            rank: 0,
+            algo: "ppo".into(),
+            replay_mode: ReplayMode::Blocking,
+            publish_every: 1,
+            period_steps: 100,
+            replay_cap: 8192,
+            seed: 3,
+        },
+        engine.clone(),
+        &pool_addrs,
+        &league.addr,
+        None,
+    )
+    .unwrap();
+    let data_addr = learner.data_addr();
+
+    let m = engine.manifest.env("rps").unwrap().clone();
+    let inf = InfServer::start(
+        "127.0.0.1:0",
+        InfServerConfig {
+            env: "rps".into(),
+            batch: m.infer_b,
+            max_wait: Duration::from_millis(2),
+            refresh: Duration::from_millis(20),
+        },
+        engine.clone(),
+        &pool_addrs,
+    )
+    .unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let league_addr = league.addr.clone();
+    let pool_addrs2 = pool_addrs.clone();
+    let inf_addr = inf.addr.clone();
+    let stop2 = stop.clone();
+    let h = std::thread::spawn(move || {
+        let mut actor = Actor::new(
+            ActorConfig {
+                env: "rps".into(),
+                actor_id: "0/inf-actor".into(),
+                seed: 11,
+                gamma: 0.99,
+                refresh_every: 1,
+                train_t: 1, // rps manifest train_t (required for Remote)
+            },
+            PolicyBackend::Remote(tleague::transport::ReqClient::connect(
+                &inf_addr,
+            )),
+            &league_addr,
+            &pool_addrs2,
+            &data_addr,
+        )
+        .unwrap();
+        actor.run(u64::MAX, &stop2).unwrap();
+    });
+
+    let steps = learner.run(3, &AtomicBool::new(false)).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    h.join().unwrap();
+    assert_eq!(steps, 3);
+    assert!(inf.rows_meter.count() > 0, "InfServer must have served rows");
+}
+
+/// Multi-learner synchronous training: grad + allreduce + apply keeps
+/// two ranks bit-identical (the Horovod design point).
+#[test]
+fn multi_learner_ranks_stay_identical() {
+    let Some(engine) = engine() else { return };
+    let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+    let league = league("rps", &engine, "uniform", 1);
+    let pool_addrs = vec![pool.addr.clone()];
+    let group = tleague::learner::allreduce::Allreduce::new(2);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut handles = Vec::new();
+    let mut data_addr_slots: Vec<std::sync::mpsc::Receiver<String>> = Vec::new();
+    let params_out = Arc::new(std::sync::Mutex::new(Vec::<Vec<f32>>::new()));
+    for rank in 0..2usize {
+        let engine = engine.clone();
+        let pool_addrs = pool_addrs.clone();
+        let league_addr = league.addr.clone();
+        let group = group.clone();
+        let params_out = params_out.clone();
+        let learner_stop = stop.clone();
+        let (tx, rx) = std::sync::mpsc::channel();
+        data_addr_slots.push(rx);
+        handles.push(std::thread::spawn(move || {
+            let mut learner = Learner::new(
+                LearnerConfig {
+                    env: "rps".into(),
+                    agent: 0,
+                    rank,
+                    algo: "ppo".into(),
+                    replay_mode: ReplayMode::Blocking,
+                    publish_every: 2,
+                    period_steps: 3,
+                    replay_cap: 8192,
+                    seed: 4 + rank as u64,
+                },
+                engine,
+                &pool_addrs,
+                &league_addr,
+                Some(group),
+            )
+            .unwrap();
+            tx.send(learner.data_addr()).unwrap();
+            learner.run(6, &AtomicBool::new(false)).unwrap();
+            params_out.lock().unwrap().push(learner.params().to_vec());
+            // keep the PullServer alive until the actors are stopped,
+            // else their pushes error out mid-shutdown
+            while !learner_stop.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }));
+    }
+    let data_addrs: Vec<String> =
+        data_addr_slots.iter().map(|rx| rx.recv().unwrap()).collect();
+
+    // one actor per learner rank (M_A = 1)
+    let mut actor_handles = Vec::new();
+    for (i, da) in data_addrs.iter().enumerate() {
+        let engine = engine.clone();
+        let league_addr = league.addr.clone();
+        let pool_addrs = pool_addrs.clone();
+        let da = da.clone();
+        let stop = stop.clone();
+        actor_handles.push(std::thread::spawn(move || {
+            let mut actor = Actor::new(
+                ActorConfig {
+                    env: "rps".into(),
+                    actor_id: format!("0/ml{i}"),
+                    seed: 50 + i as u64,
+                    gamma: 0.99,
+                    refresh_every: 1,
+                    train_t: 1,
+                },
+                PolicyBackend::Local(engine),
+                &league_addr,
+                &pool_addrs,
+                &da,
+            )
+            .unwrap();
+            actor.run(u64::MAX, &stop).unwrap();
+        }));
+    }
+
+    // wait until both ranks finished training, then release everyone
+    while params_out.lock().unwrap().len() < 2 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in actor_handles {
+        h.join().unwrap();
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let ps = params_out.lock().unwrap();
+    assert_eq!(ps.len(), 2);
+    assert_eq!(ps[0], ps[1], "ranks diverged");
+}
