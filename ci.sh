@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints (deny warnings), then the tier-1 command.
+# Usage: ./ci.sh [--no-lint]   (--no-lint skips fmt/clippy, e.g. on
+# toolchains without those components)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [[ "${1:-}" != "--no-lint" ]]; then
+    echo "== cargo fmt --check"
+    cargo fmt --check
+    echo "== cargo clippy -D warnings"
+    cargo clippy -- -D warnings
+fi
+
+echo "== tier-1: cargo build --release && cargo test -q"
+cargo build --release
+cargo test -q
+echo "CI OK"

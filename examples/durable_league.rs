@@ -1,0 +1,63 @@
+//! Durable league demo: train with checkpointing on, kill the deployment,
+//! then resume from the latest snapshot and keep training.
+//!
+//!   cargo run --release --example durable_league
+//!
+//! Needs `make artifacts`.  State (snapshots + spilled model blobs) goes
+//! to a temp directory printed at startup.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tleague::config::RunConfig;
+use tleague::orchestrator::Deployment;
+use tleague::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Arc::new(Engine::load("artifacts")?);
+    let ckpt = std::env::temp_dir().join("tleague-durable-demo");
+    std::fs::remove_dir_all(&ckpt).ok();
+    println!("== durable league: checkpoints in {} ==", ckpt.display());
+
+    // phase 1: a short run with checkpointing + a tight pool budget
+    let mut cfg = RunConfig::default();
+    cfg.env = "rps".into();
+    cfg.game_mgr = "pfsp".into();
+    cfg.total_steps = 40;
+    cfg.period_steps = 10;
+    cfg.checkpoint_dir = Some(ckpt.to_string_lossy().into_owned());
+    cfg.checkpoint_every_secs = 5;
+    cfg.pool_mem_budget_bytes = 64 * 1024; // spill cold frozen models
+    let mut dep = Deployment::start(cfg.clone(), engine.clone())?;
+    dep.wait(Duration::from_secs(300));
+    dep.shutdown(); // final snapshot lands here
+    let before = dep.league_stats();
+    println!(
+        "killed after phase 1: pool={} episodes={} frames={}",
+        before.pool_size, before.episodes, before.frames
+    );
+    drop(dep);
+
+    // phase 2: resume — pool/payoff/Elo/counters continue, models reload
+    let mut cfg2 = cfg.clone();
+    cfg2.resume = Some(ckpt.to_string_lossy().into_owned());
+    cfg2.total_steps = 40; // train another 40 steps on top
+    let mut dep2 = Deployment::start(cfg2, engine)?;
+    let resumed = dep2.league_stats();
+    // the pool can only have grown since the kill (training restarts at once)
+    assert!(resumed.pool_size >= before.pool_size, "state lost on resume");
+    println!(
+        "resumed: pool={} episodes={} frames={} (continuing)",
+        resumed.pool_size, resumed.episodes, resumed.frames
+    );
+    dep2.wait(Duration::from_secs(300));
+    dep2.shutdown();
+    let after = dep2.league_stats();
+    println!(
+        "done: pool={} episodes={} frames={}",
+        after.pool_size, after.episodes, after.frames
+    );
+    assert!(after.pool_size > before.pool_size, "no new freezes after resume");
+    std::fs::remove_dir_all(&ckpt).ok();
+    Ok(())
+}

@@ -9,6 +9,7 @@
 //!   train       — PJRT train-step latency per env
 //!   samplers    — GameMgr opponent-sampling cost (ablation A1 substrate)
 //!   replay      — blocking vs ratio replay modes (ablation A3)
+//!   checkpoint  — league snapshot encode/decode + disk save/restore MB/s
 //!
 //! Filter with `cargo bench -- <substring>`.
 
@@ -16,11 +17,13 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
+use tleague::checkpoint::{CheckpointMgr, LeagueSnapshot};
 use tleague::envs::{self, MultiAgentEnv};
 use tleague::league::game_mgr::make_game_mgr;
+use tleague::league::hyper::HyperMgr;
 use tleague::league::payoff::PayoffMatrix;
 use tleague::learner::replay::{assemble, ReplayMem, ReplayMode};
-use tleague::proto::{ModelKey, Msg, TrajSegment};
+use tleague::proto::{ModelBlob, ModelKey, Msg, TrajSegment};
 use tleague::runtime::{Engine, Tensor};
 use tleague::util::codec::Wire;
 use tleague::util::rng::Pcg32;
@@ -276,6 +279,77 @@ fn main() {
             n
         });
     }
+
+    // ---- checkpoint snapshot / restore -----------------------------------
+    println!("\n# checkpoint: 100-model synthetic pool (25k params each)");
+    let mut payoff = PayoffMatrix::new();
+    let mut crng = Pcg32::new(11, 11);
+    let keys: Vec<ModelKey> = (0..100).map(|v| ModelKey::new(0, v)).collect();
+    for _ in 0..2000 {
+        let a = keys[crng.below(100) as usize];
+        let bk = keys[crng.below(100) as usize];
+        payoff.record(a, bk, crng.next_f32());
+    }
+    let mut hyper = HyperMgr::new(
+        vec!["lr".into(), "ent_coef".into()],
+        vec![3e-4, 0.01],
+        3,
+    );
+    for &k in &keys {
+        hyper.set(k, vec![3e-4, 0.01]);
+    }
+    let models: Vec<ModelBlob> = keys
+        .iter()
+        .map(|&key| ModelBlob {
+            key,
+            params: (0..25_000u32).map(|i| (i ^ key.version) as f32).collect(),
+            hp: vec![3e-4, 0.01],
+            frozen: true,
+        })
+        .collect();
+    let snap = LeagueSnapshot {
+        pool: keys.clone(),
+        current: vec![ModelKey::new(0, 100)],
+        next_task: 1000,
+        episodes: 5000,
+        frames: 500_000,
+        n_opponents: 1,
+        game_mgr: "pfsp".into(),
+        rng: Pcg32::new(1, 1).state_parts(),
+        payoff,
+        hyper,
+        models,
+    };
+    // units are bytes so the printed rate is exact; MB/s = rate / 1e6
+    let snap_bytes = snap.to_bytes();
+    let nbytes = snap_bytes.len() as u64;
+    println!("snapshot size: {:.2} MB", nbytes as f64 / 1e6);
+    b.bench("checkpoint/snapshot_encode", "B", || {
+        let buf = snap.to_bytes();
+        std::hint::black_box(&buf);
+        nbytes
+    });
+    b.bench("checkpoint/snapshot_decode", "B", || {
+        let s = LeagueSnapshot::from_bytes(&snap_bytes).unwrap();
+        std::hint::black_box(&s);
+        nbytes
+    });
+    let ckpt_dir = std::env::temp_dir()
+        .join(format!("tleague-bench-ckpt-{}", std::process::id()));
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    {
+        let mgr = CheckpointMgr::open(&ckpt_dir, 2).unwrap();
+        b.bench("checkpoint/snapshot_save_disk", "B", || {
+            mgr.save(&snap).unwrap();
+            nbytes
+        });
+        b.bench("checkpoint/restore_disk", "B", || {
+            let s = mgr.load_latest().unwrap().unwrap();
+            std::hint::black_box(&s);
+            nbytes
+        });
+    }
+    std::fs::remove_dir_all(&ckpt_dir).ok();
 
     println!("\n{} benches run", b.rows.len());
 }

@@ -1,0 +1,365 @@
+//! Durable league state: versioned snapshots + restore (paper §3.2).
+//!
+//! "The LeagueMgr ... saves checkpoints, including the model parameters
+//! and the payoff matrix" — week-long CSP runs must survive preemption.
+//! This module owns the on-disk format: a [`LeagueSnapshot`] captures the
+//! complete league (payoff matrix + Elo, frozen-pool order, current
+//! learner keys, HyperMgr tables + PBT RNG, the LeagueMgr RNG stream,
+//! episode/frame/task counters, and every ModelPool blob) as one
+//! `util::codec` Wire blob, and a [`CheckpointMgr`] persists numbered
+//! snapshots with write-temp-then-atomic-rename semantics, retaining the
+//! last K.  Restore is bit-exact: encoding a restored snapshot yields the
+//! same bytes that were loaded (see DESIGN.md §Checkpointing).
+//!
+//! The ModelPool's disk-spill files (cold frozen blobs under an LRU byte
+//! budget, see `model_pool`) use the same `ModelBlob` wire encoding and
+//! live in `spill-*/` subdirectories next to the snapshots.
+
+use crate::league::hyper::HyperMgr;
+use crate::league::payoff::PayoffMatrix;
+use crate::proto::{ModelBlob, ModelKey};
+use crate::util::codec::{Cursor, Enc, Wire};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// "TLCK" — tags every snapshot file.
+pub const SNAP_MAGIC: u32 = 0x544c_434b;
+/// Bump when the snapshot layout changes; decoders reject other versions.
+pub const SNAP_FORMAT: u32 = 1;
+
+/// Complete durable league state.  `models` holds every ModelPool blob
+/// (the LeagueMgr-side fields never reference parameters directly, so the
+/// pool contents ride along explicitly).
+#[derive(Clone)]
+pub struct LeagueSnapshot {
+    /// frozen models in freeze order (the opponent pool M)
+    pub pool: Vec<ModelKey>,
+    /// per-agent current learner keys
+    pub current: Vec<ModelKey>,
+    pub next_task: u64,
+    pub episodes: u64,
+    pub frames: u64,
+    pub n_opponents: u32,
+    /// GameMgr sampler name (rebuilt by name on restore)
+    pub game_mgr: String,
+    /// LeagueMgr RNG stream (state, inc)
+    pub rng: (u64, u64),
+    pub payoff: PayoffMatrix,
+    pub hyper: HyperMgr,
+    pub models: Vec<ModelBlob>,
+}
+
+impl Wire for LeagueSnapshot {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u32(SNAP_MAGIC);
+        buf.put_u32(SNAP_FORMAT);
+        buf.put_u32(self.pool.len() as u32);
+        for k in &self.pool {
+            k.encode(buf);
+        }
+        buf.put_u32(self.current.len() as u32);
+        for k in &self.current {
+            k.encode(buf);
+        }
+        buf.put_u64(self.next_task);
+        buf.put_u64(self.episodes);
+        buf.put_u64(self.frames);
+        buf.put_u32(self.n_opponents);
+        buf.put_str(&self.game_mgr);
+        buf.put_u64(self.rng.0);
+        buf.put_u64(self.rng.1);
+        self.payoff.encode(buf);
+        self.hyper.encode(buf);
+        buf.put_u32(self.models.len() as u32);
+        for b in &self.models {
+            b.encode(buf);
+        }
+    }
+
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let magic = cur.u32()?;
+        if magic != SNAP_MAGIC {
+            bail!("not a league snapshot (magic {magic:#010x})");
+        }
+        let format = cur.u32()?;
+        if format != SNAP_FORMAT {
+            bail!("snapshot format {format} unsupported (want {SNAP_FORMAT})");
+        }
+        let n_pool = cur.u32()? as usize;
+        let pool: Vec<ModelKey> =
+            (0..n_pool).map(|_| ModelKey::decode(cur)).collect::<Result<_>>()?;
+        let n_cur = cur.u32()? as usize;
+        let current: Vec<ModelKey> =
+            (0..n_cur).map(|_| ModelKey::decode(cur)).collect::<Result<_>>()?;
+        let next_task = cur.u64()?;
+        let episodes = cur.u64()?;
+        let frames = cur.u64()?;
+        let n_opponents = cur.u32()?;
+        let game_mgr = cur.str()?;
+        let rng = (cur.u64()?, cur.u64()?);
+        let payoff = PayoffMatrix::decode(cur)?;
+        let hyper = HyperMgr::decode(cur)?;
+        let n_models = cur.u32()? as usize;
+        let models: Vec<ModelBlob> =
+            (0..n_models).map(|_| ModelBlob::decode(cur)).collect::<Result<_>>()?;
+        Ok(LeagueSnapshot {
+            pool,
+            current,
+            next_task,
+            episodes,
+            frames,
+            n_opponents,
+            game_mgr,
+            rng,
+            payoff,
+            hyper,
+            models,
+        })
+    }
+}
+
+/// Numbered snapshots in one directory: `snap-00000042.tlc`.  Writes go
+/// to a dotfile first and are atomically renamed into place, so readers
+/// (and a crash mid-write) never observe a torn snapshot; after each save
+/// everything but the newest `keep` snapshots is pruned.
+pub struct CheckpointMgr {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointMgr {
+    pub fn open(dir: impl Into<PathBuf>, keep: usize) -> Result<CheckpointMgr> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointMgr { dir, keep: keep.max(1) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn snap_path(&self, seq: u64) -> PathBuf {
+        self.dir.join(format!("snap-{seq:08}.tlc"))
+    }
+
+    /// All snapshots on disk, ascending by sequence number.
+    pub fn list(&self) -> Result<Vec<(u64, PathBuf)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("read checkpoint dir {}", self.dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(seq) = name
+                .strip_prefix("snap-")
+                .and_then(|s| s.strip_suffix(".tlc"))
+                .and_then(|s| s.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            out.push((seq, entry.path()));
+        }
+        out.sort_by_key(|&(seq, _)| seq);
+        Ok(out)
+    }
+
+    /// Persist `snap` as the next numbered snapshot and prune old ones.
+    pub fn save(&self, snap: &LeagueSnapshot) -> Result<PathBuf> {
+        // the temp name is unique per writer: two concurrent savers (e.g.
+        // the background snapshotter and snapshot_now) may race to the
+        // same seq, but each renames a complete file — last one wins,
+        // and a torn file can never appear under the snap-*.tlc name
+        static TMP_NONCE: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let nonce = TMP_NONCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let existing = self.list()?;
+        let seq = existing.last().map_or(0, |&(s, _)| s + 1);
+        let bytes = snap.to_bytes();
+        let tmp = self
+            .dir
+            .join(format!(".snap-{seq:08}.{}-{nonce}.tmp", std::process::id()));
+        // fsync before rename: rename-atomicity alone only survives a
+        // process crash; a power loss could tear every retained snapshot
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("create {}", tmp.display()))?;
+            f.write_all(&bytes)
+                .with_context(|| format!("write {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("fsync {}", tmp.display()))?;
+        }
+        let path = self.snap_path(seq);
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("rename into {}", path.display()))?;
+        // persist the rename itself (directory entry)
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            d.sync_all().ok();
+        }
+        // retain the newest `keep` (including the one just written)
+        let mut all = existing;
+        all.push((seq, path.clone()));
+        if all.len() > self.keep {
+            for (_, old) in &all[..all.len() - self.keep] {
+                std::fs::remove_file(old).ok();
+            }
+        }
+        Ok(path)
+    }
+
+    pub fn load(path: &Path) -> Result<LeagueSnapshot> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("read snapshot {}", path.display()))?;
+        LeagueSnapshot::from_bytes(&raw)
+            .with_context(|| format!("decode snapshot {}", path.display()))
+    }
+
+    /// Newest *readable* snapshot in the directory, or None if there are
+    /// none.  An unreadable newest file (torn by a crash outside this
+    /// module, bad disk) is skipped with a warning rather than blocking
+    /// resume while intact older snapshots exist.
+    pub fn load_latest(&self) -> Result<Option<LeagueSnapshot>> {
+        for (_, path) in self.list()?.iter().rev() {
+            match Self::load(path) {
+                Ok(snap) => return Ok(Some(snap)),
+                Err(e) => {
+                    eprintln!("checkpoint: skipping unreadable snapshot: {e:#}")
+                }
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tleague-ckpt-{}-{tag}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn sample_snapshot() -> LeagueSnapshot {
+        let mut payoff = PayoffMatrix::new();
+        let mut rng = Pcg32::new(5, 5);
+        for _ in 0..50 {
+            let a = ModelKey::new(0, rng.below(4));
+            let b = ModelKey::new(0, rng.below(4));
+            payoff.record(a, b, rng.next_f32());
+        }
+        let mut hyper =
+            HyperMgr::new(vec!["lr".into(), "ent_coef".into()], vec![3e-4, 0.01], 9);
+        hyper.set(ModelKey::new(0, 2), vec![1e-3, 0.02]);
+        hyper.pbt_enabled = true;
+        let models = (0..4)
+            .map(|v| ModelBlob {
+                key: ModelKey::new(0, v),
+                params: (0..32).map(|i| (i as f32) * 0.5 + v as f32).collect(),
+                hp: vec![3e-4, 0.01],
+                frozen: v < 3,
+            })
+            .collect();
+        LeagueSnapshot {
+            pool: (0..3).map(|v| ModelKey::new(0, v)).collect(),
+            current: vec![ModelKey::new(0, 3)],
+            next_task: 17,
+            episodes: 42,
+            frames: 4200,
+            n_opponents: 1,
+            game_mgr: "pfsp".into(),
+            rng: Pcg32::from_label(7, "league").state_parts(),
+            payoff,
+            hyper,
+            models,
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_bit_exact() {
+        let snap = sample_snapshot();
+        let bytes = snap.to_bytes();
+        let back = LeagueSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(bytes, back.to_bytes(), "decode+re-encode changed bytes");
+        assert_eq!(back.pool, snap.pool);
+        assert_eq!(back.current, snap.current);
+        assert_eq!(back.models.len(), 4);
+        assert_eq!(back.models[1].params, snap.models[1].params);
+    }
+
+    #[test]
+    fn save_load_and_retention() {
+        let dir = tmp_dir("retain");
+        let mgr = CheckpointMgr::open(&dir, 3).unwrap();
+        assert!(mgr.load_latest().unwrap().is_none(), "empty dir has no snapshot");
+        let mut snap = sample_snapshot();
+        for i in 0..5u64 {
+            snap.episodes = i;
+            mgr.save(&snap).unwrap();
+        }
+        let listed = mgr.list().unwrap();
+        assert_eq!(listed.len(), 3, "older snapshots pruned");
+        assert_eq!(listed.last().unwrap().0, 4);
+        let latest = mgr.load_latest().unwrap().unwrap();
+        assert_eq!(latest.episodes, 4);
+        // no temp files left behind
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            assert!(
+                !name.to_string_lossy().ends_with(".tmp"),
+                "stale temp file {name:?}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_and_foreign_files() {
+        assert!(LeagueSnapshot::from_bytes(b"not a snapshot").is_err());
+        // right magic, wrong format version
+        let mut buf = Vec::new();
+        buf.put_u32(SNAP_MAGIC);
+        buf.put_u32(SNAP_FORMAT + 1);
+        assert!(LeagueSnapshot::from_bytes(&buf).is_err());
+        // truncated valid snapshot
+        let bytes = sample_snapshot().to_bytes();
+        assert!(LeagueSnapshot::from_bytes(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    #[test]
+    fn load_latest_skips_corrupt_newest() {
+        let dir = tmp_dir("fallback");
+        let mgr = CheckpointMgr::open(&dir, 5).unwrap();
+        let mut snap = sample_snapshot();
+        snap.episodes = 7;
+        mgr.save(&snap).unwrap();
+        // a newer snapshot torn by something outside CheckpointMgr
+        std::fs::write(dir.join("snap-00000009.tlc"), b"garbage").unwrap();
+        let loaded = mgr.load_latest().unwrap().expect("older snapshot usable");
+        assert_eq!(loaded.episodes, 7, "must fall back to the intact snapshot");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sequence_continues_after_reopen() {
+        let dir = tmp_dir("reopen");
+        let snap = sample_snapshot();
+        {
+            let mgr = CheckpointMgr::open(&dir, 5).unwrap();
+            mgr.save(&snap).unwrap();
+            mgr.save(&snap).unwrap();
+        }
+        let mgr = CheckpointMgr::open(&dir, 5).unwrap();
+        let path = mgr.save(&snap).unwrap();
+        assert!(
+            path.to_string_lossy().ends_with("snap-00000002.tlc"),
+            "{path:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -33,6 +33,16 @@ pub struct RunConfig {
     pub replay_mode: String, // "blocking" | "ratio:<n>"
     pub seed: u64,
     pub hp_overrides: BTreeMap<String, f32>,
+    /// directory for periodic league snapshots (None = not durable)
+    pub checkpoint_dir: Option<String>,
+    /// seconds between background snapshots
+    pub checkpoint_every_secs: u64,
+    /// how many snapshots to retain
+    pub checkpoint_keep: usize,
+    /// ModelPool resident-byte budget (0 = unbounded, no spilling)
+    pub pool_mem_budget_bytes: usize,
+    /// restart from the latest snapshot in this directory
+    pub resume: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -54,6 +64,11 @@ impl Default for RunConfig {
             replay_mode: "blocking".into(),
             seed: 0,
             hp_overrides: BTreeMap::new(),
+            checkpoint_dir: None,
+            checkpoint_every_secs: 30,
+            checkpoint_keep: 3,
+            pool_mem_budget_bytes: 0,
+            resume: None,
         }
     }
 }
@@ -94,6 +109,23 @@ impl RunConfig {
             cfg.replay_mode = s.to_string();
         }
         cfg.seed = get_num(&j, "seed", cfg.seed as f64) as u64;
+        if let Some(s) = j.get("checkpoint_dir").and_then(|v| v.as_str()) {
+            cfg.checkpoint_dir = Some(s.to_string());
+        }
+        cfg.checkpoint_every_secs = get_num(
+            &j,
+            "checkpoint_every_secs",
+            cfg.checkpoint_every_secs as f64,
+        ) as u64;
+        cfg.checkpoint_keep =
+            get_num(&j, "checkpoint_keep", cfg.checkpoint_keep as f64) as usize;
+        // config files speak MB; the field is bytes so tests can be precise
+        if let Some(mb) = j.get("pool_mem_budget_mb").and_then(|v| v.as_f64()) {
+            cfg.pool_mem_budget_bytes = (mb * (1 << 20) as f64) as usize;
+        }
+        if let Some(s) = j.get("resume").and_then(|v| v.as_str()) {
+            cfg.resume = Some(s.to_string());
+        }
         if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
             for (k, v) in obj {
                 cfg.hp_overrides
@@ -121,6 +153,15 @@ impl RunConfig {
         anyhow::ensure!(
             self.replay_mode == "blocking" || self.replay_mode.starts_with("ratio:"),
             "replay_mode must be 'blocking' or 'ratio:<n>'"
+        );
+        anyhow::ensure!(self.checkpoint_keep >= 1, "checkpoint_keep >= 1");
+        anyhow::ensure!(self.checkpoint_every_secs >= 1, "checkpoint_every_secs >= 1");
+        // a budget without a spill directory would silently never evict
+        anyhow::ensure!(
+            self.pool_mem_budget_bytes == 0
+                || self.checkpoint_dir.is_some()
+                || self.resume.is_some(),
+            "pool_mem_budget_mb requires checkpoint_dir or resume (spill directory)"
         );
         Ok(())
     }
@@ -185,6 +226,30 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"algo": "dqn"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"replay_mode": "nope"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"n_agents": 0}"#).is_err());
+    }
+
+    #[test]
+    fn checkpoint_fields_parse() {
+        let cfg = RunConfig::from_json(
+            r#"{
+            "env": "rps", "checkpoint_dir": "/tmp/league-ckpt",
+            "checkpoint_every_secs": 5, "checkpoint_keep": 2,
+            "pool_mem_budget_mb": 0.5, "resume": "/tmp/league-ckpt"
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some("/tmp/league-ckpt"));
+        assert_eq!(cfg.checkpoint_every_secs, 5);
+        assert_eq!(cfg.checkpoint_keep, 2);
+        assert_eq!(cfg.pool_mem_budget_bytes, 512 * 1024);
+        assert_eq!(cfg.resume.as_deref(), Some("/tmp/league-ckpt"));
+        // defaults: no durability, no budget
+        let d = RunConfig::default();
+        assert!(d.checkpoint_dir.is_none() && d.resume.is_none());
+        assert_eq!(d.pool_mem_budget_bytes, 0);
+        assert!(RunConfig::from_json(r#"{"checkpoint_keep": 0}"#).is_err());
+        // a budget with nowhere to spill must be rejected, not ignored
+        assert!(RunConfig::from_json(r#"{"pool_mem_budget_mb": 64}"#).is_err());
     }
 
     #[test]

@@ -7,9 +7,12 @@
 //! Quake-III population-based training the paper cites.
 
 use crate::proto::ModelKey;
+use crate::util::codec::{Cursor, Enc, Wire};
 use crate::util::rng::Pcg32;
+use anyhow::Result;
 use std::collections::BTreeMap;
 
+#[derive(Clone)]
 pub struct HyperMgr {
     pub layout: Vec<String>,
     hp: BTreeMap<ModelKey, Vec<f32>>,
@@ -96,6 +99,61 @@ impl HyperMgr {
     }
 }
 
+/// Snapshot codec: covers the per-model hp table, PBT switches, and the
+/// perturbation RNG stream so restored runs perturb identically.
+impl Wire for HyperMgr {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u32(self.layout.len() as u32);
+        for name in &self.layout {
+            buf.put_str(name);
+        }
+        buf.put_f32s(&self.default);
+        buf.put_u32(self.perturbable.len() as u32);
+        for &i in &self.perturbable {
+            buf.put_u32(i as u32);
+        }
+        buf.put_u8(self.pbt_enabled as u8);
+        let (state, inc) = self.rng.state_parts();
+        buf.put_u64(state);
+        buf.put_u64(inc);
+        buf.put_u32(self.hp.len() as u32);
+        for (key, hp) in &self.hp {
+            key.encode(buf);
+            buf.put_f32s(hp);
+        }
+    }
+
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let n_layout = cur.u32()? as usize;
+        let layout: Vec<String> =
+            (0..n_layout).map(|_| cur.str()).collect::<Result<_>>()?;
+        let default = cur.f32s()?;
+        let n_pert = cur.u32()? as usize;
+        let mut perturbable = Vec::with_capacity(n_pert);
+        for _ in 0..n_pert {
+            perturbable.push(cur.u32()? as usize);
+        }
+        let pbt_enabled = cur.u8()? != 0;
+        let state = cur.u64()?;
+        let inc = cur.u64()?;
+        let n_hp = cur.u32()? as usize;
+        let mut hp = BTreeMap::new();
+        for _ in 0..n_hp {
+            let key = ModelKey::decode(cur)?;
+            let v = cur.f32s()?;
+            hp.insert(key, v);
+        }
+        Ok(HyperMgr {
+            layout,
+            hp,
+            default,
+            perturbable,
+            pbt_enabled,
+            rng: Pcg32::from_state_parts(state, inc),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +218,26 @@ mod tests {
         );
         // clip_eps not perturbable: exact copy
         assert_eq!(hp[1], 0.2);
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_state_and_rng() {
+        let mut m = mgr();
+        m.pbt_enabled = true;
+        m.set(k(0, 1), vec![1e-3, 0.1, 0.02]);
+        m.set(k(2, 5), vec![2e-3, 0.3, 0.04]);
+        let bytes = m.to_bytes();
+        let mut back = HyperMgr::from_bytes(&bytes).unwrap();
+        assert_eq!(bytes, back.to_bytes(), "re-encode must be identical");
+        assert_eq!(back.get(k(0, 1)), vec![1e-3, 0.1, 0.02]);
+        assert_eq!(back.get(k(9, 9)), vec![3e-4, 0.2, 0.01], "default kept");
+        assert!(back.pbt_enabled);
+        // the perturbation RNG continues the same stream
+        let pop = vec![k(0, 1), k(2, 5)];
+        let score = |key: ModelKey| if key.agent == 2 { 0.9 } else { 0.1 };
+        m.pbt_step(k(0, 1), &pop, score);
+        back.pbt_step(k(0, 1), &pop, score);
+        assert_eq!(m.get(k(0, 1)), back.get(k(0, 1)), "PBT rng diverged");
     }
 
     #[test]

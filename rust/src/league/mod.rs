@@ -8,6 +8,7 @@ pub mod game_mgr;
 pub mod hyper;
 pub mod payoff;
 
+use crate::checkpoint::LeagueSnapshot;
 use crate::proto::{MatchOutcome, ModelKey, Msg, TaskSpec};
 use crate::transport::{RepServer, ReqClient};
 use crate::util::metrics::Meter;
@@ -34,6 +35,7 @@ struct LeagueState {
     current: Vec<ModelKey>,
     payoff: PayoffMatrix,
     game_mgr: Box<dyn GameMgr>,
+    game_mgr_name: String, // kept so snapshots can rebuild the sampler
     hyper: HyperMgr,
     rng: Pcg32,
     next_task: u64,
@@ -61,11 +63,24 @@ pub struct LeagueMgrServer {
 
 impl LeagueMgrServer {
     pub fn start(bind: &str, cfg: LeagueConfig) -> Result<LeagueMgrServer> {
+        Self::start_with(bind, cfg, None)
+    }
+
+    /// Start the LeagueMgr, optionally restoring every piece of league
+    /// state (pool, payoff/Elo, hyper tables, RNG streams, counters) from
+    /// a snapshot.  With `resume`, `cfg` only supplies defaults that the
+    /// snapshot itself carries — the snapshot wins.
+    pub fn start_with(
+        bind: &str,
+        cfg: LeagueConfig,
+        resume: Option<&LeagueSnapshot>,
+    ) -> Result<LeagueMgrServer> {
         let mut state = LeagueState {
             pool: Vec::new(),
             current: (0..cfg.n_agents).map(|a| ModelKey::new(a, 1)).collect(),
             payoff: PayoffMatrix::new(),
             game_mgr: game_mgr::make_game_mgr(&cfg.game_mgr)?,
+            game_mgr_name: cfg.game_mgr.clone(),
             hyper: HyperMgr::new(cfg.hp_layout, cfg.hp_default, cfg.seed),
             rng: Pcg32::from_label(cfg.seed, "league"),
             next_task: 1,
@@ -73,12 +88,26 @@ impl LeagueMgrServer {
             episodes: 0,
             frames: 0,
         };
-        // seed models (version 0) enter the pool immediately so FSP has
-        // a mixture to sample from ("initial size of the pool is one")
-        for a in 0..cfg.n_agents {
-            let seed_key = ModelKey::new(a, 0);
-            state.pool.push(seed_key);
-            state.payoff.add_model(seed_key);
+        if let Some(snap) = resume {
+            state.pool = snap.pool.clone();
+            state.current = snap.current.clone();
+            state.payoff = snap.payoff.clone();
+            state.game_mgr = game_mgr::make_game_mgr(&snap.game_mgr)?;
+            state.game_mgr_name = snap.game_mgr.clone();
+            state.hyper = snap.hyper.clone();
+            state.rng = Pcg32::from_state_parts(snap.rng.0, snap.rng.1);
+            state.next_task = snap.next_task;
+            state.n_opponents = snap.n_opponents as usize;
+            state.episodes = snap.episodes;
+            state.frames = snap.frames;
+        } else {
+            // seed models (version 0) enter the pool immediately so FSP has
+            // a mixture to sample from ("initial size of the pool is one")
+            for a in 0..cfg.n_agents {
+                let seed_key = ModelKey::new(a, 0);
+                state.pool.push(seed_key);
+                state.payoff.add_model(seed_key);
+            }
         }
         let state = Arc::new(Mutex::new(state));
         let s2 = state.clone();
@@ -169,6 +198,19 @@ impl LeagueMgrServer {
         }
     }
 
+    /// Durable snapshot of the league state under one lock acquisition.
+    /// `models` is left empty — the caller attaches the ModelPool blobs
+    /// (they live in a different service).
+    pub fn snapshot(&self) -> LeagueSnapshot {
+        snapshot_of(&self.state.lock().unwrap())
+    }
+
+    /// Closure handle for the background snapshotter thread.
+    pub fn snapshot_fn(&self) -> impl Fn() -> LeagueSnapshot + Send + 'static {
+        let state = self.state.clone();
+        move || snapshot_of(&state.lock().unwrap())
+    }
+
     /// Read-only view of the payoff matrix (copied) for analysis/benches.
     pub fn winrate(&self, row: ModelKey, col: ModelKey) -> f64 {
         self.state.lock().unwrap().payoff.winrate(row, col)
@@ -184,6 +226,22 @@ impl LeagueMgrServer {
 
     pub fn enable_pbt(&self) {
         self.state.lock().unwrap().hyper.pbt_enabled = true;
+    }
+}
+
+fn snapshot_of(st: &LeagueState) -> LeagueSnapshot {
+    LeagueSnapshot {
+        pool: st.pool.clone(),
+        current: st.current.clone(),
+        next_task: st.next_task,
+        episodes: st.episodes,
+        frames: st.frames,
+        n_opponents: st.n_opponents as u32,
+        game_mgr: st.game_mgr_name.clone(),
+        rng: st.rng.state_parts(),
+        payoff: st.payoff.clone(),
+        hyper: st.hyper.clone(),
+        models: Vec::new(),
     }
 }
 
@@ -308,6 +366,61 @@ mod tests {
         }
         assert!(server.winrate(me, seed) > 0.9);
         assert!(server.elo(me) > server.elo(seed));
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_league_state() {
+        let server = league("pfsp");
+        let client = LeagueClient::connect(&server.addr);
+        let me = ModelKey::new(0, 1);
+        let seed = ModelKey::new(0, 0);
+        for i in 0..6 {
+            client
+                .report_outcome(MatchOutcome {
+                    task_id: 0,
+                    learner_key: me,
+                    opponents: vec![seed],
+                    outcome: if i % 3 == 0 { 1.0 } else { 0.0 },
+                    episode_len: 5,
+                    frames: 5,
+                })
+                .unwrap();
+        }
+        client.notify_period_done(me).unwrap();
+        let t = client.request_actor_task("0/a").unwrap(); // advances rng + task ids
+        let snap = server.snapshot();
+        let stats = server.stats();
+        let elo_me = server.elo(me);
+        let wr = server.winrate(me, seed);
+        let pool = server.pool();
+        drop(server);
+
+        let restored = LeagueMgrServer::start_with(
+            "127.0.0.1:0",
+            LeagueConfig {
+                n_agents: 1,
+                n_opponents: 1,
+                game_mgr: "uniform".into(), // snapshot's "pfsp" must win
+                hp_layout: vec!["lr".into()],
+                hp_default: vec![3e-4],
+                seed: 999,
+            },
+            Some(&snap),
+        )
+        .unwrap();
+        let rstats = restored.stats();
+        assert_eq!(rstats.pool_size, stats.pool_size);
+        assert_eq!(rstats.episodes, stats.episodes);
+        assert_eq!(rstats.frames, stats.frames);
+        assert_eq!(rstats.total_matches, stats.total_matches);
+        assert_eq!(rstats.current, stats.current);
+        assert_eq!(restored.pool(), pool);
+        assert_eq!(restored.elo(me).to_bits(), elo_me.to_bits());
+        assert_eq!(restored.winrate(me, seed).to_bits(), wr.to_bits());
+        // task ids keep counting instead of restarting at 1
+        let c2 = LeagueClient::connect(&restored.addr);
+        let t2 = c2.request_actor_task("0/a").unwrap();
+        assert_eq!(t2.task_id, t.task_id + 1);
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! fresh pairs aren't treated as certainly-even or certainly-lost.
 
 use crate::proto::ModelKey;
+use crate::util::codec::{Cursor, Enc, Wire};
+use anyhow::Result;
 use std::collections::BTreeMap;
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -15,7 +17,7 @@ pub struct PairStats {
     pub score: f64,
 }
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct PayoffMatrix {
     pairs: BTreeMap<(ModelKey, ModelKey), PairStats>,
     elo: BTreeMap<ModelKey, f64>,
@@ -89,6 +91,47 @@ impl PayoffMatrix {
     }
 }
 
+/// Snapshot codec: BTreeMap iteration is ordered, so encoding the same
+/// matrix twice yields identical bytes (bit-exact checkpoint round-trips).
+impl Wire for PayoffMatrix {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_f64(self.elo_k);
+        buf.put_u32(self.elo.len() as u32);
+        for (key, rating) in &self.elo {
+            key.encode(buf);
+            buf.put_f64(*rating);
+        }
+        buf.put_u32(self.pairs.len() as u32);
+        for ((row, col), s) in &self.pairs {
+            row.encode(buf);
+            col.encode(buf);
+            buf.put_u32(s.games);
+            buf.put_f64(s.score);
+        }
+    }
+
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let elo_k = cur.f64()?;
+        let n_elo = cur.u32()? as usize;
+        let mut elo = BTreeMap::new();
+        for _ in 0..n_elo {
+            let key = ModelKey::decode(cur)?;
+            let rating = cur.f64()?;
+            elo.insert(key, rating);
+        }
+        let n_pairs = cur.u32()? as usize;
+        let mut pairs = BTreeMap::new();
+        for _ in 0..n_pairs {
+            let row = ModelKey::decode(cur)?;
+            let col = ModelKey::decode(cur)?;
+            let games = cur.u32()?;
+            let score = cur.f64()?;
+            pairs.insert((row, col), PairStats { games, score });
+        }
+        Ok(PayoffMatrix { pairs, elo, elo_k })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +175,86 @@ mod tests {
         assert!(p.elo(k(1)) > p.elo(k(2)) + 100.0);
         // zero-sum: total Elo conserved
         assert!((p.elo(k(1)) + p.elo(k(2)) - 2.0 * ELO_BASE).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_is_mirror_symmetric_under_random_play() {
+        // for every pair, row score + col score == games on both sides
+        let mut p = PayoffMatrix::new();
+        let mut rng = crate::util::rng::Pcg32::new(31, 7);
+        for _ in 0..500 {
+            let row = k(rng.below(5));
+            let col = k(rng.below(5));
+            let outcome = *rng.choose(&[0.0f32, 0.5, 1.0]);
+            p.record(row, col, outcome);
+        }
+        for a in 0..5 {
+            for b in 0..5 {
+                let s = p.stats(k(a), k(b));
+                let m = p.stats(k(b), k(a));
+                assert_eq!(s.games, m.games, "{a} vs {b} game counts");
+                assert!(
+                    (s.score + m.score - s.games as f64).abs() < 1e-9,
+                    "{a} vs {b}: {} + {} != {}",
+                    s.score,
+                    m.score,
+                    s.games
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn elo_is_zero_sum_under_record() {
+        let mut p = PayoffMatrix::new();
+        for v in 0..6 {
+            p.add_model(k(v));
+        }
+        let mut rng = crate::util::rng::Pcg32::new(13, 5);
+        for _ in 0..400 {
+            let row = k(rng.below(6));
+            let col = k(rng.below(6));
+            p.record(row, col, *rng.choose(&[0.0f32, 0.5, 1.0]));
+        }
+        let total: f64 = (0..6).map(|v| p.elo(k(v))).sum();
+        assert!(
+            (total - 6.0 * ELO_BASE).abs() < 1e-6,
+            "Elo not conserved: {total}"
+        );
+    }
+
+    #[test]
+    fn pool_winrate_fresh_pair_uses_prior() {
+        // a model with no recorded games sits exactly at the 0.5 prior
+        let mut p = PayoffMatrix::new();
+        p.add_model(k(1));
+        assert_eq!(p.pool_winrate(k(1)), 0.5);
+        assert_eq!(p.pool_winrate(k(99)), 0.5, "unknown key also gets the prior");
+        // one win pulls above 0.5 but stays below certainty
+        p.record(k(1), k(2), 1.0);
+        let w = p.pool_winrate(k(1));
+        assert!(w > 0.5 && w < 1.0, "{w}");
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_exact() {
+        let mut p = PayoffMatrix::new();
+        let mut rng = crate::util::rng::Pcg32::new(77, 2);
+        for _ in 0..200 {
+            p.record(k(rng.below(4)), k(rng.below(4)), rng.next_f32());
+        }
+        let bytes = p.to_bytes();
+        let back = PayoffMatrix::from_bytes(&bytes).unwrap();
+        assert_eq!(bytes, back.to_bytes(), "re-encode must be identical");
+        for a in 0..4 {
+            assert_eq!(p.elo(k(a)).to_bits(), back.elo(k(a)).to_bits());
+            for b in 0..4 {
+                assert_eq!(
+                    p.winrate(k(a), k(b)).to_bits(),
+                    back.winrate(k(a), k(b)).to_bits()
+                );
+            }
+        }
     }
 
     #[test]

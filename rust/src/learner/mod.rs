@@ -142,9 +142,13 @@ impl Learner {
     }
 
     /// Publish the version-0 seed model (random init or, in general,
-    /// imitation-learned weights) as a frozen pool member.
+    /// imitation-learned weights) as a frozen pool member.  On a resumed
+    /// run the pool already holds the seed — leave it untouched.
     fn publish_seed(&self) -> Result<()> {
         let seed_key = ModelKey::new(self.cfg.agent, 0);
+        if self.pool.get(seed_key)?.is_some() {
+            return Ok(());
+        }
         let init = self.engine.init_params(&self.cfg.env)?;
         self.pool.put(ModelBlob {
             key: seed_key,

@@ -11,6 +11,7 @@
 //! paper-vs-measured results.
 
 pub mod actor;
+pub mod checkpoint;
 pub mod config;
 pub mod envs;
 pub mod eval;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run        --config <spec.json> [--artifacts DIR]   full league (kube-lite)
+//!              [--checkpoint-dir D] [--resume D]        durable / resumed runs
 //!   eval-doom  --checkpoint <f32 file> --setting 1|2a|2b|2c --games N
 //!   eval-rps   --artifacts DIR                           exploitability demo
 //!   league-mgr / model-pool                              standalone services
@@ -73,24 +74,46 @@ fn run() -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(path)?,
-        None => {
-            let mut cfg = RunConfig::default();
-            cfg.env = args.str_or("env", "rps");
-            cfg.total_steps = args.u64_or("total-steps", 100);
-            cfg.period_steps = args.u64_or("period-steps", 25);
-            cfg.actors_per_learner = args.usize_or("actors", 2);
-            cfg.game_mgr = args.str_or("game-mgr", "uniform");
-            cfg
-        }
+        None => RunConfig {
+            env: args.str_or("env", "rps"),
+            total_steps: args.u64_or("total-steps", 100),
+            period_steps: args.u64_or("period-steps", 25),
+            actors_per_learner: args.usize_or("actors", 2),
+            game_mgr: args.str_or("game-mgr", "uniform"),
+            ..RunConfig::default()
+        },
     };
+    // durability flags override the config file either way
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(dir.to_string());
+    }
+    if let Some(dir) = args.get("resume") {
+        cfg.resume = Some(dir.to_string());
+        // a resumed run keeps checkpointing into the same dir by default
+        if cfg.checkpoint_dir.is_none() {
+            cfg.checkpoint_dir = Some(dir.to_string());
+        }
+    }
+    cfg.checkpoint_every_secs =
+        args.u64_or("checkpoint-every", cfg.checkpoint_every_secs);
+    cfg.validate()?;
     let eng = engine(args)?;
     println!(
         "launching league: env={} M_G={} M_L={} M_A={} sampler={}",
         cfg.env, cfg.n_agents, cfg.learners_per_agent, cfg.actors_per_learner,
         cfg.game_mgr
     );
+    if let Some(dir) = &cfg.resume {
+        println!("resuming from latest snapshot in {dir}");
+    }
+    if let Some(dir) = &cfg.checkpoint_dir {
+        println!(
+            "checkpointing to {dir} every {}s (keep {})",
+            cfg.checkpoint_every_secs, cfg.checkpoint_keep
+        );
+    }
     let mut dep = Deployment::start(cfg, eng)?;
     let mut last = 0;
     while !dep.learners_done() {

@@ -1,25 +1,215 @@
-//! ModelPool: versioned in-memory parameter store (paper §3.2).
+//! ModelPool: versioned parameter store with LRU disk spill (paper §3.2).
 //!
 //! "During the whole training lifecycle, ModelPool must respond to any
 //! parameter requesting (read) or updating (write) instantaneously" —
-//! parameters are kept in memory; up to M_M replicas run simultaneously
-//! and clients pick a random replica per read (load balancing), writing
-//! through to all replicas.
+//! hot parameters are kept in memory; up to M_M replicas run
+//! simultaneously and clients pick a random replica per read (load
+//! balancing), writing through to all replicas.
+//!
+//! Long CSP runs accumulate an unbounded frozen pool, so each replica
+//! can be given a resident-byte budget plus a spill directory: cold
+//! frozen blobs (never an agent's latest, never an unfrozen learner
+//! model) are evicted to disk in LRU order and transparently faulted
+//! back in on `GetModel`.  Spill files use the `ModelBlob` wire encoding
+//! and are written temp-then-rename, so a crash never leaves a torn
+//! blob (see DESIGN.md §Spill policy).
 
 use crate::proto::{ModelBlob, ModelKey, Msg};
 use crate::transport::{RepServer, ReqClient};
+use crate::util::codec::Wire;
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
+
+/// Memory policy for one replica.  The default (no dir, budget 0) keeps
+/// everything resident forever — the seed behaviour.
+#[derive(Clone, Debug, Default)]
+pub struct PoolOptions {
+    /// Directory for spilled blobs; None disables spilling entirely.
+    pub spill_dir: Option<PathBuf>,
+    /// Resident-byte budget (0 = unbounded).  Only frozen, non-latest
+    /// blobs are evicted, so the budget is a target, not a hard cap, when
+    /// live learner models alone exceed it.
+    pub mem_budget: usize,
+}
+
+/// Approximate resident cost of a blob (param + hp payloads dominate).
+fn blob_cost(b: &ModelBlob) -> usize {
+    b.params.len() * 4 + b.hp.len() * 4 + std::mem::size_of::<ModelBlob>()
+}
+
+/// Assemble a full-pool snapshot from [`Store::snapshot_parts`] output.
+/// Runs WITHOUT the store lock: the disk reads of spilled blobs must not
+/// stall GetModel/PutModel traffic ("respond ... instantaneously").  A
+/// spill file that vanishes mid-read (concurrent re-put) is skipped —
+/// that blob is resident again and will be in the next snapshot.
+fn assemble_blobs(
+    resident: Vec<Arc<ModelBlob>>,
+    spilled: &[PathBuf],
+) -> Vec<ModelBlob> {
+    let mut out: Vec<ModelBlob> =
+        resident.iter().map(|b| (**b).clone()).collect();
+    for path in spilled {
+        match std::fs::read(path)
+            .map_err(anyhow::Error::from)
+            .and_then(|raw| ModelBlob::from_bytes(&raw))
+        {
+            Ok(b) => out.push(b),
+            Err(e) => eprintln!(
+                "model_pool: snapshot skipping {}: {e:#}",
+                path.display()
+            ),
+        }
+    }
+    out.sort_by_key(|b| b.key);
+    out
+}
 
 #[derive(Default)]
 struct Store {
-    blobs: BTreeMap<ModelKey, ModelBlob>,
+    /// resident blobs; `Arc` so snapshots and replies can deep-copy the
+    /// params OUTSIDE the store lock
+    blobs: BTreeMap<ModelKey, Arc<ModelBlob>>,
+    /// blobs with a valid on-disk copy (may also be resident)
+    on_disk: BTreeMap<ModelKey, PathBuf>,
     latest: BTreeMap<u32, ModelKey>, // per-agent newest version
+    last_used: BTreeMap<ModelKey, u64>,
+    tick: u64,
+    resident: usize,
+    opts: PoolOptions,
 }
 
-/// One ModelPool replica: a REQ/REP service over the in-memory store.
+impl Store {
+    fn touch(&mut self, key: ModelKey) {
+        self.tick += 1;
+        self.last_used.insert(key, self.tick);
+    }
+
+    fn insert(&mut self, blob: ModelBlob) {
+        let key = blob.key;
+        // strictly-newer versions move `latest`; an equal-version re-put
+        // (learner restart, replica replay) refreshes bytes only
+        let newer = self
+            .latest
+            .get(&key.agent)
+            .map_or(true, |cur| key.version > cur.version);
+        if newer {
+            self.latest.insert(key.agent, key);
+        }
+        // a re-put invalidates any stale disk copy
+        if let Some(path) = self.on_disk.remove(&key) {
+            std::fs::remove_file(path).ok();
+        }
+        let blob = Arc::new(blob);
+        let cost = blob_cost(&blob);
+        if let Some(old) = self.blobs.insert(key, blob) {
+            self.resident -= blob_cost(&old);
+        }
+        self.resident += cost;
+        self.touch(key);
+        self.maybe_spill();
+    }
+
+    /// Resident lookup, faulting a spilled blob back in if needed.  The
+    /// returned handle is cheap; callers deep-copy after unlocking.
+    fn fetch(&mut self, key: ModelKey) -> Option<Arc<ModelBlob>> {
+        if let Some(b) = self.blobs.get(&key).cloned() {
+            self.touch(key);
+            return Some(b);
+        }
+        let path = self.on_disk.get(&key)?.clone();
+        let blob = match std::fs::read(&path)
+            .map_err(anyhow::Error::from)
+            .and_then(|raw| ModelBlob::from_bytes(&raw))
+        {
+            Ok(b) => Arc::new(b),
+            Err(e) => {
+                // a swallowed I/O error here would read as a permanent,
+                // undiagnosable NotFound for a frozen model
+                eprintln!(
+                    "model_pool: fault-in of {key} from {} failed: {e:#}",
+                    path.display()
+                );
+                return None;
+            }
+        };
+        self.resident += blob_cost(&blob);
+        self.blobs.insert(key, blob.clone());
+        self.touch(key);
+        self.maybe_spill();
+        Some(blob)
+    }
+
+    /// Evict cold frozen blobs until the budget is met (or no candidates
+    /// remain).  The disk copy is written before the memory copy is
+    /// dropped; a blob that already has one is evicted for free.
+    fn maybe_spill(&mut self) {
+        if self.opts.mem_budget == 0 || self.opts.spill_dir.is_none() {
+            return;
+        }
+        while self.resident > self.opts.mem_budget {
+            let victim = self
+                .blobs
+                .iter()
+                .filter(|&(k, b)| b.frozen && self.latest.get(&k.agent) != Some(k))
+                .min_by_key(|&(k, _)| self.last_used.get(k).copied().unwrap_or(0))
+                .map(|(k, _)| *k);
+            let Some(key) = victim else { break };
+            if let Err(e) = self.spill_out(key) {
+                // a silent break here would quietly stop enforcing the
+                // budget (e.g. spill disk full) with no diagnostics
+                eprintln!(
+                    "model_pool: spill of {key} failed, budget not enforced: {e:#}"
+                );
+                break;
+            }
+        }
+    }
+
+    fn spill_out(&mut self, key: ModelKey) -> Result<()> {
+        let dir = self.opts.spill_dir.clone().expect("spill dir checked");
+        if !self.on_disk.contains_key(&key) {
+            let blob = self.blobs.get(&key).expect("victim is resident");
+            std::fs::create_dir_all(&dir)?;
+            let name = format!("agt{:03}-v{:06}.blob", key.agent, key.version);
+            let tmp = dir.join(format!(".{name}.tmp"));
+            std::fs::write(&tmp, blob.to_bytes())?;
+            let path = dir.join(name);
+            std::fs::rename(&tmp, &path)?;
+            self.on_disk.insert(key, path);
+        }
+        if let Some(b) = self.blobs.remove(&key) {
+            self.resident -= blob_cost(&b);
+        }
+        Ok(())
+    }
+
+    /// Snapshot inputs: handles to the resident blobs plus the paths of
+    /// spill files whose only copy is on disk.  O(n) Arc bumps — the
+    /// caller releases the store lock before any deep copy or disk read.
+    fn snapshot_parts(&self) -> (Vec<Arc<ModelBlob>>, Vec<PathBuf>) {
+        let resident: Vec<Arc<ModelBlob>> = self.blobs.values().cloned().collect();
+        let spilled: Vec<PathBuf> = self
+            .on_disk
+            .iter()
+            .filter(|&(k, _)| !self.blobs.contains_key(k))
+            .map(|(_, p)| p.clone())
+            .collect();
+        (resident, spilled)
+    }
+
+    fn model_count(&self) -> usize {
+        self.blobs.len() + self.spilled_count()
+    }
+
+    fn spilled_count(&self) -> usize {
+        self.on_disk.keys().filter(|&k| !self.blobs.contains_key(k)).count()
+    }
+}
+
+/// One ModelPool replica: a REQ/REP service over the spill-aware store.
 pub struct ModelPoolServer {
     pub addr: String,
     store: Arc<Mutex<Store>>,
@@ -28,33 +218,42 @@ pub struct ModelPoolServer {
 
 impl ModelPoolServer {
     pub fn start(bind: &str) -> Result<ModelPoolServer> {
-        let store = Arc::new(Mutex::new(Store::default()));
+        Self::start_with(bind, PoolOptions::default())
+    }
+
+    pub fn start_with(bind: &str, opts: PoolOptions) -> Result<ModelPoolServer> {
+        let store = Arc::new(Mutex::new(Store { opts, ..Store::default() }));
         let s2 = store.clone();
         let server = RepServer::serve(bind, move |msg| match msg {
             Msg::PutModel(blob) => {
-                let mut st = s2.lock().unwrap();
-                let newer = st
-                    .latest
-                    .get(&blob.key.agent)
-                    .map_or(true, |cur| blob.key.version >= cur.version);
-                if newer {
-                    st.latest.insert(blob.key.agent, blob.key);
-                }
-                st.blobs.insert(blob.key, blob);
+                s2.lock().unwrap().insert(blob);
                 Msg::Ok
             }
             Msg::GetModel { key } => {
-                let st = s2.lock().unwrap();
-                match st.blobs.get(&key) {
-                    Some(b) => Msg::Model(b.clone()),
+                // bind so the guard drops before the params deep-copy
+                let found = s2.lock().unwrap().fetch(key);
+                match found {
+                    Some(b) => Msg::Model((*b).clone()),
                     None => Msg::NotFound,
                 }
             }
             Msg::GetLatest { agent } => {
-                let st = s2.lock().unwrap();
-                match st.latest.get(&agent).and_then(|k| st.blobs.get(k)) {
-                    Some(b) => Msg::Model(b.clone()),
+                let found = {
+                    let mut st = s2.lock().unwrap();
+                    let key = st.latest.get(&agent).copied();
+                    key.and_then(|k| st.fetch(k))
+                };
+                match found {
+                    Some(b) => Msg::Model((*b).clone()),
                     None => Msg::NotFound,
+                }
+            }
+            Msg::PoolStats => {
+                let st = s2.lock().unwrap();
+                Msg::PoolStatsReply {
+                    resident_bytes: st.resident as u64,
+                    models: st.model_count() as u32,
+                    spilled: st.spilled_count() as u32,
                 }
             }
             Msg::Ping => Msg::Pong,
@@ -64,7 +263,42 @@ impl ModelPoolServer {
     }
 
     pub fn model_count(&self) -> usize {
-        self.store.lock().unwrap().blobs.len()
+        self.store.lock().unwrap().model_count()
+    }
+
+    /// Bytes currently held in memory (excludes spilled blobs).
+    pub fn resident_bytes(&self) -> usize {
+        self.store.lock().unwrap().resident
+    }
+
+    /// Blobs whose only copy is on disk.
+    pub fn spilled_count(&self) -> usize {
+        self.store.lock().unwrap().spilled_count()
+    }
+
+    /// Everything this replica stores, for snapshotting.  Spilled blobs
+    /// are read from disk after the store lock is released.
+    pub fn all_blobs(&self) -> Vec<ModelBlob> {
+        let (resident, spilled) = self.store.lock().unwrap().snapshot_parts();
+        assemble_blobs(resident, &spilled)
+    }
+
+    /// Restore path: bulk-load snapshot blobs.  `latest` lands on the
+    /// highest version per agent regardless of load order.
+    pub fn preload(&self, blobs: &[ModelBlob]) {
+        let mut st = self.store.lock().unwrap();
+        for b in blobs {
+            st.insert(b.clone());
+        }
+    }
+
+    /// Closure handle for the background snapshotter thread.
+    pub fn blobs_fn(&self) -> impl Fn() -> Vec<ModelBlob> + Send + 'static {
+        let store = self.store.clone();
+        move || {
+            let (resident, spilled) = store.lock().unwrap().snapshot_parts();
+            assemble_blobs(resident, &spilled)
+        }
     }
 }
 
@@ -114,6 +348,16 @@ impl ModelPoolClient {
             other => bail!("get_latest: unexpected reply {other:?}"),
         }
     }
+
+    /// (resident_bytes, models, spilled) of one random replica.
+    pub fn stats(&self) -> Result<(u64, u32, u32)> {
+        match self.pick().request(&Msg::PoolStats)? {
+            Msg::PoolStatsReply { resident_bytes, models, spilled } => {
+                Ok((resident_bytes, models, spilled))
+            }
+            other => bail!("stats: unexpected reply {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +371,22 @@ mod tests {
             hp: vec![3e-4],
             frozen: false,
         }
+    }
+
+    fn frozen_blob(agent: u32, version: u32, n: usize) -> ModelBlob {
+        ModelBlob {
+            key: ModelKey::new(agent, version),
+            params: vec![version as f32; n],
+            hp: vec![3e-4],
+            frozen: true,
+        }
+    }
+
+    fn spill_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("tleague-spill-{}-{tag}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
     }
 
     #[test]
@@ -150,6 +410,21 @@ mod tests {
         let latest = client.get_latest(0).unwrap().unwrap();
         assert_eq!(latest.key.version, 3);
         assert!(client.get_latest(7).unwrap().is_none());
+    }
+
+    /// Regression: an equal-version re-put (learner restart republishing
+    /// its current model) must refresh the stored bytes without being
+    /// treated as a *newer* version.
+    #[test]
+    fn equal_version_reput_refreshes_but_is_not_newer() {
+        let server = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        client.put(blob(0, 2, 1.0)).unwrap();
+        client.put(blob(0, 2, 9.0)).unwrap(); // same version, new bytes
+        let latest = client.get_latest(0).unwrap().unwrap();
+        assert_eq!(latest.key.version, 2);
+        assert_eq!(latest.params, vec![9.0; 8], "re-put must refresh bytes");
+        assert_eq!(server.model_count(), 1, "no duplicate entry");
     }
 
     #[test]
@@ -185,5 +460,100 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(server.model_count(), 80);
+    }
+
+    #[test]
+    fn spill_keeps_resident_under_budget_and_serves_everything() {
+        let dir = spill_dir("budget");
+        // ~8 KiB per blob, budget fits roughly 4
+        let budget = 36 * 1024;
+        let server = ModelPoolServer::start_with(
+            "127.0.0.1:0",
+            PoolOptions { spill_dir: Some(dir.clone()), mem_budget: budget },
+        )
+        .unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        for v in 0..20 {
+            client.put(frozen_blob(0, v, 2000)).unwrap();
+        }
+        assert!(
+            server.resident_bytes() <= budget,
+            "resident {} > budget {budget}",
+            server.resident_bytes()
+        );
+        assert!(server.spilled_count() > 0, "nothing spilled");
+        assert_eq!(server.model_count(), 20, "spilled blobs still counted");
+        // every blob — including spilled ones — remains retrievable, and
+        // faulting them back in never breaks the budget
+        for v in 0..20 {
+            let b = client.get(ModelKey::new(0, v)).unwrap().unwrap();
+            assert_eq!(b.params, vec![v as f32; 2000], "blob {v} corrupted");
+            assert!(server.resident_bytes() <= budget);
+        }
+        let (resident, models, _spilled) = client.stats().unwrap();
+        assert!(resident as usize <= budget);
+        assert_eq!(models, 20);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spill_never_evicts_latest_or_unfrozen() {
+        let dir = spill_dir("protect");
+        let server = ModelPoolServer::start_with(
+            "127.0.0.1:0",
+            PoolOptions { spill_dir: Some(dir.clone()), mem_budget: 1 },
+        )
+        .unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        // unfrozen learner model + the frozen latest: neither may spill
+        // even with an absurdly small budget
+        client
+            .put(ModelBlob {
+                key: ModelKey::new(0, 1),
+                params: vec![1.0; 512],
+                hp: vec![3e-4],
+                frozen: false,
+            })
+            .unwrap();
+        client.put(frozen_blob(1, 1, 512)).unwrap();
+        assert_eq!(server.spilled_count(), 0, "protected blobs were spilled");
+        // a second frozen version for agent 1 makes v1 evictable
+        client.put(frozen_blob(1, 2, 512)).unwrap();
+        assert_eq!(server.spilled_count(), 1);
+        assert!(
+            client.get(ModelKey::new(1, 1)).unwrap().is_some(),
+            "spilled blob must fault back in"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn all_blobs_includes_spilled_and_preload_restores() {
+        let dir = spill_dir("snapshot");
+        let server = ModelPoolServer::start_with(
+            "127.0.0.1:0",
+            PoolOptions { spill_dir: Some(dir.clone()), mem_budget: 20 * 1024 },
+        )
+        .unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        for v in 0..8 {
+            client.put(frozen_blob(0, v, 2000)).unwrap();
+        }
+        let blobs = server.all_blobs();
+        assert_eq!(blobs.len(), 8, "snapshot must cover spilled blobs");
+        // restore into a fresh, spill-less replica (out of order)
+        let restored = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let mut shuffled = blobs.clone();
+        shuffled.reverse();
+        restored.preload(&shuffled);
+        let c2 = ModelPoolClient::connect(&[restored.addr.clone()]);
+        assert_eq!(c2.get_latest(0).unwrap().unwrap().key.version, 7);
+        for v in 0..8 {
+            assert_eq!(
+                c2.get(ModelKey::new(0, v)).unwrap().unwrap().params,
+                vec![v as f32; 2000]
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

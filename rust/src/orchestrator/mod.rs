@@ -7,17 +7,19 @@
 //! auto-restart on panic/error, and can be scaled up/down at runtime.
 
 use crate::actor::{Actor, ActorConfig, PolicyBackend};
+use crate::checkpoint::{CheckpointMgr, LeagueSnapshot};
 use crate::config::RunConfig;
 use crate::inference::{InfServer, InfServerConfig};
 use crate::league::{LeagueConfig, LeagueMgrServer, LeagueStats};
 use crate::learner::allreduce::Allreduce;
 use crate::learner::{Learner, LearnerConfig, TrainStats};
-use crate::model_pool::ModelPoolServer;
+use crate::model_pool::{ModelPoolServer, PoolOptions};
 use crate::runtime::Engine;
-use anyhow::Result;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Live status shared by a learner thread.
 #[derive(Default)]
@@ -45,19 +47,58 @@ pub struct Deployment {
     pub restarts: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     next_actor_id: AtomicU64,
+    snapshotter: Option<std::thread::JoinHandle<()>>,
+    /// set only after the learners have joined, so the snapshotter's final
+    /// save sees their last published/frozen models
+    snap_stop: Arc<AtomicBool>,
 }
 
 impl Deployment {
     /// Launch everything declared by `cfg`.  Returns once all services
     /// are up and actors are running.
+    ///
+    /// With `cfg.resume`, the latest snapshot in that directory seeds the
+    /// LeagueMgr (pool/payoff/Elo/hyper/RNG/counters) and pre-populates
+    /// every ModelPool replica, so the run continues where it was killed.
     pub fn start(cfg: RunConfig, engine: Arc<Engine>) -> Result<Deployment> {
         cfg.validate()?;
+        let resume_snap: Option<LeagueSnapshot> = match &cfg.resume {
+            Some(dir) => Some(
+                CheckpointMgr::open(dir, cfg.checkpoint_keep)?
+                    .load_latest()?
+                    .with_context(|| format!("resume: no snapshot in {dir}"))?,
+            ),
+            None => None,
+        };
+
+        // spill directories live next to the snapshots (or under the
+        // resume dir when the run isn't writing new checkpoints)
+        let spill_root: Option<PathBuf> = cfg
+            .checkpoint_dir
+            .as_ref()
+            .or(cfg.resume.as_ref())
+            .map(PathBuf::from);
         let pools: Vec<ModelPoolServer> = (0..cfg.model_pools)
-            .map(|_| ModelPoolServer::start("127.0.0.1:0"))
+            .map(|i| {
+                ModelPoolServer::start_with(
+                    "127.0.0.1:0",
+                    PoolOptions {
+                        spill_dir: spill_root
+                            .as_ref()
+                            .map(|d| d.join(format!("spill-{i}"))),
+                        mem_budget: cfg.pool_mem_budget_bytes,
+                    },
+                )
+            })
             .collect::<Result<_>>()?;
         let pool_addrs: Vec<String> = pools.iter().map(|p| p.addr.clone()).collect();
+        if let Some(snap) = &resume_snap {
+            for p in &pools {
+                p.preload(&snap.models);
+            }
+        }
 
-        let league = LeagueMgrServer::start(
+        let league = LeagueMgrServer::start_with(
             "127.0.0.1:0",
             LeagueConfig {
                 n_agents: cfg.n_agents,
@@ -75,11 +116,51 @@ impl Deployment {
                 },
                 seed: cfg.seed,
             },
+            resume_snap.as_ref(),
         )?;
 
         let stop = Arc::new(AtomicBool::new(false));
         let actor_stop = Arc::new(AtomicBool::new(false));
         let manifest_env = crate::envs::manifest_name(&cfg.env).to_string();
+
+        // ---- background snapshotter -----------------------------------
+        // periodically persists league + pool state; writes once more on
+        // shutdown so even a clean exit is resumable.  It watches its own
+        // stop flag, raised only after the learner threads have joined —
+        // the final snapshot must include their last frozen models.
+        let snap_stop = Arc::new(AtomicBool::new(false));
+        let snapshotter = match &cfg.checkpoint_dir {
+            Some(dir) => {
+                let mgr = CheckpointMgr::open(dir, cfg.checkpoint_keep)?;
+                let snap_league = league.snapshot_fn();
+                let snap_blobs = pools[0].blobs_fn();
+                let stop2 = snap_stop.clone();
+                let every = Duration::from_secs(cfg.checkpoint_every_secs);
+                Some(
+                    std::thread::Builder::new()
+                        .name("snapshotter".into())
+                        .spawn(move || {
+                            let save = |mgr: &CheckpointMgr| {
+                                let mut snap = snap_league();
+                                snap.models = snap_blobs();
+                                if let Err(e) = mgr.save(&snap) {
+                                    eprintln!("snapshot failed: {e:#}");
+                                }
+                            };
+                            let mut last = Instant::now();
+                            while !stop2.load(Ordering::Relaxed) {
+                                std::thread::sleep(Duration::from_millis(25));
+                                if last.elapsed() >= every {
+                                    save(&mgr);
+                                    last = Instant::now();
+                                }
+                            }
+                            save(&mgr);
+                        })?,
+                )
+            }
+            None => None,
+        };
 
         // ---- learners -------------------------------------------------
         let mut learner_status = Vec::new();
@@ -184,6 +265,8 @@ impl Deployment {
             restarts: Arc::new(AtomicU64::new(0)),
             stop,
             next_actor_id: AtomicU64::new(0),
+            snapshotter,
+            snap_stop,
         };
 
         // ---- actors (M_A per learner) ----------------------------------
@@ -276,6 +359,20 @@ impl Deployment {
         self.league.stats()
     }
 
+    /// Force a snapshot right now (tests / operator tooling); returns the
+    /// path written.  Requires `checkpoint_dir`.
+    pub fn snapshot_now(&self) -> Result<PathBuf> {
+        let dir = self
+            .cfg
+            .checkpoint_dir
+            .as_ref()
+            .context("snapshot_now requires cfg.checkpoint_dir")?;
+        let mgr = CheckpointMgr::open(dir, self.cfg.checkpoint_keep)?;
+        let mut snap = self.league.snapshot();
+        snap.models = self.pools[0].all_blobs();
+        mgr.save(&snap)
+    }
+
     pub fn learners_done(&self) -> bool {
         self.learner_status
             .iter()
@@ -310,6 +407,12 @@ impl Deployment {
         self.stop.store(true, Ordering::Relaxed);
         for h in self.learner_handles.drain(..) {
             let _ = h.join();
+        }
+        // learners are fully stopped: everything they will ever publish is
+        // in the pools, so the snapshotter's final save is complete
+        self.snap_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.snapshotter.take() {
+            h.join().ok();
         }
         for s in self.inf_servers.iter_mut() {
             s.shutdown();

@@ -101,6 +101,9 @@ pub enum Msg {
     GetLatest { agent: u32 },
     Model(ModelBlob),
     NotFound,
+    /// Observability probe: resident memory + spill state of a replica.
+    PoolStats,
+    PoolStatsReply { resident_bytes: u64, models: u32, spilled: u32 },
     // -- Learner data port ---------------------------------------------------
     Traj(TrajSegment),
     // -- InfServer -------------------------------------------------------
@@ -258,6 +261,13 @@ impl Wire for Msg {
                 b.encode(buf);
             }
             Msg::NotFound => buf.put_u8(24),
+            Msg::PoolStats => buf.put_u8(25),
+            Msg::PoolStatsReply { resident_bytes, models, spilled } => {
+                buf.put_u8(26);
+                buf.put_u64(*resident_bytes);
+                buf.put_u32(*models);
+                buf.put_u32(*spilled);
+            }
             Msg::Traj(t) => {
                 buf.put_u8(30);
                 t.encode(buf);
@@ -294,6 +304,12 @@ impl Wire for Msg {
             22 => Msg::GetLatest { agent: cur.u32()? },
             23 => Msg::Model(ModelBlob::decode(cur)?),
             24 => Msg::NotFound,
+            25 => Msg::PoolStats,
+            26 => Msg::PoolStatsReply {
+                resident_bytes: cur.u64()?,
+                models: cur.u32()?,
+                spilled: cur.u32()?,
+            },
             30 => Msg::Traj(TrajSegment::decode(cur)?),
             40 => Msg::InferReq {
                 key: ModelKey::decode(cur)?,
@@ -368,6 +384,12 @@ mod tests {
             Msg::GetLatest { agent: 1 },
             Msg::Model(blob),
             Msg::NotFound,
+            Msg::PoolStats,
+            Msg::PoolStatsReply {
+                resident_bytes: 1 << 30,
+                models: 120,
+                spilled: 40,
+            },
             Msg::Traj(traj),
             Msg::InferReq {
                 key: ModelKey::new(0, 0),

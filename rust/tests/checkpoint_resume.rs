@@ -1,0 +1,262 @@
+//! Kill-and-resume integration: snapshot a live league, tear everything
+//! down, restore from disk, and verify the restored state is bit-exact —
+//! including model blobs that were spilled out of memory.
+//!
+//! The Deployment-level test needs `make artifacts` (PJRT); it skips
+//! otherwise.  The service-level tests run everywhere.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tleague::checkpoint::CheckpointMgr;
+use tleague::config::RunConfig;
+use tleague::league::{LeagueClient, LeagueConfig, LeagueMgrServer};
+use tleague::model_pool::{ModelPoolClient, ModelPoolServer, PoolOptions};
+use tleague::orchestrator::Deployment;
+use tleague::proto::{MatchOutcome, ModelBlob, ModelKey};
+use tleague::runtime::Engine;
+use tleague::util::codec::Wire;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tleague-resume-{}-{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn frozen_blob(version: u32, n: usize) -> ModelBlob {
+    ModelBlob {
+        key: ModelKey::new(0, version),
+        params: (0..n).map(|i| (i as f32).sin() + version as f32).collect(),
+        hp: vec![3e-4],
+        frozen: true,
+    }
+}
+
+/// Run a short league over real TCP, snapshot it, tear it down, restore,
+/// and require a bit-exact round trip of pool/payoff/Elo/hyper state.
+#[test]
+fn league_and_pool_roundtrip_bit_exact() {
+    let ckpt_dir = tmp_dir("svc");
+    let spill_dir = ckpt_dir.join("spill-0");
+    let league = LeagueMgrServer::start(
+        "127.0.0.1:0",
+        LeagueConfig {
+            n_agents: 1,
+            n_opponents: 1,
+            game_mgr: "pfsp".into(),
+            hp_layout: vec!["lr".into(), "ent_coef".into()],
+            hp_default: vec![3e-4, 0.01],
+            seed: 11,
+        },
+    )
+    .unwrap();
+    let pool = ModelPoolServer::start_with(
+        "127.0.0.1:0",
+        PoolOptions { spill_dir: Some(spill_dir), mem_budget: 36 * 1024 },
+    )
+    .unwrap();
+    let lc = LeagueClient::connect(&league.addr);
+    let pc = ModelPoolClient::connect(&[pool.addr.clone()]);
+
+    // ~10 learning periods: outcomes, freezes, model publications
+    pc.put(frozen_blob(0, 2000)).unwrap();
+    for v in 1..=10u32 {
+        let me = ModelKey::new(0, v);
+        for g in 0..4 {
+            lc.report_outcome(MatchOutcome {
+                task_id: 0,
+                learner_key: me,
+                opponents: vec![ModelKey::new(0, g % v)],
+                outcome: [1.0, 0.0, 0.5, 1.0][g as usize % 4],
+                episode_len: 7,
+                frames: 7,
+            })
+            .unwrap();
+        }
+        pc.put(frozen_blob(v, 2000)).unwrap();
+        lc.notify_period_done(me).unwrap();
+    }
+    let _ = lc.request_actor_task("0/a").unwrap(); // advance rng + task ids
+    assert!(pool.spilled_count() > 0, "budget never forced a spill");
+
+    // ---- snapshot, then kill everything ----------------------------
+    let mut snap = league.snapshot();
+    snap.models = pool.all_blobs();
+    assert_eq!(snap.models.len(), 11);
+    let mgr = CheckpointMgr::open(&ckpt_dir, 3).unwrap();
+    mgr.save(&snap).unwrap();
+
+    let stats = league.stats();
+    let pool_keys = league.pool();
+    let elos: Vec<u64> =
+        pool_keys.iter().map(|&k| league.elo(k).to_bits()).collect();
+    let winrates: Vec<u64> = pool_keys
+        .iter()
+        .map(|&k| league.winrate(ModelKey::new(0, 10), k).to_bits())
+        .collect();
+    let hp = lc.request_learner_task(0).unwrap().hp;
+    drop(lc);
+    drop(league);
+    drop(pool);
+
+    // ---- restore from disk -----------------------------------------
+    let loaded = CheckpointMgr::open(&ckpt_dir, 3)
+        .unwrap()
+        .load_latest()
+        .unwrap()
+        .expect("snapshot on disk");
+    assert_eq!(snap.to_bytes(), loaded.to_bytes(), "round trip not bit-exact");
+
+    let league2 = LeagueMgrServer::start_with(
+        "127.0.0.1:0",
+        LeagueConfig {
+            n_agents: 1,
+            n_opponents: 1,
+            game_mgr: "uniform".into(), // snapshot's sampler must win
+            hp_layout: vec!["lr".into(), "ent_coef".into()],
+            hp_default: vec![1.0, 1.0],
+            seed: 999,
+        },
+        Some(&loaded),
+    )
+    .unwrap();
+    let pool2 = ModelPoolServer::start_with(
+        "127.0.0.1:0",
+        PoolOptions {
+            spill_dir: Some(ckpt_dir.join("spill-restored")),
+            mem_budget: 36 * 1024,
+        },
+    )
+    .unwrap();
+    pool2.preload(&loaded.models);
+
+    let rstats = league2.stats();
+    assert_eq!(rstats.pool_size, stats.pool_size);
+    assert_eq!(rstats.episodes, stats.episodes);
+    assert_eq!(rstats.frames, stats.frames);
+    assert_eq!(rstats.total_matches, stats.total_matches);
+    assert_eq!(rstats.current, stats.current);
+    assert_eq!(league2.pool(), pool_keys);
+    for (i, &k) in pool_keys.iter().enumerate() {
+        assert_eq!(league2.elo(k).to_bits(), elos[i], "Elo drift at {k}");
+        assert_eq!(
+            league2.winrate(ModelKey::new(0, 10), k).to_bits(),
+            winrates[i],
+            "winrate drift at {k}"
+        );
+    }
+    let lc2 = LeagueClient::connect(&league2.addr);
+    assert_eq!(lc2.request_learner_task(0).unwrap().hp, hp, "hyper drift");
+
+    // every blob — resident or spilled — must be served, bit-identical
+    let pc2 = ModelPoolClient::connect(&[pool2.addr.clone()]);
+    assert!(pool2.resident_bytes() <= 36 * 1024, "budget violated on restore");
+    for v in 0..=10u32 {
+        let b = pc2
+            .get(ModelKey::new(0, v))
+            .unwrap()
+            .unwrap_or_else(|| panic!("NotFound for restored blob v{v}"));
+        assert_eq!(b.params, frozen_blob(v, 2000).params, "blob v{v} corrupted");
+    }
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}
+
+/// Long-run memory bound: a pool fed far more frozen models than the
+/// budget admits must stay under it while serving every blob.
+#[test]
+fn model_pool_stays_bounded_over_long_run() {
+    let dir = tmp_dir("bound");
+    let budget = 64 * 1024;
+    let pool = ModelPoolServer::start_with(
+        "127.0.0.1:0",
+        PoolOptions { spill_dir: Some(dir.clone()), mem_budget: budget },
+    )
+    .unwrap();
+    let pc = ModelPoolClient::connect(&[pool.addr.clone()]);
+    for v in 0..100u32 {
+        pc.put(frozen_blob(v, 2000)).unwrap();
+        assert!(
+            pool.resident_bytes() <= budget,
+            "resident {} > budget {budget} after v{v}",
+            pool.resident_bytes()
+        );
+        // interleave reads of old versions to exercise fault-in mid-run
+        if v % 7 == 0 && v > 0 {
+            assert!(pc.get(ModelKey::new(0, v / 2)).unwrap().is_some());
+        }
+    }
+    assert_eq!(pool.model_count(), 100);
+    for v in 0..100u32 {
+        assert!(
+            pc.get(ModelKey::new(0, v)).unwrap().is_some(),
+            "v{v} lost"
+        );
+        assert!(pool.resident_bytes() <= budget);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Full-stack kill-and-resume through the orchestrator (needs PJRT
+/// artifacts): train a short league with checkpointing on, kill the
+/// deployment, resume, and require identical league state plus a usable
+/// (spill-backed) model pool.
+#[test]
+fn deployment_kill_and_resume() {
+    let art = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !art.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Arc::new(Engine::load(&art).unwrap());
+    let ckpt_dir = tmp_dir("deploy");
+
+    let mut cfg = RunConfig::default();
+    cfg.env = "rps".into();
+    cfg.total_steps = 6;
+    cfg.period_steps = 3;
+    cfg.actors_per_learner = 2;
+    cfg.checkpoint_dir = Some(ckpt_dir.to_string_lossy().into_owned());
+    cfg.checkpoint_every_secs = 3600; // only the shutdown snapshot matters
+    cfg.pool_mem_budget_bytes = 1; // spill everything spillable
+    let mut dep = Deployment::start(cfg.clone(), engine.clone()).unwrap();
+    assert!(dep.wait(Duration::from_secs(120)), "did not finish");
+    dep.shutdown(); // snapshotter writes the final snapshot here
+
+    let stats = dep.league_stats();
+    let pool_keys = dep.league.pool();
+    let elos: Vec<u64> =
+        pool_keys.iter().map(|&k| dep.league.elo(k).to_bits()).collect();
+    drop(dep);
+
+    let mut cfg2 = cfg.clone();
+    cfg2.resume = Some(ckpt_dir.to_string_lossy().into_owned());
+    cfg2.checkpoint_dir = None;
+    cfg2.total_steps = 0; // freeze the resumed state for comparison
+    cfg2.actors_per_learner = 0;
+    let mut dep2 = Deployment::start(cfg2, engine).unwrap();
+
+    let rstats = dep2.league_stats();
+    assert_eq!(rstats.pool_size, stats.pool_size, "pool size drift");
+    assert_eq!(rstats.episodes, stats.episodes, "episode counter drift");
+    assert_eq!(rstats.frames, stats.frames, "frame counter drift");
+    assert_eq!(rstats.current, stats.current, "learner keys drift");
+    assert_eq!(dep2.league.pool(), pool_keys);
+    for (i, &k) in pool_keys.iter().enumerate() {
+        assert_eq!(dep2.league.elo(k).to_bits(), elos[i], "Elo drift at {k}");
+    }
+    // every frozen model must be served from the resumed pool (spilled
+    // blobs fault back in; none may be NotFound)
+    let pc = ModelPoolClient::connect(&[dep2.pool_addrs[0].clone()]);
+    let m = engine.manifest.env("rps").unwrap();
+    for &k in &pool_keys {
+        let blob = pc
+            .get(k)
+            .unwrap()
+            .unwrap_or_else(|| panic!("NotFound for {k} after resume"));
+        assert_eq!(blob.params.len(), m.param_count);
+    }
+    dep2.shutdown();
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}
