@@ -15,4 +15,10 @@ fi
 echo "== tier-1: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
+
+# Perf smoke: codec + model-pool data plane.  Refreshes the committed
+# perf-trajectory file with this image's numbers (see BENCH_pr2.json).
+echo "== bench smoke: cargo bench --bench bench_main -- codec pool"
+# --bench bench_main: the lib/bin libtest harnesses would reject --json
+cargo bench --bench bench_main -- codec pool --json BENCH_pr2.json
 echo "CI OK"

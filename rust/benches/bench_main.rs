@@ -10,41 +10,58 @@
 //!   samplers    — GameMgr opponent-sampling cost (ablation A1 substrate)
 //!   replay      — blocking vs ratio replay modes (ablation A3)
 //!   checkpoint  — league snapshot encode/decode + disk save/restore MB/s
+//!   pool        — ModelPool serve path: cold vs frame-cache GetModel,
+//!                 if-newer NotModified latency
+//!   batcher     — InfServer condvar batcher wake-to-dispatch latency
 //!
-//! Filter with `cargo bench -- <substring>`.
+//! Filter with `cargo bench -- <substring> [<substring> ...]` (a bench
+//! runs if it matches ANY given substring); add `--json <path>` to also
+//! write the rows as JSON (the BENCH_prN.json trajectory files).
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use tleague::checkpoint::{CheckpointMgr, LeagueSnapshot};
 use tleague::envs::{self, MultiAgentEnv};
+use tleague::inference::{infer_remote, InfServer, InfServerConfig};
 use tleague::league::game_mgr::make_game_mgr;
 use tleague::league::hyper::HyperMgr;
 use tleague::league::payoff::PayoffMatrix;
 use tleague::learner::replay::{assemble, ReplayMem, ReplayMode};
+use tleague::model_pool::{LatestFetch, ModelPoolClient, ModelPoolServer};
 use tleague::proto::{ModelBlob, ModelKey, Msg, TrajSegment};
 use tleague::runtime::{Engine, Tensor};
+use tleague::transport::ReqClient;
 use tleague::util::codec::Wire;
 use tleague::util::rng::Pcg32;
 
 struct Bench {
-    filter: String,
+    filters: Vec<String>,
+    json_out: Option<String>,
     rows: Vec<(String, f64, f64, String)>,
 }
 
 impl Bench {
     fn new() -> Bench {
-        let filter = std::env::args()
-            .skip(1)
-            .find(|a| !a.starts_with('-'))
-            .unwrap_or_default();
-        Bench { filter, rows: Vec::new() }
+        let mut filters = Vec::new();
+        let mut json_out = None;
+        let mut it = std::env::args().skip(1);
+        while let Some(a) = it.next() {
+            if a == "--json" {
+                json_out = it.next();
+            } else if !a.starts_with('-') {
+                filters.push(a);
+            } // other flags (cargo's --bench etc.) are ignored
+        }
+        Bench { filters, json_out, rows: Vec::new() }
     }
 
     /// Run `f` repeatedly; report median iter time and a throughput note.
     fn bench<F: FnMut() -> u64>(&mut self, name: &str, unit: &str, mut f: F) {
-        if !self.filter.is_empty() && !name.contains(&self.filter) {
+        if !self.filters.is_empty()
+            && !self.filters.iter().any(|flt| name.contains(flt.as_str()))
+        {
             return;
         }
         // warmup
@@ -69,6 +86,23 @@ impl Bench {
         );
         self.rows
             .push((name.to_string(), median * 1e3, rate, unit.to_string()));
+    }
+
+    /// Write the collected rows as JSON (rate units: see each row's
+    /// `unit`; `B`-unit rows read as bytes/s, i.e. MB/s = rate / 1e6).
+    fn write_json(&self) {
+        let Some(path) = &self.json_out else { return };
+        let mut s = String::from("{\n  \"benches\": [\n");
+        for (i, (name, ms, rate, unit)) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{name}\", \"ms_per_iter\": {ms:.6}, \
+                 \"rate_per_s\": {rate:.3}, \"unit\": \"{unit}\"}}{}\n",
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s).expect("write bench json");
+        println!("wrote {path}");
     }
 }
 
@@ -221,6 +255,70 @@ fn main() {
                 frames
             });
         }
+
+        // ---- infserver batcher -------------------------------------------
+        println!("\n# infserver batcher (condvar wake-to-dispatch vs old sleep-poll)");
+        {
+            let m = engine.manifest.env("rps").unwrap().clone();
+            let bpool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+            let bpc = ModelPoolClient::connect(&[bpool.addr.clone()]);
+            let bkey = ModelKey::new(0, 1);
+            bpc.put(ModelBlob {
+                key: bkey,
+                params: engine.init_params("rps").unwrap(),
+                hp: vec![],
+                frozen: true,
+            })
+            .unwrap();
+            let obs = vec![0.1f32; m.obs_dim];
+            // batch=1: every request is a full batch — the latency is
+            // pure condvar wake + forward + reply (no deadline wait)
+            let inf1 = InfServer::start(
+                "127.0.0.1:0",
+                InfServerConfig {
+                    env: "rps".into(),
+                    batch: 1,
+                    max_wait: Duration::from_millis(2),
+                    refresh: Duration::from_millis(50),
+                },
+                engine.clone(),
+                &[bpool.addr.clone()],
+            )
+            .unwrap();
+            let c1 = ReqClient::connect(&inf1.addr);
+            let o = obs.clone();
+            b.bench("batcher/wake_to_dispatch_b1", "req", move || {
+                let mut n = 0;
+                for _ in 0..50 {
+                    infer_remote(&c1, bkey, &o, 1).unwrap();
+                    n += 1;
+                }
+                n
+            });
+            // batch=infer_b with a single client: every request rides
+            // the max_wait deadline — measures the deadline-timer path
+            let infb = InfServer::start(
+                "127.0.0.1:0",
+                InfServerConfig {
+                    env: "rps".into(),
+                    batch: m.infer_b,
+                    max_wait: Duration::from_millis(2),
+                    refresh: Duration::from_millis(50),
+                },
+                engine.clone(),
+                &[bpool.addr.clone()],
+            )
+            .unwrap();
+            let cb = ReqClient::connect(&infb.addr);
+            b.bench("batcher/deadline_partial_b1", "req", move || {
+                let mut n = 0;
+                for _ in 0..20 {
+                    infer_remote(&cb, bkey, &obs, 1).unwrap();
+                    n += 1;
+                }
+                n
+            });
+        }
     } else {
         println!("\n(artifacts not built; skipping PJRT benches)");
     }
@@ -351,5 +449,72 @@ fn main() {
     }
     std::fs::remove_dir_all(&ckpt_dir).ok();
 
+    // ---- model pool serve path --------------------------------------------
+    println!("\n# model pool data plane (1M-f32 params = 4 MB per blob, loopback TCP)");
+    {
+        let srv = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let cli = ModelPoolClient::connect(&[srv.addr.clone()]);
+        let pkey = ModelKey::new(0, 1);
+        let n_params = 1_000_000usize;
+        let blob_bytes = (n_params * 4) as u64;
+        let mk = |v: f32| ModelBlob {
+            key: pkey,
+            params: vec![v; n_params],
+            hp: vec![3e-4],
+            frozen: false,
+        };
+        // setup OUTSIDE the (filterable) bench closures so every bench
+        // in this section works standalone under any filter
+        cli.put(mk(1.0)).unwrap();
+        // cold: every iteration re-puts (which invalidates the frame
+        // cache) then gets — one params encode per get.  Counted bytes
+        // cover both directions, so the rate is the combined MB/s.
+        b.bench("pool/reput_then_get_cold", "B", || {
+            cli.put(mk(2.0)).unwrap();
+            let got = cli.get(pkey).unwrap().unwrap();
+            std::hint::black_box(&got);
+            2 * blob_bytes
+        });
+        let cold_encodes = srv.frame_encodes();
+        // hot: repeated gets of an unchanged blob — served from the
+        // pre-encoded frame cache with zero params copy / zero encode
+        b.bench("pool/get_model_hot", "B", || {
+            let mut n = 0;
+            for _ in 0..4 {
+                let got = cli.get(pkey).unwrap().unwrap();
+                std::hint::black_box(&got);
+                n += blob_bytes;
+            }
+            n
+        });
+        let hot_encodes = srv.frame_encodes() - cold_encodes;
+        assert!(
+            hot_encodes <= 1,
+            "hot gets must hit the frame cache (saw {hot_encodes} rebuilds)"
+        );
+        // steady-state refresh of an unchanged in-training model: O(1)
+        // NotModified replies instead of the 4 MB payload
+        let rev = match cli.get_latest_if_newer(0, 0, 0).unwrap() {
+            LatestFetch::New { rev, .. } => rev,
+            other => panic!("expected New, got {other:?}"),
+        };
+        b.bench("pool/if_newer_hit_notmodified", "req", || {
+            let mut n = 0;
+            for _ in 0..500 {
+                match cli.get_latest_if_newer(0, 1, rev).unwrap() {
+                    LatestFetch::NotModified => {}
+                    other => panic!("expected NotModified, got {other:?}"),
+                }
+                n += 1;
+            }
+            n
+        });
+        println!(
+            "pool frame encodes: {} total (hot gets + if-newer hits add zero)",
+            srv.frame_encodes()
+        );
+    }
+
     println!("\n{} benches run", b.rows.len());
+    b.write_json();
 }

@@ -12,7 +12,7 @@
 use crate::envs::{self, MultiAgentEnv};
 use crate::inference::infer_remote;
 use crate::league::LeagueClient;
-use crate::model_pool::ModelPoolClient;
+use crate::model_pool::{LatestFetch, ModelPoolClient};
 use crate::proto::{MatchOutcome, ModelKey, TaskSpec, TrajSegment};
 use crate::runtime::Engine;
 use crate::transport::{PushClient, ReqClient};
@@ -126,6 +126,9 @@ pub struct Actor {
     act_dim: usize,
     /// host params + device-buffer cache id (bumped on refresh)
     params: HashMap<ModelKey, (Arc<Vec<f32>>, u64)>,
+    /// per-agent (version, rev) held from the last if-newer refresh, so
+    /// steady-state refreshes transfer O(1) bytes (NotModified)
+    latest_have: HashMap<u32, (u32, u64)>,
     task: Option<TaskSpec>,
     seg: SegBuffer,
     cur_obs: Vec<Vec<f32>>,
@@ -179,6 +182,7 @@ impl Actor {
             obs_dim,
             act_dim,
             params: HashMap::new(),
+            latest_have: HashMap::new(),
             task: None,
             seg: SegBuffer::new(),
             cur_obs: Vec::new(),
@@ -196,18 +200,11 @@ impl Actor {
         self.train_t = t;
     }
 
-    fn fetch_params(&mut self, key: ModelKey, force: bool) -> Result<Arc<Vec<f32>>> {
-        if !force {
-            if let Some((p, _)) = self.params.get(&key) {
-                return Ok(p.clone());
-            }
-        }
-        let blob = self
-            .pool
-            .get(key)?
-            .or_else(|| self.pool.get_latest(key.agent).ok().flatten())
-            .with_context(|| format!("model {key} not in pool"))?;
-        let p = Arc::new(blob.params);
+    /// Install fetched params under `key` (the key requests are pinned
+    /// to), evicting the predecessor's device buffer and bounding the
+    /// cache.
+    fn install_params(&mut self, key: ModelKey, params: Vec<f32>) -> Arc<Vec<f32>> {
+        let p = Arc::new(params);
         let id = crate::runtime::new_cache_id();
         if let Some((_, old_id)) = self.params.insert(key, (p.clone(), id)) {
             if let PolicyBackend::Local(engine) = &self.backend {
@@ -223,13 +220,54 @@ impl Actor {
                 }
             }
         }
-        Ok(p)
+        p
+    }
+
+    fn fetch_params(&mut self, key: ModelKey, force: bool) -> Result<Arc<Vec<f32>>> {
+        if !force {
+            if let Some((p, _)) = self.params.get(&key) {
+                return Ok(p.clone());
+            }
+        }
+        let blob = self
+            .pool
+            .get(key)?
+            .or_else(|| self.pool.get_latest(key.agent).ok().flatten())
+            .with_context(|| format!("model {key} not in pool"))?;
+        Ok(self.install_params(key, blob.params))
+    }
+
+    /// Delta-aware learner refresh: echo the (version, rev) we hold so
+    /// an unchanged in-training model costs a NotModified instead of a
+    /// full params transfer.
+    fn refresh_learner(&mut self, key: ModelKey) -> Result<()> {
+        let (hv, hr) =
+            self.latest_have.get(&key.agent).copied().unwrap_or((0, 0));
+        match self.pool.get_latest_if_newer(key.agent, hv, hr) {
+            Ok(LatestFetch::NotModified) if self.params.contains_key(&key) => {
+                return Ok(());
+            }
+            Ok(LatestFetch::New { rev, blob }) => {
+                self.latest_have.insert(key.agent, (blob.key.version, rev));
+                self.install_params(key, blob.params);
+                return Ok(());
+            }
+            // NotFound, transport error, or NotModified without a local
+            // copy under this task's key: take the legacy full fetch
+            _ => {}
+        }
+        self.fetch_params(key, true)?;
+        Ok(())
     }
 
     fn begin_task(&mut self) -> Result<()> {
         let task = self.league.request_actor_task(&self.cfg.actor_id)?;
         let refresh = self.episodes_done % self.cfg.refresh_every.max(1) == 0;
-        self.fetch_params(task.learner_key, refresh)?;
+        if refresh {
+            self.refresh_learner(task.learner_key)?;
+        } else {
+            self.fetch_params(task.learner_key, false)?;
+        }
         for &op in &task.opponents {
             self.fetch_params(op, false)?;
         }

@@ -43,6 +43,13 @@ pub struct RunConfig {
     pub pool_mem_budget_bytes: usize,
     /// restart from the latest snapshot in this directory
     pub resume: Option<String>,
+    /// actor param-refresh cadence in episodes (delta-aware: an
+    /// unchanged in-training model costs an O(1) NotModified)
+    pub refresh_every: u32,
+    /// InfServer partial-batch deadline in microseconds
+    pub infer_max_wait_us: u64,
+    /// InfServer in-training param cache TTL in milliseconds
+    pub infer_refresh_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -69,6 +76,9 @@ impl Default for RunConfig {
             checkpoint_keep: 3,
             pool_mem_budget_bytes: 0,
             resume: None,
+            refresh_every: 1,
+            infer_max_wait_us: 2_000,
+            infer_refresh_ms: 50,
         }
     }
 }
@@ -126,6 +136,12 @@ impl RunConfig {
         if let Some(s) = j.get("resume").and_then(|v| v.as_str()) {
             cfg.resume = Some(s.to_string());
         }
+        cfg.refresh_every =
+            get_num(&j, "refresh_every", cfg.refresh_every as f64) as u32;
+        cfg.infer_max_wait_us =
+            get_num(&j, "infer_max_wait_us", cfg.infer_max_wait_us as f64) as u64;
+        cfg.infer_refresh_ms =
+            get_num(&j, "infer_refresh_ms", cfg.infer_refresh_ms as f64) as u64;
         if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
             for (k, v) in obj {
                 cfg.hp_overrides
@@ -155,6 +171,8 @@ impl RunConfig {
             "replay_mode must be 'blocking' or 'ratio:<n>'"
         );
         anyhow::ensure!(self.checkpoint_keep >= 1, "checkpoint_keep >= 1");
+        anyhow::ensure!(self.refresh_every >= 1, "refresh_every >= 1");
+        anyhow::ensure!(self.infer_refresh_ms >= 1, "infer_refresh_ms >= 1");
         anyhow::ensure!(self.checkpoint_every_secs >= 1, "checkpoint_every_secs >= 1");
         // a budget without a spill directory would silently never evict
         anyhow::ensure!(
@@ -250,6 +268,26 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"checkpoint_keep": 0}"#).is_err());
         // a budget with nowhere to spill must be rejected, not ignored
         assert!(RunConfig::from_json(r#"{"pool_mem_budget_mb": 64}"#).is_err());
+    }
+
+    #[test]
+    fn data_plane_knobs_parse() {
+        let cfg = RunConfig::from_json(
+            r#"{
+            "env": "rps", "refresh_every": 4,
+            "infer_max_wait_us": 500, "infer_refresh_ms": 20
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.refresh_every, 4);
+        assert_eq!(cfg.infer_max_wait_us, 500);
+        assert_eq!(cfg.infer_refresh_ms, 20);
+        let d = RunConfig::default();
+        assert_eq!(d.refresh_every, 1);
+        assert_eq!(d.infer_max_wait_us, 2_000);
+        assert_eq!(d.infer_refresh_ms, 50);
+        assert!(RunConfig::from_json(r#"{"refresh_every": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"infer_refresh_ms": 0}"#).is_err());
     }
 
     #[test]

@@ -10,28 +10,112 @@
 //! forever, the in-training model with a short TTL so actors follow the
 //! learner's updates.
 
-use crate::model_pool::ModelPoolClient;
-use crate::proto::{ModelKey, Msg};
+use crate::model_pool::{LatestFetch, ModelPoolClient};
+use crate::proto::{ModelBlob, ModelKey, Msg};
 use crate::runtime::{Engine, Tensor};
-use crate::transport::RepServer;
+use crate::transport::{RepServer, Reply};
 use crate::util::metrics::Meter;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 struct Pending {
-    key: ModelKey,
     obs: Vec<f32>,
-    reply: mpsc::Sender<Msg>,
+    reply: Arc<ReplySlot>,
+    seq: u64,
     enqueued: Instant,
 }
 
+/// Per-connection reply rendezvous, reused across requests.  REQ/REP
+/// serves one request at a time per connection (and `RepServer` runs a
+/// thread per connection), so a thread-local slot replaces the old
+/// per-request channel allocation on the reply path.  `seq` guards
+/// against a late batcher write landing in the NEXT request after a
+/// timeout.
+struct ReplySlot {
+    state: Mutex<(u64, Option<Msg>)>,
+    cv: Condvar,
+}
+
+impl ReplySlot {
+    fn new() -> ReplySlot {
+        ReplySlot { state: Mutex::new((0, None)), cv: Condvar::new() }
+    }
+
+    /// Claim the slot for a new request; returns the sequence number the
+    /// batcher must present to deliver into it.
+    fn begin(&self) -> u64 {
+        let mut g = self.state.lock().unwrap();
+        g.0 += 1;
+        g.1 = None; // drop any late reply to a timed-out predecessor
+        g.0
+    }
+
+    fn deliver(&self, seq: u64, msg: Msg) {
+        let mut g = self.state.lock().unwrap();
+        if g.0 == seq {
+            g.1 = Some(msg);
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self, seq: u64, timeout: Duration) -> Option<Msg> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.0 != seq {
+                return None; // superseded
+            }
+            if let Some(msg) = g.1.take() {
+                return Some(msg);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+}
+
+thread_local! {
+    static REPLY_SLOT: Arc<ReplySlot> = Arc::new(ReplySlot::new());
+}
+
+/// Requests bucketed per model: the learning model and frozen opponents
+/// batch independently, so a stale partial batch for one key never
+/// head-of-line blocks a full batch for another.
 #[derive(Default)]
-struct Queue {
-    items: Vec<Pending>,
+struct Queues {
+    by_key: HashMap<ModelKey, Vec<Pending>>,
+}
+
+/// Pop up to `max` same-shaped requests for `key`.  One key can carry
+/// different obs widths (a meta-agent group vs a single slot under the
+/// same policy); mixing widths would mis-slice the batch.
+fn take_batch(q: &mut Queues, key: ModelKey, max: usize) -> Vec<Pending> {
+    let Some(v) = q.by_key.get_mut(&key) else { return Vec::new() };
+    if v.is_empty() {
+        q.by_key.remove(&key);
+        return Vec::new();
+    }
+    let slot = v[0].obs.len();
+    let mut taken = Vec::with_capacity(max.min(v.len()));
+    let mut i = 0;
+    while i < v.len() && taken.len() < max {
+        if v[i].obs.len() == slot {
+            taken.push(v.remove(i));
+        } else {
+            i += 1;
+        }
+    }
+    if v.is_empty() {
+        q.by_key.remove(&key);
+    }
+    taken
 }
 
 pub struct InfServerConfig {
@@ -59,6 +143,8 @@ struct CacheEntry {
     /// device-buffer cache id (bumped on every refetch)
     buf_id: u64,
     frozen: bool,
+    /// pool rev stamp from the if-newer path (0 = fetched exact)
+    rev: u64,
     fetched: Instant,
 }
 
@@ -69,27 +155,42 @@ impl InfServer {
         engine: Arc<Engine>,
         pool_addrs: &[String],
     ) -> Result<InfServer> {
-        let queue = Arc::new((Mutex::new(Queue::default()), Condvar::new()));
+        let obs_dim = engine.manifest.env(&cfg.env)?.obs_dim;
+        let queue = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
         let q2 = queue.clone();
-        let server = RepServer::serve(bind, move |msg| match msg {
+        let server = RepServer::serve_frames(bind, move |msg| match msg {
             Msg::InferReq { key, obs, rows } => {
-                let (tx, rx) = mpsc::channel();
+                // validate against the manifest BEFORE queueing: a
+                // mis-sized request would mis-slice the whole batch
+                if rows == 0 || obs.len() != rows as usize * obs_dim {
+                    return Reply::Msg(Msg::Err(format!(
+                        "infserver: obs len {} != rows {rows} x obs_dim {obs_dim}",
+                        obs.len()
+                    )));
+                }
+                let (slot, seq) = REPLY_SLOT.with(|s| (s.clone(), s.begin()));
                 {
                     let (lock, cv) = &*q2;
-                    lock.lock().unwrap().items.push(Pending {
-                        key,
-                        obs,
-                        reply: tx,
-                        enqueued: Instant::now(),
-                    });
+                    lock.lock()
+                        .unwrap()
+                        .by_key
+                        .entry(key)
+                        .or_default()
+                        .push(Pending {
+                            obs,
+                            reply: slot.clone(),
+                            seq,
+                            enqueued: Instant::now(),
+                        });
                     cv.notify_one();
                 }
-                let _ = rows;
-                rx.recv_timeout(Duration::from_secs(30))
-                    .unwrap_or(Msg::Err("infserver timeout".into()))
+                Reply::Msg(
+                    slot.wait(seq, Duration::from_secs(30))
+                        .unwrap_or_else(|| Msg::Err("infserver timeout".into())),
+                )
             }
-            Msg::Ping => Msg::Pong,
-            other => Msg::Err(format!("infserver: unexpected {other:?}")),
+            Msg::Ping => Reply::Msg(Msg::Pong),
+            other => Reply::Msg(Msg::Err(format!("infserver: unexpected {other:?}"))),
         })?;
 
         let stop = Arc::new(AtomicBool::new(false));
@@ -104,58 +205,79 @@ impl InfServer {
             .name("infserver-batcher".into())
             .spawn(move || {
                 let mut cache: HashMap<ModelKey, CacheEntry> = HashMap::new();
-                while !stop2.load(Ordering::Relaxed) {
-                    let batch = {
+                // batch assembly buffer, reused across iterations
+                let mut obs_buf: Vec<f32> = Vec::new();
+                loop {
+                    // deadline-driven wake: dispatch any FULL key at
+                    // once; otherwise sleep on the condvar until the
+                    // earliest per-key deadline (oldest request +
+                    // max_wait) and dispatch that key partial
+                    let (key, batch) = {
                         let (lock, cv) = &*queue;
                         let mut q = lock.lock().unwrap();
-                        while q.items.is_empty() && !stop2.load(Ordering::Relaxed)
-                        {
-                            let (g, _t) = cv
-                                .wait_timeout(q, Duration::from_millis(20))
-                                .unwrap();
+                        loop {
+                            if stop2.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            if let Some(key) = q
+                                .by_key
+                                .iter()
+                                .find(|(_, v)| v.len() >= cfg.batch)
+                                .map(|(k, _)| *k)
+                            {
+                                break (key, take_batch(&mut q, key, cfg.batch));
+                            }
+                            let oldest = q
+                                .by_key
+                                .iter()
+                                .filter(|(_, v)| !v.is_empty())
+                                .map(|(k, v)| {
+                                    let t0 = v
+                                        .iter()
+                                        .map(|p| p.enqueued)
+                                        .min()
+                                        .expect("nonempty");
+                                    (*k, t0)
+                                })
+                                .min_by_key(|&(_, t0)| t0);
+                            // cap waits so the stop flag stays responsive
+                            let idle = Duration::from_millis(20);
+                            let wait = match oldest {
+                                None => idle,
+                                Some((key, t0)) => {
+                                    let deadline = t0 + cfg.max_wait;
+                                    let now = Instant::now();
+                                    if now >= deadline {
+                                        break (
+                                            key,
+                                            take_batch(&mut q, key, cfg.batch),
+                                        );
+                                    }
+                                    (deadline - now).min(idle)
+                                }
+                            };
+                            let (g, _t) = cv.wait_timeout(q, wait).unwrap();
                             q = g;
                         }
-                        if q.items.is_empty() {
-                            continue;
-                        }
-                        // run when full OR the oldest request is stale
-                        let oldest = q.items[0].enqueued.elapsed();
-                        if q.items.len() < cfg.batch && oldest < cfg.max_wait {
-                            drop(q);
-                            std::thread::sleep(Duration::from_micros(300));
-                            continue;
-                        }
-                        // take up to `batch` items of the majority key
-                        let key = q.items[0].key;
-                        let mut taken = Vec::new();
-                        let mut rest = Vec::new();
-                        for item in q.items.drain(..) {
-                            if item.key == key && taken.len() < cfg.batch {
-                                taken.push(item);
-                            } else {
-                                rest.push(item);
-                            }
-                        }
-                        q.items = rest;
-                        taken
                     };
                     if batch.is_empty() {
                         continue;
                     }
-                    let key = batch[0].key;
                     let params = Self::params_for(
                         &mut cache, &pool, &engine, key, cfg.refresh,
                     );
                     let reply_err = |items: &[Pending], e: &str| {
                         for it in items {
-                            let _ = it.reply.send(Msg::Err(e.to_string()));
+                            it.reply.deliver(it.seq, Msg::Err(e.to_string()));
                         }
                     };
                     let Some((params, buf_id)) = params else {
                         reply_err(&batch, "model not found");
                         continue;
                     };
-                    match Self::run_batch(&engine, &cfg, &params, buf_id, &batch) {
+                    match Self::run_batch(
+                        &engine, &cfg, &params, buf_id, &batch, &mut obs_buf,
+                    ) {
                         Ok(()) => {
                             rm.add(batch.len() as u64);
                             bm.add(1);
@@ -175,6 +297,32 @@ impl InfServer {
         })
     }
 
+    /// Cache-install a fetched blob, evicting the predecessor's device
+    /// buffer.
+    fn install(
+        cache: &mut HashMap<ModelKey, CacheEntry>,
+        engine: &Engine,
+        key: ModelKey,
+        blob: ModelBlob,
+        rev: u64,
+    ) -> (Arc<Vec<f32>>, u64) {
+        let params = Arc::new(blob.params);
+        let buf_id = crate::runtime::new_cache_id();
+        if let Some(old) = cache.insert(
+            key,
+            CacheEntry {
+                params: params.clone(),
+                buf_id,
+                frozen: blob.frozen,
+                rev,
+                fetched: Instant::now(),
+            },
+        ) {
+            engine.evict_cached(old.buf_id);
+        }
+        (params, buf_id)
+    }
+
     fn params_for(
         cache: &mut HashMap<ModelKey, CacheEntry>,
         pool: &ModelPoolClient,
@@ -186,24 +334,25 @@ impl InfServer {
             if e.frozen || e.fetched.elapsed() < ttl {
                 return Some((e.params.clone(), e.buf_id));
             }
+            // TTL expired on the in-training model: delta-aware refresh.
+            // A NotModified reply costs O(1) bytes instead of the params
+            // payload, and steady state is almost always NotModified.
+            match pool.get_latest_if_newer(key.agent, key.version, e.rev) {
+                Ok(LatestFetch::NotModified) => {
+                    let e = cache.get_mut(&key).expect("entry checked above");
+                    e.fetched = Instant::now();
+                    return Some((e.params.clone(), e.buf_id));
+                }
+                Ok(LatestFetch::New { rev, blob }) if blob.key == key => {
+                    return Some(Self::install(cache, engine, key, blob, rev));
+                }
+                // the pool moved past this version (or errored): fall
+                // through to the exact fetch — requests pin `key`
+                _ => {}
+            }
         }
         match pool.get(key) {
-            Ok(Some(blob)) => {
-                let params = Arc::new(blob.params);
-                let buf_id = crate::runtime::new_cache_id();
-                if let Some(old) = cache.insert(
-                    key,
-                    CacheEntry {
-                        params: params.clone(),
-                        buf_id,
-                        frozen: blob.frozen,
-                        fetched: Instant::now(),
-                    },
-                ) {
-                    engine.evict_cached(old.buf_id);
-                }
-                Some((params, buf_id))
-            }
+            Ok(Some(blob)) => Some(Self::install(cache, engine, key, blob, 0)),
             _ => cache.get(&key).map(|e| (e.params.clone(), e.buf_id)),
         }
     }
@@ -214,21 +363,26 @@ impl InfServer {
         params: &[f32],
         buf_id: u64,
         batch: &[Pending],
+        obs_buf: &mut Vec<f32>,
     ) -> Result<()> {
         let slot = batch[0].obs.len(); // rows-per-slot * D
-        let mut obs = vec![0.0f32; cfg.batch * slot];
+        obs_buf.clear();
+        obs_buf.resize(cfg.batch * slot, 0.0);
         for (i, p) in batch.iter().enumerate() {
-            obs[i * slot..(i + 1) * slot].copy_from_slice(&p.obs);
+            obs_buf[i * slot..(i + 1) * slot].copy_from_slice(&p.obs);
         }
         let (logits, value) =
-            engine.infer_cached(&cfg.env, cfg.batch, buf_id, params, &obs)?;
+            engine.infer_cached(&cfg.env, cfg.batch, buf_id, params, obs_buf)?;
         let lslot = logits.len() / cfg.batch;
         let vslot = value.len() / cfg.batch;
         for (i, p) in batch.iter().enumerate() {
-            let _ = p.reply.send(Msg::InferResp {
-                logits: logits[i * lslot..(i + 1) * lslot].to_vec(),
-                value: value[i * vslot..(i + 1) * vslot].to_vec(),
-            });
+            p.reply.deliver(
+                p.seq,
+                Msg::InferResp {
+                    logits: logits[i * lslot..(i + 1) * lslot].to_vec(),
+                    value: value[i * vslot..(i + 1) * vslot].to_vec(),
+                },
+            );
         }
         Ok(())
     }
@@ -357,6 +511,47 @@ mod tests {
         let batches = server.batch_meter.count();
         assert_eq!(rows, 96);
         assert!(batches < rows, "some batching must happen: {batches} batches");
+    }
+
+    /// The `rows` field is validated against the manifest: a claimed
+    /// shape that doesn't match `obs.len()` is rejected up front instead
+    /// of silently mis-slicing the batch.
+    #[test]
+    fn mismatched_rows_rejected() {
+        let Some(engine) = engine() else { return };
+        let m = engine.manifest.env("rps").unwrap().clone();
+        let (d, act_dim) = (m.obs_dim, m.act_dim);
+        let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let pc = ModelPoolClient::connect(&[pool.addr.clone()]);
+        let params = engine.init_params("rps").unwrap();
+        let key = ModelKey::new(0, 1);
+        pc.put(ModelBlob { key, params, hp: vec![], frozen: true }).unwrap();
+        let server = InfServer::start(
+            "127.0.0.1:0",
+            InfServerConfig {
+                env: "rps".into(),
+                batch: m.infer_b,
+                max_wait: Duration::from_millis(1),
+                refresh: Duration::from_millis(50),
+            },
+            engine,
+            &[pool.addr.clone()],
+        )
+        .unwrap();
+        let c = ReqClient::connect(&server.addr);
+        // obs holds one row but the header claims two
+        let reply = c
+            .request(&Msg::InferReq { key, obs: vec![0.0; d], rows: 2 })
+            .unwrap();
+        assert!(matches!(reply, Msg::Err(_)), "got {reply:?}");
+        // zero rows is never valid
+        let reply = c
+            .request(&Msg::InferReq { key, obs: vec![], rows: 0 })
+            .unwrap();
+        assert!(matches!(reply, Msg::Err(_)), "got {reply:?}");
+        // a well-formed request on the SAME connection still succeeds
+        let (logits, _) = infer_remote(&c, key, &vec![0.0; d], 1).unwrap();
+        assert_eq!(logits.len(), act_dim);
     }
 
     #[test]

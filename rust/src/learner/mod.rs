@@ -314,4 +314,9 @@ impl Learner {
     pub fn cfps_count(&self) -> u64 {
         self.replay.consumed
     }
+    /// Undecodable frames dropped by this learner's data port (a nonzero
+    /// rate means an actor speaks a different protocol version).
+    pub fn decode_errors(&self) -> u64 {
+        self.data.decode_errors.count()
+    }
 }

@@ -30,6 +30,10 @@ fn engine(args: &Args) -> Result<Arc<Engine>> {
 
 fn run() -> Result<()> {
     let args = Args::from_env();
+    if args.bool("help") {
+        println!("{}", tleague::util::cli::USAGE);
+        return Ok(());
+    }
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("info") => cmd_info(&args),
@@ -64,10 +68,7 @@ fn run() -> Result<()> {
         }
         Some(other) => anyhow::bail!("unknown subcommand '{other}'"),
         None => {
-            println!(
-                "tleague — competitive self-play distributed MARL\n\
-                 usage: tleague <run|info|eval-doom|eval-rps|model-pool|league-mgr> [flags]"
-            );
+            println!("{}", tleague::util::cli::USAGE);
             Ok(())
         }
     }
@@ -98,6 +99,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     cfg.checkpoint_every_secs =
         args.u64_or("checkpoint-every", cfg.checkpoint_every_secs);
+    // data-plane knobs (see USAGE): flags override the config file
+    cfg.refresh_every =
+        args.u64_or("refresh-every", cfg.refresh_every as u64) as u32;
+    cfg.infer_max_wait_us =
+        args.u64_or("infer-max-wait-us", cfg.infer_max_wait_us);
+    cfg.infer_refresh_ms = args.u64_or("infer-refresh-ms", cfg.infer_refresh_ms);
     cfg.validate()?;
     let eng = engine(args)?;
     println!(

@@ -14,13 +14,14 @@
 //! and are written temp-then-rename, so a crash never leaves a torn
 //! blob (see DESIGN.md §Spill policy).
 
-use crate::proto::{ModelBlob, ModelKey, Msg};
-use crate::transport::{RepServer, ReqClient};
-use crate::util::codec::Wire;
+use crate::proto::{ModelBlob, ModelKey, Msg, TAG_MODEL, TAG_MODEL_REV};
+use crate::transport::{RepServer, Reply, ReqClient};
+use crate::util::codec::{Enc, Wire};
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Memory policy for one replica.  The default (no dir, budget 0) keeps
@@ -72,6 +73,21 @@ struct Store {
     /// resident blobs; `Arc` so snapshots and replies can deep-copy the
     /// params OUTSIDE the store lock
     blobs: BTreeMap<ModelKey, Arc<ModelBlob>>,
+    /// pre-encoded `ModelBlob` wire bytes per resident blob — the reply
+    /// frame tail served on GetModel/GetLatest/if-newer hits with zero
+    /// params copy and zero encode.  Invalidated on re-put (incl.
+    /// freezes, which arrive as re-puts) and on spill; rebuilt lazily on
+    /// the next read.
+    frames: BTreeMap<ModelKey, Arc<[u8]>>,
+    /// replica-local put counter per blob — the `rev` of the if-newer
+    /// protocol.  Bumped on EVERY put, so same-version re-puts of the
+    /// in-training model (the learner's publish_every cadence) are
+    /// visible to refreshing clients.
+    revs: BTreeMap<ModelKey, u64>,
+    puts: u64,
+    /// reply-frame (re)builds — steady-state read traffic must not move
+    /// this (the zero-encode invariant the pool bench asserts)
+    encodes: u64,
     /// blobs with a valid on-disk copy (may also be resident)
     on_disk: BTreeMap<ModelKey, PathBuf>,
     latest: BTreeMap<u32, ModelKey>, // per-agent newest version
@@ -87,6 +103,10 @@ impl Store {
         self.last_used.insert(key, self.tick);
     }
 
+    fn rev(&self, key: ModelKey) -> u64 {
+        self.revs.get(&key).copied().unwrap_or(0)
+    }
+
     fn insert(&mut self, blob: ModelBlob) {
         let key = blob.key;
         // strictly-newer versions move `latest`; an equal-version re-put
@@ -98,7 +118,12 @@ impl Store {
         if newer {
             self.latest.insert(key.agent, key);
         }
-        // a re-put invalidates any stale disk copy
+        self.puts += 1;
+        self.revs.insert(key, self.puts);
+        // new bytes invalidate the cached reply frame and any disk copy
+        if let Some(f) = self.frames.remove(&key) {
+            self.resident -= f.len();
+        }
         if let Some(path) = self.on_disk.remove(&key) {
             std::fs::remove_file(path).ok();
         }
@@ -109,6 +134,16 @@ impl Store {
         }
         self.resident += cost;
         self.touch(key);
+        self.maybe_spill();
+    }
+
+    /// Publish a freshly built reply frame (frame bytes count toward the
+    /// resident budget — they are a second in-memory copy of the params).
+    fn install_frame(&mut self, key: ModelKey, frame: Arc<[u8]>) {
+        self.resident += frame.len();
+        if let Some(old) = self.frames.insert(key, frame) {
+            self.resident -= old.len();
+        }
         self.maybe_spill();
     }
 
@@ -183,6 +218,11 @@ impl Store {
         if let Some(b) = self.blobs.remove(&key) {
             self.resident -= blob_cost(&b);
         }
+        // the reply frame of a spilled blob goes with it; the next read
+        // faults the blob in and rebuilds the frame
+        if let Some(f) = self.frames.remove(&key) {
+            self.resident -= f.len();
+        }
         Ok(())
     }
 
@@ -209,6 +249,84 @@ impl Store {
     }
 }
 
+/// Which blob a read request resolves to.
+enum Sel {
+    Exact(ModelKey),
+    Latest(u32),
+}
+
+/// What the first (locked) pass of a read produced.
+enum Found {
+    /// frame-cache hit: the pre-encoded reply bytes
+    Frame(Arc<[u8]>),
+    /// cache miss: a cheap handle to encode outside the lock
+    Blob(Arc<ModelBlob>),
+}
+
+/// Serve a model read.  `have` carries the requester's (version, rev)
+/// for the if-newer protocol; `None` is an unconditional read.  On a
+/// frame-cache hit the reply is the cached pre-encoded bytes — zero
+/// params copy, zero encode, O(1) lock hold.  On a miss the params are
+/// encoded once OUTSIDE the lock ("respond ... instantaneously") and
+/// the frame is published for subsequent readers.
+fn model_reply(store: &Mutex<Store>, sel: Sel, have: Option<(u32, u64)>) -> Reply {
+    let (key, rev, found) = {
+        let mut st = store.lock().unwrap();
+        let key = match sel {
+            Sel::Exact(k) => k,
+            Sel::Latest(agent) => match st.latest.get(&agent) {
+                Some(&k) => k,
+                None => return Reply::Msg(Msg::NotFound),
+            },
+        };
+        let rev = st.rev(key);
+        if let Some((have_version, have_rev)) = have {
+            // "nothing newer than what you hold" — a strictly-older
+            // latest (lagging replica) must not regress the client
+            if key.version < have_version
+                || (key.version == have_version && rev == have_rev)
+            {
+                return Reply::Msg(Msg::NotModified);
+            }
+        }
+        if let Some(f) = st.frames.get(&key).cloned() {
+            st.touch(key);
+            (key, rev, Found::Frame(f))
+        } else {
+            match st.fetch(key) {
+                Some(b) => (key, rev, Found::Blob(b)),
+                None => return Reply::Msg(Msg::NotFound),
+            }
+        }
+    };
+    let frame = match found {
+        Found::Frame(frame) => frame,
+        Found::Blob(blob) => {
+            let mut buf =
+                Vec::with_capacity(24 + blob.params.len() * 4 + blob.hp.len() * 4);
+            blob.encode(&mut buf);
+            let frame: Arc<[u8]> = buf.into();
+            let mut st = store.lock().unwrap();
+            st.encodes += 1;
+            // publish unless a concurrent re-put or spill superseded it;
+            // the reply itself stays valid either way (REQ/REP snapshot)
+            if st.rev(key) == rev && st.blobs.contains_key(&key) {
+                st.install_frame(key, frame.clone());
+            }
+            frame
+        }
+    };
+    match have {
+        Some(_) => {
+            let mut head = Vec::with_capacity(9);
+            head.put_u8(TAG_MODEL_REV);
+            head.put_u64(rev);
+            Reply::framed(head, frame)
+        }
+        None => Reply::framed(vec![TAG_MODEL], frame),
+    }
+}
+
 /// One ModelPool replica: a REQ/REP service over the spill-aware store.
 pub struct ModelPoolServer {
     pub addr: String,
@@ -224,42 +342,34 @@ impl ModelPoolServer {
     pub fn start_with(bind: &str, opts: PoolOptions) -> Result<ModelPoolServer> {
         let store = Arc::new(Mutex::new(Store { opts, ..Store::default() }));
         let s2 = store.clone();
-        let server = RepServer::serve(bind, move |msg| match msg {
+        let server = RepServer::serve_frames(bind, move |msg| match msg {
             Msg::PutModel(blob) => {
                 s2.lock().unwrap().insert(blob);
-                Msg::Ok
+                Reply::Msg(Msg::Ok)
             }
-            Msg::GetModel { key } => {
-                // bind so the guard drops before the params deep-copy
-                let found = s2.lock().unwrap().fetch(key);
-                match found {
-                    Some(b) => Msg::Model((*b).clone()),
-                    None => Msg::NotFound,
-                }
-            }
-            Msg::GetLatest { agent } => {
-                let found = {
-                    let mut st = s2.lock().unwrap();
-                    let key = st.latest.get(&agent).copied();
-                    key.and_then(|k| st.fetch(k))
-                };
-                match found {
-                    Some(b) => Msg::Model((*b).clone()),
-                    None => Msg::NotFound,
-                }
+            Msg::GetModel { key } => model_reply(&s2, Sel::Exact(key), None),
+            Msg::GetLatest { agent } => model_reply(&s2, Sel::Latest(agent), None),
+            Msg::GetModelIfNewer { agent, have_version, have_rev } => {
+                model_reply(&s2, Sel::Latest(agent), Some((have_version, have_rev)))
             }
             Msg::PoolStats => {
                 let st = s2.lock().unwrap();
-                Msg::PoolStatsReply {
+                Reply::Msg(Msg::PoolStatsReply {
                     resident_bytes: st.resident as u64,
                     models: st.model_count() as u32,
                     spilled: st.spilled_count() as u32,
-                }
+                })
             }
-            Msg::Ping => Msg::Pong,
-            other => Msg::Err(format!("model_pool: unexpected {other:?}")),
+            Msg::Ping => Reply::Msg(Msg::Pong),
+            other => Reply::Msg(Msg::Err(format!("model_pool: unexpected {other:?}"))),
         })?;
         Ok(ModelPoolServer { addr: server.addr.clone(), store, _server: server })
+    }
+
+    /// Reply-frame (re)builds since start.  A frame-cache hit does not
+    /// move this — the zero-encode invariant tests and benches assert.
+    pub fn frame_encodes(&self) -> u64 {
+        self.store.lock().unwrap().encodes
     }
 
     pub fn model_count(&self) -> usize {
@@ -302,19 +412,46 @@ impl ModelPoolServer {
     }
 }
 
+/// Result of a delta-aware [`ModelPoolClient::get_latest_if_newer`].
+#[derive(Debug)]
+pub enum LatestFetch {
+    /// the requester's (version, rev) is current — the reply was O(1)
+    NotModified,
+    /// newer (or byte-refreshed) params; `rev` is the stamp to echo on
+    /// the next refresh
+    New { rev: u64, blob: ModelBlob },
+    NotFound,
+}
+
 /// Client over one or more ModelPool replicas: writes go to every
 /// replica, reads go to a random one.
 pub struct ModelPoolClient {
     replicas: Vec<ReqClient>,
+    /// replica pinned for if-newer refreshes: revs are replica-local put
+    /// counters, so bouncing between replicas would make them
+    /// incomparable and turn every refresh into a full transfer.
+    /// Rotated on transport failure so a dead replica doesn't pin every
+    /// future refresh to its ~9s reconnect loop.
+    sticky: AtomicUsize,
     rng: Mutex<Pcg32>,
 }
+
+/// Distinct RNG stream per client so co-located clients don't all pick
+/// the same "random" replica sequence (and sticky replicas spread).
+static NEXT_CLIENT: AtomicU64 = AtomicU64::new(0);
 
 impl ModelPoolClient {
     pub fn connect(addrs: &[String]) -> ModelPoolClient {
         assert!(!addrs.is_empty());
+        let mut rng = Pcg32::from_label(
+            NEXT_CLIENT.fetch_add(1, Ordering::Relaxed),
+            "mp-client",
+        );
+        let sticky = rng.below(addrs.len() as u32) as usize;
         ModelPoolClient {
             replicas: addrs.iter().map(|a| ReqClient::connect(a)).collect(),
-            rng: Mutex::new(Pcg32::from_label(0x6d70, "mp-client")),
+            sticky: AtomicUsize::new(sticky),
+            rng: Mutex::new(rng),
         }
     }
 
@@ -346,6 +483,36 @@ impl ModelPoolClient {
             Msg::Model(b) => Ok(Some(b)),
             Msg::NotFound => Ok(None),
             other => bail!("get_latest: unexpected reply {other:?}"),
+        }
+    }
+
+    /// Delta-aware latest read: transfers the params only when the pool
+    /// holds something newer than `(have_version, have_rev)`.  Pass
+    /// `(0, 0)` to fetch unconditionally (revs start at 1).  Always asks
+    /// the same (sticky) replica — see the field docs.
+    pub fn get_latest_if_newer(
+        &self,
+        agent: u32,
+        have_version: u32,
+        have_rev: u64,
+    ) -> Result<LatestFetch> {
+        let idx = self.sticky.load(Ordering::Relaxed) % self.replicas.len();
+        let req = Msg::GetModelIfNewer { agent, have_version, have_rev };
+        match self.replicas[idx].request(&req) {
+            Ok(Msg::NotModified) => Ok(LatestFetch::NotModified),
+            Ok(Msg::ModelRev { rev, blob }) => Ok(LatestFetch::New { rev, blob }),
+            Ok(Msg::NotFound) => Ok(LatestFetch::NotFound),
+            Ok(other) => bail!("get_latest_if_newer: unexpected reply {other:?}"),
+            Err(e) => {
+                // sticky replica unreachable: move to the next one so
+                // refreshes don't stay pinned to a dead replica.  The
+                // caller falls back to a full fetch; the first refresh
+                // against the new replica is a full transfer too (its
+                // revs are incomparable), then steady state resumes.
+                self.sticky
+                    .store((idx + 1) % self.replicas.len(), Ordering::Relaxed);
+                Err(e)
+            }
         }
     }
 
@@ -460,6 +627,139 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(server.model_count(), 80);
+    }
+
+    /// The if-newer protocol: miss (full transfer + rev), hit
+    /// (NotModified), same-version re-put visibility, frozen version
+    /// bumps, and the lagging-replica guard.
+    #[test]
+    fn if_newer_hit_miss_and_frozen_roundtrips() {
+        let server = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        // miss: empty pool
+        assert!(matches!(
+            client.get_latest_if_newer(0, 0, 0).unwrap(),
+            LatestFetch::NotFound
+        ));
+        client.put(blob(0, 1, 1.0)).unwrap();
+        // unconditional fetch returns the blob plus its rev stamp
+        let rev1 = match client.get_latest_if_newer(0, 0, 0).unwrap() {
+            LatestFetch::New { rev, blob } => {
+                assert_eq!(blob.key.version, 1);
+                assert_eq!(blob.params, vec![1.0; 8]);
+                rev
+            }
+            other => panic!("expected New, got {other:?}"),
+        };
+        assert!(rev1 > 0);
+        // hit: holding the current (version, rev) → O(1) reply
+        assert!(matches!(
+            client.get_latest_if_newer(0, 1, rev1).unwrap(),
+            LatestFetch::NotModified
+        ));
+        // same-version re-put (the in-training publish cadence) must be
+        // visible: same version, new rev, new bytes
+        client.put(blob(0, 1, 2.0)).unwrap();
+        let rev2 = match client.get_latest_if_newer(0, 1, rev1).unwrap() {
+            LatestFetch::New { rev, blob } => {
+                assert_eq!(blob.key.version, 1);
+                assert_eq!(blob.params, vec![2.0; 8], "re-put bytes must flow");
+                rev
+            }
+            other => panic!("expected New after re-put, got {other:?}"),
+        };
+        assert_ne!(rev2, rev1);
+        // frozen version bump
+        client.put(frozen_blob(0, 2, 8)).unwrap();
+        let rev3 = match client.get_latest_if_newer(0, 1, rev2).unwrap() {
+            LatestFetch::New { rev, blob } => {
+                assert_eq!(blob.key.version, 2);
+                assert!(blob.frozen);
+                rev
+            }
+            other => panic!("expected New after freeze, got {other:?}"),
+        };
+        assert!(matches!(
+            client.get_latest_if_newer(0, 2, rev3).unwrap(),
+            LatestFetch::NotModified
+        ));
+        // client ahead of a lagging replica: never regress its params
+        assert!(matches!(
+            client.get_latest_if_newer(0, 99, 12345).unwrap(),
+            LatestFetch::NotModified
+        ));
+    }
+
+    /// Repeated reads of one blob encode its reply frame exactly once;
+    /// a re-put (including the freeze re-put) invalidates the frame so
+    /// readers see the new bytes.
+    #[test]
+    fn frame_cache_hits_skip_encode_and_invalidate_on_put() {
+        let server = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        let key = ModelKey::new(0, 1);
+        client.put(blob(0, 1, 1.0)).unwrap();
+        assert_eq!(server.frame_encodes(), 0);
+        for _ in 0..5 {
+            let got = client.get(key).unwrap().unwrap();
+            assert_eq!(got.params, vec![1.0; 8]);
+        }
+        assert_eq!(server.frame_encodes(), 1, "one build, then cache hits");
+        // GetLatest and if-newer share the same cached frame
+        assert_eq!(client.get_latest(0).unwrap().unwrap().params, vec![1.0; 8]);
+        match client.get_latest_if_newer(0, 0, 0).unwrap() {
+            LatestFetch::New { blob, .. } => {
+                assert_eq!(blob.params, vec![1.0; 8])
+            }
+            other => panic!("expected New, got {other:?}"),
+        }
+        assert_eq!(server.frame_encodes(), 1);
+        // freeze arrives as a re-put: frame invalidated, new bytes flow
+        client
+            .put(ModelBlob {
+                key,
+                params: vec![9.0; 8],
+                hp: vec![3e-4],
+                frozen: true,
+            })
+            .unwrap();
+        let got = client.get(key).unwrap().unwrap();
+        assert_eq!(got.params, vec![9.0; 8]);
+        assert!(got.frozen);
+        assert_eq!(server.frame_encodes(), 2, "re-put must rebuild the frame");
+    }
+
+    /// Spilling a blob drops its cached frame; fault-in serves correct
+    /// bytes and rebuilds the frame for later hits.
+    #[test]
+    fn frame_cache_invalidates_on_spill_and_rebuilds_on_fault_in() {
+        let dir = spill_dir("frame-spill");
+        let server = ModelPoolServer::start_with(
+            "127.0.0.1:0",
+            PoolOptions { spill_dir: Some(dir.clone()), mem_budget: 40 * 1024 },
+        )
+        .unwrap();
+        let client = ModelPoolClient::connect(&[server.addr.clone()]);
+        client.put(frozen_blob(0, 0, 2000)).unwrap();
+        // read it so its frame is cached
+        assert_eq!(
+            client.get(ModelKey::new(0, 0)).unwrap().unwrap().params,
+            vec![0.0; 2000]
+        );
+        let builds_before = server.frame_encodes();
+        // push enough newer frozen blobs to spill v0 (blob AND frame)
+        for v in 1..8 {
+            client.put(frozen_blob(0, v, 2000)).unwrap();
+        }
+        assert!(server.spilled_count() > 0, "v0 should have spilled");
+        // fault-in: correct bytes, frame rebuilt exactly once for the
+        // two follow-up reads
+        for _ in 0..2 {
+            let b = client.get(ModelKey::new(0, 0)).unwrap().unwrap();
+            assert_eq!(b.params, vec![0.0; 2000]);
+        }
+        assert_eq!(server.frame_encodes(), builds_before + 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -239,8 +239,8 @@ impl Deployment {
                 InfServerConfig {
                     env: manifest_env.clone(),
                     batch: m.infer_b,
-                    max_wait: Duration::from_millis(2),
-                    refresh: Duration::from_millis(50),
+                    max_wait: Duration::from_micros(cfg.infer_max_wait_us),
+                    refresh: Duration::from_millis(cfg.infer_refresh_ms),
                 },
                 engine.clone(),
                 &pool_addrs,
@@ -287,7 +287,7 @@ impl Deployment {
             actor_id: format!("{agent}/a{id}"),
             seed: self.cfg.seed * 1000 + id,
             gamma: self.cfg.gamma,
-            refresh_every: 1,
+            refresh_every: self.cfg.refresh_every,
             train_t: 0,
         };
         let engine = self.engine.clone();

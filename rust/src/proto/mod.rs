@@ -8,6 +8,13 @@
 use crate::util::codec::{Cursor, Enc, Wire};
 use anyhow::{bail, Result};
 
+/// Wire tag of `Msg::Model`.  Public so the ModelPool frame cache can
+/// prepend the tag to a pre-encoded `ModelBlob` without re-encoding the
+/// params (see `transport::Reply::Framed`).
+pub const TAG_MODEL: u8 = 23;
+/// Wire tag of `Msg::ModelRev` (same frame-cache trick, plus a rev head).
+pub const TAG_MODEL_REV: u8 = 28;
+
 /// Identifies a model: which learning agent produced it + version number.
 /// Version 0 is the seed (random init or imitation-learned) policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -101,6 +108,16 @@ pub enum Msg {
     GetLatest { agent: u32 },
     Model(ModelBlob),
     NotFound,
+    /// Delta-aware read: "send the latest model for `agent` unless I
+    /// already hold it".  `have_rev` is the replica-local put counter
+    /// returned by the last `ModelRev` reply (0 = hold nothing), which
+    /// catches same-version re-puts of the in-training model.
+    GetModelIfNewer { agent: u32, have_version: u32, have_rev: u64 },
+    /// Reply to `GetModelIfNewer` when the pool has something newer.
+    ModelRev { rev: u64, blob: ModelBlob },
+    /// Reply to `GetModelIfNewer` when the requester is current: O(1)
+    /// bytes instead of the params payload.
+    NotModified,
     /// Observability probe: resident memory + spill state of a replica.
     PoolStats,
     PoolStatsReply { resident_bytes: u64, models: u32, spilled: u32 },
@@ -257,10 +274,22 @@ impl Wire for Msg {
                 buf.put_u32(*agent);
             }
             Msg::Model(b) => {
-                buf.put_u8(23);
+                buf.put_u8(TAG_MODEL);
                 b.encode(buf);
             }
             Msg::NotFound => buf.put_u8(24),
+            Msg::GetModelIfNewer { agent, have_version, have_rev } => {
+                buf.put_u8(27);
+                buf.put_u32(*agent);
+                buf.put_u32(*have_version);
+                buf.put_u64(*have_rev);
+            }
+            Msg::ModelRev { rev, blob } => {
+                buf.put_u8(TAG_MODEL_REV);
+                buf.put_u64(*rev);
+                blob.encode(buf);
+            }
+            Msg::NotModified => buf.put_u8(29),
             Msg::PoolStats => buf.put_u8(25),
             Msg::PoolStatsReply { resident_bytes, models, spilled } => {
                 buf.put_u8(26);
@@ -302,8 +331,17 @@ impl Wire for Msg {
             20 => Msg::PutModel(ModelBlob::decode(cur)?),
             21 => Msg::GetModel { key: ModelKey::decode(cur)? },
             22 => Msg::GetLatest { agent: cur.u32()? },
-            23 => Msg::Model(ModelBlob::decode(cur)?),
+            TAG_MODEL => Msg::Model(ModelBlob::decode(cur)?),
             24 => Msg::NotFound,
+            27 => Msg::GetModelIfNewer {
+                agent: cur.u32()?,
+                have_version: cur.u32()?,
+                have_rev: cur.u64()?,
+            },
+            TAG_MODEL_REV => {
+                Msg::ModelRev { rev: cur.u64()?, blob: ModelBlob::decode(cur)? }
+            }
+            29 => Msg::NotModified,
             25 => Msg::PoolStats,
             26 => Msg::PoolStatsReply {
                 resident_bytes: cur.u64()?,
@@ -382,8 +420,11 @@ mod tests {
             Msg::PutModel(blob.clone()),
             Msg::GetModel { key: ModelKey::new(1, 7) },
             Msg::GetLatest { agent: 1 },
-            Msg::Model(blob),
+            Msg::Model(blob.clone()),
             Msg::NotFound,
+            Msg::GetModelIfNewer { agent: 1, have_version: 7, have_rev: 3 },
+            Msg::ModelRev { rev: 4, blob },
+            Msg::NotModified,
             Msg::PoolStats,
             Msg::PoolStatsReply {
                 resident_bytes: 1 << 30,

@@ -11,45 +11,161 @@
 
 use crate::proto::Msg;
 use crate::util::codec::Wire;
+use crate::util::metrics::Meter;
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write as IoWrite};
+use std::io::{IoSlice, Read, Write as IoWrite};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 pub const MAX_FRAME: u32 = 512 << 20; // 512 MiB guard (synthetic params are 25 MiB)
 
+/// How long a frame that has STARTED arriving may stall before the
+/// connection is declared dead (see `read_frame`).
+const FRAME_STALL_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Write one length-prefixed frame assembled from `parts` — a single
+/// vectored syscall in the common case, so a pre-encoded reply frame
+/// (the ModelPool's cached `Arc<[u8]>`) is never copied into a staging
+/// buffer on its way out.
+pub fn write_frame_parts(stream: &mut TcpStream, parts: &[&[u8]]) -> Result<()> {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let len = (total as u32).to_le_bytes();
+    let grand = total + 4;
+    let mut written = 0usize;
+    let mut bufs: Vec<IoSlice> = Vec::with_capacity(parts.len() + 1);
+    while written < grand {
+        // rebuild the iovec from the current offset (first iteration
+        // covers everything; later ones only run after a partial write)
+        bufs.clear();
+        let mut skip = written;
+        if skip < 4 {
+            bufs.push(IoSlice::new(&len[skip..]));
+            skip = 0;
+        } else {
+            skip -= 4;
+        }
+        for p in parts {
+            if skip >= p.len() {
+                skip -= p.len();
+                continue;
+            }
+            bufs.push(IoSlice::new(&p[skip..]));
+            skip = 0;
+        }
+        let n = match stream.write_vectored(&bufs) {
+            Ok(0) => bail!("connection closed mid-write"),
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        };
+        written += n;
+    }
+    Ok(())
+}
+
 /// Write one length-prefixed frame.
 pub fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
-    let len = payload.len() as u32;
-    stream.write_all(&len.to_le_bytes())?;
-    stream.write_all(payload)?;
+    write_frame_parts(stream, &[payload])
+}
+
+/// The frame-size guard, applied before any payload allocation.  The
+/// bound is inclusive: exactly MAX_FRAME is a legal frame.
+fn check_frame_len(len: u32) -> Result<()> {
+    if len > MAX_FRAME {
+        bail!("frame too large: {len}");
+    }
     Ok(())
 }
 
 /// Read one length-prefixed frame into `buf` (reused across calls).
 pub fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<()> {
     let mut len_bytes = [0u8; 4];
-    stream.read_exact(&mut len_bytes)?;
+    read_full(stream, &mut len_bytes, true)?;
     let len = u32::from_le_bytes(len_bytes);
-    if len > MAX_FRAME {
-        bail!("frame too large: {len}");
-    }
+    check_frame_len(len)?;
     buf.resize(len as usize, 0);
-    stream.read_exact(buf)?;
+    read_full(stream, buf, false)?;
     Ok(())
+}
+
+/// `read_exact` with frame-aware timeout semantics.  A read timeout with
+/// ZERO bytes consumed surfaces as WouldBlock/TimedOut so server loops
+/// can poll their stop flag between frames — but once a frame has begun,
+/// returning early would desync the length-prefix framing (the next read
+/// would parse payload bytes as a length).  Mid-frame timeouts therefore
+/// keep reading until `FRAME_STALL_DEADLINE`, then error fatally.
+fn read_full(stream: &mut TcpStream, out: &mut [u8], frame_start: bool) -> Result<()> {
+    let mut got = 0usize;
+    let mut stalled_since: Option<Instant> = None;
+    while got < out.len() {
+        match stream.read(&mut out[got..]) {
+            Ok(0) => bail!("connection closed"),
+            Ok(n) => {
+                got += n;
+                stalled_since = None;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if frame_start && got == 0 {
+                    return Err(e.into()); // clean between-frames poll
+                }
+                let t0 = *stalled_since.get_or_insert_with(Instant::now);
+                if t0.elapsed() > FRAME_STALL_DEADLINE {
+                    bail!("frame stalled mid-read ({got}/{} bytes)", out.len());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// What a `RepServer` handler returns: an owned message (encoded into
+/// the connection's reused reply buffer) or a pre-encoded frame — a
+/// small owned `head` (wire tag + fixed fields) followed by a shared
+/// `tail` (e.g. the ModelPool's cached `ModelBlob` encoding).  Framed
+/// replies go out in one vectored syscall with zero copies of the tail.
+pub enum Reply {
+    Msg(Msg),
+    Framed { head: Vec<u8>, tail: Arc<[u8]> },
+}
+
+impl Reply {
+    pub fn framed(head: Vec<u8>, tail: Arc<[u8]>) -> Reply {
+        Reply::Framed { head, tail }
+    }
+}
+
+impl From<Msg> for Reply {
+    fn from(m: Msg) -> Reply {
+        Reply::Msg(m)
+    }
 }
 
 /// Blocking request/response client with lazy (re)connect.
 pub struct ReqClient {
     addr: String,
-    stream: Mutex<Option<TcpStream>>,
+    inner: Mutex<ReqInner>,
+}
+
+/// Connection + reply buffer, reused across requests so the read path
+/// stays allocation-free once the buffer has grown to frame size.
+#[derive(Default)]
+struct ReqInner {
+    stream: Option<TcpStream>,
+    buf: Vec<u8>,
 }
 
 impl ReqClient {
     pub fn connect(addr: &str) -> ReqClient {
-        ReqClient { addr: addr.to_string(), stream: Mutex::new(None) }
+        ReqClient { addr: addr.to_string(), inner: Mutex::new(ReqInner::default()) }
     }
 
     /// Send `msg`, wait for the reply.  Reconnects (with retry/backoff)
@@ -57,14 +173,14 @@ impl ReqClient {
     /// peers can briefly vanish.
     pub fn request(&self, msg: &Msg) -> Result<Msg> {
         let payload = msg.to_bytes();
-        let mut guard = self.stream.lock().unwrap();
+        let mut guard = self.inner.lock().unwrap();
         let mut last_err = None;
         for attempt in 0..40 {
-            if guard.is_none() {
+            if guard.stream.is_none() {
                 match TcpStream::connect(&self.addr) {
                     Ok(s) => {
                         s.set_nodelay(true).ok();
-                        *guard = Some(s);
+                        guard.stream = Some(s);
                     }
                     Err(e) => {
                         last_err = Some(e.into());
@@ -72,21 +188,22 @@ impl ReqClient {
                         std::thread::sleep(Duration::from_millis(
                             25 * (attempt + 1).min(10),
                         ));
-                        guard = self.stream.lock().unwrap();
+                        guard = self.inner.lock().unwrap();
                         continue;
                     }
                 }
             }
-            let stream = guard.as_mut().unwrap();
-            let ok = write_frame(stream, &payload).and_then(|_| {
-                let mut buf = Vec::new();
-                read_frame(stream, &mut buf)?;
-                Msg::from_bytes(&buf)
-            });
+            let ReqInner { stream, buf } = &mut *guard;
+            let stream = stream.as_mut().unwrap();
+            let ok = (|| {
+                write_frame(stream, &payload)?;
+                read_frame(stream, buf)?;
+                Msg::from_bytes(buf)
+            })();
             match ok {
                 Ok(reply) => return Ok(reply),
                 Err(e) => {
-                    *guard = None; // force reconnect
+                    guard.stream = None; // force reconnect
                     last_err = Some(e);
                 }
             }
@@ -109,6 +226,16 @@ impl RepServer {
     pub fn serve<F>(addr: &str, handler: F) -> Result<RepServer>
     where
         F: Fn(Msg) -> Msg + Send + Sync + 'static,
+    {
+        Self::serve_frames(addr, move |msg| Reply::Msg(handler(msg)))
+    }
+
+    /// Like [`RepServer::serve`], but the handler may reply with a
+    /// pre-encoded [`Reply::Framed`] frame (zero encode, zero copy of
+    /// the shared tail) — the ModelPool serve path.
+    pub fn serve_frames<F>(addr: &str, handler: F) -> Result<RepServer>
+    where
+        F: Fn(Msg) -> Reply + Send + Sync + 'static,
     {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("bind {addr}"))?;
@@ -141,7 +268,7 @@ impl RepServer {
 
     fn conn_loop(
         mut stream: TcpStream,
-        handler: Arc<dyn Fn(Msg) -> Msg + Send + Sync>,
+        handler: Arc<dyn Fn(Msg) -> Reply + Send + Sync>,
         stop: Arc<AtomicBool>,
     ) {
         stream.set_nodelay(true).ok();
@@ -149,6 +276,8 @@ impl RepServer {
             .set_read_timeout(Some(Duration::from_millis(200)))
             .ok();
         let mut buf = Vec::new();
+        // reply staging buffer, reused across requests: [len;4][payload]
+        let mut reply_buf: Vec<u8> = Vec::new();
         loop {
             if stop.load(Ordering::Relaxed) {
                 return;
@@ -171,9 +300,23 @@ impl RepServer {
             }
             let reply = match Msg::from_bytes(&buf) {
                 Ok(msg) => handler(msg),
-                Err(e) => Msg::Err(format!("decode: {e}")),
+                Err(e) => Reply::Msg(Msg::Err(format!("decode: {e}"))),
             };
-            if write_frame(&mut stream, &reply.to_bytes()).is_err() {
+            let sent = match reply {
+                Reply::Msg(msg) => {
+                    reply_buf.clear();
+                    reply_buf.extend_from_slice(&[0u8; 4]);
+                    msg.encode(&mut reply_buf);
+                    let len = (reply_buf.len() - 4) as u32;
+                    reply_buf[..4].copy_from_slice(&len.to_le_bytes());
+                    // header + payload leave in one buffered write
+                    stream.write_all(&reply_buf).map_err(anyhow::Error::from)
+                }
+                Reply::Framed { head, tail } => {
+                    write_frame_parts(&mut stream, &[&head, &tail])
+                }
+            };
+            if sent.is_err() {
                 return;
             }
         }
@@ -241,6 +384,10 @@ pub struct PullServer {
     rx: std::sync::mpsc::Receiver<Msg>,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    /// Undecodable frames dropped, across all connections.  A nonzero
+    /// rate means a peer speaks a different protocol version — silent
+    /// drops here used to be invisible (PoolStats-style observability).
+    pub decode_errors: Arc<Meter>,
 }
 
 impl PullServer {
@@ -252,6 +399,8 @@ impl PullServer {
         let (tx, rx) = std::sync::mpsc::sync_channel(queue_cap);
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let decode_errors = Arc::new(Meter::new());
+        let errs = decode_errors.clone();
         let handle = std::thread::Builder::new()
             .name(format!("pull@{local}"))
             .spawn(move || {
@@ -260,8 +409,9 @@ impl PullServer {
                         Ok((stream, _)) => {
                             let tx = tx.clone();
                             let stop3 = stop2.clone();
+                            let errs = errs.clone();
                             std::thread::spawn(move || {
-                                Self::conn_loop(stream, tx, stop3);
+                                Self::conn_loop(stream, tx, stop3, errs);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -271,32 +421,49 @@ impl PullServer {
                     }
                 }
             })?;
-        Ok(PullServer { addr: local, rx, stop, handle: Some(handle) })
+        Ok(PullServer { addr: local, rx, stop, handle: Some(handle), decode_errors })
     }
 
     fn conn_loop(
         mut stream: TcpStream,
         tx: std::sync::mpsc::SyncSender<Msg>,
         stop: Arc<AtomicBool>,
+        decode_errors: Arc<Meter>,
     ) {
         stream
             .set_read_timeout(Some(Duration::from_millis(200)))
             .ok();
         let mut buf = Vec::new();
+        let mut err_logged = false;
         loop {
             if stop.load(Ordering::Relaxed) {
                 return;
             }
             match read_frame(&mut stream, &mut buf) {
-                Ok(()) => {
-                    if let Ok(msg) = Msg::from_bytes(&buf) {
+                Ok(()) => match Msg::from_bytes(&buf) {
+                    Ok(msg) => {
                         // blocking send = backpressure to the TCP socket,
                         // which stalls the pushing actor (on-policy mode)
                         if tx.send(msg).is_err() {
                             return;
                         }
                     }
-                }
+                    Err(e) => {
+                        decode_errors.add(1);
+                        if !err_logged {
+                            err_logged = true;
+                            let peer = stream
+                                .peer_addr()
+                                .map(|a| a.to_string())
+                                .unwrap_or_else(|_| "?".into());
+                            eprintln!(
+                                "pull: dropping undecodable {}-byte frame from \
+                                 {peer}: {e} (counting further drops silently)",
+                                buf.len()
+                            );
+                        }
+                    }
+                },
                 Err(e) => {
                     if let Some(io) = e.downcast_ref::<std::io::Error>() {
                         if matches!(
@@ -397,6 +564,134 @@ mod tests {
             assert!(matches!(msg, Msg::Traj(ref s) if *s == seg));
             got += 1;
         }
+    }
+
+    /// A handler replying with a pre-encoded frame (head tag + shared
+    /// tail) must be indistinguishable on the wire from an owned reply.
+    #[test]
+    fn framed_reply_matches_owned_encoding() {
+        use crate::proto::{ModelBlob, TAG_MODEL};
+        let blob = ModelBlob {
+            key: ModelKey::new(2, 5),
+            params: vec![1.0, -2.5, 3.25],
+            hp: vec![3e-4],
+            frozen: true,
+        };
+        let tail: Arc<[u8]> = blob.to_bytes().into();
+        let server = RepServer::serve_frames("127.0.0.1:0", move |msg| match msg {
+            Msg::Ping => Reply::framed(vec![TAG_MODEL], tail.clone()),
+            other => Reply::Msg(Msg::Err(format!("unexpected {other:?}"))),
+        })
+        .unwrap();
+        let client = ReqClient::connect(&server.addr);
+        for _ in 0..3 {
+            match client.request(&Msg::Ping).unwrap() {
+                Msg::Model(b) => {
+                    assert_eq!(b.key, ModelKey::new(2, 5));
+                    assert_eq!(b.params, vec![1.0, -2.5, 3.25]);
+                    assert!(b.frozen);
+                }
+                other => panic!("expected Model, got {other:?}"),
+            }
+        }
+    }
+
+    /// Undecodable-but-well-framed payloads must get an error reply and
+    /// leave the connection usable (no desync of the length framing).
+    #[test]
+    fn garbage_frames_do_not_corrupt_connection() {
+        let server = RepServer::serve("127.0.0.1:0", |msg| match msg {
+            Msg::Ping => Msg::Pong,
+            other => Msg::Err(format!("unexpected {other:?}")),
+        })
+        .unwrap();
+        let mut stream = TcpStream::connect(&server.addr).unwrap();
+        let mut buf = Vec::new();
+        crate::util::proptest::forall(40, "garbage-frame", |rng| {
+            // tag >= 50 is unknown, so decode always fails
+            let n = 1 + rng.below(64) as usize;
+            let mut garbage = vec![50 + (rng.below(200) as u8); 1];
+            for _ in 1..n {
+                garbage.push(rng.next_u32() as u8);
+            }
+            write_frame(&mut stream, &garbage).map_err(|e| e.to_string())?;
+            read_frame(&mut stream, &mut buf).map_err(|e| e.to_string())?;
+            let reply = Msg::from_bytes(&buf).map_err(|e| e.to_string())?;
+            crate::prop_assert!(
+                matches!(reply, Msg::Err(_)),
+                "garbage must get Err, got {reply:?}"
+            );
+            // the same connection still serves real requests
+            write_frame(&mut stream, &Msg::Ping.to_bytes())
+                .map_err(|e| e.to_string())?;
+            read_frame(&mut stream, &mut buf).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(
+                Msg::from_bytes(&buf).map_err(|e| e.to_string())?,
+                Msg::Pong
+            );
+            Ok(())
+        });
+    }
+
+    /// An over-MAX_FRAME length prefix is rejected before any allocation
+    /// and kills only that connection; fresh connections keep working.
+    #[test]
+    fn oversized_frame_rejected_and_server_survives() {
+        let server = RepServer::serve("127.0.0.1:0", |_| Msg::Pong).unwrap();
+        let mut bad = TcpStream::connect(&server.addr).unwrap();
+        bad.write_all(&(MAX_FRAME + 1).to_le_bytes()).unwrap();
+        // server drops the connection: the read eventually sees EOF
+        bad.set_read_timeout(Some(Duration::from_secs(5))).ok();
+        let mut probe = [0u8; 1];
+        assert_eq!(bad.read(&mut probe).unwrap_or(0), 0, "conn must close");
+        // a new connection is unaffected
+        let client = ReqClient::connect(&server.addr);
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+    }
+
+    /// A frame truncated by peer death must error out, not hang or get
+    /// misread as a shorter frame.
+    #[test]
+    fn truncated_frame_errors_cleanly() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&100u32.to_le_bytes()).unwrap();
+            s.write_all(&[7u8; 50]).unwrap(); // half the promised payload
+            // dropped here: peer closes mid-frame
+        });
+        let (mut conn, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        let err = read_frame(&mut conn, &mut buf).unwrap_err();
+        assert!(
+            err.to_string().contains("connection closed"),
+            "want mid-frame close error, got: {err}"
+        );
+        writer.join().unwrap();
+    }
+
+    /// The size guard is inclusive at exactly MAX_FRAME and rejects one
+    /// byte more — checked on the predicate so the test doesn't have to
+    /// allocate a 512 MiB payload buffer.
+    #[test]
+    fn max_frame_boundary() {
+        assert!(check_frame_len(MAX_FRAME).is_ok());
+        assert!(check_frame_len(MAX_FRAME + 1).is_err());
+        assert!(check_frame_len(0).is_ok());
+    }
+
+    #[test]
+    fn pull_server_counts_undecodable_frames() {
+        let server = PullServer::bind("127.0.0.1:0", 16).unwrap();
+        let mut s = TcpStream::connect(&server.addr).unwrap();
+        // two garbage frames, then a real one
+        write_frame(&mut s, &[99u8, 1, 2, 3]).unwrap();
+        write_frame(&mut s, &[200u8]).unwrap();
+        write_frame(&mut s, &Msg::Ping.to_bytes()).unwrap();
+        let msg = server.recv_timeout(Duration::from_secs(5)).expect("timed out");
+        assert_eq!(msg, Msg::Ping);
+        assert_eq!(server.decode_errors.count(), 2);
     }
 
     #[test]

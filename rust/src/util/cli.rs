@@ -4,6 +4,42 @@
 
 use std::collections::BTreeMap;
 
+/// Top-level `--help` text, printed by the binary when invoked with no
+/// subcommand or with `--help`.
+pub const USAGE: &str = "\
+tleague — competitive self-play distributed MARL (TLeague reproduction)
+
+usage: tleague <subcommand> [--flag value ...]
+
+subcommands:
+  run          launch a full league (kube-lite orchestrator)
+    --config <spec.json>     JSON run spec (flags below override it)
+    --env <name>             rps|pong2p|pommerman|pommerman_ffa|doom_lite|synthetic
+    --artifacts <dir>        AOT artifact directory (default: artifacts)
+    --total-steps N          learner steps to run (default 100)
+    --period-steps N         steps per learning period (default 25)
+    --actors N               actors per learner (default 2)
+    --game-mgr <name>        selfplay|uniform|pfsp|sp_pfsp|elo_match
+    --checkpoint-dir <dir>   write durable league snapshots here
+    --checkpoint-every S     seconds between snapshots (default 30)
+    --resume <dir>           restart from the newest snapshot in <dir>
+   data-plane knobs:
+    --refresh-every N        actor param-refresh cadence in episodes
+                             (delta-aware: an unchanged in-training model
+                             costs an O(1) NotModified reply; default 1)
+    --infer-max-wait-us U    InfServer partial-batch deadline in
+                             microseconds (default 2000)
+    --infer-refresh-ms M     InfServer in-training param cache TTL in
+                             milliseconds (default 50)
+  info         print the artifact manifest summary (--artifacts <dir>)
+  eval-doom    FRAG matches, Tables 1-2
+    --checkpoint <f32 file> --setting 1|2a|2b|2c --games N
+  eval-rps     RPS pool exploitability demo (--artifacts <dir>)
+  model-pool   standalone ModelPool replica (--bind host:port)
+  league-mgr   standalone LeagueMgr
+    --bind host:port --n-agents N --n-opponents N --game-mgr <name> --seed S
+";
+
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub subcommand: Option<String>,
