@@ -21,4 +21,9 @@ cargo test -q
 echo "== bench smoke: cargo bench --bench bench_main -- codec pool"
 # --bench bench_main: the lib/bin libtest harnesses would reject --json
 cargo bench --bench bench_main -- codec pool --json BENCH_pr2.json
+
+# Rollout-engine smoke: single-env vs vectorized actor frames/sec
+# (N in {1, 8, 32}; see BENCH_pr3.json).
+echo "== bench smoke: cargo bench --bench bench_main -- rollout"
+cargo bench --bench bench_main -- rollout --json BENCH_pr3.json
 echo "CI OK"

@@ -515,6 +515,161 @@ fn main() {
         );
     }
 
+    // ---- rollout engine ---------------------------------------------------
+    // Vectorized actor frames/s for N in {1, 8, 32} env slots.  The
+    // remote rows use a stub inference server (uniform policy, no PJRT)
+    // so they isolate the rollout machinery: env stepping, per-key
+    // gather/scatter, wire traffic, segment assembly.  The local rows
+    // (artifact-gated) run the real b1 / chunked-b32 PJRT artifacts.
+    println!("\n# rollout engine: single-env vs vectorized actors (frames/s)");
+    {
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use tleague::actor::{Actor, ActorConfig, PolicyBackend};
+        use tleague::proto::TaskSpec;
+        use tleague::transport::{PullServer, RepServer};
+
+        let next = AtomicU64::new(1);
+        let league = RepServer::serve("127.0.0.1:0", move |msg| match msg {
+            Msg::RequestActorTask { .. } => Msg::Task(TaskSpec {
+                task_id: next.fetch_add(1, Ordering::Relaxed),
+                learner_key: ModelKey::new(0, 1),
+                opponents: vec![ModelKey::new(0, 0)],
+                hp: vec![],
+            }),
+            Msg::ReportOutcome(_) => Msg::Ok,
+            other => Msg::Err(format!("stub league: {other:?}")),
+        })
+        .unwrap();
+        // sink: drain trajectories in the background so pushes never block
+        let sink = PullServer::bind("127.0.0.1:0", 1024).unwrap();
+        let sink_addr = sink.addr.clone();
+        let drain_stop = Arc::new(AtomicBool::new(false));
+        let ds = drain_stop.clone();
+        let drainer = std::thread::spawn(move || {
+            let sink = sink;
+            while !ds.load(Ordering::Relaxed) {
+                while sink.try_recv().is_some() {}
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        let mk_pool = |params: Vec<f32>| {
+            let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+            let pc = ModelPoolClient::connect(&[pool.addr.clone()]);
+            for (v, frozen) in [(0u32, true), (1u32, false)] {
+                pc.put(ModelBlob {
+                    key: ModelKey::new(0, v),
+                    params: params.clone(),
+                    hp: vec![],
+                    frozen,
+                })
+                .unwrap();
+            }
+            pool
+        };
+
+        // raw vectorized env stepping: VecEnv auto-reset (step_all),
+        // no inference/wire — the env-side ceiling of the rollout path
+        {
+            use tleague::envs::VecEnv;
+            for n in [1usize, 32] {
+                let mut v = VecEnv::make("synthetic:64", n, 5).unwrap();
+                v.reset_all();
+                let mut t = 0usize;
+                let ticks = (256 / n).max(1);
+                b.bench(
+                    &format!("rollout/vecenv/step_all_n{n}"),
+                    "frame",
+                    move || {
+                        let mut frames = 0u64;
+                        for _ in 0..ticks {
+                            let acts: Vec<Vec<usize>> = (0..n)
+                                .map(|s| vec![(t + s) % 16, (t * 3 + s) % 16])
+                                .collect();
+                            let steps = v.step_all(&acts);
+                            std::hint::black_box(&steps);
+                            t += 1;
+                            frames += steps.len() as u64;
+                        }
+                        frames
+                    },
+                );
+            }
+        }
+
+        let stub_pool = mk_pool(vec![0.0; 8]);
+        for env_name in ["synthetic", "pommerman"] {
+            let act_dim = envs::make(env_name, 0).unwrap().act_dim();
+            let inf = RepServer::serve("127.0.0.1:0", move |msg| match msg {
+                Msg::InferReq { rows, .. } => Msg::InferResp {
+                    logits: vec![0.0; rows as usize * act_dim],
+                    value: vec![0.0; rows as usize],
+                },
+                other => Msg::Err(format!("stub inf: {other:?}")),
+            })
+            .unwrap();
+            for n in [1usize, 8, 32] {
+                let mut actor = Actor::new_vec(
+                    ActorConfig {
+                        env: env_name.into(),
+                        actor_id: format!("0/bench-{env_name}-r{n}"),
+                        seed: 1,
+                        gamma: 0.99,
+                        refresh_every: 1_000_000,
+                        train_t: 8,
+                    },
+                    n,
+                    PolicyBackend::Remote(ReqClient::connect(&inf.addr)),
+                    &league.addr,
+                    &[stub_pool.addr.clone()],
+                    &sink_addr,
+                )
+                .unwrap();
+                let never = AtomicBool::new(false);
+                b.bench(
+                    &format!("rollout/{env_name}/remote_n{n}"),
+                    "frame",
+                    move || actor.run(1024, &never).unwrap(),
+                );
+            }
+        }
+
+        if dir.join("manifest.json").exists() {
+            let engine = Arc::new(Engine::load(&dir).unwrap());
+            for env_name in ["synthetic", "pommerman"] {
+                let lpool = mk_pool(engine.init_params(env_name).unwrap());
+                for n in [1usize, 8, 32] {
+                    let mut actor = Actor::new_vec(
+                        ActorConfig {
+                            env: env_name.into(),
+                            actor_id: format!("0/bench-{env_name}-l{n}"),
+                            seed: 1,
+                            gamma: 0.99,
+                            refresh_every: 1_000_000,
+                            train_t: 0, // manifest train_t
+                        },
+                        n,
+                        PolicyBackend::Local(engine.clone()),
+                        &league.addr,
+                        &[lpool.addr.clone()],
+                        &sink_addr,
+                    )
+                    .unwrap();
+                    let never = AtomicBool::new(false);
+                    b.bench(
+                        &format!("rollout/{env_name}/local_n{n}"),
+                        "frame",
+                        move || actor.run(256, &never).unwrap(),
+                    );
+                }
+            }
+        } else {
+            println!("(artifacts not built; skipping rollout/local benches)");
+        }
+
+        drain_stop.store(true, Ordering::Relaxed);
+        drainer.join().ok();
+    }
+
     println!("\n{} benches run", b.rows.len());
     b.write_json();
 }

@@ -1,19 +1,30 @@
-//! Actor: produces trajectories (paper §3.2).
+//! Actor: produces trajectories (paper §3.2), vectorized.
 //!
-//! Embeds the Env and the Agents.  At each episode beginning it
-//! requests a task from the LeagueMgr (which learning policy, which
-//! opponent(s)); at episode end it reports the outcome.  During the
-//! loop, the learning agent's trajectory segments (length L = the
+//! Embeds a [`VecEnv`] of N concurrent episodes ("slots") plus the
+//! Agents.  Each slot runs its own LeagueMgr task: at its episode
+//! beginning the slot requests a task (which learning policy, which
+//! opponent(s)); at its episode end it reports the outcome.  Every tick
+//! the actor gathers ALL slots' observations into one multi-row forward
+//! pass per distinct `ModelKey` — one `InferReq` per key on the Remote
+//! backend (so the InfServer's per-key deadline batcher sees wide rows
+//! instead of batch-of-1), one chunked wide-artifact call per key on the
+//! Local backend — then scatters actions back and steps every slot.
+//!
+//! Per slot, the learning agent's trajectory segments (length L = the
 //! manifest's train_t, spanning episode boundaries IMPALA-style) are
 //! pushed to the Learner, and policy parameters are pulled from the
-//! ModelPool.  Forward passes run either on a local PJRT engine or are
-//! delegated to a remote InfServer.
+//! ModelPool (shared across slots; delta-aware refresh).  With one slot
+//! (`--envs-per-actor 1`, the default) the actor reproduces the
+//! single-env rollout: same seed, same RNG stream (consumed in the
+//! same order), same per-episode task/outcome/segment wire traffic —
+//! role groups sharing one model now ride one wider `InferReq` instead
+//! of several batch-of-1 requests.
 
-use crate::envs::{self, MultiAgentEnv};
-use crate::inference::infer_remote;
+use crate::envs::{self, VecEnv};
+use crate::inference::{infer_local_rows, infer_remote};
 use crate::league::LeagueClient;
 use crate::model_pool::{LatestFetch, ModelPoolClient};
-use crate::proto::{MatchOutcome, ModelKey, TaskSpec, TrajSegment};
+use crate::proto::{MatchOutcome, ModelKey, Msg, TaskSpec, TrajSegment};
 use crate::runtime::Engine;
 use crate::transport::{PushClient, ReqClient};
 use crate::util::metrics::Meter;
@@ -39,15 +50,14 @@ pub struct RoleLayout {
 }
 
 pub fn role_layout(env_name: &str, n_agents: usize) -> RoleLayout {
-    match env_name {
+    match envs::spec(env_name).0 {
         "pommerman" => RoleLayout {
             learner_slots: vec![0, 2],
             opponent_groups: vec![vec![1, 3]],
         },
-        "pommerman_ffa" => RoleLayout {
-            learner_slots: vec![0],
-            opponent_groups: (1..4).map(|i| vec![i]).collect(),
-        },
+        // everything else (incl. pommerman_ffa): learner in slot 0, one
+        // singleton opponent group per remaining agent — derived from
+        // n_agents, never hardcoded
         _ => RoleLayout {
             learner_slots: vec![0],
             opponent_groups: (1..n_agents).map(|i| vec![i]).collect(),
@@ -55,8 +65,9 @@ pub fn role_layout(env_name: &str, n_agents: usize) -> RoleLayout {
     }
 }
 
+#[derive(Clone)]
 pub struct ActorConfig {
-    /// env factory name (envs::make)
+    /// env spec name (envs::make; parameterized forms like `doom_lite:4`)
     pub env: String,
     /// "<agent>/<name>" — the prefix routes LeagueMgr tasks
     pub actor_id: String,
@@ -112,9 +123,35 @@ impl SegBuffer {
     }
 }
 
+/// Per-env-slot rollout state: each slot runs its own episode under its
+/// own LeagueMgr task, with its own segment buffer and RNG stream (so a
+/// 1-slot actor reproduces the old single-env action sequence exactly).
+struct Slot {
+    task: Option<TaskSpec>,
+    seg: SegBuffer,
+    cur_obs: Vec<Vec<f32>>,
+    episode_steps: u32,
+    rng: Pcg32,
+}
+
+/// One (slot, role-group) contribution to a per-key gather, recorded in
+/// canonical order (slot-major, learner group first): `group` is -1 for
+/// the learner meta-agent, else an opponent-group index.  `key_idx` /
+/// `row` locate the group's logits inside its key's gathered batch, so
+/// sampling can run in canonical order even when one key's gather
+/// merges non-adjacent groups (duplicate opponent draws) — the slot RNG
+/// streams are consumed in the exact pre-vectorized order.
+#[derive(Clone, Copy)]
+struct PlanEntry {
+    slot: usize,
+    group: i32,
+    key_idx: usize,
+    row: usize,
+}
+
 pub struct Actor {
     pub cfg: ActorConfig,
-    env: Box<dyn MultiAgentEnv>,
+    env: VecEnv,
     layout: RoleLayout,
     backend: PolicyBackend,
     league: LeagueClient,
@@ -122,24 +159,30 @@ pub struct Actor {
     push: PushClient,
     manifest_env: String,
     train_t: usize,
-    obs_dim: usize,
     act_dim: usize,
+    /// env-slot rows per forward-pass row (2 for team manifests, else
+    /// 1); Local backend only — the InfServer does its own accounting
+    rows_per_pass: usize,
     /// host params + device-buffer cache id (bumped on refresh)
     params: HashMap<ModelKey, (Arc<Vec<f32>>, u64)>,
     /// per-agent (version, rev) held from the last if-newer refresh, so
     /// steady-state refreshes transfer O(1) bytes (NotModified)
     latest_have: HashMap<u32, (u32, u64)>,
-    task: Option<TaskSpec>,
-    seg: SegBuffer,
-    cur_obs: Vec<Vec<f32>>,
-    episode_steps: u32,
+    slots: Vec<Slot>,
     episodes_done: u32,
-    rng: Pcg32,
+    // ---- per-tick scratch, reused so the hot loop stays off the
+    // allocator (obs gather buffers keep their capacity across ticks)
+    gather_buf: Vec<(ModelKey, Vec<f32>, usize)>,
+    plan: Vec<PlanEntry>,
+    actions_buf: Vec<Vec<usize>>,
+    learner_acts_buf: Vec<Vec<(usize, f32)>>,
     pub frames: Meter,
     pub episodes: Meter,
 }
 
 impl Actor {
+    /// Single-episode actor (`envs_per_actor = 1`): the exact behavior
+    /// of the pre-vectorized rollout loop.
     pub fn new(
         cfg: ActorConfig,
         backend: PolicyBackend,
@@ -147,21 +190,36 @@ impl Actor {
         pool_addrs: &[String],
         learner_data_addr: &str,
     ) -> Result<Actor> {
-        let env = envs::make(&cfg.env, cfg.seed)?;
+        Self::new_vec(cfg, 1, backend, league_addr, pool_addrs, learner_data_addr)
+    }
+
+    /// Vectorized actor: `n_slots` concurrent episodes (the
+    /// `--envs-per-actor` knob).  Slot 0 keeps the actor's base seed and
+    /// RNG stream, so `n_slots = 1` is bit-compatible with [`Actor::new`].
+    pub fn new_vec(
+        cfg: ActorConfig,
+        n_slots: usize,
+        backend: PolicyBackend,
+        league_addr: &str,
+        pool_addrs: &[String],
+        learner_data_addr: &str,
+    ) -> Result<Actor> {
+        let n_slots = n_slots.max(1);
+        let env = VecEnv::make(&cfg.env, n_slots, cfg.seed)?;
         let layout = role_layout(&cfg.env, env.n_agents());
         let manifest_env = envs::manifest_name(&cfg.env).to_string();
-        let (train_t, obs_dim, act_dim) = match &backend {
+        let (train_t, obs_dim, act_dim, rows_per_pass) = match &backend {
             PolicyBackend::Local(engine) => {
                 let m = engine.manifest.env(&manifest_env)?;
                 let t = if cfg.train_t > 0 { cfg.train_t } else { m.train_t };
-                (t, m.obs_dim, m.act_dim)
+                (t, m.obs_dim, m.act_dim, m.n_agents())
             }
             PolicyBackend::Remote(_) => {
                 anyhow::ensure!(
                     cfg.train_t > 0,
                     "ActorConfig.train_t must be set for the Remote backend"
                 );
-                (cfg.train_t, env.obs_dim(), env.act_dim())
+                (cfg.train_t, env.obs_dim(), env.act_dim(), 1)
             }
         };
         anyhow::ensure!(
@@ -169,9 +227,24 @@ impl Actor {
             "env/manifest shape mismatch for {}: {}x{} vs {}x{}",
             cfg.env, obs_dim, act_dim, env.obs_dim(), env.act_dim()
         );
-        let rng = Pcg32::from_label(cfg.seed, &cfg.actor_id);
+        let slots = (0..n_slots)
+            .map(|i| Slot {
+                task: None,
+                seg: SegBuffer::new(),
+                cur_obs: Vec::new(),
+                episode_steps: 0,
+                rng: if i == 0 {
+                    Pcg32::from_label(cfg.seed, &cfg.actor_id)
+                } else {
+                    Pcg32::from_label(
+                        cfg.seed,
+                        &format!("{}#slot{i}", cfg.actor_id),
+                    )
+                },
+            })
+            .collect();
+        let env_agents = env.n_agents();
         Ok(Actor {
-            env,
             layout,
             backend,
             league: LeagueClient::connect(league_addr),
@@ -179,20 +252,26 @@ impl Actor {
             push: PushClient::connect(learner_data_addr),
             manifest_env,
             train_t,
-            obs_dim,
             act_dim,
+            rows_per_pass,
             params: HashMap::new(),
             latest_have: HashMap::new(),
-            task: None,
-            seg: SegBuffer::new(),
-            cur_obs: Vec::new(),
-            episode_steps: 0,
+            slots,
             episodes_done: 0,
-            rng,
+            gather_buf: Vec::new(),
+            plan: Vec::new(),
+            actions_buf: vec![vec![0; env_agents]; n_slots],
+            learner_acts_buf: vec![Vec::new(); n_slots],
+            env,
             frames: Meter::new(),
             episodes: Meter::new(),
             cfg,
         })
+    }
+
+    /// Concurrent episodes this actor drives.
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
     }
 
     /// Override the segment length (tests / throughput harness).
@@ -260,7 +339,9 @@ impl Actor {
         Ok(())
     }
 
-    fn begin_task(&mut self) -> Result<()> {
+    /// Start a fresh episode in slot `si`: fetch the next LeagueMgr
+    /// task, refresh/prime params, reset the env slot.
+    fn begin_task_slot(&mut self, si: usize) -> Result<()> {
         let task = self.league.request_actor_task(&self.cfg.actor_id)?;
         let refresh = self.episodes_done % self.cfg.refresh_every.max(1) == 0;
         if refresh {
@@ -271,166 +352,242 @@ impl Actor {
         for &op in &task.opponents {
             self.fetch_params(op, false)?;
         }
-        self.task = Some(task);
+        let obs = self.env.reset_slot(si);
+        let slot = &mut self.slots[si];
+        slot.task = Some(task);
+        slot.cur_obs = obs;
+        slot.episode_steps = 0;
         Ok(())
     }
 
-    /// Forward pass for `rows` observations under `key`'s policy.
-    fn infer(&mut self, key: ModelKey, obs: &[f32], rows: u32) -> Result<Vec<f32>> {
-        match &self.backend {
+    /// Forward pass for `rows` env-slot observation rows (each `obs_dim`
+    /// f32s) under `key`'s policy; returns `rows * act_dim` logits.
+    fn infer(&mut self, key: ModelKey, obs: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let logits = match &self.backend {
             PolicyBackend::Local(engine) => {
+                anyhow::ensure!(
+                    rows % self.rows_per_pass == 0,
+                    "{rows} rows not divisible into {}-row passes",
+                    self.rows_per_pass
+                );
                 let (params, id) =
                     self.params.get(&key).context("params not cached")?;
-                let (logits, _value) =
-                    engine.infer_cached(&self.manifest_env, 1, *id, params, obs)?;
-                let _ = rows;
-                Ok(logits)
+                let (logits, _value) = infer_local_rows(
+                    engine,
+                    &self.manifest_env,
+                    *id,
+                    params,
+                    obs,
+                    rows / self.rows_per_pass,
+                )?;
+                logits
             }
             PolicyBackend::Remote(client) => {
-                let (logits, _value) = infer_remote(client, key, obs, rows)?;
-                Ok(logits)
+                let (logits, _value) =
+                    infer_remote(client, key, obs, rows as u32)?;
+                logits
             }
-        }
+        };
+        anyhow::ensure!(
+            logits.len() == rows * self.act_dim,
+            "policy {key}: got {} logits for {rows} rows x {}",
+            logits.len(),
+            self.act_dim
+        );
+        Ok(logits)
     }
 
-    /// Sample actions for a group of slots sharing one policy; returns
-    /// (actions per slot, logp per slot).
-    fn act_group(
-        &mut self,
-        key: ModelKey,
-        slots: &[usize],
-    ) -> Result<(Vec<usize>, Vec<f32>)> {
-        let mut obs = Vec::with_capacity(slots.len() * self.obs_dim);
-        for &s in slots {
-            obs.extend_from_slice(&self.cur_obs[s]);
-        }
-        let logits = self.infer(key, &obs, slots.len() as u32)?;
-        let a = self.act_dim;
-        let mut actions = Vec::with_capacity(slots.len());
-        let mut logps = Vec::with_capacity(slots.len());
-        for (i, _) in slots.iter().enumerate() {
-            let row = &logits[i * a..(i + 1) * a];
-            let act = self.rng.sample_logits(row);
-            actions.push(act);
-            logps.push(log_softmax_at(row, act));
-        }
-        Ok((actions, logps))
-    }
-
-    fn push_segment(&mut self) -> Result<()> {
-        let task = self.task.as_ref().unwrap();
+    fn push_segment(&mut self, si: usize) -> Result<()> {
+        let model_key = self.slots[si]
+            .task
+            .as_ref()
+            .expect("segment push inside an episode")
+            .learner_key;
         let na = self.layout.learner_slots.len() as u32;
+        let slot = &mut self.slots[si];
         // bootstrap obs = current learner-slot observations
-        let mut obs = std::mem::take(&mut self.seg.obs);
+        let mut obs = std::mem::take(&mut slot.seg.obs);
         for &s in &self.layout.learner_slots {
-            obs.extend_from_slice(&self.cur_obs[s]);
+            obs.extend_from_slice(&slot.cur_obs[s]);
         }
         let seg = TrajSegment {
-            model_key: task.learner_key,
-            t: self.seg.steps as u32,
+            model_key,
+            t: slot.seg.steps as u32,
             n_agents: na,
             obs,
-            actions: std::mem::take(&mut self.seg.actions),
-            behavior_logp: std::mem::take(&mut self.seg.logp),
-            rewards: std::mem::take(&mut self.seg.rewards),
-            discounts: std::mem::take(&mut self.seg.discounts),
+            actions: std::mem::take(&mut slot.seg.actions),
+            behavior_logp: std::mem::take(&mut slot.seg.logp),
+            rewards: std::mem::take(&mut slot.seg.rewards),
+            discounts: std::mem::take(&mut slot.seg.discounts),
         };
-        self.seg.clear();
-        self.push.push(&crate::proto::Msg::Traj(seg))
+        slot.seg.clear();
+        self.push.push(&Msg::Traj(seg))
     }
 
-    /// Advance the env by one step (all agents act).  Returns true at
-    /// episode end.
+    /// Advance every env slot by one step (all agents in all slots
+    /// act; one gathered forward pass per distinct model).  Returns
+    /// true if any slot finished its episode this tick.
     pub fn step_once(&mut self) -> Result<bool> {
-        if self.task.is_none() {
-            self.begin_task()?;
-            self.cur_obs = self.env.reset();
-            self.episode_steps = 0;
-        }
-        let task = self.task.as_ref().unwrap().clone();
-        let n = self.env.n_agents();
-        let mut actions = vec![0usize; n];
-
-        // learning meta-agent
-        let (l_acts, l_logps) =
-            self.act_group(task.learner_key, &self.layout.learner_slots.clone())?;
-        for (i, &s) in self.layout.learner_slots.iter().enumerate() {
-            actions[s] = l_acts[i];
-        }
-        // opponents
-        for (gi, group) in self.layout.opponent_groups.clone().iter().enumerate() {
-            let key = task.opponents.get(gi).copied().unwrap_or(task.learner_key);
-            let (o_acts, _) = self.act_group(key, group)?;
-            for (i, &s) in group.iter().enumerate() {
-                actions[s] = o_acts[i];
+        // 1. fresh episodes: any slot without a task gets its next one
+        for si in 0..self.slots.len() {
+            if self.slots[si].task.is_none() {
+                self.begin_task_slot(si)?;
             }
         }
 
-        // record obs+action+logp for the learning agent BEFORE stepping
-        for &s in &self.layout.learner_slots {
-            self.seg.obs.extend_from_slice(&self.cur_obs[s]);
+        // 2. gather: one obs batch per distinct ModelKey, with a plan
+        //    entry per (slot, group) in canonical order — slot-major,
+        //    learner group first.  Scratch buffers are reused across
+        //    ticks; a gather slot is live this tick once it has rows.
+        self.plan.clear();
+        let mut gathers = std::mem::take(&mut self.gather_buf);
+        for g in &mut gathers {
+            g.1.clear();
+            g.2 = 0;
         }
-        for (i, _) in self.layout.learner_slots.iter().enumerate() {
-            self.seg.actions.push(l_acts[i] as i32);
-            self.seg.logp.push(l_logps[i]);
+        for si in 0..self.slots.len() {
+            let task = self.slots[si].task.as_ref().expect("task set above");
+            let learner_key = task.learner_key;
+            let (key_idx, row) = gather_group(
+                &mut gathers,
+                learner_key,
+                &self.layout.learner_slots,
+                &self.slots[si].cur_obs,
+            );
+            self.plan.push(PlanEntry { slot: si, group: -1, key_idx, row });
+            for (gi, group) in self.layout.opponent_groups.iter().enumerate() {
+                let key =
+                    task.opponents.get(gi).copied().unwrap_or(learner_key);
+                let (key_idx, row) = gather_group(
+                    &mut gathers,
+                    key,
+                    group,
+                    &self.slots[si].cur_obs,
+                );
+                self.plan.push(PlanEntry {
+                    slot: si,
+                    group: gi as i32,
+                    key_idx,
+                    row,
+                });
+            }
         }
 
-        let step = self.env.step(&actions);
-        self.episode_steps += 1;
-        self.frames.add(1);
+        // 3. one forward pass per live key (multi-row InferReq /
+        //    chunked wide-artifact call) ...
+        let mut key_logits: Vec<Vec<f32>> = Vec::with_capacity(gathers.len());
+        for (key, obs, rows) in &gathers {
+            if *rows == 0 {
+                key_logits.push(Vec::new()); // stale scratch slot
+                continue;
+            }
+            key_logits.push(self.infer(*key, obs, *rows)?);
+        }
+        self.gather_buf = gathers;
 
-        // team reward = mean over learner slots
-        let r: f32 = self
-            .layout
-            .learner_slots
-            .iter()
-            .map(|&s| step.rewards[s])
-            .sum::<f32>()
-            / self.layout.learner_slots.len() as f32;
-        self.seg.rewards.push(r);
-        self.seg.discounts.push(if step.done {
-            0.0
-        } else {
-            self.cfg.gamma
-        });
-        self.seg.steps += 1;
-        self.cur_obs = step.obs;
-
-        if self.seg.steps >= self.train_t {
-            self.push_segment()?;
+        //    ... then scatter in PLAN order (not gather order): sample
+        //    each row with its slot's RNG and route actions back to
+        //    (slot, agent).  Plan order == the pre-vectorized sampling
+        //    order, even when one key's gather merged duplicate
+        //    opponent draws from non-adjacent groups.
+        for acts in &mut self.learner_acts_buf {
+            acts.clear();
+        }
+        for &p in &self.plan {
+            let members: &[usize] = if p.group < 0 {
+                &self.layout.learner_slots
+            } else {
+                &self.layout.opponent_groups[p.group as usize]
+            };
+            let logits = &key_logits[p.key_idx];
+            for (i, &m) in members.iter().enumerate() {
+                let rl = &logits
+                    [(p.row + i) * self.act_dim..(p.row + i + 1) * self.act_dim];
+                let act = self.slots[p.slot].rng.sample_logits(rl);
+                self.actions_buf[p.slot][m] = act;
+                if p.group < 0 {
+                    self.learner_acts_buf[p.slot]
+                        .push((act, log_softmax_at(rl, act)));
+                }
+            }
         }
 
-        if step.done {
-            let outcome = step
-                .info
-                .outcome
-                .as_ref()
-                .map(|o| {
-                    self.layout
-                        .learner_slots
-                        .iter()
-                        .map(|&s| o[s])
-                        .sum::<f32>()
-                        / self.layout.learner_slots.len() as f32
-                })
-                .unwrap_or(0.5);
-            self.league.report_outcome(MatchOutcome {
-                task_id: task.task_id,
-                learner_key: task.learner_key,
-                opponents: task.opponents.clone(),
-                outcome,
-                episode_len: self.episode_steps,
-                frames: self.episode_steps as u64,
-            })?;
-            self.episodes.add(1);
-            self.episodes_done += 1;
-            self.task = None; // next step_once() starts a fresh task
-            return Ok(true);
+        // 4. step every slot, record the learning agent's transition,
+        //    push full segments, report finished episodes
+        let n_slots = self.slots.len();
+        let mut any_done = false;
+        for si in 0..n_slots {
+            // record obs+action+logp for the learning agent BEFORE stepping
+            {
+                let slot = &mut self.slots[si];
+                for &s in &self.layout.learner_slots {
+                    slot.seg.obs.extend_from_slice(&slot.cur_obs[s]);
+                }
+                for &(act, logp) in &self.learner_acts_buf[si] {
+                    slot.seg.actions.push(act as i32);
+                    slot.seg.logp.push(logp);
+                }
+            }
+
+            let step = self.env.step_slot(si, &self.actions_buf[si]);
+            self.frames.add(1);
+
+            // team reward = mean over learner slots
+            let r: f32 = self
+                .layout
+                .learner_slots
+                .iter()
+                .map(|&s| step.rewards[s])
+                .sum::<f32>()
+                / self.layout.learner_slots.len() as f32;
+            let slot = &mut self.slots[si];
+            slot.episode_steps += 1;
+            slot.seg.rewards.push(r);
+            slot.seg.discounts.push(if step.done {
+                0.0
+            } else {
+                self.cfg.gamma
+            });
+            slot.seg.steps += 1;
+            slot.cur_obs = step.obs;
+
+            if self.slots[si].seg.steps >= self.train_t {
+                self.push_segment(si)?;
+            }
+
+            if step.done {
+                let task = self.slots[si].task.take().expect("episode task");
+                let outcome = step
+                    .info
+                    .outcome
+                    .as_ref()
+                    .map(|o| {
+                        self.layout
+                            .learner_slots
+                            .iter()
+                            .map(|&s| o[s])
+                            .sum::<f32>()
+                            / self.layout.learner_slots.len() as f32
+                    })
+                    .unwrap_or(0.5);
+                let episode_len = self.slots[si].episode_steps;
+                self.league.report_outcome(MatchOutcome {
+                    task_id: task.task_id,
+                    learner_key: task.learner_key,
+                    opponents: task.opponents,
+                    outcome,
+                    episode_len,
+                    frames: episode_len as u64,
+                })?;
+                self.episodes.add(1);
+                self.episodes_done += 1;
+                any_done = true; // next step_once() starts a fresh task
+            }
         }
-        Ok(false)
+        Ok(any_done)
     }
 
-    /// Run until `stop` or `max_frames` env steps.
+    /// Run until `stop` or `max_frames` env steps (summed over slots).
     pub fn run(&mut self, max_frames: u64, stop: &AtomicBool) -> Result<u64> {
         let start = self.frames.count();
         while self.frames.count() - start < max_frames
@@ -439,5 +596,80 @@ impl Actor {
             self.step_once()?;
         }
         Ok(self.frames.count() - start)
+    }
+}
+
+/// Append `members`' observations to the gather for `key`; returns the
+/// gather's index and the group's starting row inside it.  Gathers are
+/// scratch slots reused across ticks (`rows == 0` marks a stale slot
+/// whose obs buffer capacity is up for reclaiming under a new key).
+fn gather_group(
+    gathers: &mut Vec<(ModelKey, Vec<f32>, usize)>,
+    key: ModelKey,
+    members: &[usize],
+    cur_obs: &[Vec<f32>],
+) -> (usize, usize) {
+    let idx = match gathers.iter().position(|g| g.0 == key && g.2 > 0) {
+        Some(i) => i,
+        None => match gathers.iter().position(|g| g.2 == 0) {
+            Some(i) => {
+                gathers[i].0 = key;
+                i
+            }
+            None => {
+                gathers.push((key, Vec::new(), 0));
+                gathers.len() - 1
+            }
+        },
+    };
+    let g = &mut gathers[idx];
+    let row = g.2;
+    for &m in members {
+        g.1.extend_from_slice(&cur_obs[m]);
+    }
+    g.2 += members.len();
+    (idx, row)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression: pommerman_ffa's opponent groups used to hardcode
+    /// (1..4) — they must derive from n_agents.
+    #[test]
+    fn ffa_layout_derives_from_n_agents() {
+        let l = role_layout("pommerman_ffa", 4);
+        assert_eq!(l.learner_slots, vec![0]);
+        assert_eq!(l.opponent_groups, vec![vec![1], vec![2], vec![3]]);
+        let l = role_layout("pommerman_ffa", 6);
+        assert_eq!(l.opponent_groups.len(), 5);
+        let l = role_layout("pommerman_ffa", 2);
+        assert_eq!(l.opponent_groups, vec![vec![1]]);
+        // parameterized specs resolve through their base name
+        let l = role_layout("doom_lite:4", 4);
+        assert_eq!(l.learner_slots, vec![0]);
+        assert_eq!(l.opponent_groups.len(), 3);
+    }
+
+    /// Every env's layout covers each agent slot exactly once.
+    #[test]
+    fn layouts_partition_all_env_slots() {
+        for &name in crate::envs::ALL {
+            let env = crate::envs::make(name, 1).unwrap();
+            let l = role_layout(name, env.n_agents());
+            let mut seen = vec![false; env.n_agents()];
+            for &s in &l.learner_slots {
+                assert!(!seen[s], "{name}: slot {s} double-assigned");
+                seen[s] = true;
+            }
+            for g in &l.opponent_groups {
+                for &s in g {
+                    assert!(!seen[s], "{name}: slot {s} double-assigned");
+                    seen[s] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "{name}: every slot covered");
+        }
     }
 }

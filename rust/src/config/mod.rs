@@ -20,6 +20,10 @@ pub struct RunConfig {
     pub learners_per_agent: usize,
     /// actors per learner (M_A)
     pub actors_per_learner: usize,
+    /// concurrent episodes per actor (vectorized rollouts: every actor
+    /// tick batches all slots' observations into one forward pass per
+    /// model; 1 = the classic single-env actor)
+    pub envs_per_actor: usize,
     /// model-pool replicas (M_M)
     pub model_pools: usize,
     pub inf_servers: usize,
@@ -59,6 +63,7 @@ impl Default for RunConfig {
             n_agents: 1,
             learners_per_agent: 1,
             actors_per_learner: 2,
+            envs_per_actor: 1,
             model_pools: 1,
             inf_servers: 0,
             game_mgr: "uniform".into(),
@@ -98,6 +103,8 @@ impl RunConfig {
             get_num(&j, "learners_per_agent", cfg.learners_per_agent as f64) as usize;
         cfg.actors_per_learner =
             get_num(&j, "actors_per_learner", cfg.actors_per_learner as f64) as usize;
+        cfg.envs_per_actor =
+            get_num(&j, "envs_per_actor", cfg.envs_per_actor as f64) as usize;
         cfg.model_pools = get_num(&j, "model_pools", cfg.model_pools as f64) as usize;
         cfg.inf_servers = get_num(&j, "inf_servers", cfg.inf_servers as f64) as usize;
         if let Some(s) = j.get("game_mgr").and_then(|v| v.as_str()) {
@@ -159,6 +166,11 @@ impl RunConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
+        // the env spec must instantiate — catches unknown names and bad
+        // `name:<param>` forms at startup instead of actor restart-churn
+        crate::envs::make(&self.env, 0)
+            .map(|_| ())
+            .with_context(|| format!("invalid env spec '{}'", self.env))?;
         anyhow::ensure!(self.n_agents >= 1, "n_agents >= 1");
         anyhow::ensure!(self.learners_per_agent >= 1, "learners_per_agent >= 1");
         anyhow::ensure!(self.model_pools >= 1, "model_pools >= 1");
@@ -171,6 +183,7 @@ impl RunConfig {
             "replay_mode must be 'blocking' or 'ratio:<n>'"
         );
         anyhow::ensure!(self.checkpoint_keep >= 1, "checkpoint_keep >= 1");
+        anyhow::ensure!(self.envs_per_actor >= 1, "envs_per_actor >= 1");
         anyhow::ensure!(self.refresh_every >= 1, "refresh_every >= 1");
         anyhow::ensure!(self.infer_refresh_ms >= 1, "infer_refresh_ms >= 1");
         anyhow::ensure!(self.checkpoint_every_secs >= 1, "checkpoint_every_secs >= 1");
@@ -194,12 +207,20 @@ impl RunConfig {
     }
 
     /// Opponents per episode implied by the env if not set explicitly.
+    /// `validate()` guarantees the spec parameter parses, so the
+    /// fallbacks here are unreachable on a validated config.
     pub fn effective_opponents(&self) -> usize {
         if self.opponents_per_episode > 0 {
             return self.opponents_per_episode;
         }
-        match self.env.as_str() {
-            "doom_lite" => 7,
+        let (base, param) = crate::envs::spec(&self.env);
+        match base {
+            // doom_lite:<players> = (players - 1) single-slot opponents
+            "doom_lite" => param
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(8)
+                .saturating_sub(1)
+                .max(1),
             "pommerman_ffa" => 3,
             _ => 1,
         }
@@ -244,6 +265,11 @@ mod tests {
         assert!(RunConfig::from_json(r#"{"algo": "dqn"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"replay_mode": "nope"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"n_agents": 0}"#).is_err());
+        // env specs fail fast at validation, not at actor spawn
+        assert!(RunConfig::from_json(r#"{"env": "nope"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"env": "doom_lite:20"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"env": "doom_lite:x"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"env": "doom_lite:4"}"#).is_ok());
     }
 
     #[test]
@@ -296,5 +322,22 @@ mod tests {
         cfg.opponents_per_episode = 0;
         cfg.env = "doom_lite".into();
         assert_eq!(cfg.effective_opponents(), 7);
+        // parameterized specs imply their own opponent count
+        cfg.env = "doom_lite:4".into();
+        assert_eq!(cfg.effective_opponents(), 3);
+        cfg.env = "synthetic:64".into();
+        assert_eq!(cfg.effective_opponents(), 1);
+    }
+
+    #[test]
+    fn envs_per_actor_parses_and_validates() {
+        let cfg = RunConfig::from_json(
+            r#"{"env": "synthetic:64", "envs_per_actor": 8}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.envs_per_actor, 8);
+        assert_eq!(cfg.env, "synthetic:64");
+        assert_eq!(RunConfig::default().envs_per_actor, 1);
+        assert!(RunConfig::from_json(r#"{"envs_per_actor": 0}"#).is_err());
     }
 }

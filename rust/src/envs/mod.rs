@@ -18,6 +18,9 @@ pub mod matrix;
 pub mod pommerman;
 pub mod pong2p;
 pub mod synthetic;
+pub mod vec;
+
+pub use vec::{SlotStep, VecEnv};
 
 use anyhow::{bail, Result};
 
@@ -47,24 +50,80 @@ pub trait MultiAgentEnv: Send {
     fn step(&mut self, actions: &[usize]) -> Step;
 }
 
-/// Instantiate an env by manifest name.  `seed` drives all env
-/// randomness (map layout, spawn order, ...).
+/// Canonical environment registry: every base name [`make`] accepts.
+/// `doom_lite` and `synthetic` also take a `:<n>` parameter (see
+/// [`make`]); the registry lists base names only.
+pub const ALL: &[&str] = &[
+    "rps",
+    "pong2p",
+    "pommerman",
+    "pommerman_ffa",
+    "doom_lite",
+    "synthetic",
+];
+
+/// Split an env spec into `(base_name, optional ":<param>" value)`,
+/// e.g. `"doom_lite:4"` → `("doom_lite", Some("4"))`.
+pub fn spec(name: &str) -> (&str, Option<&str>) {
+    match name.split_once(':') {
+        Some((base, p)) => (base, Some(p)),
+        None => (name, None),
+    }
+}
+
+fn parse_param(base: &str, p: Option<&str>) -> Result<Option<usize>> {
+    match p {
+        None => Ok(None),
+        Some(s) => match s.parse::<usize>() {
+            Ok(v) => Ok(Some(v)),
+            Err(_) => bail!("env '{base}': bad parameter '{s}' (want an integer)"),
+        },
+    }
+}
+
+/// Instantiate an env by spec name.  `seed` drives all env randomness
+/// (map layout, spawn order, ...).  Parameterized specs:
+///
+/// - `doom_lite:<players>` — FFA player count (2..=8; default 8)
+/// - `synthetic:<episode_len>` — fixed episode length (default 256)
 pub fn make(name: &str, seed: u64) -> Result<Box<dyn MultiAgentEnv>> {
-    Ok(match name {
+    let (base, p) = spec(name);
+    if !ALL.contains(&base) {
+        bail!("unknown env '{base}' (known: {ALL:?})");
+    }
+    let param = parse_param(base, p)?;
+    anyhow::ensure!(
+        param.is_none() || matches!(base, "doom_lite" | "synthetic"),
+        "env '{base}' takes no ':<n>' parameter"
+    );
+    Ok(match base {
         "rps" => Box::new(matrix::MatrixGame::rps(seed)),
         "pong2p" => Box::new(pong2p::Pong2p::new(seed)),
         "pommerman" => Box::new(pommerman::Pommerman::team(seed)),
         "pommerman_ffa" => Box::new(pommerman::Pommerman::ffa(seed)),
-        "doom_lite" => Box::new(doom_lite::DoomLite::new(seed, 8)),
-        "synthetic" => Box::new(synthetic::Synthetic::new(seed)),
-        other => bail!("unknown env '{other}'"),
+        "doom_lite" => {
+            let n = param.unwrap_or(8);
+            anyhow::ensure!(
+                (2..=8).contains(&n),
+                "doom_lite:<players> wants 2..=8, got {n}"
+            );
+            Box::new(doom_lite::DoomLite::new(seed, n))
+        }
+        "synthetic" => match param {
+            None => Box::new(synthetic::Synthetic::new(seed)),
+            Some(len) => {
+                anyhow::ensure!(len >= 1, "synthetic:<episode_len> wants >= 1");
+                Box::new(synthetic::Synthetic::with_cost(seed, 2_000, len))
+            }
+        },
+        _ => unreachable!("envs::ALL and the make dispatch must agree"),
     })
 }
 
-/// The manifest env name an env maps to (pommerman_ffa shares the
-/// pommerman artifacts).
+/// The manifest env name an env spec maps to (pommerman_ffa shares the
+/// pommerman artifacts; `:<n>` parameters never change the net shapes).
 pub fn manifest_name(env: &str) -> &str {
-    match env {
+    match spec(env).0 {
         "pommerman_ffa" => "pommerman",
         other => other,
     }
@@ -76,8 +135,7 @@ mod tests {
 
     #[test]
     fn factory_builds_every_env() {
-        for name in ["rps", "pong2p", "pommerman", "pommerman_ffa",
-                     "doom_lite", "synthetic"] {
+        for &name in ALL {
             let mut env = make(name, 7).unwrap();
             let obs = env.reset();
             assert_eq!(obs.len(), env.n_agents(), "{name}");
@@ -91,7 +149,7 @@ mod tests {
 
     #[test]
     fn episodes_terminate_and_emit_outcome() {
-        for name in ["rps", "pong2p", "pommerman", "doom_lite"] {
+        for &name in ALL {
             let mut env = make(name, 3).unwrap();
             env.reset();
             let mut steps = 0;
@@ -117,7 +175,7 @@ mod tests {
 
     #[test]
     fn same_seed_same_rollout() {
-        for name in ["pommerman", "doom_lite", "pong2p"] {
+        for &name in ALL {
             let mut a = make(name, 42).unwrap();
             let mut b = make(name, 42).unwrap();
             assert_eq!(a.reset(), b.reset(), "{name}");
@@ -133,5 +191,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn parameterized_specs() {
+        let mut d = make("doom_lite:4", 1).unwrap();
+        assert_eq!(d.n_agents(), 4);
+        assert_eq!(d.reset().len(), 4);
+        let mut s = make("synthetic:8", 1).unwrap();
+        s.reset();
+        for t in 0..8 {
+            let st = s.step(&[0, 1]);
+            assert_eq!(st.done, t == 7, "episode_len param must hold");
+        }
+        assert!(make("doom_lite:1", 0).is_err());
+        assert!(make("doom_lite:9", 0).is_err());
+        assert!(make("doom_lite:x", 0).is_err());
+        assert!(make("synthetic:0", 0).is_err());
+        assert!(make("rps:3", 0).is_err(), "rps takes no parameter");
+        assert_eq!(manifest_name("doom_lite:4"), "doom_lite");
+        assert_eq!(manifest_name("pommerman_ffa"), "pommerman");
+        assert_eq!(spec("synthetic:64"), ("synthetic", Some("64")));
+        assert_eq!(spec("rps"), ("rps", None));
     }
 }

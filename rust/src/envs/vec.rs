@@ -1,0 +1,206 @@
+//! VecEnv: N independently-seeded episodes of one [`MultiAgentEnv`].
+//!
+//! The vectorized rollout substrate (paper §4.4 throughput study): an
+//! Actor drives all N slots in lock-step, gathering every slot's
+//! observations into one wide forward pass per model instead of N
+//! batch-1 passes.  Each slot is a fully independent episode — its own
+//! env instance, its own seed stream — so trajectories and outcomes
+//! stay per-episode exact.
+//!
+//! Determinism story: slot seeds derive from the actor's base seed via
+//! [`slot_seed`] (splitmix64 mix).  Slot 0 keeps the base seed
+//! unchanged, so a 1-slot VecEnv reproduces the single-env actor
+//! bit-for-bit.
+//!
+//! Two driving styles:
+//! - granular ([`VecEnv::reset_slot`] / [`VecEnv::step_slot`]) for
+//!   callers whose episode starts are gated on external state (the
+//!   Actor resets a slot only once its next LeagueMgr task is in hand);
+//! - bulk auto-reset ([`VecEnv::step_all`]): finished slots reset
+//!   immediately and the episode boundary is surfaced per slot via
+//!   [`SlotStep::done`] / [`SlotStep::final_obs`].
+
+use super::{make, Info, MultiAgentEnv, Step};
+use anyhow::Result;
+
+/// Mix `slot` into `base` (splitmix64) so every slot gets an
+/// independent, reproducible seed.  Slot 0 returns `base` unchanged —
+/// a 1-slot VecEnv is bit-identical to the raw env.
+pub fn slot_seed(base: u64, slot: usize) -> u64 {
+    if slot == 0 {
+        return base;
+    }
+    let mut z = base ^ (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One slot's result from [`VecEnv::step_all`].
+pub struct SlotStep {
+    /// Observations to act on next tick.  When `done`, these are the
+    /// first observations of the slot's auto-reset next episode.
+    pub obs: Vec<Vec<f32>>,
+    pub rewards: Vec<f32>,
+    pub done: bool,
+    pub info: Info,
+    /// Terminal observations of the finished episode (`done` only).
+    pub final_obs: Option<Vec<Vec<f32>>>,
+}
+
+/// N parallel instances of one env, independently seeded per slot.
+pub struct VecEnv {
+    slots: Vec<Box<dyn MultiAgentEnv>>,
+    n_agents: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    max_steps: usize,
+}
+
+impl VecEnv {
+    /// Build `n_slots` instances of env spec `name` (any name
+    /// [`super::make`] accepts, including parameterized forms like
+    /// `doom_lite:4`), slot `i` seeded with `slot_seed(base_seed, i)`.
+    pub fn make(name: &str, n_slots: usize, base_seed: u64) -> Result<VecEnv> {
+        anyhow::ensure!(n_slots >= 1, "VecEnv needs at least one slot");
+        let slots = (0..n_slots)
+            .map(|i| make(name, slot_seed(base_seed, i)))
+            .collect::<Result<Vec<_>>>()?;
+        let (n_agents, obs_dim, act_dim, max_steps) = {
+            let e = &slots[0];
+            (e.n_agents(), e.obs_dim(), e.act_dim(), e.max_steps())
+        };
+        Ok(VecEnv { slots, n_agents, obs_dim, act_dim, max_steps })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+    pub fn max_steps(&self) -> usize {
+        self.max_steps
+    }
+
+    /// Begin a new episode in one slot.
+    pub fn reset_slot(&mut self, slot: usize) -> Vec<Vec<f32>> {
+        self.slots[slot].reset()
+    }
+
+    /// Advance one slot by one step (no auto-reset — the caller owns
+    /// the episode lifecycle).
+    pub fn step_slot(&mut self, slot: usize, actions: &[usize]) -> Step {
+        self.slots[slot].step(actions)
+    }
+
+    /// Begin a new episode in every slot; returns per-slot observations.
+    pub fn reset_all(&mut self) -> Vec<Vec<Vec<f32>>> {
+        self.slots.iter_mut().map(|e| e.reset()).collect()
+    }
+
+    /// Step every slot with its own action set.  Finished slots
+    /// auto-reset: their [`SlotStep`] carries `done = true`, the
+    /// episode's terminal observations in `final_obs`, and the fresh
+    /// episode's first observations in `obs`.
+    pub fn step_all(&mut self, actions: &[Vec<usize>]) -> Vec<SlotStep> {
+        assert_eq!(actions.len(), self.slots.len(), "one action set per slot");
+        self.slots
+            .iter_mut()
+            .zip(actions)
+            .map(|(env, acts)| {
+                let step = env.step(acts);
+                if step.done {
+                    let fresh = env.reset();
+                    SlotStep {
+                        obs: fresh,
+                        rewards: step.rewards,
+                        done: true,
+                        info: step.info,
+                        final_obs: Some(step.obs),
+                    }
+                } else {
+                    SlotStep {
+                        obs: step.obs,
+                        rewards: step.rewards,
+                        done: false,
+                        info: step.info,
+                        final_obs: None,
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_zero_keeps_base_seed_and_stream() {
+        let mut v = VecEnv::make("pong2p", 3, 42).unwrap();
+        let mut solo = make("pong2p", 42).unwrap();
+        assert_eq!(v.reset_slot(0), solo.reset());
+        for t in 0..30 {
+            let acts: Vec<usize> =
+                (0..v.n_agents()).map(|i| (t + i) % v.act_dim()).collect();
+            let a = v.step_slot(0, &acts);
+            let b = solo.step(&acts);
+            assert_eq!(a.obs, b.obs, "diverged at {t}");
+            assert_eq!(a.rewards, b.rewards);
+            assert_eq!(a.done, b.done);
+            if a.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn slots_are_independently_seeded() {
+        let mut v = VecEnv::make("synthetic:8", 4, 7).unwrap();
+        assert_eq!(v.n_slots(), 4);
+        let obs = v.reset_all();
+        for i in 1..4 {
+            assert_ne!(obs[0], obs[i], "slot {i} mirrors slot 0");
+        }
+        assert_eq!(slot_seed(7, 0), 7);
+        assert_ne!(slot_seed(7, 1), slot_seed(7, 2));
+        assert_ne!(slot_seed(7, 1), slot_seed(8, 1));
+    }
+
+    #[test]
+    fn step_all_auto_resets_and_surfaces_boundaries() {
+        let mut v = VecEnv::make("synthetic:3", 2, 1).unwrap();
+        v.reset_all();
+        for t in 0..3usize {
+            let acts: Vec<Vec<usize>> =
+                (0..2).map(|s| vec![s % 16, (s + t) % 16]).collect();
+            let steps = v.step_all(&acts);
+            for st in &steps {
+                if t == 2 {
+                    assert!(st.done, "3-step episode must end at step 3");
+                    let fin =
+                        st.final_obs.as_ref().expect("terminal obs surfaced");
+                    assert_eq!(fin.len(), v.n_agents());
+                    assert!(st.info.outcome.is_some());
+                    // obs already belong to the auto-reset next episode
+                    assert_eq!(st.obs.len(), v.n_agents());
+                    assert_ne!(&st.obs, fin);
+                } else {
+                    assert!(!st.done);
+                    assert!(st.final_obs.is_none());
+                }
+            }
+        }
+        // the auto-reset episodes keep stepping normally
+        let steps = v.step_all(&vec![vec![0, 0]; 2]);
+        assert!(steps.iter().all(|s| !s.done));
+    }
+}

@@ -14,6 +14,7 @@ use crate::envs::matrix::MatrixGame;
 use crate::envs::pommerman::agents::ScriptedPolicy;
 use crate::envs::pommerman::Pommerman;
 use crate::envs::MultiAgentEnv;
+use crate::inference::infer_local_rows;
 use crate::runtime::Engine;
 use crate::util::rng::{log_softmax_at, Pcg32};
 use anyhow::Result;
@@ -56,14 +57,42 @@ impl NnPolicy {
 
     /// Team forward pass (pommerman): obs [2*D] -> 2 actions.
     pub fn act_team(&mut self, obs: &[f32]) -> Result<[usize; 2]> {
-        let (logits, _v) =
-            self.engine
-                .infer_cached(&self.env, 1, self.buf_id, &self.params, obs)?;
-        let a = logits.len() / 2;
-        Ok([
-            self.rng.sample_logits(&logits[..a]),
-            self.rng.sample_logits(&logits[a..]),
-        ])
+        Ok(self.act_team_rows(obs, 1)?[0])
+    }
+
+    /// Vectorized single-agent forward: `rows` independent observation
+    /// rows in one chunked wide-artifact call, one sampled action per
+    /// row (the eval side of the vectorized rollout path).
+    pub fn act_rows(&mut self, obs: &[f32], rows: usize) -> Result<Vec<usize>> {
+        let (logits, _v) = infer_local_rows(
+            &self.engine, &self.env, self.buf_id, &self.params, obs, rows,
+        )?;
+        let a = logits.len() / rows;
+        Ok((0..rows)
+            .map(|i| self.rng.sample_logits(&logits[i * a..(i + 1) * a]))
+            .collect())
+    }
+
+    /// Vectorized team forward: `rows` team observations (2*D each)
+    /// -> 2 actions per row.
+    pub fn act_team_rows(
+        &mut self,
+        obs: &[f32],
+        rows: usize,
+    ) -> Result<Vec<[usize; 2]>> {
+        let (logits, _v) = infer_local_rows(
+            &self.engine, &self.env, self.buf_id, &self.params, obs, rows,
+        )?;
+        let a = logits.len() / rows / 2;
+        Ok((0..rows)
+            .map(|i| {
+                let r = &logits[i * 2 * a..(i + 1) * 2 * a];
+                [
+                    self.rng.sample_logits(&r[..a]),
+                    self.rng.sample_logits(&r[a..]),
+                ]
+            })
+            .collect())
     }
 
     /// Mean policy distribution over a set of observations (used for
@@ -134,20 +163,75 @@ pub fn pommerman_game(
     }
 }
 
-/// Win/Loss/Tie record over `games` pommerman evaluations.
+/// Win/Loss/Tie record over `games` pommerman evaluations (sequential:
+/// the 1-wide case of [`pommerman_record_vec`]).
 pub fn pommerman_record(
     nn: &mut NnPolicy,
     mk_opponent: &mut dyn FnMut(u64) -> Box<dyn ScriptedPolicy>,
     games: u64,
     seed0: u64,
 ) -> Result<(u32, u32, u32)> {
-    let (mut w, mut l, mut t) = (0, 0, 0);
-    for g in 0..games {
-        match pommerman_game(seed0 + g, nn, mk_opponent)? {
-            o if o >= 1.0 => w += 1,
-            o if o <= 0.0 => l += 1,
-            _ => t += 1,
+    pommerman_record_vec(nn, mk_opponent, games, seed0, 1)
+}
+
+/// Win/Loss/Tie record over `games` pommerman evaluations, running up
+/// to `concurrency` games at once: each tick gathers every active
+/// game's team observation into one wide NN forward pass (the same
+/// vectorized path the Actor rides), then steps every game.  Finished
+/// games retire and the next seed takes their place.
+pub fn pommerman_record_vec(
+    nn: &mut NnPolicy,
+    mk_opponent: &mut dyn FnMut(u64) -> Box<dyn ScriptedPolicy>,
+    games: u64,
+    seed0: u64,
+    concurrency: usize,
+) -> Result<(u32, u32, u32)> {
+    struct Game {
+        env: Pommerman,
+        obs: Vec<Vec<f32>>,
+        ops: [Box<dyn ScriptedPolicy>; 2],
+    }
+    let concurrency = concurrency.max(1);
+    let (mut w, mut l, mut t) = (0u32, 0u32, 0u32);
+    let mut next = 0u64;
+    let mut active: Vec<Game> = Vec::new();
+    while next < games || !active.is_empty() {
+        while active.len() < concurrency && next < games {
+            let seed = seed0 + next;
+            next += 1;
+            let mut env = Pommerman::team(seed);
+            let obs = env.reset();
+            let ops = [mk_opponent(seed * 2 + 1), mk_opponent(seed * 2 + 2)];
+            active.push(Game { env, obs, ops });
         }
+        // gather every active game's team observation into one batch
+        let rows = active.len();
+        let mut obs = Vec::with_capacity(rows * 2 * active[0].obs[0].len());
+        for g in &active {
+            obs.extend_from_slice(&g.obs[0]);
+            obs.extend_from_slice(&g.obs[2]);
+        }
+        let acts = nn.act_team_rows(&obs, rows)?;
+        // step every game with its own actions; retire finished ones
+        let mut i = 0usize;
+        active.retain_mut(|g| {
+            let a = acts[i];
+            i += 1;
+            let actions =
+                vec![a[0], g.ops[0].act(&g.env, 1), a[1], g.ops[1].act(&g.env, 3)];
+            let step = g.env.step(&actions);
+            if step.done {
+                match step.info.outcome.expect("outcome at episode end")[0] {
+                    o if o >= 1.0 => w += 1,
+                    o if o <= 0.0 => l += 1,
+                    _ => t += 1,
+                }
+                false
+            } else {
+                g.obs = step.obs;
+                true
+            }
+        });
     }
     Ok((w, l, t))
 }
@@ -208,6 +292,31 @@ mod tests {
         let mut mk = |s: u64| Box::new(SimpleAgent::new(s)) as Box<dyn ScriptedPolicy>;
         let (w, l, t) = pommerman_record(&mut nn, &mut mk, 3, 0).unwrap();
         assert_eq!(w + l + t, 3);
+    }
+
+    #[test]
+    fn vectorized_pommerman_record_sums_to_games() {
+        let Some(engine) = engine() else { return };
+        let params = engine.init_params("pommerman").unwrap();
+        let mut nn = NnPolicy::new(engine, "pommerman", params, 4);
+        let mut mk =
+            |s: u64| Box::new(SimpleAgent::new(s)) as Box<dyn ScriptedPolicy>;
+        let (w, l, t) = pommerman_record_vec(&mut nn, &mut mk, 4, 0, 3).unwrap();
+        assert_eq!(w + l + t, 4);
+    }
+
+    #[test]
+    fn act_rows_batches_independent_rows() {
+        let Some(engine) = engine() else { return };
+        let params = engine.init_params("rps").unwrap();
+        let m = engine.manifest.env("rps").unwrap().clone();
+        let mut nn = NnPolicy::new(engine, "rps", params, 5);
+        let rows = m.infer_b + 2; // exercises the chunked tail
+        let obs: Vec<f32> =
+            (0..rows * m.obs_dim).map(|i| i as f32 * 0.01).collect();
+        let acts = nn.act_rows(&obs, rows).unwrap();
+        assert_eq!(acts.len(), rows);
+        assert!(acts.iter().all(|&a| a < m.act_dim));
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! SEED-RL design point the paper adopts: batch-32 forward passes are
 //! far cheaper per row than 32 batch-1 passes (ablation A2).
 //!
+//! Requests may carry MANY rows (a vectorized actor submits all of its
+//! env slots' observations for one model in a single `InferReq`); the
+//! batcher accounts queue depth in forward-pass rows, packs whole
+//! requests into artifact-sized chunks, and demuxes each reply back to
+//! its request row-for-row.
+//!
 //! Parameters are fetched from the ModelPool and cached: frozen models
 //! forever, the in-training model with a short TTL so actors follow the
 //! learner's updates.
@@ -23,6 +29,9 @@ use std::time::{Duration, Instant};
 
 struct Pending {
     obs: Vec<f32>,
+    /// forward-pass rows this request occupies (wire rows / manifest
+    /// agents-per-pass; a team meta-agent row counts once)
+    rows: usize,
     reply: Arc<ReplySlot>,
     seq: u64,
     enqueued: Instant,
@@ -93,29 +102,50 @@ struct Queues {
     by_key: HashMap<ModelKey, Vec<Pending>>,
 }
 
-/// Pop up to `max` same-shaped requests for `key`.  One key can carry
-/// different obs widths (a meta-agent group vs a single slot under the
-/// same policy); mixing widths would mis-slice the batch.
-fn take_batch(q: &mut Queues, key: ModelKey, max: usize) -> Vec<Pending> {
+/// Pop requests for `key` FIFO until `max_rows` forward-pass rows are
+/// gathered.  Always takes at least one request — an oversized request
+/// (more rows than one artifact batch) is taken whole and chunked by
+/// `run_batch`.
+fn take_batch(q: &mut Queues, key: ModelKey, max_rows: usize) -> Vec<Pending> {
     let Some(v) = q.by_key.get_mut(&key) else { return Vec::new() };
-    if v.is_empty() {
-        q.by_key.remove(&key);
-        return Vec::new();
-    }
-    let slot = v[0].obs.len();
-    let mut taken = Vec::with_capacity(max.min(v.len()));
-    let mut i = 0;
-    while i < v.len() && taken.len() < max {
-        if v[i].obs.len() == slot {
-            taken.push(v.remove(i));
-        } else {
-            i += 1;
-        }
+    let mut taken = Vec::new();
+    let mut rows = 0usize;
+    while !v.is_empty() && (taken.is_empty() || rows + v[0].rows <= max_rows) {
+        rows += v[0].rows;
+        taken.push(v.remove(0));
     }
     if v.is_empty() {
         q.by_key.remove(&key);
     }
     taken
+}
+
+fn queued_rows(v: &[Pending]) -> usize {
+    v.iter().map(|p| p.rows).sum()
+}
+
+/// Slice `lrow`/`vrow`-wide output rows back to their pending requests
+/// in queue order.
+fn deliver_rows(
+    batch: &[Pending],
+    logits: &[f32],
+    value: &[f32],
+    lrow: usize,
+    vrow: usize,
+) {
+    let (mut lo, mut vo) = (0usize, 0usize);
+    for p in batch {
+        let (ln, vn) = (p.rows * lrow, p.rows * vrow);
+        p.reply.deliver(
+            p.seq,
+            Msg::InferResp {
+                logits: logits[lo..lo + ln].to_vec(),
+                value: value[vo..vo + vn].to_vec(),
+            },
+        );
+        lo += ln;
+        vo += vn;
+    }
 }
 
 pub struct InfServerConfig {
@@ -155,19 +185,28 @@ impl InfServer {
         engine: Arc<Engine>,
         pool_addrs: &[String],
     ) -> Result<InfServer> {
-        let obs_dim = engine.manifest.env(&cfg.env)?.obs_dim;
+        let m = engine.manifest.env(&cfg.env)?;
+        let obs_dim = m.obs_dim;
+        // env-slot rows per forward-pass row (2 for team manifests)
+        let rows_per_pass = m.n_agents();
+        let row_width = rows_per_pass * obs_dim;
         let queue = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
         let q2 = queue.clone();
         let server = RepServer::serve_frames(bind, move |msg| match msg {
             Msg::InferReq { key, obs, rows } => {
                 // validate against the manifest BEFORE queueing: a
                 // mis-sized request would mis-slice the whole batch
-                if rows == 0 || obs.len() != rows as usize * obs_dim {
+                if rows == 0
+                    || obs.len() != rows as usize * obs_dim
+                    || rows as usize % rows_per_pass != 0
+                {
                     return Reply::Msg(Msg::Err(format!(
-                        "infserver: obs len {} != rows {rows} x obs_dim {obs_dim}",
+                        "infserver: obs len {} / rows {rows} mismatch \
+                         (obs_dim {obs_dim}, {rows_per_pass} rows per pass)",
                         obs.len()
                     )));
                 }
+                let pass_rows = rows as usize / rows_per_pass;
                 let (slot, seq) = REPLY_SLOT.with(|s| (s.clone(), s.begin()));
                 {
                     let (lock, cv) = &*q2;
@@ -178,6 +217,7 @@ impl InfServer {
                         .or_default()
                         .push(Pending {
                             obs,
+                            rows: pass_rows,
                             reply: slot.clone(),
                             seq,
                             enqueued: Instant::now(),
@@ -222,7 +262,7 @@ impl InfServer {
                             if let Some(key) = q
                                 .by_key
                                 .iter()
-                                .find(|(_, v)| v.len() >= cfg.batch)
+                                .find(|(_, v)| queued_rows(v) >= cfg.batch)
                                 .map(|(k, _)| *k)
                             {
                                 break (key, take_batch(&mut q, key, cfg.batch));
@@ -276,11 +316,12 @@ impl InfServer {
                         continue;
                     };
                     match Self::run_batch(
-                        &engine, &cfg, &params, buf_id, &batch, &mut obs_buf,
+                        &engine, &cfg, &params, buf_id, &batch, row_width,
+                        &mut obs_buf,
                     ) {
-                        Ok(()) => {
-                            rm.add(batch.len() as u64);
-                            bm.add(1);
+                        Ok(passes) => {
+                            rm.add(queued_rows(&batch) as u64);
+                            bm.add(passes);
                         }
                         Err(e) => reply_err(&batch, &format!("{e}")),
                     }
@@ -357,34 +398,66 @@ impl InfServer {
         }
     }
 
+    /// Pack the batch's forward-pass rows into artifact-sized chunks
+    /// (zero-padding the tail), run each chunk, and demux the results
+    /// back to every pending request row-for-row.  Returns the number
+    /// of forward passes executed.  The common case — everything fits
+    /// one artifact batch, which `take_batch`'s row cap guarantees
+    /// unless a single oversized request arrived — runs one pass and
+    /// demuxes straight from the engine outputs, no intermediate copy.
     fn run_batch(
         engine: &Engine,
         cfg: &InfServerConfig,
         params: &[f32],
         buf_id: u64,
         batch: &[Pending],
+        row_width: usize,
         obs_buf: &mut Vec<f32>,
-    ) -> Result<()> {
-        let slot = batch[0].obs.len(); // rows-per-slot * D
-        obs_buf.clear();
-        obs_buf.resize(cfg.batch * slot, 0.0);
-        for (i, p) in batch.iter().enumerate() {
-            obs_buf[i * slot..(i + 1) * slot].copy_from_slice(&p.obs);
+    ) -> Result<u64> {
+        let b = cfg.batch;
+        let total: usize = batch.iter().map(|p| p.rows).sum();
+        anyhow::ensure!(total > 0, "empty batch");
+        if total <= b {
+            obs_buf.clear();
+            obs_buf.resize(b * row_width, 0.0);
+            let mut off = 0usize;
+            for p in batch {
+                obs_buf[off..off + p.obs.len()].copy_from_slice(&p.obs);
+                off += p.obs.len();
+            }
+            let (logits, value) =
+                engine.infer_cached(&cfg.env, b, buf_id, params, obs_buf)?;
+            deliver_rows(batch, &logits, &value, logits.len() / b, value.len() / b);
+            return Ok(1);
         }
-        let (logits, value) =
-            engine.infer_cached(&cfg.env, cfg.batch, buf_id, params, obs_buf)?;
-        let lslot = logits.len() / cfg.batch;
-        let vslot = value.len() / cfg.batch;
-        for (i, p) in batch.iter().enumerate() {
-            p.reply.deliver(
-                p.seq,
-                Msg::InferResp {
-                    logits: logits[i * lslot..(i + 1) * lslot].to_vec(),
-                    value: value[i * vslot..(i + 1) * vslot].to_vec(),
-                },
-            );
+        // oversized request(s): flatten the pass rows and chunk
+        let rows: Vec<&[f32]> =
+            batch.iter().flat_map(|p| p.obs.chunks(row_width)).collect();
+        let mut logits_all: Vec<f32> = Vec::new();
+        let mut value_all: Vec<f32> = Vec::new();
+        let mut passes = 0u64;
+        for chunk in rows.chunks(b) {
+            obs_buf.clear();
+            obs_buf.resize(b * row_width, 0.0);
+            for (i, r) in chunk.iter().enumerate() {
+                obs_buf[i * row_width..(i + 1) * row_width].copy_from_slice(r);
+            }
+            let (logits, value) =
+                engine.infer_cached(&cfg.env, b, buf_id, params, obs_buf)?;
+            let lrow = logits.len() / b;
+            let vrow = value.len() / b;
+            logits_all.extend_from_slice(&logits[..chunk.len() * lrow]);
+            value_all.extend_from_slice(&value[..chunk.len() * vrow]);
+            passes += 1;
         }
-        Ok(())
+        deliver_rows(
+            batch,
+            &logits_all,
+            &value_all,
+            logits_all.len() / total,
+            value_all.len() / total,
+        );
+        Ok(passes)
     }
 
     pub fn shutdown(&mut self) {
@@ -412,6 +485,79 @@ pub fn infer_remote(
         Msg::InferResp { logits, value } => Ok((logits, value)),
         other => anyhow::bail!("infer: unexpected reply {other:?}"),
     }
+}
+
+/// Local-engine forward pass for `rows` pass rows (`obs` holds
+/// `rows * n_agents * obs_dim` f32s), chunked through the wide
+/// `infer_<env>_b{infer_b}` artifact when `rows > 1` — the Actor's
+/// Local-backend equivalent of a multi-row `InferReq` — and through the
+/// b1 artifact when `rows == 1` (the pre-vectorized fast path).  The
+/// tail chunk is zero-padded to the artifact batch; pad rows are
+/// sliced off the outputs.  Used by the vectorized Actor and the eval
+/// batch helpers.
+pub fn infer_local_rows(
+    engine: &Engine,
+    env: &str,
+    params_id: u64,
+    params: &[f32],
+    obs: &[f32],
+    rows: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    anyhow::ensure!(rows > 0, "infer_local_rows: zero rows");
+    anyhow::ensure!(
+        obs.len() % rows == 0,
+        "infer_local_rows: {} obs not divisible into {rows} rows",
+        obs.len()
+    );
+    if rows == 1 {
+        return engine.infer_cached(env, 1, params_id, params, obs);
+    }
+    let b = engine.manifest.env(env)?.infer_b.max(1);
+    let row_width = obs.len() / rows;
+    // Tiny gathers loop the b1 artifact instead of paying a mostly-
+    // padded wide pass: below b/8 rows the padding waste outweighs the
+    // per-pass dispatch overhead the wide artifact amortizes (A2).
+    // This also keeps a 1-slot actor whose opponent draw shares the
+    // learner's key at the pre-vectorized cost (two b1 passes).
+    if rows * 8 <= b {
+        let mut logits = Vec::new();
+        let mut value = Vec::new();
+        for r in 0..rows {
+            let (l, v) = engine.infer_cached(
+                env,
+                1,
+                params_id,
+                params,
+                &obs[r * row_width..(r + 1) * row_width],
+            )?;
+            logits.extend_from_slice(&l);
+            value.extend_from_slice(&v);
+        }
+        return Ok((logits, value));
+    }
+    let mut logits = Vec::new();
+    let mut value = Vec::new();
+    // pad buffer only materializes for a partial tail chunk
+    let mut buf: Vec<f32> = Vec::new();
+    let mut done = 0usize;
+    while done < rows {
+        let take = (rows - done).min(b);
+        let src = &obs[done * row_width..(done + take) * row_width];
+        let (l, v) = if take == b {
+            engine.infer_cached(env, b, params_id, params, src)?
+        } else {
+            buf.clear();
+            buf.resize(b * row_width, 0.0);
+            buf[..take * row_width].copy_from_slice(src);
+            engine.infer_cached(env, b, params_id, params, &buf)?
+        };
+        let lrow = l.len() / b;
+        let vrow = v.len() / b;
+        logits.extend_from_slice(&l[..take * lrow]);
+        value.extend_from_slice(&v[..take * vrow]);
+        done += take;
+    }
+    Ok((logits, value))
 }
 
 #[allow(unused_imports)]
@@ -552,6 +698,71 @@ mod tests {
         // a well-formed request on the SAME connection still succeeds
         let (logits, _) = infer_remote(&c, key, &vec![0.0; d], 1).unwrap();
         assert_eq!(logits.len(), act_dim);
+    }
+
+    /// A vectorized actor's multi-row request comes back demuxed
+    /// row-for-row, matching per-row local inference; rows beyond one
+    /// artifact batch exercise the chunked dispatch.
+    #[test]
+    fn multi_row_requests_demux_per_row() {
+        let Some(engine) = engine() else { return };
+        let m = engine.manifest.env("rps").unwrap().clone();
+        let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let pc = ModelPoolClient::connect(&[pool.addr.clone()]);
+        let params = engine.init_params("rps").unwrap();
+        let key = ModelKey::new(0, 1);
+        pc.put(ModelBlob {
+            key,
+            params: params.clone(),
+            hp: vec![],
+            frozen: true,
+        })
+        .unwrap();
+        let server = InfServer::start(
+            "127.0.0.1:0",
+            InfServerConfig {
+                env: "rps".into(),
+                batch: m.infer_b,
+                max_wait: Duration::from_millis(2),
+                refresh: Duration::from_millis(50),
+            },
+            engine.clone(),
+            &[pool.addr.clone()],
+        )
+        .unwrap();
+        let c = ReqClient::connect(&server.addr);
+        let d = m.obs_dim;
+        let rows = 5usize;
+        let obs: Vec<f32> = (0..rows * d).map(|i| i as f32 * 0.1).collect();
+        let (logits, value) = infer_remote(&c, key, &obs, rows as u32).unwrap();
+        assert_eq!(logits.len(), rows * m.act_dim);
+        assert_eq!(value.len(), rows);
+        for r in 0..rows {
+            let (l1, v1) = engine
+                .infer("rps", 1, &params, &obs[r * d..(r + 1) * d])
+                .unwrap();
+            for (a, b) in
+                logits[r * m.act_dim..(r + 1) * m.act_dim].iter().zip(&l1)
+            {
+                assert!((a - b).abs() < 1e-4, "row {r}: {a} vs {b}");
+            }
+            assert!((value[r] - v1[0]).abs() < 1e-4, "row {r} value");
+        }
+        // more rows than one artifact batch: chunked dispatch
+        let rows = m.infer_b + 3;
+        let obs = vec![0.25f32; rows * d];
+        let (logits, value) = infer_remote(&c, key, &obs, rows as u32).unwrap();
+        assert_eq!(logits.len(), rows * m.act_dim);
+        assert_eq!(value.len(), rows);
+        // identical rows must produce matching logits across chunks
+        for r in 1..rows {
+            for (a, b) in logits[r * m.act_dim..(r + 1) * m.act_dim]
+                .iter()
+                .zip(&logits[..m.act_dim])
+            {
+                assert!((a - b).abs() < 1e-5, "row {r} diverged from row 0");
+            }
+        }
     }
 
     #[test]

@@ -86,6 +86,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             ..RunConfig::default()
         },
     };
+    // vectorized rollouts: episodes per actor (flag overrides the file)
+    cfg.envs_per_actor = args.usize_or("envs-per-actor", cfg.envs_per_actor);
     // durability flags override the config file either way
     if let Some(dir) = args.get("checkpoint-dir") {
         cfg.checkpoint_dir = Some(dir.to_string());

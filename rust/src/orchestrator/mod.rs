@@ -298,6 +298,7 @@ impl Deployment {
             .cloned();
         let stop = self.actor_stop.clone();
         let restarts = self.restarts.clone();
+        let envs_per_actor = self.cfg.envs_per_actor.max(1);
         let train_t = self
             .engine
             .manifest
@@ -315,21 +316,15 @@ impl Deployment {
                         ),
                         None => PolicyBackend::Local(engine.clone()),
                     };
-                    let mut cfg2 = ActorConfig {
-                        env: cfg.env.clone(),
-                        actor_id: cfg.actor_id.clone(),
-                        seed: cfg.seed,
-                        gamma: cfg.gamma,
-                        refresh_every: cfg.refresh_every,
-                        train_t: cfg.train_t,
-                    };
+                    let mut cfg2 = cfg.clone();
                     if inf_addr.is_some() {
                         cfg2.train_t = train_t;
                     }
                     let run = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| -> Result<()> {
-                            let mut actor = Actor::new(
+                            let mut actor = Actor::new_vec(
                                 cfg2,
+                                envs_per_actor,
                                 backend,
                                 &league_addr,
                                 &pool_addrs,
@@ -437,6 +432,24 @@ mod tests {
             return None;
         }
         Some(Arc::new(Engine::load(dir).unwrap()))
+    }
+
+    /// Vectorized actors (`envs_per_actor > 1`) drive a full league run
+    /// through the same deployment path.
+    #[test]
+    fn deployment_runs_vectorized_actors() {
+        let Some(engine) = engine() else { return };
+        let mut cfg = RunConfig::default();
+        cfg.env = "rps".into();
+        cfg.total_steps = 4;
+        cfg.period_steps = 2;
+        cfg.actors_per_learner = 1;
+        cfg.envs_per_actor = 4;
+        let mut dep = Deployment::start(cfg, engine).unwrap();
+        assert!(dep.wait(Duration::from_secs(120)), "did not finish");
+        let stats = dep.league_stats();
+        assert!(stats.episodes > 0);
+        dep.shutdown();
     }
 
     #[test]

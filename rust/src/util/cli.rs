@@ -15,10 +15,16 @@ subcommands:
   run          launch a full league (kube-lite orchestrator)
     --config <spec.json>     JSON run spec (flags below override it)
     --env <name>             rps|pong2p|pommerman|pommerman_ffa|doom_lite|synthetic
+                             parameterized specs: doom_lite:<players 2..8>,
+                             synthetic:<episode_len>
     --artifacts <dir>        AOT artifact directory (default: artifacts)
     --total-steps N          learner steps to run (default 100)
     --period-steps N         steps per learning period (default 25)
     --actors N               actors per learner (default 2)
+    --envs-per-actor N       concurrent episodes per actor (vectorized
+                             rollouts: each tick gathers every slot's
+                             observations into one multi-row forward
+                             pass per model; default 1 = classic actor)
     --game-mgr <name>        selfplay|uniform|pfsp|sp_pfsp|elo_match
     --checkpoint-dir <dir>   write durable league snapshots here
     --checkpoint-every S     seconds between snapshots (default 30)
