@@ -26,4 +26,15 @@ cargo bench --bench bench_main -- codec pool --json BENCH_pr2.json
 # (N in {1, 8, 32}; see BENCH_pr3.json).
 echo "== bench smoke: cargo bench --bench bench_main -- rollout"
 cargo bench --bench bench_main -- rollout --json BENCH_pr3.json
+
+# Multi-process deployment smoke: controller + real worker subprocesses
+# (register/heartbeat/reassign; also covered inside `cargo test` above,
+# rerun here standalone so a deploy regression is called out by name).
+echo "== procs smoke: cargo test --test procs_deploy"
+cargo test -q --test procs_deploy
+
+# Control-plane bench: task-assignment round-trip + heartbeat overhead
+# at 64 simulated workers (see BENCH_pr4.json).
+echo "== bench smoke: cargo bench --bench bench_main -- deploy"
+cargo bench --bench bench_main -- deploy --json BENCH_pr4.json
 echo "CI OK"

@@ -94,7 +94,7 @@ fn main() -> anyhow::Result<()> {
             lstats.frames, ts.loss, ts.entropy
         );
     }
-    let pool = ModelPoolClient::connect(&dep.pool_addrs);
+    let pool = ModelPoolClient::connect(dep.pool_addrs());
     let params = pool.get_latest(0)?.expect("trained model").params;
     let mut dep = dep;
     dep.shutdown();

@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("== Fig-4 driver: Pommerman Team, PPO + SP/PFSP, {total_steps} learner steps ==");
     let dep = Deployment::start(cfg, engine.clone())?;
-    let pool = ModelPoolClient::connect(&dep.pool_addrs);
+    let pool = ModelPoolClient::connect(dep.pool_addrs());
 
     let n_checkpoints = 6u64;
     let every = (total_steps / n_checkpoints).max(1);

@@ -38,12 +38,12 @@ fn run_league(engine: Arc<Engine>, game_mgr: &str) -> anyhow::Result<Vec<(u64, f
 
     let game = MatrixGame::rps(0);
     let dep = Deployment::start(cfg, engine.clone())?;
-    let pool_client = ModelPoolClient::connect(&dep.pool_addrs);
+    let pool_client = ModelPoolClient::connect(dep.pool_addrs());
     let mut curve = Vec::new();
     let mut seen_versions = 0usize;
     while !dep.learners_done() {
         std::thread::sleep(Duration::from_millis(300));
-        let frozen = dep.league.pool();
+        let frozen = dep.league().pool();
         if frozen.len() >= seen_versions + 8 {
             seen_versions = frozen.len();
             // pool-average strategy (the FSP mixture)

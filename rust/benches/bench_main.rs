@@ -13,6 +13,8 @@
 //!   pool        — ModelPool serve path: cold vs frame-cache GetModel,
 //!                 if-newer NotModified latency
 //!   batcher     — InfServer condvar batcher wake-to-dispatch latency
+//!   deploy      — procs-mode control plane: task-assignment round-trip,
+//!                 heartbeat overhead at 64 registered workers
 //!
 //! Filter with `cargo bench -- <substring> [<substring> ...]` (a bench
 //! runs if it matches ANY given substring); add `--json <path>` to also
@@ -668,6 +670,88 @@ fn main() {
 
         drain_stop.store(true, Ordering::Relaxed);
         drainer.join().ok();
+    }
+
+    // ---- deploy: procs-mode control plane ---------------------------------
+    // Controller protocol cost only (no PJRT, no engine): how fast can
+    // slots be assigned, and what does a heartbeat round-trip cost when
+    // 64 workers are registered.
+    println!("\n# deploy control plane (64 actor slots, loopback TCP)");
+    {
+        use tleague::config::RunConfig;
+        use tleague::orchestrator::controller::Controller;
+        let mut cfg = RunConfig::default();
+        cfg.env = "rps".into();
+        cfg.mode = "procs".into();
+        cfg.actors_per_learner = 64;
+        cfg.heartbeat_ms = 1_000;
+        cfg.heartbeat_timeout_ms = 600_000; // no reaping mid-bench
+        let ctrl = Controller::start(cfg, vec!["lr".into()], vec![3e-4]).unwrap();
+        let c = ReqClient::connect(&ctrl.addr);
+        let register = |c: &ReqClient, role: &str| match c
+            .request(&Msg::Register { role: role.into(), slot_hint: -1 })
+            .unwrap()
+        {
+            Msg::Assign(a) => a,
+            other => panic!("expected Assign, got {other:?}"),
+        };
+        let learner = register(&c, "learner");
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40000".into()],
+        })
+        .unwrap();
+
+        // task-assignment round trip: Register → Assign → Deregister
+        let c2 = ReqClient::connect(&ctrl.addr);
+        b.bench("deploy/assign_roundtrip", "req", move || {
+            let mut n = 0;
+            for _ in 0..50 {
+                let a = match c2
+                    .request(&Msg::Register {
+                        role: "actor".into(),
+                        slot_hint: -1,
+                    })
+                    .unwrap()
+                {
+                    Msg::Assign(a) => a,
+                    other => panic!("expected Assign, got {other:?}"),
+                };
+                c2.request(&Msg::Deregister { worker_id: a.worker_id })
+                    .unwrap();
+                n += 1;
+            }
+            n
+        });
+
+        // heartbeat overhead with 64 registered workers
+        let ids: Vec<u64> =
+            (0..64).map(|_| register(&c, "actor").worker_id).collect();
+        let c3 = ReqClient::connect(&ctrl.addr);
+        let ids2 = ids.clone();
+        b.bench("deploy/heartbeat_64_workers", "req", move || {
+            let mut n = 0;
+            for &id in &ids2 {
+                match c3
+                    .request(&Msg::Heartbeat {
+                        worker_id: id,
+                        steps: 1,
+                        done: false,
+                    })
+                    .unwrap()
+                {
+                    Msg::HeartbeatAck { .. } => n += 1,
+                    other => panic!("expected ack, got {other:?}"),
+                }
+            }
+            n
+        });
+        // clean drain so Controller::drop doesn't sit out its grace period
+        for id in ids {
+            c.request(&Msg::Deregister { worker_id: id }).unwrap();
+        }
+        c.request(&Msg::Deregister { worker_id: learner.worker_id })
+            .unwrap();
     }
 
     println!("\n{} benches run", b.rows.len());

@@ -54,6 +54,22 @@ pub struct RunConfig {
     pub infer_max_wait_us: u64,
     /// InfServer in-training param cache TTL in milliseconds
     pub infer_refresh_ms: u64,
+    /// deployment mode: "thread" (every role a thread in this process,
+    /// the default) or "procs" (one supervised OS process per role
+    /// worker, coordinated by the controller service)
+    pub mode: String,
+    /// bind address of the controller service (procs mode).  Use a
+    /// routable host (not 127.0.0.1) for multi-machine deployments.
+    pub controller_bind: String,
+    /// host peers should use to reach services bound on this machine.
+    /// Required in practice when binding 0.0.0.0/:: — the kernel's
+    /// local_addr ("0.0.0.0:port") is useless to a remote worker.
+    pub advertise_host: Option<String>,
+    /// worker heartbeat cadence in milliseconds (procs mode)
+    pub heartbeat_ms: u64,
+    /// silence after which the controller declares a worker dead and
+    /// frees its slot for reassignment
+    pub heartbeat_timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -84,6 +100,11 @@ impl Default for RunConfig {
             refresh_every: 1,
             infer_max_wait_us: 2_000,
             infer_refresh_ms: 50,
+            mode: "thread".into(),
+            controller_bind: "127.0.0.1:0".into(),
+            advertise_host: None,
+            heartbeat_ms: 1_000,
+            heartbeat_timeout_ms: 5_000,
         }
     }
 }
@@ -149,6 +170,21 @@ impl RunConfig {
             get_num(&j, "infer_max_wait_us", cfg.infer_max_wait_us as f64) as u64;
         cfg.infer_refresh_ms =
             get_num(&j, "infer_refresh_ms", cfg.infer_refresh_ms as f64) as u64;
+        if let Some(s) = j.get("mode").and_then(|v| v.as_str()) {
+            cfg.mode = s.to_string();
+        }
+        if let Some(s) = j.get("controller_bind").and_then(|v| v.as_str()) {
+            cfg.controller_bind = s.to_string();
+        }
+        if let Some(s) = j.get("advertise_host").and_then(|v| v.as_str()) {
+            cfg.advertise_host = Some(s.to_string());
+        }
+        cfg.heartbeat_ms = get_num(&j, "heartbeat_ms", cfg.heartbeat_ms as f64) as u64;
+        cfg.heartbeat_timeout_ms = get_num(
+            &j,
+            "heartbeat_timeout_ms",
+            cfg.heartbeat_timeout_ms as f64,
+        ) as u64;
         if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
             for (k, v) in obj {
                 cfg.hp_overrides
@@ -178,15 +214,26 @@ impl RunConfig {
             matches!(self.algo.as_str(), "ppo" | "vtrace"),
             "algo must be ppo|vtrace"
         );
-        anyhow::ensure!(
-            self.replay_mode == "blocking" || self.replay_mode.starts_with("ratio:"),
-            "replay_mode must be 'blocking' or 'ratio:<n>'"
-        );
+        // the full grammar, not just the prefix — "ratio:x2" silently
+        // training with the default reuse count is the same bug class
+        // as the numeric-CLI-flag fallback
+        crate::learner::replay::ReplayMode::parse(&self.replay_mode)?;
         anyhow::ensure!(self.checkpoint_keep >= 1, "checkpoint_keep >= 1");
         anyhow::ensure!(self.envs_per_actor >= 1, "envs_per_actor >= 1");
         anyhow::ensure!(self.refresh_every >= 1, "refresh_every >= 1");
         anyhow::ensure!(self.infer_refresh_ms >= 1, "infer_refresh_ms >= 1");
         anyhow::ensure!(self.checkpoint_every_secs >= 1, "checkpoint_every_secs >= 1");
+        anyhow::ensure!(
+            matches!(self.mode.as_str(), "thread" | "procs"),
+            "mode must be thread|procs"
+        );
+        anyhow::ensure!(self.heartbeat_ms >= 1, "heartbeat_ms >= 1");
+        // a timeout tighter than two heartbeats would declare healthy
+        // workers dead on ordinary scheduling jitter
+        anyhow::ensure!(
+            self.heartbeat_timeout_ms >= 2 * self.heartbeat_ms,
+            "heartbeat_timeout_ms must be >= 2 * heartbeat_ms"
+        );
         // a budget without a spill directory would silently never evict
         anyhow::ensure!(
             self.pool_mem_budget_bytes == 0
@@ -198,11 +245,29 @@ impl RunConfig {
     }
 
     pub fn replay_mode(&self) -> crate::learner::replay::ReplayMode {
-        use crate::learner::replay::ReplayMode;
-        if let Some(n) = self.replay_mode.strip_prefix("ratio:") {
-            ReplayMode::Ratio { max_reuse: n.parse().unwrap_or(2) }
-        } else {
-            ReplayMode::Blocking
+        // validate() enforces the grammar before any run launches
+        crate::learner::replay::ReplayMode::parse(&self.replay_mode)
+            .expect("replay_mode was validated")
+    }
+
+    /// The worker-facing slice of this config: everything a role worker
+    /// needs, handed out by the controller with each assignment.
+    pub fn slice(&self) -> crate::proto::RunSlice {
+        crate::proto::RunSlice {
+            env: self.env.clone(),
+            algo: self.algo.clone(),
+            replay_mode: self.replay_mode.clone(),
+            seed: self.seed,
+            gamma: self.gamma,
+            total_steps: self.total_steps,
+            period_steps: self.period_steps,
+            publish_every: self.publish_every,
+            learners_per_agent: self.learners_per_agent as u32,
+            envs_per_actor: self.envs_per_actor as u32,
+            refresh_every: self.refresh_every,
+            infer_max_wait_us: self.infer_max_wait_us,
+            infer_refresh_ms: self.infer_refresh_ms,
+            heartbeat_ms: self.heartbeat_ms,
         }
     }
 
@@ -264,6 +329,10 @@ mod tests {
     fn rejects_bad_values() {
         assert!(RunConfig::from_json(r#"{"algo": "dqn"}"#).is_err());
         assert!(RunConfig::from_json(r#"{"replay_mode": "nope"}"#).is_err());
+        // a malformed ratio count must error, not fall back silently
+        assert!(RunConfig::from_json(r#"{"replay_mode": "ratio:x2"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"replay_mode": "ratio:0"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"replay_mode": "ratio:3"}"#).is_ok());
         assert!(RunConfig::from_json(r#"{"n_agents": 0}"#).is_err());
         // env specs fail fast at validation, not at actor spawn
         assert!(RunConfig::from_json(r#"{"env": "nope"}"#).is_err());
@@ -314,6 +383,39 @@ mod tests {
         assert_eq!(d.infer_refresh_ms, 50);
         assert!(RunConfig::from_json(r#"{"refresh_every": 0}"#).is_err());
         assert!(RunConfig::from_json(r#"{"infer_refresh_ms": 0}"#).is_err());
+    }
+
+    #[test]
+    fn deployment_mode_parses_and_validates() {
+        let cfg = RunConfig::from_json(
+            r#"{
+            "env": "rps", "mode": "procs",
+            "controller_bind": "0.0.0.0:9100",
+            "advertise_host": "league.internal",
+            "heartbeat_ms": 200, "heartbeat_timeout_ms": 900
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.mode, "procs");
+        assert_eq!(cfg.controller_bind, "0.0.0.0:9100");
+        assert_eq!(cfg.advertise_host.as_deref(), Some("league.internal"));
+        assert_eq!(cfg.heartbeat_ms, 200);
+        assert_eq!(cfg.heartbeat_timeout_ms, 900);
+        let d = RunConfig::default();
+        assert_eq!(d.mode, "thread");
+        assert_eq!(d.heartbeat_ms, 1_000);
+        assert_eq!(d.heartbeat_timeout_ms, 5_000);
+        assert!(RunConfig::from_json(r#"{"mode": "kubernetes"}"#).is_err());
+        // timeouts tighter than two heartbeats are a foot-gun
+        assert!(RunConfig::from_json(
+            r#"{"heartbeat_ms": 1000, "heartbeat_timeout_ms": 1500}"#
+        )
+        .is_err());
+        // the worker slice mirrors the config
+        let s = cfg.slice();
+        assert_eq!(s.env, "rps");
+        assert_eq!(s.heartbeat_ms, 200);
+        assert_eq!(s.learners_per_agent, 1);
     }
 
     #[test]

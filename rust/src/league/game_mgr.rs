@@ -125,7 +125,11 @@ impl GameMgr for Pfsp {
         (0..n).map(|_| pool[rng.weighted(&weights)]).collect()
     }
     fn name(&self) -> &'static str {
-        "pfsp"
+        // mirrors the factory key so stats/logs name the actual sampler
+        match self.weighting {
+            PfspWeight::Var => "pfsp_var",
+            _ => "pfsp",
+        }
     }
 }
 
@@ -265,6 +269,18 @@ impl GameMgr for AgentExploiter {
 }
 
 /// Build a sampler by config name.
+/// Every name [`make_game_mgr`] accepts.  `util::cli::USAGE` documents
+/// this exact list; a test asserts the two never drift apart.
+pub const GAME_MGR_NAMES: &[&str] = &[
+    "selfplay",
+    "uniform",
+    "pfsp",
+    "pfsp_var",
+    "sp_pfsp",
+    "elo_match",
+    "agent_exploiter",
+];
+
 pub fn make_game_mgr(name: &str) -> anyhow::Result<Box<dyn GameMgr>> {
     Ok(match name {
         "selfplay" => Box::new(SelfPlay),
@@ -285,6 +301,21 @@ mod tests {
 
     fn k(v: u32) -> ModelKey {
         ModelKey::new(0, v)
+    }
+
+    /// The factory accepts exactly the names in [`GAME_MGR_NAMES`]: every
+    /// listed name constructs, and the registered name() matches the
+    /// factory key (so stats/snapshots stay round-trippable).
+    #[test]
+    fn factory_accepts_exactly_the_registered_names() {
+        for name in GAME_MGR_NAMES {
+            let mgr = make_game_mgr(name)
+                .unwrap_or_else(|e| panic!("'{name}' must construct: {e}"));
+            assert_eq!(&mgr.name(), name, "factory key != sampler name()");
+        }
+        for bad in ["", "pfsp2", "uniform ", "exploiter", "sp-pfsp"] {
+            assert!(make_game_mgr(bad).is_err(), "'{bad}' must be rejected");
+        }
     }
 
     #[test]

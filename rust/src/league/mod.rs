@@ -58,6 +58,7 @@ pub struct LeagueMgrServer {
     pub addr: String,
     state: Arc<Mutex<LeagueState>>,
     pub task_meter: Meter,
+    stop_flag: Arc<std::sync::atomic::AtomicBool>,
     _server: RepServer,
 }
 
@@ -110,8 +111,16 @@ impl LeagueMgrServer {
             }
         }
         let state = Arc::new(Mutex::new(state));
+        let stop_flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let sf = stop_flag.clone();
         let s2 = state.clone();
         let server = RepServer::serve(bind, move |msg| {
+            if let Msg::Shutdown = msg {
+                // remote stop request: the owning loop (standalone
+                // subcommand) polls stop_requested() and exits cleanly
+                sf.store(true, std::sync::atomic::Ordering::Relaxed);
+                return Msg::Ok;
+            }
             let mut st = s2.lock().unwrap();
             match msg {
                 Msg::RequestActorTask { actor_id } => {
@@ -183,8 +192,14 @@ impl LeagueMgrServer {
             addr: server.addr.clone(),
             state,
             task_meter: Meter::new(),
+            stop_flag,
             _server: server,
         })
+    }
+
+    /// True once a wire `Shutdown` request has been received.
+    pub fn stop_requested(&self) -> bool {
+        self.stop_flag.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     pub fn stats(&self) -> LeagueStats {

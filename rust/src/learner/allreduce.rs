@@ -17,6 +17,8 @@ struct Slot {
     arrived: usize,
     generation: u64,
     departed: usize,
+    /// terminal: a participant died; every waiter must bail out
+    poisoned: bool,
 }
 
 pub struct Allreduce {
@@ -35,6 +37,7 @@ impl Allreduce {
                 arrived: 0,
                 generation: 0,
                 departed: 0,
+                poisoned: false,
             }),
             cv: Condvar::new(),
         })
@@ -44,16 +47,36 @@ impl Allreduce {
         self.n
     }
 
+    /// Permanently wake every waiter and make all further reduces fail
+    /// fast.  Called by a supervisor when a participant dies — without
+    /// it, survivors blocked mid-generation wait for the missing rank
+    /// forever and the teardown join deadlocks.  Terminal: the group's
+    /// internal counters are left as-is, so a poisoned group must be
+    /// discarded, never reused.
+    pub fn poison(&self) {
+        self.slot.lock().unwrap().poisoned = true;
+        self.cv.notify_all();
+    }
+
     /// Average `buf` across all participants (in place).  Blocks until
-    /// every participant of this generation has arrived.
-    pub fn reduce(&self, buf: &mut [f32]) {
+    /// every participant of this generation has arrived.  Returns false
+    /// (with `buf` left unreduced/unspecified) if the group was
+    /// poisoned — callers must treat that as a fatal step error.
+    #[must_use]
+    pub fn reduce(&self, buf: &mut [f32]) -> bool {
         if self.n == 1 {
-            return;
+            return true;
         }
         let mut slot = self.slot.lock().unwrap();
         // wait for the previous generation to fully drain
         while slot.departed != 0 {
+            if slot.poisoned {
+                return false;
+            }
             slot = self.cv.wait(slot).unwrap();
+        }
+        if slot.poisoned {
+            return false;
         }
         if slot.arrived == 0 {
             slot.sum.clear();
@@ -76,6 +99,9 @@ impl Allreduce {
             self.cv.notify_all();
         } else {
             while slot.generation == my_gen {
+                if slot.poisoned {
+                    return false;
+                }
                 slot = self.cv.wait(slot).unwrap();
             }
         }
@@ -86,6 +112,7 @@ impl Allreduce {
             slot.arrived = 0;
             self.cv.notify_all();
         }
+        true
     }
 }
 
@@ -97,7 +124,7 @@ mod tests {
     fn single_participant_is_identity() {
         let ar = Allreduce::new(1);
         let mut v = vec![1.0, 2.0];
-        ar.reduce(&mut v);
+        assert!(ar.reduce(&mut v));
         assert_eq!(v, vec![1.0, 2.0]);
     }
 
@@ -109,7 +136,7 @@ mod tests {
                 let ar = ar.clone();
                 std::thread::spawn(move || {
                     let mut v = vec![r as f32; 8];
-                    ar.reduce(&mut v);
+                    assert!(ar.reduce(&mut v));
                     v
                 })
             })
@@ -118,6 +145,24 @@ mod tests {
             let v = h.join().unwrap();
             assert_eq!(v, vec![1.5; 8], "mean of 0..4");
         }
+    }
+
+    /// Poison must wake a waiter blocked on missing peers (the dead-rank
+    /// teardown path) and fail all later reduces fast.
+    #[test]
+    fn poison_unblocks_waiters_and_fails_fast() {
+        let ar = Allreduce::new(2);
+        let ar2 = ar.clone();
+        let waiter = std::thread::spawn(move || {
+            let mut v = vec![1.0];
+            ar2.reduce(&mut v) // blocks: rank 1 never arrives
+        });
+        // give the waiter time to enter the generation wait
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        ar.poison();
+        assert!(!waiter.join().unwrap(), "poisoned reduce must return false");
+        let mut v = vec![2.0];
+        assert!(!ar.reduce(&mut v), "post-poison reduce must fail fast");
     }
 
     #[test]
@@ -130,7 +175,7 @@ mod tests {
                     let mut results = Vec::new();
                     for round in 0..50u32 {
                         let mut v = vec![(r as f32) + round as f32];
-                        ar.reduce(&mut v);
+                        assert!(ar.reduce(&mut v));
                         results.push(v[0]);
                     }
                     results

@@ -39,6 +39,9 @@ pub struct LearnerConfig {
     pub period_steps: u64,
     pub replay_cap: usize,
     pub seed: u64,
+    /// bind address for the trajectory PULL endpoint; use a routable
+    /// host (e.g. "0.0.0.0:0") when actors run on other machines
+    pub data_bind: String,
 }
 
 impl Default for LearnerConfig {
@@ -53,6 +56,7 @@ impl Default for LearnerConfig {
             period_steps: 32,
             replay_cap: 4096,
             seed: 0,
+            data_bind: "127.0.0.1:0".into(),
         }
     }
 }
@@ -98,7 +102,7 @@ impl Learner {
         league_addr: &str,
         group: Option<Arc<Allreduce>>,
     ) -> Result<Learner> {
-        let data = PullServer::bind("127.0.0.1:0", 1024)?;
+        let data = PullServer::bind(&cfg.data_bind, 1024)?;
         let pool = ModelPoolClient::connect(pool_addrs);
         let league = LeagueClient::connect(league_addr);
         let task = league.request_learner_task(cfg.agent)?;
@@ -241,7 +245,10 @@ impl Learner {
             let mut it = out.into_iter();
             let mut grads = it.next().context("grads")?.into_f32()?;
             let stats = it.next().context("stats")?.into_f32()?;
-            self.group.as_ref().unwrap().reduce(&mut grads);
+            anyhow::ensure!(
+                self.group.as_ref().unwrap().reduce(&mut grads),
+                "allreduce poisoned (a peer learner died)"
+            );
             let inputs = vec![
                 Tensor::F32(std::mem::take(&mut self.params)),
                 Tensor::F32(std::mem::take(&mut self.adam_m)),
@@ -282,7 +289,10 @@ impl Learner {
         // group barrier so non-rank-0 learners see the bumped version
         if let Some(g) = &self.group {
             let mut token = vec![0.0f32];
-            g.reduce(&mut token);
+            anyhow::ensure!(
+                g.reduce(&mut token),
+                "allreduce poisoned (a peer learner died)"
+            );
         }
         let task = self.league.request_learner_task(self.cfg.agent)?;
         self.key = task.learner_key;

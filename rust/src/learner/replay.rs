@@ -20,6 +20,28 @@ pub enum ReplayMode {
     Ratio { max_reuse: u32 },
 }
 
+impl ReplayMode {
+    /// The one (strict) parser for the config/wire grammar: "blocking"
+    /// or "ratio:<positive int>".  Used by `RunConfig::validate` and by
+    /// procs-mode workers decoding a `RunSlice` off the wire, so a
+    /// version-skewed controller fails loudly instead of silently
+    /// training with a default reuse count.
+    pub fn parse(s: &str) -> anyhow::Result<ReplayMode> {
+        match s.strip_prefix("ratio:") {
+            Some(n) => match n.parse::<u32>() {
+                Ok(v) if v >= 1 => Ok(ReplayMode::Ratio { max_reuse: v }),
+                _ => anyhow::bail!(
+                    "replay_mode ratio must be a positive int, got '{s}'"
+                ),
+            },
+            None if s == "blocking" => Ok(ReplayMode::Blocking),
+            None => anyhow::bail!(
+                "replay_mode must be 'blocking' or 'ratio:<n>', got '{s}'"
+            ),
+        }
+    }
+}
+
 pub struct ReplayMem {
     mode: ReplayMode,
     cap: usize,

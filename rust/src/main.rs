@@ -2,19 +2,31 @@
 //!
 //! Subcommands:
 //!   run        --config <spec.json> [--artifacts DIR]   full league (kube-lite)
+//!              [--mode thread|procs]                    threads or one OS
+//!                                                       process per role
 //!              [--checkpoint-dir D] [--resume D]        durable / resumed runs
+//!   controller                                          procs-mode control plane
+//!   worker     --role learner|actor|inf-server          one league role,
+//!              --controller host:port                   controller-directed
 //!   eval-doom  --checkpoint <f32 file> --setting 1|2a|2b|2c --games N
 //!   eval-rps   --artifacts DIR                           exploitability demo
 //!   league-mgr / model-pool                              standalone services
 //!   info       --artifacts DIR                           manifest summary
 
 use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use tleague::config::RunConfig;
+use tleague::model_pool::PoolOptions;
+use tleague::orchestrator::controller::Controller;
 use tleague::orchestrator::Deployment;
+use tleague::runtime::manifest::Manifest;
 use tleague::runtime::Engine;
 use tleague::util::cli::Args;
+use tleague::util::signal;
 
 fn main() {
     if let Err(e) = run() {
@@ -23,9 +35,12 @@ fn main() {
     }
 }
 
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
 fn engine(args: &Args) -> Result<Arc<Engine>> {
-    let dir = args.str_or("artifacts", "artifacts");
-    Ok(Arc::new(Engine::load(dir)?))
+    Ok(Arc::new(Engine::load(artifacts_dir(args))?))
 }
 
 fn run() -> Result<()> {
@@ -36,36 +51,13 @@ fn run() -> Result<()> {
     }
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("controller") => cmd_controller(&args),
+        Some("worker") => cmd_worker(&args),
         Some("info") => cmd_info(&args),
         Some("eval-doom") => cmd_eval_doom(&args),
         Some("eval-rps") => cmd_eval_rps(&args),
-        Some("model-pool") => {
-            let s = tleague::model_pool::ModelPoolServer::start(
-                &args.str_or("bind", "127.0.0.1:9001"),
-            )?;
-            println!("model-pool listening on {}", s.addr);
-            loop {
-                std::thread::sleep(Duration::from_secs(3600));
-            }
-        }
-        Some("league-mgr") => {
-            let eng = engine(&args)?;
-            let s = tleague::league::LeagueMgrServer::start(
-                &args.str_or("bind", "127.0.0.1:9003"),
-                tleague::league::LeagueConfig {
-                    n_agents: args.usize_or("n-agents", 1) as u32,
-                    n_opponents: args.usize_or("n-opponents", 1),
-                    game_mgr: args.str_or("game-mgr", "uniform"),
-                    hp_layout: eng.manifest.hp_layout.clone(),
-                    hp_default: eng.manifest.default_hp(),
-                    seed: args.u64_or("seed", 0),
-                },
-            )?;
-            println!("league-mgr listening on {}", s.addr);
-            loop {
-                std::thread::sleep(Duration::from_secs(3600));
-            }
-        }
+        Some("model-pool") => cmd_model_pool(&args),
+        Some("league-mgr") => cmd_league_mgr(&args),
         Some(other) => anyhow::bail!("unknown subcommand '{other}'"),
         None => {
             println!("{}", tleague::util::cli::USAGE);
@@ -74,20 +66,83 @@ fn run() -> Result<()> {
     }
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
+// ---- standalone services ------------------------------------------------
+
+/// Serve until SIGINT/SIGTERM or a wire `Shutdown` request, then return
+/// so the server drops (accept loop joined, sockets drained) instead of
+/// dying inside an infinite sleep.
+fn serve_until_stopped(name: &str, stop_requested: impl Fn() -> bool) {
+    let sig = signal::install();
+    while !sig.load(Ordering::Relaxed) && !stop_requested() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    println!("{name}: shutting down");
+}
+
+fn cmd_model_pool(args: &Args) -> Result<()> {
+    let mem_budget_mb = args.f64_or("mem-budget-mb", 0.0)?;
+    // a negative value would saturate to budget 0 (= unbounded) in the
+    // cast below — reject it instead of silently disabling the budget
+    anyhow::ensure!(
+        mem_budget_mb >= 0.0 && mem_budget_mb.is_finite(),
+        "--mem-budget-mb must be a finite value >= 0, got {mem_budget_mb}"
+    );
+    let opts = PoolOptions {
+        spill_dir: args.get("spill-dir").map(PathBuf::from),
+        mem_budget: (mem_budget_mb * (1u64 << 20) as f64) as usize,
+    };
+    // same rule as RunConfig: a budget with nowhere to spill would
+    // silently never evict
+    anyhow::ensure!(
+        opts.mem_budget == 0 || opts.spill_dir.is_some(),
+        "--mem-budget-mb requires --spill-dir"
+    );
+    let mut s = tleague::model_pool::ModelPoolServer::start_with(
+        &args.str_or("bind", "127.0.0.1:9001"),
+        opts,
+    )?;
+    println!("model-pool listening on {}", s.addr);
+    serve_until_stopped("model-pool", || s.stop_requested());
+    s.shutdown();
+    Ok(())
+}
+
+fn cmd_league_mgr(args: &Args) -> Result<()> {
+    let eng = engine(args)?;
+    let s = tleague::league::LeagueMgrServer::start(
+        &args.str_or("bind", "127.0.0.1:9003"),
+        tleague::league::LeagueConfig {
+            n_agents: args.usize_or("n-agents", 1)? as u32,
+            n_opponents: args.usize_or("n-opponents", 1)?,
+            game_mgr: args.str_or("game-mgr", "uniform"),
+            hp_layout: eng.manifest.hp_layout.clone(),
+            hp_default: eng.manifest.default_hp(),
+            seed: args.u64_or("seed", 0)?,
+        },
+    )?;
+    println!("league-mgr listening on {}", s.addr);
+    serve_until_stopped("league-mgr", || s.stop_requested());
+    Ok(())
+}
+
+// ---- league runs --------------------------------------------------------
+
+/// Build the RunConfig shared by `run` and `controller` (spec file +
+/// flag overrides).
+fn build_run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(path)?,
         None => RunConfig {
             env: args.str_or("env", "rps"),
-            total_steps: args.u64_or("total-steps", 100),
-            period_steps: args.u64_or("period-steps", 25),
-            actors_per_learner: args.usize_or("actors", 2),
+            total_steps: args.u64_or("total-steps", 100)?,
+            period_steps: args.u64_or("period-steps", 25)?,
+            actors_per_learner: args.usize_or("actors", 2)?,
             game_mgr: args.str_or("game-mgr", "uniform"),
             ..RunConfig::default()
         },
     };
     // vectorized rollouts: episodes per actor (flag overrides the file)
-    cfg.envs_per_actor = args.usize_or("envs-per-actor", cfg.envs_per_actor);
+    cfg.envs_per_actor = args.usize_or("envs-per-actor", cfg.envs_per_actor)?;
     // durability flags override the config file either way
     if let Some(dir) = args.get("checkpoint-dir") {
         cfg.checkpoint_dir = Some(dir.to_string());
@@ -100,19 +155,32 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     }
     cfg.checkpoint_every_secs =
-        args.u64_or("checkpoint-every", cfg.checkpoint_every_secs);
+        args.u64_or("checkpoint-every", cfg.checkpoint_every_secs)?;
     // data-plane knobs (see USAGE): flags override the config file
     cfg.refresh_every =
-        args.u64_or("refresh-every", cfg.refresh_every as u64) as u32;
+        args.u64_or("refresh-every", cfg.refresh_every as u64)? as u32;
     cfg.infer_max_wait_us =
-        args.u64_or("infer-max-wait-us", cfg.infer_max_wait_us);
-    cfg.infer_refresh_ms = args.u64_or("infer-refresh-ms", cfg.infer_refresh_ms);
+        args.u64_or("infer-max-wait-us", cfg.infer_max_wait_us)?;
+    cfg.infer_refresh_ms = args.u64_or("infer-refresh-ms", cfg.infer_refresh_ms)?;
+    // deployment-mode knobs
+    cfg.mode = args.str_or("mode", &cfg.mode);
+    cfg.controller_bind = args.str_or("controller-bind", &cfg.controller_bind);
+    if let Some(h) = args.get("advertise-host") {
+        cfg.advertise_host = Some(h.to_string());
+    }
+    cfg.heartbeat_ms = args.u64_or("heartbeat-ms", cfg.heartbeat_ms)?;
+    cfg.heartbeat_timeout_ms =
+        args.u64_or("heartbeat-timeout-ms", cfg.heartbeat_timeout_ms)?;
     cfg.validate()?;
-    let eng = engine(args)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_run_config(args)?;
     println!(
-        "launching league: env={} M_G={} M_L={} M_A={} sampler={}",
+        "launching league: env={} M_G={} M_L={} M_A={} sampler={} mode={}",
         cfg.env, cfg.n_agents, cfg.learners_per_agent, cfg.actors_per_learner,
-        cfg.game_mgr
+        cfg.game_mgr, cfg.mode
     );
     if let Some(dir) = &cfg.resume {
         println!("resuming from latest snapshot in {dir}");
@@ -123,6 +191,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.checkpoint_every_secs, cfg.checkpoint_keep
         );
     }
+    if cfg.mode == "procs" {
+        return cmd_run_procs(cfg, args);
+    }
+    let eng = engine(args)?;
     let mut dep = Deployment::start(cfg, eng)?;
     let mut last = 0;
     while !dep.learners_done() {
@@ -144,11 +216,194 @@ fn cmd_run(args: &Args) -> Result<()> {
         stats.pool_size,
         stats.episodes,
         stats.frames,
-        dep.restarts.load(std::sync::atomic::Ordering::Relaxed)
+        dep.restarts.load(Ordering::Relaxed)
     );
     dep.shutdown();
     Ok(())
 }
+
+// ---- procs mode ---------------------------------------------------------
+
+fn spawn_worker(exe: &Path, role: &str, ctrl_addr: &str, artifacts: &str) -> Result<Child> {
+    Command::new(exe)
+        .args(["worker", "--role", role, "--controller", ctrl_addr])
+        .args(["--artifacts", artifacts])
+        .spawn()
+        .with_context(|| format!("spawn {role} worker"))
+}
+
+/// Shared progress monitor for procs-mode runs: prints stats every 2s
+/// until the learners finish, the run drains (covers an operator's
+/// wire `Msg::Shutdown` — learners deregister before ever reporting
+/// done, so waiting on learners_done alone would spin forever), or the
+/// process is signalled.  `tick` runs each interval before the stats
+/// line (cmd_run_procs supervises its child processes there).
+fn monitor_controller(
+    ctrl: &Controller,
+    mut tick: impl FnMut() -> Result<()>,
+) -> Result<()> {
+    let sig = signal::install();
+    let mut last = 0u64;
+    while !ctrl.learners_done()
+        && !ctrl.deploy_stats().draining
+        && !sig.load(Ordering::Relaxed)
+    {
+        std::thread::sleep(Duration::from_secs(2));
+        tick()?;
+        let ds = ctrl.deploy_stats();
+        let ls = ctrl.league_stats();
+        println!(
+            "steps={} (+{}) pool={} episodes={} workers={} lost={} reassigned={}",
+            ds.learner_steps,
+            ds.learner_steps.saturating_sub(last),
+            ls.pool_size,
+            ls.episodes,
+            ds.workers,
+            ds.lost,
+            ds.reassigned
+        );
+        last = ds.learner_steps;
+    }
+    Ok(())
+}
+
+/// `run --mode procs`: embed the controller, spawn one OS process per
+/// role worker, supervise them (respawn on unexpected exit — the
+/// cross-process analogue of the thread supervisor), and drain
+/// everything when the learners finish.
+fn cmd_run_procs(cfg: RunConfig, args: &Args) -> Result<()> {
+    let artifacts = artifacts_dir(args);
+    // the parent only needs the manifest (hp layout); PJRT stays in the
+    // worker processes
+    let manifest = Manifest::load(Path::new(&artifacts))?;
+    let hp_layout = manifest.hp_layout.clone();
+    let hp_default = manifest.default_hp();
+    let n_learner_workers = cfg.n_agents as usize;
+    let n_actor_workers =
+        cfg.n_agents as usize * cfg.learners_per_agent * cfg.actors_per_learner;
+    let n_inf_workers = cfg.inf_servers;
+    let mut ctrl = Controller::start(cfg, hp_layout, hp_default)?;
+    println!("controller on {}", ctrl.addr);
+
+    let exe = std::env::current_exe()?;
+    let mut children: Vec<(&'static str, Child)> = Vec::new();
+    for _ in 0..n_learner_workers {
+        children.push(("learner", spawn_worker(&exe, "learner", &ctrl.addr, &artifacts)?));
+    }
+    for _ in 0..n_inf_workers {
+        children.push(("inf-server", spawn_worker(&exe, "inf-server", &ctrl.addr, &artifacts)?));
+    }
+    for _ in 0..n_actor_workers {
+        children.push(("actor", spawn_worker(&exe, "actor", &ctrl.addr, &artifacts)?));
+    }
+    println!(
+        "spawned {} workers ({n_learner_workers} learner / {n_inf_workers} inf / {n_actor_workers} actor)",
+        children.len()
+    );
+
+    let sig = signal::install();
+    let mut respawns = 0u64;
+    // a persistently-failing worker (the worker itself gives up after 10
+    // consecutive failures) must abort the run loudly, not respawn forever
+    let respawn_cap = 10 * children.len() as u64;
+    let supervised = monitor_controller(&ctrl, || {
+        // supervise: a worker process that died mid-run is respawned;
+        // the controller hands it back its freed slot.  Not after
+        // Ctrl-C: the signal hit the whole process group, and the dead
+        // children are the signal's work, not failures.
+        for (role, child) in children.iter_mut() {
+            if let Some(status) = child.try_wait()? {
+                if ctrl.learners_done() || sig.load(Ordering::Relaxed) {
+                    break;
+                }
+                anyhow::ensure!(
+                    respawns < respawn_cap,
+                    "{role} worker keeps dying ({respawns} respawns); aborting"
+                );
+                eprintln!("{role} worker exited ({status}); respawning");
+                *child = spawn_worker(&exe, *role, &ctrl.addr, &artifacts)?;
+                respawns += 1;
+            }
+        }
+        Ok(())
+    });
+
+    // graceful drain (even when supervision aborted): actors first, then
+    // learners/inf, final snapshot
+    ctrl.shutdown();
+    let deadline = Instant::now() + Duration::from_secs(15);
+    for (role, child) in children.iter_mut() {
+        loop {
+            if child.try_wait()?.is_some() {
+                break;
+            }
+            if Instant::now() > deadline {
+                eprintln!("{role} worker ignored stop; killing");
+                child.kill().ok();
+                child.wait().ok();
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    // children are reaped: now a supervision error can surface
+    supervised?;
+    let ds = ctrl.deploy_stats();
+    let ls = ctrl.league_stats();
+    println!(
+        "done: pool={} episodes={} frames={} worker respawns={respawns} lost={} reassigned={}",
+        ls.pool_size, ls.episodes, ls.frames, ds.lost, ds.reassigned
+    );
+    Ok(())
+}
+
+/// Hand-launched control plane (`tleague controller`): same core as
+/// `run --mode procs` but workers are started by the operator (other
+/// boxes, a compose file — see examples/procs_league.yaml).
+fn cmd_controller(args: &Args) -> Result<()> {
+    let mut cfg = build_run_config(args)?;
+    cfg.mode = "procs".into();
+    // --bind wins; otherwise keep --controller-bind / the config file's
+    // value, upgrading only the ephemeral run-mode default to the
+    // documented stable controller port
+    if let Some(bind) = args.get("bind") {
+        cfg.controller_bind = bind.to_string();
+    } else if cfg.controller_bind == "127.0.0.1:0" {
+        cfg.controller_bind = "127.0.0.1:9100".into();
+    }
+    cfg.validate()?;
+    let manifest = Manifest::load(Path::new(&artifacts_dir(args)))?;
+    let hp_layout = manifest.hp_layout.clone();
+    let hp_default = manifest.default_hp();
+    let mut ctrl = Controller::start(cfg, hp_layout, hp_default)?;
+    println!("controller listening on {}", ctrl.addr);
+    println!(
+        "waiting for workers: tleague worker --role learner|actor|inf-server \
+         --controller {}",
+        ctrl.addr
+    );
+    monitor_controller(&ctrl, || Ok(()))?;
+    ctrl.shutdown();
+    let ls = ctrl.league_stats();
+    println!("done: pool={} episodes={} frames={}", ls.pool_size, ls.episodes, ls.frames);
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let role = args.get("role").context("--role learner|actor|inf-server required")?;
+    let ctrl_addr = args
+        .get("controller")
+        .context("--controller host:port required")?;
+    let net = tleague::orchestrator::worker::WorkerNet {
+        bind_host: args.str_or("bind-host", "127.0.0.1"),
+        advertise_host: args.get("advertise-host").map(str::to_string),
+    };
+    let eng = engine(args)?;
+    let stop = signal::install();
+    tleague::orchestrator::worker::run_worker(role, ctrl_addr, eng, &net, stop)
+}
+
+// ---- info / eval --------------------------------------------------------
 
 fn cmd_info(args: &Args) -> Result<()> {
     let eng = engine(args)?;
@@ -187,7 +442,7 @@ fn cmd_eval_doom(args: &Args) -> Result<()> {
         Some(p) => load_checkpoint(p, m.param_count)?,
         None => eng.init_params("doom_lite")?,
     };
-    let games = args.u64_or("games", 5);
+    let games = args.u64_or("games", 5)?;
     let setting = args.str_or("setting", "1");
     // (n_my, n_f1, n_bots) per Table 1 / Table 2 rows
     let (n_my, n_f1, n_bots) = match setting.as_str() {

@@ -331,6 +331,7 @@ fn model_reply(store: &Mutex<Store>, sel: Sel, have: Option<(u32, u64)>) -> Repl
 pub struct ModelPoolServer {
     pub addr: String,
     store: Arc<Mutex<Store>>,
+    stop_flag: Arc<std::sync::atomic::AtomicBool>,
     _server: RepServer,
 }
 
@@ -341,7 +342,9 @@ impl ModelPoolServer {
 
     pub fn start_with(bind: &str, opts: PoolOptions) -> Result<ModelPoolServer> {
         let store = Arc::new(Mutex::new(Store { opts, ..Store::default() }));
+        let stop_flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let s2 = store.clone();
+        let sf = stop_flag.clone();
         let server = RepServer::serve_frames(bind, move |msg| match msg {
             Msg::PutModel(blob) => {
                 s2.lock().unwrap().insert(blob);
@@ -360,10 +363,26 @@ impl ModelPoolServer {
                     spilled: st.spilled_count() as u32,
                 })
             }
+            Msg::Shutdown => {
+                // remote stop request: the owning loop (standalone
+                // subcommand) polls stop_requested() and exits cleanly
+                sf.store(true, Ordering::Relaxed);
+                Reply::Msg(Msg::Ok)
+            }
             Msg::Ping => Reply::Msg(Msg::Pong),
             other => Reply::Msg(Msg::Err(format!("model_pool: unexpected {other:?}"))),
         })?;
-        Ok(ModelPoolServer { addr: server.addr.clone(), store, _server: server })
+        Ok(ModelPoolServer { addr: server.addr.clone(), store, stop_flag, _server: server })
+    }
+
+    /// True once a wire `Shutdown` request has been received.
+    pub fn stop_requested(&self) -> bool {
+        self.stop_flag.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting connections and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self._server.shutdown();
     }
 
     /// Reply-frame (re)builds since start.  A frame-cache hit does not

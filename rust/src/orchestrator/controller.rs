@@ -1,0 +1,933 @@
+//! Controller: the league's control plane for multi-process deployment.
+//!
+//! Owns the [`CoreServices`] (LeagueMgr + ModelPool replicas +
+//! CheckpointMgr snapshotter) and a slot registry derived from the
+//! [`RunConfig`] topology: one learner slot per learning agent (the
+//! agent's whole allreduce group runs as threads inside one worker —
+//! gradient allreduce is intra-process), one actor slot per
+//! (agent, rank, M_A) tuple, one slot per InfServer.
+//!
+//! Workers register over the existing `transport` REQ/REP layer
+//! (`Register` → `Assign`/`Retry`), report the endpoints they serve
+//! (`WorkerReady`), and heartbeat.  A worker silent for longer than
+//! `heartbeat_timeout_ms` is declared dead: its slot is freed and
+//! handed to the next registrant (typically the supervisor's respawn of
+//! the same process), which is how actors keep the auto-restart
+//! semantics that thread-mode `Deployment` gives them.  A controller
+//! restart re-adopts live workers: their next heartbeat is answered
+//! with an unknown-worker error, they re-register with their old slot
+//! as a hint, and restart their role against the resumed services.
+
+use crate::config::RunConfig;
+use crate::league::LeagueStats;
+use crate::orchestrator::CoreServices;
+use crate::proto::{Msg, RunSlice, WorkerAssignment};
+use crate::transport::RepServer;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub const ROLE_LEARNER: &str = "learner";
+pub const ROLE_ACTOR: &str = "actor";
+pub const ROLE_INF: &str = "inf-server";
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Role {
+    Learner,
+    Actor,
+    Inf,
+}
+
+impl Role {
+    fn parse(s: &str) -> Option<Role> {
+        match s {
+            ROLE_LEARNER => Some(Role::Learner),
+            ROLE_ACTOR => Some(Role::Actor),
+            ROLE_INF => Some(Role::Inf),
+            _ => None,
+        }
+    }
+    fn as_str(self) -> &'static str {
+        match self {
+            Role::Learner => ROLE_LEARNER,
+            Role::Actor => ROLE_ACTOR,
+            Role::Inf => ROLE_INF,
+        }
+    }
+}
+
+struct WorkerInfo {
+    role: Role,
+    slot: usize,
+    last_seen: Instant,
+}
+
+/// One learner slot = one learning agent's whole allreduce group.
+#[derive(Default)]
+struct LearnerSlot {
+    worker: Option<u64>,
+    /// data ports in rank order, reported via WorkerReady; empty until
+    /// then (gates dependent actor assignments)
+    data_addrs: Vec<String>,
+    steps: u64,
+    done: bool,
+    was_lost: bool,
+}
+
+struct ActorSlot {
+    worker: Option<u64>,
+    agent: u32,
+    rank: usize,
+    was_lost: bool,
+}
+
+#[derive(Default)]
+struct InfSlot {
+    worker: Option<u64>,
+    addr: Option<String>,
+    was_lost: bool,
+}
+
+struct CtrlState {
+    learners: Vec<LearnerSlot>, // index = agent
+    actors: Vec<ActorSlot>,
+    infs: Vec<InfSlot>,
+    workers: HashMap<u64, WorkerInfo>,
+    next_worker: u64,
+    lost: u64,
+    reassigned: u64,
+    /// learners all done → actors are being told to stop
+    draining: bool,
+    /// everything is being told to stop
+    stop_all: bool,
+}
+
+/// Point-in-time controller statistics (also served as
+/// `Msg::DeployStatsReply` for remote probes).
+#[derive(Clone, Debug, Default)]
+pub struct DeployStatsSnap {
+    pub workers: u32,
+    pub lost: u32,
+    pub reassigned: u32,
+    pub learners_done: u32,
+    pub learner_steps: u64,
+    pub draining: bool,
+}
+
+fn stats_of(st: &CtrlState) -> DeployStatsSnap {
+    DeployStatsSnap {
+        workers: st.workers.len() as u32,
+        lost: st.lost as u32,
+        reassigned: st.reassigned as u32,
+        learners_done: st.learners.iter().filter(|l| l.done).count() as u32,
+        learner_steps: st.learners.iter().map(|l| l.steps).sum(),
+        draining: st.draining,
+    }
+}
+
+/// Remove `id` and free its slot.  `lost = true` marks the slot so the
+/// next assignment counts as a reassignment (heartbeat-timeout path);
+/// a clean `Deregister` frees silently.
+fn free_slot(st: &mut CtrlState, id: u64, lost: bool) {
+    let Some(w) = st.workers.remove(&id) else { return };
+    match w.role {
+        Role::Learner => {
+            let s = &mut st.learners[w.slot];
+            if s.worker == Some(id) {
+                s.worker = None;
+                // endpoints die with the process: actors holding the
+                // old data addr will fail, re-register, and pick up the
+                // replacement's addresses
+                s.data_addrs.clear();
+                if lost {
+                    s.was_lost = true;
+                }
+            }
+        }
+        Role::Actor => {
+            let s = &mut st.actors[w.slot];
+            if s.worker == Some(id) {
+                s.worker = None;
+                if lost {
+                    s.was_lost = true;
+                }
+            }
+        }
+        Role::Inf => {
+            let s = &mut st.infs[w.slot];
+            if s.worker == Some(id) {
+                s.worker = None;
+                s.addr = None;
+                if lost {
+                    s.was_lost = true;
+                }
+            }
+        }
+    }
+}
+
+/// Static per-register context captured by the service handler.
+struct Ctx {
+    league_addr: String,
+    pool_addrs: Vec<String>,
+    slice: RunSlice,
+    learners_per_agent: usize,
+    inf_servers: usize,
+}
+
+fn retry(backoff_ms: u32, reason: &str) -> Msg {
+    Msg::Retry { backoff_ms, reason: reason.to_string() }
+}
+
+/// Hint-or-scan slot selection shared by every role: the hinted slot
+/// wins when it is in range and eligible (a respawned worker gets its
+/// old slot back), else the first eligible slot.
+fn pick_slot(
+    slot_hint: i64,
+    n: usize,
+    eligible: impl Fn(usize) -> bool,
+) -> Option<usize> {
+    usize::try_from(slot_hint)
+        .ok()
+        .filter(|&s| s < n && eligible(s))
+        .or_else(|| (0..n).find(|&s| eligible(s)))
+}
+
+fn admit(st: &mut CtrlState, role: Role, slot: usize) -> u64 {
+    let id = st.next_worker;
+    st.next_worker += 1;
+    st.workers.insert(id, WorkerInfo { role, slot, last_seen: Instant::now() });
+    id
+}
+
+/// Note on idempotency: Register rides `ReqClient`, which re-sends
+/// after a write-succeeded/read-failed connection break, so one
+/// registration can transiently admit two worker ids.  The orphan never
+/// heartbeats and is reaped after `heartbeat_timeout_ms` (counted as
+/// lost), freeing its slot — self-healing, at the cost of briefly
+/// skewed deploy stats on an exactly-sized fleet.
+fn handle_register(
+    st: &mut CtrlState,
+    ctx: &Ctx,
+    role: &str,
+    slot_hint: i64,
+) -> Msg {
+    let Some(role) = Role::parse(role) else {
+        return Msg::Err(format!(
+            "unknown role '{role}' (want {ROLE_LEARNER}|{ROLE_ACTOR}|{ROLE_INF})"
+        ));
+    };
+    if st.stop_all || st.draining {
+        // the run is over for new registrants: tell them to exit
+        // cleanly instead of parking them in a forever-Retry loop
+        return Msg::Shutdown;
+    }
+    match role {
+        Role::Learner => {
+            // a slot whose learner already finished must not be handed
+            // out again — the replacement would retrain total_steps from
+            // scratch and freeze a second set of models
+            let slot = pick_slot(slot_hint, st.learners.len(), |s| {
+                st.learners[s].worker.is_none() && !st.learners[s].done
+            });
+            let Some(slot) = slot else {
+                let only_done_left =
+                    st.learners.iter().any(|l| l.worker.is_none() && l.done);
+                return if only_done_left {
+                    Msg::Shutdown // that training is complete; exit cleanly
+                } else {
+                    retry(1_000, "no free learner slot")
+                };
+            };
+            let id = admit(st, Role::Learner, slot);
+            let s = &mut st.learners[slot];
+            s.worker = Some(id);
+            s.steps = 0;
+            s.done = false;
+            if std::mem::take(&mut s.was_lost) {
+                st.reassigned += 1;
+            }
+            Msg::Assign(WorkerAssignment {
+                worker_id: id,
+                role: ROLE_LEARNER.into(),
+                slot: slot as u32,
+                agent: slot as u32,
+                li: (slot * ctx.learners_per_agent) as u32,
+                league_addr: ctx.league_addr.clone(),
+                pool_addrs: ctx.pool_addrs.clone(),
+                data_addr: String::new(),
+                inf_addr: String::new(),
+                run: ctx.slice.clone(),
+            })
+        }
+        Role::Inf => {
+            if st.infs.is_empty() {
+                return Msg::Err("this run declares no inf-servers".into());
+            }
+            let slot =
+                pick_slot(slot_hint, st.infs.len(), |s| st.infs[s].worker.is_none());
+            let Some(slot) = slot else {
+                return retry(1_000, "no free inf-server slot");
+            };
+            let id = admit(st, Role::Inf, slot);
+            let s = &mut st.infs[slot];
+            s.worker = Some(id);
+            if std::mem::take(&mut s.was_lost) {
+                st.reassigned += 1;
+            }
+            Msg::Assign(WorkerAssignment {
+                worker_id: id,
+                role: ROLE_INF.into(),
+                slot: slot as u32,
+                agent: 0,
+                li: 0,
+                league_addr: ctx.league_addr.clone(),
+                pool_addrs: ctx.pool_addrs.clone(),
+                data_addr: String::new(),
+                inf_addr: String::new(),
+                run: ctx.slice.clone(),
+            })
+        }
+        Role::Actor => {
+            // actors need their learner's data port and, when the run
+            // declares inf-servers, the FULL set of serving addresses —
+            // assigning against a partial set would pile every actor
+            // onto whichever inf-server reported ready first (thread
+            // mode brings all InfServers up before any actor spawns)
+            let inf_ready: Vec<String> =
+                st.infs.iter().filter_map(|s| s.addr.clone()).collect();
+            if inf_ready.len() < ctx.inf_servers {
+                return retry(300, "waiting for inf-server endpoints");
+            }
+            let slot = pick_slot(slot_hint, st.actors.len(), |i| {
+                let s = &st.actors[i];
+                s.worker.is_none()
+                    && st.learners[s.agent as usize].data_addrs.len() > s.rank
+            });
+            let Some(slot) = slot else {
+                return if st.actors.iter().any(|s| s.worker.is_none()) {
+                    retry(300, "waiting for learner data endpoints")
+                } else {
+                    retry(1_000, "no free actor slot")
+                };
+            };
+            let id = admit(st, Role::Actor, slot);
+            let (agent, rank) = {
+                let s = &mut st.actors[slot];
+                s.worker = Some(id);
+                if std::mem::take(&mut s.was_lost) {
+                    st.reassigned += 1;
+                }
+                (s.agent, s.rank)
+            };
+            let data_addr = st.learners[agent as usize].data_addrs[rank].clone();
+            // slot-stable mapping over the full set, mirroring thread
+            // mode's `id % inf_addrs.len()` balance
+            let inf_addr = if ctx.inf_servers > 0 {
+                inf_ready[slot % ctx.inf_servers].clone()
+            } else {
+                String::new()
+            };
+            Msg::Assign(WorkerAssignment {
+                worker_id: id,
+                role: ROLE_ACTOR.into(),
+                slot: slot as u32,
+                agent,
+                li: (agent as usize * ctx.learners_per_agent + rank) as u32,
+                league_addr: ctx.league_addr.clone(),
+                pool_addrs: ctx.pool_addrs.clone(),
+                data_addr,
+                inf_addr,
+                run: ctx.slice.clone(),
+            })
+        }
+    }
+}
+
+/// The multi-process control plane: CoreServices + worker registry.
+pub struct Controller {
+    pub addr: String,
+    pub cfg: RunConfig,
+    core: CoreServices,
+    state: Arc<Mutex<CtrlState>>,
+    server: RepServer,
+    reaper_stop: Arc<AtomicBool>,
+    reaper: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Controller {
+    /// Start CoreServices and the controller protocol server on
+    /// `cfg.controller_bind`.  `hp_layout`/`hp_default` come from the
+    /// artifact manifest (the controller itself never touches PJRT).
+    pub fn start(
+        cfg: RunConfig,
+        hp_layout: Vec<String>,
+        hp_default: Vec<f32>,
+    ) -> Result<Controller> {
+        cfg.validate()?;
+        let bind_host = cfg
+            .controller_bind
+            .rsplit_once(':')
+            .map(|(h, _)| h)
+            .filter(|h| !h.is_empty())
+            .unwrap_or("127.0.0.1")
+            .to_string();
+        let core = CoreServices::start(&cfg, &bind_host, hp_layout, hp_default)?;
+        if matches!(bind_host.as_str(), "0.0.0.0" | "::" | "[::]")
+            && cfg.advertise_host.is_none()
+        {
+            eprintln!(
+                "controller: binding {bind_host} without --advertise-host — \
+                 remote workers will receive unroutable {bind_host}:port \
+                 endpoints"
+            );
+        }
+
+        let mut actors = Vec::new();
+        for agent in 0..cfg.n_agents {
+            for rank in 0..cfg.learners_per_agent {
+                for _ in 0..cfg.actors_per_learner {
+                    actors.push(ActorSlot {
+                        worker: None,
+                        agent,
+                        rank,
+                        was_lost: false,
+                    });
+                }
+            }
+        }
+        let state = Arc::new(Mutex::new(CtrlState {
+            learners: (0..cfg.n_agents).map(|_| LearnerSlot::default()).collect(),
+            actors,
+            infs: (0..cfg.inf_servers).map(|_| InfSlot::default()).collect(),
+            workers: HashMap::new(),
+            next_worker: 1,
+            lost: 0,
+            reassigned: 0,
+            draining: false,
+            stop_all: false,
+        }));
+
+        let adv = cfg.advertise_host.as_deref();
+        let ctx = Arc::new(Ctx {
+            league_addr: super::advertised(&core.league.addr, adv),
+            pool_addrs: core
+                .pool_addrs
+                .iter()
+                .map(|a| super::advertised(a, adv))
+                .collect(),
+            slice: cfg.slice(),
+            learners_per_agent: cfg.learners_per_agent,
+            inf_servers: cfg.inf_servers,
+        });
+        let s2 = state.clone();
+        let lpa = cfg.learners_per_agent;
+        let server = RepServer::serve(&cfg.controller_bind, move |msg| {
+            let mut st = s2.lock().unwrap();
+            match msg {
+                Msg::Register { role, slot_hint } => {
+                    handle_register(&mut st, &ctx, &role, slot_hint)
+                }
+                Msg::WorkerReady { worker_id, addrs } => {
+                    let Some(w) = st.workers.get(&worker_id) else {
+                        return Msg::Err(format!(
+                            "unknown worker {worker_id} (re-register)"
+                        ));
+                    };
+                    let (role, slot) = (w.role, w.slot);
+                    match role {
+                        Role::Learner => {
+                            if addrs.len() != lpa {
+                                return Msg::Err(format!(
+                                    "learner must report {lpa} data ports, got {}",
+                                    addrs.len()
+                                ));
+                            }
+                            st.learners[slot].data_addrs = addrs;
+                        }
+                        Role::Inf => st.infs[slot].addr = addrs.first().cloned(),
+                        Role::Actor => {}
+                    }
+                    Msg::Ok
+                }
+                Msg::Heartbeat { worker_id, steps, done } => {
+                    let stop = st.stop_all;
+                    let draining = st.draining;
+                    match st.workers.get_mut(&worker_id) {
+                        None => Msg::Err(format!(
+                            "unknown worker {worker_id} (re-register)"
+                        )),
+                        Some(w) => {
+                            w.last_seen = Instant::now();
+                            let (role, slot) = (w.role, w.slot);
+                            if role == Role::Learner {
+                                st.learners[slot].steps = steps;
+                                st.learners[slot].done = done;
+                            }
+                            Msg::HeartbeatAck {
+                                stop: stop || (draining && role == Role::Actor),
+                            }
+                        }
+                    }
+                }
+                Msg::Deregister { worker_id } => {
+                    free_slot(&mut st, worker_id, false);
+                    Msg::Ok
+                }
+                Msg::DeployStats => {
+                    let s = stats_of(&st);
+                    Msg::DeployStatsReply {
+                        workers: s.workers,
+                        lost: s.lost,
+                        reassigned: s.reassigned,
+                        learners_done: s.learners_done,
+                        learner_steps: s.learner_steps,
+                        draining: s.draining,
+                    }
+                }
+                Msg::Shutdown => {
+                    st.draining = true;
+                    st.stop_all = true;
+                    Msg::Ok
+                }
+                Msg::Ping => Msg::Pong,
+                other => Msg::Err(format!("controller: unexpected {other:?}")),
+            }
+        })?;
+
+        // ---- reaper: heartbeat timeouts + completion state machine -----
+        let reaper_stop = Arc::new(AtomicBool::new(false));
+        let rs2 = reaper_stop.clone();
+        let s3 = state.clone();
+        let timeout = Duration::from_millis(cfg.heartbeat_timeout_ms);
+        let reaper = std::thread::Builder::new()
+            .name("ctrl-reaper".into())
+            .spawn(move || {
+                while !rs2.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(
+                        (timeout.as_millis() as u64 / 10).clamp(10, 250),
+                    ));
+                    let mut st = s3.lock().unwrap();
+                    let dead: Vec<u64> = st
+                        .workers
+                        .iter()
+                        .filter(|(_, w)| w.last_seen.elapsed() > timeout)
+                        .map(|(&id, _)| id)
+                        .collect();
+                    for id in dead {
+                        let (role, slot) = {
+                            let w = &st.workers[&id];
+                            (w.role, w.slot)
+                        };
+                        eprintln!(
+                            "controller: worker {id} ({} slot {slot}) lost \
+                             heartbeat; freeing slot for reassignment",
+                            role.as_str()
+                        );
+                        free_slot(&mut st, id, true);
+                        st.lost += 1;
+                    }
+                    // learners all done → drain actors; actors gone →
+                    // stop everything (draining latches)
+                    if !st.draining
+                        && !st.learners.is_empty()
+                        && st.learners.iter().all(|l| l.done)
+                    {
+                        st.draining = true;
+                    }
+                    if st.draining
+                        && !st.stop_all
+                        && !st.workers.values().any(|w| w.role == Role::Actor)
+                    {
+                        st.stop_all = true;
+                    }
+                }
+            })?;
+
+        Ok(Controller {
+            addr: server.addr.clone(),
+            cfg,
+            core,
+            state,
+            server,
+            reaper_stop,
+            reaper: Some(reaper),
+        })
+    }
+
+    pub fn league(&self) -> &crate::league::LeagueMgrServer {
+        &self.core.league
+    }
+
+    pub fn pool_addrs(&self) -> &[String] {
+        &self.core.pool_addrs
+    }
+
+    pub fn league_stats(&self) -> LeagueStats {
+        self.core.league.stats()
+    }
+
+    pub fn deploy_stats(&self) -> DeployStatsSnap {
+        stats_of(&self.state.lock().unwrap())
+    }
+
+    pub fn learners_done(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        !st.learners.is_empty() && st.learners.iter().all(|l| l.done)
+    }
+
+    /// Block until every learner slot reports done (or `timeout`).
+    pub fn wait(&self, timeout: Duration) -> bool {
+        let start = Instant::now();
+        while !self.learners_done() {
+            if start.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        true
+    }
+
+    fn wait_workers(&self, pred: impl Fn(&CtrlState) -> bool, grace: Duration) {
+        let start = Instant::now();
+        while start.elapsed() < grace {
+            if pred(&self.state.lock().unwrap()) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// Graceful stop: drain actors via heartbeat acks, then learners +
+    /// inf-servers, then take the final snapshot.  Worker processes exit
+    /// on their own; a grace period bounds each phase.  Idempotent —
+    /// Drop re-invokes this after an explicit call, and a second run
+    /// (reaper already joined, stuck entries unclearable) must not sit
+    /// out the grace periods again.
+    pub fn shutdown(&mut self) {
+        if self.reaper.is_none() {
+            return; // already shut down
+        }
+        self.state.lock().unwrap().draining = true;
+        self.wait_workers(
+            |st| !st.workers.values().any(|w| w.role == Role::Actor),
+            Duration::from_secs(10),
+        );
+        self.state.lock().unwrap().stop_all = true;
+        self.wait_workers(|st| st.workers.is_empty(), Duration::from_secs(10));
+        self.reaper_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.reaper.take() {
+            h.join().ok();
+        }
+        self.server.shutdown();
+        // every worker is gone (or timed out): pools hold everything the
+        // learners will ever publish, so the final snapshot is complete
+        self.core.shutdown();
+    }
+}
+
+impl Drop for Controller {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::ReqClient;
+
+    /// A controller for protocol tests: no engine, no PJRT — rps league
+    /// topology.  The generous default timeout keeps tests that don't
+    /// exercise reaping immune to CI scheduling stalls.
+    fn ctrl_with(
+        n_actors: usize,
+        inf_servers: usize,
+        timeout_ms: u64,
+    ) -> Controller {
+        let mut cfg = RunConfig::default();
+        cfg.env = "rps".into();
+        cfg.mode = "procs".into();
+        cfg.actors_per_learner = n_actors;
+        cfg.inf_servers = inf_servers;
+        cfg.heartbeat_ms = 50;
+        cfg.heartbeat_timeout_ms = timeout_ms;
+        Controller::start(cfg, vec!["lr".into()], vec![3e-4]).unwrap()
+    }
+
+    fn ctrl(n_actors: usize, inf_servers: usize) -> Controller {
+        ctrl_with(n_actors, inf_servers, 3_000)
+    }
+
+    fn register(c: &ReqClient, role: &str, hint: i64) -> Msg {
+        c.request(&Msg::Register { role: role.into(), slot_hint: hint })
+            .unwrap()
+    }
+
+    #[test]
+    fn assignment_flow_and_dependency_gating() {
+        let ctrl = ctrl(2, 0);
+        let c = ReqClient::connect(&ctrl.addr);
+
+        // actor before any learner endpoint: must be told to retry
+        match register(&c, ROLE_ACTOR, -1) {
+            Msg::Retry { .. } => {}
+            other => panic!("expected Retry, got {other:?}"),
+        }
+
+        // learner registers and reports its data port
+        let asn = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("expected Assign, got {other:?}"),
+        };
+        assert_eq!(asn.role, ROLE_LEARNER);
+        assert_eq!(asn.agent, 0);
+        assert!(!asn.pool_addrs.is_empty());
+        assert!(!asn.league_addr.is_empty());
+        assert_eq!(asn.run.env, "rps");
+        let reply = c
+            .request(&Msg::WorkerReady {
+                worker_id: asn.worker_id,
+                addrs: vec!["127.0.0.1:40001".into()],
+            })
+            .unwrap();
+        assert_eq!(reply, Msg::Ok);
+
+        // both actor slots now assign, with the learner's data addr
+        for slot in 0..2u32 {
+            let a = match register(&c, ROLE_ACTOR, -1) {
+                Msg::Assign(a) => a,
+                other => panic!("expected Assign, got {other:?}"),
+            };
+            assert_eq!(a.slot, slot);
+            assert_eq!(a.data_addr, "127.0.0.1:40001");
+            assert_eq!(a.inf_addr, "", "no inf-servers declared");
+        }
+        // a third actor has no slot
+        match register(&c, ROLE_ACTOR, -1) {
+            Msg::Retry { reason, .. } => {
+                assert!(reason.contains("no free actor slot"), "{reason}")
+            }
+            other => panic!("expected Retry, got {other:?}"),
+        }
+        // registering an undeclared role fails loudly
+        assert!(matches!(register(&c, "inf-server", -1), Msg::Err(_)));
+        assert!(matches!(register(&c, "driver", -1), Msg::Err(_)));
+    }
+
+    /// With an advertise host, every address handed to workers carries
+    /// it (binding 0.0.0.0 would otherwise publish unroutable
+    /// endpoints to remote machines).
+    #[test]
+    fn advertise_host_rewrites_assignment_addresses() {
+        let mut cfg = RunConfig::default();
+        cfg.env = "rps".into();
+        cfg.mode = "procs".into();
+        cfg.advertise_host = Some("ctrl.example".into());
+        let ctrl = Controller::start(cfg, vec!["lr".into()], vec![3e-4]).unwrap();
+        let c = ReqClient::connect(&ctrl.addr);
+        let asn = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert!(
+            asn.league_addr.starts_with("ctrl.example:"),
+            "league addr {}",
+            asn.league_addr
+        );
+        for p in &asn.pool_addrs {
+            assert!(p.starts_with("ctrl.example:"), "pool addr {p}");
+        }
+    }
+
+    #[test]
+    fn heartbeat_timeout_frees_slot_and_reassigns() {
+        let ctrl = ctrl_with(1, 0, 300);
+        let c = ReqClient::connect(&ctrl.addr);
+        let learner = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40002".into()],
+        })
+        .unwrap();
+        let actor = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+
+        // keep the learner alive; let the actor go silent
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            assert!(Instant::now() < deadline, "loss never detected");
+            c.request(&Msg::Heartbeat {
+                worker_id: learner.worker_id,
+                steps: 1,
+                done: false,
+            })
+            .unwrap();
+            if ctrl.deploy_stats().lost >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        // the dead actor's heartbeat now gets unknown-worker
+        match c
+            .request(&Msg::Heartbeat {
+                worker_id: actor.worker_id,
+                steps: 0,
+                done: false,
+            })
+            .unwrap()
+        {
+            Msg::Err(e) => assert!(e.contains("unknown worker"), "{e}"),
+            other => panic!("expected Err, got {other:?}"),
+        }
+        // a respawned worker re-registers with its old slot as a hint
+        // and gets the same slot back
+        let again = match register(&c, ROLE_ACTOR, actor.slot as i64) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(again.slot, actor.slot);
+        assert_ne!(again.worker_id, actor.worker_id);
+        // >=: the learner may also get reaped if this thread stalls
+        let stats = ctrl.deploy_stats();
+        assert!(stats.lost >= 1, "lost {}", stats.lost);
+        assert!(stats.reassigned >= 1, "reassigned {}", stats.reassigned);
+    }
+
+    #[test]
+    fn drain_stops_actors_after_learners_finish() {
+        let ctrl = ctrl(1, 0);
+        let c = ReqClient::connect(&ctrl.addr);
+        let learner = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40003".into()],
+        })
+        .unwrap();
+        let actor = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+
+        // learner reports done; the reaper flips to draining and actor
+        // heartbeats start acking stop=true.  Keep both heartbeating so
+        // neither gets reaped while we wait.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            assert!(Instant::now() < deadline, "never told to stop");
+            c.request(&Msg::Heartbeat {
+                worker_id: learner.worker_id,
+                steps: 100,
+                done: true,
+            })
+            .unwrap();
+            match c
+                .request(&Msg::Heartbeat {
+                    worker_id: actor.worker_id,
+                    steps: 0,
+                    done: false,
+                })
+                .unwrap()
+            {
+                Msg::HeartbeatAck { stop: true } => break,
+                Msg::HeartbeatAck { stop: false } => {
+                    std::thread::sleep(Duration::from_millis(25))
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(ctrl.learners_done());
+        // both obey and deregister cleanly: no loss counted
+        c.request(&Msg::Deregister { worker_id: actor.worker_id }).unwrap();
+        c.request(&Msg::Deregister { worker_id: learner.worker_id }).unwrap();
+        assert_eq!(ctrl.deploy_stats().lost, 0);
+        // a new registration during drain is told to exit, not parked
+        assert!(matches!(register(&c, ROLE_ACTOR, -1), Msg::Shutdown));
+    }
+
+    /// A learner slot whose training already finished must never be
+    /// handed to a replacement (it would retrain total_steps from
+    /// scratch and freeze duplicate models): with only done slots free,
+    /// the registrant is told to exit.
+    #[test]
+    fn finished_learner_slot_is_not_reassigned() {
+        let mut cfg = RunConfig::default();
+        cfg.env = "rps".into();
+        cfg.mode = "procs".into();
+        cfg.n_agents = 2; // second agent keeps the drain latch open
+        cfg.heartbeat_ms = 50;
+        cfg.heartbeat_timeout_ms = 3_000;
+        let ctrl = Controller::start(cfg, vec!["lr".into()], vec![3e-4]).unwrap();
+        let c = ReqClient::connect(&ctrl.addr);
+        let l0 = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let _l1 = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        // agent 0 finishes, then its worker goes away cleanly
+        c.request(&Msg::Heartbeat {
+            worker_id: l0.worker_id,
+            steps: 100,
+            done: true,
+        })
+        .unwrap();
+        c.request(&Msg::Deregister { worker_id: l0.worker_id }).unwrap();
+        // the respawned worker asks for its old slot back: told to exit
+        // (agent 1's slot is occupied, agent 0's is complete)
+        assert!(matches!(
+            register(&c, ROLE_LEARNER, l0.slot as i64),
+            Msg::Shutdown
+        ));
+        assert!(!ctrl.learners_done(), "agent 1 still training");
+    }
+
+    #[test]
+    fn inf_server_gates_actor_assignment() {
+        let ctrl = ctrl(1, 1);
+        let c = ReqClient::connect(&ctrl.addr);
+        let learner = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40004".into()],
+        })
+        .unwrap();
+        // learner ready but no inf endpoint yet: actors must wait
+        match register(&c, ROLE_ACTOR, -1) {
+            Msg::Retry { reason, .. } => {
+                assert!(reason.contains("inf-server"), "{reason}")
+            }
+            other => panic!("{other:?}"),
+        }
+        let inf = match register(&c, ROLE_INF, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(inf.role, ROLE_INF);
+        c.request(&Msg::WorkerReady {
+            worker_id: inf.worker_id,
+            addrs: vec!["127.0.0.1:40005".into()],
+        })
+        .unwrap();
+        let actor = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(actor.inf_addr, "127.0.0.1:40005");
+    }
+}

@@ -1,10 +1,22 @@
 //! kube-lite: spec-driven deployment supervisor (paper §3.4 substitute).
 //!
-//! Takes a [`RunConfig`] and launches the whole league as supervised
-//! threads: M_M ModelPool replicas, the LeagueMgr, M_G x M_L Learners
-//! (with a per-agent allreduce group), optional InfServers, and
-//! M_G x M_L x M_A Actors.  Actors get k8s-Deployment semantics: they
-//! auto-restart on panic/error, and can be scaled up/down at runtime.
+//! Two deployment modes share one role-agnostic core:
+//!
+//!   - **thread** ([`Deployment`]): every role runs as a supervised
+//!     thread in this process.  Actors get k8s-Deployment semantics:
+//!     they auto-restart on panic/error and can be scaled at runtime.
+//!   - **procs** ([`controller::Controller`] + [`worker`]): each role
+//!     runs as its own OS process.  Workers register with the
+//!     controller over the `transport` layer, heartbeat, and get their
+//!     slot reassigned when they die (see DESIGN.md §Process
+//!     deployment).
+//!
+//! [`CoreServices`] is the shared launch path: resume-from-snapshot,
+//! M_M ModelPool replicas, the LeagueMgr, and the background
+//! snapshotter — everything that is a *service* rather than a *role*.
+
+pub mod controller;
+pub mod worker;
 
 use crate::actor::{Actor, ActorConfig, PolicyBackend};
 use crate::checkpoint::{CheckpointMgr, LeagueSnapshot};
@@ -31,36 +43,35 @@ pub struct LearnerStatus {
     pub done: AtomicBool,
 }
 
-pub struct Deployment {
-    pub cfg: RunConfig,
-    pub engine: Arc<Engine>,
+/// The league's service plane: ModelPool replicas + LeagueMgr +
+/// background snapshotter, with resume-from-snapshot.  Role-agnostic —
+/// both the thread-mode [`Deployment`] and the procs-mode controller
+/// launch exactly this, then attach their roles to it.
+pub struct CoreServices {
     pub league: LeagueMgrServer,
     pub pools: Vec<ModelPoolServer>,
     pub pool_addrs: Vec<String>,
-    pub inf_addrs: Vec<String>,
-    inf_servers: Vec<InfServer>,
-    pub learner_status: Vec<Arc<LearnerStatus>>,
-    learner_handles: Vec<std::thread::JoinHandle<Result<()>>>,
-    data_addrs: Vec<String>,
-    actor_stop: Arc<AtomicBool>,
-    actor_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
-    pub restarts: Arc<AtomicU64>,
-    stop: Arc<AtomicBool>,
-    next_actor_id: AtomicU64,
     snapshotter: Option<std::thread::JoinHandle<()>>,
-    /// set only after the learners have joined, so the snapshotter's final
-    /// save sees their last published/frozen models
+    /// raised only after every writer of league/pool state is quiesced,
+    /// so the snapshotter's final save is complete
     snap_stop: Arc<AtomicBool>,
 }
 
-impl Deployment {
-    /// Launch everything declared by `cfg`.  Returns once all services
-    /// are up and actors are running.
+impl CoreServices {
+    /// Launch pools + league (+ snapshotter if `cfg.checkpoint_dir`),
+    /// binding on `bind_host` with ephemeral ports.  `hp_layout` /
+    /// `hp_default` come from the artifact manifest; `cfg.hp_overrides`
+    /// are applied here by layout position.
     ///
-    /// With `cfg.resume`, the latest snapshot in that directory seeds the
-    /// LeagueMgr (pool/payoff/Elo/hyper/RNG/counters) and pre-populates
-    /// every ModelPool replica, so the run continues where it was killed.
-    pub fn start(cfg: RunConfig, engine: Arc<Engine>) -> Result<Deployment> {
+    /// With `cfg.resume`, the latest snapshot in that directory seeds
+    /// the LeagueMgr (pool/payoff/Elo/hyper/RNG/counters) and
+    /// pre-populates every ModelPool replica.
+    pub fn start(
+        cfg: &RunConfig,
+        bind_host: &str,
+        hp_layout: Vec<String>,
+        mut hp_default: Vec<f32>,
+    ) -> Result<CoreServices> {
         cfg.validate()?;
         let resume_snap: Option<LeagueSnapshot> = match &cfg.resume {
             Some(dir) => Some(
@@ -78,10 +89,11 @@ impl Deployment {
             .as_ref()
             .or(cfg.resume.as_ref())
             .map(PathBuf::from);
+        let bind = format!("{bind_host}:0");
         let pools: Vec<ModelPoolServer> = (0..cfg.model_pools)
             .map(|i| {
                 ModelPoolServer::start_with(
-                    "127.0.0.1:0",
+                    &bind,
                     PoolOptions {
                         spill_dir: spill_root
                             .as_ref()
@@ -98,36 +110,27 @@ impl Deployment {
             }
         }
 
+        for (k, v) in &cfg.hp_overrides {
+            if let Some(i) = hp_layout.iter().position(|n| n == k) {
+                hp_default[i] = *v;
+            }
+        }
         let league = LeagueMgrServer::start_with(
-            "127.0.0.1:0",
+            &bind,
             LeagueConfig {
                 n_agents: cfg.n_agents,
                 n_opponents: cfg.effective_opponents(),
                 game_mgr: cfg.game_mgr.clone(),
-                hp_layout: engine.manifest.hp_layout.clone(),
-                hp_default: {
-                    let mut hp = engine.manifest.default_hp();
-                    for (k, v) in &cfg.hp_overrides {
-                        if let Some(i) = engine.manifest.hp_index(k) {
-                            hp[i] = *v;
-                        }
-                    }
-                    hp
-                },
+                hp_layout,
+                hp_default,
                 seed: cfg.seed,
             },
             resume_snap.as_ref(),
         )?;
 
-        let stop = Arc::new(AtomicBool::new(false));
-        let actor_stop = Arc::new(AtomicBool::new(false));
-        let manifest_env = crate::envs::manifest_name(&cfg.env).to_string();
-
         // ---- background snapshotter -----------------------------------
         // periodically persists league + pool state; writes once more on
-        // shutdown so even a clean exit is resumable.  It watches its own
-        // stop flag, raised only after the learner threads have joined —
-        // the final snapshot must include their last frozen models.
+        // shutdown so even a clean exit is resumable.
         let snap_stop = Arc::new(AtomicBool::new(false));
         let snapshotter = match &cfg.checkpoint_dir {
             Some(dir) => {
@@ -162,12 +165,159 @@ impl Deployment {
             None => None,
         };
 
+        Ok(CoreServices { league, pools, pool_addrs, snapshotter, snap_stop })
+    }
+
+    /// Force a snapshot right now (tests / operator tooling); returns
+    /// the path written.  Requires `cfg.checkpoint_dir`.
+    pub fn snapshot_now(&self, cfg: &RunConfig) -> Result<PathBuf> {
+        let dir = cfg
+            .checkpoint_dir
+            .as_ref()
+            .context("snapshot_now requires cfg.checkpoint_dir")?;
+        let mgr = CheckpointMgr::open(dir, cfg.checkpoint_keep)?;
+        let mut snap = self.league.snapshot();
+        snap.models = self.pools[0].all_blobs();
+        mgr.save(&snap)
+    }
+
+    /// Stop the snapshotter (final save included).  Call only after the
+    /// last writer of league/pool state has quiesced — the final
+    /// snapshot must include the learners' last frozen models.
+    pub fn shutdown(&mut self) {
+        self.snap_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.snapshotter.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// Rewrite the host part of a bound address for advertisement to peers.
+/// Binding 0.0.0.0/:: makes the kernel's local_addr useless to remote
+/// machines; with an advertise host the service is published as
+/// `<advertise_host>:<bound port>` instead.
+pub fn advertised(addr: &str, advertise_host: Option<&str>) -> String {
+    match (advertise_host, addr.rsplit_once(':')) {
+        (Some(h), Some((_, port))) => format!("{h}:{port}"),
+        _ => addr.to_string(),
+    }
+}
+
+/// One learner's thread body, shared by both deployment modes: train to
+/// `total` steps, mirror progress into `status`, then hold the data
+/// port open until `stop` so actors don't error out mid-shutdown.
+#[allow(clippy::too_many_arguments)]
+pub fn learner_thread(
+    lcfg: LearnerConfig,
+    engine: Arc<Engine>,
+    pool_addrs: Vec<String>,
+    league_addr: String,
+    group: Option<Arc<Allreduce>>,
+    status: Arc<LearnerStatus>,
+    stop: Arc<AtomicBool>,
+    total: u64,
+    addr_tx: std::sync::mpsc::Sender<String>,
+) -> Result<()> {
+    let mut learner =
+        Learner::new(lcfg, engine, &pool_addrs, &league_addr, group)?;
+    addr_tx.send(learner.data_addr()).ok();
+    while learner.steps < total && !stop.load(Ordering::Relaxed) {
+        learner.train_once()?;
+        status.steps.store(learner.steps, Ordering::Relaxed);
+        status
+            .rfps_frames
+            .store(learner.rfps.count(), Ordering::Relaxed);
+        status
+            .cfps_frames
+            .store(learner.cfps.count(), Ordering::Relaxed);
+        *status.stats.lock().unwrap() = learner.last_stats.clone();
+    }
+    status.done.store(true, Ordering::Relaxed);
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    Ok(())
+}
+
+/// Build and drive one Actor until `stop` (or error).  Picks the
+/// backend from `inf_addr` and fills in the manifest `train_t` the
+/// Remote backend requires.  Shared by both deployment modes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_actor(
+    mut cfg: ActorConfig,
+    envs_per_actor: usize,
+    inf_addr: Option<&str>,
+    engine: &Arc<Engine>,
+    league_addr: &str,
+    pool_addrs: &[String],
+    data_addr: &str,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let backend = match inf_addr {
+        Some(addr) => {
+            cfg.train_t = engine
+                .manifest
+                .env(crate::envs::manifest_name(&cfg.env))
+                .map(|m| m.train_t)
+                .unwrap_or(16);
+            PolicyBackend::Remote(crate::transport::ReqClient::connect(addr))
+        }
+        None => PolicyBackend::Local(engine.clone()),
+    };
+    let mut actor = Actor::new_vec(
+        cfg,
+        envs_per_actor.max(1),
+        backend,
+        league_addr,
+        pool_addrs,
+        data_addr,
+    )?;
+    actor.run(u64::MAX, stop)?;
+    Ok(())
+}
+
+pub struct Deployment {
+    pub cfg: RunConfig,
+    pub engine: Arc<Engine>,
+    pub core: CoreServices,
+    pub inf_addrs: Vec<String>,
+    inf_servers: Vec<InfServer>,
+    pub learner_status: Vec<Arc<LearnerStatus>>,
+    learner_handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    /// one allreduce group per agent, retained so shutdown can poison
+    /// them — a rank blocked in reduce would otherwise hang the join
+    learner_groups: Vec<Arc<Allreduce>>,
+    data_addrs: Vec<String>,
+    actor_stop: Arc<AtomicBool>,
+    actor_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    pub restarts: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    next_actor_id: AtomicU64,
+}
+
+impl Deployment {
+    /// Launch everything declared by `cfg` as threads.  Returns once all
+    /// services are up and actors are running.
+    pub fn start(cfg: RunConfig, engine: Arc<Engine>) -> Result<Deployment> {
+        let core = CoreServices::start(
+            &cfg,
+            "127.0.0.1",
+            engine.manifest.hp_layout.clone(),
+            engine.manifest.default_hp(),
+        )?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let actor_stop = Arc::new(AtomicBool::new(false));
+        let manifest_env = crate::envs::manifest_name(&cfg.env).to_string();
+
         // ---- learners -------------------------------------------------
         let mut learner_status = Vec::new();
         let mut learner_handles = Vec::new();
+        let mut learner_groups = Vec::new();
         let mut data_addrs = Vec::new();
         for agent in 0..cfg.n_agents {
             let group = Allreduce::new(cfg.learners_per_agent);
+            learner_groups.push(group.clone());
             for rank in 0..cfg.learners_per_agent {
                 let status = Arc::new(LearnerStatus::default());
                 learner_status.push(status.clone());
@@ -182,48 +332,29 @@ impl Deployment {
                     period_steps: cfg.period_steps,
                     replay_cap: 8192,
                     seed: cfg.seed + agent as u64 * 100 + rank as u64,
+                    data_bind: "127.0.0.1:0".into(),
                 };
                 let engine = engine.clone();
-                let pool_addrs2 = pool_addrs.clone();
-                let league_addr = league.addr.clone();
+                let pool_addrs2 = core.pool_addrs.clone();
+                let league_addr = core.league.addr.clone();
                 let group = group.clone();
                 let stop2 = stop.clone();
                 let total = cfg.total_steps;
+                let status2 = status.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("learner-{agent}-{rank}"))
                     .spawn(move || -> Result<()> {
-                        let mut learner = Learner::new(
+                        learner_thread(
                             lcfg,
                             engine,
-                            &pool_addrs2,
-                            &league_addr,
+                            pool_addrs2,
+                            league_addr,
                             Some(group),
-                        )?;
-                        tx.send(learner.data_addr()).ok();
-                        while learner.steps < total && !stop2.load(Ordering::Relaxed)
-                        {
-                            learner.train_once()?;
-                            status
-                                .steps
-                                .store(learner.steps, Ordering::Relaxed);
-                            status.rfps_frames.store(
-                                learner.rfps.count(),
-                                Ordering::Relaxed,
-                            );
-                            status.cfps_frames.store(
-                                learner.cfps.count(),
-                                Ordering::Relaxed,
-                            );
-                            *status.stats.lock().unwrap() =
-                                learner.last_stats.clone();
-                        }
-                        status.done.store(true, Ordering::Relaxed);
-                        // keep the data port alive until global stop so
-                        // actors don't error out mid-shutdown
-                        while !stop2.load(Ordering::Relaxed) {
-                            std::thread::sleep(Duration::from_millis(10));
-                        }
-                        Ok(())
+                            status2,
+                            stop2,
+                            total,
+                            tx,
+                        )
                     })?;
                 learner_handles.push(handle);
                 data_addrs.push(rx.recv_timeout(Duration::from_secs(30))?);
@@ -243,7 +374,7 @@ impl Deployment {
                     refresh: Duration::from_millis(cfg.infer_refresh_ms),
                 },
                 engine.clone(),
-                &pool_addrs,
+                &core.pool_addrs,
             )?);
         }
         let inf_addrs: Vec<String> =
@@ -252,21 +383,18 @@ impl Deployment {
         let deployment = Deployment {
             cfg,
             engine,
-            league,
-            pools,
-            pool_addrs,
+            core,
             inf_addrs,
             inf_servers,
             learner_status,
             learner_handles,
+            learner_groups,
             data_addrs,
             actor_stop,
             actor_handles: Mutex::new(Vec::new()),
             restarts: Arc::new(AtomicU64::new(0)),
             stop,
             next_actor_id: AtomicU64::new(0),
-            snapshotter,
-            snap_stop,
         };
 
         // ---- actors (M_A per learner) ----------------------------------
@@ -277,6 +405,14 @@ impl Deployment {
             }
         }
         Ok(deployment)
+    }
+
+    pub fn league(&self) -> &LeagueMgrServer {
+        &self.core.league
+    }
+
+    pub fn pool_addrs(&self) -> &[String] {
+        &self.core.pool_addrs
     }
 
     /// Scale up: add one supervised actor feeding learner `li`.
@@ -291,47 +427,33 @@ impl Deployment {
             train_t: 0,
         };
         let engine = self.engine.clone();
-        let league_addr = self.league.addr.clone();
-        let pool_addrs = self.pool_addrs.clone();
+        let league_addr = self.core.league.addr.clone();
+        let pool_addrs = self.core.pool_addrs.clone();
         let data_addr = self.data_addrs[li].clone();
-        let inf_addr = self.inf_addrs.get(id as usize % self.inf_addrs.len().max(1))
+        let inf_addr = self
+            .inf_addrs
+            .get(id as usize % self.inf_addrs.len().max(1))
             .cloned();
         let stop = self.actor_stop.clone();
         let restarts = self.restarts.clone();
         let envs_per_actor = self.cfg.envs_per_actor.max(1);
-        let train_t = self
-            .engine
-            .manifest
-            .env(crate::envs::manifest_name(&self.cfg.env))
-            .map(|m| m.train_t)
-            .unwrap_or(16);
         let handle = std::thread::Builder::new()
             .name(format!("actor-{}", cfg.actor_id))
             .spawn(move || {
                 // k8s Deployment semantics: restart on any failure
                 while !stop.load(Ordering::Relaxed) {
-                    let backend = match &inf_addr {
-                        Some(addr) => PolicyBackend::Remote(
-                            crate::transport::ReqClient::connect(addr),
-                        ),
-                        None => PolicyBackend::Local(engine.clone()),
-                    };
-                    let mut cfg2 = cfg.clone();
-                    if inf_addr.is_some() {
-                        cfg2.train_t = train_t;
-                    }
                     let run = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| -> Result<()> {
-                            let mut actor = Actor::new_vec(
-                                cfg2,
+                            run_actor(
+                                cfg.clone(),
                                 envs_per_actor,
-                                backend,
+                                inf_addr.as_deref(),
+                                &engine,
                                 &league_addr,
                                 &pool_addrs,
                                 &data_addr,
-                            )?;
-                            actor.run(u64::MAX, &stop)?;
-                            Ok(())
+                                &stop,
+                            )
                         }),
                     );
                     match run {
@@ -351,21 +473,13 @@ impl Deployment {
     }
 
     pub fn league_stats(&self) -> LeagueStats {
-        self.league.stats()
+        self.core.league.stats()
     }
 
     /// Force a snapshot right now (tests / operator tooling); returns the
     /// path written.  Requires `checkpoint_dir`.
     pub fn snapshot_now(&self) -> Result<PathBuf> {
-        let dir = self
-            .cfg
-            .checkpoint_dir
-            .as_ref()
-            .context("snapshot_now requires cfg.checkpoint_dir")?;
-        let mgr = CheckpointMgr::open(dir, self.cfg.checkpoint_keep)?;
-        let mut snap = self.league.snapshot();
-        snap.models = self.pools[0].all_blobs();
-        mgr.save(&snap)
+        self.core.snapshot_now(&self.cfg)
     }
 
     pub fn learners_done(&self) -> bool {
@@ -400,15 +514,18 @@ impl Deployment {
             h.join().ok();
         }
         self.stop.store(true, Ordering::Relaxed);
+        // mid-run teardown (Drop on a failing test): a rank blocked in
+        // reduce waits for peers that already saw `stop` — poison wakes
+        // it so the join below cannot hang
+        for g in &self.learner_groups {
+            g.poison();
+        }
         for h in self.learner_handles.drain(..) {
             let _ = h.join();
         }
         // learners are fully stopped: everything they will ever publish is
         // in the pools, so the snapshotter's final save is complete
-        self.snap_stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.snapshotter.take() {
-            h.join().ok();
-        }
+        self.core.shutdown();
         for s in self.inf_servers.iter_mut() {
             s.shutdown();
         }
@@ -432,6 +549,15 @@ mod tests {
             return None;
         }
         Some(Arc::new(Engine::load(dir).unwrap()))
+    }
+
+    #[test]
+    fn advertised_rewrites_host_only_when_asked() {
+        assert_eq!(advertised("0.0.0.0:4321", Some("node7")), "node7:4321");
+        assert_eq!(advertised("127.0.0.1:80", Some("10.0.0.5")), "10.0.0.5:80");
+        assert_eq!(advertised("0.0.0.0:4321", None), "0.0.0.0:4321");
+        // no port separator: left untouched rather than mangled
+        assert_eq!(advertised("garbage", Some("h")), "garbage");
     }
 
     /// Vectorized actors (`envs_per_actor > 1`) drive a full league run

@@ -1,0 +1,486 @@
+//! Role worker: the body of `tleague worker --role <r> --controller
+//! <addr>` — registers with the controller, runs exactly one role, and
+//! heartbeats until told to stop.
+//!
+//! Life cycle (see DESIGN.md §Process deployment):
+//!
+//!   register → Assign → (WorkerReady) → run role + heartbeat
+//!     ├─ heartbeat ack `stop=true`  → deregister, exit 0
+//!     ├─ role error (stale endpoints, peer died) → deregister,
+//!     │    re-register with the old slot as a hint, restart the role
+//!     │    with fresh addresses — the cross-process analogue of the
+//!     │    thread supervisor's restart loop
+//!     └─ heartbeat says "unknown worker" (controller restarted) →
+//!          re-register; the role restarts against the resumed services
+//!          (learners refetch params from the pool, actors new tasks)
+
+use crate::actor::ActorConfig;
+use crate::inference::{InfServer, InfServerConfig};
+use crate::learner::allreduce::Allreduce;
+use crate::learner::replay::ReplayMode;
+use crate::learner::LearnerConfig;
+use crate::orchestrator::{learner_thread, run_actor, LearnerStatus};
+use crate::proto::{Msg, WorkerAssignment};
+use crate::runtime::Engine;
+use crate::transport::ReqClient;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// State shared between the role loop and the heartbeat thread.
+#[derive(Default)]
+struct HbShared {
+    steps: AtomicU64,
+    done: AtomicBool,
+    /// controller acked stop: wind down cleanly
+    stop: AtomicBool,
+    /// registration no longer valid (controller restarted / we were
+    /// declared dead): re-register
+    lost: AtomicBool,
+    /// role loop over: heartbeat thread exits
+    finished: AtomicBool,
+}
+
+impl HbShared {
+    fn should_stop(&self, proc_stop: &AtomicBool) -> bool {
+        proc_stop.load(Ordering::Relaxed)
+            || self.stop.load(Ordering::Relaxed)
+            || self.lost.load(Ordering::Relaxed)
+    }
+}
+
+fn spawn_heartbeat(
+    addr: String,
+    worker_id: u64,
+    every_ms: u64,
+    hb: Arc<HbShared>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("heartbeat-{worker_id}"))
+        .spawn(move || {
+            let client = ReqClient::connect(&addr);
+            let every = Duration::from_millis(every_ms.max(10));
+            'outer: loop {
+                // sleep in small slices so `finished` is honored fast
+                let t0 = Instant::now();
+                while t0.elapsed() < every {
+                    if hb.finished.load(Ordering::Relaxed) {
+                        break 'outer;
+                    }
+                    std::thread::sleep(Duration::from_millis(
+                        every_ms.clamp(1, 25),
+                    ));
+                }
+                let msg = Msg::Heartbeat {
+                    worker_id,
+                    steps: hb.steps.load(Ordering::Relaxed),
+                    done: hb.done.load(Ordering::Relaxed),
+                };
+                match client.request(&msg) {
+                    Ok(Msg::HeartbeatAck { stop }) => {
+                        if stop {
+                            hb.stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    Ok(_) | Err(_) => {
+                        // unknown-worker or controller unreachable:
+                        // the role loop re-registers
+                        hb.lost.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            }
+        })
+        .expect("spawn heartbeat")
+}
+
+/// Register with the controller, honoring `Retry` backoff, until an
+/// assignment arrives, the controller says the run is over
+/// (`Msg::Shutdown` → clean exit), or `proc_stop`.  Transport errors
+/// are retried a bounded number of times — a vanished controller must
+/// not leave immortal workers spinning (each `request` already spends
+/// ~10s of internal reconnect attempts).
+fn register(
+    client: &ReqClient,
+    role: &str,
+    slot_hint: i64,
+    proc_stop: &AtomicBool,
+) -> Result<Option<WorkerAssignment>> {
+    let mut last_reason = String::new();
+    let mut unreachable = 0u32;
+    loop {
+        if proc_stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        match client.request(&Msg::Register { role: role.into(), slot_hint }) {
+            Ok(Msg::Assign(a)) => return Ok(Some(a)),
+            Ok(Msg::Shutdown) => {
+                eprintln!("worker({role}): run is draining; exiting");
+                return Ok(None);
+            }
+            Ok(Msg::Retry { backoff_ms, reason }) => {
+                unreachable = 0;
+                if reason != last_reason {
+                    eprintln!("worker({role}): waiting — {reason}");
+                    last_reason = reason;
+                }
+                std::thread::sleep(Duration::from_millis(
+                    u64::from(backoff_ms).clamp(10, 10_000),
+                ));
+            }
+            Ok(Msg::Err(e)) => bail!("register rejected: {e}"),
+            Ok(other) => bail!("register: unexpected reply {other:?}"),
+            Err(_) => {
+                unreachable += 1;
+                if unreachable >= 20 {
+                    bail!("controller unreachable after {unreachable} attempts");
+                }
+                eprintln!("worker({role}): controller unreachable, retrying");
+                std::thread::sleep(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Endpoint options for one worker: where role services bind, and what
+/// host peers should be told to reach them at (`advertise_host` is
+/// required in practice when binding 0.0.0.0 — see
+/// [`super::advertised`]).
+#[derive(Clone, Default)]
+pub struct WorkerNet {
+    pub bind_host: String,
+    pub advertise_host: Option<String>,
+}
+
+impl WorkerNet {
+    fn advertised(&self, addr: &str) -> String {
+        super::advertised(addr, self.advertise_host.as_deref())
+    }
+}
+
+/// Run one role worker until the controller stops it (Ok) or the
+/// process is signalled.  Re-registers and restarts the role on
+/// failures and controller restarts.
+pub fn run_worker(
+    role: &str,
+    controller_addr: &str,
+    engine: Arc<Engine>,
+    net: &WorkerNet,
+    proc_stop: &AtomicBool,
+) -> Result<()> {
+    let client = ReqClient::connect(controller_addr);
+    let mut slot_hint: i64 = -1;
+    let mut consecutive_failures = 0u32;
+    loop {
+        let Some(asn) = register(&client, role, slot_hint, proc_stop)? else {
+            return Ok(()); // signalled while waiting, or run already draining
+        };
+        slot_hint = asn.slot as i64;
+        eprintln!(
+            "worker({role}): assigned slot {} as worker {}",
+            asn.slot, asn.worker_id
+        );
+        let hb = Arc::new(HbShared::default());
+        let hb_handle = spawn_heartbeat(
+            controller_addr.to_string(),
+            asn.worker_id,
+            asn.run.heartbeat_ms,
+            hb.clone(),
+        );
+        let role_started = Instant::now();
+        let res = run_role(&asn, engine.clone(), net, proc_stop, &hb, &client);
+        hb.finished.store(true, Ordering::Relaxed);
+        hb_handle.join().ok();
+        // best-effort goodbye; on a lost registration the id is stale
+        // and the controller answers Err, which is fine
+        let _ = client.request(&Msg::Deregister { worker_id: asn.worker_id });
+        let told_to_stop =
+            proc_stop.load(Ordering::Relaxed) || hb.stop.load(Ordering::Relaxed);
+        match res {
+            Ok(()) if told_to_stop => {
+                eprintln!("worker({role}): clean stop");
+                return Ok(());
+            }
+            Ok(()) => {
+                // registration lost (controller restart): re-register
+                consecutive_failures = 0;
+            }
+            Err(e) => {
+                if told_to_stop {
+                    return Ok(()); // failures during shutdown are expected
+                }
+                // only *consecutive* fast failures count: a role that ran
+                // healthily for a while before failing (peer restarted
+                // hours in) starts a fresh streak, so a long-lived worker
+                // never accumulates its way into giving up
+                if role_started.elapsed() >= Duration::from_secs(60) {
+                    consecutive_failures = 0;
+                }
+                consecutive_failures += 1;
+                if consecutive_failures >= 10 {
+                    return Err(e.context("worker: giving up after 10 failures"));
+                }
+                eprintln!("worker({role}): role failed ({e:#}); re-registering");
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+fn run_role(
+    asn: &WorkerAssignment,
+    engine: Arc<Engine>,
+    net: &WorkerNet,
+    proc_stop: &AtomicBool,
+    hb: &Arc<HbShared>,
+    ctrl: &ReqClient,
+) -> Result<()> {
+    match asn.role.as_str() {
+        super::controller::ROLE_LEARNER => {
+            run_learner_role(asn, engine, net, proc_stop, hb, ctrl)
+        }
+        super::controller::ROLE_ACTOR => {
+            run_actor_role(asn, engine, proc_stop, hb)
+        }
+        super::controller::ROLE_INF => {
+            run_inf_role(asn, engine, net, proc_stop, hb, ctrl)
+        }
+        other => bail!("unknown role '{other}' in assignment"),
+    }
+}
+
+fn report_ready(ctrl: &ReqClient, worker_id: u64, addrs: Vec<String>) -> Result<()> {
+    match ctrl.request(&Msg::WorkerReady { worker_id, addrs })? {
+        Msg::Ok => Ok(()),
+        other => bail!("WorkerReady: unexpected reply {other:?}"),
+    }
+}
+
+/// A learner worker hosts its agent's WHOLE allreduce group as threads
+/// (gradient reduction is intra-process), reporting one data port per
+/// rank.  After training completes it keeps the data ports open — and
+/// heartbeats `done` — until the controller acks stop.
+fn run_learner_role(
+    asn: &WorkerAssignment,
+    engine: Arc<Engine>,
+    net: &WorkerNet,
+    proc_stop: &AtomicBool,
+    hb: &Arc<HbShared>,
+    ctrl: &ReqClient,
+) -> Result<()> {
+    let run = &asn.run;
+    let n_ranks = (run.learners_per_agent as usize).max(1);
+    let group = Allreduce::new(n_ranks);
+    let manifest_env = crate::envs::manifest_name(&run.env).to_string();
+    // strict: a version-skewed controller's slice must fail loudly
+    let replay_mode = ReplayMode::parse(&run.replay_mode)?;
+    let role_stop = Arc::new(AtomicBool::new(false));
+    let mut statuses = Vec::new();
+    let mut handles = Vec::new();
+    let mut addrs = Vec::new();
+    for rank in 0..n_ranks {
+        let status = Arc::new(LearnerStatus::default());
+        statuses.push(status.clone());
+        let (tx, rx) = std::sync::mpsc::channel::<String>();
+        let lcfg = LearnerConfig {
+            env: manifest_env.clone(),
+            agent: asn.agent,
+            rank,
+            algo: run.algo.clone(),
+            replay_mode,
+            publish_every: run.publish_every,
+            period_steps: run.period_steps,
+            replay_cap: 8192,
+            seed: run.seed + asn.agent as u64 * 100 + rank as u64,
+            data_bind: format!("{}:0", net.bind_host),
+        };
+        let engine = engine.clone();
+        let pool_addrs = asn.pool_addrs.clone();
+        let league_addr = asn.league_addr.clone();
+        let group = group.clone();
+        let stop = role_stop.clone();
+        let total = run.total_steps;
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("learner-{}-{rank}", asn.agent))
+                .spawn(move || -> Result<()> {
+                    learner_thread(
+                        lcfg,
+                        engine,
+                        pool_addrs,
+                        league_addr,
+                        Some(group),
+                        status,
+                        stop,
+                        total,
+                        tx,
+                    )
+                })?,
+        );
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(addr) => addrs.push(net.advertised(&addr)),
+            Err(_) => {
+                // surface the thread's real startup error (league
+                // unreachable, bind failure, ...), not just the symptom.
+                // Poison the group so ranks blocked in reduce wake up
+                // instead of deadlocking this join.
+                role_stop.store(true, Ordering::Relaxed);
+                group.poison();
+                let mut cause = None;
+                for h in handles.drain(..) {
+                    if let Ok(Err(e)) = h.join() {
+                        cause.get_or_insert(e);
+                    }
+                }
+                return Err(match cause {
+                    Some(e) => {
+                        e.context(format!("learner rank {rank} died at startup"))
+                    }
+                    None => anyhow::anyhow!(
+                        "learner rank {rank} never reported its data port"
+                    ),
+                });
+            }
+        }
+    }
+    if let Err(e) = report_ready(ctrl, asn.worker_id, addrs) {
+        // never leave the group training unsupervised: a re-register
+        // would spawn a second group against the same league
+        role_stop.store(true, Ordering::Relaxed);
+        group.poison();
+        for h in handles {
+            h.join().ok();
+        }
+        return Err(e);
+    }
+
+    // supervise: mirror progress into the heartbeat, catch dead threads
+    let mut early_exit = false;
+    loop {
+        std::thread::sleep(Duration::from_millis(50));
+        let steps: u64 = statuses.iter().map(|s| s.steps.load(Ordering::Relaxed)).sum();
+        let done = statuses.iter().all(|s| s.done.load(Ordering::Relaxed));
+        hb.steps.store(steps, Ordering::Relaxed);
+        hb.done.store(done, Ordering::Relaxed);
+        if hb.should_stop(proc_stop) {
+            break;
+        }
+        // a learner thread that died before finishing = role failure
+        early_exit = handles
+            .iter()
+            .zip(&statuses)
+            .any(|(h, s)| h.is_finished() && !s.done.load(Ordering::Relaxed));
+        if early_exit {
+            break;
+        }
+    }
+    role_stop.store(true, Ordering::Relaxed);
+    // a rank blocked in reduce (peer already exited, or mid-run death —
+    // the early_exit case) would hang this join forever without poison
+    group.poison();
+    let mut first_err = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err =
+                    first_err.or_else(|| Some(anyhow::anyhow!("learner panicked")))
+            }
+        }
+    }
+    match first_err {
+        Some(e) if early_exit => Err(e.context("learner thread died mid-run")),
+        _ => Ok(()),
+    }
+}
+
+/// An actor worker drives one Actor.  Unlike the thread supervisor it
+/// does NOT restart in place on failure: it returns the error so the
+/// worker loop re-registers and restarts with fresh endpoints (its
+/// learner may have moved).
+fn run_actor_role(
+    asn: &WorkerAssignment,
+    engine: Arc<Engine>,
+    proc_stop: &AtomicBool,
+    hb: &Arc<HbShared>,
+) -> Result<()> {
+    let run = &asn.run;
+    // slot-derived identity mirrors the thread-mode spawn order, so a
+    // procs run samples the same actor RNG streams as a thread run
+    let acfg = ActorConfig {
+        env: run.env.clone(),
+        actor_id: format!("{}/a{}", asn.agent, asn.slot),
+        seed: run.seed * 1000 + asn.slot as u64,
+        gamma: run.gamma,
+        refresh_every: run.refresh_every,
+        train_t: 0,
+    };
+    let role_stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let asn = asn.clone();
+        let engine = engine.clone();
+        let stop = role_stop.clone();
+        let envs_per_actor = (run.envs_per_actor as usize).max(1);
+        std::thread::Builder::new()
+            .name(format!("actor-{}", acfg.actor_id))
+            .spawn(move || -> Result<()> {
+                let inf = (!asn.inf_addr.is_empty()).then_some(asn.inf_addr.as_str());
+                run_actor(
+                    acfg,
+                    envs_per_actor,
+                    inf,
+                    &engine,
+                    &asn.league_addr,
+                    &asn.pool_addrs,
+                    &asn.data_addr,
+                    &stop,
+                )
+            })
+            .expect("spawn actor")
+    };
+    while !hb.should_stop(proc_stop) && !handle.is_finished() {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let stopping = hb.should_stop(proc_stop);
+    role_stop.store(true, Ordering::Relaxed);
+    match handle.join() {
+        Ok(Ok(())) => Ok(()),
+        // failures during shutdown are expected (peers wind down too)
+        Ok(Err(_)) if stopping => Ok(()),
+        Ok(Err(e)) => Err(e),
+        Err(_) if stopping => Ok(()),
+        Err(_) => bail!("actor panicked"),
+    }
+}
+
+fn run_inf_role(
+    asn: &WorkerAssignment,
+    engine: Arc<Engine>,
+    net: &WorkerNet,
+    proc_stop: &AtomicBool,
+    hb: &Arc<HbShared>,
+    ctrl: &ReqClient,
+) -> Result<()> {
+    let run = &asn.run;
+    let manifest_env = crate::envs::manifest_name(&run.env).to_string();
+    let m = engine.manifest.env(&manifest_env)?;
+    let mut inf = InfServer::start(
+        &format!("{}:0", net.bind_host),
+        InfServerConfig {
+            env: manifest_env.clone(),
+            batch: m.infer_b,
+            max_wait: Duration::from_micros(run.infer_max_wait_us),
+            refresh: Duration::from_millis(run.infer_refresh_ms),
+        },
+        engine.clone(),
+        &asn.pool_addrs,
+    )?;
+    report_ready(ctrl, asn.worker_id, vec![net.advertised(&inf.addr)])?;
+    while !hb.should_stop(proc_stop) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    inf.shutdown();
+    Ok(())
+}

@@ -87,6 +87,51 @@ pub struct ModelBlob {
     pub frozen: bool,
 }
 
+/// The slice of the RunConfig a role worker needs — handed out by the
+/// controller with every assignment so worker processes never read the
+/// spec file themselves (one source of truth per run).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSlice {
+    pub env: String,
+    pub algo: String,
+    pub replay_mode: String,
+    pub seed: u64,
+    pub gamma: f32,
+    pub total_steps: u64,
+    pub period_steps: u64,
+    pub publish_every: u64,
+    pub learners_per_agent: u32,
+    pub envs_per_actor: u32,
+    pub refresh_every: u32,
+    pub infer_max_wait_us: u64,
+    pub infer_refresh_ms: u64,
+    /// cadence the worker must heartbeat at (the controller's timeout is
+    /// a multiple of this)
+    pub heartbeat_ms: u64,
+}
+
+/// A role slot granted to a worker process: which role instance it is,
+/// plus every address it needs to do the job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerAssignment {
+    pub worker_id: u64,
+    /// "learner" | "actor" | "inf-server"
+    pub role: String,
+    /// role-local slot index (stable across worker restarts)
+    pub slot: u32,
+    /// learning agent this slot serves (learner/actor roles)
+    pub agent: u32,
+    /// actor: global learner index whose data port it feeds
+    pub li: u32,
+    pub league_addr: String,
+    pub pool_addrs: Vec<String>,
+    /// actor: trajectory PULL endpoint of its learner ("" otherwise)
+    pub data_addr: String,
+    /// actor: InfServer endpoint; "" = local PJRT inference
+    pub inf_addr: String,
+    pub run: RunSlice,
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     // -- generic ---------------------------------------------------------
@@ -121,6 +166,33 @@ pub enum Msg {
     /// Observability probe: resident memory + spill state of a replica.
     PoolStats,
     PoolStatsReply { resident_bytes: u64, models: u32, spilled: u32 },
+    // -- Controller service (multi-process deployment) -----------------------
+    /// A worker process announces itself.  `slot_hint` is the slot it is
+    /// already running (controller-restart re-adopt) or last held
+    /// (respawn after a crash); -1 = no preference.
+    Register { role: String, slot_hint: i64 },
+    Assign(WorkerAssignment),
+    /// No assignable slot right now (e.g. an actor registering before
+    /// its learner's data port is known) — try again in `backoff_ms`.
+    Retry { backoff_ms: u32, reason: String },
+    Heartbeat { worker_id: u64, steps: u64, done: bool },
+    /// `stop = true`: wind the role down and exit cleanly.
+    HeartbeatAck { stop: bool },
+    /// Endpoints the worker serves (learner: data ports in rank order;
+    /// inf-server: its serving address).  Gates dependent assignments.
+    WorkerReady { worker_id: u64, addrs: Vec<String> },
+    /// Clean goodbye: frees the slot without waiting out a heartbeat
+    /// timeout (and without counting as a loss).
+    Deregister { worker_id: u64 },
+    DeployStats,
+    DeployStatsReply {
+        workers: u32,
+        lost: u32,
+        reassigned: u32,
+        learners_done: u32,
+        learner_steps: u64,
+        draining: bool,
+    },
     // -- Learner data port ---------------------------------------------------
     Traj(TrajSegment),
     // -- InfServer -------------------------------------------------------
@@ -230,6 +302,84 @@ impl Wire for ModelBlob {
     }
 }
 
+fn put_strs(buf: &mut Vec<u8>, strs: &[String]) {
+    buf.put_u32(strs.len() as u32);
+    for s in strs {
+        buf.put_str(s);
+    }
+}
+
+fn get_strs(cur: &mut Cursor) -> Result<Vec<String>> {
+    let n = cur.u32()? as usize;
+    (0..n).map(|_| cur.str()).collect()
+}
+
+impl Wire for RunSlice {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_str(&self.env);
+        buf.put_str(&self.algo);
+        buf.put_str(&self.replay_mode);
+        buf.put_u64(self.seed);
+        buf.put_f32(self.gamma);
+        buf.put_u64(self.total_steps);
+        buf.put_u64(self.period_steps);
+        buf.put_u64(self.publish_every);
+        buf.put_u32(self.learners_per_agent);
+        buf.put_u32(self.envs_per_actor);
+        buf.put_u32(self.refresh_every);
+        buf.put_u64(self.infer_max_wait_us);
+        buf.put_u64(self.infer_refresh_ms);
+        buf.put_u64(self.heartbeat_ms);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(RunSlice {
+            env: cur.str()?,
+            algo: cur.str()?,
+            replay_mode: cur.str()?,
+            seed: cur.u64()?,
+            gamma: cur.f32()?,
+            total_steps: cur.u64()?,
+            period_steps: cur.u64()?,
+            publish_every: cur.u64()?,
+            learners_per_agent: cur.u32()?,
+            envs_per_actor: cur.u32()?,
+            refresh_every: cur.u32()?,
+            infer_max_wait_us: cur.u64()?,
+            infer_refresh_ms: cur.u64()?,
+            heartbeat_ms: cur.u64()?,
+        })
+    }
+}
+
+impl Wire for WorkerAssignment {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u64(self.worker_id);
+        buf.put_str(&self.role);
+        buf.put_u32(self.slot);
+        buf.put_u32(self.agent);
+        buf.put_u32(self.li);
+        buf.put_str(&self.league_addr);
+        put_strs(buf, &self.pool_addrs);
+        buf.put_str(&self.data_addr);
+        buf.put_str(&self.inf_addr);
+        self.run.encode(buf);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(WorkerAssignment {
+            worker_id: cur.u64()?,
+            role: cur.str()?,
+            slot: cur.u32()?,
+            agent: cur.u32()?,
+            li: cur.u32()?,
+            league_addr: cur.str()?,
+            pool_addrs: get_strs(cur)?,
+            data_addr: cur.str()?,
+            inf_addr: cur.str()?,
+            run: RunSlice::decode(cur)?,
+        })
+    }
+}
+
 impl Wire for Msg {
     fn encode(&self, buf: &mut Vec<u8>) {
         match self {
@@ -297,6 +447,56 @@ impl Wire for Msg {
                 buf.put_u32(*models);
                 buf.put_u32(*spilled);
             }
+            Msg::Register { role, slot_hint } => {
+                buf.put_u8(31);
+                buf.put_str(role);
+                buf.put_u64(*slot_hint as u64);
+            }
+            Msg::Assign(a) => {
+                buf.put_u8(32);
+                a.encode(buf);
+            }
+            Msg::Retry { backoff_ms, reason } => {
+                buf.put_u8(33);
+                buf.put_u32(*backoff_ms);
+                buf.put_str(reason);
+            }
+            Msg::Heartbeat { worker_id, steps, done } => {
+                buf.put_u8(34);
+                buf.put_u64(*worker_id);
+                buf.put_u64(*steps);
+                buf.put_u8(*done as u8);
+            }
+            Msg::HeartbeatAck { stop } => {
+                buf.put_u8(35);
+                buf.put_u8(*stop as u8);
+            }
+            Msg::WorkerReady { worker_id, addrs } => {
+                buf.put_u8(36);
+                buf.put_u64(*worker_id);
+                put_strs(buf, addrs);
+            }
+            Msg::Deregister { worker_id } => {
+                buf.put_u8(37);
+                buf.put_u64(*worker_id);
+            }
+            Msg::DeployStats => buf.put_u8(38),
+            Msg::DeployStatsReply {
+                workers,
+                lost,
+                reassigned,
+                learners_done,
+                learner_steps,
+                draining,
+            } => {
+                buf.put_u8(39);
+                buf.put_u32(*workers);
+                buf.put_u32(*lost);
+                buf.put_u32(*reassigned);
+                buf.put_u32(*learners_done);
+                buf.put_u64(*learner_steps);
+                buf.put_u8(*draining as u8);
+            }
             Msg::Traj(t) => {
                 buf.put_u8(30);
                 t.encode(buf);
@@ -349,6 +549,26 @@ impl Wire for Msg {
                 spilled: cur.u32()?,
             },
             30 => Msg::Traj(TrajSegment::decode(cur)?),
+            31 => Msg::Register { role: cur.str()?, slot_hint: cur.u64()? as i64 },
+            32 => Msg::Assign(WorkerAssignment::decode(cur)?),
+            33 => Msg::Retry { backoff_ms: cur.u32()?, reason: cur.str()? },
+            34 => Msg::Heartbeat {
+                worker_id: cur.u64()?,
+                steps: cur.u64()?,
+                done: cur.u8()? != 0,
+            },
+            35 => Msg::HeartbeatAck { stop: cur.u8()? != 0 },
+            36 => Msg::WorkerReady { worker_id: cur.u64()?, addrs: get_strs(cur)? },
+            37 => Msg::Deregister { worker_id: cur.u64()? },
+            38 => Msg::DeployStats,
+            39 => Msg::DeployStatsReply {
+                workers: cur.u32()?,
+                lost: cur.u32()?,
+                reassigned: cur.u32()?,
+                learners_done: cur.u32()?,
+                learner_steps: cur.u64()?,
+                draining: cur.u8()? != 0,
+            },
             40 => Msg::InferReq {
                 key: ModelKey::decode(cur)?,
                 obs: cur.f32s()?,
@@ -430,6 +650,52 @@ mod tests {
                 resident_bytes: 1 << 30,
                 models: 120,
                 spilled: 40,
+            },
+            Msg::Register { role: "actor".into(), slot_hint: -1 },
+            Msg::Register { role: "learner".into(), slot_hint: 3 },
+            Msg::Assign(WorkerAssignment {
+                worker_id: 12,
+                role: "actor".into(),
+                slot: 5,
+                agent: 1,
+                li: 2,
+                league_addr: "127.0.0.1:9003".into(),
+                pool_addrs: vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()],
+                data_addr: "127.0.0.1:41000".into(),
+                inf_addr: String::new(),
+                run: RunSlice {
+                    env: "rps".into(),
+                    algo: "ppo".into(),
+                    replay_mode: "blocking".into(),
+                    seed: 7,
+                    gamma: 0.99,
+                    total_steps: 100,
+                    period_steps: 25,
+                    publish_every: 4,
+                    learners_per_agent: 2,
+                    envs_per_actor: 4,
+                    refresh_every: 1,
+                    infer_max_wait_us: 2_000,
+                    infer_refresh_ms: 50,
+                    heartbeat_ms: 1_000,
+                },
+            }),
+            Msg::Retry { backoff_ms: 500, reason: "no free slot".into() },
+            Msg::Heartbeat { worker_id: 12, steps: 42, done: false },
+            Msg::HeartbeatAck { stop: true },
+            Msg::WorkerReady {
+                worker_id: 12,
+                addrs: vec!["127.0.0.1:41000".into()],
+            },
+            Msg::Deregister { worker_id: 12 },
+            Msg::DeployStats,
+            Msg::DeployStatsReply {
+                workers: 8,
+                lost: 1,
+                reassigned: 1,
+                learners_done: 2,
+                learner_steps: 640,
+                draining: false,
             },
             Msg::Traj(traj),
             Msg::InferReq {

@@ -1,7 +1,12 @@
 //! Minimal command-line parser (no clap in the offline crate set).
 //!
 //! Supports `program <subcommand> --flag value --bool-flag pos1 pos2`.
+//!
+//! Numeric accessors are fallible: a malformed value (`--total-steps
+//! 10k`) aborts with an error naming the flag and the value instead of
+//! silently training with the default.
 
+use anyhow::Result;
 use std::collections::BTreeMap;
 
 /// Top-level `--help` text, printed by the binary when invoked with no
@@ -25,7 +30,21 @@ subcommands:
                              rollouts: each tick gathers every slot's
                              observations into one multi-row forward
                              pass per model; default 1 = classic actor)
-    --game-mgr <name>        selfplay|uniform|pfsp|sp_pfsp|elo_match
+    --game-mgr <name>        selfplay|uniform|pfsp|pfsp_var|sp_pfsp|elo_match|agent_exploiter
+    --mode thread|procs      thread (default): every role as a thread in
+                             this process.  procs: spawn one supervised
+                             OS process per role worker; a killed worker
+                             is detected by heartbeat timeout, respawned,
+                             and its slot reassigned
+    --controller-bind h:p    controller bind address for --mode procs
+                             (default 127.0.0.1:0; use a routable host
+                             for multi-machine runs)
+    --advertise-host <host>  host peers use to reach services bound
+                             here — required in practice when binding
+                             0.0.0.0 ('0.0.0.0:port' is unroutable)
+    --heartbeat-ms N         worker heartbeat cadence (default 1000)
+    --heartbeat-timeout-ms N declare a worker dead after this silence
+                             (default 5000, must be >= 2x heartbeat)
     --checkpoint-dir <dir>   write durable league snapshots here
     --checkpoint-every S     seconds between snapshots (default 30)
     --resume <dir>           restart from the newest snapshot in <dir>
@@ -37,12 +56,26 @@ subcommands:
                              microseconds (default 2000)
     --infer-refresh-ms M     InfServer in-training param cache TTL in
                              milliseconds (default 50)
+  controller   league control plane for a hand-launched multi-process
+               deployment: owns LeagueMgr/ModelPool/CheckpointMgr,
+               registers workers, reassigns slots on heartbeat loss
+    --bind host:port (default 127.0.0.1:9100) + the `run` flags above
+  worker       run exactly one league role, directed by a controller
+    --role learner|actor|inf-server
+    --controller host:port   controller to register with
+    --artifacts <dir>        AOT artifact directory (default: artifacts)
+    --bind-host <host>       host to bind role endpoints on
+                             (default 127.0.0.1)
+    --advertise-host <host>  host peers use for this worker's endpoints
+                             (learner data ports, inf-server address)
   info         print the artifact manifest summary (--artifacts <dir>)
   eval-doom    FRAG matches, Tables 1-2
     --checkpoint <f32 file> --setting 1|2a|2b|2c --games N
   eval-rps     RPS pool exploitability demo (--artifacts <dir>)
-  model-pool   standalone ModelPool replica (--bind host:port)
-  league-mgr   standalone LeagueMgr
+  model-pool   standalone ModelPool replica
+    --bind host:port --spill-dir <dir> --mem-budget-mb N
+    (SIGINT/SIGTERM or a wire Shutdown message stops it cleanly)
+  league-mgr   standalone LeagueMgr (same shutdown paths)
     --bind host:port --n-agents N --n-opponents N --game-mgr <name> --seed S
 ";
 
@@ -86,14 +119,29 @@ impl Args {
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+
+    /// Parse `--name` as a `T`, falling back to `default` only when the
+    /// flag is ABSENT.  A present-but-malformed value is an error — a
+    /// typo like `--total-steps 10k` must abort, not silently train with
+    /// the default.
+    fn parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "invalid value for --{name}: '{v}' (expected a number)"
+                )
+            }),
+        }
     }
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        self.parsed(name, default)
     }
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        self.parsed(name, default)
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        self.parsed(name, default)
     }
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
@@ -113,22 +161,72 @@ mod tests {
         let a = parse("actor --env pommerman --replicas 4 --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("actor"));
         assert_eq!(a.get("env"), Some("pommerman"));
-        assert_eq!(a.usize_or("replicas", 1), 4);
+        assert_eq!(a.usize_or("replicas", 1).unwrap(), 4);
         assert!(a.bool("verbose"));
     }
 
     #[test]
     fn equals_form_and_positional() {
         let a = parse("eval --games=10 file1 file2");
-        assert_eq!(a.usize_or("games", 0), 10);
+        assert_eq!(a.usize_or("games", 0).unwrap(), 10);
         assert_eq!(a.positional, vec!["file1", "file2"]);
     }
 
     #[test]
     fn defaults() {
         let a = parse("run");
-        assert_eq!(a.f64_or("lr", 3e-4), 3e-4);
+        assert_eq!(a.f64_or("lr", 3e-4).unwrap(), 3e-4);
         assert_eq!(a.str_or("mode", "thread"), "thread");
         assert!(!a.bool("missing"));
+    }
+
+    /// A present-but-malformed numeric flag must error (naming the flag
+    /// and the offending value), never fall back to the default —
+    /// `--total-steps 10k` used to silently train 100 steps.
+    #[test]
+    fn malformed_numeric_flags_error() {
+        let a = parse("run --total-steps 10k --lr 3e-4x --actors -2");
+        let err = a.u64_or("total-steps", 100).unwrap_err().to_string();
+        assert!(err.contains("--total-steps"), "flag name missing: {err}");
+        assert!(err.contains("10k"), "offending value missing: {err}");
+        assert!(a.f64_or("lr", 3e-4).is_err());
+        // negative counts don't parse as usize either
+        assert!(a.usize_or("actors", 2).is_err());
+        // absent flags still fall back cleanly
+        assert_eq!(a.u64_or("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn negative_and_float_forms_parse() {
+        let a = parse("run --offset -3.5 --steps 0");
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+        assert_eq!(a.u64_or("steps", 9).unwrap(), 0);
+    }
+
+    /// USAGE's `--game-mgr` list and the league factory must accept the
+    /// exact same set of names (both directions).
+    #[test]
+    fn usage_game_mgr_list_matches_factory() {
+        use crate::league::game_mgr::{make_game_mgr, GAME_MGR_NAMES};
+        let listed: Vec<&str> = USAGE
+            .lines()
+            .find(|l| l.trim_start().starts_with("--game-mgr"))
+            .and_then(|l| l.split_whitespace().last())
+            .expect("USAGE must document --game-mgr")
+            .split('|')
+            .collect();
+        for name in &listed {
+            assert!(
+                make_game_mgr(name).is_ok(),
+                "USAGE lists '{name}' but the factory rejects it"
+            );
+        }
+        for name in GAME_MGR_NAMES {
+            assert!(
+                listed.contains(name),
+                "factory accepts '{name}' but USAGE does not list it"
+            );
+        }
+        assert_eq!(listed.len(), GAME_MGR_NAMES.len(), "duplicate names");
     }
 }

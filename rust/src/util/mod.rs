@@ -7,3 +7,4 @@ pub mod json;
 pub mod metrics;
 pub mod proptest;
 pub mod rng;
+pub mod signal;

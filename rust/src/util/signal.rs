@@ -1,0 +1,60 @@
+//! SIGINT/SIGTERM → stop-flag bridge (no signal-handling crates in the
+//! offline set; the libc `signal` symbol is declared directly since
+//! libc is always linked on unix).  The handler only performs an atomic
+//! store, which is async-signal-safe.  Standalone services and the
+//! procs-mode supervisor poll the flag to drain sockets and exit
+//! cleanly instead of being killed mid-frame.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+static STOP: AtomicBool = AtomicBool::new(false);
+static INSTALL: Once = Once::new();
+
+#[cfg(unix)]
+fn install_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        let _ = signal(SIGINT, on_signal);
+        let _ = signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_handlers() {}
+
+/// Install the handlers (idempotent) and return the process-wide stop
+/// flag.  SIGINT or SIGTERM flips it to `true`.
+pub fn install() -> &'static AtomicBool {
+    INSTALL.call_once(install_handlers);
+    &STOP
+}
+
+/// The flag without installing handlers (tests, embedding).
+pub fn stop_flag() -> &'static AtomicBool {
+    &STOP
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `install` is idempotent and the flag starts clear.  (Actually
+    /// raising a signal would race other tests in this process, so the
+    /// handler path is exercised by the standalone-service integration
+    /// test instead.)
+    #[test]
+    fn install_is_idempotent() {
+        let a = install();
+        let b = install();
+        assert!(std::ptr::eq(a, b));
+        assert!(std::ptr::eq(a, stop_flag()));
+    }
+}

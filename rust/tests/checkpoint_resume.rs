@@ -225,9 +225,9 @@ fn deployment_kill_and_resume() {
     dep.shutdown(); // snapshotter writes the final snapshot here
 
     let stats = dep.league_stats();
-    let pool_keys = dep.league.pool();
+    let pool_keys = dep.league().pool();
     let elos: Vec<u64> =
-        pool_keys.iter().map(|&k| dep.league.elo(k).to_bits()).collect();
+        pool_keys.iter().map(|&k| dep.league().elo(k).to_bits()).collect();
     drop(dep);
 
     let mut cfg2 = cfg.clone();
@@ -242,13 +242,13 @@ fn deployment_kill_and_resume() {
     assert_eq!(rstats.episodes, stats.episodes, "episode counter drift");
     assert_eq!(rstats.frames, stats.frames, "frame counter drift");
     assert_eq!(rstats.current, stats.current, "learner keys drift");
-    assert_eq!(dep2.league.pool(), pool_keys);
+    assert_eq!(dep2.league().pool(), pool_keys);
     for (i, &k) in pool_keys.iter().enumerate() {
-        assert_eq!(dep2.league.elo(k).to_bits(), elos[i], "Elo drift at {k}");
+        assert_eq!(dep2.league().elo(k).to_bits(), elos[i], "Elo drift at {k}");
     }
     // every frozen model must be served from the resumed pool (spilled
     // blobs fault back in; none may be NotFound)
-    let pc = ModelPoolClient::connect(&[dep2.pool_addrs[0].clone()]);
+    let pc = ModelPoolClient::connect(&[dep2.pool_addrs()[0].clone()]);
     let m = engine.manifest.env("rps").unwrap();
     for &k in &pool_keys {
         let blob = pc

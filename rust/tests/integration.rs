@@ -65,6 +65,7 @@ fn full_stack_rps_league() {
             period_steps: 4,
             replay_cap: 8192,
             seed: 1,
+            ..Default::default()
         },
         engine.clone(),
         &pool_addrs,
@@ -149,6 +150,7 @@ fn full_stack_pommerman_team_smoke() {
             period_steps: 8,
             replay_cap: 1024,
             seed: 2,
+            ..Default::default()
         },
         engine.clone(),
         &pool_addrs,
@@ -209,6 +211,7 @@ fn full_stack_infserver_actor() {
             period_steps: 100,
             replay_cap: 8192,
             seed: 3,
+            ..Default::default()
         },
         engine.clone(),
         &pool_addrs,
@@ -300,6 +303,7 @@ fn multi_learner_ranks_stay_identical() {
                     period_steps: 3,
                     replay_cap: 8192,
                     seed: 4 + rank as u64,
+                    ..Default::default()
                 },
                 engine,
                 &pool_addrs,

@@ -1,0 +1,313 @@
+//! Multi-process deployment integration: real worker subprocesses (the
+//! `tleague worker` subcommand) driven by an embedded controller.
+//!
+//! The league tests need `make artifacts` (workers run PJRT); they skip
+//! otherwise.  The CLI/standalone-service tests run everywhere.
+
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tleague::config::RunConfig;
+use tleague::model_pool::ModelPoolClient;
+use tleague::orchestrator::controller::Controller;
+use tleague::orchestrator::Deployment;
+use tleague::proto::{ModelKey, Msg};
+use tleague::runtime::Engine;
+use tleague::transport::ReqClient;
+
+const BIN: &str = env!("CARGO_BIN_EXE_tleague");
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(dir)
+}
+
+fn spawn_worker(role: &str, ctrl_addr: &str, artifacts: &Path) -> Child {
+    Command::new(BIN)
+        .args(["worker", "--role", role, "--controller", ctrl_addr])
+        .args(["--artifacts", artifacts.to_str().unwrap()])
+        .spawn()
+        .expect("spawn worker")
+}
+
+/// Kills any still-running children on drop so a failing assert never
+/// leaks orphan processes into the test host.
+struct Reap(Vec<Child>);
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            c.kill().ok();
+            c.wait().ok();
+        }
+    }
+}
+
+impl Reap {
+    /// Wait for every child to exit on its own (clean-stop path) and
+    /// assert success.
+    fn expect_clean_exit(&mut self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        for (i, c) in self.0.iter_mut().enumerate() {
+            loop {
+                match c.try_wait().expect("try_wait") {
+                    Some(status) => {
+                        assert!(status.success(), "worker {i} exited {status}");
+                        break;
+                    }
+                    None if Instant::now() > deadline => {
+                        panic!("worker {i} did not exit after stop")
+                    }
+                    None => std::thread::sleep(Duration::from_millis(50)),
+                }
+            }
+        }
+        self.0.clear();
+    }
+}
+
+fn procs_cfg(total_steps: u64, actors_per_learner: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.env = "rps".into();
+    cfg.mode = "procs".into();
+    cfg.seed = 7;
+    cfg.total_steps = total_steps;
+    cfg.period_steps = 2;
+    cfg.actors_per_learner = actors_per_learner;
+    cfg.heartbeat_ms = 100;
+    cfg.heartbeat_timeout_ms = 1_000;
+    cfg
+}
+
+fn controller(cfg: RunConfig, engine: &Engine) -> Controller {
+    Controller::start(
+        cfg,
+        engine.manifest.hp_layout.clone(),
+        engine.manifest.default_hp(),
+    )
+    .unwrap()
+}
+
+/// A small rps league runs end-to-end with every role in its own OS
+/// process: learner + 2 actors register, train, freeze models, drain.
+#[test]
+fn procs_league_end_to_end() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let mut ctrl = controller(procs_cfg(4, 2), &engine);
+    let mut kids = Reap(vec![
+        spawn_worker("learner", &ctrl.addr, &dir),
+        spawn_worker("actor", &ctrl.addr, &dir),
+        spawn_worker("actor", &ctrl.addr, &dir),
+    ]);
+    assert!(ctrl.wait(Duration::from_secs(180)), "learners never finished");
+    let ds = ctrl.deploy_stats();
+    assert_eq!(ds.learner_steps, 4);
+    let ls = ctrl.league_stats();
+    assert!(ls.episodes > 0, "no episodes reported");
+    // seed + 2 period freezes
+    assert!(ls.pool_size >= 3, "pool {}", ls.pool_size);
+    ctrl.shutdown();
+    kids.expect_clean_exit(Duration::from_secs(30));
+}
+
+/// Kill an actor worker mid-run: the controller must detect the lost
+/// heartbeat, free the slot, hand it to a replacement worker, and the
+/// run must still finish.
+#[test]
+fn killed_actor_worker_is_detected_and_slot_reassigned() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let mut ctrl = controller(procs_cfg(12, 1), &engine);
+    let mut kids = Reap(vec![
+        spawn_worker("learner", &ctrl.addr, &dir),
+        spawn_worker("actor", &ctrl.addr, &dir),
+    ]);
+
+    // let the league make some progress first
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while ctrl.deploy_stats().learner_steps < 2 {
+        assert!(Instant::now() < deadline, "league never started");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // SIGKILL the actor: no goodbye, only silence
+    kids.0[1].kill().unwrap();
+    kids.0[1].wait().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while ctrl.deploy_stats().lost < 1 {
+        assert!(Instant::now() < deadline, "lost heartbeat never detected");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // a replacement registers and inherits the freed slot
+    kids.0.push(spawn_worker("actor", &ctrl.addr, &dir));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while ctrl.deploy_stats().reassigned < 1 {
+        assert!(Instant::now() < deadline, "slot never reassigned");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    assert!(ctrl.wait(Duration::from_secs(180)), "run did not recover");
+    assert_eq!(ctrl.deploy_stats().learner_steps, 12);
+    ctrl.shutdown();
+    // kids.0[1] is the killed actor (already waited); remove it so the
+    // clean-exit check covers the survivors only
+    let killed = kids.0.remove(1);
+    drop(killed);
+    kids.expect_clean_exit(Duration::from_secs(30));
+}
+
+/// Same seed, same spec → thread mode and procs mode produce the same
+/// pool: identical frozen league keys and identical ModelPool contents
+/// (model count per agent).  Equivalence smoke for the two launch paths.
+#[test]
+fn thread_and_procs_modes_agree_on_pool_contents() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+
+    // thread mode
+    let mut tcfg = procs_cfg(4, 2);
+    tcfg.mode = "thread".into();
+    let mut dep = Deployment::start(tcfg, engine.clone()).unwrap();
+    assert!(dep.wait(Duration::from_secs(180)), "thread run stuck");
+    let thread_pool: Vec<ModelKey> = dep.league().pool();
+    let tclient = ModelPoolClient::connect(dep.pool_addrs());
+    let (_, thread_models, _) = tclient.stats().unwrap();
+    dep.shutdown();
+    drop(dep);
+
+    // procs mode, same seed/spec
+    let mut ctrl = controller(procs_cfg(4, 2), &engine);
+    let mut kids = Reap(vec![
+        spawn_worker("learner", &ctrl.addr, &dir),
+        spawn_worker("actor", &ctrl.addr, &dir),
+        spawn_worker("actor", &ctrl.addr, &dir),
+    ]);
+    assert!(ctrl.wait(Duration::from_secs(180)), "procs run stuck");
+    let procs_pool: Vec<ModelKey> = ctrl.league().pool();
+    let pclient = ModelPoolClient::connect(ctrl.pool_addrs());
+    let (_, procs_models, _) = pclient.stats().unwrap();
+    ctrl.shutdown();
+    kids.expect_clean_exit(Duration::from_secs(30));
+
+    assert_eq!(thread_pool, procs_pool, "frozen league pools differ");
+    assert_eq!(thread_models, procs_models, "ModelPool contents differ");
+}
+
+/// The one-command path: `tleague run --mode procs` embeds the
+/// controller, spawns + supervises its own worker processes, and
+/// drains everything at the end.
+#[test]
+fn run_subcommand_mode_procs_completes() {
+    let Some(dir) = artifacts() else { return };
+    let mut child = Command::new(BIN)
+        .args(["run", "--mode", "procs", "--env", "rps"])
+        .args(["--total-steps", "4", "--period-steps", "2", "--actors", "1"])
+        .args(["--heartbeat-ms", "100", "--heartbeat-timeout-ms", "1000"])
+        .args(["--artifacts", dir.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("run --mode procs");
+    // the run prints a handful of lines, far below the pipe buffer, so
+    // polling with a deadline (instead of output()) cannot deadlock and
+    // a regression cannot hang the suite
+    let deadline = Instant::now() + Duration::from_secs(240);
+    let status = loop {
+        if let Some(s) = child.try_wait().expect("try_wait") {
+            break s;
+        }
+        if Instant::now() > deadline {
+            child.kill().ok();
+            child.wait().ok();
+            panic!("run --mode procs timed out");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    let mut stdout = String::new();
+    use std::io::Read;
+    child
+        .stdout
+        .take()
+        .unwrap()
+        .read_to_string(&mut stdout)
+        .unwrap();
+    assert!(status.success(), "exit {status}\nstdout:\n{stdout}");
+    assert!(stdout.contains("done:"), "no completion line:\n{stdout}");
+}
+
+// ---- CLI / standalone services (no artifacts needed) --------------------
+
+/// The standalone model-pool must exit 0 on a wire Shutdown instead of
+/// sleeping forever, and must honor the spill knobs' validation.
+#[test]
+fn standalone_model_pool_shuts_down_cleanly() {
+    let mut child = Command::new(BIN)
+        .args(["model-pool", "--bind", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut line = String::new();
+    std::io::BufReader::new(child.stdout.take().unwrap())
+        .read_line(&mut line)
+        .unwrap();
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .unwrap_or_else(|| panic!("no addr in {line:?}"))
+        .to_string();
+
+    let c = ReqClient::connect(&addr);
+    assert_eq!(c.request(&Msg::Ping).unwrap(), Msg::Pong);
+    assert_eq!(c.request(&Msg::Shutdown).unwrap(), Msg::Ok);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let status = loop {
+        if let Some(s) = child.try_wait().unwrap() {
+            break s;
+        }
+        if Instant::now() > deadline {
+            child.kill().ok();
+            panic!("model-pool ignored Shutdown");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(status.success(), "exited {status}");
+}
+
+/// A spill budget with nowhere to spill is rejected at startup (parity
+/// with the orchestrated replicas' RunConfig rule).
+#[test]
+fn standalone_model_pool_rejects_budget_without_spill_dir() {
+    let out = Command::new(BIN)
+        .args(["model-pool", "--bind", "127.0.0.1:0", "--mem-budget-mb", "64"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--spill-dir"), "unhelpful error: {err}");
+}
+
+/// Malformed numeric flags abort the process with an error naming the
+/// flag and value — the old parser silently fell back to defaults.
+#[test]
+fn malformed_numeric_flags_abort() {
+    for (args, flag, value) in [
+        (vec!["run", "--total-steps", "10k"], "--total-steps", "10k"),
+        (vec!["model-pool", "--mem-budget-mb", "64MB"], "--mem-budget-mb", "64MB"),
+        (vec!["run", "--heartbeat-ms", "1s"], "--heartbeat-ms", "1s"),
+    ] {
+        let out = Command::new(BIN).args(&args).output().unwrap();
+        assert!(!out.status.success(), "{args:?} must fail");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(flag), "{args:?}: flag not named: {err}");
+        assert!(err.contains(value), "{args:?}: value not shown: {err}");
+    }
+}
