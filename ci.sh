@@ -37,4 +37,39 @@ cargo test -q --test procs_deploy
 # at 64 simulated workers (see BENCH_pr4.json).
 echo "== bench smoke: cargo bench --bench bench_main -- deploy"
 cargo bench --bench bench_main -- deploy --json BENCH_pr4.json
+
+# Telemetry-plane bench: snapshot codec, 64-slot merge, and the
+# heartbeat-with-stats round-trip (see BENCH_pr5.json).
+echo "== bench smoke: cargo bench --bench bench_main -- telemetry"
+cargo bench --bench bench_main -- telemetry --json BENCH_pr5.json
+
+# Telemetry stats smoke: a short thread-mode league writing a JSONL
+# trajectory; assert the file is non-empty valid JSONL with monotone
+# timestamps and that the summed actor frame deltas (= the last row's
+# run total) match the league frame counter within 1%.
+if [[ -f artifacts/manifest.json ]] && command -v python3 >/dev/null; then
+    echo "== stats smoke: thread-mode league with --stats-jsonl"
+    SJ="$(mktemp -t tleague-stats-XXXXXX.jsonl)"
+    ./target/release/tleague run --env rps --total-steps 30 --period-steps 10 \
+        --stats-every 1 --stats-jsonl "$SJ"
+    python3 - "$SJ" <<'EOF'
+import json, sys
+rows = [json.loads(l) for l in open(sys.argv[1]) if l.strip()]
+assert rows, "stats jsonl is empty"
+ts = [r["t"] for r in rows]
+assert ts == sorted(ts), "timestamps not monotone: %r" % ts
+last = rows[-1]
+frames = last["league"]["frames"]
+actor = last["roles"]["actor"]["totals"]["env_frames"]
+assert frames > 0, "league recorded no frames"
+slack = max(0.01 * max(actor, frames), 64)  # 1%, floored for tiny runs
+assert abs(actor - frames) <= slack, \
+    "actor env_frames total %d vs league frames %d (slack %d)" % (actor, frames, slack)
+print("stats smoke OK: %d rows, actor env_frames=%d, league frames=%d"
+      % (len(rows), actor, frames))
+EOF
+    rm -f "$SJ"
+else
+    echo "(artifacts or python3 missing; skipping stats smoke)"
+fi
 echo "CI OK"

@@ -15,6 +15,8 @@
 //!   batcher     — InfServer condvar batcher wake-to-dispatch latency
 //!   deploy      — procs-mode control plane: task-assignment round-trip,
 //!                 heartbeat overhead at 64 registered workers
+//!   telemetry   — stats snapshot encode/decode, 64-slot league merge,
+//!                 heartbeat-with-stats round-trip at 64 workers
 //!
 //! Filter with `cargo bench -- <substring> [<substring> ...]` (a bench
 //! runs if it matches ANY given substring); add `--json <path>` to also
@@ -737,6 +739,7 @@ fn main() {
                         worker_id: id,
                         steps: 1,
                         done: false,
+                        stats: None,
                     })
                     .unwrap()
                 {
@@ -747,6 +750,121 @@ fn main() {
             n
         });
         // clean drain so Controller::drop doesn't sit out its grace period
+        for id in ids {
+            c.request(&Msg::Deregister { worker_id: id }).unwrap();
+        }
+        c.request(&Msg::Deregister { worker_id: learner.worker_id })
+            .unwrap();
+    }
+
+    // ---- telemetry plane ---------------------------------------------------
+    // Snapshot wire cost, merge cost at 64 slots, and the heartbeat
+    // round-trip when every beat piggybacks a stats snapshot (the
+    // telemetry plane's steady-state overhead per worker).
+    println!("\n# telemetry plane (snapshot encode/merge, stats-carrying heartbeats)");
+    {
+        use tleague::config::RunConfig;
+        use tleague::orchestrator::controller::Controller;
+        use tleague::proto::RoleStats;
+        use tleague::telemetry::LeagueView;
+
+        let mk_snap = |slot: u32| RoleStats {
+            role: "actor".into(),
+            slot,
+            seq: 0, // 0 = no dedupe, every delivery merges
+            interval_ms: 1_000,
+            counters: vec![
+                ("env_frames".into(), 4_096),
+                ("episodes".into(), 17),
+                ("segments".into(), 64),
+                ("refreshes".into(), 2),
+            ],
+            gauges: vec![
+                ("staleness".into(), 0.5),
+                ("batch_fill".into(), 0.93),
+            ],
+        };
+        let snap = mk_snap(3);
+        let snap_bytes = snap.to_bytes();
+        b.bench("telemetry/snapshot_encode", "snap", || {
+            let mut n = 0;
+            for _ in 0..1_000 {
+                let buf = snap.to_bytes();
+                std::hint::black_box(&buf);
+                n += 1;
+            }
+            n
+        });
+        b.bench("telemetry/snapshot_decode", "snap", || {
+            let mut n = 0;
+            for _ in 0..1_000 {
+                let s = RoleStats::from_bytes(&snap_bytes).unwrap();
+                std::hint::black_box(&s);
+                n += 1;
+            }
+            n
+        });
+        let snaps: Vec<RoleStats> = (0..64).map(mk_snap).collect();
+        let view = LeagueView::default();
+        b.bench("telemetry/merge_64_slots", "snap", || {
+            for s in &snaps {
+                view.ingest(s);
+            }
+            let r = view.report();
+            std::hint::black_box(&r);
+            64
+        });
+
+        // heartbeat round-trip with a piggybacked snapshot, 64 workers
+        let mut cfg = RunConfig::default();
+        cfg.env = "rps".into();
+        cfg.mode = "procs".into();
+        cfg.actors_per_learner = 64;
+        cfg.heartbeat_ms = 1_000;
+        cfg.heartbeat_timeout_ms = 600_000; // no reaping mid-bench
+        let ctrl = Controller::start(cfg, vec!["lr".into()], vec![3e-4]).unwrap();
+        let c = ReqClient::connect(&ctrl.addr);
+        let register = |c: &ReqClient, role: &str| match c
+            .request(&Msg::Register { role: role.into(), slot_hint: -1 })
+            .unwrap()
+        {
+            Msg::Assign(a) => a,
+            other => panic!("expected Assign, got {other:?}"),
+        };
+        let learner = register(&c, "learner");
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40100".into()],
+        })
+        .unwrap();
+        let ids: Vec<u64> =
+            (0..64).map(|_| register(&c, "actor").worker_id).collect();
+        let c2 = ReqClient::connect(&ctrl.addr);
+        let ids2 = ids.clone();
+        b.bench("telemetry/heartbeat_with_stats_64_workers", "req", move || {
+            let mut n = 0;
+            for (i, &id) in ids2.iter().enumerate() {
+                match c2
+                    .request(&Msg::Heartbeat {
+                        worker_id: id,
+                        steps: 1,
+                        done: false,
+                        stats: Some(mk_snap(i as u32)),
+                    })
+                    .unwrap()
+                {
+                    Msg::HeartbeatAck { .. } => n += 1,
+                    other => panic!("expected ack, got {other:?}"),
+                }
+            }
+            n
+        });
+        // merged-view derivation with all 64 live slots ingested
+        b.bench("telemetry/controller_report_64_workers", "report", || {
+            let r = ctrl.telemetry_report();
+            std::hint::black_box(&r);
+            1
+        });
         for id in ids {
             c.request(&Msg::Deregister { worker_id: id }).unwrap();
         }

@@ -27,7 +27,7 @@ use crate::model_pool::{LatestFetch, ModelPoolClient};
 use crate::proto::{MatchOutcome, ModelKey, Msg, TaskSpec, TrajSegment};
 use crate::runtime::Engine;
 use crate::transport::{PushClient, ReqClient};
-use crate::util::metrics::Meter;
+use crate::util::metrics::{Meter, MetricsHub};
 use crate::util::rng::{log_softmax_at, Pcg32};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -176,8 +176,12 @@ pub struct Actor {
     plan: Vec<PlanEntry>,
     actions_buf: Vec<Vec<usize>>,
     learner_acts_buf: Vec<Vec<(usize, f32)>>,
-    pub frames: Meter,
-    pub episodes: Meter,
+    pub frames: Arc<Meter>,
+    pub episodes: Arc<Meter>,
+    /// frames stepped by THIS actor — `frames` may be a hub meter
+    /// shared with other actors after [`use_hub`](Actor::use_hub), so
+    /// `run`'s budget must not count their work
+    frames_done: u64,
 }
 
 impl Actor {
@@ -263,10 +267,20 @@ impl Actor {
             actions_buf: vec![vec![0; env_agents]; n_slots],
             learner_acts_buf: vec![Vec::new(); n_slots],
             env,
-            frames: Meter::new(),
-            episodes: Meter::new(),
+            frames: Arc::new(Meter::new()),
+            episodes: Arc::new(Meter::new()),
+            frames_done: 0,
             cfg,
         })
+    }
+
+    /// Route this actor's throughput counters through `hub` so the
+    /// telemetry plane can snapshot them (counters `env_frames` /
+    /// `episodes`).  Call before the first step — re-pointing later
+    /// would drop counts already accumulated on the private meters.
+    pub fn use_hub(&mut self, hub: &MetricsHub) {
+        self.frames = hub.meter("env_frames");
+        self.episodes = hub.meter("episodes");
     }
 
     /// Concurrent episodes this actor drives.
@@ -531,6 +545,7 @@ impl Actor {
 
             let step = self.env.step_slot(si, &self.actions_buf[si]);
             self.frames.add(1);
+            self.frames_done += 1;
 
             // team reward = mean over learner slots
             let r: f32 = self
@@ -588,14 +603,16 @@ impl Actor {
     }
 
     /// Run until `stop` or `max_frames` env steps (summed over slots).
+    /// Budgets on this actor's own step count, which stays correct even
+    /// when `frames` is a hub meter shared with sibling actors.
     pub fn run(&mut self, max_frames: u64, stop: &AtomicBool) -> Result<u64> {
-        let start = self.frames.count();
-        while self.frames.count() - start < max_frames
+        let start = self.frames_done;
+        while self.frames_done - start < max_frames
             && !stop.load(Ordering::Relaxed)
         {
             self.step_once()?;
         }
-        Ok(self.frames.count() - start)
+        Ok(self.frames_done - start)
     }
 }
 

@@ -70,6 +70,12 @@ pub struct RunConfig {
     /// silence after which the controller declares a worker dead and
     /// frees its slot for reassignment
     pub heartbeat_timeout_ms: u64,
+    /// seconds between league telemetry reports (the periodic one-line
+    /// throughput summary, and the JSONL cadence when enabled)
+    pub stats_every_secs: u64,
+    /// append one merged-league-telemetry JSON object per report
+    /// interval to this file (None = no trajectory file)
+    pub stats_jsonl: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -105,6 +111,8 @@ impl Default for RunConfig {
             advertise_host: None,
             heartbeat_ms: 1_000,
             heartbeat_timeout_ms: 5_000,
+            stats_every_secs: 2,
+            stats_jsonl: None,
         }
     }
 }
@@ -185,6 +193,11 @@ impl RunConfig {
             "heartbeat_timeout_ms",
             cfg.heartbeat_timeout_ms as f64,
         ) as u64;
+        cfg.stats_every_secs =
+            get_num(&j, "stats_every_secs", cfg.stats_every_secs as f64) as u64;
+        if let Some(s) = j.get("stats_jsonl").and_then(|v| v.as_str()) {
+            cfg.stats_jsonl = Some(s.to_string());
+        }
         if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
             for (k, v) in obj {
                 cfg.hp_overrides
@@ -228,6 +241,7 @@ impl RunConfig {
             "mode must be thread|procs"
         );
         anyhow::ensure!(self.heartbeat_ms >= 1, "heartbeat_ms >= 1");
+        anyhow::ensure!(self.stats_every_secs >= 1, "stats_every_secs >= 1");
         // a timeout tighter than two heartbeats would declare healthy
         // workers dead on ordinary scheduling jitter
         anyhow::ensure!(
@@ -416,6 +430,23 @@ mod tests {
         assert_eq!(s.env, "rps");
         assert_eq!(s.heartbeat_ms, 200);
         assert_eq!(s.learners_per_agent, 1);
+    }
+
+    #[test]
+    fn telemetry_knobs_parse() {
+        let cfg = RunConfig::from_json(
+            r#"{
+            "env": "rps", "stats_every_secs": 5,
+            "stats_jsonl": "/tmp/league-stats.jsonl"
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.stats_every_secs, 5);
+        assert_eq!(cfg.stats_jsonl.as_deref(), Some("/tmp/league-stats.jsonl"));
+        let d = RunConfig::default();
+        assert_eq!(d.stats_every_secs, 2);
+        assert!(d.stats_jsonl.is_none());
+        assert!(RunConfig::from_json(r#"{"stats_every_secs": 0}"#).is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::envs::doom_lite::DoomLite;
 use crate::envs::matrix::MatrixGame;
 use crate::envs::pommerman::agents::ScriptedPolicy;
 use crate::envs::pommerman::Pommerman;
-use crate::envs::MultiAgentEnv;
+use crate::envs::{Info, MultiAgentEnv};
 use crate::inference::infer_local_rows;
 use crate::runtime::Engine;
 use crate::util::rng::{log_softmax_at, Pcg32};
@@ -106,6 +106,24 @@ impl NnPolicy {
     }
 }
 
+/// Score `slot`'s outcome at episode end.  An env that truncates (step
+/// limit reached without a decisive result) legitimately ends with
+/// `outcome: None`; score it as a draw (0.5) with a logged warning
+/// instead of aborting the whole eval worker — `.unwrap()` here used to
+/// take down every remaining game in the batch.
+pub fn outcome_or_draw(info: &Info, slot: usize, ctx: &str) -> f32 {
+    match info.outcome.as_ref().and_then(|o| o.get(slot)) {
+        Some(&o) => o,
+        None => {
+            eprintln!(
+                "eval: {ctx}: episode truncated without an outcome; \
+                 scoring as a draw (0.5)"
+            );
+            0.5
+        }
+    }
+}
+
 /// One doom_lite match: slot 0.. control by `nn_slots` NN policies, the
 /// rest by scripted `bots`.  Returns final FRAGs per slot.
 pub fn doom_match(
@@ -157,8 +175,7 @@ pub fn pommerman_game(
         let step = env.step(&actions);
         obs = step.obs;
         if step.done {
-            let o = step.info.outcome.unwrap();
-            return Ok(o[0]);
+            return Ok(outcome_or_draw(&step.info, 0, "pommerman_game"));
         }
     }
 }
@@ -221,7 +238,7 @@ pub fn pommerman_record_vec(
                 vec![a[0], g.ops[0].act(&g.env, 1), a[1], g.ops[1].act(&g.env, 3)];
             let step = g.env.step(&actions);
             if step.done {
-                match step.info.outcome.expect("outcome at episode end")[0] {
+                match outcome_or_draw(&step.info, 0, "pommerman_record_vec") {
                     o if o >= 1.0 => w += 1,
                     o if o <= 0.0 => l += 1,
                     _ => t += 1,
@@ -271,6 +288,77 @@ mod tests {
             return None;
         }
         Some(Arc::new(Engine::load(dir).unwrap()))
+    }
+
+    /// A stub env that hits its step limit mid-game and ends WITHOUT a
+    /// decisive result (`outcome: None`) — the truncation case that
+    /// used to panic the eval worker at the `.unwrap()` call sites.
+    struct TruncEnv {
+        steps: usize,
+        limit: usize,
+    }
+
+    impl MultiAgentEnv for TruncEnv {
+        fn n_agents(&self) -> usize {
+            4
+        }
+        fn obs_dim(&self) -> usize {
+            2
+        }
+        fn act_dim(&self) -> usize {
+            3
+        }
+        fn max_steps(&self) -> usize {
+            self.limit
+        }
+        fn reset(&mut self) -> Vec<Vec<f32>> {
+            self.steps = 0;
+            vec![vec![0.0; 2]; 4]
+        }
+        fn step(&mut self, _actions: &[usize]) -> crate::envs::Step {
+            self.steps += 1;
+            crate::envs::Step {
+                obs: vec![vec![0.0; 2]; 4],
+                rewards: vec![0.0; 4],
+                done: self.steps >= self.limit,
+                info: Info::default(), // truncated: outcome stays None
+            }
+        }
+    }
+
+    /// Driving a truncating stub env through the outcome-scoring path
+    /// must survive and score every truncated episode as a draw.
+    #[test]
+    fn truncated_episode_scores_as_draw() {
+        let mut env = TruncEnv { steps: 0, limit: 3 };
+        env.reset();
+        let acts = vec![0usize; env.n_agents()];
+        let (mut w, mut l, mut t) = (0u32, 0u32, 0u32);
+        for _game in 0..2 {
+            loop {
+                let step = env.step(&acts);
+                if step.done {
+                    // the exact scoring expression the pommerman eval
+                    // loops use at episode end
+                    match outcome_or_draw(&step.info, 0, "trunc-test") {
+                        o if o >= 1.0 => w += 1,
+                        o if o <= 0.0 => l += 1,
+                        _ => t += 1,
+                    }
+                    env.reset();
+                    break;
+                }
+            }
+        }
+        assert_eq!((w, l, t), (0, 0, 2), "truncations must score as draws");
+        // decisive outcomes still pass through untouched
+        let win = Info { outcome: Some(vec![1.0, 0.0, 1.0, 0.0]), frags: None };
+        assert_eq!(outcome_or_draw(&win, 0, "trunc-test"), 1.0);
+        assert_eq!(outcome_or_draw(&win, 1, "trunc-test"), 0.0);
+        // a malformed outcome vector (missing slot) degrades to a draw
+        // rather than an index panic
+        let short = Info { outcome: Some(vec![1.0]), frags: None };
+        assert_eq!(outcome_or_draw(&short, 3, "trunc-test"), 0.5);
     }
 
     #[test]

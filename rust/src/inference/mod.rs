@@ -20,7 +20,7 @@ use crate::model_pool::{LatestFetch, ModelPoolClient};
 use crate::proto::{ModelBlob, ModelKey, Msg};
 use crate::runtime::{Engine, Tensor};
 use crate::transport::{RepServer, Reply};
-use crate::util::metrics::Meter;
+use crate::util::metrics::{Meter, MetricsHub};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -164,8 +164,12 @@ pub struct InfServer {
     batcher: Option<std::thread::JoinHandle<()>>,
     _server: RepServer,
     /// rows served / batches run — exposes the batching efficiency
+    /// (hub meters `rows` / `passes`; gauge `batch_fill` = rows per
+    /// forward pass over the artifact batch size)
     pub rows_meter: Arc<Meter>,
     pub batch_meter: Arc<Meter>,
+    /// telemetry registry this server's meters live in
+    pub hub: Arc<MetricsHub>,
 }
 
 struct CacheEntry {
@@ -184,6 +188,25 @@ impl InfServer {
         cfg: InfServerConfig,
         engine: Arc<Engine>,
         pool_addrs: &[String],
+    ) -> Result<InfServer> {
+        Self::start_with_hub(
+            bind,
+            cfg,
+            engine,
+            pool_addrs,
+            Arc::new(MetricsHub::default()),
+        )
+    }
+
+    /// Like [`start`](InfServer::start), but registering the server's
+    /// meters in an externally owned hub (the telemetry plane's role
+    /// hub, snapshotted by the worker heartbeat / thread-mode reporter).
+    pub fn start_with_hub(
+        bind: &str,
+        cfg: InfServerConfig,
+        engine: Arc<Engine>,
+        pool_addrs: &[String],
+        hub: Arc<MetricsHub>,
     ) -> Result<InfServer> {
         let m = engine.manifest.env(&cfg.env)?;
         let obs_dim = m.obs_dim;
@@ -234,8 +257,9 @@ impl InfServer {
         })?;
 
         let stop = Arc::new(AtomicBool::new(false));
-        let rows_meter = Arc::new(Meter::new());
-        let batch_meter = Arc::new(Meter::new());
+        let rows_meter = hub.meter("rows");
+        let batch_meter = hub.meter("passes");
+        let fill = hub.rolling("batch_fill");
         let pool = ModelPoolClient::connect(pool_addrs);
         let stop2 = stop.clone();
         let rm = rows_meter.clone();
@@ -320,8 +344,16 @@ impl InfServer {
                         &mut obs_buf,
                     ) {
                         Ok(passes) => {
-                            rm.add(queued_rows(&batch) as u64);
+                            let rows = queued_rows(&batch);
+                            rm.add(rows as u64);
                             bm.add(passes);
+                            // occupancy of the forward passes just run:
+                            // 1.0 = every artifact slot carried a row
+                            fill.push(
+                                rows as f64
+                                    / (passes.max(1) as usize * cfg.batch.max(1))
+                                        as f64,
+                            );
                         }
                         Err(e) => reply_err(&batch, &format!("{e}")),
                     }
@@ -335,6 +367,7 @@ impl InfServer {
             _server: server,
             rows_meter,
             batch_meter,
+            hub,
         })
     }
 

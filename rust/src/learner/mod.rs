@@ -19,7 +19,7 @@ use crate::model_pool::ModelPoolClient;
 use crate::proto::{ModelBlob, ModelKey, Msg};
 use crate::runtime::{Engine, Tensor};
 use crate::transport::PullServer;
-use crate::util::metrics::Meter;
+use crate::util::metrics::{Meter, MetricsHub, Rolling};
 use allreduce::Allreduce;
 use anyhow::{Context, Result};
 use replay::{ReplayMem, ReplayMode};
@@ -89,8 +89,11 @@ pub struct Learner {
     hp: Vec<f32>,
     pub key: ModelKey,
     pub steps: u64,
-    pub rfps: Meter,
-    pub cfps: Meter,
+    pub rfps: Arc<Meter>,
+    pub cfps: Arc<Meter>,
+    /// mean version lag of each consumed batch's segments behind the
+    /// current learner version — the telemetry plane's staleness gauge
+    pub staleness: Arc<Rolling>,
     pub last_stats: TrainStats,
 }
 
@@ -128,8 +131,9 @@ impl Learner {
             hp: task.hp.clone(),
             key: task.learner_key,
             steps: 0,
-            rfps: Meter::new(),
-            cfps: Meter::new(),
+            rfps: Arc::new(Meter::new()),
+            cfps: Arc::new(Meter::new()),
+            staleness: Arc::new(Rolling::default()),
             last_stats: TrainStats::default(),
             cfg,
         };
@@ -143,6 +147,16 @@ impl Learner {
     /// Address actors push trajectories to.
     pub fn data_addr(&self) -> String {
         self.data.addr.clone()
+    }
+
+    /// Route this learner's throughput counters through `hub` so the
+    /// telemetry plane can snapshot them (counters `recv_frames` /
+    /// `consumed_frames`, gauge `staleness`).  M_L ranks of one agent
+    /// share a hub — the slot reports group-wide figures.
+    pub fn use_hub(&mut self, hub: &MetricsHub) {
+        self.rfps = hub.meter("recv_frames");
+        self.cfps = hub.meter("consumed_frames");
+        self.staleness = hub.rolling("staleness");
     }
 
     /// Publish the version-0 seed model (random init or, in general,
@@ -210,6 +224,12 @@ impl Learner {
             std::thread::sleep(Duration::from_millis(2));
             return Ok(false);
         };
+        let lag = segs
+            .iter()
+            .map(|s| self.key.version.saturating_sub(s.model_key.version) as f64)
+            .sum::<f64>()
+            / segs.len().max(1) as f64;
+        self.staleness.push(lag);
         let batch = replay::assemble(&segs, m.obs_dim)?;
         let frames = batch.frames;
         if self.group.is_none() || self.group.as_ref().unwrap().participants() == 1 {

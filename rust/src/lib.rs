@@ -22,5 +22,6 @@ pub mod model_pool;
 pub mod orchestrator;
 pub mod proto;
 pub mod runtime;
+pub mod telemetry;
 pub mod transport;
 pub mod util;

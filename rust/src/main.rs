@@ -8,6 +8,7 @@
 //!   controller                                          procs-mode control plane
 //!   worker     --role learner|actor|inf-server          one league role,
 //!              --controller host:port                   controller-directed
+//!   stats      --controller host:port [--deploy]        merged league telemetry
 //!   eval-doom  --checkpoint <f32 file> --setting 1|2a|2b|2c --games N
 //!   eval-rps   --artifacts DIR                           exploitability demo
 //!   league-mgr / model-pool                              standalone services
@@ -25,6 +26,7 @@ use tleague::orchestrator::controller::Controller;
 use tleague::orchestrator::Deployment;
 use tleague::runtime::manifest::Manifest;
 use tleague::runtime::Engine;
+use tleague::telemetry::{self, JsonlSink};
 use tleague::util::cli::Args;
 use tleague::util::signal;
 
@@ -53,6 +55,7 @@ fn run() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("controller") => cmd_controller(&args),
         Some("worker") => cmd_worker(&args),
+        Some("stats") => cmd_stats(&args),
         Some("info") => cmd_info(&args),
         Some("eval-doom") => cmd_eval_doom(&args),
         Some("eval-rps") => cmd_eval_rps(&args),
@@ -171,8 +174,24 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     cfg.heartbeat_ms = args.u64_or("heartbeat-ms", cfg.heartbeat_ms)?;
     cfg.heartbeat_timeout_ms =
         args.u64_or("heartbeat-timeout-ms", cfg.heartbeat_timeout_ms)?;
+    // telemetry knobs
+    cfg.stats_every_secs = args.u64_or("stats-every", cfg.stats_every_secs)?;
+    if let Some(p) = args.get("stats-jsonl") {
+        cfg.stats_jsonl = Some(p.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Open the `--stats-jsonl` sink when configured.
+fn open_jsonl(path: &Option<String>) -> Result<Option<JsonlSink>> {
+    match path {
+        Some(p) => {
+            println!("appending league telemetry to {p}");
+            Ok(Some(JsonlSink::open(p)?))
+        }
+        None => Ok(None),
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -196,9 +215,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let eng = engine(args)?;
     let mut dep = Deployment::start(cfg, eng)?;
+    let interval = Duration::from_secs(dep.cfg.stats_every_secs.max(1));
+    let mut jsonl = open_jsonl(&dep.cfg.stats_jsonl)?;
     let mut last = 0;
     while !dep.learners_done() {
-        std::thread::sleep(Duration::from_secs(2));
+        std::thread::sleep(interval);
         let steps = dep.total_learner_steps();
         let stats = dep.league_stats();
         let s0 = &dep.learner_status[0];
@@ -209,8 +230,23 @@ fn cmd_run(args: &Args) -> Result<()> {
             ts.loss, ts.entropy
         );
         last = steps;
+        let tele = dep.telemetry_report();
+        println!("league: {}", telemetry::summary_line(&tele));
+        if let Some(sink) = jsonl.as_mut() {
+            sink.append(&tele, stats.episodes, stats.frames);
+        }
     }
+    // stop the roles FIRST, then write the final telemetry row: with
+    // every actor quiesced the drained run totals and the league
+    // counters describe the same finished run (and a run shorter than
+    // one report interval still emits at least this one JSONL row)
+    dep.shutdown();
+    let tele = dep.telemetry_report();
     let stats = dep.league_stats();
+    println!("league: {}", telemetry::summary_line(&tele));
+    if let Some(sink) = jsonl.as_mut() {
+        sink.append(&tele, stats.episodes, stats.frames);
+    }
     println!(
         "done: pool={} episodes={} frames={} actor restarts={}",
         stats.pool_size,
@@ -218,7 +254,6 @@ fn cmd_run(args: &Args) -> Result<()> {
         stats.frames,
         dep.restarts.load(Ordering::Relaxed)
     );
-    dep.shutdown();
     Ok(())
 }
 
@@ -232,23 +267,29 @@ fn spawn_worker(exe: &Path, role: &str, ctrl_addr: &str, artifacts: &str) -> Res
         .with_context(|| format!("spawn {role} worker"))
 }
 
-/// Shared progress monitor for procs-mode runs: prints stats every 2s
-/// until the learners finish, the run drains (covers an operator's
-/// wire `Msg::Shutdown` — learners deregister before ever reporting
-/// done, so waiting on learners_done alone would spin forever), or the
-/// process is signalled.  `tick` runs each interval before the stats
-/// line (cmd_run_procs supervises its child processes there).
+/// Shared progress monitor for procs-mode runs: prints stats every
+/// `--stats-every` seconds until the learners finish, the run drains
+/// (covers an operator's wire `Msg::Shutdown` — learners deregister
+/// before ever reporting done, so waiting on learners_done alone would
+/// spin forever), or the process is signalled.  `tick` runs each
+/// interval before the stats line (cmd_run_procs supervises its child
+/// processes there).  Returns the JSONL sink so the caller can write
+/// the FINAL row after `ctrl.shutdown()` — only once the workers have
+/// drained (and flushed their last heartbeat snapshots) do the merged
+/// run totals and the league counters describe the same finished run.
 fn monitor_controller(
     ctrl: &Controller,
     mut tick: impl FnMut() -> Result<()>,
-) -> Result<()> {
+) -> Result<Option<JsonlSink>> {
     let sig = signal::install();
+    let interval = Duration::from_secs(ctrl.cfg.stats_every_secs.max(1));
+    let mut jsonl = open_jsonl(&ctrl.cfg.stats_jsonl)?;
     let mut last = 0u64;
     while !ctrl.learners_done()
         && !ctrl.deploy_stats().draining
         && !sig.load(Ordering::Relaxed)
     {
-        std::thread::sleep(Duration::from_secs(2));
+        std::thread::sleep(interval);
         tick()?;
         let ds = ctrl.deploy_stats();
         let ls = ctrl.league_stats();
@@ -263,8 +304,28 @@ fn monitor_controller(
             ds.reassigned
         );
         last = ds.learner_steps;
+        // league-wide telemetry merged from worker heartbeat snapshots
+        // + the controller's in-process pool replicas
+        let tele = ctrl.telemetry_report();
+        println!("league: {}", telemetry::summary_line(&tele));
+        if let Some(sink) = jsonl.as_mut() {
+            sink.append(&tele, ls.episodes, ls.frames);
+        }
     }
-    Ok(())
+    Ok(jsonl)
+}
+
+/// The post-shutdown telemetry row: complete run totals (every worker
+/// flushed its final heartbeat snapshot during the drain) + final
+/// league counters.  Also guarantees sub-interval runs emit at least
+/// one JSONL row.
+fn final_stats_row(ctrl: &Controller, jsonl: &mut Option<JsonlSink>) {
+    let tele = ctrl.telemetry_report();
+    let ls = ctrl.league_stats();
+    println!("league: {}", telemetry::summary_line(&tele));
+    if let Some(sink) = jsonl.as_mut() {
+        sink.append(&tele, ls.episodes, ls.frames);
+    }
 }
 
 /// `run --mode procs`: embed the controller, spawn one OS process per
@@ -347,7 +408,8 @@ fn cmd_run_procs(cfg: RunConfig, args: &Args) -> Result<()> {
         }
     }
     // children are reaped: now a supervision error can surface
-    supervised?;
+    let mut jsonl = supervised?;
+    final_stats_row(&ctrl, &mut jsonl);
     let ds = ctrl.deploy_stats();
     let ls = ctrl.league_stats();
     println!(
@@ -382,8 +444,9 @@ fn cmd_controller(args: &Args) -> Result<()> {
          --controller {}",
         ctrl.addr
     );
-    monitor_controller(&ctrl, || Ok(()))?;
+    let mut jsonl = monitor_controller(&ctrl, || Ok(()))?;
     ctrl.shutdown();
+    final_stats_row(&ctrl, &mut jsonl);
     let ls = ctrl.league_stats();
     println!("done: pool={} episodes={} frames={}", ls.pool_size, ls.episodes, ls.frames);
     Ok(())
@@ -401,6 +464,57 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let eng = engine(args)?;
     let stop = signal::install();
     tleague::orchestrator::worker::run_worker(role, ctrl_addr, eng, &net, stop)
+}
+
+/// Probe a running controller for the merged league telemetry
+/// (`tleague stats --controller host:port [--deploy]`).
+fn cmd_stats(args: &Args) -> Result<()> {
+    use tleague::proto::Msg;
+    let addr = args
+        .get("controller")
+        .context("--controller host:port required")?;
+    let c = tleague::transport::ReqClient::connect(addr);
+    if args.bool("deploy") {
+        match c.request(&Msg::DeployStats)? {
+            Msg::DeployStatsReply {
+                workers,
+                lost,
+                reassigned,
+                learners_done,
+                learner_steps,
+                draining,
+            } => println!(
+                "deploy: workers={workers} lost={lost} reassigned={reassigned} \
+                 learners_done={learners_done} steps={learner_steps} \
+                 draining={draining}"
+            ),
+            other => anyhow::bail!("DeployStats: unexpected reply {other:?}"),
+        }
+    }
+    match c.request(&Msg::StatsQuery)? {
+        Msg::StatsReply(r) => {
+            println!("league: {}", telemetry::summary_line(&r));
+            for role in &r.roles {
+                let totals: Vec<String> = role
+                    .totals
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect();
+                println!(
+                    "  {}[{}] totals: {}",
+                    role.role,
+                    role.slots,
+                    if totals.is_empty() {
+                        "-".to_string()
+                    } else {
+                        totals.join(" ")
+                    }
+                );
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("StatsQuery: unexpected reply {other:?}"),
+    }
 }
 
 // ---- info / eval --------------------------------------------------------

@@ -17,6 +17,7 @@
 use crate::proto::{ModelBlob, ModelKey, Msg, TAG_MODEL, TAG_MODEL_REV};
 use crate::transport::{RepServer, Reply, ReqClient};
 use crate::util::codec::{Enc, Wire};
+use crate::util::metrics::{Meter, MetricsHub};
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -255,6 +256,17 @@ enum Sel {
     Latest(u32),
 }
 
+/// Read-path telemetry (hub meters): every counter is lock-free, so
+/// instrumenting the serve path costs a relaxed atomic add.
+struct ReadMeters {
+    /// all read requests (GetModel / GetLatest / GetModelIfNewer)
+    reads: Arc<Meter>,
+    /// reads served from the pre-encoded frame cache (zero encode)
+    frame_hits: Arc<Meter>,
+    /// if-newer reads answered O(1) (requester already current)
+    not_modified: Arc<Meter>,
+}
+
 /// What the first (locked) pass of a read produced.
 enum Found {
     /// frame-cache hit: the pre-encoded reply bytes
@@ -269,7 +281,13 @@ enum Found {
 /// params copy, zero encode, O(1) lock hold.  On a miss the params are
 /// encoded once OUTSIDE the lock ("respond ... instantaneously") and
 /// the frame is published for subsequent readers.
-fn model_reply(store: &Mutex<Store>, sel: Sel, have: Option<(u32, u64)>) -> Reply {
+fn model_reply(
+    store: &Mutex<Store>,
+    sel: Sel,
+    have: Option<(u32, u64)>,
+    m: &ReadMeters,
+) -> Reply {
+    m.reads.add(1);
     let (key, rev, found) = {
         let mut st = store.lock().unwrap();
         let key = match sel {
@@ -286,11 +304,13 @@ fn model_reply(store: &Mutex<Store>, sel: Sel, have: Option<(u32, u64)>) -> Repl
             if key.version < have_version
                 || (key.version == have_version && rev == have_rev)
             {
+                m.not_modified.add(1);
                 return Reply::Msg(Msg::NotModified);
             }
         }
         if let Some(f) = st.frames.get(&key).cloned() {
             st.touch(key);
+            m.frame_hits.add(1);
             (key, rev, Found::Frame(f))
         } else {
             match st.fetch(key) {
@@ -332,6 +352,10 @@ pub struct ModelPoolServer {
     pub addr: String,
     store: Arc<Mutex<Store>>,
     stop_flag: Arc<std::sync::atomic::AtomicBool>,
+    /// telemetry registry: meters `reads` / `frame_hits` /
+    /// `not_modified` / `puts` (hit rate = frame_hits/reads, if-newer
+    /// hit rate = not_modified/reads over an interval)
+    hub: Arc<MetricsHub>,
     _server: RepServer,
 }
 
@@ -343,18 +367,33 @@ impl ModelPoolServer {
     pub fn start_with(bind: &str, opts: PoolOptions) -> Result<ModelPoolServer> {
         let store = Arc::new(Mutex::new(Store { opts, ..Store::default() }));
         let stop_flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let hub = Arc::new(MetricsHub::default());
+        let meters = ReadMeters {
+            reads: hub.meter("reads"),
+            frame_hits: hub.meter("frame_hits"),
+            not_modified: hub.meter("not_modified"),
+        };
+        let puts = hub.meter("puts");
         let s2 = store.clone();
         let sf = stop_flag.clone();
         let server = RepServer::serve_frames(bind, move |msg| match msg {
             Msg::PutModel(blob) => {
                 s2.lock().unwrap().insert(blob);
+                puts.add(1);
                 Reply::Msg(Msg::Ok)
             }
-            Msg::GetModel { key } => model_reply(&s2, Sel::Exact(key), None),
-            Msg::GetLatest { agent } => model_reply(&s2, Sel::Latest(agent), None),
-            Msg::GetModelIfNewer { agent, have_version, have_rev } => {
-                model_reply(&s2, Sel::Latest(agent), Some((have_version, have_rev)))
+            Msg::GetModel { key } => {
+                model_reply(&s2, Sel::Exact(key), None, &meters)
             }
+            Msg::GetLatest { agent } => {
+                model_reply(&s2, Sel::Latest(agent), None, &meters)
+            }
+            Msg::GetModelIfNewer { agent, have_version, have_rev } => model_reply(
+                &s2,
+                Sel::Latest(agent),
+                Some((have_version, have_rev)),
+                &meters,
+            ),
             Msg::PoolStats => {
                 let st = s2.lock().unwrap();
                 Reply::Msg(Msg::PoolStatsReply {
@@ -372,7 +411,19 @@ impl ModelPoolServer {
             Msg::Ping => Reply::Msg(Msg::Pong),
             other => Reply::Msg(Msg::Err(format!("model_pool: unexpected {other:?}"))),
         })?;
-        Ok(ModelPoolServer { addr: server.addr.clone(), store, stop_flag, _server: server })
+        Ok(ModelPoolServer {
+            addr: server.addr.clone(),
+            store,
+            stop_flag,
+            hub,
+            _server: server,
+        })
+    }
+
+    /// Telemetry registry for this replica (role `model-pool` in the
+    /// league view).
+    pub fn hub(&self) -> &Arc<MetricsHub> {
+        &self.hub
     }
 
     /// True once a wire `Shutdown` request has been received.

@@ -21,8 +21,10 @@
 use crate::config::RunConfig;
 use crate::league::LeagueStats;
 use crate::orchestrator::CoreServices;
-use crate::proto::{Msg, RunSlice, WorkerAssignment};
+use crate::proto::{LeagueReport, Msg, RunSlice, WorkerAssignment};
+use crate::telemetry::{snapshot_role, LeagueView};
 use crate::transport::RepServer;
+use crate::util::metrics::MetricsHub;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -33,7 +35,7 @@ pub const ROLE_LEARNER: &str = "learner";
 pub const ROLE_ACTOR: &str = "actor";
 pub const ROLE_INF: &str = "inf-server";
 
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 enum Role {
     Learner,
     Actor,
@@ -95,6 +97,13 @@ struct CtrlState {
     actors: Vec<ActorSlot>,
     infs: Vec<InfSlot>,
     workers: HashMap<u64, WorkerInfo>,
+    /// last telemetry snapshot seq ingested per slot — heartbeats ride
+    /// `ReqClient` (retransmits on connection breaks) and a worker
+    /// retries an unconfirmed snapshot verbatim after re-registering,
+    /// so delta merging must be idempotent per (slot, seq).  Keyed by
+    /// slot, not worker id, so the dedupe survives the respawn path;
+    /// bounded by the slot table.
+    stats_seq: HashMap<(Role, usize), u64>,
     next_worker: u64,
     lost: u64,
     reassigned: u64,
@@ -129,9 +138,12 @@ fn stats_of(st: &CtrlState) -> DeployStatsSnap {
 
 /// Remove `id` and free its slot.  `lost = true` marks the slot so the
 /// next assignment counts as a reassignment (heartbeat-timeout path);
-/// a clean `Deregister` frees silently.
-fn free_slot(st: &mut CtrlState, id: u64, lost: bool) {
+/// a clean `Deregister` frees silently.  The slot's telemetry entry is
+/// dropped either way — a dead worker's gauges must not freeze at their
+/// last reported value in the league view.
+fn free_slot(st: &mut CtrlState, id: u64, lost: bool, view: &LeagueView) {
     let Some(w) = st.workers.remove(&id) else { return };
+    view.drop_slot(w.role.as_str(), w.slot as u32);
     match w.role {
         Role::Learner => {
             let s = &mut st.learners[w.slot];
@@ -346,12 +358,26 @@ fn handle_register(
     }
 }
 
+/// Merge the controller's local service hubs (ModelPool replicas run
+/// in-process) into the league view, then derive the merged report —
+/// the single code path behind the periodic summary, the JSONL
+/// trajectory, and the `StatsQuery` wire probe.
+fn merged_report(view: &LeagueView, pool_hubs: &[Arc<MetricsHub>]) -> LeagueReport {
+    for (i, h) in pool_hubs.iter().enumerate() {
+        view.ingest(&snapshot_role(h, "model-pool", i as u32));
+    }
+    view.report()
+}
+
 /// The multi-process control plane: CoreServices + worker registry.
 pub struct Controller {
     pub addr: String,
     pub cfg: RunConfig,
     core: CoreServices,
     state: Arc<Mutex<CtrlState>>,
+    /// merged telemetry (worker heartbeat snapshots + local pool hubs)
+    view: Arc<LeagueView>,
+    pool_hubs: Vec<Arc<MetricsHub>>,
     server: RepServer,
     reaper_stop: Arc<AtomicBool>,
     reaper: Option<std::thread::JoinHandle<()>>,
@@ -403,6 +429,7 @@ impl Controller {
             actors,
             infs: (0..cfg.inf_servers).map(|_| InfSlot::default()).collect(),
             workers: HashMap::new(),
+            stats_seq: HashMap::new(),
             next_worker: 1,
             lost: 0,
             reassigned: 0,
@@ -422,7 +449,15 @@ impl Controller {
             learners_per_agent: cfg.learners_per_agent,
             inf_servers: cfg.inf_servers,
         });
+        // a slot whose last snapshot predates the heartbeat timeout is
+        // stale even before the reaper frees it
+        let view = Arc::new(LeagueView::new(Duration::from_millis(
+            cfg.heartbeat_timeout_ms.max(1_000),
+        )));
+        let pool_hubs: Vec<Arc<MetricsHub>> =
+            core.pools.iter().map(|p| p.hub().clone()).collect();
         let s2 = state.clone();
+        let v2 = view.clone();
         let lpa = cfg.learners_per_agent;
         let server = RepServer::serve(&cfg.controller_bind, move |msg| {
             let mut st = s2.lock().unwrap();
@@ -452,7 +487,7 @@ impl Controller {
                     }
                     Msg::Ok
                 }
-                Msg::Heartbeat { worker_id, steps, done } => {
+                Msg::Heartbeat { worker_id, steps, done, stats } => {
                     let stop = st.stop_all;
                     let draining = st.draining;
                     match st.workers.get_mut(&worker_id) {
@@ -462,6 +497,25 @@ impl Controller {
                         Some(w) => {
                             w.last_seen = Instant::now();
                             let (role, slot) = (w.role, w.slot);
+                            // merge the piggybacked telemetry snapshot
+                            // under the REGISTRY's (role, slot) — the
+                            // worker's own claim is not authoritative —
+                            // skipping redeliveries of an already-merged
+                            // snapshot (same non-zero seq for this slot)
+                            if let Some(mut s) = stats {
+                                let key = (role, slot);
+                                let dup = s.seq != 0
+                                    && st.stats_seq.get(&key)
+                                        == Some(&s.seq);
+                                if !dup {
+                                    if s.seq != 0 {
+                                        st.stats_seq.insert(key, s.seq);
+                                    }
+                                    s.role = role.as_str().to_string();
+                                    s.slot = slot as u32;
+                                    v2.ingest(&s);
+                                }
+                            }
                             if role == Role::Learner {
                                 st.learners[slot].steps = steps;
                                 st.learners[slot].done = done;
@@ -473,9 +527,15 @@ impl Controller {
                     }
                 }
                 Msg::Deregister { worker_id } => {
-                    free_slot(&mut st, worker_id, false);
+                    free_slot(&mut st, worker_id, false, &v2);
                     Msg::Ok
                 }
+                // read-only: the wire probe must not drain the pool
+                // hubs' snapshot intervals out from under the periodic
+                // reporter (pool rates in the JSONL would otherwise
+                // jitter with external probe timing); pool figures are
+                // as of the last periodic report
+                Msg::StatsQuery => Msg::StatsReply(v2.report()),
                 Msg::DeployStats => {
                     let s = stats_of(&st);
                     Msg::DeployStatsReply {
@@ -501,6 +561,7 @@ impl Controller {
         let reaper_stop = Arc::new(AtomicBool::new(false));
         let rs2 = reaper_stop.clone();
         let s3 = state.clone();
+        let v3 = view.clone();
         let timeout = Duration::from_millis(cfg.heartbeat_timeout_ms);
         let reaper = std::thread::Builder::new()
             .name("ctrl-reaper".into())
@@ -526,7 +587,7 @@ impl Controller {
                              heartbeat; freeing slot for reassignment",
                             role.as_str()
                         );
-                        free_slot(&mut st, id, true);
+                        free_slot(&mut st, id, true, &v3);
                         st.lost += 1;
                     }
                     // learners all done → drain actors; actors gone →
@@ -551,6 +612,8 @@ impl Controller {
             cfg,
             core,
             state,
+            view,
+            pool_hubs,
             server,
             reaper_stop,
             reaper: Some(reaper),
@@ -571,6 +634,12 @@ impl Controller {
 
     pub fn deploy_stats(&self) -> DeployStatsSnap {
         stats_of(&self.state.lock().unwrap())
+    }
+
+    /// Merged league telemetry: worker heartbeat snapshots plus the
+    /// in-process ModelPool hubs (same path `Msg::StatsQuery` serves).
+    pub fn telemetry_report(&self) -> LeagueReport {
+        merged_report(&self.view, &self.pool_hubs)
     }
 
     pub fn learners_done(&self) -> bool {
@@ -768,6 +837,7 @@ mod tests {
                 worker_id: learner.worker_id,
                 steps: 1,
                 done: false,
+                stats: None,
             })
             .unwrap();
             if ctrl.deploy_stats().lost >= 1 {
@@ -781,6 +851,7 @@ mod tests {
                 worker_id: actor.worker_id,
                 steps: 0,
                 done: false,
+                stats: None,
             })
             .unwrap()
         {
@@ -829,6 +900,7 @@ mod tests {
                 worker_id: learner.worker_id,
                 steps: 100,
                 done: true,
+                stats: None,
             })
             .unwrap();
             match c
@@ -836,6 +908,7 @@ mod tests {
                     worker_id: actor.worker_id,
                     steps: 0,
                     done: false,
+                    stats: None,
                 })
                 .unwrap()
             {
@@ -882,6 +955,7 @@ mod tests {
             worker_id: l0.worker_id,
             steps: 100,
             done: true,
+            stats: None,
         })
         .unwrap();
         c.request(&Msg::Deregister { worker_id: l0.worker_id }).unwrap();
@@ -892,6 +966,191 @@ mod tests {
             Msg::Shutdown
         ));
         assert!(!ctrl.learners_done(), "agent 1 still training");
+    }
+
+    use crate::proto::RoleStats;
+
+    fn stats(
+        counters: &[(&str, u64)],
+        gauges: &[(&str, f64)],
+    ) -> Option<RoleStats> {
+        // each canned snapshot gets a fresh sequence number, mirroring
+        // the worker heartbeat thread (equal seqs are retransmits)
+        static SEQ: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(1);
+        Some(RoleStats {
+            role: String::new(), // controller overrides from its registry
+            slot: 9999,
+            seq: SEQ.fetch_add(1, Ordering::Relaxed),
+            interval_ms: 1_000,
+            counters: counters
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+            gauges: gauges.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        })
+    }
+
+    fn beat(c: &ReqClient, worker_id: u64, stats: Option<RoleStats>) {
+        match c
+            .request(&Msg::Heartbeat { worker_id, steps: 0, done: false, stats })
+            .unwrap()
+        {
+            Msg::HeartbeatAck { .. } => {}
+            other => panic!("expected ack, got {other:?}"),
+        }
+    }
+
+    fn role<'a>(
+        r: &'a crate::proto::LeagueReport,
+        name: &str,
+    ) -> &'a crate::proto::RoleReport {
+        r.roles
+            .iter()
+            .find(|x| x.role == name)
+            .unwrap_or_else(|| panic!("role {name} missing from {r:?}"))
+    }
+
+    fn rate(r: &crate::proto::RoleReport, k: &str) -> f64 {
+        r.rates
+            .iter()
+            .find(|(n, _)| n == k)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    }
+
+    fn total(r: &crate::proto::RoleReport, k: &str) -> u64 {
+        r.totals
+            .iter()
+            .find(|(n, _)| n == k)
+            .map(|(_, v)| *v)
+            .unwrap_or(u64::MAX)
+    }
+
+    /// Canned worker snapshots merge into a league-wide view: per-role
+    /// rates sum over slots, totals accumulate, and a worker joining
+    /// mid-window contributes from its first heartbeat.
+    #[test]
+    fn telemetry_merges_role_snapshots() {
+        let ctrl = ctrl(2, 0);
+        let c = ReqClient::connect(&ctrl.addr);
+        let learner = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40010".into()],
+        })
+        .unwrap();
+        let a0 = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+
+        beat(
+            &c,
+            learner.worker_id,
+            stats(&[("consumed_frames", 50)], &[("staleness", 1.0)]),
+        );
+        // the worker's own role/slot claim is NOT authoritative — the
+        // registry's assignment wins (this one lies about being a
+        // learner in slot 9999)
+        beat(&c, a0.worker_id, stats(&[("env_frames", 100)], &[]));
+        let r = ctrl.telemetry_report();
+        assert_eq!(role(&r, "actor").slots, 1);
+        assert!((rate(role(&r, "actor"), "env_frames") - 100.0).abs() < 1e-9);
+        assert_eq!(total(role(&r, "actor"), "env_frames"), 100);
+        assert!(
+            (rate(role(&r, "learner"), "consumed_frames") - 50.0).abs() < 1e-9
+        );
+        assert_eq!(
+            role(&r, "learner").gauges,
+            vec![("staleness".into(), 1.0)]
+        );
+        // the controller's in-process pool replicas report too
+        assert_eq!(role(&r, "model-pool").slots, 1);
+
+        // a second actor joins mid-window: the next report includes it
+        let a1 = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        beat(&c, a0.worker_id, stats(&[("env_frames", 60)], &[]));
+        beat(&c, a1.worker_id, stats(&[("env_frames", 300)], &[]));
+        let r = ctrl.telemetry_report();
+        assert_eq!(role(&r, "actor").slots, 2);
+        assert!((rate(role(&r, "actor"), "env_frames") - 360.0).abs() < 1e-9);
+        assert_eq!(total(role(&r, "actor"), "env_frames"), 460);
+
+        // the wire probe serves the same merged view
+        match c.request(&Msg::StatsQuery).unwrap() {
+            Msg::StatsReply(wire) => {
+                assert_eq!(total(role(&wire, "actor"), "env_frames"), 460);
+            }
+            other => panic!("expected StatsReply, got {other:?}"),
+        }
+
+        // a retransmitted snapshot (same worker, same seq — ReqClient
+        // re-sends after a connection break) must not double-count the
+        // deltas in the run totals
+        let dup = stats(&[("env_frames", 1_000)], &[]);
+        beat(&c, a0.worker_id, dup.clone());
+        beat(&c, a0.worker_id, dup);
+        let r = ctrl.telemetry_report();
+        assert_eq!(
+            total(role(&r, "actor"), "env_frames"),
+            1_460,
+            "retransmit was double-counted: {r:?}"
+        );
+    }
+
+    /// A reaped (lost-heartbeat) worker's rates and gauges must drop out
+    /// of the league view instead of freezing at their last value; its
+    /// already-counted totals remain.
+    #[test]
+    fn reaped_worker_drops_gauges_from_view() {
+        let ctrl = ctrl_with(1, 0, 300);
+        let c = ReqClient::connect(&ctrl.addr);
+        let learner = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40011".into()],
+        })
+        .unwrap();
+        let actor = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        beat(
+            &c,
+            actor.worker_id,
+            stats(&[("env_frames", 100)], &[("lag", 7.0)]),
+        );
+        let r = ctrl.telemetry_report();
+        assert_eq!(role(&r, "actor").slots, 1);
+        assert_eq!(role(&r, "actor").gauges, vec![("lag".into(), 7.0)]);
+
+        // the actor goes silent; keep the learner alive until the
+        // reaper frees the actor slot
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while ctrl.deploy_stats().lost == 0 {
+            assert!(Instant::now() < deadline, "loss never detected");
+            beat(&c, learner.worker_id, None);
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let r = ctrl.telemetry_report();
+        assert_eq!(role(&r, "actor").slots, 0, "reaped slot still live: {r:?}");
+        assert!(role(&r, "actor").gauges.is_empty(), "gauges froze: {r:?}");
+        assert!(role(&r, "actor").rates.is_empty(), "rates froze: {r:?}");
+        assert_eq!(
+            total(role(&r, "actor"), "env_frames"),
+            100,
+            "already-counted frames must survive the reap"
+        );
     }
 
     #[test]

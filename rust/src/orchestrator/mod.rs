@@ -26,7 +26,10 @@ use crate::league::{LeagueConfig, LeagueMgrServer, LeagueStats};
 use crate::learner::allreduce::Allreduce;
 use crate::learner::{Learner, LearnerConfig, TrainStats};
 use crate::model_pool::{ModelPoolServer, PoolOptions};
+use crate::proto::LeagueReport;
 use crate::runtime::Engine;
+use crate::telemetry::{snapshot_role, LeagueView};
+use crate::util::metrics::MetricsHub;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -206,6 +209,7 @@ pub fn advertised(addr: &str, advertise_host: Option<&str>) -> String {
 /// One learner's thread body, shared by both deployment modes: train to
 /// `total` steps, mirror progress into `status`, then hold the data
 /// port open until `stop` so actors don't error out mid-shutdown.
+/// `hub` routes the learner's counters into the telemetry plane.
 #[allow(clippy::too_many_arguments)]
 pub fn learner_thread(
     lcfg: LearnerConfig,
@@ -217,9 +221,13 @@ pub fn learner_thread(
     stop: Arc<AtomicBool>,
     total: u64,
     addr_tx: std::sync::mpsc::Sender<String>,
+    hub: Option<Arc<MetricsHub>>,
 ) -> Result<()> {
     let mut learner =
         Learner::new(lcfg, engine, &pool_addrs, &league_addr, group)?;
+    if let Some(h) = &hub {
+        learner.use_hub(h);
+    }
     addr_tx.send(learner.data_addr()).ok();
     while learner.steps < total && !stop.load(Ordering::Relaxed) {
         learner.train_once()?;
@@ -241,7 +249,8 @@ pub fn learner_thread(
 
 /// Build and drive one Actor until `stop` (or error).  Picks the
 /// backend from `inf_addr` and fills in the manifest `train_t` the
-/// Remote backend requires.  Shared by both deployment modes.
+/// Remote backend requires.  Shared by both deployment modes.  `hub`
+/// routes the actor's frame/episode counters into the telemetry plane.
 #[allow(clippy::too_many_arguments)]
 pub fn run_actor(
     mut cfg: ActorConfig,
@@ -252,6 +261,7 @@ pub fn run_actor(
     pool_addrs: &[String],
     data_addr: &str,
     stop: &AtomicBool,
+    hub: Option<&MetricsHub>,
 ) -> Result<()> {
     let backend = match inf_addr {
         Some(addr) => {
@@ -272,6 +282,9 @@ pub fn run_actor(
         pool_addrs,
         data_addr,
     )?;
+    if let Some(h) = hub {
+        actor.use_hub(h);
+    }
     actor.run(u64::MAX, stop)?;
     Ok(())
 }
@@ -293,6 +306,11 @@ pub struct Deployment {
     pub restarts: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     next_actor_id: AtomicU64,
+    /// telemetry: one hub per role instance, merged through the SAME
+    /// `LeagueView` code path procs mode uses (snapshot → ingest →
+    /// report), so thread-mode runs report identically
+    view: Arc<LeagueView>,
+    hubs: Mutex<Vec<(&'static str, u32, Arc<MetricsHub>)>>,
 }
 
 impl Deployment {
@@ -309,6 +327,12 @@ impl Deployment {
         let stop = Arc::new(AtomicBool::new(false));
         let actor_stop = Arc::new(AtomicBool::new(false));
         let manifest_env = crate::envs::manifest_name(&cfg.env).to_string();
+        let mut hubs: Vec<(&'static str, u32, Arc<MetricsHub>)> = core
+            .pools
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ("model-pool", i as u32, p.hub().clone()))
+            .collect();
 
         // ---- learners -------------------------------------------------
         let mut learner_status = Vec::new();
@@ -321,6 +345,8 @@ impl Deployment {
             for rank in 0..cfg.learners_per_agent {
                 let status = Arc::new(LearnerStatus::default());
                 learner_status.push(status.clone());
+                let hub = Arc::new(MetricsHub::default());
+                hubs.push(("learner", learner_handles.len() as u32, hub.clone()));
                 let (tx, rx) = std::sync::mpsc::channel::<String>();
                 let lcfg = LearnerConfig {
                     env: manifest_env.clone(),
@@ -354,6 +380,7 @@ impl Deployment {
                             stop2,
                             total,
                             tx,
+                            Some(hub),
                         )
                     })?;
                 learner_handles.push(handle);
@@ -379,6 +406,9 @@ impl Deployment {
         }
         let inf_addrs: Vec<String> =
             inf_servers.iter().map(|s| s.addr.clone()).collect();
+        for (i, s) in inf_servers.iter().enumerate() {
+            hubs.push(("inf-server", i as u32, s.hub.clone()));
+        }
 
         let deployment = Deployment {
             cfg,
@@ -395,6 +425,8 @@ impl Deployment {
             restarts: Arc::new(AtomicU64::new(0)),
             stop,
             next_actor_id: AtomicU64::new(0),
+            view: Arc::new(LeagueView::default()),
+            hubs: Mutex::new(hubs),
         };
 
         // ---- actors (M_A per learner) ----------------------------------
@@ -437,6 +469,11 @@ impl Deployment {
         let stop = self.actor_stop.clone();
         let restarts = self.restarts.clone();
         let envs_per_actor = self.cfg.envs_per_actor.max(1);
+        let hub = Arc::new(MetricsHub::default());
+        self.hubs
+            .lock()
+            .unwrap()
+            .push(("actor", id as u32, hub.clone()));
         let handle = std::thread::Builder::new()
             .name(format!("actor-{}", cfg.actor_id))
             .spawn(move || {
@@ -453,6 +490,7 @@ impl Deployment {
                                 &pool_addrs,
                                 &data_addr,
                                 &stop,
+                                Some(&hub),
                             )
                         }),
                     );
@@ -474,6 +512,18 @@ impl Deployment {
 
     pub fn league_stats(&self) -> LeagueStats {
         self.core.league.stats()
+    }
+
+    /// Merged league telemetry: drain every role hub's interval into
+    /// the shared [`LeagueView`] and derive the report — the identical
+    /// snapshot/merge path the procs-mode controller runs, minus the
+    /// wire hop.  Call periodically from ONE reporter (snapshots drain
+    /// the interval deltas).
+    pub fn telemetry_report(&self) -> LeagueReport {
+        for (role, slot, hub) in self.hubs.lock().unwrap().iter() {
+            self.view.ingest(&snapshot_role(hub, role, *slot));
+        }
+        self.view.report()
     }
 
     /// Force a snapshot right now (tests / operator tooling); returns the
@@ -591,6 +641,21 @@ mod tests {
         assert_eq!(dep.total_learner_steps(), 6);
         let stats = dep.league_stats();
         assert!(stats.pool_size >= 2);
+        // thread mode reports through the same snapshot/merge path as
+        // the procs controller: actors and learners show up with
+        // nonzero run totals
+        let tele = dep.telemetry_report();
+        let get = |role: &str, k: &str| {
+            tele.roles
+                .iter()
+                .find(|r| r.role == role)
+                .and_then(|r| r.totals.iter().find(|(n, _)| n == k))
+                .map(|(_, v)| *v)
+                .unwrap_or(0)
+        };
+        assert!(get("actor", "env_frames") > 0, "{tele:?}");
+        assert!(get("learner", "consumed_frames") > 0, "{tele:?}");
+        assert!(get("model-pool", "reads") > 0, "{tele:?}");
         dep.shutdown();
     }
 }

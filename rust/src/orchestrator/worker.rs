@@ -20,9 +20,11 @@ use crate::learner::allreduce::Allreduce;
 use crate::learner::replay::ReplayMode;
 use crate::learner::LearnerConfig;
 use crate::orchestrator::{learner_thread, run_actor, LearnerStatus};
-use crate::proto::{Msg, WorkerAssignment};
+use crate::proto::{Msg, RoleStats, WorkerAssignment};
 use crate::runtime::Engine;
+use crate::telemetry::snapshot_role;
 use crate::transport::ReqClient;
+use crate::util::metrics::MetricsHub;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -50,32 +52,71 @@ impl HbShared {
     }
 }
 
+/// A drained-but-unconfirmed telemetry snapshot.  Lives beside the hub
+/// for the whole worker process, so a snapshot parked by a dying
+/// heartbeat thread is retried VERBATIM (same seq) on the next
+/// registration's first beat: if the original delivery actually reached
+/// the controller (reply lost), the seq dedupe drops the retry instead
+/// of double-counting the deltas.
+type PendingSnap = Arc<std::sync::Mutex<Option<RoleStats>>>;
+
+#[allow(clippy::too_many_arguments)]
 fn spawn_heartbeat(
     addr: String,
     worker_id: u64,
     every_ms: u64,
     hb: Arc<HbShared>,
+    hub: Arc<MetricsHub>,
+    pending: PendingSnap,
+    stats_seq: Arc<AtomicU64>,
+    role: String,
+    slot: u32,
 ) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("heartbeat-{worker_id}"))
         .spawn(move || {
             let client = ReqClient::connect(&addr);
             let every = Duration::from_millis(every_ms.max(10));
-            'outer: loop {
+            let mut finishing = false;
+            loop {
                 // sleep in small slices so `finished` is honored fast
                 let t0 = Instant::now();
-                while t0.elapsed() < every {
+                while t0.elapsed() < every && !finishing {
                     if hb.finished.load(Ordering::Relaxed) {
-                        break 'outer;
+                        // role loop over: flush ONE final beat so the
+                        // last partial interval's deltas reach the
+                        // controller's run totals, then exit
+                        finishing = true;
+                    } else {
+                        std::thread::sleep(Duration::from_millis(
+                            every_ms.clamp(1, 25),
+                        ));
                     }
-                    std::thread::sleep(Duration::from_millis(
-                        every_ms.clamp(1, 25),
-                    ));
                 }
+                // retry an undelivered snapshot verbatim first (the hub
+                // keeps accumulating and is drained next beat), else
+                // drain this interval's deltas under a fresh seq; an
+                // empty hub (role still starting) sends nothing
+                let (snap, was_pending) = {
+                    let mut p = pending.lock().unwrap();
+                    match p.take() {
+                        Some(s) => (s, true),
+                        None => {
+                            let mut s = snapshot_role(&hub, &role, slot);
+                            s.seq = stats_seq
+                                .fetch_add(1, Ordering::Relaxed)
+                                + 1;
+                            (s, false)
+                        }
+                    }
+                };
+                let has_stats =
+                    !snap.counters.is_empty() || !snap.gauges.is_empty();
                 let msg = Msg::Heartbeat {
                     worker_id,
                     steps: hb.steps.load(Ordering::Relaxed),
                     done: hb.done.load(Ordering::Relaxed),
+                    stats: has_stats.then(|| snap.clone()),
                 };
                 match client.request(&msg) {
                     Ok(Msg::HeartbeatAck { stop }) => {
@@ -84,11 +125,28 @@ fn spawn_heartbeat(
                         }
                     }
                     Ok(_) | Err(_) => {
+                        // drained but unconfirmed: park the snapshot —
+                        // run totals must not lose events, and the
+                        // retained seq lets the controller drop the
+                        // retry if this delivery actually landed
+                        if has_stats {
+                            *pending.lock().unwrap() = Some(snap);
+                        }
                         // unknown-worker or controller unreachable:
                         // the role loop re-registers
                         hb.lost.store(true, Ordering::Relaxed);
                         break;
                     }
+                }
+                if finishing {
+                    if was_pending {
+                        // the final beat's slot went to the retried
+                        // snapshot; loop once more (no sleep — the
+                        // slice loop short-circuits on `finishing`) to
+                        // flush the fresh tail interval as well
+                        continue;
+                    }
+                    break;
                 }
             }
         })
@@ -172,6 +230,17 @@ pub fn run_worker(
     let client = ReqClient::connect(controller_addr);
     let mut slot_hint: i64 = -1;
     let mut consecutive_failures = 0u32;
+    // ONE telemetry hub (+ undelivered-snapshot buffer + seq counter)
+    // for the worker's lifetime: the role registers its meters here,
+    // the heartbeat thread snapshots them, and a snapshot parked after
+    // a failed delivery survives re-registration.  Seeding the seq
+    // stream from the pid keeps it unique across worker processes that
+    // take over the same slot, so the controller's per-slot dedupe
+    // never mistakes a fresh worker's snapshot for a retransmit.
+    let hub = Arc::new(MetricsHub::default());
+    let pending: PendingSnap = Default::default();
+    let stats_seq =
+        Arc::new(AtomicU64::new((std::process::id() as u64) << 32));
     loop {
         let Some(asn) = register(&client, role, slot_hint, proc_stop)? else {
             return Ok(()); // signalled while waiting, or run already draining
@@ -187,9 +256,15 @@ pub fn run_worker(
             asn.worker_id,
             asn.run.heartbeat_ms,
             hb.clone(),
+            hub.clone(),
+            pending.clone(),
+            stats_seq.clone(),
+            asn.role.clone(),
+            asn.slot,
         );
         let role_started = Instant::now();
-        let res = run_role(&asn, engine.clone(), net, proc_stop, &hb, &client);
+        let res =
+            run_role(&asn, engine.clone(), net, proc_stop, &hb, &client, &hub);
         hb.finished.store(true, Ordering::Relaxed);
         hb_handle.join().ok();
         // best-effort goodbye; on a lost registration the id is stale
@@ -235,16 +310,17 @@ fn run_role(
     proc_stop: &AtomicBool,
     hb: &Arc<HbShared>,
     ctrl: &ReqClient,
+    hub: &Arc<MetricsHub>,
 ) -> Result<()> {
     match asn.role.as_str() {
         super::controller::ROLE_LEARNER => {
-            run_learner_role(asn, engine, net, proc_stop, hb, ctrl)
+            run_learner_role(asn, engine, net, proc_stop, hb, ctrl, hub)
         }
         super::controller::ROLE_ACTOR => {
-            run_actor_role(asn, engine, proc_stop, hb)
+            run_actor_role(asn, engine, proc_stop, hb, hub)
         }
         super::controller::ROLE_INF => {
-            run_inf_role(asn, engine, net, proc_stop, hb, ctrl)
+            run_inf_role(asn, engine, net, proc_stop, hb, ctrl, hub)
         }
         other => bail!("unknown role '{other}' in assignment"),
     }
@@ -261,6 +337,7 @@ fn report_ready(ctrl: &ReqClient, worker_id: u64, addrs: Vec<String>) -> Result<
 /// (gradient reduction is intra-process), reporting one data port per
 /// rank.  After training completes it keeps the data ports open — and
 /// heartbeats `done` — until the controller acks stop.
+#[allow(clippy::too_many_arguments)]
 fn run_learner_role(
     asn: &WorkerAssignment,
     engine: Arc<Engine>,
@@ -268,6 +345,7 @@ fn run_learner_role(
     proc_stop: &AtomicBool,
     hb: &Arc<HbShared>,
     ctrl: &ReqClient,
+    hub: &Arc<MetricsHub>,
 ) -> Result<()> {
     let run = &asn.run;
     let n_ranks = (run.learners_per_agent as usize).max(1);
@@ -301,6 +379,9 @@ fn run_learner_role(
         let group = group.clone();
         let stop = role_stop.clone();
         let total = run.total_steps;
+        // every rank shares the worker hub: the slot's snapshot carries
+        // group-wide recv/consumed frame counters
+        let hub2 = hub.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("learner-{}-{rank}", asn.agent))
@@ -315,6 +396,7 @@ fn run_learner_role(
                         stop,
                         total,
                         tx,
+                        Some(hub2),
                     )
                 })?,
         );
@@ -405,6 +487,7 @@ fn run_actor_role(
     engine: Arc<Engine>,
     proc_stop: &AtomicBool,
     hb: &Arc<HbShared>,
+    hub: &Arc<MetricsHub>,
 ) -> Result<()> {
     let run = &asn.run;
     // slot-derived identity mirrors the thread-mode spawn order, so a
@@ -422,6 +505,7 @@ fn run_actor_role(
         let asn = asn.clone();
         let engine = engine.clone();
         let stop = role_stop.clone();
+        let hub = hub.clone();
         let envs_per_actor = (run.envs_per_actor as usize).max(1);
         std::thread::Builder::new()
             .name(format!("actor-{}", acfg.actor_id))
@@ -436,6 +520,7 @@ fn run_actor_role(
                     &asn.pool_addrs,
                     &asn.data_addr,
                     &stop,
+                    Some(&hub),
                 )
             })
             .expect("spawn actor")
@@ -455,6 +540,7 @@ fn run_actor_role(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_inf_role(
     asn: &WorkerAssignment,
     engine: Arc<Engine>,
@@ -462,11 +548,12 @@ fn run_inf_role(
     proc_stop: &AtomicBool,
     hb: &Arc<HbShared>,
     ctrl: &ReqClient,
+    hub: &Arc<MetricsHub>,
 ) -> Result<()> {
     let run = &asn.run;
     let manifest_env = crate::envs::manifest_name(&run.env).to_string();
     let m = engine.manifest.env(&manifest_env)?;
-    let mut inf = InfServer::start(
+    let mut inf = InfServer::start_with_hub(
         &format!("{}:0", net.bind_host),
         InfServerConfig {
             env: manifest_env.clone(),
@@ -476,6 +563,7 @@ fn run_inf_role(
         },
         engine.clone(),
         &asn.pool_addrs,
+        hub.clone(),
     )?;
     report_ready(ctrl, asn.worker_id, vec![net.advertised(&inf.addr)])?;
     while !hb.should_stop(proc_stop) {

@@ -87,6 +87,57 @@ pub struct ModelBlob {
     pub frozen: bool,
 }
 
+/// One role instance's delta-based metric snapshot for a reporting
+/// interval (the telemetry plane's wire unit, see DESIGN.md §Telemetry
+/// plane).  `counters` are event deltas accumulated over `interval_ms`
+/// of wall clock — NOT lifetime totals — so the receiver derives
+/// current rates and running totals without ever seeing a misleading
+/// lifetime average.  `gauges` are current rolling-window values
+/// (means), meaningful only for the instant of the snapshot.
+///
+/// Procs mode piggybacks one of these on every `Msg::Heartbeat`;
+/// thread mode feeds the identical struct into the same merge code.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RoleStats {
+    /// "learner" | "actor" | "inf-server" | "model-pool"
+    pub role: String,
+    /// role-local slot index (the merge key together with `role`)
+    pub slot: u32,
+    /// per-worker snapshot sequence number: deltas ride `ReqClient`,
+    /// which retransmits on connection breaks, so the controller
+    /// dedupes repeated deliveries of the same snapshot by (worker,
+    /// seq).  0 = no dedupe (in-process ingests that never retransmit).
+    pub seq: u64,
+    /// wall clock the counter deltas were collected over
+    pub interval_ms: u64,
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+}
+
+/// One role's slice of the merged league view: per-interval rates
+/// summed over live slots, cumulative totals over the whole run
+/// (reaped slots keep their contribution), and gauge means.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RoleReport {
+    pub role: String,
+    /// slots contributing live rates this window
+    pub slots: u32,
+    /// counter → events/s summed over live slots
+    pub rates: Vec<(String, f64)>,
+    /// counter → cumulative events since league start
+    pub totals: Vec<(String, u64)>,
+    /// gauge → mean over live slots
+    pub gauges: Vec<(String, f64)>,
+}
+
+/// League-wide telemetry: the controller's merged per-role view, also
+/// what thread mode reports (identical merge path).  Served as
+/// `Msg::StatsReply` for the `stats` CLI subcommand.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct LeagueReport {
+    pub roles: Vec<RoleReport>,
+}
+
 /// The slice of the RunConfig a role worker needs — handed out by the
 /// controller with every assignment so worker processes never read the
 /// spec file themselves (one source of truth per run).
@@ -175,7 +226,9 @@ pub enum Msg {
     /// No assignable slot right now (e.g. an actor registering before
     /// its learner's data port is known) — try again in `backoff_ms`.
     Retry { backoff_ms: u32, reason: String },
-    Heartbeat { worker_id: u64, steps: u64, done: bool },
+    /// `stats` piggybacks the worker's telemetry snapshot (None when
+    /// the role has produced nothing since the last beat).
+    Heartbeat { worker_id: u64, steps: u64, done: bool, stats: Option<RoleStats> },
     /// `stop = true`: wind the role down and exit cleanly.
     HeartbeatAck { stop: bool },
     /// Endpoints the worker serves (learner: data ports in rank order;
@@ -193,6 +246,9 @@ pub enum Msg {
         learner_steps: u64,
         draining: bool,
     },
+    /// Telemetry probe: ask the controller for the merged league view.
+    StatsQuery,
+    StatsReply(LeagueReport),
     // -- Learner data port ---------------------------------------------------
     Traj(TrajSegment),
     // -- InfServer -------------------------------------------------------
@@ -312,6 +368,87 @@ fn put_strs(buf: &mut Vec<u8>, strs: &[String]) {
 fn get_strs(cur: &mut Cursor) -> Result<Vec<String>> {
     let n = cur.u32()? as usize;
     (0..n).map(|_| cur.str()).collect()
+}
+
+fn put_counters(buf: &mut Vec<u8>, v: &[(String, u64)]) {
+    buf.put_u32(v.len() as u32);
+    for (k, n) in v {
+        buf.put_str(k);
+        buf.put_u64(*n);
+    }
+}
+
+fn get_counters(cur: &mut Cursor) -> Result<Vec<(String, u64)>> {
+    let n = cur.u32()? as usize;
+    (0..n).map(|_| Ok((cur.str()?, cur.u64()?))).collect()
+}
+
+fn put_gauges(buf: &mut Vec<u8>, v: &[(String, f64)]) {
+    buf.put_u32(v.len() as u32);
+    for (k, g) in v {
+        buf.put_str(k);
+        buf.put_f64(*g);
+    }
+}
+
+fn get_gauges(cur: &mut Cursor) -> Result<Vec<(String, f64)>> {
+    let n = cur.u32()? as usize;
+    (0..n).map(|_| Ok((cur.str()?, cur.f64()?))).collect()
+}
+
+impl Wire for RoleStats {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_str(&self.role);
+        buf.put_u32(self.slot);
+        buf.put_u64(self.seq);
+        buf.put_u64(self.interval_ms);
+        put_counters(buf, &self.counters);
+        put_gauges(buf, &self.gauges);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(RoleStats {
+            role: cur.str()?,
+            slot: cur.u32()?,
+            seq: cur.u64()?,
+            interval_ms: cur.u64()?,
+            counters: get_counters(cur)?,
+            gauges: get_gauges(cur)?,
+        })
+    }
+}
+
+impl Wire for RoleReport {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_str(&self.role);
+        buf.put_u32(self.slots);
+        put_gauges(buf, &self.rates);
+        put_counters(buf, &self.totals);
+        put_gauges(buf, &self.gauges);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(RoleReport {
+            role: cur.str()?,
+            slots: cur.u32()?,
+            rates: get_gauges(cur)?,
+            totals: get_counters(cur)?,
+            gauges: get_gauges(cur)?,
+        })
+    }
+}
+
+impl Wire for LeagueReport {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u32(self.roles.len() as u32);
+        for r in &self.roles {
+            r.encode(buf);
+        }
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let n = cur.u32()? as usize;
+        Ok(LeagueReport {
+            roles: (0..n).map(|_| RoleReport::decode(cur)).collect::<Result<_>>()?,
+        })
+    }
 }
 
 impl Wire for RunSlice {
@@ -461,11 +598,18 @@ impl Wire for Msg {
                 buf.put_u32(*backoff_ms);
                 buf.put_str(reason);
             }
-            Msg::Heartbeat { worker_id, steps, done } => {
+            Msg::Heartbeat { worker_id, steps, done, stats } => {
                 buf.put_u8(34);
                 buf.put_u64(*worker_id);
                 buf.put_u64(*steps);
                 buf.put_u8(*done as u8);
+                match stats {
+                    Some(s) => {
+                        buf.put_u8(1);
+                        s.encode(buf);
+                    }
+                    None => buf.put_u8(0),
+                }
             }
             Msg::HeartbeatAck { stop } => {
                 buf.put_u8(35);
@@ -500,6 +644,11 @@ impl Wire for Msg {
             Msg::Traj(t) => {
                 buf.put_u8(30);
                 t.encode(buf);
+            }
+            Msg::StatsQuery => buf.put_u8(42),
+            Msg::StatsReply(r) => {
+                buf.put_u8(43);
+                r.encode(buf);
             }
             Msg::InferReq { key, obs, rows } => {
                 buf.put_u8(40);
@@ -556,6 +705,10 @@ impl Wire for Msg {
                 worker_id: cur.u64()?,
                 steps: cur.u64()?,
                 done: cur.u8()? != 0,
+                stats: match cur.u8()? {
+                    0 => None,
+                    _ => Some(RoleStats::decode(cur)?),
+                },
             },
             35 => Msg::HeartbeatAck { stop: cur.u8()? != 0 },
             36 => Msg::WorkerReady { worker_id: cur.u64()?, addrs: get_strs(cur)? },
@@ -569,6 +722,8 @@ impl Wire for Msg {
                 learner_steps: cur.u64()?,
                 draining: cur.u8()? != 0,
             },
+            42 => Msg::StatsQuery,
+            43 => Msg::StatsReply(LeagueReport::decode(cur)?),
             40 => Msg::InferReq {
                 key: ModelKey::decode(cur)?,
                 obs: cur.f32s()?,
@@ -681,7 +836,23 @@ mod tests {
                 },
             }),
             Msg::Retry { backoff_ms: 500, reason: "no free slot".into() },
-            Msg::Heartbeat { worker_id: 12, steps: 42, done: false },
+            Msg::Heartbeat { worker_id: 12, steps: 42, done: false, stats: None },
+            Msg::Heartbeat {
+                worker_id: 12,
+                steps: 42,
+                done: true,
+                stats: Some(RoleStats {
+                    role: "actor".into(),
+                    slot: 5,
+                    seq: 3,
+                    interval_ms: 1_000,
+                    counters: vec![
+                        ("env_frames".into(), 4_096),
+                        ("episodes".into(), 7),
+                    ],
+                    gauges: vec![("staleness".into(), 0.5)],
+                }),
+            },
             Msg::HeartbeatAck { stop: true },
             Msg::WorkerReady {
                 worker_id: 12,
@@ -697,6 +868,25 @@ mod tests {
                 learner_steps: 640,
                 draining: false,
             },
+            Msg::StatsQuery,
+            Msg::StatsReply(LeagueReport {
+                roles: vec![
+                    RoleReport {
+                        role: "actor".into(),
+                        slots: 8,
+                        rates: vec![("env_frames".into(), 1234.5)],
+                        totals: vec![("env_frames".into(), 99_000)],
+                        gauges: vec![],
+                    },
+                    RoleReport {
+                        role: "learner".into(),
+                        slots: 1,
+                        rates: vec![("consumed_frames".into(), 900.0)],
+                        totals: vec![("consumed_frames".into(), 10_000)],
+                        gauges: vec![("staleness".into(), 0.25)],
+                    },
+                ],
+            }),
             Msg::Traj(traj),
             Msg::InferReq {
                 key: ModelKey::new(0, 0),

@@ -1,0 +1,562 @@
+//! Telemetry plane: league-wide metric aggregation (DESIGN.md
+//! §Telemetry plane).
+//!
+//! Every role instance owns a [`MetricsHub`]; [`snapshot_role`] drains
+//! one reporting interval from it into a [`RoleStats`] (counter deltas
+//! + rolling gauges).  Workers piggyback that snapshot on their
+//! heartbeat; the controller feeds it into a [`LeagueView`], which
+//! merges per-(role, slot) entries into a [`LeagueReport`]: current
+//! rates summed over live slots, cumulative totals over the whole run,
+//! and gauge means.  Thread mode snapshots its in-process hubs into the
+//! SAME `LeagueView`, so both deployment modes report through one code
+//! path.
+//!
+//! The merged report renders three ways: a one-line periodic summary
+//! ([`summary_line`]), a JSONL trajectory row ([`jsonl_line`] /
+//! [`JsonlSink`]) for offline plots, and the `Msg::StatsReply` wire
+//! message behind the `stats` CLI subcommand.
+
+use crate::proto::{LeagueReport, RoleReport, RoleStats};
+use crate::util::json::Json;
+use crate::util::metrics::MetricsHub;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Drain one reporting interval from `hub` into the wire snapshot for
+/// role instance (`role`, `slot`).  One periodic caller per hub — the
+/// deltas are consumed.
+pub fn snapshot_role(hub: &MetricsHub, role: &str, slot: u32) -> RoleStats {
+    let s = hub.snapshot();
+    RoleStats {
+        role: role.to_string(),
+        slot,
+        // in-process ingests never retransmit; workers stamp their own
+        // sequence numbers before sending (see worker::spawn_heartbeat)
+        seq: 0,
+        interval_ms: (s.interval_secs * 1e3) as u64,
+        counters: s.counters,
+        gauges: s.gauges,
+    }
+}
+
+struct SlotEntry {
+    /// counter → events/s over the slot's latest reported interval
+    rates: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    last_seen: Instant,
+}
+
+#[derive(Default)]
+struct ViewInner {
+    slots: BTreeMap<(String, u32), SlotEntry>,
+    /// (role, counter) → cumulative events across the whole run; reaped
+    /// slots keep their contribution (their frames were real)
+    totals: BTreeMap<(String, String), u64>,
+}
+
+/// The merge side of the telemetry plane: per-(role, slot) snapshot
+/// ingestion + league-wide report derivation.  Pure bookkeeping — no
+/// threads, no I/O — so the controller's wire path and thread mode's
+/// in-process path share it verbatim.
+pub struct LeagueView {
+    /// a slot silent longer than this stops contributing rates/gauges
+    /// (its totals stay); the controller additionally drops reaped
+    /// slots explicitly via [`drop_slot`](LeagueView::drop_slot)
+    stale_after: Duration,
+    inner: Mutex<ViewInner>,
+}
+
+impl Default for LeagueView {
+    fn default() -> Self {
+        LeagueView::new(Duration::from_secs(30))
+    }
+}
+
+impl LeagueView {
+    pub fn new(stale_after: Duration) -> LeagueView {
+        LeagueView { stale_after, inner: Mutex::new(ViewInner::default()) }
+    }
+
+    /// Merge one snapshot.  Counter deltas accumulate into the role's
+    /// run totals; the slot's current rates/gauges are replaced (an
+    /// interval of zero wall clock keeps the previous rates rather than
+    /// dividing by zero).
+    pub fn ingest(&self, s: &RoleStats) {
+        let mut g = self.inner.lock().unwrap();
+        for (k, d) in &s.counters {
+            *g.totals.entry((s.role.clone(), k.clone())).or_insert(0) += d;
+        }
+        let entry = g
+            .slots
+            .entry((s.role.clone(), s.slot))
+            .or_insert_with(|| SlotEntry {
+                rates: BTreeMap::new(),
+                gauges: BTreeMap::new(),
+                last_seen: Instant::now(),
+            });
+        entry.last_seen = Instant::now();
+        let secs = s.interval_ms as f64 / 1e3;
+        if secs > 0.0 {
+            for (k, d) in &s.counters {
+                entry.rates.insert(k.clone(), *d as f64 / secs);
+            }
+        }
+        for (k, v) in &s.gauges {
+            entry.gauges.insert(k.clone(), *v);
+        }
+    }
+
+    /// Remove a reaped/deregistered slot: its rates and gauges must not
+    /// freeze at their last value in subsequent reports.  Totals stay.
+    pub fn drop_slot(&self, role: &str, slot: u32) {
+        self.inner
+            .lock()
+            .unwrap()
+            .slots
+            .remove(&(role.to_string(), slot));
+    }
+
+    /// Live slots currently contributing to `role`.
+    pub fn live_slots(&self, role: &str) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.slots
+            .iter()
+            .filter(|((r, _), e)| {
+                r == role && e.last_seen.elapsed() <= self.stale_after
+            })
+            .count()
+    }
+
+    /// Derive the league-wide report: for every role, rates summed over
+    /// live slots, run totals, and gauge means.  Read-only — safe to
+    /// call from both the periodic reporter and wire probes.
+    pub fn report(&self) -> LeagueReport {
+        let g = self.inner.lock().unwrap();
+        // role → (live slots, summed rates, gauge sums + counts)
+        #[derive(Default)]
+        struct Agg {
+            slots: u32,
+            rates: BTreeMap<String, f64>,
+            gauges: BTreeMap<String, (f64, u32)>,
+        }
+        let mut by_role: BTreeMap<String, Agg> = BTreeMap::new();
+        // totals alone keep a role visible after all its slots reaped
+        for (role, _) in g.totals.keys() {
+            by_role.entry(role.clone()).or_default();
+        }
+        for ((role, _), e) in &g.slots {
+            let agg = by_role.entry(role.clone()).or_default();
+            if e.last_seen.elapsed() > self.stale_after {
+                continue;
+            }
+            agg.slots += 1;
+            for (k, r) in &e.rates {
+                *agg.rates.entry(k.clone()).or_insert(0.0) += r;
+            }
+            for (k, v) in &e.gauges {
+                let s = agg.gauges.entry(k.clone()).or_insert((0.0, 0));
+                s.0 += v;
+                s.1 += 1;
+            }
+        }
+        let roles = by_role
+            .into_iter()
+            .map(|(role, agg)| RoleReport {
+                slots: agg.slots,
+                rates: agg.rates.into_iter().collect(),
+                totals: g
+                    .totals
+                    .iter()
+                    .filter(|((r, _), _)| *r == role)
+                    .map(|((_, k), v)| (k.clone(), *v))
+                    .collect(),
+                gauges: agg
+                    .gauges
+                    .into_iter()
+                    .map(|(k, (sum, n))| (k, sum / n.max(1) as f64))
+                    .collect(),
+                role,
+            })
+            .collect::<Vec<_>>();
+        LeagueReport { roles: sort_roles(roles) }
+    }
+}
+
+/// Canonical display order: data-producing roles first, then services.
+fn role_rank(role: &str) -> u32 {
+    match role {
+        "actor" => 0,
+        "learner" => 1,
+        "inf-server" => 2,
+        "model-pool" => 3,
+        _ => 4,
+    }
+}
+
+fn sort_roles(mut roles: Vec<RoleReport>) -> Vec<RoleReport> {
+    roles.sort_by(|a, b| {
+        role_rank(&a.role)
+            .cmp(&role_rank(&b.role))
+            .then_with(|| a.role.cmp(&b.role))
+    });
+    roles
+}
+
+fn fmt_num(v: f64) -> String {
+    if !v.is_finite() {
+        "0".into()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        (v as i64).to_string()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// One-line league throughput summary, e.g.
+/// `actor[4] env_frames/s=5210 episodes/s=12.3 | learner[1]
+/// consumed_frames/s=4800 staleness=0.8 | ...`.  A role with no live
+/// slots left (post-drain final line) falls back to its run totals.
+pub fn summary_line(r: &LeagueReport) -> String {
+    let mut parts = Vec::new();
+    for role in &r.roles {
+        let mut s = format!("{}[{}]", role.role, role.slots);
+        let mut any = false;
+        for (k, v) in &role.rates {
+            s.push_str(&format!(" {k}/s={}", fmt_num(*v)));
+            any = true;
+        }
+        for (k, v) in &role.gauges {
+            s.push_str(&format!(" {k}={}", fmt_num(*v)));
+            any = true;
+        }
+        if !any {
+            for (k, v) in &role.totals {
+                s.push_str(&format!(" {k}={v}"));
+                any = true;
+            }
+        }
+        if any {
+            parts.push(s);
+        }
+    }
+    if parts.is_empty() {
+        "no telemetry yet".into()
+    } else {
+        parts.join(" | ")
+    }
+}
+
+/// Non-finite gauges/rates must not leak "inf"/"NaN" into the file.
+fn num(v: f64) -> Json {
+    Json::Num(if v.is_finite() { v } else { 0.0 })
+}
+
+fn obj(fields: impl IntoIterator<Item = (String, Json)>) -> Json {
+    Json::Obj(fields.into_iter().collect())
+}
+
+/// One JSONL trajectory row at timestamp `t` (unix seconds): league
+/// counters and the full per-role view (rates + run totals + gauges).
+/// Offline plots reconstruct per-interval deltas from consecutive
+/// rows' totals.  Built on `util::json::Json`, so escaping/rendering
+/// stays in one place (u64 totals ride f64 — exact up to 2^53, far
+/// beyond any run).
+pub fn jsonl_line(r: &LeagueReport, episodes: u64, frames: u64, t: f64) -> String {
+    let pairs = |v: &[(String, f64)]| {
+        obj(v.iter().map(|(k, x)| (k.clone(), num(*x))))
+    };
+    let roles = obj(r.roles.iter().map(|role| {
+        (
+            role.role.clone(),
+            Json::obj()
+                .set("slots", role.slots as usize)
+                .set("rates", pairs(&role.rates))
+                .set(
+                    "totals",
+                    obj(role
+                        .totals
+                        .iter()
+                        .map(|(k, v)| (k.clone(), num(*v as f64)))),
+                )
+                .set("gauges", pairs(&role.gauges)),
+        )
+    }));
+    Json::obj()
+        .set("t", num(t))
+        .set(
+            "league",
+            Json::obj()
+                .set("episodes", num(episodes as f64))
+                .set("frames", num(frames as f64)),
+        )
+        .set("roles", roles)
+        .to_string()
+}
+
+/// Append-only JSONL sink for `--stats-jsonl <path>`.  Row timestamps
+/// are the wall-clock epoch captured at open plus a MONOTONIC elapsed
+/// offset, so an NTP step mid-run can never produce out-of-order `t`
+/// values (ci.sh asserts they are sorted).
+pub struct JsonlSink {
+    file: std::fs::File,
+    pub path: String,
+    unix0: f64,
+    started: Instant,
+}
+
+impl JsonlSink {
+    pub fn open(path: &str) -> anyhow::Result<JsonlSink> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        let unix0 = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        Ok(JsonlSink {
+            file,
+            path: path.to_string(),
+            unix0,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn append(&mut self, r: &LeagueReport, episodes: u64, frames: u64) {
+        let t = self.unix0 + self.started.elapsed().as_secs_f64();
+        let line = jsonl_line(r, episodes, frames, t);
+        if let Err(e) = writeln!(self.file, "{line}") {
+            eprintln!("telemetry: jsonl append to {} failed: {e}", self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(
+        role: &str,
+        slot: u32,
+        interval_ms: u64,
+        counters: &[(&str, u64)],
+        gauges: &[(&str, f64)],
+    ) -> RoleStats {
+        RoleStats {
+            role: role.into(),
+            slot,
+            seq: 0,
+            interval_ms,
+            counters: counters
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect(),
+            gauges: gauges.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    fn rate(r: &LeagueReport, role: &str, k: &str) -> f64 {
+        r.roles
+            .iter()
+            .find(|x| x.role == role)
+            .and_then(|x| x.rates.iter().find(|(n, _)| n == k))
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    }
+
+    fn total(r: &LeagueReport, role: &str, k: &str) -> u64 {
+        r.roles
+            .iter()
+            .find(|x| x.role == role)
+            .and_then(|x| x.totals.iter().find(|(n, _)| n == k))
+            .map(|(_, v)| *v)
+            .unwrap_or(u64::MAX)
+    }
+
+    #[test]
+    fn merge_sums_rates_and_accumulates_totals() {
+        let v = LeagueView::default();
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 100)], &[]));
+        v.ingest(&stats("actor", 1, 2_000, &[("env_frames", 400)], &[]));
+        v.ingest(&stats("learner", 0, 1_000, &[("consumed_frames", 80)], &[
+            ("staleness", 2.0),
+        ]));
+        let r = v.report();
+        // 100/1s + 400/2s
+        assert!((rate(&r, "actor", "env_frames") - 300.0).abs() < 1e-9);
+        assert_eq!(total(&r, "actor", "env_frames"), 500);
+        assert!((rate(&r, "learner", "consumed_frames") - 80.0).abs() < 1e-9);
+        // next window: totals accumulate, rates replace
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 50)], &[]));
+        v.ingest(&stats("actor", 1, 1_000, &[("env_frames", 70)], &[]));
+        let r = v.report();
+        assert!((rate(&r, "actor", "env_frames") - 120.0).abs() < 1e-9);
+        assert_eq!(total(&r, "actor", "env_frames"), 620);
+        // canonical role order: actor before learner
+        assert_eq!(r.roles[0].role, "actor");
+        assert_eq!(r.roles[1].role, "learner");
+    }
+
+    /// A worker joining mid-window contributes from its first snapshot.
+    #[test]
+    fn slot_joining_mid_window_is_counted() {
+        let v = LeagueView::default();
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 100)], &[]));
+        let r = v.report();
+        assert_eq!(r.roles[0].slots, 1);
+        v.ingest(&stats("actor", 7, 500, &[("env_frames", 100)], &[]));
+        let r = v.report();
+        assert_eq!(r.roles[0].slots, 2);
+        assert!((rate(&r, "actor", "env_frames") - 300.0).abs() < 1e-9);
+        assert_eq!(total(&r, "actor", "env_frames"), 200);
+    }
+
+    /// A reaped slot's rates and gauges must disappear, not freeze at
+    /// their last reported value; its totals remain.
+    #[test]
+    fn dropped_slot_stops_contributing_but_keeps_totals() {
+        let v = LeagueView::default();
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 100)], &[
+            ("lag", 5.0),
+        ]));
+        v.ingest(&stats("actor", 1, 1_000, &[("env_frames", 60)], &[
+            ("lag", 1.0),
+        ]));
+        let r = v.report();
+        assert!((rate(&r, "actor", "env_frames") - 160.0).abs() < 1e-9);
+        assert_eq!(r.roles[0].gauges, vec![("lag".into(), 3.0)]);
+        v.drop_slot("actor", 0);
+        let r = v.report();
+        assert_eq!(r.roles[0].slots, 1);
+        assert!((rate(&r, "actor", "env_frames") - 60.0).abs() < 1e-9);
+        assert_eq!(r.roles[0].gauges, vec![("lag".into(), 1.0)]);
+        assert_eq!(total(&r, "actor", "env_frames"), 160);
+        // every slot gone: the role stays visible through its totals
+        v.drop_slot("actor", 1);
+        let r = v.report();
+        assert_eq!(r.roles[0].slots, 0);
+        assert!(r.roles[0].rates.is_empty());
+        assert_eq!(total(&r, "actor", "env_frames"), 160);
+    }
+
+    /// Snapshots older than `stale_after` stop contributing rates even
+    /// without an explicit drop (thread mode has no reaper).
+    #[test]
+    fn stale_entries_excluded_from_rates() {
+        let v = LeagueView::new(Duration::from_millis(20));
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 100)], &[]));
+        std::thread::sleep(Duration::from_millis(40));
+        v.ingest(&stats("actor", 1, 1_000, &[("env_frames", 60)], &[]));
+        let r = v.report();
+        assert_eq!(r.roles[0].slots, 1);
+        assert!((rate(&r, "actor", "env_frames") - 60.0).abs() < 1e-9);
+        assert_eq!(total(&r, "actor", "env_frames"), 160);
+        assert_eq!(v.live_slots("actor"), 1);
+    }
+
+    /// A zero-length interval must not produce infinite rates.
+    #[test]
+    fn zero_interval_keeps_previous_rates() {
+        let v = LeagueView::default();
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 100)], &[]));
+        v.ingest(&stats("actor", 0, 0, &[("env_frames", 7)], &[]));
+        let r = v.report();
+        assert!((rate(&r, "actor", "env_frames") - 100.0).abs() < 1e-9);
+        assert_eq!(total(&r, "actor", "env_frames"), 107);
+    }
+
+    #[test]
+    fn jsonl_line_is_valid_json_with_timestamp() {
+        let v = LeagueView::default();
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 100)], &[
+            ("lag", 0.5),
+        ]));
+        let r = v.report();
+        let line = jsonl_line(&r, 12, 3456, 1_753_900_000.25);
+        let j = crate::util::json::Json::parse(&line).expect("valid json");
+        assert_eq!(
+            j.path("t").and_then(|t| t.as_f64()).unwrap(),
+            1_753_900_000.25
+        );
+        assert_eq!(
+            j.path("league.frames").and_then(|f| f.as_f64()).unwrap(),
+            3456.0
+        );
+        assert_eq!(
+            j.path("roles.actor.totals.env_frames")
+                .and_then(|f| f.as_f64())
+                .unwrap(),
+            100.0
+        );
+        assert_eq!(
+            j.path("roles.actor.slots").and_then(|s| s.as_f64()).unwrap(),
+            1.0
+        );
+    }
+
+    #[test]
+    fn summary_line_names_roles_and_rates() {
+        let v = LeagueView::default();
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 5000)], &[]));
+        v.ingest(&stats(
+            "learner",
+            0,
+            1_000,
+            &[("consumed_frames", 100)],
+            &[("staleness", 0.5)],
+        ));
+        let s = summary_line(&v.report());
+        assert!(s.contains("actor[1]"), "{s}");
+        assert!(s.contains("env_frames/s=5000"), "{s}");
+        assert!(s.contains("learner[1]"), "{s}");
+        assert!(s.contains("staleness=0.500"), "{s}");
+        assert_eq!(summary_line(&LeagueReport::default()), "no telemetry yet");
+        // post-drain final line: no live slots left, run totals show
+        // instead of a misleading "no telemetry yet"
+        v.drop_slot("actor", 0);
+        v.drop_slot("learner", 0);
+        let s = summary_line(&v.report());
+        assert!(s.contains("actor[0] env_frames=5000"), "{s}");
+        assert!(s.contains("learner[0] consumed_frames=100"), "{s}");
+    }
+
+    #[test]
+    fn jsonl_sink_appends_monotone_rows() {
+        let dir = std::env::temp_dir()
+            .join(format!("tleague-telemetry-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("stats.jsonl");
+        let mut sink = JsonlSink::open(path.to_str().unwrap()).unwrap();
+        let v = LeagueView::default();
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 1)], &[]));
+        let r = v.report();
+        sink.append(&r, 1, 2);
+        sink.append(&r, 2, 4);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let ts: Vec<f64> = text
+            .lines()
+            .map(|l| {
+                crate::util::json::Json::parse(l)
+                    .expect("valid jsonl row")
+                    .path("t")
+                    .and_then(|t| t.as_f64())
+                    .expect("t field")
+            })
+            .collect();
+        assert_eq!(ts.len(), 2);
+        assert!(ts[0] > 0.0);
+        assert!(ts[1] >= ts[0], "sink timestamps must be monotone: {ts:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -48,6 +48,17 @@ subcommands:
     --checkpoint-dir <dir>   write durable league snapshots here
     --checkpoint-every S     seconds between snapshots (default 30)
     --resume <dir>           restart from the newest snapshot in <dir>
+   telemetry knobs:
+    --stats-every S          seconds between league telemetry reports:
+                             the periodic one-line per-role throughput
+                             summary (env frames/s, episodes/s, consumed
+                             frames/s, staleness, inf rows/s, pool hit
+                             counters) merged from every role's
+                             delta-based interval snapshots (default 2)
+    --stats-jsonl <path>     append one merged-telemetry JSON object per
+                             report interval to <path> (rates + run
+                             totals per role + league episode/frame
+                             counters) for offline trajectory plots
    data-plane knobs:
     --refresh-every N        actor param-refresh cadence in episodes
                              (delta-aware: an unchanged in-training model
@@ -68,6 +79,10 @@ subcommands:
                              (default 127.0.0.1)
     --advertise-host <host>  host peers use for this worker's endpoints
                              (learner data ports, inf-server address)
+  stats        probe a running controller for the merged league
+               telemetry (per-role rates + run totals)
+    --controller host:port   controller to query
+    --deploy                 also print worker/slot deployment counters
   info         print the artifact manifest summary (--artifacts <dir>)
   eval-doom    FRAG matches, Tables 1-2
     --checkpoint <f32 file> --setting 1|2a|2b|2c --games N

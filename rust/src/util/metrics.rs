@@ -4,16 +4,37 @@
 //! frames received from Actors vs frames consumed by the Learner.  All
 //! counters are lock-free atomics so the hot paths never block on
 //! metrics; a `MetricsHub` aggregates and renders Table-3-style rows.
+//!
+//! The telemetry plane (see DESIGN.md §Telemetry plane) is built on
+//! **interval snapshots**: [`Meter::take_snapshot`] atomically drains
+//! the delta since the previous snapshot, and [`MetricsHub::snapshot`]
+//! packages every registered meter's delta plus every rolling gauge's
+//! current window into one report a worker can piggyback on its
+//! heartbeat.  Rates derived from snapshots reflect the *current*
+//! interval, not a lifetime average.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Monotonic event counter with rate derivation.
+/// Monotonic event counter with delta-based rate derivation.
+///
+/// `count()` never decreases (hot-path callers budget against it), so
+/// interval accounting rides a separate snapshot base: each
+/// [`take_snapshot`](Meter::take_snapshot) drains the events recorded
+/// since the previous one.  Every `add` lands in exactly one snapshot's
+/// delta — there is no reset window in which events can be lost or
+/// misattributed (the old `reset()` stored the counter and the epoch
+/// non-atomically and had exactly that bug).
 pub struct Meter {
     count: AtomicU64,
-    start: Mutex<Instant>,
+    /// `count` as of the last snapshot
+    snap_base: AtomicU64,
+    /// epoch of the last snapshot (creation time initially); the lock
+    /// also serializes concurrent snapshotters so each delta pairs with
+    /// the interval it was collected over
+    snap_at: Mutex<Instant>,
 }
 
 impl Default for Meter {
@@ -24,42 +45,66 @@ impl Default for Meter {
 
 impl Meter {
     pub fn new() -> Self {
-        Meter { count: AtomicU64::new(0), start: Mutex::new(Instant::now()) }
+        Meter {
+            count: AtomicU64::new(0),
+            snap_base: AtomicU64::new(0),
+            snap_at: Mutex::new(Instant::now()),
+        }
     }
     #[inline]
     pub fn add(&self, n: u64) {
         self.count.fetch_add(n, Ordering::Relaxed);
     }
+    /// Lifetime total — monotonic, unaffected by snapshots.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
-    /// Events per second since creation / last reset.
+    /// Drain the current interval: `(events since last snapshot,
+    /// seconds since last snapshot)`, then start a fresh interval.
+    /// Deltas telescope — the sum of every snapshot's delta plus the
+    /// not-yet-snapshotted remainder always equals `count()`.
+    pub fn take_snapshot(&self) -> (u64, f64) {
+        let mut at = self.snap_at.lock().unwrap();
+        let total = self.count.load(Ordering::Relaxed);
+        let delta = total - self.snap_base.swap(total, Ordering::Relaxed);
+        let now = Instant::now();
+        let secs = now.duration_since(*at).as_secs_f64();
+        *at = now;
+        (delta, secs)
+    }
+    /// Events per second over the current interval (since the last
+    /// `take_snapshot`; since creation if never snapshotted).  Does not
+    /// consume the interval.
     pub fn rate(&self) -> f64 {
-        let secs = self.start.lock().unwrap().elapsed().as_secs_f64();
+        let at = self.snap_at.lock().unwrap();
+        let secs = at.elapsed().as_secs_f64();
+        let delta = self.count() - self.snap_base.load(Ordering::Relaxed);
         if secs <= 0.0 {
             0.0
         } else {
-            self.count() as f64 / secs
+            delta as f64 / secs
         }
-    }
-    pub fn reset(&self) {
-        self.count.store(0, Ordering::Relaxed);
-        *self.start.lock().unwrap() = Instant::now();
     }
 }
 
 /// Windowed scalar statistic (mean/min/max over the recent window).
-#[derive(Default)]
 pub struct Rolling {
     inner: Mutex<RollingInner>,
 }
 
-#[derive(Default)]
 struct RollingInner {
     window: Vec<f64>,
     cap: usize,
     next: usize,
-    filled: bool,
+}
+
+impl Default for Rolling {
+    /// A zero-capacity ring is unusable (the first wrapped push would
+    /// index an empty window), so the default is the same 256-sample
+    /// window `MetricsHub::rolling` registers.
+    fn default() -> Self {
+        Rolling::with_capacity(256)
+    }
 }
 
 impl Rolling {
@@ -69,7 +114,6 @@ impl Rolling {
                 window: Vec::with_capacity(cap),
                 cap: cap.max(1),
                 next: 0,
-                filled: false,
             }),
         }
     }
@@ -82,7 +126,6 @@ impl Rolling {
             let i = g.next;
             g.window[i] = v;
             g.next = (i + 1) % cap;
-            g.filled = true;
         }
     }
     pub fn mean(&self) -> f64 {
@@ -114,31 +157,54 @@ impl Rolling {
     }
 }
 
-/// Named registry shared across modules (one per process).
-#[derive(Default)]
+/// One interval's worth of a hub's metrics: counter deltas collected
+/// over `interval_secs`, plus the current rolling-gauge values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnap {
+    pub interval_secs: f64,
+    /// meter name → events since the hub's previous snapshot
+    pub counters: Vec<(String, u64)>,
+    /// rolling name → current window mean
+    pub gauges: Vec<(String, f64)>,
+}
+
+/// Named registry shared across modules (one per role instance).
 pub struct MetricsHub {
-    meters: Mutex<BTreeMap<String, std::sync::Arc<Meter>>>,
-    rollings: Mutex<BTreeMap<String, std::sync::Arc<Rolling>>>,
+    meters: Mutex<BTreeMap<String, Arc<Meter>>>,
+    rollings: Mutex<BTreeMap<String, Arc<Rolling>>>,
+    /// epoch of the last hub snapshot (drives `interval_secs`)
+    snap_at: Mutex<Instant>,
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        MetricsHub {
+            meters: Mutex::new(BTreeMap::new()),
+            rollings: Mutex::new(BTreeMap::new()),
+            snap_at: Mutex::new(Instant::now()),
+        }
+    }
 }
 
 impl MetricsHub {
-    pub fn meter(&self, name: &str) -> std::sync::Arc<Meter> {
+    pub fn meter(&self, name: &str) -> Arc<Meter> {
         self.meters
             .lock()
             .unwrap()
             .entry(name.to_string())
-            .or_insert_with(|| std::sync::Arc::new(Meter::new()))
+            .or_insert_with(|| Arc::new(Meter::new()))
             .clone()
     }
-    pub fn rolling(&self, name: &str) -> std::sync::Arc<Rolling> {
+    pub fn rolling(&self, name: &str) -> Arc<Rolling> {
         self.rollings
             .lock()
             .unwrap()
             .entry(name.to_string())
-            .or_insert_with(|| std::sync::Arc::new(Rolling::with_capacity(256)))
+            .or_insert_with(|| Arc::new(Rolling::with_capacity(256)))
             .clone()
     }
-    /// "name=rate/s" report, sorted by name (used by the throughput table).
+    /// "name=rate/s" report, sorted by name (used by the throughput
+    /// table).  Rates cover the current interval; see [`Meter::rate`].
     pub fn report(&self) -> Vec<(String, f64)> {
         self.meters
             .lock()
@@ -146,6 +212,36 @@ impl MetricsHub {
             .iter()
             .map(|(k, m)| (k.clone(), m.rate()))
             .collect()
+    }
+    /// Drain one reporting interval: every meter's delta since the
+    /// previous hub snapshot plus every gauge's current mean.  Intended
+    /// for a single periodic consumer per hub (the role's telemetry
+    /// reporter) — concurrent snapshotters would split deltas between
+    /// them.
+    pub fn snapshot(&self) -> MetricsSnap {
+        let interval_secs = {
+            let mut at = self.snap_at.lock().unwrap();
+            let now = Instant::now();
+            let secs = now.duration_since(*at).as_secs_f64();
+            *at = now;
+            secs
+        };
+        let counters = self
+            .meters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, m)| (k.clone(), m.take_snapshot().0))
+            .collect();
+        let gauges = self
+            .rollings
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, r)| !r.is_empty())
+            .map(|(k, r)| (k.clone(), r.mean()))
+            .collect();
+        MetricsSnap { interval_secs, counters, gauges }
     }
 }
 
@@ -181,8 +277,59 @@ mod tests {
         m.add(4);
         assert_eq!(m.count(), 7);
         assert!(m.rate() > 0.0);
-        m.reset();
-        assert_eq!(m.count(), 0);
+        let (delta, secs) = m.take_snapshot();
+        assert_eq!(delta, 7);
+        assert!(secs >= 0.0);
+        // the lifetime count survives the snapshot; the interval drains
+        assert_eq!(m.count(), 7);
+        assert_eq!(m.take_snapshot().0, 0);
+        m.add(2);
+        assert_eq!(m.take_snapshot().0, 2);
+        assert_eq!(m.count(), 9);
+    }
+
+    /// No-lost-events: with a concurrent adder hammering the meter, the
+    /// sum of every snapshot delta must equal the final count — the old
+    /// two-store `reset()` dropped or misattributed events that landed
+    /// between its stores.
+    #[test]
+    fn snapshot_deltas_lose_no_events_under_concurrency() {
+        let m = Arc::new(Meter::new());
+        let m2 = m.clone();
+        let adder = std::thread::spawn(move || {
+            let mut added = 0u64;
+            for i in 0..200_000u64 {
+                let n = i % 3 + 1;
+                m2.add(n);
+                added += n;
+            }
+            added
+        });
+        let mut snapped = 0u64;
+        while !adder.is_finished() {
+            snapped += m.take_snapshot().0;
+        }
+        let added = adder.join().unwrap();
+        snapped += m.take_snapshot().0;
+        assert_eq!(snapped, added, "snapshot deltas must telescope");
+        assert_eq!(m.count(), added, "lifetime count must be exact");
+    }
+
+    /// Regression: `Rolling::default()` used to derive a zero-capacity
+    /// ring whose wrap path indexed an empty Vec and panicked on the
+    /// first push past the (empty) window.
+    #[test]
+    fn rolling_default_survives_many_pushes() {
+        let r = Rolling::default();
+        for v in 0..300 {
+            r.push(v as f64);
+        }
+        assert_eq!(r.len(), 256);
+        // window holds {44..=299}: the first 256 pushes fill 0..=255,
+        // the remaining 44 overwrite slots 0..=43 with 256..=299
+        assert_eq!(r.minmax(), (44.0, 299.0));
+        let want = (44..=299).sum::<i64>() as f64 / 256.0;
+        assert!((r.mean() - want).abs() < 1e-9, "{} vs {want}", r.mean());
     }
 
     #[test]
@@ -203,5 +350,30 @@ mod tests {
         hub.meter("rfps").add(10);
         assert_eq!(hub.meter("rfps").count(), 10);
         assert_eq!(hub.report().len(), 1);
+    }
+
+    #[test]
+    fn hub_snapshot_drains_deltas_and_reads_gauges() {
+        let hub = MetricsHub::default();
+        hub.meter("frames").add(40);
+        hub.meter("episodes").add(2);
+        hub.rolling("lag").push(1.0);
+        hub.rolling("lag").push(3.0);
+        hub.rolling("empty"); // registered but never pushed: omitted
+        let s = hub.snapshot();
+        assert!(s.interval_secs >= 0.0);
+        assert_eq!(
+            s.counters,
+            vec![("episodes".into(), 2), ("frames".into(), 40)]
+        );
+        assert_eq!(s.gauges, vec![("lag".into(), 2.0)]);
+        // second snapshot: counters drained, gauge window persists
+        hub.meter("frames").add(5);
+        let s2 = hub.snapshot();
+        assert_eq!(
+            s2.counters,
+            vec![("episodes".into(), 0), ("frames".into(), 5)]
+        );
+        assert_eq!(s2.gauges, vec![("lag".into(), 2.0)]);
     }
 }

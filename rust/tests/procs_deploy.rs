@@ -114,6 +114,21 @@ fn procs_league_end_to_end() {
     assert!(ls.episodes > 0, "no episodes reported");
     // seed + 2 period freezes
     assert!(ls.pool_size >= 3, "pool {}", ls.pool_size);
+    // the telemetry plane merged the workers' heartbeat snapshots into
+    // a league-wide view: actors reported env frames, the learner its
+    // consumed frames, and the in-process pool replicas their reads
+    let tele = ctrl.telemetry_report();
+    let total = |role: &str, k: &str| {
+        tele.roles
+            .iter()
+            .find(|r| r.role == role)
+            .and_then(|r| r.totals.iter().find(|(n, _)| n == k))
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    };
+    assert!(total("actor", "env_frames") > 0, "{tele:?}");
+    assert!(total("learner", "consumed_frames") > 0, "{tele:?}");
+    assert!(total("model-pool", "reads") > 0, "{tele:?}");
     ctrl.shutdown();
     kids.expect_clean_exit(Duration::from_secs(30));
 }
