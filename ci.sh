@@ -43,6 +43,12 @@ cargo bench --bench bench_main -- deploy --json BENCH_pr4.json
 echo "== bench smoke: cargo bench --bench bench_main -- telemetry"
 cargo bench --bench bench_main -- telemetry --json BENCH_pr5.json
 
+# Request-path tracing bench: span record overhead, latency-hist record
+# + 64-way merge, and the actor row path at trace-sample 0 / 1% / 100%
+# (the off row is the no-overhead-when-untraced claim; see BENCH_pr6.json).
+echo "== bench smoke: cargo bench --bench bench_main -- trace"
+cargo bench --bench bench_main -- trace --json BENCH_pr6.json
+
 # Telemetry stats smoke: a short thread-mode league writing a JSONL
 # trajectory; assert the file is non-empty valid JSONL with monotone
 # timestamps and that the summed actor frame deltas (= the last row's
@@ -71,5 +77,32 @@ EOF
     rm -f "$SJ"
 else
     echo "(artifacts or python3 missing; skipping stats smoke)"
+fi
+
+# Tracing smoke: a fully-sampled thread-mode league exporting its flight
+# recorder as Chrome trace JSON; assert it parses, events are complete
+# ("X") spans covering the actor request path, and timestamps are
+# monotone in the sorted export.
+if [[ -f artifacts/manifest.json ]] && command -v python3 >/dev/null; then
+    echo "== trace smoke: thread-mode league with --trace-sample 1 --trace-out"
+    TJ="$(mktemp -t tleague-trace-XXXXXX.json)"
+    ./target/release/tleague run --env rps --total-steps 30 --period-steps 10 \
+        --trace-sample 1 --trace-slow-ms 1000 --trace-out "$TJ"
+    python3 - "$TJ" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+evs = doc["traceEvents"]
+assert evs, "no trace events exported"
+assert all(e["ph"] == "X" for e in evs), "non-complete event phase"
+ts = [e["ts"] for e in evs]
+assert ts == sorted(ts), "trace timestamps not monotone"
+names = {e["name"] for e in evs}
+for want in ("actor_gather", "actor_infer", "learner_consume"):
+    assert want in names, "missing span %r in %r" % (want, sorted(names))
+print("trace smoke OK: %d events, %d span kinds" % (len(evs), len(names)))
+EOF
+    rm -f "$TJ"
+else
+    echo "(artifacts or python3 missing; skipping trace smoke)"
 fi
 echo "CI OK"

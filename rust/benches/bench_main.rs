@@ -17,6 +17,9 @@
 //!                 heartbeat overhead at 64 registered workers
 //!   telemetry   — stats snapshot encode/decode, 64-slot league merge,
 //!                 heartbeat-with-stats round-trip at 64 workers
+//!   trace       — request-path tracing: span record overhead, latency
+//!                 hist record + 64-way merge, actor row path at
+//!                 trace-sample 0 / 1% / 100% (off must match untraced)
 //!
 //! Filter with `cargo bench -- <substring> [<substring> ...]` (a bench
 //! runs if it matches ANY given substring); add `--json <path>` to also
@@ -120,6 +123,7 @@ fn sample_seg(t: usize, na: usize, d: usize, rng: &mut Pcg32) -> TrajSegment {
         behavior_logp: (0..t * na).map(|_| -rng.next_f32()).collect(),
         rewards: (0..t).map(|_| rng.next_f32()).collect(),
         discounts: vec![0.99; t],
+        trace: None,
     }
 }
 
@@ -620,6 +624,7 @@ fn main() {
                         gamma: 0.99,
                         refresh_every: 1_000_000,
                         train_t: 8,
+                        trace_sample: 0.0,
                     },
                     n,
                     PolicyBackend::Remote(ReqClient::connect(&inf.addr)),
@@ -650,6 +655,7 @@ fn main() {
                             gamma: 0.99,
                             refresh_every: 1_000_000,
                             train_t: 0, // manifest train_t
+                            trace_sample: 0.0,
                         },
                         n,
                         PolicyBackend::Local(engine.clone()),
@@ -783,6 +789,7 @@ fn main() {
                 ("staleness".into(), 0.5),
                 ("batch_fill".into(), 0.93),
             ],
+            ..Default::default()
         };
         let snap = mk_snap(3);
         let snap_bytes = snap.to_bytes();
@@ -870,6 +877,140 @@ fn main() {
         }
         c.request(&Msg::Deregister { worker_id: learner.worker_id })
             .unwrap();
+    }
+
+    // ---- request-path tracing ----------------------------------------------
+    // Span-record overhead (the cost one traced request adds per hop),
+    // hist record + 64-way merge (the per-report controller cost), and
+    // the actor row path at trace-sample 0 / 1% / 100% — the off row is
+    // the no-new-allocation claim: untraced ticks draw no RNG and build
+    // no TraceCtx, so its frames/s must match rollout/remote_n1.
+    println!("\n# request-path tracing (span record, hist merge, sampled row path)");
+    {
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use std::time::Instant;
+        use tleague::actor::{Actor, ActorConfig, PolicyBackend};
+        use tleague::proto::{TaskSpec, TraceCtx};
+        use tleague::telemetry::trace;
+        use tleague::transport::{PullServer, RepServer};
+        use tleague::util::metrics::{Hist, HIST_BUCKETS};
+
+        b.bench("trace/span_record", "span", || {
+            let mut n = 0;
+            let t0 = Instant::now();
+            for i in 0..1_000u64 {
+                let ctx = TraceCtx { trace_id: i + 1, span_id: 0 };
+                let id = trace::finish_span(ctx, 0, "bench_span", "actor", t0, 1);
+                std::hint::black_box(id);
+                n += 1;
+            }
+            n
+        });
+
+        let h = Hist::new();
+        b.bench("trace/hist_record", "rec", || {
+            let mut n = 0;
+            for i in 0..10_000u64 {
+                h.record(i.wrapping_mul(2654435761) % 1_000_000);
+                n += 1;
+            }
+            n
+        });
+        let shards: Vec<[u64; HIST_BUCKETS]> = (0..64)
+            .map(|s| {
+                let sh = Hist::new();
+                for i in 0..1_000u64 {
+                    sh.record((i + s) * 37 % 500_000);
+                }
+                sh.totals()
+            })
+            .collect();
+        b.bench("trace/hist_merge_64", "merge", || {
+            let mut acc = [0u64; HIST_BUCKETS];
+            for t in &shards {
+                for (a, v) in acc.iter_mut().zip(t.iter()) {
+                    *a += v;
+                }
+            }
+            let p = (
+                Hist::quantile_of(&acc, 0.50),
+                Hist::quantile_of(&acc, 0.95),
+                Hist::quantile_of(&acc, 0.99),
+            );
+            std::hint::black_box(p);
+            64
+        });
+
+        // actor row path under sampling: same stub-server rollout as the
+        // rollout group, swept over --trace-sample
+        let next = AtomicU64::new(1);
+        let league = RepServer::serve("127.0.0.1:0", move |msg| match msg {
+            Msg::RequestActorTask { .. } => Msg::Task(TaskSpec {
+                task_id: next.fetch_add(1, Ordering::Relaxed),
+                learner_key: ModelKey::new(0, 1),
+                opponents: vec![ModelKey::new(0, 0)],
+                hp: vec![],
+            }),
+            Msg::ReportOutcome(_) => Msg::Ok,
+            other => Msg::Err(format!("stub league: {other:?}")),
+        })
+        .unwrap();
+        let sink = PullServer::bind("127.0.0.1:0", 1024).unwrap();
+        let sink_addr = sink.addr.clone();
+        let drain_stop = Arc::new(AtomicBool::new(false));
+        let ds = drain_stop.clone();
+        let drainer = std::thread::spawn(move || {
+            let sink = sink;
+            while !ds.load(Ordering::Relaxed) {
+                while sink.try_recv().is_some() {}
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        let tpool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let tpc = ModelPoolClient::connect(&[tpool.addr.clone()]);
+        for (v, frozen) in [(0u32, true), (1u32, false)] {
+            tpc.put(ModelBlob {
+                key: ModelKey::new(0, v),
+                params: vec![0.0; 8],
+                hp: vec![],
+                frozen,
+            })
+            .unwrap();
+        }
+        let act_dim = envs::make("synthetic", 0).unwrap().act_dim();
+        let inf = RepServer::serve("127.0.0.1:0", move |msg| match msg {
+            Msg::InferReq { rows, .. } => Msg::InferResp {
+                logits: vec![0.0; rows as usize * act_dim],
+                value: vec![0.0; rows as usize],
+            },
+            other => Msg::Err(format!("stub inf: {other:?}")),
+        })
+        .unwrap();
+        for (label, sample) in [("off", 0.0f32), ("1pct", 0.01), ("full", 1.0)] {
+            let mut actor = Actor::new_vec(
+                ActorConfig {
+                    env: "synthetic".into(),
+                    actor_id: format!("0/bench-trace-{label}"),
+                    seed: 1,
+                    gamma: 0.99,
+                    refresh_every: 1_000_000,
+                    train_t: 8,
+                    trace_sample: sample,
+                },
+                1,
+                PolicyBackend::Remote(ReqClient::connect(&inf.addr)),
+                &league.addr,
+                &[tpool.addr.clone()],
+                &sink_addr,
+            )
+            .unwrap();
+            let never = AtomicBool::new(false);
+            b.bench(&format!("trace/row_sample_{label}"), "frame", move || {
+                actor.run(1024, &never).unwrap()
+            });
+        }
+        drain_stop.store(true, Ordering::Relaxed);
+        drainer.join().ok();
     }
 
     println!("\n{} benches run", b.rows.len());

@@ -21,18 +21,20 @@
 //! of several batch-of-1 requests.
 
 use crate::envs::{self, VecEnv};
-use crate::inference::{infer_local_rows, infer_remote};
+use crate::inference::{infer_local_rows, infer_remote_traced};
 use crate::league::LeagueClient;
 use crate::model_pool::{LatestFetch, ModelPoolClient};
-use crate::proto::{MatchOutcome, ModelKey, Msg, TaskSpec, TrajSegment};
+use crate::proto::{MatchOutcome, ModelKey, Msg, TaskSpec, TraceCtx, TrajSegment};
 use crate::runtime::Engine;
+use crate::telemetry::trace;
 use crate::transport::{PushClient, ReqClient};
-use crate::util::metrics::{Meter, MetricsHub};
+use crate::util::metrics::{Hist, Meter, MetricsHub};
 use crate::util::rng::{log_softmax_at, Pcg32};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// How this actor evaluates policies.
 pub enum PolicyBackend {
@@ -78,6 +80,9 @@ pub struct ActorConfig {
     /// trajectory segment length; 0 = read from the local engine's
     /// manifest (required explicitly for the Remote backend)
     pub train_t: usize,
+    /// fraction of ticks traced end-to-end (0.0 = tracing off; the
+    /// `row_e2e_us` latency histogram is recorded regardless)
+    pub trace_sample: f32,
 }
 
 impl Default for ActorConfig {
@@ -89,6 +94,7 @@ impl Default for ActorConfig {
             gamma: 0.99,
             refresh_every: 1,
             train_t: 0,
+            trace_sample: 0.0,
         }
     }
 }
@@ -178,6 +184,16 @@ pub struct Actor {
     learner_acts_buf: Vec<Vec<(usize, f32)>>,
     pub frames: Arc<Meter>,
     pub episodes: Arc<Meter>,
+    /// end-to-end latency of one forward pass as the actor sees it
+    /// (gathered obs in → logits out), in µs — always recorded
+    pub row_e2e: Arc<Hist>,
+    /// dedicated sampling RNG: tracing must never perturb the slot RNG
+    /// streams (1-slot bit-compatibility)
+    trace_rng: Pcg32,
+    /// trace context of the most recent sampled tick, attached to the
+    /// next pushed segment (then cleared) so the learner's consume span
+    /// joins the trace
+    pending_ctx: Option<TraceCtx>,
     /// frames stepped by THIS actor — `frames` may be a hub meter
     /// shared with other actors after [`use_hub`](Actor::use_hub), so
     /// `run`'s budget must not count their work
@@ -269,6 +285,12 @@ impl Actor {
             env,
             frames: Arc::new(Meter::new()),
             episodes: Arc::new(Meter::new()),
+            row_e2e: Arc::new(Hist::new()),
+            trace_rng: Pcg32::from_label(
+                cfg.seed,
+                &format!("{}#trace", cfg.actor_id),
+            ),
+            pending_ctx: None,
             frames_done: 0,
             cfg,
         })
@@ -276,11 +298,20 @@ impl Actor {
 
     /// Route this actor's throughput counters through `hub` so the
     /// telemetry plane can snapshot them (counters `env_frames` /
-    /// `episodes`).  Call before the first step — re-pointing later
-    /// would drop counts already accumulated on the private meters.
+    /// `episodes`, histogram `row_e2e_us`, transport byte meters).
+    /// Call before the first step — re-pointing later would drop counts
+    /// already accumulated on the private meters.
     pub fn use_hub(&mut self, hub: &MetricsHub) {
         self.frames = hub.meter("env_frames");
         self.episodes = hub.meter("episodes");
+        self.row_e2e = hub.hist("row_e2e_us");
+        // transport byte accounting: segment pushes + remote inference
+        // share the role-level bytes_in/bytes_out meters
+        self.push.bytes_out = hub.meter("bytes_out");
+        if let PolicyBackend::Remote(client) = &mut self.backend {
+            client.bytes_in = hub.meter("bytes_in");
+            client.bytes_out = hub.meter("bytes_out");
+        }
     }
 
     /// Concurrent episodes this actor drives.
@@ -330,13 +361,34 @@ impl Actor {
         Ok(self.install_params(key, blob.params))
     }
 
+    /// Roll the tracing sampler: `Some(ctx)` on a sampled event, `None`
+    /// (no RNG draw, no allocation) when tracing is off.  The ctx's
+    /// `span_id` is pre-allocated so it can ride the wire as the parent
+    /// of downstream server-side spans before the local span finishes.
+    fn roll_trace(&mut self) -> Option<TraceCtx> {
+        (self.cfg.trace_sample > 0.0
+            && self.trace_rng.next_f32() < self.cfg.trace_sample)
+            .then(|| TraceCtx {
+                trace_id: trace::next_id(),
+                span_id: trace::next_id(),
+            })
+    }
+
     /// Delta-aware learner refresh: echo the (version, rev) we hold so
     /// an unchanged in-training model costs a NotModified instead of a
     /// full params transfer.
     fn refresh_learner(&mut self, key: ModelKey) -> Result<()> {
         let (hv, hr) =
             self.latest_have.get(&key.agent).copied().unwrap_or((0, 0));
-        match self.pool.get_latest_if_newer(key.agent, hv, hr) {
+        let ctx = self.roll_trace();
+        let t0 = Instant::now();
+        let fetched = self.pool.get_latest_if_newer_traced(key.agent, hv, hr, ctx);
+        if let Some(c) = ctx {
+            trace::finish_span_id(
+                c.trace_id, c.span_id, 0, "pool_get", "actor", t0, 0,
+            );
+        }
+        match fetched {
             Ok(LatestFetch::NotModified) if self.params.contains_key(&key) => {
                 return Ok(());
             }
@@ -376,7 +428,15 @@ impl Actor {
 
     /// Forward pass for `rows` env-slot observation rows (each `obs_dim`
     /// f32s) under `key`'s policy; returns `rows * act_dim` logits.
-    fn infer(&mut self, key: ModelKey, obs: &[f32], rows: usize) -> Result<Vec<f32>> {
+    /// `trace` rides the `InferReq` on the Remote backend (the InfServer
+    /// parents its queue/compute/reply spans to `trace.span_id`).
+    fn infer(
+        &mut self,
+        key: ModelKey,
+        obs: &[f32],
+        rows: usize,
+        trace: Option<TraceCtx>,
+    ) -> Result<Vec<f32>> {
         let logits = match &self.backend {
             PolicyBackend::Local(engine) => {
                 anyhow::ensure!(
@@ -398,7 +458,7 @@ impl Actor {
             }
             PolicyBackend::Remote(client) => {
                 let (logits, _value) =
-                    infer_remote(client, key, obs, rows as u32)?;
+                    infer_remote_traced(client, key, obs, rows as u32, trace)?;
                 logits
             }
         };
@@ -433,6 +493,7 @@ impl Actor {
             behavior_logp: std::mem::take(&mut slot.seg.logp),
             rewards: std::mem::take(&mut slot.seg.rewards),
             discounts: std::mem::take(&mut slot.seg.discounts),
+            trace: self.pending_ctx.take(),
         };
         slot.seg.clear();
         self.push.push(&Msg::Traj(seg))
@@ -453,6 +514,10 @@ impl Actor {
         //    entry per (slot, group) in canonical order — slot-major,
         //    learner group first.  Scratch buffers are reused across
         //    ticks; a gather slot is live this tick once it has rows.
+        //    A sampled tick (`trace_sample`) opens an actor_gather span
+        //    whose trace threads through every InferReq this tick.
+        let tick_ctx = self.roll_trace();
+        let gather_t0 = tick_ctx.map(|_| Instant::now());
         self.plan.clear();
         let mut gathers = std::mem::take(&mut self.gather_buf);
         for g in &mut gathers {
@@ -489,13 +554,36 @@ impl Actor {
 
         // 3. one forward pass per live key (multi-row InferReq /
         //    chunked wide-artifact call) ...
+        if let (Some(ctx), Some(t0)) = (tick_ctx, gather_t0) {
+            let rows: usize = gathers.iter().map(|g| g.2).sum();
+            trace::finish_span_id(
+                ctx.trace_id, ctx.span_id, 0,
+                "actor_gather", "actor", t0, rows as u32,
+            );
+            // the next pushed segment joins this trace (learner_consume)
+            self.pending_ctx = Some(ctx);
+        }
         let mut key_logits: Vec<Vec<f32>> = Vec::with_capacity(gathers.len());
         for (key, obs, rows) in &gathers {
             if *rows == 0 {
                 key_logits.push(Vec::new()); // stale scratch slot
                 continue;
             }
-            key_logits.push(self.infer(*key, obs, *rows)?);
+            let t0 = Instant::now();
+            let ctx = tick_ctx.map(|t| TraceCtx {
+                trace_id: t.trace_id,
+                span_id: trace::next_id(),
+            });
+            let logits = self.infer(*key, obs, *rows, ctx)?;
+            // always-on e2e row latency, sampled or not
+            self.row_e2e.record_micros(t0.elapsed());
+            if let (Some(c), Some(t)) = (ctx, tick_ctx) {
+                trace::finish_span_id(
+                    c.trace_id, c.span_id, t.span_id,
+                    "actor_infer", "actor", t0, *rows as u32,
+                );
+            }
+            key_logits.push(logits);
         }
         self.gather_buf = gathers;
 

@@ -76,6 +76,12 @@ pub struct RunConfig {
     /// append one merged-league-telemetry JSON object per report
     /// interval to this file (None = no trajectory file)
     pub stats_jsonl: Option<String>,
+    /// fraction of actor ticks that carry a trace context (0.0 = spans
+    /// off; latency histograms record regardless)
+    pub trace_sample: f64,
+    /// requests slower than this land in the flight recorder's
+    /// slow-request log even when unsampled elsewhere
+    pub trace_slow_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -113,6 +119,8 @@ impl Default for RunConfig {
             heartbeat_timeout_ms: 5_000,
             stats_every_secs: 2,
             stats_jsonl: None,
+            trace_sample: 0.0,
+            trace_slow_ms: 50,
         }
     }
 }
@@ -198,6 +206,9 @@ impl RunConfig {
         if let Some(s) = j.get("stats_jsonl").and_then(|v| v.as_str()) {
             cfg.stats_jsonl = Some(s.to_string());
         }
+        cfg.trace_sample = get_num(&j, "trace_sample", cfg.trace_sample);
+        cfg.trace_slow_ms =
+            get_num(&j, "trace_slow_ms", cfg.trace_slow_ms as f64) as u64;
         if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
             for (k, v) in obj {
                 cfg.hp_overrides
@@ -242,6 +253,10 @@ impl RunConfig {
         );
         anyhow::ensure!(self.heartbeat_ms >= 1, "heartbeat_ms >= 1");
         anyhow::ensure!(self.stats_every_secs >= 1, "stats_every_secs >= 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.trace_sample),
+            "trace_sample must be in [0, 1]"
+        );
         // a timeout tighter than two heartbeats would declare healthy
         // workers dead on ordinary scheduling jitter
         anyhow::ensure!(
@@ -282,6 +297,8 @@ impl RunConfig {
             infer_max_wait_us: self.infer_max_wait_us,
             infer_refresh_ms: self.infer_refresh_ms,
             heartbeat_ms: self.heartbeat_ms,
+            trace_sample: self.trace_sample,
+            trace_slow_ms: self.trace_slow_ms,
         }
     }
 
@@ -447,6 +464,24 @@ mod tests {
         assert_eq!(d.stats_every_secs, 2);
         assert!(d.stats_jsonl.is_none());
         assert!(RunConfig::from_json(r#"{"stats_every_secs": 0}"#).is_err());
+    }
+
+    #[test]
+    fn trace_knobs_parse_and_ride_the_slice() {
+        let cfg = RunConfig::from_json(
+            r#"{"env": "rps", "trace_sample": 0.25, "trace_slow_ms": 10}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.trace_sample, 0.25);
+        assert_eq!(cfg.trace_slow_ms, 10);
+        let s = cfg.slice();
+        assert_eq!(s.trace_sample, 0.25);
+        assert_eq!(s.trace_slow_ms, 10);
+        let d = RunConfig::default();
+        assert_eq!(d.trace_sample, 0.0);
+        assert_eq!(d.trace_slow_ms, 50);
+        assert!(RunConfig::from_json(r#"{"trace_sample": 1.5}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"trace_sample": -0.1}"#).is_err());
     }
 
     #[test]

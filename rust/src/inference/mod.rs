@@ -17,8 +17,9 @@
 //! learner's updates.
 
 use crate::model_pool::{LatestFetch, ModelPoolClient};
-use crate::proto::{ModelBlob, ModelKey, Msg};
+use crate::proto::{ModelBlob, ModelKey, Msg, TraceCtx};
 use crate::runtime::{Engine, Tensor};
+use crate::telemetry::trace;
 use crate::transport::{RepServer, Reply};
 use crate::util::metrics::{Meter, MetricsHub};
 use anyhow::Result;
@@ -35,6 +36,8 @@ struct Pending {
     reply: Arc<ReplySlot>,
     seq: u64,
     enqueued: Instant,
+    /// propagated trace context of a sampled request (None = untraced)
+    trace: Option<TraceCtx>,
 }
 
 /// Per-connection reply rendezvous, reused across requests.  REQ/REP
@@ -136,6 +139,7 @@ fn deliver_rows(
     let (mut lo, mut vo) = (0usize, 0usize);
     for p in batch {
         let (ln, vn) = (p.rows * lrow, p.rows * vrow);
+        let t0 = Instant::now();
         p.reply.deliver(
             p.seq,
             Msg::InferResp {
@@ -143,6 +147,17 @@ fn deliver_rows(
                 value: value[vo..vo + vn].to_vec(),
             },
         );
+        // reply-scatter span closes the server side of a traced chain
+        if let Some(ctx) = p.trace {
+            trace::finish_span(
+                ctx,
+                ctx.span_id,
+                "inf_reply",
+                "inf-server",
+                t0,
+                p.rows as u32,
+            );
+        }
         lo += ln;
         vo += vn;
     }
@@ -216,7 +231,7 @@ impl InfServer {
         let queue = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
         let q2 = queue.clone();
         let server = RepServer::serve_frames(bind, move |msg| match msg {
-            Msg::InferReq { key, obs, rows } => {
+            Msg::InferReq { key, obs, rows, trace } => {
                 // validate against the manifest BEFORE queueing: a
                 // mis-sized request would mis-slice the whole batch
                 if rows == 0
@@ -244,6 +259,7 @@ impl InfServer {
                             reply: slot.clone(),
                             seq,
                             enqueued: Instant::now(),
+                            trace,
                         });
                     cv.notify_one();
                 }
@@ -260,6 +276,13 @@ impl InfServer {
         let rows_meter = hub.meter("rows");
         let batch_meter = hub.meter("passes");
         let fill = hub.rolling("batch_fill");
+        // queue-wait latency distribution: recorded for EVERY request at
+        // batch dispatch (cheap atomic bump), independent of span
+        // sampling — percentiles flow even with tracing off
+        let queue_wait = hub.hist("queue_wait_us");
+        // server-side bandwidth rides the same role snapshot
+        hub.register("bytes_in", server.bytes_in.clone());
+        hub.register("bytes_out", server.bytes_out.clone());
         let pool = ModelPoolClient::connect(pool_addrs);
         let stop2 = stop.clone();
         let rm = rows_meter.clone();
@@ -327,6 +350,21 @@ impl InfServer {
                     if batch.is_empty() {
                         continue;
                     }
+                    // dispatch point: the enqueue→dispatch wait is over
+                    for p in &batch {
+                        queue_wait.record_micros(p.enqueued.elapsed());
+                        if let Some(ctx) = p.trace {
+                            trace::finish_span(
+                                ctx,
+                                ctx.span_id,
+                                "inf_queue_wait",
+                                "inf-server",
+                                p.enqueued,
+                                p.rows as u32,
+                            );
+                        }
+                    }
+                    let compute_t0 = Instant::now();
                     let params = Self::params_for(
                         &mut cache, &pool, &engine, key, cfg.refresh,
                     );
@@ -354,6 +392,21 @@ impl InfServer {
                                     / (passes.max(1) as usize * cfg.batch.max(1))
                                         as f64,
                             );
+                            // one compute span per batch, tagged with the
+                            // first traced request's chain (covers param
+                            // fetch + forward passes + demux)
+                            if let Some(ctx) =
+                                batch.iter().find_map(|p| p.trace)
+                            {
+                                trace::finish_span(
+                                    ctx,
+                                    ctx.span_id,
+                                    "inf_compute",
+                                    "inf-server",
+                                    compute_t0,
+                                    rows as u32,
+                                );
+                            }
                         }
                         Err(e) => reply_err(&batch, &format!("{e}")),
                     }
@@ -514,7 +567,20 @@ pub fn infer_remote(
     obs: &[f32],
     rows: u32,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
-    match client.request(&Msg::InferReq { key, obs: obs.to_vec(), rows })? {
+    infer_remote_traced(client, key, obs, rows, None)
+}
+
+/// [`infer_remote`] carrying an optional trace context: a sampled
+/// request propagates its `TraceCtx` so the server parents its
+/// queue-wait/compute/reply spans under the caller's span.
+pub fn infer_remote_traced(
+    client: &crate::transport::ReqClient,
+    key: ModelKey,
+    obs: &[f32],
+    rows: u32,
+    trace: Option<TraceCtx>,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    match client.request(&Msg::InferReq { key, obs: obs.to_vec(), rows, trace })? {
         Msg::InferResp { logits, value } => Ok((logits, value)),
         other => anyhow::bail!("infer: unexpected reply {other:?}"),
     }
@@ -720,12 +786,12 @@ mod tests {
         let c = ReqClient::connect(&server.addr);
         // obs holds one row but the header claims two
         let reply = c
-            .request(&Msg::InferReq { key, obs: vec![0.0; d], rows: 2 })
+            .request(&Msg::InferReq { key, obs: vec![0.0; d], rows: 2, trace: None })
             .unwrap();
         assert!(matches!(reply, Msg::Err(_)), "got {reply:?}");
         // zero rows is never valid
         let reply = c
-            .request(&Msg::InferReq { key, obs: vec![], rows: 0 })
+            .request(&Msg::InferReq { key, obs: vec![], rows: 0, trace: None })
             .unwrap();
         assert!(matches!(reply, Msg::Err(_)), "got {reply:?}");
         // a well-formed request on the SAME connection still succeeds
@@ -820,8 +886,68 @@ mod tests {
                 key: ModelKey::new(9, 9),
                 obs: vec![0.0; 4],
                 rows: 1,
+                trace: None,
             })
             .unwrap();
         assert!(matches!(reply, Msg::Err(_)));
+    }
+
+    /// Satellite: a traced InferReq leaves the complete server-side span
+    /// chain — enqueue→dispatch wait, batch compute, reply scatter — in
+    /// the flight recorder, every span parented on the caller's span id,
+    /// and the queue-wait histogram records the request regardless.
+    #[test]
+    fn traced_request_leaves_complete_span_chain() {
+        let Some(engine) = engine() else { return };
+        let pool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let pc = ModelPoolClient::connect(&[pool.addr.clone()]);
+        let params = engine.init_params("rps").unwrap();
+        let key = ModelKey::new(0, 1);
+        pc.put(ModelBlob { key, params, hp: vec![], frozen: true }).unwrap();
+        let m = engine.manifest.env("rps").unwrap().clone();
+        let server = InfServer::start(
+            "127.0.0.1:0",
+            InfServerConfig {
+                env: "rps".into(),
+                batch: m.infer_b,
+                max_wait: Duration::from_millis(1),
+                refresh: Duration::from_millis(50),
+            },
+            engine,
+            &[pool.addr.clone()],
+        )
+        .unwrap();
+        let hist_before = server.hub.hist("queue_wait_us").count();
+        let client = ReqClient::connect(&server.addr);
+        let ctx = TraceCtx {
+            trace_id: trace::next_id(),
+            span_id: trace::next_id(),
+        };
+        let (logits, _) =
+            infer_remote_traced(&client, key, &[1.0, 0.0, 0.0, 0.0], 1, Some(ctx))
+                .unwrap();
+        assert_eq!(logits.len(), m.act_dim);
+        // non-destructive snapshot: lib tests run in parallel and share
+        // the process-global recorder, so draining here would race
+        let spans: Vec<_> = trace::recorder()
+            .snapshot()
+            .into_iter()
+            .filter(|s| s.trace_id == ctx.trace_id)
+            .collect();
+        for want in ["inf_queue_wait", "inf_compute", "inf_reply"] {
+            let s = spans
+                .iter()
+                .find(|s| s.name == want)
+                .unwrap_or_else(|| panic!("missing {want} span in {spans:?}"));
+            assert_eq!(s.parent, ctx.span_id, "{want} must parent on the caller");
+            assert_eq!(s.role, "inf-server");
+            assert!(s.rows >= 1, "{want} span carries its row count");
+        }
+        // the latency histogram is span-independent but must cover this
+        // request too
+        assert!(
+            server.hub.hist("queue_wait_us").count() > hist_before,
+            "queue_wait_us must record every dispatched request"
+        );
     }
 }

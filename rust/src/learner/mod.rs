@@ -18,6 +18,7 @@ use crate::league::LeagueClient;
 use crate::model_pool::ModelPoolClient;
 use crate::proto::{ModelBlob, ModelKey, Msg};
 use crate::runtime::{Engine, Tensor};
+use crate::telemetry::trace;
 use crate::transport::PullServer;
 use crate::util::metrics::{Meter, MetricsHub, Rolling};
 use allreduce::Allreduce;
@@ -157,6 +158,8 @@ impl Learner {
         self.rfps = hub.meter("recv_frames");
         self.cfps = hub.meter("consumed_frames");
         self.staleness = hub.rolling("staleness");
+        // trajectory ingress byte accounting rides the same snapshot
+        hub.register("bytes_in", self.data.bytes_in.clone());
     }
 
     /// Publish the version-0 seed model (random init or, in general,
@@ -186,11 +189,21 @@ impl Learner {
     }
 
     /// Drain the data port into the replay memory (non-blocking).
+    /// Traced segments close the request-path chain with a
+    /// `learner_consume` span parented to the actor's tick span.
     pub fn ingest(&mut self) {
         while let Some(msg) = self.data.try_recv() {
             if let Msg::Traj(seg) = msg {
+                let t0 = std::time::Instant::now();
+                let ctx = seg.trace;
+                let rows = seg.t;
                 self.rfps.add(seg.t as u64);
                 self.replay.push(seg);
+                if let Some(c) = ctx {
+                    trace::finish_span(
+                        c, c.span_id, "learner_consume", "learner", t0, rows,
+                    );
+                }
             }
         }
     }

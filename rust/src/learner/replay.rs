@@ -211,6 +211,7 @@ mod tests {
             behavior_logp: vec![-1.0; t * na],
             rewards: (0..t).map(|i| fill * i as f32).collect(),
             discounts: vec![0.99; t],
+            trace: None,
         }
     }
 

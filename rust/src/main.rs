@@ -8,7 +8,9 @@
 //!   controller                                          procs-mode control plane
 //!   worker     --role learner|actor|inf-server          one league role,
 //!              --controller host:port                   controller-directed
-//!   stats      --controller host:port [--deploy]        merged league telemetry
+//!   stats      --controller host:port [--deploy] [--json] merged league telemetry
+//!   trace      --controller host:port [--trace-out F]   flight-recorder export
+//!                                                       (Chrome trace JSON)
 //!   eval-doom  --checkpoint <f32 file> --setting 1|2a|2b|2c --games N
 //!   eval-rps   --artifacts DIR                           exploitability demo
 //!   league-mgr / model-pool                              standalone services
@@ -56,6 +58,7 @@ fn run() -> Result<()> {
         Some("controller") => cmd_controller(&args),
         Some("worker") => cmd_worker(&args),
         Some("stats") => cmd_stats(&args),
+        Some("trace") => cmd_trace(&args),
         Some("info") => cmd_info(&args),
         Some("eval-doom") => cmd_eval_doom(&args),
         Some("eval-rps") => cmd_eval_rps(&args),
@@ -179,8 +182,19 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     if let Some(p) = args.get("stats-jsonl") {
         cfg.stats_jsonl = Some(p.to_string());
     }
+    cfg.trace_sample = args.f64_or("trace-sample", cfg.trace_sample)?;
+    cfg.trace_slow_ms = args.u64_or("trace-slow-ms", cfg.trace_slow_ms)?;
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Write the run's recorded spans as Chrome trace-event JSON
+/// (`--trace-out`): open in chrome://tracing or Perfetto.
+fn export_trace(path: &str, spans: &[tleague::proto::SpanRec]) -> Result<()> {
+    std::fs::write(path, tleague::telemetry::trace::chrome_trace_json(spans))
+        .with_context(|| format!("write trace {path}"))?;
+    println!("wrote {} spans to {path} (chrome://tracing format)", spans.len());
+    Ok(())
 }
 
 /// Open the `--stats-jsonl` sink when configured.
@@ -254,6 +268,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         stats.frames,
         dep.restarts.load(Ordering::Relaxed)
     );
+    if let Some(path) = args.get("trace-out") {
+        export_trace(path, &dep.trace_spans())?;
+    }
     Ok(())
 }
 
@@ -416,6 +433,11 @@ fn cmd_run_procs(cfg: RunConfig, args: &Args) -> Result<()> {
         "done: pool={} episodes={} frames={} worker respawns={respawns} lost={} reassigned={}",
         ls.pool_size, ls.episodes, ls.frames, ds.lost, ds.reassigned
     );
+    // spans merged at the controller: each worker's final heartbeat
+    // carried its flight-recorder drain during the shutdown above
+    if let Some(path) = args.get("trace-out") {
+        export_trace(path, &ctrl.trace_spans())?;
+    }
     Ok(())
 }
 
@@ -493,6 +515,10 @@ fn cmd_stats(args: &Args) -> Result<()> {
     }
     match c.request(&Msg::StatsQuery)? {
         Msg::StatsReply(r) => {
+            if args.bool("json") {
+                println!("{}", telemetry::report_json(&r));
+                return Ok(());
+            }
             println!("league: {}", telemetry::summary_line(&r));
             for role in &r.roles {
                 let totals: Vec<String> = role
@@ -514,6 +540,29 @@ fn cmd_stats(args: &Args) -> Result<()> {
             Ok(())
         }
         other => anyhow::bail!("StatsQuery: unexpected reply {other:?}"),
+    }
+}
+
+/// Drain the flight recorder of a running league (`tleague trace
+/// --controller host:port [--trace-out <path>]`): the controller
+/// replies with the spans merged into its league view (worker heartbeat
+/// drains + its own in-process roles), exported as Chrome trace JSON.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use tleague::proto::Msg;
+    let addr = args
+        .get("controller")
+        .context("--controller host:port required")?;
+    let c = tleague::transport::ReqClient::connect(addr);
+    match c.request(&Msg::TraceQuery)? {
+        Msg::TraceReply(spans) => {
+            anyhow::ensure!(
+                !spans.is_empty(),
+                "controller has no recorded spans yet (run with --trace-sample > 0, \
+                 or wait for requests slower than --trace-slow-ms)"
+            );
+            export_trace(&args.str_or("trace-out", "trace.json"), &spans)
+        }
+        other => anyhow::bail!("TraceQuery: unexpected reply {other:?}"),
     }
 }
 

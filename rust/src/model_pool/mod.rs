@@ -14,7 +14,8 @@
 //! and are written temp-then-rename, so a crash never leaves a torn
 //! blob (see DESIGN.md §Spill policy).
 
-use crate::proto::{ModelBlob, ModelKey, Msg, TAG_MODEL, TAG_MODEL_REV};
+use crate::proto::{ModelBlob, ModelKey, Msg, TraceCtx, TAG_MODEL, TAG_MODEL_REV};
+use crate::telemetry::trace;
 use crate::transport::{RepServer, Reply, ReqClient};
 use crate::util::codec::{Enc, Wire};
 use crate::util::metrics::{Meter, MetricsHub};
@@ -382,18 +383,34 @@ impl ModelPoolServer {
                 puts.add(1);
                 Reply::Msg(Msg::Ok)
             }
-            Msg::GetModel { key } => {
-                model_reply(&s2, Sel::Exact(key), None, &meters)
+            Msg::GetModel { key, trace } => {
+                let t0 = std::time::Instant::now();
+                let reply = model_reply(&s2, Sel::Exact(key), None, &meters);
+                if let Some(c) = trace {
+                    trace::finish_span(
+                        c, c.span_id, "pool_get", "model-pool", t0, 0,
+                    );
+                }
+                reply
             }
             Msg::GetLatest { agent } => {
                 model_reply(&s2, Sel::Latest(agent), None, &meters)
             }
-            Msg::GetModelIfNewer { agent, have_version, have_rev } => model_reply(
-                &s2,
-                Sel::Latest(agent),
-                Some((have_version, have_rev)),
-                &meters,
-            ),
+            Msg::GetModelIfNewer { agent, have_version, have_rev, trace } => {
+                let t0 = std::time::Instant::now();
+                let reply = model_reply(
+                    &s2,
+                    Sel::Latest(agent),
+                    Some((have_version, have_rev)),
+                    &meters,
+                );
+                if let Some(c) = trace {
+                    trace::finish_span(
+                        c, c.span_id, "pool_get", "model-pool", t0, 0,
+                    );
+                }
+                reply
+            }
             Msg::PoolStats => {
                 let st = s2.lock().unwrap();
                 Reply::Msg(Msg::PoolStatsReply {
@@ -411,6 +428,9 @@ impl ModelPoolServer {
             Msg::Ping => Reply::Msg(Msg::Pong),
             other => Reply::Msg(Msg::Err(format!("model_pool: unexpected {other:?}"))),
         })?;
+        // wire byte accounting rides the same telemetry snapshot
+        hub.register("bytes_in", server.bytes_in.clone());
+        hub.register("bytes_out", server.bytes_out.clone());
         Ok(ModelPoolServer {
             addr: server.addr.clone(),
             store,
@@ -541,7 +561,7 @@ impl ModelPoolClient {
     }
 
     pub fn get(&self, key: ModelKey) -> Result<Option<ModelBlob>> {
-        match self.pick().request(&Msg::GetModel { key })? {
+        match self.pick().request(&Msg::GetModel { key, trace: None })? {
             Msg::Model(b) => Ok(Some(b)),
             Msg::NotFound => Ok(None),
             other => bail!("get: unexpected reply {other:?}"),
@@ -566,8 +586,21 @@ impl ModelPoolClient {
         have_version: u32,
         have_rev: u64,
     ) -> Result<LatestFetch> {
+        self.get_latest_if_newer_traced(agent, have_version, have_rev, None)
+    }
+
+    /// [`get_latest_if_newer`](Self::get_latest_if_newer) with an
+    /// optional trace context riding the request — the serving replica
+    /// records a `pool_get` span parented to `trace.span_id`.
+    pub fn get_latest_if_newer_traced(
+        &self,
+        agent: u32,
+        have_version: u32,
+        have_rev: u64,
+        trace: Option<TraceCtx>,
+    ) -> Result<LatestFetch> {
         let idx = self.sticky.load(Ordering::Relaxed) % self.replicas.len();
-        let req = Msg::GetModelIfNewer { agent, have_version, have_rev };
+        let req = Msg::GetModelIfNewer { agent, have_version, have_rev, trace };
         match self.replicas[idx].request(&req) {
             Ok(Msg::NotModified) => Ok(LatestFetch::NotModified),
             Ok(Msg::ModelRev { rev, blob }) => Ok(LatestFetch::New { rev, blob }),

@@ -22,7 +22,7 @@ use crate::config::RunConfig;
 use crate::league::LeagueStats;
 use crate::orchestrator::CoreServices;
 use crate::proto::{LeagueReport, Msg, RunSlice, WorkerAssignment};
-use crate::telemetry::{snapshot_role, LeagueView};
+use crate::telemetry::{snapshot_role, trace, LeagueView};
 use crate::transport::RepServer;
 use crate::util::metrics::MetricsHub;
 use anyhow::Result;
@@ -366,6 +366,9 @@ fn merged_report(view: &LeagueView, pool_hubs: &[Arc<MetricsHub>]) -> LeagueRepo
     for (i, h) in pool_hubs.iter().enumerate() {
         view.ingest(&snapshot_role(h, "model-pool", i as u32));
     }
+    // services sharing the controller process (pool replicas) record
+    // into its flight recorder; fold those spans into the view too
+    view.ingest_spans(&trace::recorder().drain(1024));
     view.report()
 }
 
@@ -536,6 +539,9 @@ impl Controller {
                 // jitter with external probe timing); pool figures are
                 // as of the last periodic report
                 Msg::StatsQuery => Msg::StatsReply(v2.report()),
+                // read-only for the same reason: the trace probe copies
+                // the view's span ring + slow log without draining them
+                Msg::TraceQuery => Msg::TraceReply(v2.spans()),
                 Msg::DeployStats => {
                     let s = stats_of(&st);
                     Msg::DeployStatsReply {
@@ -640,6 +646,12 @@ impl Controller {
     /// in-process ModelPool hubs (same path `Msg::StatsQuery` serves).
     pub fn telemetry_report(&self) -> LeagueReport {
         merged_report(&self.view, &self.pool_hubs)
+    }
+
+    /// Recent + slow request spans accumulated in the league view (same
+    /// data `Msg::TraceQuery` serves over the wire).
+    pub fn trace_spans(&self) -> Vec<crate::proto::SpanRec> {
+        self.view.spans()
     }
 
     pub fn learners_done(&self) -> bool {
@@ -988,6 +1000,7 @@ mod tests {
                 .map(|(k, v)| (k.to_string(), *v))
                 .collect(),
             gauges: gauges.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            ..Default::default()
         })
     }
 

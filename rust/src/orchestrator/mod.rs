@@ -28,7 +28,7 @@ use crate::learner::{Learner, LearnerConfig, TrainStats};
 use crate::model_pool::{ModelPoolServer, PoolOptions};
 use crate::proto::LeagueReport;
 use crate::runtime::Engine;
-use crate::telemetry::{snapshot_role, LeagueView};
+use crate::telemetry::{snapshot_role, trace, LeagueView};
 use crate::util::metrics::MetricsHub;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -326,6 +326,7 @@ impl Deployment {
 
         let stop = Arc::new(AtomicBool::new(false));
         let actor_stop = Arc::new(AtomicBool::new(false));
+        trace::set_slow_ms(cfg.trace_slow_ms);
         let manifest_env = crate::envs::manifest_name(&cfg.env).to_string();
         let mut hubs: Vec<(&'static str, u32, Arc<MetricsHub>)> = core
             .pools
@@ -457,6 +458,7 @@ impl Deployment {
             gamma: self.cfg.gamma,
             refresh_every: self.cfg.refresh_every,
             train_t: 0,
+            trace_sample: self.cfg.trace_sample as f32,
         };
         let engine = self.engine.clone();
         let league_addr = self.core.league.addr.clone();
@@ -523,7 +525,15 @@ impl Deployment {
         for (role, slot, hub) in self.hubs.lock().unwrap().iter() {
             self.view.ingest(&snapshot_role(hub, role, *slot));
         }
+        // thread mode: every role shares this process's flight recorder
+        self.view.ingest_spans(&trace::recorder().drain(1024));
         self.view.report()
+    }
+
+    /// Merged flight recorder (spans of every role), for the Chrome
+    /// trace export at the end of a thread-mode run.
+    pub fn trace_spans(&self) -> Vec<crate::proto::SpanRec> {
+        self.view.spans()
     }
 
     /// Force a snapshot right now (tests / operator tooling); returns the

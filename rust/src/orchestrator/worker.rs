@@ -22,7 +22,7 @@ use crate::learner::LearnerConfig;
 use crate::orchestrator::{learner_thread, run_actor, LearnerStatus};
 use crate::proto::{Msg, RoleStats, WorkerAssignment};
 use crate::runtime::Engine;
-use crate::telemetry::snapshot_role;
+use crate::telemetry::{snapshot_role, trace};
 use crate::transport::ReqClient;
 use crate::util::metrics::MetricsHub;
 use anyhow::{bail, Result};
@@ -103,6 +103,9 @@ fn spawn_heartbeat(
                         Some(s) => (s, true),
                         None => {
                             let mut s = snapshot_role(&hub, &role, slot);
+                            // piggyback the flight recorder's recent
+                            // spans (bounded; the ring keeps refilling)
+                            s.spans = trace::recorder().drain(512);
                             s.seq = stats_seq
                                 .fetch_add(1, Ordering::Relaxed)
                                 + 1;
@@ -110,8 +113,10 @@ fn spawn_heartbeat(
                         }
                     }
                 };
-                let has_stats =
-                    !snap.counters.is_empty() || !snap.gauges.is_empty();
+                let has_stats = !snap.counters.is_empty()
+                    || !snap.gauges.is_empty()
+                    || !snap.hists.is_empty()
+                    || !snap.spans.is_empty();
                 let msg = Msg::Heartbeat {
                     worker_id,
                     steps: hb.steps.load(Ordering::Relaxed),
@@ -250,6 +255,8 @@ pub fn run_worker(
             "worker({role}): assigned slot {} as worker {}",
             asn.slot, asn.worker_id
         );
+        // run-wide tracing knobs arrive with the assignment
+        trace::set_slow_ms(asn.run.trace_slow_ms);
         let hb = Arc::new(HbShared::default());
         let hb_handle = spawn_heartbeat(
             controller_addr.to_string(),
@@ -499,6 +506,7 @@ fn run_actor_role(
         gamma: run.gamma,
         refresh_every: run.refresh_every,
         train_t: 0,
+        trace_sample: run.trace_sample as f32,
     };
     let role_stop = Arc::new(AtomicBool::new(false));
     let handle = {

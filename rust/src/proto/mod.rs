@@ -6,6 +6,7 @@
 //! port, InfServer) so a single framed-socket layer serves everything.
 
 use crate::util::codec::{Cursor, Enc, Wire};
+use crate::util::metrics::HistDelta;
 use anyhow::{bail, Result};
 
 /// Wire tag of `Msg::Model`.  Public so the ModelPool frame cache can
@@ -33,6 +34,38 @@ impl std::fmt::Display for ModelKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "agt{:02}:{:04}", self.agent, self.version)
     }
+}
+
+/// Trace context propagated along the request path (actor → inf-server,
+/// actor → learner data port, client → model-pool).  Carried as an
+/// *optional* trailing field on the messages that cross those hops:
+/// absent = untraced, so the hot path pays nothing when sampling is off.
+/// `trace_id` names one sampled rollout row end-to-end; `span_id` names
+/// the sender-side span the receiver should parent its own spans under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+/// One completed span in the flight recorder: a named stage of the
+/// request path with wall-clock start (unix epoch micros) and duration.
+/// `parent` = 0 means root.  `rows` is the batch-row payload the span
+/// covered (0 when not applicable).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct SpanRec {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent: u64,
+    /// stage name: actor_gather | actor_infer | inf_queue_wait |
+    /// inf_compute | inf_reply | learner_consume | pool_get
+    pub name: String,
+    /// role that recorded it: actor | inf-server | learner | model-pool
+    pub role: String,
+    /// span start, microseconds since the unix epoch
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub rows: u32,
 }
 
 /// A task handed to an Actor at episode begin (§3.2): the learning
@@ -75,6 +108,8 @@ pub struct TrajSegment {
     pub behavior_logp: Vec<f32>, // T * n_agents
     pub rewards: Vec<f32>,      // T
     pub discounts: Vec<f32>,    // T
+    /// set when the pushing actor sampled this row for tracing
+    pub trace: Option<TraceCtx>,
 }
 
 /// Versioned parameters + attached hyperparams stored in the ModelPool.
@@ -112,6 +147,12 @@ pub struct RoleStats {
     pub interval_ms: u64,
     pub counters: Vec<(String, u64)>,
     pub gauges: Vec<(String, f64)>,
+    /// latency histogram deltas: name → sparse (bucket, count-delta)
+    /// pairs accumulated over `interval_ms` (same telescoping-delta
+    /// contract as `counters`)
+    pub hists: Vec<(String, HistDelta)>,
+    /// recent spans drained from the role's flight recorder
+    pub spans: Vec<SpanRec>,
 }
 
 /// One role's slice of the merged league view: per-interval rates
@@ -159,6 +200,10 @@ pub struct RunSlice {
     /// cadence the worker must heartbeat at (the controller's timeout is
     /// a multiple of this)
     pub heartbeat_ms: u64,
+    /// fraction of rollout rows the actor traces end-to-end (0 = off)
+    pub trace_sample: f64,
+    /// spans slower than this land in the flight recorder's slow log
+    pub trace_slow_ms: u64,
 }
 
 /// A role slot granted to a worker process: which role instance it is,
@@ -200,7 +245,7 @@ pub enum Msg {
     NotifyPeriodDone { key: ModelKey },
     // -- ModelPool service --------------------------------------------------
     PutModel(ModelBlob),
-    GetModel { key: ModelKey },
+    GetModel { key: ModelKey, trace: Option<TraceCtx> },
     GetLatest { agent: u32 },
     Model(ModelBlob),
     NotFound,
@@ -208,7 +253,7 @@ pub enum Msg {
     /// already hold it".  `have_rev` is the replica-local put counter
     /// returned by the last `ModelRev` reply (0 = hold nothing), which
     /// catches same-version re-puts of the in-training model.
-    GetModelIfNewer { agent: u32, have_version: u32, have_rev: u64 },
+    GetModelIfNewer { agent: u32, have_version: u32, have_rev: u64, trace: Option<TraceCtx> },
     /// Reply to `GetModelIfNewer` when the pool has something newer.
     ModelRev { rev: u64, blob: ModelBlob },
     /// Reply to `GetModelIfNewer` when the requester is current: O(1)
@@ -249,10 +294,14 @@ pub enum Msg {
     /// Telemetry probe: ask the controller for the merged league view.
     StatsQuery,
     StatsReply(LeagueReport),
+    /// Tracing probe: drain the merged flight recorder (recent spans +
+    /// slow-request log) from the controller.
+    TraceQuery,
+    TraceReply(Vec<SpanRec>),
     // -- Learner data port ---------------------------------------------------
     Traj(TrajSegment),
     // -- InfServer -------------------------------------------------------
-    InferReq { key: ModelKey, obs: Vec<f32>, rows: u32 },
+    InferReq { key: ModelKey, obs: Vec<f32>, rows: u32, trace: Option<TraceCtx> },
     InferResp { logits: Vec<f32>, value: Vec<f32> },
 }
 
@@ -264,6 +313,74 @@ impl Wire for ModelKey {
     fn decode(cur: &mut Cursor) -> Result<Self> {
         Ok(ModelKey { agent: cur.u32()?, version: cur.u32()? })
     }
+}
+
+impl Wire for TraceCtx {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u64(self.trace_id);
+        buf.put_u64(self.span_id);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(TraceCtx { trace_id: cur.u64()?, span_id: cur.u64()? })
+    }
+}
+
+/// Optional-TraceCtx presence byte (precedent: `Heartbeat.stats`).  Both
+/// ends of a connection run the same binary, so the byte is always
+/// written; "wire-compatible" means untraced traffic costs one zero
+/// byte, not that old binaries can decode new frames.
+fn put_trace(buf: &mut Vec<u8>, t: &Option<TraceCtx>) {
+    match t {
+        Some(c) => {
+            buf.put_u8(1);
+            c.encode(buf);
+        }
+        None => buf.put_u8(0),
+    }
+}
+
+fn get_trace(cur: &mut Cursor) -> Result<Option<TraceCtx>> {
+    Ok(match cur.u8()? {
+        0 => None,
+        _ => Some(TraceCtx::decode(cur)?),
+    })
+}
+
+impl Wire for SpanRec {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u64(self.trace_id);
+        buf.put_u64(self.span_id);
+        buf.put_u64(self.parent);
+        buf.put_str(&self.name);
+        buf.put_str(&self.role);
+        buf.put_u64(self.ts_us);
+        buf.put_u64(self.dur_us);
+        buf.put_u32(self.rows);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(SpanRec {
+            trace_id: cur.u64()?,
+            span_id: cur.u64()?,
+            parent: cur.u64()?,
+            name: cur.str()?,
+            role: cur.str()?,
+            ts_us: cur.u64()?,
+            dur_us: cur.u64()?,
+            rows: cur.u32()?,
+        })
+    }
+}
+
+fn put_spans(buf: &mut Vec<u8>, v: &[SpanRec]) {
+    buf.put_u32(v.len() as u32);
+    for s in v {
+        s.encode(buf);
+    }
+}
+
+fn get_spans(cur: &mut Cursor) -> Result<Vec<SpanRec>> {
+    let n = cur.u32()? as usize;
+    (0..n).map(|_| SpanRec::decode(cur)).collect()
 }
 
 fn put_keys(buf: &mut Vec<u8>, keys: &[ModelKey]) {
@@ -326,6 +443,7 @@ impl Wire for TrajSegment {
         buf.put_f32s(&self.behavior_logp);
         buf.put_f32s(&self.rewards);
         buf.put_f32s(&self.discounts);
+        put_trace(buf, &self.trace);
     }
     fn decode(cur: &mut Cursor) -> Result<Self> {
         Ok(TrajSegment {
@@ -337,6 +455,7 @@ impl Wire for TrajSegment {
             behavior_logp: cur.f32s()?,
             rewards: cur.f32s()?,
             discounts: cur.f32s()?,
+            trace: get_trace(cur)?,
         })
     }
 }
@@ -396,6 +515,32 @@ fn get_gauges(cur: &mut Cursor) -> Result<Vec<(String, f64)>> {
     (0..n).map(|_| Ok((cur.str()?, cur.f64()?))).collect()
 }
 
+fn put_hists(buf: &mut Vec<u8>, v: &[(String, HistDelta)]) {
+    buf.put_u32(v.len() as u32);
+    for (k, d) in v {
+        buf.put_str(k);
+        buf.put_u32(d.len() as u32);
+        for (idx, n) in d {
+            buf.put_u8(*idx);
+            buf.put_u64(*n);
+        }
+    }
+}
+
+fn get_hists(cur: &mut Cursor) -> Result<Vec<(String, HistDelta)>> {
+    let n = cur.u32()? as usize;
+    (0..n)
+        .map(|_| {
+            let k = cur.str()?;
+            let m = cur.u32()? as usize;
+            let d = (0..m)
+                .map(|_| Ok((cur.u8()?, cur.u64()?)))
+                .collect::<Result<HistDelta>>()?;
+            Ok((k, d))
+        })
+        .collect()
+}
+
 impl Wire for RoleStats {
     fn encode(&self, buf: &mut Vec<u8>) {
         buf.put_str(&self.role);
@@ -404,6 +549,8 @@ impl Wire for RoleStats {
         buf.put_u64(self.interval_ms);
         put_counters(buf, &self.counters);
         put_gauges(buf, &self.gauges);
+        put_hists(buf, &self.hists);
+        put_spans(buf, &self.spans);
     }
     fn decode(cur: &mut Cursor) -> Result<Self> {
         Ok(RoleStats {
@@ -413,6 +560,8 @@ impl Wire for RoleStats {
             interval_ms: cur.u64()?,
             counters: get_counters(cur)?,
             gauges: get_gauges(cur)?,
+            hists: get_hists(cur)?,
+            spans: get_spans(cur)?,
         })
     }
 }
@@ -467,6 +616,8 @@ impl Wire for RunSlice {
         buf.put_u64(self.infer_max_wait_us);
         buf.put_u64(self.infer_refresh_ms);
         buf.put_u64(self.heartbeat_ms);
+        buf.put_f64(self.trace_sample);
+        buf.put_u64(self.trace_slow_ms);
     }
     fn decode(cur: &mut Cursor) -> Result<Self> {
         Ok(RunSlice {
@@ -484,6 +635,8 @@ impl Wire for RunSlice {
             infer_max_wait_us: cur.u64()?,
             infer_refresh_ms: cur.u64()?,
             heartbeat_ms: cur.u64()?,
+            trace_sample: cur.f64()?,
+            trace_slow_ms: cur.u64()?,
         })
     }
 }
@@ -552,9 +705,10 @@ impl Wire for Msg {
                 buf.put_u8(20);
                 b.encode(buf);
             }
-            Msg::GetModel { key } => {
+            Msg::GetModel { key, trace } => {
                 buf.put_u8(21);
                 key.encode(buf);
+                put_trace(buf, trace);
             }
             Msg::GetLatest { agent } => {
                 buf.put_u8(22);
@@ -565,11 +719,12 @@ impl Wire for Msg {
                 b.encode(buf);
             }
             Msg::NotFound => buf.put_u8(24),
-            Msg::GetModelIfNewer { agent, have_version, have_rev } => {
+            Msg::GetModelIfNewer { agent, have_version, have_rev, trace } => {
                 buf.put_u8(27);
                 buf.put_u32(*agent);
                 buf.put_u32(*have_version);
                 buf.put_u64(*have_rev);
+                put_trace(buf, trace);
             }
             Msg::ModelRev { rev, blob } => {
                 buf.put_u8(TAG_MODEL_REV);
@@ -650,11 +805,17 @@ impl Wire for Msg {
                 buf.put_u8(43);
                 r.encode(buf);
             }
-            Msg::InferReq { key, obs, rows } => {
+            Msg::TraceQuery => buf.put_u8(44),
+            Msg::TraceReply(spans) => {
+                buf.put_u8(45);
+                put_spans(buf, spans);
+            }
+            Msg::InferReq { key, obs, rows, trace } => {
                 buf.put_u8(40);
                 key.encode(buf);
                 buf.put_f32s(obs);
                 buf.put_u32(*rows);
+                put_trace(buf, trace);
             }
             Msg::InferResp { logits, value } => {
                 buf.put_u8(41);
@@ -678,7 +839,7 @@ impl Wire for Msg {
             13 => Msg::RequestLearnerTask { learner_id: cur.u32()? },
             14 => Msg::NotifyPeriodDone { key: ModelKey::decode(cur)? },
             20 => Msg::PutModel(ModelBlob::decode(cur)?),
-            21 => Msg::GetModel { key: ModelKey::decode(cur)? },
+            21 => Msg::GetModel { key: ModelKey::decode(cur)?, trace: get_trace(cur)? },
             22 => Msg::GetLatest { agent: cur.u32()? },
             TAG_MODEL => Msg::Model(ModelBlob::decode(cur)?),
             24 => Msg::NotFound,
@@ -686,6 +847,7 @@ impl Wire for Msg {
                 agent: cur.u32()?,
                 have_version: cur.u32()?,
                 have_rev: cur.u64()?,
+                trace: get_trace(cur)?,
             },
             TAG_MODEL_REV => {
                 Msg::ModelRev { rev: cur.u64()?, blob: ModelBlob::decode(cur)? }
@@ -724,10 +886,13 @@ impl Wire for Msg {
             },
             42 => Msg::StatsQuery,
             43 => Msg::StatsReply(LeagueReport::decode(cur)?),
+            44 => Msg::TraceQuery,
+            45 => Msg::TraceReply(get_spans(cur)?),
             40 => Msg::InferReq {
                 key: ModelKey::decode(cur)?,
                 obs: cur.f32s()?,
                 rows: cur.u32()?,
+                trace: get_trace(cur)?,
             },
             41 => Msg::InferResp { logits: cur.f32s()?, value: cur.f32s()? },
             t => bail!("unknown msg tag {t}"),
@@ -756,6 +921,13 @@ mod tests {
             behavior_logp: f(rng, (t * na) as usize),
             rewards: f(rng, t as usize),
             discounts: f(rng, t as usize),
+            trace: match rng.below(2) {
+                0 => None,
+                _ => Some(TraceCtx {
+                    trace_id: rng.next_u32() as u64,
+                    span_id: rng.next_u32() as u64,
+                }),
+            },
         }
     }
 
@@ -793,11 +965,21 @@ mod tests {
             Msg::RequestLearnerTask { learner_id: 2 },
             Msg::NotifyPeriodDone { key: ModelKey::new(0, 4) },
             Msg::PutModel(blob.clone()),
-            Msg::GetModel { key: ModelKey::new(1, 7) },
+            Msg::GetModel { key: ModelKey::new(1, 7), trace: None },
+            Msg::GetModel {
+                key: ModelKey::new(1, 7),
+                trace: Some(TraceCtx { trace_id: 0xfeed, span_id: 2 }),
+            },
             Msg::GetLatest { agent: 1 },
             Msg::Model(blob.clone()),
             Msg::NotFound,
-            Msg::GetModelIfNewer { agent: 1, have_version: 7, have_rev: 3 },
+            Msg::GetModelIfNewer { agent: 1, have_version: 7, have_rev: 3, trace: None },
+            Msg::GetModelIfNewer {
+                agent: 1,
+                have_version: 7,
+                have_rev: 3,
+                trace: Some(TraceCtx { trace_id: 5, span_id: 6 }),
+            },
             Msg::ModelRev { rev: 4, blob },
             Msg::NotModified,
             Msg::PoolStats,
@@ -833,6 +1015,8 @@ mod tests {
                     infer_max_wait_us: 2_000,
                     infer_refresh_ms: 50,
                     heartbeat_ms: 1_000,
+                    trace_sample: 0.01,
+                    trace_slow_ms: 50,
                 },
             }),
             Msg::Retry { backoff_ms: 500, reason: "no free slot".into() },
@@ -851,6 +1035,20 @@ mod tests {
                         ("episodes".into(), 7),
                     ],
                     gauges: vec![("staleness".into(), 0.5)],
+                    hists: vec![
+                        ("row_e2e_us".into(), vec![(10, 3), (12, 1), (63, 2)]),
+                        ("queue_wait_us".into(), vec![(0, 1)]),
+                    ],
+                    spans: vec![SpanRec {
+                        trace_id: 0xabcd,
+                        span_id: 1,
+                        parent: 0,
+                        name: "actor_infer".into(),
+                        role: "actor".into(),
+                        ts_us: 1_700_000_000_000_000,
+                        dur_us: 850,
+                        rows: 4,
+                    }],
                 }),
             },
             Msg::HeartbeatAck { stop: true },
@@ -888,10 +1086,31 @@ mod tests {
                 ],
             }),
             Msg::Traj(traj),
+            Msg::TraceQuery,
+            Msg::TraceReply(vec![
+                SpanRec {
+                    trace_id: 7,
+                    span_id: 8,
+                    parent: 1,
+                    name: "inf_queue_wait".into(),
+                    role: "inf-server".into(),
+                    ts_us: 123,
+                    dur_us: 456,
+                    rows: 32,
+                },
+                SpanRec::default(),
+            ]),
             Msg::InferReq {
                 key: ModelKey::new(0, 0),
                 obs: vec![0.5; 8],
                 rows: 1,
+                trace: None,
+            },
+            Msg::InferReq {
+                key: ModelKey::new(0, 0),
+                obs: vec![0.5; 8],
+                rows: 1,
+                trace: Some(TraceCtx { trace_id: u64::MAX, span_id: 9 }),
             },
             Msg::InferResp { logits: vec![1.0, 2.0], value: vec![0.3] },
         ];
@@ -911,6 +1130,52 @@ mod tests {
             crate::prop_assert_eq!(t, back);
             Ok(())
         });
+    }
+
+    /// Satellite: trace-context codec roundtrip, standalone and embedded
+    /// as the optional trailing field of every message that carries it.
+    #[test]
+    fn trace_ctx_roundtrip_fuzz() {
+        crate::util::proptest::forall(200, "trace-ctx-roundtrip", |rng| {
+            let ctx = TraceCtx {
+                trace_id: ((rng.next_u32() as u64) << 32) | rng.next_u32() as u64,
+                span_id: ((rng.next_u32() as u64) << 32) | rng.next_u32() as u64,
+            };
+            let back = TraceCtx::from_bytes(&ctx.to_bytes()).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(ctx, back);
+            let trace = match rng.below(2) {
+                0 => None,
+                _ => Some(ctx),
+            };
+            let req = Msg::InferReq {
+                key: ModelKey::new(rng.below(4), rng.below(100)),
+                obs: vec![0.25; 4],
+                rows: 1,
+                trace,
+            };
+            let back = Msg::from_bytes(&req.to_bytes()).map_err(|e| e.to_string())?;
+            crate::prop_assert_eq!(req, back);
+            Ok(())
+        });
+    }
+
+    /// An untraced InferReq costs exactly one presence byte over the
+    /// pre-trace wire format — the hot path stays compact.
+    #[test]
+    fn untraced_req_costs_one_byte() {
+        let traced = Msg::InferReq {
+            key: ModelKey::new(0, 0),
+            obs: vec![0.5; 8],
+            rows: 1,
+            trace: Some(TraceCtx { trace_id: 1, span_id: 2 }),
+        };
+        let bare = Msg::InferReq {
+            key: ModelKey::new(0, 0),
+            obs: vec![0.5; 8],
+            rows: 1,
+            trace: None,
+        };
+        assert_eq!(bare.to_bytes().len() + 16, traced.to_bytes().len());
     }
 
     #[test]

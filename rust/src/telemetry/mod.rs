@@ -16,17 +16,21 @@
 //! [`JsonlSink`]) for offline plots, and the `Msg::StatsReply` wire
 //! message behind the `stats` CLI subcommand.
 
-use crate::proto::{LeagueReport, RoleReport, RoleStats};
+pub mod trace;
+
+use crate::proto::{LeagueReport, RoleReport, RoleStats, SpanRec};
 use crate::util::json::Json;
-use crate::util::metrics::MetricsHub;
-use std::collections::BTreeMap;
+use crate::util::metrics::{Hist, MetricsHub, HIST_BUCKETS};
+use std::collections::{BTreeMap, VecDeque};
 use std::io::Write;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Drain one reporting interval from `hub` into the wire snapshot for
 /// role instance (`role`, `slot`).  One periodic caller per hub — the
-/// deltas are consumed.
+/// deltas are consumed.  Spans are NOT filled here: the flight recorder
+/// is process-global, not per-hub, so the caller drains it separately
+/// (one drain per heartbeat, not one per hub).
 pub fn snapshot_role(hub: &MetricsHub, role: &str, slot: u32) -> RoleStats {
     let s = hub.snapshot();
     RoleStats {
@@ -38,6 +42,8 @@ pub fn snapshot_role(hub: &MetricsHub, role: &str, slot: u32) -> RoleStats {
         interval_ms: (s.interval_secs * 1e3) as u64,
         counters: s.counters,
         gauges: s.gauges,
+        hists: s.hists,
+        spans: Vec::new(),
     }
 }
 
@@ -48,12 +54,39 @@ struct SlotEntry {
     last_seen: Instant,
 }
 
+/// Merged flight-recorder capacity at the view (league) level.
+const VIEW_SPAN_CAP: usize = 16_384;
+const VIEW_SLOW_CAP: usize = 1_024;
+
 #[derive(Default)]
 struct ViewInner {
     slots: BTreeMap<(String, u32), SlotEntry>,
     /// (role, counter) → cumulative events across the whole run; reaped
     /// slots keep their contribution (their frames were real)
     totals: BTreeMap<(String, String), u64>,
+    /// (role, hist name) → cumulative bucket counts across the run.
+    /// Like `totals`, reaped slots keep their contribution, so the
+    /// percentiles never regress when a worker restarts.
+    hist_totals: BTreeMap<(String, String), [u64; HIST_BUCKETS]>,
+    /// league-merged flight recorder: recent spans (ring) + spans over
+    /// the slow threshold (kept past ring eviction)
+    spans: VecDeque<SpanRec>,
+    slow: VecDeque<SpanRec>,
+}
+
+impl ViewInner {
+    fn push_span(&mut self, span: &SpanRec) {
+        if self.spans.len() >= VIEW_SPAN_CAP {
+            self.spans.pop_front();
+        }
+        self.spans.push_back(span.clone());
+        if span.dur_us >= trace::slow_us() {
+            if self.slow.len() >= VIEW_SLOW_CAP {
+                self.slow.pop_front();
+            }
+            self.slow.push_back(span.clone());
+        }
+    }
 }
 
 /// The merge side of the telemetry plane: per-(role, slot) snapshot
@@ -88,6 +121,20 @@ impl LeagueView {
         for (k, d) in &s.counters {
             *g.totals.entry((s.role.clone(), k.clone())).or_insert(0) += d;
         }
+        for (name, delta) in &s.hists {
+            let buckets = g
+                .hist_totals
+                .entry((s.role.clone(), name.clone()))
+                .or_insert([0u64; HIST_BUCKETS]);
+            for (idx, n) in delta {
+                if (*idx as usize) < HIST_BUCKETS {
+                    buckets[*idx as usize] += n;
+                }
+            }
+        }
+        for span in &s.spans {
+            g.push_span(span);
+        }
         let entry = g
             .slots
             .entry((s.role.clone(), s.slot))
@@ -108,6 +155,16 @@ impl LeagueView {
         }
     }
 
+    /// Merge bare spans without any slot bookkeeping — the path for
+    /// roles sharing the reporter's own process (thread mode, in-process
+    /// pools), whose flight recorder is drained directly.
+    pub fn ingest_spans(&self, spans: &[SpanRec]) {
+        let mut g = self.inner.lock().unwrap();
+        for span in spans {
+            g.push_span(span);
+        }
+    }
+
     /// Remove a reaped/deregistered slot: its rates and gauges must not
     /// freeze at their last value in subsequent reports.  Totals stay.
     pub fn drop_slot(&self, role: &str, slot: u32) {
@@ -116,6 +173,18 @@ impl LeagueView {
             .unwrap()
             .slots
             .remove(&(role.to_string(), slot));
+    }
+
+    /// Merged flight recorder: recent ring ∪ slow log, deduped (a slow
+    /// span sits in both stores) and sorted by start timestamp — the
+    /// payload of `Msg::TraceReply` and the Chrome-trace export.
+    pub fn spans(&self) -> Vec<SpanRec> {
+        let g = self.inner.lock().unwrap();
+        let mut out: Vec<SpanRec> =
+            g.spans.iter().chain(g.slow.iter()).cloned().collect();
+        out.sort_by_key(|s| (s.ts_us, s.trace_id, s.span_id, s.name.clone()));
+        out.dedup();
+        out
     }
 
     /// Live slots currently contributing to `role`.
@@ -159,6 +228,17 @@ impl LeagueView {
                 let s = agg.gauges.entry(k.clone()).or_insert((0.0, 0));
                 s.0 += v;
                 s.1 += 1;
+            }
+        }
+        // hist-derived percentiles ride as synthetic gauges named
+        // `<hist>_p50/_p95/_p99`, so every report consumer (summary
+        // line, jsonl, stats CLI) shows tail latency with no schema
+        // change.  Cumulative over the run, like totals.
+        for ((role, name), buckets) in &g.hist_totals {
+            let agg = by_role.entry(role.clone()).or_default();
+            for (suffix, q) in [("p50", 0.50), ("p95", 0.95), ("p99", 0.99)] {
+                let v = Hist::quantile_of(buckets, q);
+                agg.gauges.insert(format!("{name}_{suffix}"), (v, 1));
             }
         }
         let roles = by_role
@@ -299,6 +379,34 @@ pub fn jsonl_line(r: &LeagueReport, episodes: u64, frames: u64, t: f64) -> Strin
         .to_string()
 }
 
+/// Machine-readable `LeagueReport` for `stats --json`: one JSON object,
+/// roles in canonical order, same field names as the JSONL trajectory
+/// rows so downstream tooling parses both with one schema.
+pub fn report_json(r: &LeagueReport) -> Json {
+    let pairs = |v: &[(String, f64)]| {
+        obj(v.iter().map(|(k, x)| (k.clone(), num(*x))))
+    };
+    Json::obj().set(
+        "roles",
+        obj(r.roles.iter().map(|role| {
+            (
+                role.role.clone(),
+                Json::obj()
+                    .set("slots", role.slots as usize)
+                    .set("rates", pairs(&role.rates))
+                    .set(
+                        "totals",
+                        obj(role
+                            .totals
+                            .iter()
+                            .map(|(k, v)| (k.clone(), num(*v as f64)))),
+                    )
+                    .set("gauges", pairs(&role.gauges)),
+            )
+        })),
+    )
+}
+
 /// Append-only JSONL sink for `--stats-jsonl <path>`.  Row timestamps
 /// are the wall-clock epoch captured at open plus a MONOTONIC elapsed
 /// offset, so an NTP step mid-run can never produce out-of-order `t`
@@ -363,6 +471,7 @@ mod tests {
                 .map(|(k, v)| (k.to_string(), *v))
                 .collect(),
             gauges: gauges.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            ..Default::default()
         }
     }
 
@@ -476,6 +585,75 @@ mod tests {
         assert_eq!(total(&r, "actor", "env_frames"), 107);
     }
 
+    fn gauge(r: &LeagueReport, role: &str, k: &str) -> f64 {
+        r.roles
+            .iter()
+            .find(|x| x.role == role)
+            .and_then(|x| x.gauges.iter().find(|(n, _)| n == k))
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Hist deltas merge into cumulative buckets and surface as
+    /// `<name>_p50/_p95/_p99` synthetic gauges; like totals, they
+    /// survive slot drops.
+    #[test]
+    fn hist_deltas_surface_as_percentile_gauges() {
+        let v = LeagueView::default();
+        let lo = Hist::bucket_of(100) as u8; // ~100us
+        let hi = Hist::bucket_of(1_000_000) as u8; // ~1s outliers
+        let mut s = stats("inf-server", 0, 1_000, &[], &[]);
+        s.hists = vec![("queue_wait_us".into(), vec![(lo, 54), (hi, 6)])];
+        v.ingest(&s);
+        // a second slot contributes to the same merged distribution
+        let mut s2 = stats("inf-server", 1, 1_000, &[], &[]);
+        s2.hists = vec![("queue_wait_us".into(), vec![(lo, 40)])];
+        v.ingest(&s2);
+        let r = v.report();
+        // 94 events near 100us, 6 near 1s: p50 low, p95/p99 in the tail
+        let p50 = gauge(&r, "inf-server", "queue_wait_us_p50");
+        let p95 = gauge(&r, "inf-server", "queue_wait_us_p95");
+        let p99 = gauge(&r, "inf-server", "queue_wait_us_p99");
+        assert!(p50 > 50.0 && p50 < 200.0, "p50 {p50}");
+        assert!(p95 > 500_000.0, "p95 {p95}");
+        assert!(p99 >= p95, "p99 {p99} < p95 {p95}");
+        // percentiles show up in the summary line like any gauge
+        let line = summary_line(&r);
+        assert!(line.contains("queue_wait_us_p99="), "{line}");
+        // reaping both slots keeps the distribution (cumulative)
+        v.drop_slot("inf-server", 0);
+        v.drop_slot("inf-server", 1);
+        let r = v.report();
+        let p50b = gauge(&r, "inf-server", "queue_wait_us_p50");
+        assert_eq!(p50, p50b);
+    }
+
+    /// Ingested spans land in the merged flight recorder; slow spans
+    /// survive ring eviction through the slow log; `spans()` dedupes.
+    #[test]
+    fn span_ingest_merges_ring_and_slow_log() {
+        let v = LeagueView::default();
+        let span = |id: u64, dur_us: u64| SpanRec {
+            trace_id: id,
+            span_id: id,
+            parent: 0,
+            name: "inf_compute".into(),
+            role: "inf-server".into(),
+            ts_us: 1_000 + id,
+            dur_us,
+            rows: 1,
+        };
+        let mut s = stats("inf-server", 0, 1_000, &[], &[]);
+        // one slow span (default threshold 50ms = 50_000us) + two fast
+        s.spans = vec![span(2, 10), span(1, 60_000), span(3, 20)];
+        v.ingest(&s);
+        let got = v.spans();
+        assert_eq!(got.len(), 3, "slow span must not double-count");
+        // sorted by start timestamp
+        assert!(got.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        assert_eq!(got[0].trace_id, 1);
+    }
+
     #[test]
     fn jsonl_line_is_valid_json_with_timestamp() {
         let v = LeagueView::default();
@@ -502,6 +680,30 @@ mod tests {
         assert_eq!(
             j.path("roles.actor.slots").and_then(|s| s.as_f64()).unwrap(),
             1.0
+        );
+    }
+
+    /// `stats --json` payload: valid JSON, same shape as jsonl roles.
+    #[test]
+    fn report_json_round_trips_through_parser() {
+        let v = LeagueView::default();
+        v.ingest(&stats("actor", 0, 1_000, &[("env_frames", 100)], &[
+            ("lag", 0.5),
+        ]));
+        let j = report_json(&v.report());
+        let back =
+            crate::util::json::Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(
+            back.path("roles.actor.totals.env_frames")
+                .and_then(|x| x.as_f64())
+                .unwrap(),
+            100.0
+        );
+        assert_eq!(
+            back.path("roles.actor.gauges.lag")
+                .and_then(|x| x.as_f64())
+                .unwrap(),
+            0.5
         );
     }
 

@@ -1,0 +1,356 @@
+//! Request-path tracing: flight recorder + Chrome-trace export
+//! (DESIGN.md §Request-path tracing).
+//!
+//! Every process owns one global [`TraceRecorder`] — a fixed-size ring
+//! of recently finished spans plus a slow-request log (spans over a
+//! configurable threshold survive ring eviction).  Roles record spans
+//! only for *sampled* requests (the actor rolls `trace_sample` per
+//! rollout row and propagates a [`TraceCtx`] downstream), so the
+//! untraced hot path allocates nothing and takes no lock.  Workers
+//! drain the recorder into `RoleStats.spans` on each heartbeat; the
+//! controller merges them in `LeagueView`, serves them as
+//! `Msg::TraceReply`, and the `trace` CLI subcommand renders the result
+//! as Chrome trace-event JSON (loadable in Perfetto / chrome://tracing).
+
+use crate::proto::{SpanRec, TraceCtx};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-process recent-span ring capacity.
+pub const RING_CAP: usize = 8_192;
+/// Per-process slow-log capacity.
+pub const SLOW_CAP: usize = 1_024;
+/// Default slow threshold: 50ms.
+pub const DEFAULT_SLOW_US: u64 = 50_000;
+
+/// Fixed-size flight recorder: always on, bounded memory, lock held
+/// only while a *sampled* span is pushed or a heartbeat drains.
+pub struct TraceRecorder {
+    ring: Mutex<VecDeque<SpanRec>>,
+    slow: Mutex<VecDeque<SpanRec>>,
+    ring_cap: usize,
+    slow_cap: usize,
+    slow_us: AtomicU64,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder::with_caps(RING_CAP, SLOW_CAP)
+    }
+}
+
+impl TraceRecorder {
+    pub fn with_caps(ring_cap: usize, slow_cap: usize) -> TraceRecorder {
+        TraceRecorder {
+            ring: Mutex::new(VecDeque::with_capacity(ring_cap.min(1024))),
+            slow: Mutex::new(VecDeque::with_capacity(slow_cap.min(1024))),
+            ring_cap,
+            slow_cap,
+            slow_us: AtomicU64::new(DEFAULT_SLOW_US),
+        }
+    }
+
+    /// Push one finished span; spans over the slow threshold are also
+    /// retained in the slow log past ring eviction.
+    pub fn record(&self, s: SpanRec) {
+        if s.dur_us >= self.slow_us.load(Ordering::Relaxed) {
+            let mut slow = self.slow.lock().unwrap();
+            if slow.len() >= self.slow_cap {
+                slow.pop_front();
+            }
+            slow.push_back(s.clone());
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() >= self.ring_cap {
+            ring.pop_front();
+        }
+        ring.push_back(s);
+    }
+
+    /// Drain up to `max` spans from the ring, oldest first (heartbeat
+    /// piggyback).  The slow log is NOT drained here — it is a local
+    /// retention buffer, consumed by [`drain_slow`](Self::drain_slow).
+    pub fn drain(&self, max: usize) -> Vec<SpanRec> {
+        let mut ring = self.ring.lock().unwrap();
+        let n = ring.len().min(max);
+        ring.drain(..n).collect()
+    }
+
+    /// Drain up to `max` slow-log spans, oldest first.
+    pub fn drain_slow(&self, max: usize) -> Vec<SpanRec> {
+        let mut slow = self.slow.lock().unwrap();
+        let n = slow.len().min(max);
+        slow.drain(..n).collect()
+    }
+
+    /// Non-destructive copy of the ring (tests and local inspection —
+    /// concurrent readers must not steal each other's spans).
+    pub fn snapshot(&self) -> Vec<SpanRec> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn set_slow_ms(&self, ms: u64) {
+        self.slow_us.store(ms.saturating_mul(1_000), Ordering::Relaxed);
+    }
+
+    pub fn slow_us(&self) -> u64 {
+        self.slow_us.load(Ordering::Relaxed)
+    }
+}
+
+static GLOBAL: OnceLock<TraceRecorder> = OnceLock::new();
+
+/// The process-global flight recorder (all roles in a process share it;
+/// spans carry their own `role` tag).
+pub fn recorder() -> &'static TraceRecorder {
+    GLOBAL.get_or_init(TraceRecorder::default)
+}
+
+/// Set the process-wide slow-request threshold (`--trace-slow-ms`).
+pub fn set_slow_ms(ms: u64) {
+    recorder().set_slow_ms(ms);
+}
+
+/// Current slow threshold in microseconds.
+pub fn slow_us() -> u64 {
+    recorder().slow_us()
+}
+
+// --- id generation ------------------------------------------------------
+
+static COUNTER: AtomicU64 = AtomicU64::new(1);
+static BASE: OnceLock<u64> = OnceLock::new();
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fresh non-zero trace/span id, unique across the processes of one
+/// deployment (pid + boot time seed the stream, splitmix64 whitens).
+pub fn next_id() -> u64 {
+    let base = *BASE.get_or_init(|| {
+        let pid = std::process::id() as u64;
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        (pid << 48) ^ t
+    });
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let v = splitmix64(base ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    if v == 0 {
+        1
+    } else {
+        v
+    }
+}
+
+/// Microseconds since the unix epoch (span timestamps).
+pub fn now_us() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// Record a span that just finished: `started` is its monotonic start
+/// instant; the wall-clock start is derived as now − duration so span
+/// bars line up in the exported trace.  Returns the new span's id (the
+/// parent for any child spans).
+pub fn finish_span(
+    ctx: TraceCtx,
+    parent: u64,
+    name: &str,
+    role: &str,
+    started: Instant,
+    rows: u32,
+) -> u64 {
+    let id = next_id();
+    finish_span_id(ctx.trace_id, id, parent, name, role, started, rows);
+    id
+}
+
+/// [`finish_span`] with a caller-allocated span id — used when the id
+/// had to be propagated downstream (in a [`TraceCtx`]) before the span
+/// itself finished, e.g. the actor's `actor_infer` span whose id is the
+/// parent of every server-side span of that request.
+pub fn finish_span_id(
+    trace_id: u64,
+    span_id: u64,
+    parent: u64,
+    name: &str,
+    role: &str,
+    started: Instant,
+    rows: u32,
+) {
+    let dur_us = started.elapsed().as_micros() as u64;
+    recorder().record(SpanRec {
+        trace_id,
+        span_id,
+        parent,
+        name: name.to_string(),
+        role: role.to_string(),
+        ts_us: now_us().saturating_sub(dur_us),
+        dur_us,
+        rows,
+    });
+}
+
+// --- Chrome trace-event export ------------------------------------------
+
+/// Render spans as Chrome trace-event JSON (the `traceEvents` array
+/// format loadable in Perfetto and chrome://tracing).  Events are
+/// complete-spans (`ph: "X"`), sorted by start timestamp; `pid` groups
+/// by role, `tid` groups by trace so one sampled row reads as one
+/// track.  64-bit ids render as hex strings in `args` (JSON numbers
+/// are f64 — exact only to 2^53).
+pub fn chrome_trace_json(spans: &[SpanRec]) -> String {
+    let mut sorted: Vec<&SpanRec> = spans.iter().collect();
+    sorted.sort_by_key(|s| (s.ts_us, s.trace_id, s.span_id));
+    let events: Vec<Json> = sorted
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .set("name", s.name.clone())
+                .set("cat", s.role.clone())
+                .set("ph", "X")
+                .set("ts", s.ts_us as f64)
+                .set("dur", s.dur_us as f64)
+                .set("pid", super::role_rank(&s.role) as usize)
+                .set("tid", (s.trace_id % 1_000_000) as usize)
+                .set(
+                    "args",
+                    Json::obj()
+                        .set("trace_id", format!("{:016x}", s.trace_id))
+                        .set("span_id", format!("{:016x}", s.span_id))
+                        .set("parent", format!("{:016x}", s.parent))
+                        .set("rows", s.rows as usize),
+                )
+        })
+        .collect();
+    Json::obj()
+        .set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", "ms")
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, ts_us: u64, dur_us: u64) -> SpanRec {
+        SpanRec {
+            trace_id: id,
+            span_id: id,
+            parent: 0,
+            name: "inf_compute".into(),
+            role: "inf-server".into(),
+            ts_us,
+            dur_us,
+            rows: 8,
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_but_slow_log_retains() {
+        let rec = TraceRecorder::with_caps(4, 4);
+        rec.set_slow_ms(1); // 1000us threshold
+        rec.record(span(1, 10, 5_000)); // slow
+        for i in 2..=6 {
+            rec.record(span(i, 10 + i, 10)); // fast, evict the ring
+        }
+        assert_eq!(rec.len(), 4);
+        let ring = rec.drain(100);
+        assert_eq!(ring.len(), 4);
+        // span 1 and 2 were evicted from the ring...
+        assert!(ring.iter().all(|s| s.trace_id >= 3));
+        // ...but the slow one survives in the slow log
+        let slow = rec.drain_slow(100);
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].trace_id, 1);
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn drain_respects_max_and_order() {
+        let rec = TraceRecorder::with_caps(16, 16);
+        for i in 0..10 {
+            rec.record(span(i, i, 1));
+        }
+        let first = rec.drain(3);
+        assert_eq!(
+            first.iter().map(|s| s.trace_id).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert_eq!(rec.drain(100).len(), 7);
+    }
+
+    #[test]
+    fn next_id_is_unique_and_nonzero() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let id = next_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate id {id}");
+        }
+    }
+
+    #[test]
+    fn finish_span_lands_in_global_recorder() {
+        let ctx = TraceCtx { trace_id: next_id(), span_id: 0 };
+        let t0 = Instant::now();
+        let id = finish_span(ctx, 7, "actor_gather", "actor", t0, 3);
+        assert_ne!(id, 0);
+        // global recorder is shared across tests: find by trace_id via a
+        // non-destructive read so concurrent tests keep their spans
+        let got = recorder()
+            .snapshot()
+            .into_iter()
+            .find(|s| s.trace_id == ctx.trace_id)
+            .expect("span recorded");
+        assert_eq!(got.span_id, id);
+        assert_eq!(got.parent, 7);
+        assert_eq!(got.name, "actor_gather");
+        assert_eq!(got.rows, 3);
+        assert!(got.ts_us > 0);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_monotone_ts() {
+        // deliberately unsorted input
+        let spans = vec![span(3, 300, 10), span(1, 100, 50), span(2, 200, 5)];
+        let text = chrome_trace_json(&spans);
+        let j = Json::parse(&text).expect("valid chrome trace json");
+        let events = match j.path("traceEvents") {
+            Some(Json::Arr(a)) => a.clone(),
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        assert_eq!(events.len(), 3);
+        let ts: Vec<f64> = events
+            .iter()
+            .map(|e| e.path("ts").and_then(|t| t.as_f64()).expect("ts"))
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "ts not monotone: {ts:?}");
+        for e in &events {
+            assert_eq!(
+                e.path("ph").and_then(|p| p.as_str().map(String::from)),
+                Some("X".to_string())
+            );
+            assert!(e.path("args.trace_id").is_some());
+        }
+    }
+}

@@ -153,6 +153,13 @@ impl From<Msg> for Reply {
 pub struct ReqClient {
     addr: String,
     inner: Mutex<ReqInner>,
+    /// Frame bytes received/sent (payload + 4-byte length prefix),
+    /// counted once per completed exchange — a retransmitted request
+    /// after a connection break counts once, matching what the peer
+    /// actually consumed.  Re-pointed at a hub's meters by role wiring
+    /// (e.g. `Actor::use_hub`) so bandwidth shows up in role snapshots.
+    pub bytes_in: Arc<Meter>,
+    pub bytes_out: Arc<Meter>,
 }
 
 /// Connection + reply buffer, reused across requests so the read path
@@ -165,7 +172,12 @@ struct ReqInner {
 
 impl ReqClient {
     pub fn connect(addr: &str) -> ReqClient {
-        ReqClient { addr: addr.to_string(), inner: Mutex::new(ReqInner::default()) }
+        ReqClient {
+            addr: addr.to_string(),
+            inner: Mutex::new(ReqInner::default()),
+            bytes_in: Arc::new(Meter::new()),
+            bytes_out: Arc::new(Meter::new()),
+        }
     }
 
     /// Send `msg`, wait for the reply.  Reconnects (with retry/backoff)
@@ -201,7 +213,11 @@ impl ReqClient {
                 Msg::from_bytes(buf)
             })();
             match ok {
-                Ok(reply) => return Ok(reply),
+                Ok(reply) => {
+                    self.bytes_out.add(payload.len() as u64 + 4);
+                    self.bytes_in.add(guard.buf.len() as u64 + 4);
+                    return Ok(reply);
+                }
                 Err(e) => {
                     guard.stream = None; // force reconnect
                     last_err = Some(e);
@@ -218,6 +234,12 @@ pub struct RepServer {
     pub addr: String,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    /// Frame bytes received/sent summed over every connection this
+    /// server accepted (payload + 4-byte length prefix).  Registered
+    /// into the owning role's `MetricsHub` so bandwidth rides the
+    /// telemetry plane next to request rates.
+    pub bytes_in: Arc<Meter>,
+    pub bytes_out: Arc<Meter>,
 }
 
 impl RepServer {
@@ -244,6 +266,9 @@ impl RepServer {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let handler = Arc::new(handler);
+        let bytes_in = Arc::new(Meter::new());
+        let bytes_out = Arc::new(Meter::new());
+        let (bin, bout) = (bytes_in.clone(), bytes_out.clone());
         let handle = std::thread::Builder::new()
             .name(format!("rep@{local}"))
             .spawn(move || {
@@ -252,8 +277,9 @@ impl RepServer {
                         Ok((stream, _)) => {
                             let h = handler.clone();
                             let stop3 = stop2.clone();
+                            let (bin, bout) = (bin.clone(), bout.clone());
                             std::thread::spawn(move || {
-                                Self::conn_loop(stream, h, stop3);
+                                Self::conn_loop(stream, h, stop3, bin, bout);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -263,13 +289,15 @@ impl RepServer {
                     }
                 }
             })?;
-        Ok(RepServer { addr: local, stop, handle: Some(handle) })
+        Ok(RepServer { addr: local, stop, handle: Some(handle), bytes_in, bytes_out })
     }
 
     fn conn_loop(
         mut stream: TcpStream,
         handler: Arc<dyn Fn(Msg) -> Reply + Send + Sync>,
         stop: Arc<AtomicBool>,
+        bytes_in: Arc<Meter>,
+        bytes_out: Arc<Meter>,
     ) {
         stream.set_nodelay(true).ok();
         stream
@@ -298,6 +326,7 @@ impl RepServer {
                     return;
                 }
             }
+            bytes_in.add(buf.len() as u64 + 4);
             let reply = match Msg::from_bytes(&buf) {
                 Ok(msg) => handler(msg),
                 Err(e) => Reply::Msg(Msg::Err(format!("decode: {e}"))),
@@ -309,10 +338,12 @@ impl RepServer {
                     msg.encode(&mut reply_buf);
                     let len = (reply_buf.len() - 4) as u32;
                     reply_buf[..4].copy_from_slice(&len.to_le_bytes());
+                    bytes_out.add(reply_buf.len() as u64);
                     // header + payload leave in one buffered write
                     stream.write_all(&reply_buf).map_err(anyhow::Error::from)
                 }
                 Reply::Framed { head, tail } => {
+                    bytes_out.add(head.len() as u64 + tail.len() as u64 + 4);
                     write_frame_parts(&mut stream, &[&head, &tail])
                 }
             };
@@ -340,11 +371,18 @@ impl Drop for RepServer {
 pub struct PushClient {
     addr: String,
     stream: Mutex<Option<TcpStream>>,
+    /// Frame bytes sent (payload + length prefix), once per delivered
+    /// push.  Re-pointed at a hub meter by `Actor::use_hub`.
+    pub bytes_out: Arc<Meter>,
 }
 
 impl PushClient {
     pub fn connect(addr: &str) -> PushClient {
-        PushClient { addr: addr.to_string(), stream: Mutex::new(None) }
+        PushClient {
+            addr: addr.to_string(),
+            stream: Mutex::new(None),
+            bytes_out: Arc::new(Meter::new()),
+        }
     }
 
     pub fn push(&self, msg: &Msg) -> Result<()> {
@@ -368,7 +406,10 @@ impl PushClient {
                 }
             }
             match write_frame(guard.as_mut().unwrap(), &payload) {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    self.bytes_out.add(payload.len() as u64 + 4);
+                    return Ok(());
+                }
                 Err(_) => *guard = None,
             }
         }
@@ -388,6 +429,10 @@ pub struct PullServer {
     /// rate means a peer speaks a different protocol version — silent
     /// drops here used to be invisible (PoolStats-style observability).
     pub decode_errors: Arc<Meter>,
+    /// Frame bytes received across all connections (payload + prefix),
+    /// including frames that later fail to decode — the wire carried
+    /// them either way.
+    pub bytes_in: Arc<Meter>,
 }
 
 impl PullServer {
@@ -401,6 +446,8 @@ impl PullServer {
         let stop2 = stop.clone();
         let decode_errors = Arc::new(Meter::new());
         let errs = decode_errors.clone();
+        let bytes_in = Arc::new(Meter::new());
+        let bin = bytes_in.clone();
         let handle = std::thread::Builder::new()
             .name(format!("pull@{local}"))
             .spawn(move || {
@@ -410,8 +457,9 @@ impl PullServer {
                             let tx = tx.clone();
                             let stop3 = stop2.clone();
                             let errs = errs.clone();
+                            let bin = bin.clone();
                             std::thread::spawn(move || {
-                                Self::conn_loop(stream, tx, stop3, errs);
+                                Self::conn_loop(stream, tx, stop3, errs, bin);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -421,7 +469,14 @@ impl PullServer {
                     }
                 }
             })?;
-        Ok(PullServer { addr: local, rx, stop, handle: Some(handle), decode_errors })
+        Ok(PullServer {
+            addr: local,
+            rx,
+            stop,
+            handle: Some(handle),
+            decode_errors,
+            bytes_in,
+        })
     }
 
     fn conn_loop(
@@ -429,6 +484,7 @@ impl PullServer {
         tx: std::sync::mpsc::SyncSender<Msg>,
         stop: Arc<AtomicBool>,
         decode_errors: Arc<Meter>,
+        bytes_in: Arc<Meter>,
     ) {
         stream
             .set_read_timeout(Some(Duration::from_millis(200)))
@@ -440,30 +496,35 @@ impl PullServer {
                 return;
             }
             match read_frame(&mut stream, &mut buf) {
-                Ok(()) => match Msg::from_bytes(&buf) {
-                    Ok(msg) => {
-                        // blocking send = backpressure to the TCP socket,
-                        // which stalls the pushing actor (on-policy mode)
-                        if tx.send(msg).is_err() {
-                            return;
+                Ok(()) => {
+                    bytes_in.add(buf.len() as u64 + 4);
+                    match Msg::from_bytes(&buf) {
+                        Ok(msg) => {
+                            // blocking send = backpressure to the TCP
+                            // socket, which stalls the pushing actor
+                            // (on-policy mode)
+                            if tx.send(msg).is_err() {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            decode_errors.add(1);
+                            if !err_logged {
+                                err_logged = true;
+                                let peer = stream
+                                    .peer_addr()
+                                    .map(|a| a.to_string())
+                                    .unwrap_or_else(|_| "?".into());
+                                eprintln!(
+                                    "pull: dropping undecodable {}-byte frame \
+                                     from {peer}: {e} (counting further drops \
+                                     silently)",
+                                    buf.len()
+                                );
+                            }
                         }
                     }
-                    Err(e) => {
-                        decode_errors.add(1);
-                        if !err_logged {
-                            err_logged = true;
-                            let peer = stream
-                                .peer_addr()
-                                .map(|a| a.to_string())
-                                .unwrap_or_else(|_| "?".into());
-                            eprintln!(
-                                "pull: dropping undecodable {}-byte frame from \
-                                 {peer}: {e} (counting further drops silently)",
-                                buf.len()
-                            );
-                        }
-                    }
-                },
+                }
                 Err(e) => {
                     if let Some(io) = e.downcast_ref::<std::io::Error>() {
                         if matches!(
@@ -552,6 +613,7 @@ mod tests {
             behavior_logp: vec![-1.0, -1.0],
             rewards: vec![0.5, -0.5],
             discounts: vec![0.99, 0.0],
+            trace: None,
         };
         for _ in 0..20 {
             client.push(&Msg::Traj(seg.clone())).unwrap();
@@ -692,6 +754,34 @@ mod tests {
         let msg = server.recv_timeout(Duration::from_secs(5)).expect("timed out");
         assert_eq!(msg, Msg::Ping);
         assert_eq!(server.decode_errors.count(), 2);
+    }
+
+    /// Satellite: byte accounting — client-out equals server-in and
+    /// vice versa (both count payload + 4-byte prefix per frame), and
+    /// push/pull agree the same way.
+    #[test]
+    fn byte_meters_agree_across_the_wire() {
+        let server = RepServer::serve("127.0.0.1:0", |_| Msg::Pong).unwrap();
+        let client = ReqClient::connect(&server.addr);
+        for _ in 0..5 {
+            client.request(&Msg::Ping).unwrap();
+        }
+        let req_frame = Msg::Ping.to_bytes().len() as u64 + 4;
+        let rep_frame = Msg::Pong.to_bytes().len() as u64 + 4;
+        assert_eq!(client.bytes_out.count(), 5 * req_frame);
+        assert_eq!(client.bytes_in.count(), 5 * rep_frame);
+        // conn threads count on their side of the same frames
+        assert_eq!(server.bytes_in.count(), client.bytes_out.count());
+        assert_eq!(server.bytes_out.count(), client.bytes_in.count());
+
+        let pull = PullServer::bind("127.0.0.1:0", 16).unwrap();
+        let push = PushClient::connect(&pull.addr);
+        push.push(&Msg::Ping).unwrap();
+        push.push(&Msg::Ping).unwrap();
+        assert_eq!(pull.recv_timeout(Duration::from_secs(5)), Some(Msg::Ping));
+        assert_eq!(pull.recv_timeout(Duration::from_secs(5)), Some(Msg::Ping));
+        assert_eq!(push.bytes_out.count(), 2 * req_frame);
+        assert_eq!(pull.bytes_in.count(), push.bytes_out.count());
     }
 
     #[test]

@@ -59,6 +59,18 @@ subcommands:
                              report interval to <path> (rates + run
                              totals per role + league episode/frame
                              counters) for offline trajectory plots
+    --trace-sample <f>       fraction of actor ticks [0..1] that carry a
+                             trace context through the request path
+                             (gather -> infer queue/compute/reply ->
+                             segment push -> learner consume; default 0
+                             = spans off; p50/p95/p99 latency
+                             histograms record regardless)
+    --trace-slow-ms <ms>     requests slower than this land in every
+                             process's slow-request log even when the
+                             sampler skipped them (default 50)
+    --trace-out <path>       write the run's recorded spans as Chrome
+                             trace-event JSON on exit (open in
+                             chrome://tracing or Perfetto)
    data-plane knobs:
     --refresh-every N        actor param-refresh cadence in episodes
                              (delta-aware: an unchanged in-training model
@@ -80,9 +92,17 @@ subcommands:
     --advertise-host <host>  host peers use for this worker's endpoints
                              (learner data ports, inf-server address)
   stats        probe a running controller for the merged league
-               telemetry (per-role rates + run totals)
+               telemetry (per-role rates + run totals, including
+               p50/p95/p99 inference queue-wait and row latency)
     --controller host:port   controller to query
     --deploy                 also print worker/slot deployment counters
+    --json                   emit the merged report as one JSON object
+                             instead of the human-readable lines
+  trace        drain the flight recorder of a running league (recent +
+               slow request spans merged at the controller) and export
+               Chrome trace-event JSON
+    --controller host:port   controller to query
+    --trace-out <path>       output file (default trace.json)
   info         print the artifact manifest summary (--artifacts <dir>)
   eval-doom    FRAG matches, Tables 1-2
     --checkpoint <f32 file> --setting 1|2a|2b|2c --games N

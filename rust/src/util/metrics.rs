@@ -87,6 +87,140 @@ impl Meter {
     }
 }
 
+/// Number of log-spaced latency buckets in a [`Hist`].
+pub const HIST_BUCKETS: usize = 64;
+
+/// Lock-cheap log-bucketed latency histogram (~power-of-√2 buckets).
+///
+/// Two sub-buckets per octave: bucket `2k` covers `[2^k, 1.5·2^k)` and
+/// bucket `2k+1` covers `[1.5·2^k, 2^(k+1))` (buckets 0 and 1 hold the
+/// exact values 0 and 1), so any recorded value lands within ~25% of
+/// its bucket's representative midpoint — plenty for p50/p95/p99 tail
+/// reporting.  64 buckets span `[0, 2^32)`; in microseconds that is
+/// over an hour, far beyond any request-path latency.
+///
+/// `record` is a single relaxed atomic increment (no lock, no
+/// allocation), so the inference and rollout hot paths can record every
+/// request.  Histograms merge by bucket-wise addition, and interval
+/// snapshots telescope exactly like [`Meter::take_snapshot`]: each
+/// bucket keeps a snapshot base, so every recorded event lands in
+/// exactly one snapshot's delta.
+pub struct Hist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    /// per-bucket count as of the last snapshot
+    snap_base: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            snap_base: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Bucket index for a value (typically a latency in microseconds).
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        if v <= 1 {
+            return v as usize;
+        }
+        let bit = 63 - v.leading_zeros() as usize; // >= 1
+        (2 * bit + ((v >> (bit - 1)) & 1) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Representative (midpoint) value of a bucket, the value quantile
+    /// extraction reports for samples that landed in it.
+    pub fn bucket_value(idx: usize) -> f64 {
+        match idx {
+            0 => 0.0,
+            1 => 1.0,
+            _ => {
+                let k = idx / 2;
+                let base = (1u64 << k) as f64;
+                if idx % 2 == 0 {
+                    1.25 * base
+                } else {
+                    1.75 * base
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duration in microseconds (the tracing layer's unit).
+    #[inline]
+    pub fn record_micros(&self, d: std::time::Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    /// Total recorded events (sum over buckets).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Current per-bucket totals (for merging / quantiles).
+    pub fn totals(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Quantile over the lifetime totals; see [`Hist::quantile_of`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        Self::quantile_of(&self.totals(), q)
+    }
+
+    /// Quantile extraction from a (possibly merged) bucket array: the
+    /// representative value of the bucket holding the ⌈q·total⌉-th
+    /// sample.  Returns 0.0 for an empty histogram.  Monotone in `q`.
+    pub fn quantile_of(buckets: &[u64; HIST_BUCKETS], q: f64) -> f64 {
+        let total: u64 = buckets.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(HIST_BUCKETS - 1)
+    }
+
+    /// Drain the current interval as sparse `(bucket, delta)` pairs.
+    /// Per-bucket deltas telescope: summing every snapshot's pairs plus
+    /// the not-yet-snapshotted remainder reproduces the lifetime
+    /// totals, so a merger accumulating deltas never loses or
+    /// double-counts an event.
+    pub fn take_snapshot(&self) -> Vec<(u8, u64)> {
+        let mut out = Vec::new();
+        for i in 0..HIST_BUCKETS {
+            let total = self.buckets[i].load(Ordering::Relaxed);
+            let delta =
+                total - self.snap_base[i].swap(total, Ordering::Relaxed);
+            if delta > 0 {
+                out.push((i as u8, delta));
+            }
+        }
+        out
+    }
+}
+
+/// Sparse `(bucket, count)` pairs — the wire/snapshot form of one
+/// histogram interval.
+pub type HistDelta = Vec<(u8, u64)>;
+
 /// Windowed scalar statistic (mean/min/max over the recent window).
 pub struct Rolling {
     inner: Mutex<RollingInner>,
@@ -166,12 +300,15 @@ pub struct MetricsSnap {
     pub counters: Vec<(String, u64)>,
     /// rolling name → current window mean
     pub gauges: Vec<(String, f64)>,
+    /// histogram name → sparse per-bucket deltas for this interval
+    pub hists: Vec<(String, HistDelta)>,
 }
 
 /// Named registry shared across modules (one per role instance).
 pub struct MetricsHub {
     meters: Mutex<BTreeMap<String, Arc<Meter>>>,
     rollings: Mutex<BTreeMap<String, Arc<Rolling>>>,
+    hists: Mutex<BTreeMap<String, Arc<Hist>>>,
     /// epoch of the last hub snapshot (drives `interval_secs`)
     snap_at: Mutex<Instant>,
 }
@@ -181,6 +318,7 @@ impl Default for MetricsHub {
         MetricsHub {
             meters: Mutex::new(BTreeMap::new()),
             rollings: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
             snap_at: Mutex::new(Instant::now()),
         }
     }
@@ -193,6 +331,21 @@ impl MetricsHub {
             .unwrap()
             .entry(name.to_string())
             .or_insert_with(|| Arc::new(Meter::new()))
+            .clone()
+    }
+    /// Adopt an externally owned meter under `name` (e.g. a transport
+    /// endpoint's byte counters) so hub snapshots carry it.  Replaces
+    /// any meter previously registered under the name; call before the
+    /// first snapshot so no interval is split across two meters.
+    pub fn register(&self, name: &str, m: Arc<Meter>) {
+        self.meters.lock().unwrap().insert(name.to_string(), m);
+    }
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        self.hists
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(Hist::new()))
             .clone()
     }
     pub fn rolling(&self, name: &str) -> Arc<Rolling> {
@@ -241,7 +394,20 @@ impl MetricsHub {
             .filter(|(_, r)| !r.is_empty())
             .map(|(k, r)| (k.clone(), r.mean()))
             .collect();
-        MetricsSnap { interval_secs, counters, gauges }
+        // quiet histograms (no events this interval) are omitted, like
+        // never-pushed gauges — the merger accumulates deltas, so an
+        // empty delta carries no information
+        let hists = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|(k, h)| {
+                let d = h.take_snapshot();
+                (!d.is_empty()).then(|| (k.clone(), d))
+            })
+            .collect();
+        MetricsSnap { interval_secs, counters, gauges, hists }
     }
 }
 
@@ -375,5 +541,142 @@ mod tests {
             vec![("episodes".into(), 0), ("frames".into(), 5)]
         );
         assert_eq!(s2.gauges, vec![("lag".into(), 2.0)]);
+    }
+
+    #[test]
+    fn hist_bucket_boundaries_are_exact() {
+        // sub-power-of-two boundaries: [2^k, 1.5·2^k) → 2k,
+        // [1.5·2^k, 2^(k+1)) → 2k+1
+        assert_eq!(Hist::bucket_of(0), 0);
+        assert_eq!(Hist::bucket_of(1), 1);
+        for k in 1..31usize {
+            let p = 1u64 << k;
+            assert_eq!(Hist::bucket_of(p), 2 * k, "2^{k}");
+            assert_eq!(Hist::bucket_of(p + p / 2 - 1), 2 * k, "1.5·2^{k}-1");
+            assert_eq!(Hist::bucket_of(p + p / 2), 2 * k + 1, "1.5·2^{k}");
+            assert_eq!(Hist::bucket_of(2 * p - 1), 2 * k + 1, "2^{}−1", k + 1);
+        }
+        // everything past the last bucket's range saturates into it
+        assert_eq!(Hist::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // every value sits inside its bucket's representative ±25%
+        for v in [2u64, 3, 5, 13, 100, 1_000, 123_456, 1 << 30] {
+            let rep = Hist::bucket_value(Hist::bucket_of(v));
+            let err = (rep - v as f64).abs() / v as f64;
+            assert!(err <= 0.25, "v={v} rep={rep} err={err}");
+        }
+    }
+
+    /// Merge-of-parts equals whole: recording a stream into K shard
+    /// histograms and summing their buckets gives the same quantiles as
+    /// recording everything into one histogram.
+    #[test]
+    fn hist_merge_of_parts_equals_whole() {
+        use crate::util::proptest::forall;
+        forall(100, "hist-merge", |rng| {
+            let whole = Hist::new();
+            let parts: Vec<Hist> = (0..4).map(|_| Hist::new()).collect();
+            let n = 1 + rng.below(500) as usize;
+            for _ in 0..n {
+                // spread over ~6 decades so many buckets are exercised
+                let v = (rng.next_u32() as u64) >> rng.below(28);
+                whole.record(v);
+                parts[rng.below(4) as usize].record(v);
+            }
+            let mut merged = [0u64; HIST_BUCKETS];
+            for p in &parts {
+                for (i, c) in p.totals().iter().enumerate() {
+                    merged[i] += c;
+                }
+            }
+            crate::prop_assert_eq!(merged, whole.totals());
+            for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                crate::prop_assert_eq!(
+                    Hist::quantile_of(&merged, q),
+                    whole.quantile(q)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Quantiles are monotone in q and bracketed by the recorded range
+    /// (up to the ±25% bucket resolution).
+    #[test]
+    fn hist_quantiles_monotone_and_bounded() {
+        use crate::util::proptest::forall;
+        forall(100, "hist-quantile", |rng| {
+            let h = Hist::new();
+            let n = 1 + rng.below(300) as usize;
+            let mut lo = u64::MAX;
+            let mut hi = 0u64;
+            for _ in 0..n {
+                let v = (rng.next_u32() as u64) >> rng.below(24);
+                lo = lo.min(v);
+                hi = hi.max(v);
+                h.record(v);
+            }
+            let mut prev = -1.0f64;
+            for i in 0..=20 {
+                let q = i as f64 / 20.0;
+                let v = h.quantile(q);
+                crate::prop_assert!(v >= prev, "q={q}: {v} < {prev}");
+                prev = v;
+            }
+            crate::prop_assert!(
+                h.quantile(1.0) <= hi as f64 * 1.25 + 1.0,
+                "p100 {} above max {hi}",
+                h.quantile(1.0)
+            );
+            crate::prop_assert!(
+                h.quantile(0.0) >= lo as f64 * 0.75 - 1.0,
+                "p0 {} below min {lo}",
+                h.quantile(0.0)
+            );
+            Ok(())
+        });
+    }
+
+    /// Hist snapshot deltas telescope exactly like Meter's: under a
+    /// concurrent recorder, accumulated snapshot deltas plus the final
+    /// drain reproduce the lifetime bucket totals.
+    #[test]
+    fn hist_snapshot_deltas_lose_no_events_under_concurrency() {
+        let h = Arc::new(Hist::new());
+        let h2 = h.clone();
+        let recorder = std::thread::spawn(move || {
+            for i in 0..100_000u64 {
+                h2.record(i % 4096);
+            }
+        });
+        let mut acc = [0u64; HIST_BUCKETS];
+        let mut drain = |acc: &mut [u64; HIST_BUCKETS]| {
+            for (i, d) in h.take_snapshot() {
+                acc[i as usize] += d;
+            }
+        };
+        while !recorder.is_finished() {
+            drain(&mut acc);
+        }
+        recorder.join().unwrap();
+        drain(&mut acc);
+        assert_eq!(acc, h.totals(), "hist deltas must telescope");
+        assert_eq!(acc.iter().sum::<u64>(), 100_000);
+    }
+
+    #[test]
+    fn hub_snapshot_carries_hist_deltas() {
+        let hub = MetricsHub::default();
+        hub.hist("quiet"); // registered, never recorded: omitted
+        let h = hub.hist("queue_wait_us");
+        h.record(100);
+        h.record(100);
+        h.record(1 << 20);
+        let s = hub.snapshot();
+        assert_eq!(s.hists.len(), 1);
+        let (name, delta) = &s.hists[0];
+        assert_eq!(name, "queue_wait_us");
+        assert_eq!(delta.iter().map(|(_, c)| c).sum::<u64>(), 3);
+        // drained: a quiet interval omits the hist entirely
+        assert!(hub.snapshot().hists.is_empty());
     }
 }

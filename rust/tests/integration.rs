@@ -92,6 +92,7 @@ fn full_stack_rps_league() {
                     gamma: 0.99,
                     refresh_every: 1,
                     train_t: 1,
+                    trace_sample: 0.0,
                 },
                 PolicyBackend::Local(engine),
                 &league_addr,
@@ -174,6 +175,7 @@ fn full_stack_pommerman_team_smoke() {
                 gamma: 0.99,
                 refresh_every: 1,
                 train_t: 0,
+                trace_sample: 0.0,
             },
             PolicyBackend::Local(engine2),
             &league_addr,
@@ -249,6 +251,7 @@ fn full_stack_infserver_actor() {
                 gamma: 0.99,
                 refresh_every: 1,
                 train_t: 1, // rps manifest train_t (required for Remote)
+                trace_sample: 0.0,
             },
             PolicyBackend::Remote(tleague::transport::ReqClient::connect(
                 &inf_addr,
@@ -341,6 +344,7 @@ fn multi_learner_ranks_stay_identical() {
                     gamma: 0.99,
                     refresh_every: 1,
                     train_t: 1,
+                    trace_sample: 0.0,
                 },
                 PolicyBackend::Local(engine),
                 &league_addr,

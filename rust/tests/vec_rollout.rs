@@ -119,6 +119,7 @@ fn run_rollout(
             gamma,
             refresh_every: 1,
             train_t,
+            trace_sample: 0.0,
         },
         n_slots,
         PolicyBackend::Remote(ReqClient::connect(&inf.addr)),
