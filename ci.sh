@@ -49,6 +49,20 @@ cargo bench --bench bench_main -- telemetry --json BENCH_pr5.json
 echo "== bench smoke: cargo bench --bench bench_main -- trace"
 cargo bench --bench bench_main -- trace --json BENCH_pr6.json
 
+# Fault-injection bench: the per-transport-op guard disabled vs armed,
+# plus the actor row path both ways (the disabled rows are the
+# no-overhead claim; see BENCH_pr7.json).
+echo "== bench smoke: cargo bench --bench bench_main -- faults"
+cargo bench --bench bench_main -- faults --json BENCH_pr7.json
+
+# Chaos drills: deterministic fault plans + scheduled kills (inf-server,
+# pool replica, learner, and the controller itself) over real worker
+# subprocesses; asserts completed runs, reassigned slots, and surviving
+# league totals (also inside `cargo test` above, rerun by name so a
+# recovery regression is called out).
+echo "== chaos drills: cargo test --test chaos"
+cargo test -q --test chaos
+
 # Telemetry stats smoke: a short thread-mode league writing a JSONL
 # trajectory; assert the file is non-empty valid JSONL with monotone
 # timestamps and that the summed actor frame deltas (= the last row's
@@ -104,5 +118,20 @@ EOF
     rm -f "$TJ"
 else
     echo "(artifacts or python3 missing; skipping trace smoke)"
+fi
+
+# Chaos smoke: the one-command drill — a procs-mode league under a
+# seeded fault plan with a mid-run actor kill; the run must absorb the
+# kill (respawn + slot reassignment) and print its completion line.
+if [[ -f artifacts/manifest.json ]]; then
+    echo "== chaos smoke: run --mode procs --chaos kill:actor@400"
+    ./target/release/tleague run --env rps --mode procs \
+        --total-steps 6 --period-steps 2 --actors 1 \
+        --heartbeat-ms 100 --heartbeat-timeout-ms 1000 \
+        --chaos "kill:actor@400" --faults "delay:*@0.02+2" --fault-seed 7 \
+        | tee /dev/stderr | grep -q "done:"
+    echo "chaos smoke OK"
+else
+    echo "(artifacts missing; skipping chaos smoke)"
 fi
 echo "CI OK"

@@ -20,6 +20,9 @@
 //!   trace       — request-path tracing: span record overhead, latency
 //!                 hist record + 64-way merge, actor row path at
 //!                 trace-sample 0 / 1% / 100% (off must match untraced)
+//!   faults      — fault-injection guard: disabled hot-path check cost,
+//!                 enabled check against a non-matching plan, actor row
+//!                 path with injection off vs armed (off must be free)
 //!
 //! Filter with `cargo bench -- <substring> [<substring> ...]` (a bench
 //! runs if it matches ANY given substring); add `--json <path>` to also
@@ -1009,6 +1012,120 @@ fn main() {
                 actor.run(1024, &never).unwrap()
             });
         }
+        drain_stop.store(true, Ordering::Relaxed);
+        drainer.join().ok();
+    }
+
+    // ---- fault injection ----------------------------------------------------
+    // The guard every transport op pays: with no plan installed it must
+    // be one relaxed atomic load (the disabled rows are the
+    // no-overhead claim — faults/row_off must match trace/row_sample_off);
+    // with a plan armed the slow path runs per op even when no rule
+    // matches, which is the price of running a drill.
+    println!("\n# fault injection (disabled vs armed check, actor row path)");
+    {
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use tleague::actor::{Actor, ActorConfig, PolicyBackend};
+        use tleague::proto::TaskSpec;
+        use tleague::transport::fault;
+        use tleague::transport::{PullServer, RepServer};
+
+        fault::clear();
+        b.bench("faults/check_disabled", "check", || {
+            let mut n = 0;
+            for _ in 0..100_000u64 {
+                let v = fault::check(fault::SITE_REQ, "127.0.0.1:1", 3);
+                std::hint::black_box(v);
+                n += 1;
+            }
+            n
+        });
+        fault::set_role("bench-faults");
+        fault::install_spec(7, "drop:no-such-role@1.0").unwrap();
+        b.bench("faults/check_armed_nomatch", "check", || {
+            let mut n = 0;
+            for _ in 0..100_000u64 {
+                let v = fault::check(fault::SITE_REQ, "127.0.0.1:1", 3);
+                std::hint::black_box(v);
+                n += 1;
+            }
+            n
+        });
+        fault::clear();
+
+        // actor row path with injection off vs armed-but-non-matching:
+        // the same stub-server rollout as the trace group
+        let next = AtomicU64::new(1);
+        let league = RepServer::serve("127.0.0.1:0", move |msg| match msg {
+            Msg::RequestActorTask { .. } => Msg::Task(TaskSpec {
+                task_id: next.fetch_add(1, Ordering::Relaxed),
+                learner_key: ModelKey::new(0, 1),
+                opponents: vec![ModelKey::new(0, 0)],
+                hp: vec![],
+            }),
+            Msg::ReportOutcome(_) => Msg::Ok,
+            other => Msg::Err(format!("stub league: {other:?}")),
+        })
+        .unwrap();
+        let sink = PullServer::bind("127.0.0.1:0", 1024).unwrap();
+        let sink_addr = sink.addr.clone();
+        let drain_stop = Arc::new(AtomicBool::new(false));
+        let ds = drain_stop.clone();
+        let drainer = std::thread::spawn(move || {
+            let sink = sink;
+            while !ds.load(Ordering::Relaxed) {
+                while sink.try_recv().is_some() {}
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        let fpool = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let fpc = ModelPoolClient::connect(&[fpool.addr.clone()]);
+        for (v, frozen) in [(0u32, true), (1u32, false)] {
+            fpc.put(ModelBlob {
+                key: ModelKey::new(0, v),
+                params: vec![0.0; 8],
+                hp: vec![],
+                frozen,
+            })
+            .unwrap();
+        }
+        let act_dim = envs::make("synthetic", 0).unwrap().act_dim();
+        let inf = RepServer::serve("127.0.0.1:0", move |msg| match msg {
+            Msg::InferReq { rows, .. } => Msg::InferResp {
+                logits: vec![0.0; rows as usize * act_dim],
+                value: vec![0.0; rows as usize],
+            },
+            other => Msg::Err(format!("stub inf: {other:?}")),
+        })
+        .unwrap();
+        for (label, spec) in [("off", None), ("armed_nomatch", Some("drop:no-such-role@1.0"))] {
+            match spec {
+                None => fault::clear(),
+                Some(s) => fault::install_spec(7, s).unwrap(),
+            }
+            let mut actor = Actor::new_vec(
+                ActorConfig {
+                    env: "synthetic".into(),
+                    actor_id: format!("0/bench-faults-{label}"),
+                    seed: 1,
+                    gamma: 0.99,
+                    refresh_every: 1_000_000,
+                    train_t: 8,
+                    trace_sample: 0.0,
+                },
+                1,
+                PolicyBackend::Remote(ReqClient::connect(&inf.addr)),
+                &league.addr,
+                &[fpool.addr.clone()],
+                &sink_addr,
+            )
+            .unwrap();
+            let never = AtomicBool::new(false);
+            b.bench(&format!("faults/row_{label}"), "frame", move || {
+                actor.run(1024, &never).unwrap()
+            });
+        }
+        fault::clear();
         drain_stop.store(true, Ordering::Relaxed);
         drainer.join().ok();
     }

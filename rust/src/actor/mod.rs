@@ -31,10 +31,16 @@ use crate::transport::{PushClient, ReqClient};
 use crate::util::metrics::{Hist, Meter, MetricsHub};
 use crate::util::rng::{log_softmax_at, Pcg32};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Finished trajectory segments waiting out a learner outage.  Beyond
+/// this many, the OLDEST segment is dropped (off-policy data ages
+/// fastest) and `segments_dropped` accounts for it — the rollout loop
+/// itself never blocks on, or dies from, a push failure.
+const PUSH_QUEUE_CAP: usize = 64;
 
 /// How this actor evaluates policies.
 pub enum PolicyBackend {
@@ -194,6 +200,16 @@ pub struct Actor {
     /// next pushed segment (then cleared) so the learner's consume span
     /// joins the trace
     pending_ctx: Option<TraceCtx>,
+    /// finished segments not yet delivered to the learner (bounded at
+    /// [`PUSH_QUEUE_CAP`], drop-oldest) — push failures park segments
+    /// here instead of erroring out of the rollout tick
+    pending_segs: VecDeque<Msg>,
+    /// segments evicted from the full retry queue during an outage
+    pub segments_dropped: Arc<Meter>,
+    /// consecutive failed delivery attempts (drives the retry backoff)
+    push_fail_streak: u32,
+    /// do not retry delivery before this instant
+    push_retry_at: Option<Instant>,
     /// frames stepped by THIS actor — `frames` may be a hub meter
     /// shared with other actors after [`use_hub`](Actor::use_hub), so
     /// `run`'s budget must not count their work
@@ -291,6 +307,10 @@ impl Actor {
                 &format!("{}#trace", cfg.actor_id),
             ),
             pending_ctx: None,
+            pending_segs: VecDeque::new(),
+            segments_dropped: Arc::new(Meter::new()),
+            push_fail_streak: 0,
+            push_retry_at: None,
             frames_done: 0,
             cfg,
         })
@@ -305,6 +325,7 @@ impl Actor {
         self.frames = hub.meter("env_frames");
         self.episodes = hub.meter("episodes");
         self.row_e2e = hub.hist("row_e2e_us");
+        self.segments_dropped = hub.meter("segments_dropped");
         // transport byte accounting: segment pushes + remote inference
         // share the role-level bytes_in/bytes_out meters
         self.push.bytes_out = hub.meter("bytes_out");
@@ -471,7 +492,12 @@ impl Actor {
         Ok(logits)
     }
 
-    fn push_segment(&mut self, si: usize) -> Result<()> {
+    /// Queue the slot's finished segment for the learner and attempt
+    /// delivery.  Delivery failure is NON-fatal: the segment waits in
+    /// the bounded retry queue (drop-oldest past [`PUSH_QUEUE_CAP`],
+    /// `segments_dropped` accounting) so a learner restart never kills
+    /// or silently stalls the rollout loop.
+    fn push_segment(&mut self, si: usize) {
         let model_key = self.slots[si]
             .task
             .as_ref()
@@ -496,13 +522,57 @@ impl Actor {
             trace: self.pending_ctx.take(),
         };
         slot.seg.clear();
-        self.push.push(&Msg::Traj(seg))
+        self.pending_segs.push_back(Msg::Traj(seg));
+        while self.pending_segs.len() > PUSH_QUEUE_CAP {
+            self.pending_segs.pop_front();
+            self.segments_dropped.add(1);
+        }
+        self.flush_segments();
+    }
+
+    /// Drain queued segments to the learner.  One failed attempt parks
+    /// the segment back at the queue front and arms an exponential
+    /// backoff (25ms doubling to an 800ms cap) so a dead learner costs
+    /// at most one fast-failing connect per tick, not a retry ladder.
+    fn flush_segments(&mut self) {
+        if self.pending_segs.is_empty() {
+            return;
+        }
+        if let Some(at) = self.push_retry_at {
+            if Instant::now() < at {
+                return;
+            }
+        }
+        while let Some(msg) = self.pending_segs.pop_front() {
+            match self.push.try_push(&msg) {
+                Ok(()) => {
+                    if self.push_fail_streak > 0 {
+                        self.push_fail_streak = 0;
+                        crate::transport::fault::on_recovery();
+                    }
+                    self.push_retry_at = None;
+                }
+                Err(_) => {
+                    self.pending_segs.push_front(msg);
+                    let shift = self.push_fail_streak.min(5);
+                    self.push_fail_streak =
+                        self.push_fail_streak.saturating_add(1);
+                    self.push_retry_at =
+                        Some(Instant::now() + Duration::from_millis(25 << shift));
+                    return;
+                }
+            }
+        }
     }
 
     /// Advance every env slot by one step (all agents in all slots
     /// act; one gathered forward pass per distinct model).  Returns
     /// true if any slot finished its episode this tick.
     pub fn step_once(&mut self) -> Result<bool> {
+        // 0. segments parked by an earlier push failure get a delivery
+        //    attempt each tick (subject to the backoff)
+        self.flush_segments();
+
         // 1. fresh episodes: any slot without a task gets its next one
         for si in 0..self.slots.len() {
             if self.slots[si].task.is_none() {
@@ -655,7 +725,7 @@ impl Actor {
             slot.cur_obs = step.obs;
 
             if self.slots[si].seg.steps >= self.train_t {
-                self.push_segment(si)?;
+                self.push_segment(si);
             }
 
             if step.done {

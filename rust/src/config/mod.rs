@@ -82,6 +82,16 @@ pub struct RunConfig {
     /// requests slower than this land in the flight recorder's
     /// slow-request log even when unsampled elsewhere
     pub trace_slow_ms: u64,
+    /// seed of the deterministic fault-injection plan — every process
+    /// in the run derives identical per-site RNG streams from it
+    pub fault_seed: u64,
+    /// fault-injection spec (`kind:target@prob[+delay_ms]`, comma
+    /// separated — see `transport::fault`); None = injection disabled,
+    /// the hot-path check compiles down to one relaxed load
+    pub faults: Option<String>,
+    /// chaos kill schedule for procs mode (`kill:<role>@<ms>`, comma
+    /// separated — see `orchestrator::chaos`); None = no chaos
+    pub chaos: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -121,6 +131,9 @@ impl Default for RunConfig {
             stats_jsonl: None,
             trace_sample: 0.0,
             trace_slow_ms: 50,
+            fault_seed: 0,
+            faults: None,
+            chaos: None,
         }
     }
 }
@@ -209,6 +222,13 @@ impl RunConfig {
         cfg.trace_sample = get_num(&j, "trace_sample", cfg.trace_sample);
         cfg.trace_slow_ms =
             get_num(&j, "trace_slow_ms", cfg.trace_slow_ms as f64) as u64;
+        cfg.fault_seed = get_num(&j, "fault_seed", cfg.fault_seed as f64) as u64;
+        if let Some(s) = j.get("faults").and_then(|v| v.as_str()) {
+            cfg.faults = Some(s.to_string());
+        }
+        if let Some(s) = j.get("chaos").and_then(|v| v.as_str()) {
+            cfg.chaos = Some(s.to_string());
+        }
         if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
             for (k, v) in obj {
                 cfg.hp_overrides
@@ -270,6 +290,38 @@ impl RunConfig {
                 || self.resume.is_some(),
             "pool_mem_budget_mb requires checkpoint_dir or resume (spill directory)"
         );
+        // a misspelled fault spec must fail the launch, not silently
+        // run the drill with zero injection
+        if let Some(spec) = &self.faults {
+            crate::transport::fault::parse_spec(spec)
+                .with_context(|| format!("invalid faults spec '{spec}'"))?;
+        }
+        if let Some(spec) = &self.chaos {
+            let events = crate::orchestrator::chaos::parse_chaos(spec)
+                .with_context(|| format!("invalid chaos spec '{spec}'"))?;
+            anyhow::ensure!(
+                self.mode == "procs",
+                "chaos schedules require mode=procs (threads cannot be SIGKILLed)"
+            );
+            if events.iter().any(|e| e.role == "controller") {
+                // a controller restart must resume from a snapshot and
+                // come back on the address the workers already know
+                anyhow::ensure!(
+                    self.checkpoint_dir.is_some(),
+                    "kill:controller requires checkpoint_dir (restart resumes from snapshot)"
+                );
+                anyhow::ensure!(
+                    !self.controller_bind.ends_with(":0"),
+                    "kill:controller requires a fixed controller_bind port (workers must be able to re-register)"
+                );
+            }
+            if events.iter().any(|e| e.role == "pool") {
+                anyhow::ensure!(
+                    self.model_pools >= 2,
+                    "kill:pool requires model_pools >= 2 (a surviving replica)"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -299,6 +351,8 @@ impl RunConfig {
             heartbeat_ms: self.heartbeat_ms,
             trace_sample: self.trace_sample,
             trace_slow_ms: self.trace_slow_ms,
+            fault_seed: self.fault_seed,
+            fault_spec: self.faults.clone().unwrap_or_default(),
         }
     }
 
@@ -482,6 +536,64 @@ mod tests {
         assert_eq!(d.trace_slow_ms, 50);
         assert!(RunConfig::from_json(r#"{"trace_sample": 1.5}"#).is_err());
         assert!(RunConfig::from_json(r#"{"trace_sample": -0.1}"#).is_err());
+    }
+
+    #[test]
+    fn fault_and_chaos_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_json(
+            r#"{
+            "env": "rps", "mode": "procs", "model_pools": 2,
+            "fault_seed": 7, "faults": "drop:learner@0.1, delay:*@0.05+3",
+            "chaos": "kill:inf-server@500,kill:pool@900"
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.fault_seed, 7);
+        assert_eq!(
+            cfg.faults.as_deref(),
+            Some("drop:learner@0.1, delay:*@0.05+3")
+        );
+        assert_eq!(cfg.chaos.as_deref(), Some("kill:inf-server@500,kill:pool@900"));
+        // the fault plan rides the worker slice so every process in a
+        // procs run derives the same seeded schedule
+        let s = cfg.slice();
+        assert_eq!(s.fault_seed, 7);
+        assert_eq!(s.fault_spec, "drop:learner@0.1, delay:*@0.05+3");
+        let d = RunConfig::default();
+        assert_eq!(d.fault_seed, 0);
+        assert!(d.faults.is_none() && d.chaos.is_none());
+        assert!(d.slice().fault_spec.is_empty());
+        // bad grammar fails the launch instead of running faultless
+        assert!(RunConfig::from_json(r#"{"faults": "explode:*@0.5"}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"faults": "drop:@0.5"}"#).is_err());
+        assert!(
+            RunConfig::from_json(r#"{"mode": "procs", "chaos": "kill:ghost@10"}"#)
+                .is_err()
+        );
+        // chaos needs real processes to kill
+        assert!(RunConfig::from_json(r#"{"chaos": "kill:actor@100"}"#).is_err());
+        // a controller kill without a snapshot dir or fixed port cannot recover
+        assert!(RunConfig::from_json(
+            r#"{"mode": "procs", "controller_bind": "127.0.0.1:9111",
+                "chaos": "kill:controller@100"}"#
+        )
+        .is_err());
+        assert!(RunConfig::from_json(
+            r#"{"mode": "procs", "checkpoint_dir": "/tmp/ck",
+                "chaos": "kill:controller@100"}"#
+        )
+        .is_err());
+        assert!(RunConfig::from_json(
+            r#"{"mode": "procs", "checkpoint_dir": "/tmp/ck",
+                "controller_bind": "127.0.0.1:9111",
+                "chaos": "kill:controller@100"}"#
+        )
+        .is_ok());
+        // killing the only pool replica would lose every model
+        assert!(
+            RunConfig::from_json(r#"{"mode": "procs", "chaos": "kill:pool@100"}"#)
+                .is_err()
+        );
     }
 
     #[test]

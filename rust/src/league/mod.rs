@@ -202,6 +202,13 @@ impl LeagueMgrServer {
         self.stop_flag.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// Stop serving (chaos drills simulate a crashed control plane by
+    /// closing the service ports): joins the accept loop; per-connection
+    /// threads drain within their ~200ms read timeout.
+    pub fn shutdown(&mut self) {
+        self._server.shutdown();
+    }
+
     pub fn stats(&self) -> LeagueStats {
         let st = self.state.lock().unwrap();
         LeagueStats {

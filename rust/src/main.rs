@@ -184,6 +184,14 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     }
     cfg.trace_sample = args.f64_or("trace-sample", cfg.trace_sample)?;
     cfg.trace_slow_ms = args.u64_or("trace-slow-ms", cfg.trace_slow_ms)?;
+    // fault-injection / chaos knobs: flags override the config file
+    cfg.fault_seed = args.u64_or("fault-seed", cfg.fault_seed)?;
+    if let Some(s) = args.get("faults") {
+        cfg.faults = Some(s.to_string());
+    }
+    if let Some(s) = args.get("chaos") {
+        cfg.chaos = Some(s.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -345,6 +353,133 @@ fn final_stats_row(ctrl: &Controller, jsonl: &mut Option<JsonlSink>) {
     }
 }
 
+/// `--chaos` supervision: the plain monitor loop plus a deterministic
+/// kill schedule.  Worker kills ride the existing respawn + slot
+/// reassignment path; `kill:pool` retires one in-process replica so
+/// clients must fail over; `kill:controller` forces a snapshot, tears
+/// the control plane down WITHOUT the clean-shutdown save (SIGKILL
+/// semantics), and restarts it resumed from that snapshot on the same
+/// bind — live workers re-register against the successor.
+#[allow(clippy::too_many_arguments)]
+fn chaos_supervise(
+    ctrl: &mut Controller,
+    restart_cfg: &RunConfig,
+    hp_layout: &[String],
+    hp_default: &[f32],
+    children: &mut [(&'static str, Child)],
+    events: &[tleague::orchestrator::chaos::ChaosEvent],
+    exe: &Path,
+    artifacts: &str,
+    respawns: &mut u64,
+    respawn_cap: u64,
+) -> Result<Option<JsonlSink>> {
+    let sig = signal::install();
+    let start = Instant::now();
+    let stats_every = Duration::from_secs(ctrl.cfg.stats_every_secs.max(1));
+    let mut jsonl = open_jsonl(&ctrl.cfg.stats_jsonl)?;
+    let mut next_stats = Instant::now() + stats_every;
+    let mut last = 0u64;
+    let mut fired = 0usize;
+    while !ctrl.learners_done()
+        && !ctrl.deploy_stats().draining
+        && !sig.load(Ordering::Relaxed)
+    {
+        // finer tick than the stats interval so kill times are honored
+        std::thread::sleep(Duration::from_millis(50));
+        while fired < events.len()
+            && start.elapsed() >= Duration::from_millis(events[fired].at_ms)
+        {
+            let ev = &events[fired];
+            fired += 1;
+            match ev.role.as_str() {
+                "controller" => {
+                    // pin the recovery point: a real crash resumes from
+                    // the last periodic snapshot; the drill forces one
+                    // so recovery is exercised, not snapshot timing
+                    ctrl.snapshot_now()?;
+                    ctrl.crash();
+                    println!(
+                        "chaos[{}ms]: controller crashed; restarting from snapshot",
+                        ev.at_ms
+                    );
+                    let mut cfg2 = restart_cfg.clone();
+                    cfg2.resume = cfg2.checkpoint_dir.clone();
+                    *ctrl =
+                        Controller::start(cfg2, hp_layout.to_vec(), hp_default.to_vec())?;
+                    println!("chaos[{}ms]: controller back on {}", ev.at_ms, ctrl.addr);
+                }
+                "pool" => match ctrl.chaos_kill_pool() {
+                    Some(addr) => println!(
+                        "chaos[{}ms]: model-pool replica {addr} down",
+                        ev.at_ms
+                    ),
+                    None => {
+                        println!("chaos[{}ms]: no pool replica to spare", ev.at_ms)
+                    }
+                },
+                role => {
+                    // SIGKILL the first live child of that role; the
+                    // supervisor below respawns it and the controller
+                    // reassigns the freed slot
+                    let mut killed = false;
+                    for (r, child) in children.iter_mut() {
+                        if *r == role && matches!(child.try_wait(), Ok(None)) {
+                            println!(
+                                "chaos[{}ms]: SIGKILL {role} worker pid {}",
+                                ev.at_ms,
+                                child.id()
+                            );
+                            child.kill().ok();
+                            killed = true;
+                            break;
+                        }
+                    }
+                    if !killed {
+                        println!("chaos[{}ms]: no live {role} worker", ev.at_ms);
+                    }
+                }
+            }
+        }
+        // supervise: chaos victims and organic deaths alike respawn
+        for (role, child) in children.iter_mut() {
+            if let Some(status) = child.try_wait()? {
+                if ctrl.learners_done() || sig.load(Ordering::Relaxed) {
+                    break;
+                }
+                anyhow::ensure!(
+                    *respawns < respawn_cap,
+                    "{role} worker keeps dying ({respawns} respawns); aborting"
+                );
+                eprintln!("{role} worker exited ({status}); respawning");
+                *child = spawn_worker(exe, *role, &ctrl.addr, artifacts)?;
+                *respawns += 1;
+            }
+        }
+        if Instant::now() >= next_stats {
+            next_stats += stats_every;
+            let ds = ctrl.deploy_stats();
+            let ls = ctrl.league_stats();
+            println!(
+                "steps={} (+{}) pool={} episodes={} workers={} lost={} reassigned={}",
+                ds.learner_steps,
+                ds.learner_steps.saturating_sub(last),
+                ls.pool_size,
+                ls.episodes,
+                ds.workers,
+                ds.lost,
+                ds.reassigned
+            );
+            last = ds.learner_steps;
+            let tele = ctrl.telemetry_report();
+            println!("league: {}", telemetry::summary_line(&tele));
+            if let Some(sink) = jsonl.as_mut() {
+                sink.append(&tele, ls.episodes, ls.frames);
+            }
+        }
+    }
+    Ok(jsonl)
+}
+
 /// `run --mode procs`: embed the controller, spawn one OS process per
 /// role worker, supervise them (respawn on unexpected exit — the
 /// cross-process analogue of the thread supervisor), and drain
@@ -360,7 +495,20 @@ fn cmd_run_procs(cfg: RunConfig, args: &Args) -> Result<()> {
     let n_actor_workers =
         cfg.n_agents as usize * cfg.learners_per_agent * cfg.actors_per_learner;
     let n_inf_workers = cfg.inf_servers;
-    let mut ctrl = Controller::start(cfg, hp_layout, hp_default)?;
+    // deterministic chaos schedule (grammar validated with the config)
+    let chaos_events = match &cfg.chaos {
+        Some(spec) => tleague::orchestrator::chaos::parse_chaos(spec)?,
+        None => Vec::new(),
+    };
+    // the parent embeds the control plane and the pool replicas, so it
+    // participates in the fault plan as role "controller"; workers get
+    // the same plan with their assignment slice
+    if let Some(spec) = &cfg.faults {
+        tleague::transport::fault::set_role("controller");
+        tleague::transport::fault::install_spec(cfg.fault_seed, spec)?;
+    }
+    let restart_cfg = cfg.clone();
+    let mut ctrl = Controller::start(cfg, hp_layout.clone(), hp_default.clone())?;
     println!("controller on {}", ctrl.addr);
 
     let exe = std::env::current_exe()?;
@@ -384,27 +532,42 @@ fn cmd_run_procs(cfg: RunConfig, args: &Args) -> Result<()> {
     // a persistently-failing worker (the worker itself gives up after 10
     // consecutive failures) must abort the run loudly, not respawn forever
     let respawn_cap = 10 * children.len() as u64;
-    let supervised = monitor_controller(&ctrl, || {
-        // supervise: a worker process that died mid-run is respawned;
-        // the controller hands it back its freed slot.  Not after
-        // Ctrl-C: the signal hit the whole process group, and the dead
-        // children are the signal's work, not failures.
-        for (role, child) in children.iter_mut() {
-            if let Some(status) = child.try_wait()? {
-                if ctrl.learners_done() || sig.load(Ordering::Relaxed) {
-                    break;
+    let supervised = if chaos_events.is_empty() {
+        monitor_controller(&ctrl, || {
+            // supervise: a worker process that died mid-run is respawned;
+            // the controller hands it back its freed slot.  Not after
+            // Ctrl-C: the signal hit the whole process group, and the dead
+            // children are the signal's work, not failures.
+            for (role, child) in children.iter_mut() {
+                if let Some(status) = child.try_wait()? {
+                    if ctrl.learners_done() || sig.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    anyhow::ensure!(
+                        respawns < respawn_cap,
+                        "{role} worker keeps dying ({respawns} respawns); aborting"
+                    );
+                    eprintln!("{role} worker exited ({status}); respawning");
+                    *child = spawn_worker(&exe, *role, &ctrl.addr, &artifacts)?;
+                    respawns += 1;
                 }
-                anyhow::ensure!(
-                    respawns < respawn_cap,
-                    "{role} worker keeps dying ({respawns} respawns); aborting"
-                );
-                eprintln!("{role} worker exited ({status}); respawning");
-                *child = spawn_worker(&exe, *role, &ctrl.addr, &artifacts)?;
-                respawns += 1;
             }
-        }
-        Ok(())
-    });
+            Ok(())
+        })
+    } else {
+        chaos_supervise(
+            &mut ctrl,
+            &restart_cfg,
+            &hp_layout,
+            &hp_default,
+            &mut children,
+            &chaos_events,
+            &exe,
+            &artifacts,
+            &mut respawns,
+            respawn_cap,
+        )
+    };
 
     // graceful drain (even when supervision aborted): actors first, then
     // learners/inf, final snapshot
@@ -456,6 +619,10 @@ fn cmd_controller(args: &Args) -> Result<()> {
         cfg.controller_bind = "127.0.0.1:9100".into();
     }
     cfg.validate()?;
+    if let Some(spec) = &cfg.faults {
+        tleague::transport::fault::set_role("controller");
+        tleague::transport::fault::install_spec(cfg.fault_seed, spec)?;
+    }
     let manifest = Manifest::load(Path::new(&artifacts_dir(args)))?;
     let hp_layout = manifest.hp_layout.clone();
     let hp_default = manifest.default_hp();

@@ -16,12 +16,12 @@
 
 use crate::proto::{ModelBlob, ModelKey, Msg, TraceCtx, TAG_MODEL, TAG_MODEL_REV};
 use crate::telemetry::trace;
-use crate::transport::{RepServer, Reply, ReqClient};
+use crate::transport::{fault, RepServer, Reply, ReqClient};
 use crate::util::codec::{Enc, Wire};
 use crate::util::metrics::{Meter, MetricsHub};
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -523,6 +523,15 @@ pub struct ModelPoolClient {
     /// Rotated on transport failure so a dead replica doesn't pin every
     /// future refresh to its ~9s reconnect loop.
     sticky: AtomicUsize,
+    /// bumped on every sticky rotation.  Two replicas can hold the SAME
+    /// (version, rev) numbers for DIFFERENT bytes (revs count local
+    /// puts), so rev state learned before a rotation must never be
+    /// echoed at the replacement replica — it could collide into a
+    /// bogus `NotModified` that silently pins stale params.
+    generation: AtomicU64,
+    /// agent → generation under which its last `New` rev was learned;
+    /// a mismatch downgrades the next if-newer read to unconditional.
+    have_gen: Mutex<HashMap<u32, u64>>,
     rng: Mutex<Pcg32>,
 }
 
@@ -541,8 +550,17 @@ impl ModelPoolClient {
         ModelPoolClient {
             replicas: addrs.iter().map(|a| ReqClient::connect(a)).collect(),
             sticky: AtomicUsize::new(sticky),
+            generation: AtomicU64::new(0),
+            have_gen: Mutex::new(HashMap::new()),
             rng: Mutex::new(rng),
         }
+    }
+
+    /// Index of the replica currently pinned for if-newer refreshes
+    /// (rotates on transport failure).  Exposed for failover tests and
+    /// chaos drills.
+    pub fn sticky_index(&self) -> usize {
+        self.sticky.load(Ordering::Relaxed) % self.replicas.len()
     }
 
     fn pick(&self) -> &ReqClient {
@@ -550,12 +568,35 @@ impl ModelPoolClient {
         &self.replicas[i as usize]
     }
 
+    /// Write-through to every replica.  The write is durable once at
+    /// least one replica acks: a dead replica must not stall or fail
+    /// the learner's publish cadence (it re-syncs via snapshot preload
+    /// when it returns), so per-replica attempts are bounded instead of
+    /// riding the full reconnect ladder, and only a total miss errors.
     pub fn put(&self, blob: ModelBlob) -> Result<()> {
+        let mut acks = 0usize;
+        let mut last_err: Option<anyhow::Error> = None;
         for r in &self.replicas {
-            match r.request(&Msg::PutModel(blob.clone()))? {
-                Msg::Ok => {}
-                other => bail!("put: unexpected reply {other:?}"),
+            match r.request_n(&Msg::PutModel(blob.clone()), 4) {
+                Ok(Msg::Ok) => acks += 1,
+                Ok(other) => {
+                    last_err =
+                        Some(anyhow::anyhow!("put: unexpected reply {other:?}"));
+                }
+                Err(e) => last_err = Some(e),
             }
+        }
+        if acks == 0 {
+            return Err(last_err
+                .unwrap_or_else(|| anyhow::anyhow!("put: no replicas"))
+                .context("put: no replica acked"));
+        }
+        if acks < self.replicas.len() {
+            eprintln!(
+                "model_pool: put {} acked by {acks}/{} replicas",
+                blob.key,
+                self.replicas.len()
+            );
         }
         Ok(())
     }
@@ -578,8 +619,9 @@ impl ModelPoolClient {
 
     /// Delta-aware latest read: transfers the params only when the pool
     /// holds something newer than `(have_version, have_rev)`.  Pass
-    /// `(0, 0)` to fetch unconditionally (revs start at 1).  Always asks
-    /// the same (sticky) replica — see the field docs.
+    /// `(0, 0)` to fetch unconditionally (revs start at 1).  Asks the
+    /// sticky replica, failing over (and invalidating rev state) when
+    /// it is unreachable — see the field docs.
     pub fn get_latest_if_newer(
         &self,
         agent: u32,
@@ -599,24 +641,59 @@ impl ModelPoolClient {
         have_rev: u64,
         trace: Option<TraceCtx>,
     ) -> Result<LatestFetch> {
-        let idx = self.sticky.load(Ordering::Relaxed) % self.replicas.len();
-        let req = Msg::GetModelIfNewer { agent, have_version, have_rev, trace };
-        match self.replicas[idx].request(&req) {
-            Ok(Msg::NotModified) => Ok(LatestFetch::NotModified),
-            Ok(Msg::ModelRev { rev, blob }) => Ok(LatestFetch::New { rev, blob }),
-            Ok(Msg::NotFound) => Ok(LatestFetch::NotFound),
-            Ok(other) => bail!("get_latest_if_newer: unexpected reply {other:?}"),
-            Err(e) => {
-                // sticky replica unreachable: move to the next one so
-                // refreshes don't stay pinned to a dead replica.  The
-                // caller falls back to a full fetch; the first refresh
-                // against the new replica is a full transfer too (its
-                // revs are incomparable), then steady state resumes.
-                self.sticky
-                    .store((idx + 1) % self.replicas.len(), Ordering::Relaxed);
-                Err(e)
+        // with a fallback replica available, give up on the sticky one
+        // quickly instead of riding the full reconnect ladder
+        let attempts = if self.replicas.len() > 1 { 5 } else { 40 };
+        let mut last_err = None;
+        for round in 0..self.replicas.len() {
+            let idx = self.sticky.load(Ordering::Relaxed) % self.replicas.len();
+            let gen = self.generation.load(Ordering::Relaxed);
+            // rev state learned under an older generation came from a
+            // different replica and is incomparable: downgrade to an
+            // unconditional read rather than risk a colliding, bogus
+            // NotModified (see the `generation` field docs)
+            let (hv, hr) =
+                if self.have_gen.lock().unwrap().get(&agent) == Some(&gen) {
+                    (have_version, have_rev)
+                } else {
+                    (0, 0)
+                };
+            let req = Msg::GetModelIfNewer {
+                agent,
+                have_version: hv,
+                have_rev: hr,
+                trace,
+            };
+            match self.replicas[idx].request_n(&req, attempts) {
+                Ok(reply) => {
+                    if round > 0 {
+                        fault::on_recovery();
+                    }
+                    return match reply {
+                        Msg::NotModified => Ok(LatestFetch::NotModified),
+                        Msg::ModelRev { rev, blob } => {
+                            self.have_gen.lock().unwrap().insert(agent, gen);
+                            Ok(LatestFetch::New { rev, blob })
+                        }
+                        Msg::NotFound => Ok(LatestFetch::NotFound),
+                        other => bail!(
+                            "get_latest_if_newer: unexpected reply {other:?}"
+                        ),
+                    };
+                }
+                Err(e) => {
+                    // sticky replica unreachable: rotate so refreshes
+                    // don't stay pinned to a dead replica, and bump the
+                    // generation so its rev state is never echoed at
+                    // the replacement
+                    self.sticky
+                        .store((idx + 1) % self.replicas.len(), Ordering::Relaxed);
+                    self.generation.fetch_add(1, Ordering::Relaxed);
+                    last_err = Some(e);
+                }
             }
         }
+        Err(last_err.expect("at least one replica attempted"))
     }
 
     /// (resident_bytes, models, spilled) of one random replica.
@@ -791,6 +868,53 @@ mod tests {
             client.get_latest_if_newer(0, 99, 12345).unwrap(),
             LatestFetch::NotModified
         ));
+    }
+
+    /// Regression for the cross-replica `NotModified` staleness hazard:
+    /// revs are replica-local put counters, so two replicas can hold
+    /// the SAME (version, rev) numbers for DIFFERENT bytes.  After the
+    /// sticky replica dies, the client must fail over within the call
+    /// AND downgrade to an unconditional read — echoing the dead
+    /// replica's rev at the survivor would collide into a bogus
+    /// `NotModified` that silently pins stale params.
+    #[test]
+    fn sticky_failover_never_yields_stale_not_modified() {
+        let mut s1 = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let mut s2 = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        // engineer the rev collision: one put each → (v1, rev 1) on
+        // both replicas, different params
+        ModelPoolClient::connect(&[s1.addr.clone()]).put(blob(0, 1, 1.0)).unwrap();
+        ModelPoolClient::connect(&[s2.addr.clone()]).put(blob(0, 1, 2.0)).unwrap();
+        let client =
+            ModelPoolClient::connect(&[s1.addr.clone(), s2.addr.clone()]);
+        let (rev, first) = match client.get_latest_if_newer(0, 0, 0).unwrap() {
+            LatestFetch::New { rev, blob } => (rev, blob.params[0]),
+            other => panic!("expected New, got {other:?}"),
+        };
+        // steady state: holding the current (version, rev) is a hit
+        assert!(matches!(
+            client.get_latest_if_newer(0, 1, rev).unwrap(),
+            LatestFetch::NotModified
+        ));
+        // kill the sticky replica; the same refresh must now fail over
+        // and come back `New` with the survivor's bytes
+        let sticky = client.sticky_index();
+        if sticky == 0 {
+            s1.shutdown();
+        } else {
+            s2.shutdown();
+        }
+        // conn threads poll the stop flag on a 200ms read timeout — wait
+        // them out so the dead replica cannot serve one last request
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        match client.get_latest_if_newer(0, 1, rev).unwrap() {
+            LatestFetch::New { blob, .. } => {
+                let survivor = if first == 1.0 { 2.0 } else { 1.0 };
+                assert_eq!(blob.params[0], survivor, "must serve survivor bytes");
+            }
+            other => panic!("expected New after failover, got {other:?}"),
+        }
+        assert_ne!(client.sticky_index(), sticky, "sticky must rotate");
     }
 
     /// Repeated reads of one blob encode its reply frame exactly once;

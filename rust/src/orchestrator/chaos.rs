@@ -1,0 +1,86 @@
+//! Chaos schedules for the procs deployment.
+//!
+//! `run --mode procs --chaos <spec>` executes a timed kill schedule
+//! against the live run: worker processes get a real SIGKILL (the
+//! supervisor's respawn + the controller's heartbeat reaping take it
+//! from there), a `pool` event stops one in-controller ModelPool
+//! replica (exercising client failover), and a `controller` event
+//! crashes and restarts the control plane itself from its last
+//! periodic snapshot.  Combined with `--faults`/`--fault-seed` this is
+//! the end-to-end driver for the transport fault plan.
+
+use anyhow::{bail, Context, Result};
+
+/// Roles a chaos event may target.  `pool` is special-cased (replicas
+/// live inside the controller process); the rest name worker roles or
+/// the controller.
+pub const CHAOS_ROLES: &[&str] =
+    &["learner", "actor", "inf-server", "pool", "controller"];
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChaosEvent {
+    /// one of [`CHAOS_ROLES`]
+    pub role: String,
+    /// milliseconds after run start
+    pub at_ms: u64,
+}
+
+/// Parse a chaos spec: comma-separated `kill:<role>@<ms>` events,
+/// e.g. `"kill:inf-server@500, kill:pool@800, kill:controller@1500"`.
+/// Returned sorted by fire time.
+pub fn parse_chaos(spec: &str) -> Result<Vec<ChaosEvent>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let body = part.strip_prefix("kill:").with_context(|| {
+            format!("chaos event '{part}': want kill:<role>@<ms>")
+        })?;
+        let (role, at_s) = body.rsplit_once('@').with_context(|| {
+            format!("chaos event '{part}': missing @<ms> fire time")
+        })?;
+        if !CHAOS_ROLES.contains(&role) {
+            bail!(
+                "chaos event '{part}': unknown role '{role}' \
+                 (want learner|actor|inf-server|pool|controller)"
+            );
+        }
+        let at_ms: u64 = at_s.parse().with_context(|| {
+            format!("chaos event '{part}': bad fire time '{at_s}'")
+        })?;
+        out.push(ChaosEvent { role: role.to_string(), at_ms });
+    }
+    if out.is_empty() {
+        bail!("chaos spec '{spec}' contains no events");
+    }
+    out.sort_by_key(|e| e.at_ms);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_spec_parses_sorted_and_rejects() {
+        let ev = parse_chaos(
+            "kill:controller@1500, kill:inf-server@500 ,kill:pool@800",
+        )
+        .unwrap();
+        assert_eq!(
+            ev,
+            vec![
+                ChaosEvent { role: "inf-server".into(), at_ms: 500 },
+                ChaosEvent { role: "pool".into(), at_ms: 800 },
+                ChaosEvent { role: "controller".into(), at_ms: 1500 },
+            ]
+        );
+        for bad in [
+            "",
+            "kill:learner",        // no fire time
+            "pause:learner@100",   // unknown verb
+            "kill:driver@100",     // unknown role
+            "kill:learner@soon",   // non-numeric time
+        ] {
+            assert!(parse_chaos(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+}

@@ -707,6 +707,46 @@ impl Controller {
         // learners will ever publish, so the final snapshot is complete
         self.core.shutdown();
     }
+
+    /// Force a league + pool snapshot right now (chaos drills take one
+    /// before crashing the controller so recovery has something to
+    /// resume from).  Requires `cfg.checkpoint_dir`.
+    pub fn snapshot_now(&self) -> Result<std::path::PathBuf> {
+        self.core.snapshot_now(&self.cfg)
+    }
+
+    /// Chaos drill: SIGKILL-equivalent death of the control plane.  No
+    /// draining, no stop acks, no final snapshot — ports simply close.
+    /// Workers discover it via failed heartbeats and re-register against
+    /// the successor started from the last snapshot on the same bind.
+    /// After this, `shutdown()` (and Drop) are no-ops — the crashed
+    /// value can be overwritten with a restarted Controller in place.
+    pub fn crash(&mut self) {
+        if self.reaper.is_none() {
+            return; // already crashed / shut down
+        }
+        self.reaper_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.reaper.take() {
+            h.join().ok();
+        }
+        self.server.shutdown();
+        self.core.crash();
+    }
+
+    /// Chaos drill: kill one in-process ModelPool replica (they live
+    /// inside the controller process, so the schedule can't SIGKILL
+    /// them individually).  Stops the highest-index live replica —
+    /// never replica 0, whose store backs the snapshotter — leaving its
+    /// address dead so clients must fail over.  Returns the downed
+    /// replica's address, or None if no replica can be spared.
+    pub fn chaos_kill_pool(&mut self) -> Option<String> {
+        if self.core.pools.len() < 2 {
+            return None;
+        }
+        let mut victim = self.core.pools.pop()?;
+        victim.shutdown();
+        Some(victim.addr.clone())
+    }
 }
 
 impl Drop for Controller {

@@ -15,6 +15,7 @@
 //! M_M ModelPool replicas, the LeagueMgr, and the background
 //! snapshotter — everything that is a *service* rather than a *role*.
 
+pub mod chaos;
 pub mod controller;
 pub mod worker;
 
@@ -58,6 +59,10 @@ pub struct CoreServices {
     /// raised only after every writer of league/pool state is quiesced,
     /// so the snapshotter's final save is complete
     snap_stop: Arc<AtomicBool>,
+    /// chaos drills: a simulated crash must NOT get the clean-shutdown
+    /// final save — recovery has to come from the last periodic (or
+    /// forced) snapshot, exactly like a real SIGKILL
+    snap_skip_final: Arc<AtomicBool>,
 }
 
 impl CoreServices {
@@ -135,12 +140,14 @@ impl CoreServices {
         // periodically persists league + pool state; writes once more on
         // shutdown so even a clean exit is resumable.
         let snap_stop = Arc::new(AtomicBool::new(false));
+        let snap_skip_final = Arc::new(AtomicBool::new(false));
         let snapshotter = match &cfg.checkpoint_dir {
             Some(dir) => {
                 let mgr = CheckpointMgr::open(dir, cfg.checkpoint_keep)?;
                 let snap_league = league.snapshot_fn();
                 let snap_blobs = pools[0].blobs_fn();
                 let stop2 = snap_stop.clone();
+                let skip2 = snap_skip_final.clone();
                 let every = Duration::from_secs(cfg.checkpoint_every_secs);
                 Some(
                     std::thread::Builder::new()
@@ -161,14 +168,23 @@ impl CoreServices {
                                     last = Instant::now();
                                 }
                             }
-                            save(&mgr);
+                            if !skip2.load(Ordering::Relaxed) {
+                                save(&mgr);
+                            }
                         })?,
                 )
             }
             None => None,
         };
 
-        Ok(CoreServices { league, pools, pool_addrs, snapshotter, snap_stop })
+        Ok(CoreServices {
+            league,
+            pools,
+            pool_addrs,
+            snapshotter,
+            snap_stop,
+            snap_skip_final,
+        })
     }
 
     /// Force a snapshot right now (tests / operator tooling); returns
@@ -191,6 +207,23 @@ impl CoreServices {
         self.snap_stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.snapshotter.take() {
             h.join().ok();
+        }
+    }
+
+    /// Simulate a SIGKILL of the service plane (chaos drills): close
+    /// the league and pool ports immediately and SKIP the snapshotter's
+    /// final save — a real crash never gets one.  Recovery must come
+    /// from the last periodic (or [`snapshot_now`](Self::snapshot_now))
+    /// snapshot, which is exactly the invariant the drills verify.
+    pub fn crash(&mut self) {
+        self.snap_skip_final.store(true, Ordering::Relaxed);
+        self.snap_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.snapshotter.take() {
+            h.join().ok();
+        }
+        self.league.shutdown();
+        for p in &mut self.pools {
+            p.shutdown();
         }
     }
 }
@@ -334,6 +367,22 @@ impl Deployment {
             .enumerate()
             .map(|(i, p)| ("model-pool", i as u32, p.hub().clone()))
             .collect();
+        // thread mode shares one process, so one fault plan covers every
+        // role; its counters get their own hub in the merged report
+        if let Some(spec) = &cfg.faults {
+            crate::transport::fault::set_role("deployment");
+            crate::transport::fault::install_spec(cfg.fault_seed, spec)?;
+            let fh = Arc::new(MetricsHub::default());
+            fh.register(
+                "faults_injected",
+                crate::transport::fault::injected_meter(),
+            );
+            fh.register(
+                "recoveries",
+                crate::transport::fault::recovered_meter(),
+            );
+            hubs.push(("deployment", 0, fh));
+        }
 
         // ---- learners -------------------------------------------------
         let mut learner_status = Vec::new();

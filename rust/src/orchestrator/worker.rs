@@ -23,8 +23,9 @@ use crate::orchestrator::{learner_thread, run_actor, LearnerStatus};
 use crate::proto::{Msg, RoleStats, WorkerAssignment};
 use crate::runtime::Engine;
 use crate::telemetry::{snapshot_role, trace};
-use crate::transport::ReqClient;
+use crate::transport::{fault, ReqClient};
 use crate::util::metrics::MetricsHub;
+use crate::util::rng::Pcg32;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -172,6 +173,11 @@ fn register(
 ) -> Result<Option<WorkerAssignment>> {
     let mut last_reason = String::new();
     let mut unreachable = 0u32;
+    // per-process jitter stream: after a controller restart every
+    // surviving worker re-registers at once, and un-jittered backoff
+    // would keep that thundering herd marching in lockstep forever
+    let mut jitter =
+        Pcg32::from_label(u64::from(std::process::id()), "register-jitter");
     loop {
         if proc_stop.load(Ordering::Relaxed) {
             return Ok(None);
@@ -188,9 +194,10 @@ fn register(
                     eprintln!("worker({role}): waiting — {reason}");
                     last_reason = reason;
                 }
-                std::thread::sleep(Duration::from_millis(
-                    u64::from(backoff_ms).clamp(10, 10_000),
-                ));
+                // spread sleeps over [base/2, 3*base/2]
+                let base = u64::from(backoff_ms).clamp(10, 10_000);
+                let spread = base / 2 + u64::from(jitter.below(base as u32 + 1));
+                std::thread::sleep(Duration::from_millis(spread));
             }
             Ok(Msg::Err(e)) => bail!("register rejected: {e}"),
             Ok(other) => bail!("register: unexpected reply {other:?}"),
@@ -200,7 +207,9 @@ fn register(
                     bail!("controller unreachable after {unreachable} attempts");
                 }
                 eprintln!("worker({role}): controller unreachable, retrying");
-                std::thread::sleep(Duration::from_millis(500));
+                std::thread::sleep(Duration::from_millis(
+                    250 + u64::from(jitter.below(501)),
+                ));
             }
         }
     }
@@ -243,6 +252,10 @@ pub fn run_worker(
     // take over the same slot, so the controller's per-slot dedupe
     // never mistakes a fresh worker's snapshot for a retransmit.
     let hub = Arc::new(MetricsHub::default());
+    // fault-plan counters ride this worker's snapshots so the league
+    // telemetry report shows injections/recoveries per role
+    hub.register("faults_injected", fault::injected_meter());
+    hub.register("recoveries", fault::recovered_meter());
     let pending: PendingSnap = Default::default();
     let stats_seq =
         Arc::new(AtomicU64::new((std::process::id() as u64) << 32));
@@ -257,6 +270,18 @@ pub fn run_worker(
         );
         // run-wide tracing knobs arrive with the assignment
         trace::set_slow_ms(asn.run.trace_slow_ms);
+        // ... and so does the fault plan: every process compiles the
+        // same seeded plan, scoped here to this worker's role
+        fault::set_role(role);
+        if asn.run.fault_spec.is_empty() {
+            fault::clear();
+        } else if let Err(e) =
+            fault::install_spec(asn.run.fault_seed, &asn.run.fault_spec)
+        {
+            // the controller validated the spec; a parse failure here
+            // means version skew — run un-faulted rather than die
+            eprintln!("worker({role}): ignoring fault spec: {e:#}");
+        }
         let hb = Arc::new(HbShared::default());
         let hb_handle = spawn_heartbeat(
             controller_addr.to_string(),

@@ -204,6 +204,10 @@ pub struct RunSlice {
     pub trace_sample: f64,
     /// spans slower than this land in the flight recorder's slow log
     pub trace_slow_ms: u64,
+    /// seed of the run-wide deterministic fault-injection plan
+    pub fault_seed: u64,
+    /// fault-injection spec (empty = injection disabled)
+    pub fault_spec: String,
 }
 
 /// A role slot granted to a worker process: which role instance it is,
@@ -618,6 +622,8 @@ impl Wire for RunSlice {
         buf.put_u64(self.heartbeat_ms);
         buf.put_f64(self.trace_sample);
         buf.put_u64(self.trace_slow_ms);
+        buf.put_u64(self.fault_seed);
+        buf.put_str(&self.fault_spec);
     }
     fn decode(cur: &mut Cursor) -> Result<Self> {
         Ok(RunSlice {
@@ -637,6 +643,8 @@ impl Wire for RunSlice {
             heartbeat_ms: cur.u64()?,
             trace_sample: cur.f64()?,
             trace_slow_ms: cur.u64()?,
+            fault_seed: cur.u64()?,
+            fault_spec: cur.str()?,
         })
     }
 }
@@ -1017,6 +1025,8 @@ mod tests {
                     heartbeat_ms: 1_000,
                     trace_sample: 0.01,
                     trace_slow_ms: 50,
+                    fault_seed: 99,
+                    fault_spec: "drop:actor@0.25".into(),
                 },
             }),
             Msg::Retry { backoff_ms: 500, reason: "no free slot".into() },

@@ -1,0 +1,334 @@
+//! Deterministic, seeded fault injection for the transport layer.
+//!
+//! A process-global fault plan — installed once per run from
+//! `--faults <spec>` / `--fault-seed <s>` (procs workers receive both
+//! through the [`crate::proto::RunSlice`]) — lets chaos drills drop
+//! connections, delay or truncate frames, reject accepts, and partition
+//! role pairs at exact, reproducible points.  Determinism comes from
+//! one [`Pcg32`] stream per *site descriptor*: the descriptor string
+//! `"{role}/{site}/{addr}/t{tag}"` is hashed into the stream selector,
+//! so the k-th check at a given site draws the same verdict for the
+//! same `--fault-seed` regardless of thread interleaving elsewhere.
+//!
+//! Rules address sites by substring match on the descriptor, which
+//! makes every axis targetable without a query language: a role
+//! (`"actor/"`), a peer endpoint (`":9100"`), a message tag
+//! (`"/t30"` — Traj frames), or everything (`"*"`).  A partition
+//! between role pairs is a `partition` rule naming the initiating
+//! role + the peer's address at probability 1.
+//!
+//! When no plan is installed the hot-path cost is a single relaxed
+//! atomic load ([`check`] inlines to load-and-branch; everything else
+//! lives behind `#[cold]`) — measured by the `faults` bench group.
+//!
+//! Injections bump the `faults_injected` meter; components that heal
+//! from a failure (a request that succeeded after a reconnect, a
+//! sticky pool replica rotation, an actor flushing its parked segment
+//! queue) report through [`on_recovery`].  Both meters are surfaced in
+//! the telemetry plane as `faults_injected` / `recoveries`.
+
+use crate::util::metrics::Meter;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Site names used in descriptors (one per injection point).
+pub const SITE_REQ: &str = "req"; // ReqClient request exchange
+pub const SITE_PUSH: &str = "push"; // PushClient frame write
+pub const SITE_ACCEPT: &str = "accept"; // RepServer accept loop
+pub const SITE_REP: &str = "rep"; // RepServer per-request handling
+pub const SITE_PULL: &str = "pull"; // PullServer frame receive
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Kill the connection (client: error + reconnect; server: close).
+    Drop,
+    /// Sleep `delay_ms` before proceeding.
+    Delay,
+    /// Write a deliberately short frame, then kill the connection —
+    /// exercises the receiver's partial-frame handling.
+    Truncate,
+    /// Server side: accept then immediately close (connection refused
+    /// as seen by the peer's next read).
+    Reject,
+    /// Alias of Drop for specs that express role-pair partitions
+    /// (typically at probability 1 against a role+addr target).
+    Partition,
+}
+
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub kind: FaultKind,
+    /// Substring matched against `"{role}/{site}/{addr}/t{tag}"`;
+    /// `"*"` matches every site.
+    pub target: String,
+    /// Per-check injection probability in `[0, 1]`.
+    pub prob: f64,
+    /// Delay kinds only: how long to stall.
+    pub delay_ms: u64,
+}
+
+/// Outcome of a fault check at one site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Pass,
+    Drop,
+    Delay(Duration),
+    Truncate,
+    Reject,
+}
+
+struct PlanState {
+    seed: u64,
+    rules: Vec<FaultRule>,
+    /// one deterministic RNG stream per site descriptor
+    streams: HashMap<String, Pcg32>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<PlanState>> = Mutex::new(None);
+static ROLE: Mutex<String> = Mutex::new(String::new());
+
+/// Parse a fault spec: comma-separated rules of the form
+/// `kind:target@prob[+delay_ms]` with kind one of
+/// `drop|delay|truncate|reject|partition`, e.g.
+/// `"drop:pool@0.05, delay:*@0.1+20, partition:actor/push@1"`.
+pub fn parse_spec(spec: &str) -> Result<Vec<FaultRule>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (kind_s, rest) = part.split_once(':').with_context(|| {
+            format!("fault rule '{part}': want kind:target@prob[+delay_ms]")
+        })?;
+        let kind = match kind_s {
+            "drop" => FaultKind::Drop,
+            "delay" => FaultKind::Delay,
+            "truncate" => FaultKind::Truncate,
+            "reject" => FaultKind::Reject,
+            "partition" => FaultKind::Partition,
+            other => bail!(
+                "fault rule '{part}': unknown kind '{other}' \
+                 (want drop|delay|truncate|reject|partition)"
+            ),
+        };
+        let (target, prob_s) = rest
+            .rsplit_once('@')
+            .with_context(|| format!("fault rule '{part}': missing @prob"))?;
+        if target.is_empty() {
+            bail!("fault rule '{part}': empty target (use '*' for all)");
+        }
+        let (prob_s, delay_s) = match prob_s.split_once('+') {
+            Some((p, d)) => (p, Some(d)),
+            None => (prob_s, None),
+        };
+        let prob: f64 = prob_s.parse().with_context(|| {
+            format!("fault rule '{part}': bad probability '{prob_s}'")
+        })?;
+        if !(0.0..=1.0).contains(&prob) {
+            bail!("fault rule '{part}': probability {prob} outside [0, 1]");
+        }
+        let delay_ms: u64 = match delay_s {
+            Some(d) => d.parse().with_context(|| {
+                format!("fault rule '{part}': bad delay '{d}'")
+            })?,
+            None => 0,
+        };
+        if kind == FaultKind::Delay && delay_ms == 0 {
+            bail!("fault rule '{part}': delay needs a +<ms> suffix");
+        }
+        out.push(FaultRule { kind, target: target.to_string(), prob, delay_ms });
+    }
+    if out.is_empty() {
+        bail!("fault spec '{spec}' contains no rules");
+    }
+    Ok(out)
+}
+
+/// Install (or replace) the process-global plan.  An empty rule set
+/// disables injection entirely.
+pub fn install(seed: u64, rules: Vec<FaultRule>) {
+    let on = !rules.is_empty();
+    *PLAN.lock().unwrap() =
+        Some(PlanState { seed, rules, streams: HashMap::new() });
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// [`parse_spec`] + [`install`] in one step.
+pub fn install_spec(seed: u64, spec: &str) -> Result<()> {
+    install(seed, parse_spec(spec)?);
+    Ok(())
+}
+
+/// Remove the plan; [`check`] returns to its one-atomic-load fast path.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Relaxed);
+    *PLAN.lock().unwrap() = None;
+}
+
+/// Name this process's role for site descriptors (`"actor"`,
+/// `"learner"`, `"controller"`, ...).  Workers call it on assignment.
+pub fn set_role(role: &str) {
+    *ROLE.lock().unwrap() = role.to_string();
+}
+
+/// True when a non-empty plan is installed (one relaxed load).
+#[inline(always)]
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Draw the verdict for one operation at `site` against `addr` with
+/// message tag `tag`.  Free when no plan is installed.
+#[inline]
+pub fn check(site: &str, addr: &str, tag: u8) -> Verdict {
+    if !active() {
+        return Verdict::Pass;
+    }
+    check_slow(site, addr, tag)
+}
+
+#[cold]
+fn check_slow(site: &str, addr: &str, tag: u8) -> Verdict {
+    let role = match ROLE.lock() {
+        Ok(r) => r.clone(),
+        Err(_) => return Verdict::Pass,
+    };
+    let Ok(mut guard) = PLAN.lock() else { return Verdict::Pass };
+    let Some(plan) = guard.as_mut() else { return Verdict::Pass };
+    let desc = format!("{role}/{site}/{addr}/t{tag}");
+    let hits: Vec<FaultRule> = plan
+        .rules
+        .iter()
+        .filter(|r| r.target == "*" || desc.contains(r.target.as_str()))
+        .cloned()
+        .collect();
+    if hits.is_empty() {
+        return Verdict::Pass;
+    }
+    let seed = plan.seed;
+    let rng = plan
+        .streams
+        .entry(desc.clone())
+        .or_insert_with(|| Pcg32::from_label(seed, &desc));
+    for rule in &hits {
+        if rng.chance(rule.prob) {
+            injected_meter().add(1);
+            return match rule.kind {
+                FaultKind::Drop | FaultKind::Partition => Verdict::Drop,
+                FaultKind::Delay => {
+                    Verdict::Delay(Duration::from_millis(rule.delay_ms))
+                }
+                FaultKind::Truncate => Verdict::Truncate,
+                FaultKind::Reject => Verdict::Reject,
+            };
+        }
+    }
+    Verdict::Pass
+}
+
+/// Process-wide count of injected faults (`faults_injected`).
+pub fn injected_meter() -> Arc<Meter> {
+    static M: OnceLock<Arc<Meter>> = OnceLock::new();
+    M.get_or_init(|| Arc::new(Meter::new())).clone()
+}
+
+/// Process-wide count of healed failures (`recoveries`) — bumped by
+/// any component that re-established service after a failure, injected
+/// or real.
+pub fn recovered_meter() -> Arc<Meter> {
+    static M: OnceLock<Arc<Meter>> = OnceLock::new();
+    M.get_or_init(|| Arc::new(Meter::new())).clone()
+}
+
+/// Record one healed failure (reconnect succeeded, replica failover,
+/// parked queue flushed, ...).
+pub fn on_recovery() {
+    recovered_meter().add(1);
+}
+
+/// Serializes tests that touch the process-global plan (the plan is
+/// shared by every test thread in the binary).
+#[cfg(test)]
+pub(crate) static TEST_MUTEX: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_parses_and_rejects() {
+        let rules = parse_spec(
+            "drop:pool@0.5, delay:*@1+20 ,truncate:actor/push@0.25, \
+             partition:req/127.0.0.1:9@1",
+        )
+        .unwrap();
+        assert_eq!(rules.len(), 4);
+        assert_eq!(rules[0].kind, FaultKind::Drop);
+        assert_eq!(rules[0].target, "pool");
+        assert!((rules[0].prob - 0.5).abs() < 1e-12);
+        assert_eq!(rules[1].kind, FaultKind::Delay);
+        assert_eq!(rules[1].delay_ms, 20);
+        assert_eq!(rules[3].kind, FaultKind::Partition);
+        assert!((rules[3].prob - 1.0).abs() < 1e-12);
+        for bad in [
+            "",
+            "drop",           // no target/prob
+            "zap:x@0.5",      // unknown kind
+            "drop:x@1.5",     // prob out of range
+            "drop:@0.5",      // empty target
+            "delay:x@0.5",    // delay without +ms
+            "drop:x@maybe",   // non-numeric prob
+            "drop:x@0.1+abc", // non-numeric delay
+        ] {
+            assert!(parse_spec(bad).is_err(), "'{bad}' should not parse");
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_seeded_and_scoped() {
+        let _g = TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        clear();
+        set_role("tester");
+        let schedule = |seed: u64| {
+            install(seed, parse_spec("drop:fault-sentinel@0.5").unwrap());
+            let v: Vec<bool> = (0..64)
+                .map(|_| {
+                    check(SITE_REQ, "fault-sentinel:1", 3) == Verdict::Drop
+                })
+                .collect();
+            clear();
+            v
+        };
+        let a = schedule(7);
+        let b = schedule(7);
+        let c = schedule(8);
+        assert_eq!(a, b, "same seed must give the same fault schedule");
+        assert_ne!(a, c, "different seeds should diverge");
+        assert!(
+            a.iter().any(|&x| x) && !a.iter().all(|&x| x),
+            "p=0.5 should mix verdicts: {a:?}"
+        );
+
+        // rules only hit matching descriptors; everything else passes
+        // untouched even while the plan is active
+        install(7, parse_spec("drop:fault-sentinel@1").unwrap());
+        assert!(active());
+        assert_eq!(check(SITE_REQ, "10.9.9.9:5", 3), Verdict::Pass);
+        assert_eq!(check(SITE_REQ, "fault-sentinel:1", 3), Verdict::Drop);
+        // tag addressing: "/t30" matches Traj frames only
+        install(7, parse_spec("drop:/t30@1").unwrap());
+        assert_eq!(check(SITE_PUSH, "fault-sentinel:1", 30), Verdict::Drop);
+        assert_eq!(check(SITE_PUSH, "fault-sentinel:1", 31), Verdict::Pass);
+        // delay carries its parameter through
+        install(7, parse_spec("delay:fault-sentinel@1+25").unwrap());
+        assert_eq!(
+            check(SITE_REP, "fault-sentinel:1", 0),
+            Verdict::Delay(Duration::from_millis(25))
+        );
+        clear();
+        assert!(!active());
+        assert_eq!(check(SITE_REQ, "fault-sentinel:1", 3), Verdict::Pass);
+    }
+}

@@ -9,6 +9,8 @@
 //! `Msg`).  Every server spawns one thread per connection; this repo's
 //! scale (tens of actors per learner per machine) does not need epoll.
 
+pub mod fault;
+
 use crate::proto::Msg;
 use crate::util::codec::Wire;
 use crate::util::metrics::Meter;
@@ -184,10 +186,20 @@ impl ReqClient {
     /// on broken connections — the k8s-restart story of the paper means
     /// peers can briefly vanish.
     pub fn request(&self, msg: &Msg) -> Result<Msg> {
+        self.request_n(msg, 40)
+    }
+
+    /// [`request`](Self::request) with a caller-chosen attempt budget.
+    /// For callers that hold a fallback peer (e.g. another ModelPool
+    /// replica): failing over beats riding the full ~9s backoff ladder
+    /// against a dead endpoint.
+    pub fn request_n(&self, msg: &Msg, attempts: u32) -> Result<Msg> {
         let payload = msg.to_bytes();
+        let tag = payload.first().copied().unwrap_or(0);
         let mut guard = self.inner.lock().unwrap();
         let mut last_err = None;
-        for attempt in 0..40 {
+        let mut failures = 0u32;
+        for attempt in 0..attempts {
             if guard.stream.is_none() {
                 match TcpStream::connect(&self.addr) {
                     Ok(s) => {
@@ -196,6 +208,7 @@ impl ReqClient {
                     }
                     Err(e) => {
                         last_err = Some(e.into());
+                        failures += 1;
                         drop(guard);
                         std::thread::sleep(Duration::from_millis(
                             25 * (attempt + 1).min(10),
@@ -203,6 +216,32 @@ impl ReqClient {
                         guard = self.inner.lock().unwrap();
                         continue;
                     }
+                }
+            }
+            match fault::check(fault::SITE_REQ, &self.addr, tag) {
+                fault::Verdict::Pass => {}
+                fault::Verdict::Delay(d) => std::thread::sleep(d),
+                fault::Verdict::Drop | fault::Verdict::Reject => {
+                    guard.stream = None;
+                    last_err =
+                        Some(anyhow::anyhow!("fault: injected connection drop"));
+                    failures += 1;
+                    continue;
+                }
+                fault::Verdict::Truncate => {
+                    // write a short frame, then kill the connection —
+                    // the server sees a mid-frame close
+                    if let Some(s) = guard.stream.as_mut() {
+                        let _ = s.write_all(
+                            &(payload.len() as u32).to_le_bytes(),
+                        );
+                        let _ = s.write_all(&payload[..payload.len() / 2]);
+                    }
+                    guard.stream = None;
+                    last_err =
+                        Some(anyhow::anyhow!("fault: injected truncated frame"));
+                    failures += 1;
+                    continue;
                 }
             }
             let ReqInner { stream, buf } = &mut *guard;
@@ -214,6 +253,11 @@ impl ReqClient {
             })();
             match ok {
                 Ok(reply) => {
+                    if failures > 0 {
+                        // exchange completed after at least one failed
+                        // attempt: that is a healed fault
+                        fault::on_recovery();
+                    }
                     self.bytes_out.add(payload.len() as u64 + 4);
                     self.bytes_in.add(guard.buf.len() as u64 + 4);
                     return Ok(reply);
@@ -221,6 +265,7 @@ impl ReqClient {
                 Err(e) => {
                     guard.stream = None; // force reconnect
                     last_err = Some(e);
+                    failures += 1;
                 }
             }
         }
@@ -269,12 +314,21 @@ impl RepServer {
         let bytes_in = Arc::new(Meter::new());
         let bytes_out = Arc::new(Meter::new());
         let (bin, bout) = (bytes_in.clone(), bytes_out.clone());
+        let local2 = local.clone();
         let handle = std::thread::Builder::new()
             .name(format!("rep@{local}"))
             .spawn(move || {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            match fault::check(fault::SITE_ACCEPT, &local2, 0) {
+                                fault::Verdict::Pass => {}
+                                fault::Verdict::Delay(d) => {
+                                    std::thread::sleep(d)
+                                }
+                                // reject/drop at accept: close right away
+                                _ => continue,
+                            }
                             let h = handler.clone();
                             let stop3 = stop2.clone();
                             let (bin, bout) = (bin.clone(), bout.clone());
@@ -303,6 +357,10 @@ impl RepServer {
         stream
             .set_read_timeout(Some(Duration::from_millis(200)))
             .ok();
+        let laddr = stream
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_default();
         let mut buf = Vec::new();
         // reply staging buffer, reused across requests: [len;4][payload]
         let mut reply_buf: Vec<u8> = Vec::new();
@@ -327,6 +385,19 @@ impl RepServer {
                 }
             }
             bytes_in.add(buf.len() as u64 + 4);
+            let tag = buf.first().copied().unwrap_or(0);
+            match fault::check(fault::SITE_REP, &laddr, tag) {
+                fault::Verdict::Pass => {}
+                fault::Verdict::Delay(d) => std::thread::sleep(d),
+                fault::Verdict::Drop | fault::Verdict::Reject => return,
+                fault::Verdict::Truncate => {
+                    // claim a longer reply than we send, then die — the
+                    // client sees a mid-frame close and retries
+                    let _ = stream.write_all(&64u32.to_le_bytes());
+                    let _ = stream.write_all(&[0u8; 8]);
+                    return;
+                }
+            }
             let reply = match Msg::from_bytes(&buf) {
                 Ok(msg) => handler(msg),
                 Err(e) => Reply::Msg(Msg::Err(format!("decode: {e}"))),
@@ -385,35 +456,83 @@ impl PushClient {
         }
     }
 
+    /// One connect + one write; on failure the connection is dropped
+    /// and the error returned (no retries — `push`/`try_push` decide
+    /// the retry policy).
+    fn push_once(
+        conn: &mut Option<TcpStream>,
+        addr: &str,
+        payload: &[u8],
+        tag: u8,
+    ) -> Result<()> {
+        if conn.is_none() {
+            let s = TcpStream::connect(addr)
+                .with_context(|| format!("connect {addr}"))?;
+            s.set_nodelay(true).ok();
+            *conn = Some(s);
+        }
+        match fault::check(fault::SITE_PUSH, addr, tag) {
+            fault::Verdict::Pass => {}
+            fault::Verdict::Delay(d) => std::thread::sleep(d),
+            fault::Verdict::Drop | fault::Verdict::Reject => {
+                *conn = None;
+                bail!("fault: injected connection drop");
+            }
+            fault::Verdict::Truncate => {
+                if let Some(s) = conn.as_mut() {
+                    let _ = s.write_all(&(payload.len() as u32).to_le_bytes());
+                    let _ = s.write_all(&payload[..payload.len() / 2]);
+                }
+                *conn = None;
+                bail!("fault: injected truncated frame");
+            }
+        }
+        if let Err(e) = write_frame(conn.as_mut().unwrap(), payload) {
+            *conn = None;
+            return Err(e);
+        }
+        Ok(())
+    }
+
     pub fn push(&self, msg: &Msg) -> Result<()> {
         let payload = msg.to_bytes();
+        let tag = payload.first().copied().unwrap_or(0);
         let mut guard = self.stream.lock().unwrap();
+        let mut failures = 0u32;
         for attempt in 0..40 {
-            if guard.is_none() {
-                match TcpStream::connect(&self.addr) {
-                    Ok(s) => {
-                        s.set_nodelay(true).ok();
-                        *guard = Some(s);
-                    }
-                    Err(_) => {
-                        drop(guard);
-                        std::thread::sleep(Duration::from_millis(
-                            25 * (attempt + 1).min(10),
-                        ));
-                        guard = self.stream.lock().unwrap();
-                        continue;
-                    }
-                }
-            }
-            match write_frame(guard.as_mut().unwrap(), &payload) {
+            match Self::push_once(&mut guard, &self.addr, &payload, tag) {
                 Ok(()) => {
+                    if failures > 0 {
+                        fault::on_recovery();
+                    }
                     self.bytes_out.add(payload.len() as u64 + 4);
                     return Ok(());
                 }
-                Err(_) => *guard = None,
+                Err(_) => {
+                    failures += 1;
+                    drop(guard);
+                    std::thread::sleep(Duration::from_millis(
+                        25 * (attempt + 1).min(10),
+                    ));
+                    guard = self.stream.lock().unwrap();
+                }
             }
         }
         bail!("push to {} failed", self.addr)
+    }
+
+    /// Single-attempt push for callers that keep their own bounded
+    /// retry queue (the Actor's segment buffer): one connect + one
+    /// write, error back immediately — never sleeps through the ~10s
+    /// backoff ladder `push` uses, so a dead learner cannot stall the
+    /// rollout tick.
+    pub fn try_push(&self, msg: &Msg) -> Result<()> {
+        let payload = msg.to_bytes();
+        let tag = payload.first().copied().unwrap_or(0);
+        let mut guard = self.stream.lock().unwrap();
+        Self::push_once(&mut guard, &self.addr, &payload, tag)?;
+        self.bytes_out.add(payload.len() as u64 + 4);
+        Ok(())
     }
 }
 
@@ -489,6 +608,10 @@ impl PullServer {
         stream
             .set_read_timeout(Some(Duration::from_millis(200)))
             .ok();
+        let laddr = stream
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_default();
         let mut buf = Vec::new();
         let mut err_logged = false;
         loop {
@@ -498,6 +621,17 @@ impl PullServer {
             match read_frame(&mut stream, &mut buf) {
                 Ok(()) => {
                     bytes_in.add(buf.len() as u64 + 4);
+                    match fault::check(
+                        fault::SITE_PULL,
+                        &laddr,
+                        buf.first().copied().unwrap_or(0),
+                    ) {
+                        fault::Verdict::Pass => {}
+                        fault::Verdict::Delay(d) => std::thread::sleep(d),
+                        // swallow just this frame
+                        fault::Verdict::Truncate => continue,
+                        fault::Verdict::Drop | fault::Verdict::Reject => return,
+                    }
                     match Msg::from_bytes(&buf) {
                         Ok(msg) => {
                             // blocking send = backpressure to the TCP
@@ -797,5 +931,83 @@ mod tests {
         // restart on the same port
         let _server2 = RepServer::serve(&addr, |_| Msg::Pong).unwrap();
         assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+    }
+
+    /// Injected request-path drops are retried through and healed: every
+    /// exchange still completes, and the fault/recovery meters move.
+    #[test]
+    fn req_client_heals_injected_drops() {
+        let _g = fault::TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let server = RepServer::serve("127.0.0.1:0", |_| Msg::Pong).unwrap();
+        let client = ReqClient::connect(&server.addr);
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        fault::set_role("req-heal-test");
+        // target THIS server's (unique ephemeral) address so concurrent
+        // tests in the binary never match the plan
+        fault::install(
+            7,
+            fault::parse_spec(&format!("drop:{}@0.5", server.addr)).unwrap(),
+        );
+        let injected0 = fault::injected_meter().count();
+        let recovered0 = fault::recovered_meter().count();
+        for _ in 0..20 {
+            assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        }
+        fault::clear();
+        assert!(
+            fault::injected_meter().count() > injected0,
+            "p=0.5 over 20+ draws must inject at least once"
+        );
+        assert!(
+            fault::recovered_meter().count() > recovered0,
+            "a retried-through drop must count as a recovery"
+        );
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+    }
+
+    /// Truncate faults kill the connection mid-frame without desyncing
+    /// the length-prefix protocol: the client reconnects and completes.
+    #[test]
+    fn truncate_fault_breaks_conn_not_protocol() {
+        let _g = fault::TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let server = RepServer::serve("127.0.0.1:0", |_| Msg::Pong).unwrap();
+        let client = ReqClient::connect(&server.addr);
+        fault::set_role("truncate-test");
+        fault::install(
+            11,
+            fault::parse_spec(&format!("truncate:{}@0.3", server.addr))
+                .unwrap(),
+        );
+        for _ in 0..20 {
+            assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        }
+        fault::clear();
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+    }
+
+    /// `try_push` is single-attempt: under a full partition it errors
+    /// immediately instead of sleeping through the backoff ladder, and
+    /// works again the moment the partition lifts.
+    #[test]
+    fn try_push_fails_fast_under_partition() {
+        let _g = fault::TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let pull = PullServer::bind("127.0.0.1:0", 64).unwrap();
+        let push = PushClient::connect(&pull.addr);
+        push.try_push(&Msg::Ping).unwrap();
+        assert_eq!(pull.recv_timeout(Duration::from_secs(5)), Some(Msg::Ping));
+        fault::set_role("push-test");
+        fault::install(
+            7,
+            fault::parse_spec(&format!("partition:{}@1", pull.addr)).unwrap(),
+        );
+        let t0 = Instant::now();
+        assert!(push.try_push(&Msg::Ping).is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "try_push must not sleep through a retry ladder"
+        );
+        fault::clear();
+        push.try_push(&Msg::Ping).unwrap();
+        assert_eq!(pull.recv_timeout(Duration::from_secs(5)), Some(Msg::Ping));
     }
 }

@@ -79,6 +79,33 @@ subcommands:
                              microseconds (default 2000)
     --infer-refresh-ms M     InfServer in-training param cache TTL in
                              milliseconds (default 50)
+   fault-injection / chaos knobs:
+    --faults <spec>          deterministic fault plan injected inside the
+                             transport, comma-separated rules of the form
+                             kind:target@prob[+delay_ms] where kind is
+                             drop|delay|truncate|reject|partition and
+                             target matches role/site/addr ('*' = any),
+                             e.g. 'drop:learner@0.1,delay:*@0.05+3'.
+                             Injections count in the faults_injected
+                             meter; successful retries after injected
+                             failures count in recoveries.  Off by
+                             default: the hot-path check is one relaxed
+                             atomic load
+    --fault-seed N           seed of the fault plan (default 0): every
+                             process derives the same per-site streams,
+                             so a drill replays exactly
+    --chaos <schedule>       procs-mode kill schedule, comma-separated
+                             kill:<role>@<ms> with role one of
+                             learner|actor|inf-server|pool|controller,
+                             e.g. 'kill:inf-server@500,kill:pool@900'.
+                             Workers are SIGKILLed and respawned (slots
+                             reassigned); kill:pool downs an in-process
+                             replica (clients fail over; needs
+                             --model-pools >= 2 in the spec);
+                             kill:controller snapshots, crashes and
+                             restarts the control plane (needs
+                             --checkpoint-dir and a fixed
+                             --controller-bind port)
   controller   league control plane for a hand-launched multi-process
                deployment: owns LeagueMgr/ModelPool/CheckpointMgr,
                registers workers, reassigns slots on heartbeat loss

@@ -1,0 +1,224 @@
+//! Chaos drills: deterministic fault injection + scheduled kills over a
+//! real multi-process league, asserting the run completes with no lost
+//! league counters and no hung thread.
+//!
+//! Needs `make artifacts` (workers run PJRT); the tests skip otherwise.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tleague::config::RunConfig;
+use tleague::orchestrator::controller::Controller;
+use tleague::runtime::Engine;
+
+const BIN: &str = env!("CARGO_BIN_EXE_tleague");
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(dir)
+}
+
+fn spawn_worker(role: &str, ctrl_addr: &str, artifacts: &Path) -> Child {
+    Command::new(BIN)
+        .args(["worker", "--role", role, "--controller", ctrl_addr])
+        .args(["--artifacts", artifacts.to_str().unwrap()])
+        .spawn()
+        .expect("spawn worker")
+}
+
+/// Kills any still-running children on drop so a failing assert never
+/// leaks orphan processes into the test host.
+struct Reap(Vec<Child>);
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            c.kill().ok();
+            c.wait().ok();
+        }
+    }
+}
+
+impl Reap {
+    fn expect_clean_exit(&mut self, timeout: Duration) {
+        let deadline = Instant::now() + timeout;
+        for (i, c) in self.0.iter_mut().enumerate() {
+            loop {
+                match c.try_wait().expect("try_wait") {
+                    Some(status) => {
+                        assert!(status.success(), "worker {i} exited {status}");
+                        break;
+                    }
+                    None if Instant::now() > deadline => {
+                        panic!("worker {i} did not exit after stop")
+                    }
+                    None => std::thread::sleep(Duration::from_millis(50)),
+                }
+            }
+        }
+        self.0.clear();
+    }
+}
+
+/// A scratch dir that cleans up after itself even on panic.
+struct TmpDir(PathBuf);
+
+impl TmpDir {
+    fn new(tag: &str) -> TmpDir {
+        let p = std::env::temp_dir()
+            .join(format!("tleague-chaos-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        TmpDir(p)
+    }
+}
+
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+/// The full chaos drill through the CLI: a procs-mode league with two
+/// pool replicas and an inf-server, a low-grade deterministic fault
+/// plan on every transport site, and a kill schedule that takes down
+/// the inf-server, one pool replica, and the learner mid-run.  The run
+/// must still complete (slots reassigned, clients failed over) and say
+/// so on stdout.
+#[test]
+fn chaos_schedule_kills_workers_and_run_completes() {
+    let Some(dir) = artifacts() else { return };
+    let tmp = TmpDir::new("cli");
+    let spec = tmp.0.join("spec.json");
+    std::fs::write(
+        &spec,
+        r#"{
+        "env": "rps", "mode": "procs", "seed": 7,
+        "total_steps": 12, "period_steps": 2,
+        "actors_per_learner": 1, "model_pools": 2, "inf_servers": 1,
+        "heartbeat_ms": 100, "heartbeat_timeout_ms": 1000,
+        "stats_every_secs": 1
+    }"#,
+    )
+    .unwrap();
+    let mut child = Command::new(BIN)
+        .args(["run", "--config", spec.to_str().unwrap()])
+        .args(["--chaos", "kill:inf-server@300,kill:pool@600,kill:learner@900"])
+        .args(["--faults", "delay:*@0.02+2"])
+        .args(["--fault-seed", "7"])
+        .args(["--artifacts", dir.to_str().unwrap()])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("run --mode procs --chaos");
+    // poll with a deadline so a hung drill fails the suite instead of
+    // wedging it (output() would block forever)
+    let deadline = Instant::now() + Duration::from_secs(300);
+    let status = loop {
+        if let Some(s) = child.try_wait().expect("try_wait") {
+            break s;
+        }
+        if Instant::now() > deadline {
+            child.kill().ok();
+            child.wait().ok();
+            panic!("chaos run timed out (hung thread?)");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    let mut stdout = String::new();
+    child.stdout.take().unwrap().read_to_string(&mut stdout).unwrap();
+    assert!(status.success(), "exit {status}\nstdout:\n{stdout}");
+    assert!(stdout.contains("done:"), "no completion line:\n{stdout}");
+    // the schedule actually fired (worker spawn alone outlasts 300ms)
+    assert!(stdout.contains("chaos["), "schedule never fired:\n{stdout}");
+}
+
+/// Kill-the-controller drill: snapshot, SIGKILL-equivalent crash of the
+/// whole control plane (league + pools + controller service, no clean
+/// final save), restart resumed on the SAME port.  The live worker
+/// processes — never touched — must re-register against the successor,
+/// the run must complete, and the resumed league counters must carry
+/// the pre-crash totals forward.
+#[test]
+fn controller_crash_recovers_workers_and_league_totals() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let tmp = TmpDir::new("ckpt");
+    // a fixed port the successor can rebind (probe-and-release)
+    let port = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let mut cfg = RunConfig::default();
+    cfg.env = "rps".into();
+    cfg.mode = "procs".into();
+    cfg.seed = 7;
+    cfg.total_steps = 12;
+    cfg.period_steps = 2;
+    cfg.actors_per_learner = 1;
+    cfg.heartbeat_ms = 100;
+    cfg.heartbeat_timeout_ms = 1_000;
+    cfg.controller_bind = format!("127.0.0.1:{port}");
+    cfg.checkpoint_dir = Some(tmp.0.to_str().unwrap().to_string());
+    let restart_cfg = cfg.clone();
+    let start = |cfg: RunConfig| -> Controller {
+        Controller::start(
+            cfg,
+            engine.manifest.hp_layout.clone(),
+            engine.manifest.default_hp(),
+        )
+        .unwrap()
+    };
+    let mut ctrl = start(cfg);
+    let mut kids = Reap(vec![
+        spawn_worker("learner", &ctrl.addr, &dir),
+        spawn_worker("actor", &ctrl.addr, &dir),
+    ]);
+
+    // let the league make real progress first
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while ctrl.deploy_stats().learner_steps < 2 {
+        assert!(Instant::now() < deadline, "league never started");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let pre = ctrl.league_stats();
+
+    // crash-consistent restart: pin the recovery point, then die hard
+    ctrl.snapshot_now().unwrap();
+    ctrl.crash();
+    let mut cfg2 = restart_cfg;
+    cfg2.resume = cfg2.checkpoint_dir.clone();
+    ctrl = start(cfg2);
+
+    // the surviving workers notice (failed heartbeat / unknown-worker)
+    // and re-register against the successor
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while ctrl.deploy_stats().workers < 2 {
+        assert!(Instant::now() < deadline, "workers never re-registered");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    assert!(ctrl.wait(Duration::from_secs(180)), "run did not recover");
+    assert_eq!(ctrl.deploy_stats().learner_steps, 12);
+    // no lost counters: the resumed league can only have grown
+    let post = ctrl.league_stats();
+    assert!(
+        post.episodes >= pre.episodes,
+        "episodes lost across crash: {} -> {}",
+        pre.episodes,
+        post.episodes
+    );
+    assert!(
+        post.pool_size >= pre.pool_size,
+        "pool shrank across crash: {} -> {}",
+        pre.pool_size,
+        post.pool_size
+    );
+    ctrl.shutdown();
+    kids.expect_clean_exit(Duration::from_secs(30));
+}
