@@ -55,6 +55,18 @@ cargo bench --bench bench_main -- trace --json BENCH_pr6.json
 echo "== bench smoke: cargo bench --bench bench_main -- faults"
 cargo bench --bench bench_main -- faults --json BENCH_pr7.json
 
+# Transport-scale bench: fan-in heartbeat/echo at 64/512/4096 conns on
+# one event-loop pool (the 4096 row self-skips when ulimit -n is too
+# low), plus the multi-row infer request over loopback TCP vs a
+# shared-memory lane (see BENCH_pr8.json).
+echo "== bench smoke: cargo bench --bench bench_main -- transport_scale"
+cargo bench --bench bench_main -- transport_scale --json BENCH_pr8.json
+
+# Lane/TCP equivalence: same seeded request sequence over both paths
+# must be bit-identical (also inside `cargo test` above, rerun by name).
+echo "== lane equivalence: cargo test --test transport_lanes"
+cargo test -q --test transport_lanes
+
 # Chaos drills: deterministic fault plans + scheduled kills (inf-server,
 # pool replica, learner, and the controller itself) over real worker
 # subprocesses; asserts completed runs, reassigned slots, and surviving

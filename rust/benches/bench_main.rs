@@ -23,6 +23,9 @@
 //!   faults      — fault-injection guard: disabled hot-path check cost,
 //!                 enabled check against a non-matching plan, actor row
 //!                 path with injection off vs armed (off must be free)
+//!   transport_scale — fan-in echo/heartbeat at 64/512/4096 conns on one
+//!                 event-loop pool (fd-limit aware), multi-row infer
+//!                 request over loopback TCP vs a shared-memory lane
 //!
 //! Filter with `cargo bench -- <substring> [<substring> ...]` (a bench
 //! runs if it matches ANY given substring); add `--json <path>` to also
@@ -291,6 +294,7 @@ fn main() {
                     batch: 1,
                     max_wait: Duration::from_millis(2),
                     refresh: Duration::from_millis(50),
+                    net_threads: 0,
                 },
                 engine.clone(),
                 &[bpool.addr.clone()],
@@ -315,6 +319,7 @@ fn main() {
                     batch: m.infer_b,
                     max_wait: Duration::from_millis(2),
                     refresh: Duration::from_millis(50),
+                    net_threads: 0,
                 },
                 engine.clone(),
                 &[bpool.addr.clone()],
@@ -1128,6 +1133,124 @@ fn main() {
         fault::clear();
         drain_stop.store(true, Ordering::Relaxed);
         drainer.join().ok();
+    }
+
+    // ---- transport scale ---------------------------------------------------
+    // Fan-in onto ONE RepServer event-loop pool: N persistent client
+    // connections, one iter = every conn sends a request then reads its
+    // reply.  Per-conn server state is O(buffers) — the old
+    // thread-per-connection design would have needed N 8 MB stacks.
+    // The lane rows put the same multi-row InferReq bytes over loopback
+    // TCP and over a shared-memory ring.
+    println!("\n# transport scale (fan-in on one event-loop pool; TCP vs shm lane)");
+    {
+        use std::net::TcpStream;
+        use tleague::transport::{
+            poll, read_frame, write_frame, LaneMode, LaneOpts, RepServer,
+            ReqClient,
+        };
+
+        let server = RepServer::serve("127.0.0.1:0", |msg| match msg {
+            Msg::Ping => Msg::Pong,
+            Msg::Model(b) => Msg::Model(b), // small-payload echo
+            Msg::InferReq { rows, .. } => Msg::InferResp {
+                logits: vec![0.0; rows as usize * 3],
+                value: vec![0.0; rows as usize],
+            },
+            other => Msg::Err(format!("stub: {other:?}")),
+        })
+        .unwrap();
+
+        let ping = Msg::Ping.to_bytes();
+        let echo = Msg::Model(ModelBlob {
+            key: ModelKey::new(0, 1),
+            params: vec![0.5; 64], // 256 B payload
+            hp: vec![],
+            frozen: true,
+        })
+        .to_bytes();
+        for &conns in &[64usize, 512, 4096] {
+            // both socket ends live in this process: 2 fds per conn,
+            // plus slack for everything else the bench keeps open
+            let need = conns as u64 * 2 + 512;
+            let limit = poll::nofile_limit();
+            if limit < need {
+                println!(
+                    "transport_scale/*_c{conns}: SKIPPED \
+                     (ulimit -n {limit} < {need})"
+                );
+                continue;
+            }
+            let connect_all = || -> Vec<TcpStream> {
+                (0..conns)
+                    .map(|_| {
+                        let s = TcpStream::connect(&server.addr).unwrap();
+                        s.set_nodelay(true).unwrap();
+                        s
+                    })
+                    .collect()
+            };
+            for (row, frame) in [("heartbeat", &ping), ("echo256", &echo)] {
+                let mut socks = connect_all();
+                let frame = frame.clone();
+                let mut buf = Vec::new();
+                b.bench(
+                    &format!("transport_scale/{row}_c{conns}"),
+                    "req",
+                    move || {
+                        for s in socks.iter_mut() {
+                            write_frame(s, &frame).unwrap();
+                        }
+                        for s in socks.iter_mut() {
+                            read_frame(s, &mut buf).unwrap();
+                        }
+                        socks.len() as u64
+                    },
+                );
+            }
+        }
+
+        // multi-row inference payload (64 rows x 32 dims — a vectorized
+        // actor's request shape): identical bytes over both paths
+        let key = ModelKey::new(0, 1);
+        let obs = vec![0.25f32; 64 * 32];
+        let tcp = ReqClient::connect(&server.addr);
+        let o2 = obs.clone();
+        b.bench("transport_scale/infer_multirow_tcp", "req", move || {
+            let mut n = 0;
+            for _ in 0..50 {
+                let req =
+                    Msg::InferReq { key, obs: o2.clone(), rows: 64, trace: None };
+                match tcp.request(&req).unwrap() {
+                    Msg::InferResp { .. } => n += 1,
+                    other => panic!("stub inf: {other:?}"),
+                }
+            }
+            n
+        });
+        let lane = Arc::new(ReqClient::connect_opts(
+            &server.addr,
+            LaneOpts { mode: LaneMode::On, dir: None, capacity: 0 },
+        ));
+        let lc = lane.clone();
+        b.bench("transport_scale/infer_multirow_shm", "req", move || {
+            let mut n = 0;
+            for _ in 0..50 {
+                let req =
+                    Msg::InferReq { key, obs: obs.clone(), rows: 64, trace: None };
+                match lc.request(&req).unwrap() {
+                    Msg::InferResp { .. } => n += 1,
+                    other => panic!("stub inf: {other:?}"),
+                }
+            }
+            n
+        });
+        // 0 here means the ring was unavailable and the row fell back
+        // to TCP — the latency comparison is void in that case
+        println!(
+            "  (shm row rode the lane for {} requests)",
+            lane.lane_requests.count()
+        );
     }
 
     println!("\n{} benches run", b.rows.len());

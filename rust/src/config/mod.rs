@@ -92,6 +92,14 @@ pub struct RunConfig {
     /// chaos kill schedule for procs mode (`kill:<role>@<ms>`, comma
     /// separated — see `orchestrator::chaos`); None = no chaos
     pub chaos: Option<String>,
+    /// shared-memory lane policy for colocated actor↔inf-server pairs:
+    /// "auto" (lanes when the endpoint is loopback), "on", or "off"
+    pub local_lanes: String,
+    /// directory for lane ring files (None = /dev/shm, falling back to
+    /// the system temp dir)
+    pub shm_dir: Option<String>,
+    /// event-loop threads per transport server (0 = auto: min(2, cores))
+    pub net_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -134,6 +142,9 @@ impl Default for RunConfig {
             fault_seed: 0,
             faults: None,
             chaos: None,
+            local_lanes: "auto".into(),
+            shm_dir: None,
+            net_threads: 0,
         }
     }
 }
@@ -229,6 +240,13 @@ impl RunConfig {
         if let Some(s) = j.get("chaos").and_then(|v| v.as_str()) {
             cfg.chaos = Some(s.to_string());
         }
+        if let Some(s) = j.get("local_lanes").and_then(|v| v.as_str()) {
+            cfg.local_lanes = s.to_string();
+        }
+        if let Some(s) = j.get("shm_dir").and_then(|v| v.as_str()) {
+            cfg.shm_dir = Some(s.to_string());
+        }
+        cfg.net_threads = get_num(&j, "net_threads", cfg.net_threads as f64) as usize;
         if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
             for (k, v) in obj {
                 cfg.hp_overrides
@@ -289,6 +307,12 @@ impl RunConfig {
                 || self.checkpoint_dir.is_some()
                 || self.resume.is_some(),
             "pool_mem_budget_mb requires checkpoint_dir or resume (spill directory)"
+        );
+        // lane policy is a closed enum — a typo must not silently mean
+        // "no lanes" (same bug class as the replay_mode prefix check)
+        anyhow::ensure!(
+            matches!(self.local_lanes.as_str(), "auto" | "on" | "off"),
+            "local_lanes must be auto|on|off"
         );
         // a misspelled fault spec must fail the launch, not silently
         // run the drill with zero injection
@@ -353,6 +377,9 @@ impl RunConfig {
             trace_slow_ms: self.trace_slow_ms,
             fault_seed: self.fault_seed,
             fault_spec: self.faults.clone().unwrap_or_default(),
+            local_lanes: self.local_lanes.clone(),
+            shm_dir: self.shm_dir.clone().unwrap_or_default(),
+            net_threads: self.net_threads as u32,
         }
     }
 
@@ -594,6 +621,31 @@ mod tests {
             RunConfig::from_json(r#"{"mode": "procs", "chaos": "kill:pool@100"}"#)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn transport_knobs_parse_and_ride_the_slice() {
+        let cfg = RunConfig::from_json(
+            r#"{
+            "env": "rps", "local_lanes": "on",
+            "shm_dir": "/tmp/lanes", "net_threads": 3
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.local_lanes, "on");
+        assert_eq!(cfg.shm_dir.as_deref(), Some("/tmp/lanes"));
+        assert_eq!(cfg.net_threads, 3);
+        let s = cfg.slice();
+        assert_eq!(s.local_lanes, "on");
+        assert_eq!(s.shm_dir, "/tmp/lanes");
+        assert_eq!(s.net_threads, 3);
+        let d = RunConfig::default();
+        assert_eq!(d.local_lanes, "auto");
+        assert!(d.shm_dir.is_none());
+        assert_eq!(d.net_threads, 0);
+        assert!(d.slice().shm_dir.is_empty());
+        // a lane-policy typo must fail the launch, not silently mean off
+        assert!(RunConfig::from_json(r#"{"local_lanes": "yes"}"#).is_err());
     }
 
     #[test]

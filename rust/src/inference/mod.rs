@@ -20,7 +20,7 @@ use crate::model_pool::{LatestFetch, ModelPoolClient};
 use crate::proto::{ModelBlob, ModelKey, Msg, TraceCtx};
 use crate::runtime::{Engine, Tensor};
 use crate::telemetry::trace;
-use crate::transport::{RepServer, Reply};
+use crate::transport::{RepServer, Reply, Responder, ServerOpts};
 use crate::util::metrics::{Meter, MetricsHub};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -33,68 +33,12 @@ struct Pending {
     /// forward-pass rows this request occupies (wire rows / manifest
     /// agents-per-pass; a team meta-agent row counts once)
     rows: usize,
-    reply: Arc<ReplySlot>,
-    seq: u64,
+    /// out-of-band reply handle into the transport event loop; the
+    /// connection stays parked (no further reads) until this fires
+    responder: Responder,
     enqueued: Instant,
     /// propagated trace context of a sampled request (None = untraced)
     trace: Option<TraceCtx>,
-}
-
-/// Per-connection reply rendezvous, reused across requests.  REQ/REP
-/// serves one request at a time per connection (and `RepServer` runs a
-/// thread per connection), so a thread-local slot replaces the old
-/// per-request channel allocation on the reply path.  `seq` guards
-/// against a late batcher write landing in the NEXT request after a
-/// timeout.
-struct ReplySlot {
-    state: Mutex<(u64, Option<Msg>)>,
-    cv: Condvar,
-}
-
-impl ReplySlot {
-    fn new() -> ReplySlot {
-        ReplySlot { state: Mutex::new((0, None)), cv: Condvar::new() }
-    }
-
-    /// Claim the slot for a new request; returns the sequence number the
-    /// batcher must present to deliver into it.
-    fn begin(&self) -> u64 {
-        let mut g = self.state.lock().unwrap();
-        g.0 += 1;
-        g.1 = None; // drop any late reply to a timed-out predecessor
-        g.0
-    }
-
-    fn deliver(&self, seq: u64, msg: Msg) {
-        let mut g = self.state.lock().unwrap();
-        if g.0 == seq {
-            g.1 = Some(msg);
-            self.cv.notify_all();
-        }
-    }
-
-    fn wait(&self, seq: u64, timeout: Duration) -> Option<Msg> {
-        let deadline = Instant::now() + timeout;
-        let mut g = self.state.lock().unwrap();
-        loop {
-            if g.0 != seq {
-                return None; // superseded
-            }
-            if let Some(msg) = g.1.take() {
-                return Some(msg);
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
-            g = g2;
-        }
-    }
-}
-
-thread_local! {
-    static REPLY_SLOT: Arc<ReplySlot> = Arc::new(ReplySlot::new());
 }
 
 /// Requests bucketed per model: the learning model and frozen opponents
@@ -128,9 +72,9 @@ fn queued_rows(v: &[Pending]) -> usize {
 }
 
 /// Slice `lrow`/`vrow`-wide output rows back to their pending requests
-/// in queue order.
+/// in queue order, consuming each request's responder.
 fn deliver_rows(
-    batch: &[Pending],
+    batch: Vec<Pending>,
     logits: &[f32],
     value: &[f32],
     lrow: usize,
@@ -140,13 +84,10 @@ fn deliver_rows(
     for p in batch {
         let (ln, vn) = (p.rows * lrow, p.rows * vrow);
         let t0 = Instant::now();
-        p.reply.deliver(
-            p.seq,
-            Msg::InferResp {
-                logits: logits[lo..lo + ln].to_vec(),
-                value: value[vo..vo + vn].to_vec(),
-            },
-        );
+        p.responder.send(Reply::Msg(Msg::InferResp {
+            logits: logits[lo..lo + ln].to_vec(),
+            value: value[vo..vo + vn].to_vec(),
+        }));
         // reply-scatter span closes the server side of a traced chain
         if let Some(ctx) = p.trace {
             trace::finish_span(
@@ -171,6 +112,8 @@ pub struct InfServerConfig {
     pub max_wait: Duration,
     /// TTL for the non-frozen (learning) model's cached params
     pub refresh: Duration,
+    /// transport event-loop threads for the REQ/REP front (0 = auto)
+    pub net_threads: usize,
 }
 
 pub struct InfServer {
@@ -230,23 +173,28 @@ impl InfServer {
         let row_width = rows_per_pass * obs_dim;
         let queue = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
         let q2 = queue.clone();
-        let server = RepServer::serve_frames(bind, move |msg| match msg {
-            Msg::InferReq { key, obs, rows, trace } => {
-                // validate against the manifest BEFORE queueing: a
-                // mis-sized request would mis-slice the whole batch
-                if rows == 0
-                    || obs.len() != rows as usize * obs_dim
-                    || rows as usize % rows_per_pass != 0
-                {
-                    return Reply::Msg(Msg::Err(format!(
-                        "infserver: obs len {} / rows {rows} mismatch \
-                         (obs_dim {obs_dim}, {rows_per_pass} rows per pass)",
-                        obs.len()
-                    )));
-                }
-                let pass_rows = rows as usize / rows_per_pass;
-                let (slot, seq) = REPLY_SLOT.with(|s| (s.clone(), s.begin()));
-                {
+        // async service: the handler only queues the request — the reply
+        // is injected back into the event loop by the batcher thread via
+        // the Responder, so no server thread blocks per in-flight request
+        let server = RepServer::serve_async(
+            bind,
+            ServerOpts { net_threads: cfg.net_threads, ..ServerOpts::default() },
+            move |msg, responder| match msg {
+                Msg::InferReq { key, obs, rows, trace } => {
+                    // validate against the manifest BEFORE queueing: a
+                    // mis-sized request would mis-slice the whole batch
+                    if rows == 0
+                        || obs.len() != rows as usize * obs_dim
+                        || rows as usize % rows_per_pass != 0
+                    {
+                        responder.send(Reply::Msg(Msg::Err(format!(
+                            "infserver: obs len {} / rows {rows} mismatch \
+                             (obs_dim {obs_dim}, {rows_per_pass} rows per pass)",
+                            obs.len()
+                        ))));
+                        return;
+                    }
+                    let pass_rows = rows as usize / rows_per_pass;
                     let (lock, cv) = &*q2;
                     lock.lock()
                         .unwrap()
@@ -256,21 +204,18 @@ impl InfServer {
                         .push(Pending {
                             obs,
                             rows: pass_rows,
-                            reply: slot.clone(),
-                            seq,
+                            responder,
                             enqueued: Instant::now(),
                             trace,
                         });
                     cv.notify_one();
                 }
-                Reply::Msg(
-                    slot.wait(seq, Duration::from_secs(30))
-                        .unwrap_or_else(|| Msg::Err("infserver timeout".into())),
-                )
-            }
-            Msg::Ping => Reply::Msg(Msg::Pong),
-            other => Reply::Msg(Msg::Err(format!("infserver: unexpected {other:?}"))),
-        })?;
+                Msg::Ping => responder.send(Reply::Msg(Msg::Pong)),
+                other => responder.send(Reply::Msg(Msg::Err(format!(
+                    "infserver: unexpected {other:?}"
+                )))),
+            },
+        )?;
 
         let stop = Arc::new(AtomicBool::new(false));
         let rows_meter = hub.meter("rows");
@@ -304,6 +249,15 @@ impl InfServer {
                         let mut q = lock.lock().unwrap();
                         loop {
                             if stop2.load(Ordering::Relaxed) {
+                                // fail queued requests instead of leaving
+                                // their connections parked
+                                for (_, v) in q.by_key.drain() {
+                                    for p in v {
+                                        p.responder.send(Reply::Msg(Msg::Err(
+                                            "infserver shutting down".into(),
+                                        )));
+                                    }
+                                }
                                 return;
                             }
                             if let Some(key) = q
@@ -368,20 +322,21 @@ impl InfServer {
                     let params = Self::params_for(
                         &mut cache, &pool, &engine, key, cfg.refresh,
                     );
-                    let reply_err = |items: &[Pending], e: &str| {
+                    let reply_err = |items: Vec<Pending>, e: &str| {
                         for it in items {
-                            it.reply.deliver(it.seq, Msg::Err(e.to_string()));
+                            it.responder
+                                .send(Reply::Msg(Msg::Err(e.to_string())));
                         }
                     };
                     let Some((params, buf_id)) = params else {
-                        reply_err(&batch, "model not found");
+                        reply_err(batch, "model not found");
                         continue;
                     };
                     match Self::run_batch(
                         &engine, &cfg, &params, buf_id, &batch, row_width,
                         &mut obs_buf,
                     ) {
-                        Ok(passes) => {
+                        Ok((logits, value, passes)) => {
                             let rows = queued_rows(&batch);
                             rm.add(rows as u64);
                             bm.add(passes);
@@ -407,8 +362,15 @@ impl InfServer {
                                     rows as u32,
                                 );
                             }
+                            deliver_rows(
+                                batch,
+                                &logits,
+                                &value,
+                                logits.len() / rows,
+                                value.len() / rows,
+                            );
                         }
-                        Err(e) => reply_err(&batch, &format!("{e}")),
+                        Err(e) => reply_err(batch, &format!("{e}")),
                     }
                 }
             })?;
@@ -485,12 +447,13 @@ impl InfServer {
     }
 
     /// Pack the batch's forward-pass rows into artifact-sized chunks
-    /// (zero-padding the tail), run each chunk, and demux the results
-    /// back to every pending request row-for-row.  Returns the number
-    /// of forward passes executed.  The common case — everything fits
-    /// one artifact batch, which `take_batch`'s row cap guarantees
-    /// unless a single oversized request arrived — runs one pass and
-    /// demuxes straight from the engine outputs, no intermediate copy.
+    /// (zero-padding the tail) and run each chunk.  Returns exactly
+    /// `total` output rows of logits/values plus the number of forward
+    /// passes executed; the caller demuxes them back to the pending
+    /// requests.  The common case — everything fits one artifact batch,
+    /// which `take_batch`'s row cap guarantees unless a single oversized
+    /// request arrived — runs one pass and just truncates the padded
+    /// tail off the engine outputs.
     fn run_batch(
         engine: &Engine,
         cfg: &InfServerConfig,
@@ -499,7 +462,7 @@ impl InfServer {
         batch: &[Pending],
         row_width: usize,
         obs_buf: &mut Vec<f32>,
-    ) -> Result<u64> {
+    ) -> Result<(Vec<f32>, Vec<f32>, u64)> {
         let b = cfg.batch;
         let total: usize = batch.iter().map(|p| p.rows).sum();
         anyhow::ensure!(total > 0, "empty batch");
@@ -511,10 +474,11 @@ impl InfServer {
                 obs_buf[off..off + p.obs.len()].copy_from_slice(&p.obs);
                 off += p.obs.len();
             }
-            let (logits, value) =
+            let (mut logits, mut value) =
                 engine.infer_cached(&cfg.env, b, buf_id, params, obs_buf)?;
-            deliver_rows(batch, &logits, &value, logits.len() / b, value.len() / b);
-            return Ok(1);
+            logits.truncate(total * (logits.len() / b));
+            value.truncate(total * (value.len() / b));
+            return Ok((logits, value, 1));
         }
         // oversized request(s): flatten the pass rows and chunk
         let rows: Vec<&[f32]> =
@@ -536,14 +500,7 @@ impl InfServer {
             value_all.extend_from_slice(&value[..chunk.len() * vrow]);
             passes += 1;
         }
-        deliver_rows(
-            batch,
-            &logits_all,
-            &value_all,
-            logits_all.len() / total,
-            value_all.len() / total,
-        );
-        Ok(passes)
+        Ok((logits_all, value_all, passes))
     }
 
     pub fn shutdown(&mut self) {
@@ -696,6 +653,7 @@ mod tests {
                 batch: m.infer_b,
                 max_wait: Duration::from_millis(2),
                 refresh: Duration::from_millis(50),
+                net_threads: 0,
             },
             engine.clone(),
             &[pool.addr.clone()],
@@ -729,6 +687,7 @@ mod tests {
                 batch: m.infer_b,
                 max_wait: Duration::from_millis(5),
                 refresh: Duration::from_millis(50),
+                net_threads: 0,
             },
             engine,
             &[pool.addr.clone()],
@@ -778,6 +737,7 @@ mod tests {
                 batch: m.infer_b,
                 max_wait: Duration::from_millis(1),
                 refresh: Duration::from_millis(50),
+                net_threads: 0,
             },
             engine,
             &[pool.addr.clone()],
@@ -824,6 +784,7 @@ mod tests {
                 batch: m.infer_b,
                 max_wait: Duration::from_millis(2),
                 refresh: Duration::from_millis(50),
+                net_threads: 0,
             },
             engine.clone(),
             &[pool.addr.clone()],
@@ -875,6 +836,7 @@ mod tests {
                 batch: 4,
                 max_wait: Duration::from_millis(1),
                 refresh: Duration::from_millis(50),
+                net_threads: 0,
             },
             engine,
             &[pool.addr.clone()],
@@ -912,6 +874,7 @@ mod tests {
                 batch: m.infer_b,
                 max_wait: Duration::from_millis(1),
                 refresh: Duration::from_millis(50),
+                net_threads: 0,
             },
             engine,
             &[pool.addr.clone()],

@@ -168,6 +168,12 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     cfg.infer_max_wait_us =
         args.u64_or("infer-max-wait-us", cfg.infer_max_wait_us)?;
     cfg.infer_refresh_ms = args.u64_or("infer-refresh-ms", cfg.infer_refresh_ms)?;
+    // transport knobs: lane policy, ring directory, event-loop threads
+    cfg.local_lanes = args.str_or("local-lanes", &cfg.local_lanes);
+    if let Some(d) = args.get("shm-dir") {
+        cfg.shm_dir = Some(d.to_string());
+    }
+    cfg.net_threads = args.u64_or("net-threads", cfg.net_threads as u64)? as usize;
     // deployment-mode knobs
     cfg.mode = args.str_or("mode", &cfg.mode);
     cfg.controller_bind = args.str_or("controller-bind", &cfg.controller_bind);

@@ -289,6 +289,7 @@ pub fn run_actor(
     mut cfg: ActorConfig,
     envs_per_actor: usize,
     inf_addr: Option<&str>,
+    lanes: crate::transport::LaneOpts,
     engine: &Arc<Engine>,
     league_addr: &str,
     pool_addrs: &[String],
@@ -303,7 +304,9 @@ pub fn run_actor(
                 .env(crate::envs::manifest_name(&cfg.env))
                 .map(|m| m.train_t)
                 .unwrap_or(16);
-            PolicyBackend::Remote(crate::transport::ReqClient::connect(addr))
+            PolicyBackend::Remote(crate::transport::ReqClient::connect_opts(
+                addr, lanes,
+            ))
         }
         None => PolicyBackend::Local(engine.clone()),
     };
@@ -449,6 +452,7 @@ impl Deployment {
                     batch: m.infer_b,
                     max_wait: Duration::from_micros(cfg.infer_max_wait_us),
                     refresh: Duration::from_millis(cfg.infer_refresh_ms),
+                    net_threads: cfg.net_threads,
                 },
                 engine.clone(),
                 &core.pool_addrs,
@@ -520,6 +524,10 @@ impl Deployment {
         let stop = self.actor_stop.clone();
         let restarts = self.restarts.clone();
         let envs_per_actor = self.cfg.envs_per_actor.max(1);
+        let lanes = crate::transport::LaneOpts::from_config(
+            &self.cfg.local_lanes,
+            self.cfg.shm_dir.as_deref().unwrap_or(""),
+        );
         let hub = Arc::new(MetricsHub::default());
         self.hubs
             .lock()
@@ -536,6 +544,7 @@ impl Deployment {
                                 cfg.clone(),
                                 envs_per_actor,
                                 inf_addr.as_deref(),
+                                lanes.clone(),
                                 &engine,
                                 &league_addr,
                                 &pool_addrs,

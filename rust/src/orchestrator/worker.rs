@@ -534,6 +534,10 @@ fn run_actor_role(
         trace_sample: run.trace_sample as f32,
     };
     let role_stop = Arc::new(AtomicBool::new(false));
+    // lane policy rides the controller's RunSlice: every actor worker
+    // colocated with its inference server picks the shm lane the same way
+    let lanes =
+        crate::transport::LaneOpts::from_config(&run.local_lanes, &run.shm_dir);
     let handle = {
         let asn = asn.clone();
         let engine = engine.clone();
@@ -548,6 +552,7 @@ fn run_actor_role(
                     acfg,
                     envs_per_actor,
                     inf,
+                    lanes,
                     &engine,
                     &asn.league_addr,
                     &asn.pool_addrs,
@@ -593,6 +598,7 @@ fn run_inf_role(
             batch: m.infer_b,
             max_wait: Duration::from_micros(run.infer_max_wait_us),
             refresh: Duration::from_millis(run.infer_refresh_ms),
+            net_threads: run.net_threads as usize,
         },
         engine.clone(),
         &asn.pool_addrs,

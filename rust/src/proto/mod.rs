@@ -208,6 +208,13 @@ pub struct RunSlice {
     pub fault_seed: u64,
     /// fault-injection spec (empty = injection disabled)
     pub fault_spec: String,
+    /// shared-memory lane policy for colocated REQ/REP pairs:
+    /// "auto" | "on" | "off"
+    pub local_lanes: String,
+    /// directory for lane ring files ("" = /dev/shm or the temp dir)
+    pub shm_dir: String,
+    /// event-loop threads per transport server (0 = auto)
+    pub net_threads: u32,
 }
 
 /// A role slot granted to a worker process: which role instance it is,
@@ -307,6 +314,12 @@ pub enum Msg {
     // -- InfServer -------------------------------------------------------
     InferReq { key: ModelKey, obs: Vec<f32>, rows: u32, trace: Option<TraceCtx> },
     InferResp { logits: Vec<f32>, value: Vec<f32> },
+    // -- Transport core ---------------------------------------------------
+    /// Shared-memory lane offer: `path` is the ring-pair base path the
+    /// client created (`<base>.c2s` / `<base>.s2c`).  Answered by the
+    /// transport core itself (Ok = lane attached, Err = stay on TCP) —
+    /// handlers never see it.
+    ShmHello { path: String },
 }
 
 impl Wire for ModelKey {
@@ -624,6 +637,9 @@ impl Wire for RunSlice {
         buf.put_u64(self.trace_slow_ms);
         buf.put_u64(self.fault_seed);
         buf.put_str(&self.fault_spec);
+        buf.put_str(&self.local_lanes);
+        buf.put_str(&self.shm_dir);
+        buf.put_u32(self.net_threads);
     }
     fn decode(cur: &mut Cursor) -> Result<Self> {
         Ok(RunSlice {
@@ -645,6 +661,9 @@ impl Wire for RunSlice {
             trace_slow_ms: cur.u64()?,
             fault_seed: cur.u64()?,
             fault_spec: cur.str()?,
+            local_lanes: cur.str()?,
+            shm_dir: cur.str()?,
+            net_threads: cur.u32()?,
         })
     }
 }
@@ -830,6 +849,10 @@ impl Wire for Msg {
                 buf.put_f32s(logits);
                 buf.put_f32s(value);
             }
+            Msg::ShmHello { path } => {
+                buf.put_u8(46);
+                buf.put_str(path);
+            }
         }
     }
 
@@ -903,6 +926,7 @@ impl Wire for Msg {
                 trace: get_trace(cur)?,
             },
             41 => Msg::InferResp { logits: cur.f32s()?, value: cur.f32s()? },
+            46 => Msg::ShmHello { path: cur.str()? },
             t => bail!("unknown msg tag {t}"),
         })
     }
@@ -1027,6 +1051,9 @@ mod tests {
                     trace_slow_ms: 50,
                     fault_seed: 99,
                     fault_spec: "drop:actor@0.25".into(),
+                    local_lanes: "auto".into(),
+                    shm_dir: "/dev/shm".into(),
+                    net_threads: 2,
                 },
             }),
             Msg::Retry { backoff_ms: 500, reason: "no free slot".into() },
@@ -1123,6 +1150,7 @@ mod tests {
                 trace: Some(TraceCtx { trace_id: u64::MAX, span_id: 9 }),
             },
             Msg::InferResp { logits: vec![1.0, 2.0], value: vec![0.3] },
+            Msg::ShmHello { path: "/dev/shm/tleague-lane-1-0".into() },
         ];
         for m in msgs {
             let bytes = m.to_bytes();

@@ -6,17 +6,27 @@
 //!   - (PUB/SUB is folded into REQ/REP polling: ModelPool reads are cheap)
 //!
 //! Frame format: u32 little-endian length + payload (a `Wire`-encoded
-//! `Msg`).  Every server spawns one thread per connection; this repo's
-//! scale (tens of actors per learner per machine) does not need epoll.
+//! `Msg`).  Servers run a readiness-driven epoll core (`poll`): a small
+//! fixed pool of event-loop threads owns all connections on nonblocking
+//! sockets, so per-connection cost is O(buffers), not an 8 MB thread
+//! stack.  An eventfd per loop makes shutdown and cross-thread reply
+//! injection immediate.  Colocated peers can negotiate a shared-memory
+//! lane (`shm`): one mmap-backed SPSC ring per direction carrying the
+//! same encoded frames, bit-compatible with the TCP path.
 
 pub mod fault;
+pub mod poll;
+pub mod shm;
 
 use crate::proto::Msg;
 use crate::util::codec::Wire;
 use crate::util::metrics::Meter;
 use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
 use std::io::{IoSlice, Read, Write as IoWrite};
 use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -24,13 +34,19 @@ use std::time::{Duration, Instant};
 pub const MAX_FRAME: u32 = 512 << 20; // 512 MiB guard (synthetic params are 25 MiB)
 
 /// How long a frame that has STARTED arriving may stall before the
-/// connection is declared dead (see `read_frame`).
+/// connection is declared dead (see `read_frame` and the event loop's
+/// stall sweep).
 const FRAME_STALL_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Reserved event-loop tokens (connection tokens count up from 0).
+const TOK_WAKE: u64 = u64::MAX;
+const TOK_LISTENER: u64 = u64::MAX - 1;
 
 /// Write one length-prefixed frame assembled from `parts` — a single
 /// vectored syscall in the common case, so a pre-encoded reply frame
 /// (the ModelPool's cached `Arc<[u8]>`) is never copied into a staging
-/// buffer on its way out.
+/// buffer on its way out.  Blocking-socket helper used by clients and
+/// tests; the server side resumes short writes via the event loop.
 pub fn write_frame_parts(stream: &mut TcpStream, parts: &[&[u8]]) -> Result<()> {
     let total: usize = parts.iter().map(|p| p.len()).sum();
     let len = (total as u32).to_le_bytes();
@@ -93,11 +109,11 @@ pub fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<()> {
 }
 
 /// `read_exact` with frame-aware timeout semantics.  A read timeout with
-/// ZERO bytes consumed surfaces as WouldBlock/TimedOut so server loops
-/// can poll their stop flag between frames — but once a frame has begun,
-/// returning early would desync the length-prefix framing (the next read
-/// would parse payload bytes as a length).  Mid-frame timeouts therefore
-/// keep reading until `FRAME_STALL_DEADLINE`, then error fatally.
+/// ZERO bytes consumed surfaces as WouldBlock/TimedOut so callers can
+/// poll between frames — but once a frame has begun, returning early
+/// would desync the length-prefix framing (the next read would parse
+/// payload bytes as a length).  Mid-frame timeouts therefore keep
+/// reading until `FRAME_STALL_DEADLINE`, then error fatally.
 fn read_full(stream: &mut TcpStream, out: &mut [u8], frame_start: bool) -> Result<()> {
     let mut got = 0usize;
     let mut stalled_since: Option<Instant> = None;
@@ -133,7 +149,8 @@ fn read_full(stream: &mut TcpStream, out: &mut [u8], frame_start: bool) -> Resul
 /// the connection's reused reply buffer) or a pre-encoded frame — a
 /// small owned `head` (wire tag + fixed fields) followed by a shared
 /// `tail` (e.g. the ModelPool's cached `ModelBlob` encoding).  Framed
-/// replies go out in one vectored syscall with zero copies of the tail.
+/// replies go out vectored with zero copies of the tail, resumed across
+/// short writes by the event loop.
 pub enum Reply {
     Msg(Msg),
     Framed { head: Vec<u8>, tail: Arc<[u8]> },
@@ -151,10 +168,1188 @@ impl From<Msg> for Reply {
     }
 }
 
-/// Blocking request/response client with lazy (re)connect.
+/// Server tuning knobs.  `net_threads` sizes the event-loop pool
+/// (0 = auto: min(2, available cores)); `sndbuf` shrinks the kernel
+/// send buffer (0 = kernel default) — the short-write test hook.
+#[derive(Clone, Default)]
+pub struct ServerOpts {
+    pub net_threads: usize,
+    pub sndbuf: usize,
+}
+
+/// When a `ReqClient` should try to negotiate a shared-memory lane.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum LaneMode {
+    Auto,
+    On,
+    #[default]
+    Off,
+}
+
+impl LaneMode {
+    /// Parse the `--local-lanes` value; unknown strings mean Off.
+    pub fn parse(s: &str) -> LaneMode {
+        match s {
+            "auto" => LaneMode::Auto,
+            "on" => LaneMode::On,
+            _ => LaneMode::Off,
+        }
+    }
+}
+
+/// Client-side lane selection: mode, ring directory (default `/dev/shm`
+/// when present), and per-direction ring capacity (0 = LANE_CAPACITY).
+#[derive(Clone, Default)]
+pub struct LaneOpts {
+    pub mode: LaneMode,
+    pub dir: Option<PathBuf>,
+    pub capacity: usize,
+}
+
+impl LaneOpts {
+    /// Build lane options from run-config strings (`--local-lanes`,
+    /// `--shm-dir`); an empty dir means the platform default.
+    pub fn from_config(mode: &str, dir: &str) -> LaneOpts {
+        LaneOpts {
+            mode: LaneMode::parse(mode),
+            dir: (!dir.is_empty()).then(|| PathBuf::from(dir)),
+            capacity: 0,
+        }
+    }
+}
+
+/// One queued outbound frame: an owned head (starting with the 4-byte
+/// length prefix) plus an optional shared tail, with a resume offset so
+/// short writes pick up exactly where the kernel stopped.
+struct OutFrame {
+    head: Vec<u8>,
+    tail: Option<Arc<[u8]>>,
+    off: usize,
+}
+
+impl OutFrame {
+    fn total(&self) -> usize {
+        self.head.len() + self.tail.as_ref().map_or(0, |t| t.len())
+    }
+}
+
+/// Encode a handler reply into an `OutFrame`, counting its wire bytes.
+fn encode_reply(reply: Reply, bytes_out: &Meter) -> OutFrame {
+    match reply {
+        Reply::Msg(msg) => {
+            let mut buf = vec![0u8; 4];
+            msg.encode(&mut buf);
+            let len = (buf.len() - 4) as u32;
+            buf[..4].copy_from_slice(&len.to_le_bytes());
+            bytes_out.add(buf.len() as u64);
+            OutFrame { head: buf, tail: None, off: 0 }
+        }
+        Reply::Framed { head, tail } => {
+            let total = head.len() + tail.len();
+            let mut buf = Vec::with_capacity(4 + head.len());
+            buf.extend_from_slice(&(total as u32).to_le_bytes());
+            buf.extend_from_slice(&head);
+            bytes_out.add(total as u64 + 4);
+            OutFrame { head: buf, tail: Some(tail), off: 0 }
+        }
+    }
+}
+
+/// Work injected into an event loop from another thread (the acceptor
+/// distributing a connection, or an async handler delivering a reply).
+enum Inject {
+    Conn(TcpStream),
+    Reply { token: u64, frame: OutFrame },
+}
+
+/// The cross-thread face of one event loop: push work, ring the bell.
+struct LoopShared {
+    wake: poll::WakeFd,
+    inbox: Mutex<Vec<Inject>>,
+}
+
+/// The two handler shapes a `RepServer` can run: synchronous (reply
+/// returned inline, runs on the loop thread) or asynchronous (handler
+/// receives a [`Responder`] and replies from any thread later — the
+/// inference-server batching path).
+enum ServiceKind {
+    Sync(Box<dyn Fn(Msg) -> Reply + Send + Sync>),
+    Async(Box<dyn Fn(Msg, Responder) + Send + Sync>),
+}
+
+type Service = Arc<ServiceKind>;
+
+/// What one event loop does with a decoded frame.
+enum Kind {
+    Rep { service: Service, lanes: Arc<LaneHub> },
+    Pull {
+        tx: std::sync::mpsc::SyncSender<Msg>,
+        decode_errors: Arc<Meter>,
+    },
+}
+
+impl Clone for Kind {
+    fn clone(&self) -> Kind {
+        match self {
+            Kind::Rep { service, lanes } => {
+                Kind::Rep { service: service.clone(), lanes: lanes.clone() }
+            }
+            Kind::Pull { tx, decode_errors } => Kind::Pull {
+                tx: tx.clone(),
+                decode_errors: decode_errors.clone(),
+            },
+        }
+    }
+}
+
+/// Where an async reply goes: back through an event loop's inbox (TCP)
+/// or straight onto a shared-memory lane.
+enum RespondTo {
+    Loop {
+        token: u64,
+        shared: Arc<LoopShared>,
+        bytes_out: Arc<Meter>,
+    },
+    Lane {
+        srv: Arc<LaneSrv>,
+        bytes_out: Arc<Meter>,
+        stop: Arc<AtomicBool>,
+    },
+}
+
+/// One-shot reply handle handed to async handlers.  Dropping it without
+/// calling [`send`](Responder::send) delivers `Msg::Err` so the client
+/// never hangs on a handler that lost the request.
+pub struct Responder {
+    inner: Option<RespondTo>,
+}
+
+impl Responder {
+    pub fn send(mut self, reply: Reply) {
+        if let Some(inner) = self.inner.take() {
+            deliver(inner, reply);
+        }
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.take() {
+            deliver(
+                inner,
+                Reply::Msg(Msg::Err(
+                    "handler dropped the request without replying".into(),
+                )),
+            );
+        }
+    }
+}
+
+fn deliver(inner: RespondTo, reply: Reply) {
+    match inner {
+        RespondTo::Loop { token, shared, bytes_out } => {
+            let frame = encode_reply(reply, &bytes_out);
+            shared.inbox.lock().unwrap().push(Inject::Reply { token, frame });
+            shared.wake.wake();
+        }
+        RespondTo::Lane { srv, bytes_out, stop } => {
+            if !send_on_lane(&srv, reply, &bytes_out, &stop) {
+                srv.dead.store(true, Ordering::Relaxed);
+                srv.lane.tx.set_closed();
+            }
+        }
+    }
+}
+
+/// Per-connection state owned by exactly one event loop.  Memory here
+/// is the per-connection cost: two elastic buffers and a queue — no
+/// thread stack.
+struct Conn {
+    stream: TcpStream,
+    fd: i32,
+    token: u64,
+    laddr: String,
+    len_bytes: [u8; 4],
+    payload: Vec<u8>,
+    got: usize,
+    need: usize,
+    in_payload: bool,
+    mid_frame: bool,
+    last_progress: Instant,
+    out: VecDeque<OutFrame>,
+    interest: u32,
+    paused: bool,
+    close_after_write: bool,
+    parked: Option<Msg>,
+    err_logged: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, fd: i32, token: u64, laddr: String) -> Conn {
+        Conn {
+            stream,
+            fd,
+            token,
+            laddr,
+            len_bytes: [0u8; 4],
+            payload: Vec::new(),
+            got: 0,
+            need: 0,
+            in_payload: false,
+            mid_frame: false,
+            last_progress: Instant::now(),
+            out: VecDeque::new(),
+            interest: poll::EPOLLIN,
+            paused: false,
+            close_after_write: false,
+            parked: None,
+            err_logged: false,
+        }
+    }
+}
+
+/// One readiness-driven loop thread: owns its `Poller`, its share of
+/// the connections, and (loop 0 only) the listener.
+struct EventLoop {
+    poller: poll::Poller,
+    shared: Arc<LoopShared>,
+    peers: Vec<Arc<LoopShared>>,
+    listener: Option<TcpListener>,
+    kind: Kind,
+    stop: Arc<AtomicBool>,
+    bytes_in: Arc<Meter>,
+    bytes_out: Arc<Meter>,
+    opts: ServerOpts,
+    laddr: String,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    rr: usize,
+    last_sweep: Instant,
+}
+
+fn effective_threads(n: usize) -> usize {
+    if n > 0 {
+        n
+    } else {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(2)
+    }
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        if self
+            .poller
+            .add(self.shared.wake.raw(), TOK_WAKE, poll::EPOLLIN)
+            .is_err()
+        {
+            return;
+        }
+        if let Some(l) = &self.listener {
+            if self.poller.add(l.as_raw_fd(), TOK_LISTENER, poll::EPOLLIN).is_err() {
+                return;
+            }
+        }
+        let mut events: Vec<(u64, u32)> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let timeout =
+                if self.conns.values().any(|c| c.parked.is_some()) { 5 } else { 200 };
+            if self.poller.wait(&mut events, timeout).is_err() {
+                return;
+            }
+            if self.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            // injected work first, every iteration — wakes coalesce, so
+            // the inbox is authoritative, not the eventfd
+            let inbox: Vec<Inject> =
+                std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+            for inj in inbox {
+                match inj {
+                    Inject::Conn(s) => self.register_conn(s),
+                    Inject::Reply { token, frame } => {
+                        if let Some(conn) = self.conns.get_mut(&token) {
+                            conn.out.push_back(frame);
+                            conn.paused = false;
+                            self.service_conn(token, 0);
+                        }
+                        // token already gone: conn died while the
+                        // handler was in flight; drop the reply
+                    }
+                }
+            }
+            let evs = std::mem::take(&mut events);
+            for (token, ready) in &evs {
+                match *token {
+                    TOK_WAKE => self.shared.wake.drain(),
+                    TOK_LISTENER => self.accept_ready(),
+                    t => self.service_conn(t, *ready),
+                }
+            }
+            events = evs;
+            self.retry_parked();
+            if self.last_sweep.elapsed() >= Duration::from_millis(100) {
+                self.last_sweep = Instant::now();
+                self.sweep_stalls();
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let res = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match res {
+                Ok((stream, _)) => {
+                    match fault::check(fault::SITE_ACCEPT, &self.laddr, 0) {
+                        fault::Verdict::Pass => {}
+                        fault::Verdict::Delay(d) => std::thread::sleep(d),
+                        // reject/drop at accept: close right away
+                        _ => continue,
+                    }
+                    self.rr = (self.rr + 1) % self.peers.len();
+                    if self.rr == 0 {
+                        self.register_conn(stream);
+                    } else {
+                        let peer = &self.peers[self.rr];
+                        peer.inbox.lock().unwrap().push(Inject::Conn(stream));
+                        peer.wake.wake();
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(_) => {
+                    // transient accept error (e.g. fd exhaustion): back
+                    // off briefly; the level-triggered listener retries
+                    std::thread::sleep(Duration::from_millis(2));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn register_conn(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        let fd = stream.as_raw_fd();
+        if self.opts.sndbuf > 0 {
+            poll::set_sndbuf(fd, self.opts.sndbuf).ok();
+        }
+        let laddr = stream.local_addr().map(|a| a.to_string()).unwrap_or_default();
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.poller.add(fd, token, poll::EPOLLIN).is_err() {
+            return;
+        }
+        self.conns.insert(token, Conn::new(stream, fd, token, laddr));
+    }
+
+    /// Drive one connection for the readiness bits in `ready`; closes
+    /// and deregisters it on any fatal condition.
+    fn service_conn(&mut self, token: u64, ready: u32) {
+        let Some(mut conn) = self.conns.remove(&token) else { return };
+        let mut close = false;
+        if conn.paused && ready & (poll::EPOLLHUP | poll::EPOLLERR) != 0 {
+            // a paused conn ignores EPOLLIN, but peer death still ends it
+            close = true;
+        }
+        if !close
+            && !conn.paused
+            && ready & (poll::EPOLLIN | poll::EPOLLHUP | poll::EPOLLERR) != 0
+        {
+            close = self.drive_read(&mut conn, token);
+        }
+        if !close {
+            close = Self::flush_conn(&mut conn);
+        }
+        if close {
+            let _ = self.poller.del(conn.fd);
+        } else {
+            self.update_interest(&mut conn);
+            self.conns.insert(token, conn);
+        }
+    }
+
+    /// Exact-read state machine: header bytes, then payload bytes, then
+    /// dispatch; greedy until WouldBlock.  Returns true to close.
+    fn drive_read(&mut self, conn: &mut Conn, token: u64) -> bool {
+        loop {
+            let res = if !conn.in_payload {
+                conn.stream.read(&mut conn.len_bytes[conn.got..])
+            } else {
+                conn.stream.read(&mut conn.payload[conn.got..conn.need])
+            };
+            match res {
+                Ok(0) => return true,
+                Ok(n) => {
+                    conn.got += n;
+                    conn.mid_frame = true;
+                    conn.last_progress = Instant::now();
+                    if !conn.in_payload && conn.got == 4 {
+                        let len = u32::from_le_bytes(conn.len_bytes);
+                        if check_frame_len(len).is_err() {
+                            return true;
+                        }
+                        conn.in_payload = true;
+                        conn.need = len as usize;
+                        conn.got = 0;
+                        conn.payload.clear();
+                        conn.payload.resize(conn.need, 0);
+                    }
+                    if conn.in_payload && conn.got == conn.need {
+                        conn.in_payload = false;
+                        conn.got = 0;
+                        conn.mid_frame = false;
+                        let close = self.on_frame(conn, token);
+                        if conn.payload.capacity() > (1 << 20) {
+                            // a one-off giant frame must not pin memory
+                            conn.payload = Vec::new();
+                        }
+                        if close {
+                            return true;
+                        }
+                        if conn.paused || conn.close_after_write {
+                            return false;
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return false,
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// One complete frame is in `conn.payload`: run fault checks,
+    /// decode, dispatch to the service.  Returns true to close.
+    fn on_frame(&self, conn: &mut Conn, token: u64) -> bool {
+        match &self.kind {
+            Kind::Rep { service, lanes } => {
+                self.bytes_in.add(conn.payload.len() as u64 + 4);
+                let tag = conn.payload.first().copied().unwrap_or(0);
+                match fault::check(fault::SITE_REP, &conn.laddr, tag) {
+                    fault::Verdict::Pass => {}
+                    fault::Verdict::Delay(d) => std::thread::sleep(d),
+                    fault::Verdict::Drop | fault::Verdict::Reject => return true,
+                    fault::Verdict::Truncate => {
+                        // claim a longer reply than we send, then die —
+                        // the client sees a mid-frame close and retries
+                        let mut head = Vec::with_capacity(12);
+                        head.extend_from_slice(&64u32.to_le_bytes());
+                        head.extend_from_slice(&[0u8; 8]);
+                        conn.out.push_back(OutFrame { head, tail: None, off: 0 });
+                        conn.close_after_write = true;
+                        return false;
+                    }
+                }
+                let reply = match Msg::from_bytes(&conn.payload) {
+                    // lane negotiation is core protocol, not handler business
+                    Ok(Msg::ShmHello { path }) => Reply::Msg(lanes.attach(&path)),
+                    Ok(msg) => match &**service {
+                        ServiceKind::Sync(f) => f(msg),
+                        ServiceKind::Async(f) => {
+                            conn.paused = true; // one in flight per conn
+                            f(
+                                msg,
+                                Responder {
+                                    inner: Some(RespondTo::Loop {
+                                        token,
+                                        shared: self.shared.clone(),
+                                        bytes_out: self.bytes_out.clone(),
+                                    }),
+                                },
+                            );
+                            return false;
+                        }
+                    },
+                    Err(e) => Reply::Msg(Msg::Err(format!("decode: {e}"))),
+                };
+                conn.out.push_back(encode_reply(reply, &self.bytes_out));
+                false
+            }
+            Kind::Pull { tx, decode_errors } => {
+                self.bytes_in.add(conn.payload.len() as u64 + 4);
+                match fault::check(
+                    fault::SITE_PULL,
+                    &conn.laddr,
+                    conn.payload.first().copied().unwrap_or(0),
+                ) {
+                    fault::Verdict::Pass => {}
+                    fault::Verdict::Delay(d) => std::thread::sleep(d),
+                    // swallow just this frame
+                    fault::Verdict::Truncate => return false,
+                    fault::Verdict::Drop | fault::Verdict::Reject => return true,
+                }
+                match Msg::from_bytes(&conn.payload) {
+                    Ok(msg) => match tx.try_send(msg) {
+                        Ok(()) => {}
+                        Err(std::sync::mpsc::TrySendError::Full(m)) => {
+                            // queue full = backpressure: park the frame
+                            // and stop reading this conn, which stalls
+                            // the pushing actor (on-policy mode)
+                            conn.parked = Some(m);
+                            conn.paused = true;
+                        }
+                        Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+                            return true;
+                        }
+                    },
+                    Err(e) => {
+                        decode_errors.add(1);
+                        if !conn.err_logged {
+                            conn.err_logged = true;
+                            let peer = conn
+                                .stream
+                                .peer_addr()
+                                .map(|a| a.to_string())
+                                .unwrap_or_else(|_| "?".into());
+                            eprintln!(
+                                "pull: dropping undecodable {}-byte frame \
+                                 from {peer}: {e} (counting further drops \
+                                 silently)",
+                                conn.payload.len()
+                            );
+                        }
+                    }
+                }
+                false
+            }
+        }
+    }
+
+    /// Greedy write of the outbound queue, resuming partial frames at
+    /// their recorded offset.  Returns true to close.
+    fn flush_conn(conn: &mut Conn) -> bool {
+        loop {
+            let Some(front) = conn.out.front_mut() else {
+                return conn.close_after_write;
+            };
+            let head_len = front.head.len();
+            let total = front.total();
+            let res = if front.off < head_len {
+                match &front.tail {
+                    Some(tail) => {
+                        let bufs = [
+                            IoSlice::new(&front.head[front.off..]),
+                            IoSlice::new(tail),
+                        ];
+                        conn.stream.write_vectored(&bufs)
+                    }
+                    None => conn.stream.write(&front.head[front.off..]),
+                }
+            } else {
+                // off >= head_len with the frame unfinished implies a tail
+                let tail = front.tail.as_ref().unwrap();
+                conn.stream.write(&tail[front.off - head_len..])
+            };
+            match res {
+                Ok(0) => return true,
+                Ok(n) => {
+                    front.off += n;
+                    if front.off >= total {
+                        conn.out.pop_front();
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return false,
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// Keep epoll interest in sync with what the conn can make progress
+    /// on: EPOLLIN unless paused, EPOLLOUT only while output is queued.
+    fn update_interest(&self, conn: &mut Conn) {
+        let mut want = 0u32;
+        if !conn.paused {
+            want |= poll::EPOLLIN;
+        }
+        if !conn.out.is_empty() {
+            want |= poll::EPOLLOUT;
+        }
+        // want == 0 is legal: HUP/ERR are always reported
+        if want != conn.interest && self.poller.modify(conn.fd, conn.token, want).is_ok()
+        {
+            conn.interest = want;
+        }
+    }
+
+    /// Re-offer parked pull frames to the queue; unpause on success.
+    fn retry_parked(&mut self) {
+        let tx = match &self.kind {
+            Kind::Pull { tx, .. } => tx.clone(),
+            _ => return,
+        };
+        let mut resumed = Vec::new();
+        let mut dead = Vec::new();
+        for (tok, conn) in self.conns.iter_mut() {
+            if let Some(m) = conn.parked.take() {
+                match tx.try_send(m) {
+                    Ok(()) => {
+                        conn.paused = false;
+                        resumed.push(*tok);
+                    }
+                    Err(std::sync::mpsc::TrySendError::Full(m)) => {
+                        conn.parked = Some(m);
+                    }
+                    Err(std::sync::mpsc::TrySendError::Disconnected(_)) => {
+                        dead.push(*tok);
+                    }
+                }
+            }
+        }
+        for tok in resumed {
+            // restore EPOLLIN; buffered socket data re-fires level-triggered
+            self.service_conn(tok, 0);
+        }
+        for tok in dead {
+            if let Some(c) = self.conns.remove(&tok) {
+                let _ = self.poller.del(c.fd);
+            }
+        }
+    }
+
+    /// Enforce FRAME_STALL_DEADLINE for conns stuck mid-frame — the
+    /// event-loop equivalent of `read_full`'s stall tracking.
+    fn sweep_stalls(&mut self) {
+        let stale: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                c.mid_frame && c.last_progress.elapsed() > FRAME_STALL_DEADLINE
+            })
+            .map(|(t, _)| *t)
+            .collect();
+        for tok in stale {
+            if let Some(c) = self.conns.remove(&tok) {
+                let _ = self.poller.del(c.fd);
+            }
+        }
+    }
+}
+
+/// Spawn the event-loop pool for one server: N loops, listener owned by
+/// loop 0, connections distributed round-robin via loop inboxes.
+fn spawn_loops(
+    prefix: &str,
+    listener: TcpListener,
+    local: &str,
+    opts: &ServerOpts,
+    kind: Kind,
+    stop: Arc<AtomicBool>,
+    bytes_in: Arc<Meter>,
+    bytes_out: Arc<Meter>,
+) -> Result<(Vec<Arc<LoopShared>>, Vec<std::thread::JoinHandle<()>>)> {
+    let n = effective_threads(opts.net_threads);
+    let mut shareds = Vec::with_capacity(n);
+    for _ in 0..n {
+        shareds.push(Arc::new(LoopShared {
+            wake: poll::WakeFd::new()?,
+            inbox: Mutex::new(Vec::new()),
+        }));
+    }
+    let mut listener = Some(listener);
+    let mut handles = Vec::with_capacity(n);
+    for (i, shared) in shareds.iter().enumerate() {
+        let lp = EventLoop {
+            poller: poll::Poller::new()?,
+            shared: shared.clone(),
+            peers: shareds.clone(),
+            listener: if i == 0 { listener.take() } else { None },
+            kind: kind.clone(),
+            stop: stop.clone(),
+            bytes_in: bytes_in.clone(),
+            bytes_out: bytes_out.clone(),
+            opts: opts.clone(),
+            laddr: local.to_string(),
+            conns: HashMap::new(),
+            next_token: 0,
+            rr: 0,
+            last_sweep: Instant::now(),
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("{prefix}{i}@{local}"))
+                .spawn(move || lp.run())?,
+        );
+    }
+    Ok((shareds, handles))
+}
+
+/// One attached shared-memory lane, server side.  `laddr` is the
+/// server's TCP address — fault rules target lanes and sockets alike.
+struct LaneSrv {
+    lane: shm::ShmLane,
+    laddr: String,
+    dead: AtomicBool,
+}
+
+/// Serves every attached shm lane from one thread: polls the inbound
+/// rings, runs the same service the TCP path runs, beats the heartbeat
+/// words so peers can detect a crashed server.  The thread only exists
+/// once a client has attached a lane.
+struct LaneHub {
+    service: Service,
+    laddr: String,
+    lanes: Mutex<Vec<Arc<LaneSrv>>>,
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    bytes_in: Arc<Meter>,
+    bytes_out: Arc<Meter>,
+}
+
+impl LaneHub {
+    fn new(
+        service: Service,
+        laddr: String,
+        stop: Arc<AtomicBool>,
+        bytes_in: Arc<Meter>,
+        bytes_out: Arc<Meter>,
+    ) -> LaneHub {
+        LaneHub {
+            service,
+            laddr,
+            lanes: Mutex::new(Vec::new()),
+            stop,
+            handle: Mutex::new(None),
+            bytes_in,
+            bytes_out,
+        }
+    }
+
+    /// Handle a `ShmHello`: map the client's rings, start the lane
+    /// thread, confirm.  Any failure is an `Err` reply — the client
+    /// falls back to TCP permanently.
+    fn attach(self: &Arc<Self>, base: &str) -> Msg {
+        let lane = match shm::ShmLane::attach(base) {
+            Ok(l) => l,
+            Err(e) => return Msg::Err(format!("lane attach: {e}")),
+        };
+        if !self.ensure_thread() {
+            return Msg::Err("lane attach: service thread unavailable".into());
+        }
+        let srv = Arc::new(LaneSrv {
+            lane,
+            laddr: self.laddr.clone(),
+            dead: AtomicBool::new(false),
+        });
+        self.lanes.lock().unwrap().push(srv);
+        Msg::Ok
+    }
+
+    fn ensure_thread(self: &Arc<Self>) -> bool {
+        let mut h = self.handle.lock().unwrap();
+        if h.is_some() {
+            return true;
+        }
+        let hub = self.clone();
+        match std::thread::Builder::new()
+            .name(format!("shm@{}", self.laddr))
+            .spawn(move || hub.run())
+        {
+            Ok(handle) => {
+                *h = Some(handle);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn run(&self) {
+        let mut buf = Vec::new();
+        let mut idle = 0u32;
+        while !self.stop.load(Ordering::Relaxed) {
+            let lanes: Vec<Arc<LaneSrv>> = self.lanes.lock().unwrap().clone();
+            if lanes.is_empty() {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            let mut progressed = false;
+            for srv in &lanes {
+                if srv.dead.load(Ordering::Relaxed) {
+                    continue;
+                }
+                // heartbeats: prove this side alive even when idle
+                srv.lane.rx.beat_reader();
+                srv.lane.tx.beat_writer();
+                if srv.lane.rx.is_closed() {
+                    srv.dead.store(true, Ordering::Relaxed);
+                    srv.lane.tx.set_closed();
+                    continue;
+                }
+                loop {
+                    match srv.lane.rx.try_read_frame(&mut buf) {
+                        Ok(true) => {
+                            progressed = true;
+                            if !self.serve_frame(srv, &buf) {
+                                srv.dead.store(true, Ordering::Relaxed);
+                                srv.lane.tx.set_closed();
+                                break;
+                            }
+                        }
+                        Ok(false) => break,
+                        Err(_) => {
+                            // corrupt ring: kill the lane, keep the hub
+                            srv.dead.store(true, Ordering::Relaxed);
+                            srv.lane.tx.set_closed();
+                            break;
+                        }
+                    }
+                    if self.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+            }
+            {
+                let mut guard = self.lanes.lock().unwrap();
+                if guard.iter().any(|s| s.dead.load(Ordering::Relaxed)) {
+                    guard.retain(|s| !s.dead.load(Ordering::Relaxed));
+                }
+            }
+            if progressed {
+                idle = 0;
+            } else {
+                idle += 1;
+                if idle < 64 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+        for srv in self.lanes.lock().unwrap().iter() {
+            srv.lane.tx.set_closed();
+            srv.lane.rx.set_closed();
+        }
+    }
+
+    /// One inbound lane frame: same fault site, same decode, same
+    /// service dispatch as a TCP frame.  Returns false to kill the lane.
+    fn serve_frame(&self, srv: &Arc<LaneSrv>, payload: &[u8]) -> bool {
+        self.bytes_in.add(payload.len() as u64 + 4);
+        let tag = payload.first().copied().unwrap_or(0);
+        match fault::check(fault::SITE_REP, &srv.laddr, tag) {
+            fault::Verdict::Pass => {}
+            fault::Verdict::Delay(d) => std::thread::sleep(d),
+            // a mid-frame truncation cannot exist on a ring: any
+            // non-pass verdict kills the lane (client falls back to TCP)
+            _ => return false,
+        }
+        let reply = match Msg::from_bytes(payload) {
+            Ok(msg) => match &*self.service {
+                ServiceKind::Sync(f) => f(msg),
+                ServiceKind::Async(f) => {
+                    f(
+                        msg,
+                        Responder {
+                            inner: Some(RespondTo::Lane {
+                                srv: srv.clone(),
+                                bytes_out: self.bytes_out.clone(),
+                                stop: self.stop.clone(),
+                            }),
+                        },
+                    );
+                    return true;
+                }
+            },
+            Err(e) => Reply::Msg(Msg::Err(format!("decode: {e}"))),
+        };
+        send_on_lane(srv, reply, &self.bytes_out, &self.stop)
+    }
+
+    fn join(&self) {
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// Write one reply frame onto a lane's outbound ring, waiting out
+/// backpressure with heartbeat-based liveness checks.  Returns false if
+/// the lane is dead (peer gone, ring too small, or server stopping).
+fn send_on_lane(
+    srv: &LaneSrv,
+    reply: Reply,
+    bytes_out: &Meter,
+    stop: &AtomicBool,
+) -> bool {
+    let (head, tail): (Vec<u8>, Option<Arc<[u8]>>) = match reply {
+        Reply::Msg(msg) => {
+            let mut b = Vec::new();
+            msg.encode(&mut b);
+            (b, None)
+        }
+        Reply::Framed { head, tail } => (head, Some(tail)),
+    };
+    let total = head.len() + tail.as_ref().map_or(0, |t| t.len());
+    let empty: &[u8] = &[];
+    let parts: [&[u8]; 2] = [&head, tail.as_deref().unwrap_or(empty)];
+    let mut watch = shm::BeatWatch::new(srv.lane.tx.reader_beat());
+    loop {
+        if stop.load(Ordering::Relaxed)
+            || srv.lane.tx.is_closed()
+            || srv.lane.rx.is_closed()
+        {
+            return false;
+        }
+        match srv.lane.tx.try_write_frame_parts(&parts) {
+            Ok(true) => break,
+            Ok(false) => {} // ring full: reader lagging
+            Err(_) => return false, // frame exceeds ring capacity
+        }
+        srv.lane.tx.beat_writer();
+        if watch.stale(srv.lane.tx.reader_beat(), shm::STALE_DEADLINE) {
+            return false;
+        }
+        std::thread::yield_now();
+    }
+    srv.lane.tx.beat_writer();
+    bytes_out.add(total as u64 + 4);
+    true
+}
+
+/// Request/response server on the event-loop pool.
+pub struct RepServer {
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    loops: Vec<Arc<LoopShared>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    lane_hub: Arc<LaneHub>,
+    /// Frame bytes received/sent summed over every connection and lane
+    /// this server accepted (payload + 4-byte length prefix).
+    /// Registered into the owning role's `MetricsHub` so bandwidth
+    /// rides the telemetry plane next to request rates.
+    pub bytes_in: Arc<Meter>,
+    pub bytes_out: Arc<Meter>,
+}
+
+impl RepServer {
+    /// Bind to `addr` ("127.0.0.1:0" for an ephemeral port) and serve
+    /// `handler(msg) -> reply` until `shutdown()`.
+    pub fn serve<F>(addr: &str, handler: F) -> Result<RepServer>
+    where
+        F: Fn(Msg) -> Msg + Send + Sync + 'static,
+    {
+        Self::serve_frames(addr, move |msg| Reply::Msg(handler(msg)))
+    }
+
+    /// Like [`RepServer::serve`], but the handler may reply with a
+    /// pre-encoded [`Reply::Framed`] frame (zero encode, zero copy of
+    /// the shared tail) — the ModelPool serve path.
+    pub fn serve_frames<F>(addr: &str, handler: F) -> Result<RepServer>
+    where
+        F: Fn(Msg) -> Reply + Send + Sync + 'static,
+    {
+        Self::serve_frames_opts(addr, ServerOpts::default(), handler)
+    }
+
+    /// [`serve_frames`](Self::serve_frames) with explicit pool/socket
+    /// knobs.
+    pub fn serve_frames_opts<F>(
+        addr: &str,
+        opts: ServerOpts,
+        handler: F,
+    ) -> Result<RepServer>
+    where
+        F: Fn(Msg) -> Reply + Send + Sync + 'static,
+    {
+        Self::serve_core(addr, opts, ServiceKind::Sync(Box::new(handler)))
+    }
+
+    /// Asynchronous variant: the handler receives a [`Responder`] and
+    /// may reply from any thread later (the inference batching path).
+    /// The connection reads one request at a time — the next frame is
+    /// not consumed until the responder fires.
+    pub fn serve_async<F>(addr: &str, opts: ServerOpts, handler: F) -> Result<RepServer>
+    where
+        F: Fn(Msg, Responder) + Send + Sync + 'static,
+    {
+        Self::serve_core(addr, opts, ServiceKind::Async(Box::new(handler)))
+    }
+
+    fn serve_core(addr: &str, opts: ServerOpts, service: ServiceKind) -> Result<RepServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let bytes_in = Arc::new(Meter::new());
+        let bytes_out = Arc::new(Meter::new());
+        let service: Service = Arc::new(service);
+        let lane_hub = Arc::new(LaneHub::new(
+            service.clone(),
+            local.clone(),
+            stop.clone(),
+            bytes_in.clone(),
+            bytes_out.clone(),
+        ));
+        let kind = Kind::Rep { service, lanes: lane_hub.clone() };
+        let (loops, handles) = spawn_loops(
+            "rep",
+            listener,
+            &local,
+            &opts,
+            kind,
+            stop.clone(),
+            bytes_in.clone(),
+            bytes_out.clone(),
+        )?;
+        Ok(RepServer {
+            addr: local,
+            stop,
+            loops,
+            handles,
+            lane_hub,
+            bytes_in,
+            bytes_out,
+        })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for l in &self.loops {
+            l.wake.wake();
+        }
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+        self.lane_hub.join();
+    }
+}
+
+impl Drop for RepServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One-way streaming receiver (learner side of trajectory PULL); frames
+/// from all connections are funneled into one bounded queue.  When the
+/// queue is full the owning loop parks the frame and stops reading that
+/// connection — TCP backpressure stalls the pushing actor (the paper's
+/// on-policy mode).
+pub struct PullServer {
+    pub addr: String,
+    rx: std::sync::mpsc::Receiver<Msg>,
+    stop: Arc<AtomicBool>,
+    loops: Vec<Arc<LoopShared>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Undecodable frames dropped, across all connections.  A nonzero
+    /// rate means a peer speaks a different protocol version — silent
+    /// drops here used to be invisible (PoolStats-style observability).
+    pub decode_errors: Arc<Meter>,
+    /// Frame bytes received across all connections (payload + prefix),
+    /// including frames that later fail to decode — the wire carried
+    /// them either way.
+    pub bytes_in: Arc<Meter>,
+}
+
+impl PullServer {
+    pub fn bind(addr: &str, queue_cap: usize) -> Result<PullServer> {
+        Self::bind_opts(addr, queue_cap, ServerOpts::default())
+    }
+
+    pub fn bind_opts(
+        addr: &str,
+        queue_cap: usize,
+        opts: ServerOpts,
+    ) -> Result<PullServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = std::sync::mpsc::sync_channel(queue_cap);
+        let stop = Arc::new(AtomicBool::new(false));
+        let decode_errors = Arc::new(Meter::new());
+        let bytes_in = Arc::new(Meter::new());
+        let kind = Kind::Pull { tx, decode_errors: decode_errors.clone() };
+        let (loops, handles) = spawn_loops(
+            "pull",
+            listener,
+            &local,
+            &opts,
+            kind,
+            stop.clone(),
+            bytes_in.clone(),
+            Arc::new(Meter::new()), // pull sends nothing
+        )?;
+        Ok(PullServer {
+            addr: local,
+            rx,
+            stop,
+            loops,
+            handles,
+            decode_errors,
+            bytes_in,
+        })
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> Option<Msg> {
+        self.rx.recv_timeout(d).ok()
+    }
+    pub fn try_recv(&self) -> Option<Msg> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for l in &self.loops {
+            l.wake.wake();
+        }
+        for h in self.handles.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for PullServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Whether `host:port` names an endpoint on this machine — the `Auto`
+/// lane-mode predicate.
+fn is_loopback_addr(addr: &str) -> bool {
+    let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or(addr);
+    host == "localhost" || host == "::1" || host == "[::1]" || host.starts_with("127.")
+}
+
+/// Client-side lane state: negotiation is tried once per client; any
+/// lane failure afterwards falls back to TCP permanently (`Denied`).
+#[derive(Default)]
+enum LaneState {
+    #[default]
+    Untried,
+    Active(Box<shm::ShmLane>),
+    Denied,
+}
+
+/// Connection + reply buffer, reused across requests so the read path
+/// stays allocation-free once the buffer has grown to frame size.
+#[derive(Default)]
+struct ReqInner {
+    stream: Option<TcpStream>,
+    buf: Vec<u8>,
+    lane: LaneState,
+}
+
+/// Blocking request/response client with lazy (re)connect and optional
+/// shared-memory lane negotiation for colocated servers.
 pub struct ReqClient {
     addr: String,
     inner: Mutex<ReqInner>,
+    lane_opts: LaneOpts,
+    /// Requests that completed over the shm lane (vs TCP).
+    pub lane_requests: Arc<Meter>,
     /// Frame bytes received/sent (payload + 4-byte length prefix),
     /// counted once per completed exchange — a retransmitted request
     /// after a connection break counts once, matching what the peer
@@ -164,21 +1359,30 @@ pub struct ReqClient {
     pub bytes_out: Arc<Meter>,
 }
 
-/// Connection + reply buffer, reused across requests so the read path
-/// stays allocation-free once the buffer has grown to frame size.
-#[derive(Default)]
-struct ReqInner {
-    stream: Option<TcpStream>,
-    buf: Vec<u8>,
-}
-
 impl ReqClient {
     pub fn connect(addr: &str) -> ReqClient {
+        Self::connect_opts(addr, LaneOpts::default())
+    }
+
+    /// [`connect`](Self::connect) with lane selection — `Auto` tries a
+    /// shared-memory lane when `addr` is loopback, `On` always tries,
+    /// `Off` never does.  Lane failure at any point falls back to TCP.
+    pub fn connect_opts(addr: &str, lane_opts: LaneOpts) -> ReqClient {
         ReqClient {
             addr: addr.to_string(),
             inner: Mutex::new(ReqInner::default()),
+            lane_opts,
+            lane_requests: Arc::new(Meter::new()),
             bytes_in: Arc::new(Meter::new()),
             bytes_out: Arc::new(Meter::new()),
+        }
+    }
+
+    fn lanes_wanted(&self) -> bool {
+        match self.lane_opts.mode {
+            LaneMode::Off => false,
+            LaneMode::On => true,
+            LaneMode::Auto => is_loopback_addr(&self.addr),
         }
     }
 
@@ -196,6 +1400,7 @@ impl ReqClient {
     pub fn request_n(&self, msg: &Msg, attempts: u32) -> Result<Msg> {
         let payload = msg.to_bytes();
         let tag = payload.first().copied().unwrap_or(0);
+        let lanes_wanted = self.lanes_wanted();
         let mut guard = self.inner.lock().unwrap();
         let mut last_err = None;
         let mut failures = 0u32;
@@ -214,6 +1419,20 @@ impl ReqClient {
                             25 * (attempt + 1).min(10),
                         ));
                         guard = self.inner.lock().unwrap();
+                        continue;
+                    }
+                }
+            }
+            if lanes_wanted && matches!(guard.lane, LaneState::Untried) {
+                let ReqInner { stream, buf, lane } = &mut *guard;
+                match self.negotiate_lane(stream.as_mut().unwrap(), buf) {
+                    Ok(next) => *lane = next,
+                    Err(e) => {
+                        // hello exchange broke the TCP conn: reconnect
+                        // and retry negotiation on the next attempt
+                        *stream = None;
+                        last_err = Some(e);
+                        failures += 1;
                         continue;
                     }
                 }
@@ -244,7 +1463,39 @@ impl ReqClient {
                     continue;
                 }
             }
-            let ReqInner { stream, buf } = &mut *guard;
+            let ReqInner { stream, buf, lane } = &mut *guard;
+            if let LaneState::Active(l) = lane {
+                if payload.len() <= l.tx.max_payload() {
+                    match Self::lane_exchange(l, &payload, buf) {
+                        Ok(()) => match Msg::from_bytes(buf) {
+                            Ok(reply) => {
+                                if failures > 0 {
+                                    fault::on_recovery();
+                                }
+                                self.bytes_out.add(payload.len() as u64 + 4);
+                                self.bytes_in.add(buf.len() as u64 + 4);
+                                self.lane_requests.add(1);
+                                return Ok(reply);
+                            }
+                            Err(e) => {
+                                *lane = LaneState::Denied;
+                                last_err = Some(e);
+                                failures += 1;
+                                continue;
+                            }
+                        },
+                        Err(e) => {
+                            l.tx.set_closed();
+                            l.rx.set_closed();
+                            *lane = LaneState::Denied;
+                            last_err = Some(e);
+                            failures += 1;
+                            continue;
+                        }
+                    }
+                }
+                // frame exceeds the ring: use TCP for this request only
+            }
             let stream = stream.as_mut().unwrap();
             let ok = (|| {
                 write_frame(stream, &payload)?;
@@ -272,169 +1523,90 @@ impl ReqClient {
         Err(last_err.unwrap_or_else(|| anyhow::anyhow!("request failed")))
             .with_context(|| format!("req to {}", self.addr))
     }
-}
 
-/// Request/response server: spawns a handler thread per connection.
-pub struct RepServer {
-    pub addr: String,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    /// Frame bytes received/sent summed over every connection this
-    /// server accepted (payload + 4-byte length prefix).  Registered
-    /// into the owning role's `MetricsHub` so bandwidth rides the
-    /// telemetry plane next to request rates.
-    pub bytes_in: Arc<Meter>,
-    pub bytes_out: Arc<Meter>,
-}
-
-impl RepServer {
-    /// Bind to `addr` ("127.0.0.1:0" for an ephemeral port) and serve
-    /// `handler(msg) -> reply` until `shutdown()`.
-    pub fn serve<F>(addr: &str, handler: F) -> Result<RepServer>
-    where
-        F: Fn(Msg) -> Msg + Send + Sync + 'static,
-    {
-        Self::serve_frames(addr, move |msg| Reply::Msg(handler(msg)))
+    /// Create the ring pair and offer it over TCP.  `Ok(state)` means
+    /// the TCP conn is still healthy (lane active or denied); `Err`
+    /// means the hello exchange itself broke the connection.
+    fn negotiate_lane(
+        &self,
+        stream: &mut TcpStream,
+        buf: &mut Vec<u8>,
+    ) -> Result<LaneState> {
+        let dir = self
+            .lane_opts
+            .dir
+            .clone()
+            .unwrap_or_else(shm::default_dir);
+        let cap = if self.lane_opts.capacity > 0 {
+            self.lane_opts.capacity
+        } else {
+            shm::LANE_CAPACITY
+        };
+        let (lane, base) = match shm::ShmLane::create(&dir, cap) {
+            Ok(x) => x,
+            Err(_) => return Ok(LaneState::Denied), // no shm here: stay on TCP
+        };
+        let hello = Msg::ShmHello { path: base }.to_bytes();
+        write_frame(stream, &hello)?;
+        read_frame(stream, buf)?;
+        let reply = Msg::from_bytes(buf)?;
+        self.bytes_out.add(hello.len() as u64 + 4);
+        self.bytes_in.add(buf.len() as u64 + 4);
+        match reply {
+            Msg::Ok => Ok(LaneState::Active(Box::new(lane))),
+            _ => Ok(LaneState::Denied),
+        }
     }
 
-    /// Like [`RepServer::serve`], but the handler may reply with a
-    /// pre-encoded [`Reply::Framed`] frame (zero encode, zero copy of
-    /// the shared tail) — the ModelPool serve path.
-    pub fn serve_frames<F>(addr: &str, handler: F) -> Result<RepServer>
-    where
-        F: Fn(Msg) -> Reply + Send + Sync + 'static,
-    {
-        let listener = TcpListener::bind(addr)
-            .with_context(|| format!("bind {addr}"))?;
-        let local = listener.local_addr()?.to_string();
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let handler = Arc::new(handler);
-        let bytes_in = Arc::new(Meter::new());
-        let bytes_out = Arc::new(Meter::new());
-        let (bin, bout) = (bytes_in.clone(), bytes_out.clone());
-        let local2 = local.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("rep@{local}"))
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            match fault::check(fault::SITE_ACCEPT, &local2, 0) {
-                                fault::Verdict::Pass => {}
-                                fault::Verdict::Delay(d) => {
-                                    std::thread::sleep(d)
-                                }
-                                // reject/drop at accept: close right away
-                                _ => continue,
-                            }
-                            let h = handler.clone();
-                            let stop3 = stop2.clone();
-                            let (bin, bout) = (bin.clone(), bout.clone());
-                            std::thread::spawn(move || {
-                                Self::conn_loop(stream, h, stop3, bin, bout);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(RepServer { addr: local, stop, handle: Some(handle), bytes_in, bytes_out })
-    }
-
-    fn conn_loop(
-        mut stream: TcpStream,
-        handler: Arc<dyn Fn(Msg) -> Reply + Send + Sync>,
-        stop: Arc<AtomicBool>,
-        bytes_in: Arc<Meter>,
-        bytes_out: Arc<Meter>,
-    ) {
-        stream.set_nodelay(true).ok();
-        stream
-            .set_read_timeout(Some(Duration::from_millis(200)))
-            .ok();
-        let laddr = stream
-            .local_addr()
-            .map(|a| a.to_string())
-            .unwrap_or_default();
-        let mut buf = Vec::new();
-        // reply staging buffer, reused across requests: [len;4][payload]
-        let mut reply_buf: Vec<u8> = Vec::new();
+    /// One request/reply over the rings, with heartbeat-based liveness:
+    /// there is no kernel to notice a dead peer, so staleness of the
+    /// opposite side's beat word is the failure signal.
+    fn lane_exchange(
+        lane: &shm::ShmLane,
+        payload: &[u8],
+        buf: &mut Vec<u8>,
+    ) -> Result<()> {
+        let mut watch = shm::BeatWatch::new(lane.tx.reader_beat());
         loop {
-            if stop.load(Ordering::Relaxed) {
-                return;
+            if lane.tx.is_closed() || lane.rx.is_closed() {
+                bail!("lane closed by peer");
             }
-            match read_frame(&mut stream, &mut buf) {
-                Ok(()) => {}
-                Err(e) => {
-                    // timeouts poll the stop flag; anything else ends the conn
-                    if let Some(io) = e.downcast_ref::<std::io::Error>() {
-                        if matches!(
-                            io.kind(),
-                            std::io::ErrorKind::WouldBlock
-                                | std::io::ErrorKind::TimedOut
-                        ) {
-                            continue;
-                        }
-                    }
-                    return;
-                }
+            if lane.tx.try_write_frame(payload)? {
+                break;
             }
-            bytes_in.add(buf.len() as u64 + 4);
-            let tag = buf.first().copied().unwrap_or(0);
-            match fault::check(fault::SITE_REP, &laddr, tag) {
-                fault::Verdict::Pass => {}
-                fault::Verdict::Delay(d) => std::thread::sleep(d),
-                fault::Verdict::Drop | fault::Verdict::Reject => return,
-                fault::Verdict::Truncate => {
-                    // claim a longer reply than we send, then die — the
-                    // client sees a mid-frame close and retries
-                    let _ = stream.write_all(&64u32.to_le_bytes());
-                    let _ = stream.write_all(&[0u8; 8]);
-                    return;
-                }
+            lane.tx.beat_writer();
+            if watch.stale(lane.tx.reader_beat(), shm::STALE_DEADLINE) {
+                bail!("lane peer stale (no reader progress)");
             }
-            let reply = match Msg::from_bytes(&buf) {
-                Ok(msg) => handler(msg),
-                Err(e) => Reply::Msg(Msg::Err(format!("decode: {e}"))),
-            };
-            let sent = match reply {
-                Reply::Msg(msg) => {
-                    reply_buf.clear();
-                    reply_buf.extend_from_slice(&[0u8; 4]);
-                    msg.encode(&mut reply_buf);
-                    let len = (reply_buf.len() - 4) as u32;
-                    reply_buf[..4].copy_from_slice(&len.to_le_bytes());
-                    bytes_out.add(reply_buf.len() as u64);
-                    // header + payload leave in one buffered write
-                    stream.write_all(&reply_buf).map_err(anyhow::Error::from)
+            std::thread::yield_now();
+        }
+        lane.tx.beat_writer();
+        let mut watch = shm::BeatWatch::new(lane.rx.writer_beat());
+        let mut idle = 0u32;
+        loop {
+            if lane.rx.try_read_frame(buf)? {
+                lane.rx.beat_reader();
+                return Ok(());
+            }
+            lane.rx.beat_reader();
+            if lane.rx.is_closed() {
+                // drain race: the peer may close right after replying
+                if lane.rx.try_read_frame(buf)? {
+                    lane.rx.beat_reader();
+                    return Ok(());
                 }
-                Reply::Framed { head, tail } => {
-                    bytes_out.add(head.len() as u64 + tail.len() as u64 + 4);
-                    write_frame_parts(&mut stream, &[&head, &tail])
-                }
-            };
-            if sent.is_err() {
-                return;
+                bail!("lane closed by peer");
+            }
+            if watch.stale(lane.rx.writer_beat(), shm::STALE_DEADLINE) {
+                bail!("lane peer stale (no writer progress)");
+            }
+            idle += 1;
+            if idle < 64 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(Duration::from_micros(50));
             }
         }
-    }
-
-    pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            h.join().ok();
-        }
-    }
-}
-
-impl Drop for RepServer {
-    fn drop(&mut self) {
-        self.shutdown();
     }
 }
 
@@ -533,166 +1705,6 @@ impl PushClient {
         Self::push_once(&mut guard, &self.addr, &payload, tag)?;
         self.bytes_out.add(payload.len() as u64 + 4);
         Ok(())
-    }
-}
-
-/// One-way streaming receiver (learner side of trajectory PULL); frames
-/// from all connections are funneled into one bounded queue, giving the
-/// blocking-queue backpressure the paper's on-policy mode relies on.
-pub struct PullServer {
-    pub addr: String,
-    rx: std::sync::mpsc::Receiver<Msg>,
-    stop: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
-    /// Undecodable frames dropped, across all connections.  A nonzero
-    /// rate means a peer speaks a different protocol version — silent
-    /// drops here used to be invisible (PoolStats-style observability).
-    pub decode_errors: Arc<Meter>,
-    /// Frame bytes received across all connections (payload + prefix),
-    /// including frames that later fail to decode — the wire carried
-    /// them either way.
-    pub bytes_in: Arc<Meter>,
-}
-
-impl PullServer {
-    pub fn bind(addr: &str, queue_cap: usize) -> Result<PullServer> {
-        let listener = TcpListener::bind(addr)
-            .with_context(|| format!("bind {addr}"))?;
-        let local = listener.local_addr()?.to_string();
-        listener.set_nonblocking(true)?;
-        let (tx, rx) = std::sync::mpsc::sync_channel(queue_cap);
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let decode_errors = Arc::new(Meter::new());
-        let errs = decode_errors.clone();
-        let bytes_in = Arc::new(Meter::new());
-        let bin = bytes_in.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("pull@{local}"))
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let tx = tx.clone();
-                            let stop3 = stop2.clone();
-                            let errs = errs.clone();
-                            let bin = bin.clone();
-                            std::thread::spawn(move || {
-                                Self::conn_loop(stream, tx, stop3, errs, bin);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(PullServer {
-            addr: local,
-            rx,
-            stop,
-            handle: Some(handle),
-            decode_errors,
-            bytes_in,
-        })
-    }
-
-    fn conn_loop(
-        mut stream: TcpStream,
-        tx: std::sync::mpsc::SyncSender<Msg>,
-        stop: Arc<AtomicBool>,
-        decode_errors: Arc<Meter>,
-        bytes_in: Arc<Meter>,
-    ) {
-        stream
-            .set_read_timeout(Some(Duration::from_millis(200)))
-            .ok();
-        let laddr = stream
-            .local_addr()
-            .map(|a| a.to_string())
-            .unwrap_or_default();
-        let mut buf = Vec::new();
-        let mut err_logged = false;
-        loop {
-            if stop.load(Ordering::Relaxed) {
-                return;
-            }
-            match read_frame(&mut stream, &mut buf) {
-                Ok(()) => {
-                    bytes_in.add(buf.len() as u64 + 4);
-                    match fault::check(
-                        fault::SITE_PULL,
-                        &laddr,
-                        buf.first().copied().unwrap_or(0),
-                    ) {
-                        fault::Verdict::Pass => {}
-                        fault::Verdict::Delay(d) => std::thread::sleep(d),
-                        // swallow just this frame
-                        fault::Verdict::Truncate => continue,
-                        fault::Verdict::Drop | fault::Verdict::Reject => return,
-                    }
-                    match Msg::from_bytes(&buf) {
-                        Ok(msg) => {
-                            // blocking send = backpressure to the TCP
-                            // socket, which stalls the pushing actor
-                            // (on-policy mode)
-                            if tx.send(msg).is_err() {
-                                return;
-                            }
-                        }
-                        Err(e) => {
-                            decode_errors.add(1);
-                            if !err_logged {
-                                err_logged = true;
-                                let peer = stream
-                                    .peer_addr()
-                                    .map(|a| a.to_string())
-                                    .unwrap_or_else(|_| "?".into());
-                                eprintln!(
-                                    "pull: dropping undecodable {}-byte frame \
-                                     from {peer}: {e} (counting further drops \
-                                     silently)",
-                                    buf.len()
-                                );
-                            }
-                        }
-                    }
-                }
-                Err(e) => {
-                    if let Some(io) = e.downcast_ref::<std::io::Error>() {
-                        if matches!(
-                            io.kind(),
-                            std::io::ErrorKind::WouldBlock
-                                | std::io::ErrorKind::TimedOut
-                        ) {
-                            continue;
-                        }
-                    }
-                    return;
-                }
-            }
-        }
-    }
-
-    pub fn recv_timeout(&self, d: Duration) -> Option<Msg> {
-        self.rx.recv_timeout(d).ok()
-    }
-    pub fn try_recv(&self) -> Option<Msg> {
-        self.rx.try_recv().ok()
-    }
-
-    pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
-            h.join().ok();
-        }
-    }
-}
-
-impl Drop for PullServer {
-    fn drop(&mut self) {
-        self.shutdown();
     }
 }
 
@@ -904,7 +1916,7 @@ mod tests {
         let rep_frame = Msg::Pong.to_bytes().len() as u64 + 4;
         assert_eq!(client.bytes_out.count(), 5 * req_frame);
         assert_eq!(client.bytes_in.count(), 5 * rep_frame);
-        // conn threads count on their side of the same frames
+        // the event loops count on their side of the same frames
         assert_eq!(server.bytes_in.count(), client.bytes_out.count());
         assert_eq!(server.bytes_out.count(), client.bytes_in.count());
 
@@ -925,10 +1937,8 @@ mod tests {
         let client = ReqClient::connect(&addr);
         assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Ok);
         server.shutdown();
-        // old per-connection threads poll the stop flag every 200ms;
-        // wait for them to drain before the client reconnects.
-        std::thread::sleep(Duration::from_millis(400));
-        // restart on the same port
+        // restart on the same port — shutdown joins the event loops, so
+        // the listener and every conn are already closed here
         let _server2 = RepServer::serve(&addr, |_| Msg::Pong).unwrap();
         assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
     }
@@ -1010,4 +2020,293 @@ mod tests {
         push.try_push(&Msg::Ping).unwrap();
         assert_eq!(pull.recv_timeout(Duration::from_secs(5)), Some(Msg::Ping));
     }
+
+    /// Satellite: the wakeup eventfd makes shutdown effectively
+    /// immediate even with live, idle connections parked on the loops —
+    /// no more 200ms stop-flag polling.
+    #[test]
+    fn shutdown_is_immediate_with_live_conns() {
+        let mut server = RepServer::serve("127.0.0.1:0", |_| Msg::Ok).unwrap();
+        let client = ReqClient::connect(&server.addr);
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Ok);
+        let t0 = Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "rep shutdown took {:?}",
+            t0.elapsed()
+        );
+
+        let mut pull = PullServer::bind("127.0.0.1:0", 16).unwrap();
+        let push = PushClient::connect(&pull.addr);
+        push.push(&Msg::Ping).unwrap();
+        assert_eq!(pull.recv_timeout(Duration::from_secs(5)), Some(Msg::Ping));
+        let t0 = Instant::now();
+        pull.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "pull shutdown took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    /// Satellite: a tiny kernel send buffer forces the event loop
+    /// through its short-write resumption path on a large framed reply;
+    /// every frame must still arrive intact.
+    #[test]
+    fn framed_reply_survives_short_writes() {
+        use crate::proto::{ModelBlob, TAG_MODEL};
+        let blob = ModelBlob {
+            key: ModelKey::new(3, 9),
+            params: (0..200_000).map(|i| (i % 251) as f32 * 0.5).collect(),
+            hp: vec![1e-3],
+            frozen: false,
+        };
+        let expect = blob.params.clone();
+        let tail: Arc<[u8]> = blob.to_bytes().into();
+        let server = RepServer::serve_frames_opts(
+            "127.0.0.1:0",
+            ServerOpts { net_threads: 1, sndbuf: 4096 },
+            move |_| Reply::framed(vec![TAG_MODEL], tail.clone()),
+        )
+        .unwrap();
+        let client = ReqClient::connect(&server.addr);
+        for _ in 0..3 {
+            match client.request(&Msg::Ping).unwrap() {
+                Msg::Model(b) => {
+                    assert_eq!(b.key, ModelKey::new(3, 9));
+                    assert_eq!(b.params, expect);
+                }
+                other => panic!("expected Model, got {other:?}"),
+            }
+        }
+    }
+
+    /// Async handlers reply through a `Responder` from any thread; a
+    /// responder dropped without sending delivers an error instead of
+    /// hanging the client.
+    #[test]
+    fn async_handler_replies_out_of_band() {
+        let server = RepServer::serve_async(
+            "127.0.0.1:0",
+            ServerOpts::default(),
+            |msg, responder| match msg {
+                Msg::Ping => {
+                    std::thread::spawn(move || {
+                        std::thread::sleep(Duration::from_millis(5));
+                        responder.send(Reply::Msg(Msg::Pong));
+                    });
+                }
+                _ => drop(responder),
+            },
+        )
+        .unwrap();
+        let client = ReqClient::connect(&server.addr);
+        for _ in 0..5 {
+            assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        }
+        match client.request(&Msg::Ok).unwrap() {
+            Msg::Err(e) => assert!(e.contains("dropped"), "got: {e}"),
+            other => panic!("expected Err for dropped responder, got {other:?}"),
+        }
+    }
+
+    /// Satellite: SITE_REP faults fire inside the event loop exactly as
+    /// they did in the thread-per-conn core.
+    #[test]
+    fn rep_site_faults_fire_through_event_loop() {
+        let _g = fault::TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let server = RepServer::serve("127.0.0.1:0", |_| Msg::Pong).unwrap();
+        let client = ReqClient::connect(&server.addr);
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        fault::set_role("rep-epoll-test");
+        fault::install(
+            13,
+            fault::parse_spec(&format!("drop:rep/{}@0.5", server.addr)).unwrap(),
+        );
+        let injected0 = fault::injected_meter().count();
+        for _ in 0..20 {
+            assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        }
+        fault::clear();
+        assert!(
+            fault::injected_meter().count() > injected0,
+            "rep-site drops must fire through the epoll core"
+        );
+    }
+
+    /// Satellite: accept-site reject and delay verdicts fire in the
+    /// event loop's acceptor.
+    #[test]
+    fn accept_and_delay_faults_fire_through_event_loop() {
+        let _g = fault::TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let server = RepServer::serve("127.0.0.1:0", |_| Msg::Pong).unwrap();
+        fault::set_role("accept-epoll-test");
+        fault::install(
+            5,
+            fault::parse_spec(&format!("reject:accept/{}@1", server.addr))
+                .unwrap(),
+        );
+        // every accepted conn is closed immediately: a small attempt
+        // budget must fail fast (no backoff on exchange errors)
+        let client = ReqClient::connect(&server.addr);
+        assert!(client.request_n(&Msg::Ping, 4).is_err());
+        fault::clear();
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+
+        fault::install(
+            5,
+            fault::parse_spec(&format!("delay:accept/{}@1+60", server.addr))
+                .unwrap(),
+        );
+        // fresh client = fresh conn through the delayed acceptor
+        let slow = ReqClient::connect(&server.addr);
+        let t0 = Instant::now();
+        assert_eq!(slow.request(&Msg::Ping).unwrap(), Msg::Pong);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(60),
+            "accept delay must apply, took {:?}",
+            t0.elapsed()
+        );
+        fault::clear();
+    }
+
+    /// Satellite: pull-site truncate swallows frames inside the event
+    /// loop (bytes counted, nothing delivered), and clears cleanly.
+    #[test]
+    fn pull_site_truncate_swallows_frames_through_event_loop() {
+        let _g = fault::TEST_MUTEX.lock().unwrap_or_else(|e| e.into_inner());
+        let pull = PullServer::bind("127.0.0.1:0", 16).unwrap();
+        let push = PushClient::connect(&pull.addr);
+        fault::set_role("pull-epoll-test");
+        fault::install(
+            3,
+            fault::parse_spec(&format!("truncate:pull/{}@1", pull.addr)).unwrap(),
+        );
+        push.push(&Msg::Ping).unwrap();
+        push.push(&Msg::Ping).unwrap();
+        let frame = Msg::Ping.to_bytes().len() as u64 + 4;
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pull.bytes_in.count() < 2 * frame && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(pull.bytes_in.count(), 2 * frame, "frames must be read");
+        assert_eq!(
+            pull.recv_timeout(Duration::from_millis(100)),
+            None,
+            "truncated frames must be swallowed"
+        );
+        fault::clear();
+        push.push(&Msg::Ping).unwrap();
+        assert_eq!(pull.recv_timeout(Duration::from_secs(5)), Some(Msg::Ping));
+    }
+
+    /// Tentpole: a colocated client negotiates a shared-memory lane and
+    /// serves the hot path through it — TCP only carries the hello.
+    #[test]
+    fn req_rep_over_local_lane() {
+        let server = RepServer::serve("127.0.0.1:0", |msg| match msg {
+            Msg::Ping => Msg::Pong,
+            other => Msg::Err(format!("unexpected {other:?}")),
+        })
+        .unwrap();
+        let client = ReqClient::connect_opts(
+            &server.addr,
+            LaneOpts { mode: LaneMode::On, dir: None, capacity: 0 },
+        );
+        for _ in 0..20 {
+            assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        }
+        assert_eq!(
+            client.lane_requests.count(),
+            20,
+            "all requests must ride the lane"
+        );
+    }
+
+    /// Framed (zero-copy) replies are bit-compatible across the lane:
+    /// the client decodes the same Model it would get over TCP.
+    #[test]
+    fn framed_reply_over_local_lane() {
+        use crate::proto::{ModelBlob, TAG_MODEL};
+        let blob = ModelBlob {
+            key: ModelKey::new(4, 2),
+            params: vec![0.5, 1.5, -2.0],
+            hp: vec![1e-4],
+            frozen: true,
+        };
+        let tail: Arc<[u8]> = blob.to_bytes().into();
+        let server = RepServer::serve_frames("127.0.0.1:0", move |_| {
+            Reply::framed(vec![TAG_MODEL], tail.clone())
+        })
+        .unwrap();
+        let client = ReqClient::connect_opts(
+            &server.addr,
+            LaneOpts { mode: LaneMode::On, dir: None, capacity: 0 },
+        );
+        match client.request(&Msg::Ping).unwrap() {
+            Msg::Model(b) => {
+                assert_eq!(b.key, ModelKey::new(4, 2));
+                assert_eq!(b.params, vec![0.5, 1.5, -2.0]);
+            }
+            other => panic!("expected Model, got {other:?}"),
+        }
+        assert_eq!(client.lane_requests.count(), 1);
+    }
+
+    /// A frame bigger than the ring falls back to TCP for that request
+    /// only; the lane stays active for everything that fits.
+    #[test]
+    fn lane_falls_back_for_oversized_frames() {
+        let server = RepServer::serve("127.0.0.1:0", |_| Msg::Ok).unwrap();
+        let client = ReqClient::connect_opts(
+            &server.addr,
+            LaneOpts { mode: LaneMode::On, dir: None, capacity: 4096 },
+        );
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Ok);
+        let big = Msg::Traj(TrajSegment {
+            model_key: ModelKey::new(1, 1),
+            t: 1,
+            n_agents: 1,
+            obs: vec![0.5; 5000], // ~20 KB payload >> 4 KB ring
+            actions: vec![0],
+            behavior_logp: vec![-1.0],
+            rewards: vec![0.0],
+            discounts: vec![0.99],
+            trace: None,
+        });
+        assert_eq!(client.request(&big).unwrap(), Msg::Ok);
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Ok);
+        assert_eq!(
+            client.lane_requests.count(),
+            2,
+            "small frames ride the lane; the oversized one used TCP"
+        );
+    }
+
+    /// One-side-crash detection: when the server goes away its rings
+    /// are closed, the client detects it and permanently falls back to
+    /// TCP against the restarted server.
+    #[test]
+    fn lane_peer_crash_falls_back_to_tcp() {
+        let mut server = RepServer::serve("127.0.0.1:0", |_| Msg::Pong).unwrap();
+        let addr = server.addr.clone();
+        let client = ReqClient::connect_opts(
+            &addr,
+            LaneOpts { mode: LaneMode::On, dir: None, capacity: 0 },
+        );
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Pong);
+        assert_eq!(client.lane_requests.count(), 1);
+        server.shutdown();
+        let _server2 = RepServer::serve(&addr, |_| Msg::Ok).unwrap();
+        assert_eq!(client.request(&Msg::Ping).unwrap(), Msg::Ok);
+        assert_eq!(
+            client.lane_requests.count(),
+            1,
+            "post-crash requests must ride TCP"
+        );
+    }
 }
+
+
+

@@ -1,0 +1,294 @@
+//! Readiness polling via direct `epoll` FFI — the same no-dependency
+//! style as `util::signal`: hand-declared `extern "C"` bindings instead
+//! of a libc crate.  One `Poller` per event-loop thread; a `WakeFd`
+//! (eventfd) per loop lets other threads interrupt `wait()` immediately
+//! for shutdown or cross-thread reply injection.
+
+use anyhow::{bail, Result};
+
+pub const EPOLLIN: u32 = 0x1;
+pub const EPOLLOUT: u32 = 0x4;
+pub const EPOLLERR: u32 = 0x8;
+pub const EPOLLHUP: u32 = 0x10;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+const EFD_NONBLOCK: i32 = 0o4000;
+const SOL_SOCKET: i32 = 1;
+const SO_SNDBUF: i32 = 7;
+const SO_RCVBUF: i32 = 8;
+const RLIMIT_NOFILE: i32 = 7;
+
+/// Kernel `struct epoll_event`.  Packed on x86_64 (the kernel ABI packs
+/// it there); natural layout elsewhere.  Fields of the packed variant
+/// must be copied out by value, never borrowed.
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub data: u64,
+}
+
+#[repr(C)]
+struct Rlimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(
+        epfd: i32,
+        events: *mut EpollEvent,
+        maxevents: i32,
+        timeout_ms: i32,
+    ) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn close(fd: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn setsockopt(
+        fd: i32,
+        level: i32,
+        optname: i32,
+        optval: *const u8,
+        optlen: u32,
+    ) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+}
+
+fn os_err(what: &str) -> anyhow::Error {
+    anyhow::anyhow!("{what}: {}", std::io::Error::last_os_error())
+}
+
+/// One epoll instance.  Tokens are caller-chosen u64s carried in the
+/// kernel event payload; `wait` hands back `(token, readiness)` pairs.
+pub struct Poller {
+    epfd: i32,
+}
+
+impl Poller {
+    pub fn new() -> Result<Poller> {
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(os_err("epoll_create1"));
+        }
+        Ok(Poller { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: i32, token: u64, interest: u32) -> Result<()> {
+        let mut ev = EpollEvent { events: interest, data: token };
+        let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(os_err("epoll_ctl"));
+        }
+        Ok(())
+    }
+
+    pub fn add(&self, fd: i32, token: u64, interest: u32) -> Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+    }
+
+    pub fn modify(&self, fd: i32, token: u64, interest: u32) -> Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+    }
+
+    pub fn del(&self, fd: i32) -> Result<()> {
+        // the event argument is ignored for DEL but must be non-null on
+        // pre-2.6.9 kernels; pass a zeroed one unconditionally
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Wait up to `timeout_ms` (-1 = forever), appending `(token,
+    /// readiness)` pairs to `out` (cleared first).  EINTR surfaces as an
+    /// empty wake so callers re-check their stop conditions.
+    pub fn wait(&self, out: &mut Vec<(u64, u32)>, timeout_ms: i32) -> Result<()> {
+        out.clear();
+        let mut evs = [EpollEvent { events: 0, data: 0 }; 128];
+        let n = unsafe {
+            epoll_wait(self.epfd, evs.as_mut_ptr(), evs.len() as i32, timeout_ms)
+        };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            bail!("epoll_wait: {e}");
+        }
+        for ev in evs.iter().take(n as usize) {
+            let ev = *ev; // copy out of the (possibly packed) array slot
+            out.push((ev.data, ev.events));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+/// Nonblocking eventfd used to interrupt a `Poller::wait` from another
+/// thread: register `raw()` under a reserved token, `wake()` from
+/// anywhere, `drain()` on the loop thread when the token fires.
+pub struct WakeFd {
+    fd: i32,
+}
+
+impl WakeFd {
+    pub fn new() -> Result<WakeFd> {
+        let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+        if fd < 0 {
+            return Err(os_err("eventfd"));
+        }
+        Ok(WakeFd { fd })
+    }
+
+    pub fn raw(&self) -> i32 {
+        self.fd
+    }
+
+    /// Signal the owning loop.  Failure modes (counter saturated ⇒
+    /// EAGAIN) still leave the fd readable, so errors are ignored.
+    pub fn wake(&self) {
+        let one = 1u64.to_ne_bytes();
+        unsafe {
+            let _ = write(self.fd, one.as_ptr(), one.len());
+        }
+    }
+
+    /// Reset the counter so the fd stops polling readable.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        unsafe {
+            let _ = read(self.fd, buf.as_mut_ptr(), buf.len());
+        }
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+unsafe impl Send for WakeFd {}
+unsafe impl Sync for WakeFd {}
+
+fn set_buf_opt(fd: i32, opt: i32, bytes: usize) -> Result<()> {
+    let val = bytes as i32;
+    let rc = unsafe {
+        setsockopt(
+            fd,
+            SOL_SOCKET,
+            opt,
+            (&val as *const i32).cast::<u8>(),
+            std::mem::size_of::<i32>() as u32,
+        )
+    };
+    if rc < 0 {
+        return Err(os_err("setsockopt"));
+    }
+    Ok(())
+}
+
+/// Shrink/grow a socket's kernel send buffer — the short-write test hook
+/// (a tiny SO_SNDBUF forces partial vectored writes on the reply path).
+pub fn set_sndbuf(fd: i32, bytes: usize) -> Result<()> {
+    set_buf_opt(fd, SO_SNDBUF, bytes)
+}
+
+/// Companion receive-buffer knob, used with `set_sndbuf` in tests to
+/// bound in-flight bytes from both ends.
+pub fn set_rcvbuf(fd: i32, bytes: usize) -> Result<()> {
+    set_buf_opt(fd, SO_RCVBUF, bytes)
+}
+
+/// Soft RLIMIT_NOFILE — the fd budget a fan-in bench must respect (the
+/// 4096-connection row is skipped when this is too low).
+pub fn nofile_limit() -> u64 {
+    let mut r = Rlimit { rlim_cur: 0, rlim_max: 0 };
+    let rc = unsafe { getrlimit(RLIMIT_NOFILE, &mut r) };
+    if rc < 0 {
+        return 0;
+    }
+    r.rlim_cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn wakefd_interrupts_wait() {
+        let poller = Poller::new().unwrap();
+        let wake = std::sync::Arc::new(WakeFd::new().unwrap());
+        poller.add(wake.raw(), 7, EPOLLIN).unwrap();
+        let w2 = wake.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            w2.wake();
+        });
+        let mut evs = Vec::new();
+        let t0 = std::time::Instant::now();
+        poller.wait(&mut evs, 5_000).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].0, 7);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+        wake.drain();
+        // drained: a zero-timeout wait sees nothing
+        poller.wait(&mut evs, 0).unwrap();
+        assert!(evs.is_empty());
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn poller_reports_socket_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut conn, _) = listener.accept().unwrap();
+        conn.set_nonblocking(true).unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(conn.as_raw_fd(), 42, EPOLLIN).unwrap();
+        let mut evs = Vec::new();
+        poller.wait(&mut evs, 0).unwrap();
+        assert!(evs.is_empty(), "no data yet");
+        client.write_all(b"hi").unwrap();
+        poller.wait(&mut evs, 2_000).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].0, 42);
+        assert!(evs[0].1 & EPOLLIN != 0);
+        let mut buf = [0u8; 2];
+        conn.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hi");
+        poller.del(conn.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn nofile_limit_is_sane() {
+        let n = nofile_limit();
+        assert!(n >= 64, "soft fd limit implausibly low: {n}");
+    }
+}

@@ -1,0 +1,478 @@
+//! Shared-memory local lanes: an mmap-backed SPSC byte ring per
+//! direction, carrying the exact frames the TCP transport carries
+//! (`[u32 len][Wire payload]`), so a colocated actor↔inf-server pair can
+//! exchange multi-row `InferReq`/`InferResp` without touching the
+//! kernel, while staying bit-compatible with the TCP lane.
+//!
+//! Ring file layout (little-endian, 64-byte header, data after):
+//!   @0  magic        u64  — format guard
+//!   @8  capacity     u64  — data bytes, power of two
+//!   @16 head         u64  — free-running write cursor (producer owns)
+//!   @24 tail         u64  — free-running read cursor (consumer owns)
+//!   @32 writer_beat  u64  — producer liveness counter
+//!   @40 reader_beat  u64  — consumer liveness counter
+//!   @48 closed       u32  — either side sets on orderly teardown
+//!   @64 data[capacity]
+//!
+//! Records are byte-granular: `[u32 len][len bytes]` written modulo the
+//! capacity mask, wrapping mid-record when needed.  `head`/`tail` are
+//! free-running (never wrapped), so `head - tail` is the used byte
+//! count; Release stores on the cursor publish the copied bytes to the
+//! Acquire load on the other side.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+const RING_MAGIC: u64 = 0x544c_475f_5348_4d31; // "TLG_SHM1"
+const HDR: usize = 64;
+const OFF_CAP: usize = 8;
+const OFF_HEAD: usize = 16;
+const OFF_TAIL: usize = 24;
+const OFF_WBEAT: usize = 32;
+const OFF_RBEAT: usize = 40;
+const OFF_CLOSED: usize = 48;
+
+/// Per-direction ring capacity for negotiated lanes.  Frames that do
+/// not fit (minus the 4-byte record header) fall back to TCP per-op.
+pub const LANE_CAPACITY: usize = 4 << 20;
+
+/// How long a peer's heartbeat word may sit still — while we are
+/// actively blocked on its progress — before the lane is declared dead.
+pub const STALE_DEADLINE: Duration = Duration::from_secs(5);
+
+#[cfg(unix)]
+extern "C" {
+    fn mmap(
+        addr: *mut u8,
+        len: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut u8;
+    fn munmap(addr: *mut u8, len: usize) -> i32;
+}
+
+const PROT_READ: i32 = 1;
+const PROT_WRITE: i32 = 2;
+const MAP_SHARED: i32 = 1;
+
+/// One direction of a lane.  Exactly one producer and one consumer
+/// process/thread; both sides map the same file.
+pub struct ShmRing {
+    base: *mut u8,
+    map_len: usize,
+    cap: u64,
+    mask: u64,
+    /// Set on the creating side: the file is unlinked when that side
+    /// drops the ring (the attached side keeps its mapping alive).
+    unlink: Option<PathBuf>,
+}
+
+// The raw pointer is to a MAP_SHARED region; all cross-thread access
+// goes through the atomic header words and the Release/Acquire cursor
+// protocol above.
+unsafe impl Send for ShmRing {}
+unsafe impl Sync for ShmRing {}
+
+impl ShmRing {
+    fn map(path: &Path, len: usize) -> Result<*mut u8> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open ring {}", path.display()))?;
+        let base = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if base as isize == -1 || base.is_null() {
+            bail!(
+                "mmap {} ({len} bytes): {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(base)
+    }
+
+    /// Create + size + map a fresh ring file.  `capacity` is rounded up
+    /// to a power of two.
+    pub fn create(path: &Path, capacity: usize) -> Result<ShmRing> {
+        let cap = capacity.max(4096).next_power_of_two();
+        let map_len = HDR + cap;
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("create ring {}", path.display()))?;
+        file.set_len(map_len as u64)
+            .with_context(|| format!("size ring {}", path.display()))?;
+        drop(file);
+        let base = Self::map(path, map_len)?;
+        let ring = ShmRing {
+            base,
+            map_len,
+            cap: cap as u64,
+            mask: cap as u64 - 1,
+            unlink: Some(path.to_path_buf()),
+        };
+        ring.at_u64(OFF_CAP).store(cap as u64, Ordering::Relaxed);
+        // magic last, Release: an attacher that sees it sees the header
+        ring.at_u64(0).store(RING_MAGIC, Ordering::Release);
+        Ok(ring)
+    }
+
+    /// Map a ring created by the peer.
+    pub fn attach(path: &Path) -> Result<ShmRing> {
+        let meta = std::fs::metadata(path)
+            .with_context(|| format!("stat ring {}", path.display()))?;
+        let map_len = meta.len() as usize;
+        if map_len <= HDR {
+            bail!("ring {} too small ({map_len} bytes)", path.display());
+        }
+        let base = Self::map(path, map_len)?;
+        let ring = ShmRing {
+            base,
+            map_len,
+            cap: 0,
+            mask: 0,
+            unlink: None,
+        };
+        if ring.at_u64(0).load(Ordering::Acquire) != RING_MAGIC {
+            bail!("ring {}: bad magic", path.display());
+        }
+        let cap = ring.at_u64(OFF_CAP).load(Ordering::Relaxed);
+        if !cap.is_power_of_two() || map_len != HDR + cap as usize {
+            bail!("ring {}: corrupt capacity {cap}", path.display());
+        }
+        let mut ring = ring;
+        ring.cap = cap;
+        ring.mask = cap - 1;
+        Ok(ring)
+    }
+
+    fn at_u64(&self, off: usize) -> &AtomicU64 {
+        unsafe { &*(self.base.add(off) as *const AtomicU64) }
+    }
+
+    fn at_u32(&self, off: usize) -> &AtomicU32 {
+        unsafe { &*(self.base.add(off) as *const AtomicU32) }
+    }
+
+    fn data(&self) -> *mut u8 {
+        unsafe { self.base.add(HDR) }
+    }
+
+    /// Copy `src` into the ring at free-running offset `at`, wrapping.
+    fn copy_in(&self, at: u64, src: &[u8]) {
+        let off = (at & self.mask) as usize;
+        let first = src.len().min(self.cap as usize - off);
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.data().add(off), first);
+            if first < src.len() {
+                std::ptr::copy_nonoverlapping(
+                    src.as_ptr().add(first),
+                    self.data(),
+                    src.len() - first,
+                );
+            }
+        }
+    }
+
+    /// Copy out of the ring at free-running offset `at`, wrapping.
+    fn copy_out(&self, at: u64, dst: &mut [u8]) {
+        let off = (at & self.mask) as usize;
+        let first = dst.len().min(self.cap as usize - off);
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.data().add(off), dst.as_mut_ptr(), first);
+            if first < dst.len() {
+                std::ptr::copy_nonoverlapping(
+                    self.data(),
+                    dst.as_mut_ptr().add(first),
+                    dst.len() - first,
+                );
+            }
+        }
+    }
+
+    /// Max payload a single record can carry in this ring.
+    pub fn max_payload(&self) -> usize {
+        self.cap as usize - 4
+    }
+
+    /// Try to append one `[len][payload]` record.  `Ok(false)` = ring
+    /// full (writer-faster-than-reader backpressure); `Err` only when
+    /// the payload can never fit.
+    pub fn try_write_frame(&self, payload: &[u8]) -> Result<bool> {
+        self.try_write_frame_parts(&[payload])
+    }
+
+    /// [`try_write_frame`](Self::try_write_frame) from scattered parts
+    /// (a `Reply::Framed` head + shared tail) without a staging concat.
+    pub fn try_write_frame_parts(&self, parts: &[&[u8]]) -> Result<bool> {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let rec = total as u64 + 4;
+        if rec > self.cap {
+            bail!("frame of {total} bytes exceeds ring capacity {}", self.cap);
+        }
+        let head = self.at_u64(OFF_HEAD).load(Ordering::Relaxed);
+        let tail = self.at_u64(OFF_TAIL).load(Ordering::Acquire);
+        if self.cap - (head - tail) < rec {
+            return Ok(false);
+        }
+        self.copy_in(head, &(total as u32).to_le_bytes());
+        let mut at = head + 4;
+        for p in parts {
+            self.copy_in(at, p);
+            at += p.len() as u64;
+        }
+        self.at_u64(OFF_HEAD).store(head + rec, Ordering::Release);
+        Ok(true)
+    }
+
+    /// Try to pop one record into `buf`.  `Ok(false)` = ring empty.
+    pub fn try_read_frame(&self, buf: &mut Vec<u8>) -> Result<bool> {
+        let tail = self.at_u64(OFF_TAIL).load(Ordering::Relaxed);
+        let head = self.at_u64(OFF_HEAD).load(Ordering::Acquire);
+        if head == tail {
+            return Ok(false);
+        }
+        let avail = head - tail;
+        if avail < 4 {
+            bail!("ring corrupt: {avail} bytes available, need a 4-byte header");
+        }
+        let mut len_bytes = [0u8; 4];
+        self.copy_out(tail, &mut len_bytes);
+        let len = u32::from_le_bytes(len_bytes) as u64;
+        if len + 4 > avail || len + 4 > self.cap {
+            bail!("ring corrupt: record claims {len} bytes, {avail} available");
+        }
+        buf.resize(len as usize, 0);
+        self.copy_out(tail + 4, buf);
+        self.at_u64(OFF_TAIL).store(tail + 4 + len, Ordering::Release);
+        Ok(true)
+    }
+
+    pub fn beat_writer(&self) {
+        self.at_u64(OFF_WBEAT).fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn beat_reader(&self) {
+        self.at_u64(OFF_RBEAT).fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn writer_beat(&self) -> u64 {
+        self.at_u64(OFF_WBEAT).load(Ordering::Relaxed)
+    }
+    pub fn reader_beat(&self) -> u64 {
+        self.at_u64(OFF_RBEAT).load(Ordering::Relaxed)
+    }
+
+    pub fn set_closed(&self) {
+        self.at_u32(OFF_CLOSED).store(1, Ordering::Release);
+    }
+    pub fn is_closed(&self) -> bool {
+        self.at_u32(OFF_CLOSED).load(Ordering::Acquire) != 0
+    }
+}
+
+impl Drop for ShmRing {
+    fn drop(&mut self) {
+        unsafe {
+            munmap(self.base, self.map_len);
+        }
+        if let Some(p) = self.unlink.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Crash detection: a heartbeat word is stale when it has not advanced
+/// for longer than `timeout` while we were actively watching it.  Only
+/// consulted while blocked on peer progress — an idle-but-alive peer is
+/// never declared dead, because nobody is watching it.
+pub struct BeatWatch {
+    last: u64,
+    since: Instant,
+}
+
+impl BeatWatch {
+    pub fn new(initial: u64) -> BeatWatch {
+        BeatWatch { last: initial, since: Instant::now() }
+    }
+
+    /// Feed the current beat value; true once it has sat unchanged past
+    /// `timeout`.
+    pub fn stale(&mut self, beat: u64, timeout: Duration) -> bool {
+        if beat != self.last {
+            self.last = beat;
+            self.since = Instant::now();
+            return false;
+        }
+        self.since.elapsed() > timeout
+    }
+}
+
+/// A bidirectional lane: `tx` is the ring this side writes, `rx` the
+/// ring it reads.  The client creates both files (`<base>.c2s`,
+/// `<base>.s2c`) and sends the base path in `Msg::ShmHello`; the server
+/// attaches with the directions swapped.
+pub struct ShmLane {
+    pub tx: ShmRing,
+    pub rx: ShmRing,
+}
+
+static LANE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Directory lane files go in: `/dev/shm` when present (Linux tmpfs —
+/// the whole point is staying off the disk), else the OS temp dir.
+pub fn default_dir() -> PathBuf {
+    let shm = PathBuf::from("/dev/shm");
+    if shm.is_dir() {
+        shm
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+impl ShmLane {
+    /// Client side: create both rings, return the lane and the base
+    /// path to send in the hello.
+    pub fn create(dir: &Path, capacity: usize) -> Result<(ShmLane, String)> {
+        let n = LANE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let base = dir.join(format!("tleague-lane-{}-{n}", std::process::id()));
+        let base_str = base
+            .to_str()
+            .with_context(|| format!("non-utf8 lane path {}", base.display()))?
+            .to_string();
+        let tx = ShmRing::create(&base.with_extension("c2s"), capacity)?;
+        let rx = ShmRing::create(&base.with_extension("s2c"), capacity)?;
+        Ok((ShmLane { tx, rx }, base_str))
+    }
+
+    /// Server side: attach to a client-created lane (directions swap).
+    pub fn attach(base: &str) -> Result<ShmLane> {
+        let base = PathBuf::from(base);
+        let tx = ShmRing::attach(&base.with_extension("s2c"))?;
+        let rx = ShmRing::attach(&base.with_extension("c2s"))?;
+        Ok(ShmLane { tx, rx })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(cap: usize) -> ShmRing {
+        let n = LANE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("tleague-ringtest-{}-{n}", std::process::id()));
+        ShmRing::create(&path, cap).unwrap()
+    }
+
+    /// Frames survive many laps of the cursor, including records that
+    /// straddle the wrap point, byte-for-byte.
+    #[test]
+    fn wraparound_preserves_frames() {
+        let r = ring(4096); // real capacity: 4096
+        let mut buf = Vec::new();
+        let mut seq = 0u32;
+        // total traffic ≫ capacity with coprime-ish sizes forces many
+        // wrap-straddling records
+        for round in 0..200 {
+            let size = 1 + (round * 37) % 977;
+            let payload: Vec<u8> =
+                (0..size).map(|i| ((seq as usize + i) % 251) as u8).collect();
+            assert!(r.try_write_frame(&payload).unwrap(), "round {round}");
+            assert!(r.try_read_frame(&mut buf).unwrap());
+            assert_eq!(buf, payload, "round {round}");
+            seq = seq.wrapping_add(1);
+        }
+    }
+
+    /// Writer-faster-than-reader: the ring refuses writes when full and
+    /// accepts again after a drain, never overwriting unread data.
+    #[test]
+    fn full_ring_applies_backpressure() {
+        let r = ring(4096);
+        let payload = [7u8; 1000]; // 1004-byte records
+        let mut accepted = 0;
+        while r.try_write_frame(&payload).unwrap() {
+            accepted += 1;
+            assert!(accepted < 100, "ring never reported full");
+        }
+        assert_eq!(accepted, 4); // 4 × 1004 ≤ 4096 < 5 × 1004
+        let mut buf = Vec::new();
+        assert!(r.try_read_frame(&mut buf).unwrap());
+        assert_eq!(buf, payload);
+        assert!(r.try_write_frame(&payload).unwrap(), "drain frees space");
+        // unread frames are intact after the backpressure episode
+        for _ in 0..4 {
+            assert!(r.try_read_frame(&mut buf).unwrap());
+            assert_eq!(buf, payload);
+        }
+        assert!(!r.try_read_frame(&mut buf).unwrap());
+    }
+
+    /// One-side-crash detection: a beat that keeps advancing is never
+    /// stale; a frozen beat is, once the deadline passes.
+    #[test]
+    fn stale_heartbeat_detected() {
+        let r = ring(4096);
+        let timeout = Duration::from_millis(40);
+        let mut watch = BeatWatch::new(r.writer_beat());
+        for _ in 0..5 {
+            r.beat_writer();
+            assert!(!watch.stale(r.writer_beat(), timeout));
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        // peer "crashes": beat stops advancing
+        let t0 = Instant::now();
+        let mut stale = false;
+        while t0.elapsed() < Duration::from_secs(2) {
+            if watch.stale(r.writer_beat(), timeout) {
+                stale = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(stale, "frozen heartbeat never went stale");
+    }
+
+    /// A payload that can never fit errors instead of blocking forever;
+    /// the closed flag crosses the mapping.
+    #[test]
+    fn oversize_rejected_and_close_flag_crosses() {
+        let r = ring(4096);
+        assert!(r.try_write_frame(&[0u8; 8192]).is_err());
+        assert!(!r.is_closed());
+        r.set_closed();
+        assert!(r.is_closed());
+    }
+
+    /// Lane plumbing: attach sees create's rings with directions
+    /// swapped, and frames cross between the two mappings.
+    #[test]
+    fn lane_create_attach_roundtrip() {
+        let (client, base) =
+            ShmLane::create(&std::env::temp_dir(), 4096).unwrap();
+        let server = ShmLane::attach(&base).unwrap();
+        let mut buf = Vec::new();
+        assert!(client.tx.try_write_frame(b"request").unwrap());
+        assert!(server.rx.try_read_frame(&mut buf).unwrap());
+        assert_eq!(buf, b"request");
+        assert!(server.tx.try_write_frame(b"reply").unwrap());
+        assert!(client.rx.try_read_frame(&mut buf).unwrap());
+        assert_eq!(buf, b"reply");
+    }
+}

@@ -79,6 +79,17 @@ subcommands:
                              microseconds (default 2000)
     --infer-refresh-ms M     InfServer in-training param cache TTL in
                              milliseconds (default 50)
+    --local-lanes <mode>     shared-memory lanes for actor->InfServer
+                             requests when both ends share a host:
+                             auto (lane when the address is loopback),
+                             on (always negotiate), off (TCP only).
+                             Lanes carry the same frames as TCP and
+                             fall back to TCP on any failure
+                             (default auto)
+    --shm-dir <path>         directory for lane ring files (default
+                             /dev/shm, else the system temp dir)
+    --net-threads N          event-loop threads per transport server
+                             (default 0 = auto from the core count)
    fault-injection / chaos knobs:
     --faults <spec>          deterministic fault plan injected inside the
                              transport, comma-separated rules of the form

@@ -231,6 +231,7 @@ fn full_stack_infserver_actor() {
             batch: m.infer_b,
             max_wait: Duration::from_millis(2),
             refresh: Duration::from_millis(20),
+            net_threads: 0,
         },
         engine.clone(),
         &pool_addrs,

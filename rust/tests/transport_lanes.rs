@@ -1,0 +1,116 @@
+//! Lane/TCP equivalence: the shared-memory lane must be invisible to the
+//! protocol.  The same seeded request sequence is driven through a pure
+//! TCP client and a lane client against one server; every reply must be
+//! bit-identical.  No engine artifacts needed — the handler is a
+//! deterministic function of the request.
+
+use tleague::proto::{ModelKey, Msg};
+use tleague::transport::{LaneMode, LaneOpts, RepServer, ReqClient};
+use tleague::util::codec::Wire;
+
+fn xorshift(s: &mut u64) -> u64 {
+    *s ^= *s << 13;
+    *s ^= *s >> 7;
+    *s ^= *s << 17;
+    *s
+}
+
+/// A pure function of the request — same inputs, same reply bytes,
+/// whichever transport carried them.
+fn serve_deterministic(bind: &str) -> RepServer {
+    RepServer::serve_frames(bind, |msg| match msg {
+        Msg::InferReq { key, obs, rows, .. } => {
+            let logits: Vec<f32> =
+                obs.iter().map(|x| x * 2.0 + key.version as f32).collect();
+            let value: Vec<f32> =
+                (0..rows).map(|r| obs[r as usize] - key.agent as f32).collect();
+            Msg::InferResp { logits, value }.into()
+        }
+        Msg::Ping => Msg::Pong.into(),
+        other => Msg::Err(format!("unexpected {other:?}")).into(),
+    })
+    .unwrap()
+}
+
+/// One seeded actor tick: mostly multi-row InferReqs, a heartbeat Ping
+/// every 7th tick.
+fn tick_request(s: &mut u64, tick: u32) -> Msg {
+    if tick % 7 == 6 {
+        return Msg::Ping;
+    }
+    let rows = 1 + (xorshift(s) % 4) as u32;
+    let obs: Vec<f32> = (0..rows as usize * 8)
+        .map(|_| (xorshift(s) % 1000) as f32 * 0.01 - 5.0)
+        .collect();
+    let key = ModelKey::new((xorshift(s) % 3) as u32, (xorshift(s) % 50) as u32);
+    Msg::InferReq { key, obs, rows, trace: None }
+}
+
+#[test]
+fn seeded_ticks_bit_identical_over_tcp_and_lane() {
+    let server = serve_deterministic("127.0.0.1:0");
+    let tcp = ReqClient::connect(&server.addr);
+    let lane = ReqClient::connect_opts(
+        &server.addr,
+        LaneOpts { mode: LaneMode::On, dir: None, capacity: 0 },
+    );
+    let (mut s1, mut s2) = (0x9e3779b9u64, 0x9e3779b9u64);
+    let mut infer_ticks = 0u64;
+    for tick in 0..50u32 {
+        let req_tcp = tick_request(&mut s1, tick);
+        let req_lane = tick_request(&mut s2, tick);
+        // both clients see the identical seeded request...
+        assert_eq!(req_tcp.to_bytes(), req_lane.to_bytes(), "tick {tick}");
+        if matches!(req_tcp, Msg::InferReq { .. }) {
+            infer_ticks += 1;
+        }
+        let r_tcp = tcp.request(&req_tcp).unwrap();
+        let r_lane = lane.request(&req_lane).unwrap();
+        // ...and must get the identical reply bytes back
+        assert_eq!(
+            r_tcp.to_bytes(),
+            r_lane.to_bytes(),
+            "tick {tick}: lane reply diverged from TCP"
+        );
+        assert!(!matches!(r_tcp, Msg::Err(_)), "tick {tick}: {r_tcp:?}");
+    }
+    assert!(infer_ticks > 0);
+    assert_eq!(
+        lane.lane_requests.count(),
+        50,
+        "every request of the lane client must ride the ring"
+    );
+    assert_eq!(tcp.lane_requests.count(), 0, "TCP client must never use a lane");
+}
+
+/// Both client flavors hammer one server concurrently: the epoll core
+/// serves the TCP conn while the lane thread serves the ring, with no
+/// cross-talk between the two paths.
+#[test]
+fn lane_and_tcp_clients_share_one_server() {
+    let server = serve_deterministic("127.0.0.1:0");
+    let addr = server.addr.clone();
+    let addr2 = addr.clone();
+    let t_tcp = std::thread::spawn(move || {
+        let c = ReqClient::connect(&addr);
+        let mut s = 7u64;
+        for tick in 0..25 {
+            let req = tick_request(&mut s, tick);
+            assert!(!matches!(c.request(&req).unwrap(), Msg::Err(_)));
+        }
+    });
+    let t_lane = std::thread::spawn(move || {
+        let c = ReqClient::connect_opts(
+            &addr2,
+            LaneOpts { mode: LaneMode::On, dir: None, capacity: 0 },
+        );
+        let mut s = 7u64;
+        for tick in 0..25 {
+            let req = tick_request(&mut s, tick);
+            assert!(!matches!(c.request(&req).unwrap(), Msg::Err(_)));
+        }
+        assert_eq!(c.lane_requests.count(), 25);
+    });
+    t_tcp.join().unwrap();
+    t_lane.join().unwrap();
+}
