@@ -62,6 +62,13 @@ cargo bench --bench bench_main -- faults --json BENCH_pr7.json
 echo "== bench smoke: cargo bench --bench bench_main -- transport_scale"
 cargo bench --bench bench_main -- transport_scale --json BENCH_pr8.json
 
+# Elastic-league bench: consistent-hash ring owner lookup, the bytes a
+# replica-bounce rebalance pushes through the rev protocol, and the
+# autoscaler's per-tick policy evaluation at 64 slots per role
+# (see BENCH_pr9.json).
+echo "== bench smoke: cargo bench --bench bench_main -- elastic"
+cargo bench --bench bench_main -- elastic --json BENCH_pr9.json
+
 # Lane/TCP equivalence: same seeded request sequence over both paths
 # must be bit-identical (also inside `cargo test` above, rerun by name).
 echo "== lane equivalence: cargo test --test transport_lanes"
@@ -130,6 +137,43 @@ EOF
     rm -f "$TJ"
 else
     echo "(artifacts or python3 missing; skipping trace smoke)"
+fi
+
+# Autoscale smoke: a procs-mode league with ONE inf server and
+# vectorized actors whose 32-row requests keep every forward pass full
+# (batch_fill ~1.0 > the 0.8 grow threshold) — the closed-loop
+# controller must grow inf slots, the supervisor must spawn workers
+# into them, and the decisions must land in the JSONL telemetry as
+# role "autoscaler" counters.
+if [[ -f artifacts/manifest.json ]] && command -v python3 >/dev/null; then
+    echo "== autoscale smoke: run --mode procs --autoscale (starved inf server)"
+    ASPEC="$(mktemp -t tleague-autoscale-spec-XXXXXX.json)"
+    AJ="$(mktemp -t tleague-autoscale-XXXXXX.jsonl)"
+    cat > "$ASPEC" <<'EOF'
+{
+  "env": "rps", "mode": "procs", "seed": 7,
+  "total_steps": 16, "period_steps": 4,
+  "actors_per_learner": 2, "envs_per_actor": 32, "inf_servers": 1,
+  "autoscale": true, "scale_every_secs": 1,
+  "heartbeat_ms": 100, "heartbeat_timeout_ms": 1000,
+  "stats_every_secs": 1
+}
+EOF
+    ./target/release/tleague run --config "$ASPEC" --stats-jsonl "$AJ" \
+        | tee /dev/stderr | grep -q "done:"
+    python3 - "$AJ" <<'EOF'
+import json, sys
+rows = [json.loads(l) for l in open(sys.argv[1]) if l.strip()]
+assert rows, "autoscale jsonl is empty"
+ups = max(r["roles"].get("autoscaler", {}).get("totals", {}).get("scale_up_inf", 0)
+          for r in rows)
+assert ups > 0, "autoscaler never grew inf slots; roles seen: %r" % (
+    sorted(rows[-1]["roles"]))
+print("autoscale smoke OK: %d inf slot grow decision(s) in telemetry" % ups)
+EOF
+    rm -f "$ASPEC" "$AJ"
+else
+    echo "(artifacts or python3 missing; skipping autoscale smoke)"
 fi
 
 # Chaos smoke: the one-command drill — a procs-mode league under a

@@ -26,6 +26,10 @@
 //!   transport_scale — fan-in echo/heartbeat at 64/512/4096 conns on one
 //!                 event-loop pool (fd-limit aware), multi-row infer
 //!                 request over loopback TCP vs a shared-memory lane
+//!   elastic     — sharded-pool + autoscaler hot paths: consistent-hash
+//!                 ring owner lookup, replica-bounce rebalance transfer
+//!                 (bytes moved through the rev protocol), scaling-loop
+//!                 decision latency at 64 slots
 //!
 //! Filter with `cargo bench -- <substring> [<substring> ...]` (a bench
 //! runs if it matches ANY given substring); add `--json <path>` to also
@@ -1251,6 +1255,105 @@ fn main() {
             "  (shm row rode the lane for {} requests)",
             lane.lane_requests.count()
         );
+    }
+
+    // ---- elastic -----------------------------------------------------------
+    // The sharded-pool hot paths: every client read/write resolves
+    // owners on the consistent-hash ring; failover cost is the bytes a
+    // rebalance pushes through the rev protocol; the autoscaler burns
+    // one policy evaluation per tick.
+    println!("\n# elastic (shard ring lookup, rebalance transfer, scaling policy)");
+    {
+        use tleague::model_pool::shard::{self, MapHolder, Ring};
+        use tleague::model_pool::{rebalance, PoolOptions};
+        use tleague::orchestrator::controller::{policy_decide, ScaleBounds};
+        use tleague::proto::ShardMap;
+
+        // owner lookup on an 8-replica R=2 ring (the per-request cost a
+        // cached client pays instead of a network round-trip)
+        let addrs: Vec<String> = (0..8).map(|i| format!("10.0.0.{i}:9001")).collect();
+        let ring = Ring::build(&shard::bootstrap_map(&addrs, 2));
+        b.bench("elastic/shard_lookup_r8", "lookup", move || {
+            let mut acc = 0u64;
+            for agent in 0..4096u32 {
+                acc += ring.owners(agent)[0] as u64;
+            }
+            assert!(acc > 0, "degenerate ring");
+            4096
+        });
+
+        // replica bounce: tombstone replica 2 out of a 3-replica R=2
+        // deployment, rebalance survivors, then re-admit it and
+        // rebalance back.  Each direction moves real blob bytes (the
+        // eviction on exit voids the rev-protocol cache), so the
+        // steady-state bytes/iter is the failover transfer cost.
+        let holder = Arc::new(MapHolder::new(shard::bootstrap_map(
+            &(0..3).map(|i| format!("pending-{i}")).collect::<Vec<_>>(),
+            2,
+        )));
+        let pools: Vec<_> = (0..3)
+            .map(|i| {
+                ModelPoolServer::start_sharded(
+                    "127.0.0.1:0",
+                    PoolOptions::default(),
+                    holder.clone(),
+                    i as u32,
+                )
+                .unwrap()
+            })
+            .collect();
+        holder.set_addrs(pools.iter().map(|p| p.addr.clone()).collect());
+        let (_, ring) = holder.get();
+        for agent in 0..64u32 {
+            for ver in 1..=4u32 {
+                let blob = ModelBlob {
+                    key: ModelKey::new(agent, ver),
+                    params: vec![0.5; 1024],
+                    hp: vec![],
+                    frozen: true,
+                };
+                for (i, p) in pools.iter().enumerate() {
+                    if ring.is_owner(agent, i as u32) {
+                        p.preload(std::slice::from_ref(&blob));
+                    }
+                }
+            }
+        }
+        let full_addrs: Vec<String> = pools.iter().map(|p| p.addr.clone()).collect();
+        let h2 = holder.clone();
+        let bounced_pools = pools;
+        b.bench("elastic/rebalance_bounce_r3", "B", move || {
+            let (old_map, _) = h2.get();
+            let down = shard::without_replica(&old_map, 2);
+            h2.install(down.clone());
+            let live = [true, true, true];
+            let out = rebalance(&bounced_pools, &live, &old_map, &down);
+            let up = ShardMap {
+                version: down.version + 1,
+                replicas: full_addrs.clone(),
+                replication: 2,
+            };
+            h2.install(up.clone());
+            let back = rebalance(&bounced_pools, &live, &down, &up);
+            let moved = out.bytes_moved + back.bytes_moved;
+            assert!(moved > 0, "bounce moved nothing");
+            moved
+        });
+
+        // one closed-loop policy evaluation with 64 live slots per role
+        let bounds = ScaleBounds { min: 1, max: 256 };
+        b.bench("elastic/policy_decide_64slots", "decision", move || {
+            let mut moves = 0u64;
+            for i in 0..10_000u64 {
+                let staleness = Some((i % 5) as f64);
+                let fill = Some((i % 10) as f64 / 10.0);
+                let (da, di) =
+                    policy_decide(staleness, fill, 64, 64, bounds, bounds);
+                moves += da.unsigned_abs() + di.unsigned_abs();
+            }
+            assert!(moves > 0, "policy never moved");
+            10_000
+        });
     }
 
     println!("\n{} benches run", b.rows.len());

@@ -118,6 +118,19 @@ impl Wire for LeagueSnapshot {
     }
 }
 
+/// Merge per-shard blob dumps into one deduplicated, sorted model list —
+/// the snapshotter's aggregation step for sharded pools, where no single
+/// replica holds everything.  Replicated copies of a key are identical
+/// by construction (owner-only writes + anti-entropy), so the first one
+/// seen wins; keys are deduplicated by `(agent, version)` and the result
+/// is sorted so snapshot bytes stay deterministic across shard layouts.
+pub fn merge_shard_models(shards: Vec<Vec<ModelBlob>>) -> Vec<ModelBlob> {
+    let mut all: Vec<ModelBlob> = shards.into_iter().flatten().collect();
+    all.sort_by_key(|b| b.key);
+    all.dedup_by(|a, b| a.key == b.key);
+    all
+}
+
 /// Numbered snapshots in one directory: `snap-00000042.tlc`.  Writes go
 /// to a dotfile first and are atomically renamed into place, so readers
 /// (and a crash mid-write) never observe a torn snapshot; after each save
@@ -316,6 +329,40 @@ mod tests {
             );
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_shard_models_dedupes_and_sorts() {
+        let blob = |agent, version, val: f32| ModelBlob {
+            key: ModelKey::new(agent, version),
+            params: vec![val; 4],
+            hp: vec![3e-4],
+            frozen: false,
+        };
+        // R=2 layout: every blob appears on two of three shards, in
+        // arbitrary per-shard order
+        let merged = merge_shard_models(vec![
+            vec![blob(1, 2, 12.0), blob(0, 1, 1.0)],
+            vec![blob(0, 2, 2.0), blob(1, 2, 12.0)],
+            vec![blob(0, 1, 1.0), blob(0, 2, 2.0)],
+        ]);
+        let keys: Vec<ModelKey> = merged.iter().map(|b| b.key).collect();
+        assert_eq!(
+            keys,
+            vec![
+                ModelKey::new(0, 1),
+                ModelKey::new(0, 2),
+                ModelKey::new(1, 2)
+            ]
+        );
+        assert_eq!(merged[2].params, vec![12.0; 4]);
+        // shard-layout independence: a different grouping yields the
+        // same bytes
+        let other = merge_shard_models(vec![
+            vec![blob(0, 1, 1.0), blob(0, 2, 2.0), blob(1, 2, 12.0)],
+            vec![],
+        ]);
+        assert_eq!(merged, other);
     }
 
     #[test]

@@ -100,6 +100,23 @@ pub struct RunConfig {
     pub shm_dir: Option<String>,
     /// event-loop threads per transport server (0 = auto: min(2, cores))
     pub net_threads: usize,
+    /// ModelPool replication factor R: each agent's models live on R of
+    /// the `model_pools` replicas (consistent-hash sharding).  Clamped
+    /// to the replica count at deploy time, so the single-replica
+    /// default behaves exactly like the unsharded seed.
+    pub pool_replication: usize,
+    /// closed-loop autoscaling of actor / inf-server slots (procs mode
+    /// only): the controller's policy loop reads league telemetry and
+    /// grows or drains slots between the min/max bounds below
+    pub autoscale: bool,
+    /// seconds between autoscaler policy evaluations
+    pub scale_every_secs: u64,
+    /// slot bounds for the autoscaler; 0 = derive (min 1, max 4x the
+    /// configured count)
+    pub min_actor_slots: usize,
+    pub max_actor_slots: usize,
+    pub min_inf_slots: usize,
+    pub max_inf_slots: usize,
 }
 
 impl Default for RunConfig {
@@ -145,6 +162,13 @@ impl Default for RunConfig {
             local_lanes: "auto".into(),
             shm_dir: None,
             net_threads: 0,
+            pool_replication: 2,
+            autoscale: false,
+            scale_every_secs: 5,
+            min_actor_slots: 0,
+            max_actor_slots: 0,
+            min_inf_slots: 0,
+            max_inf_slots: 0,
         }
     }
 }
@@ -247,6 +271,21 @@ impl RunConfig {
             cfg.shm_dir = Some(s.to_string());
         }
         cfg.net_threads = get_num(&j, "net_threads", cfg.net_threads as f64) as usize;
+        cfg.pool_replication =
+            get_num(&j, "pool_replication", cfg.pool_replication as f64) as usize;
+        if let Some(b) = j.get("autoscale").and_then(|v| v.as_bool()) {
+            cfg.autoscale = b;
+        }
+        cfg.scale_every_secs =
+            get_num(&j, "scale_every_secs", cfg.scale_every_secs as f64) as u64;
+        cfg.min_actor_slots =
+            get_num(&j, "min_actor_slots", cfg.min_actor_slots as f64) as usize;
+        cfg.max_actor_slots =
+            get_num(&j, "max_actor_slots", cfg.max_actor_slots as f64) as usize;
+        cfg.min_inf_slots =
+            get_num(&j, "min_inf_slots", cfg.min_inf_slots as f64) as usize;
+        cfg.max_inf_slots =
+            get_num(&j, "max_inf_slots", cfg.max_inf_slots as f64) as usize;
         if let Some(obj) = j.get("hp").and_then(|v| v.as_obj()) {
             for (k, v) in obj {
                 cfg.hp_overrides
@@ -314,6 +353,23 @@ impl RunConfig {
             matches!(self.local_lanes.as_str(), "auto" | "on" | "off"),
             "local_lanes must be auto|on|off"
         );
+        anyhow::ensure!(self.pool_replication >= 1, "pool_replication >= 1");
+        anyhow::ensure!(self.scale_every_secs >= 1, "scale_every_secs >= 1");
+        // the policy loop drives the controller's worker pool; thread
+        // mode has no worker pool to grow into
+        anyhow::ensure!(
+            !self.autoscale || self.mode == "procs",
+            "autoscale requires mode=procs (thread mode has no worker pool)"
+        );
+        anyhow::ensure!(
+            self.max_actor_slots == 0
+                || self.min_actor_slots <= self.max_actor_slots,
+            "min_actor_slots must be <= max_actor_slots"
+        );
+        anyhow::ensure!(
+            self.max_inf_slots == 0 || self.min_inf_slots <= self.max_inf_slots,
+            "min_inf_slots must be <= max_inf_slots"
+        );
         // a misspelled fault spec must fail the launch, not silently
         // run the drill with zero injection
         if let Some(spec) = &self.faults {
@@ -380,7 +436,15 @@ impl RunConfig {
             local_lanes: self.local_lanes.clone(),
             shm_dir: self.shm_dir.clone().unwrap_or_default(),
             net_threads: self.net_threads as u32,
+            pool_replication: self.effective_replication() as u32,
         }
+    }
+
+    /// Replication factor after clamping to the replica count — what
+    /// every process (deployment and workers alike) must install before
+    /// building pool clients, so all rings agree.
+    pub fn effective_replication(&self) -> usize {
+        self.pool_replication.max(1).min(self.model_pools.max(1))
     }
 
     /// Opponents per episode implied by the env if not set explicitly.
@@ -646,6 +710,42 @@ mod tests {
         assert!(d.slice().shm_dir.is_empty());
         // a lane-policy typo must fail the launch, not silently mean off
         assert!(RunConfig::from_json(r#"{"local_lanes": "yes"}"#).is_err());
+    }
+
+    #[test]
+    fn elasticity_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_json(
+            r#"{
+            "env": "rps", "mode": "procs", "model_pools": 3,
+            "pool_replication": 2, "autoscale": true, "scale_every_secs": 2,
+            "min_actor_slots": 1, "max_actor_slots": 8,
+            "min_inf_slots": 1, "max_inf_slots": 4
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.pool_replication, 2);
+        assert!(cfg.autoscale);
+        assert_eq!(cfg.scale_every_secs, 2);
+        assert_eq!((cfg.min_actor_slots, cfg.max_actor_slots), (1, 8));
+        assert_eq!((cfg.min_inf_slots, cfg.max_inf_slots), (1, 4));
+        assert_eq!(cfg.effective_replication(), 2);
+        // the slice carries the clamped R so workers build the same ring
+        assert_eq!(cfg.slice().pool_replication, 2);
+        let d = RunConfig::default();
+        assert_eq!(d.pool_replication, 2);
+        assert!(!d.autoscale);
+        assert_eq!(d.scale_every_secs, 5);
+        // single replica clamps R to 1 — the unsharded seed behaviour
+        assert_eq!(d.effective_replication(), 1);
+        assert!(RunConfig::from_json(r#"{"pool_replication": 0}"#).is_err());
+        assert!(RunConfig::from_json(r#"{"scale_every_secs": 0}"#).is_err());
+        // autoscale needs a worker pool to grow into
+        assert!(RunConfig::from_json(r#"{"autoscale": true}"#).is_err());
+        assert!(RunConfig::from_json(
+            r#"{"mode": "procs", "autoscale": true,
+                "min_actor_slots": 5, "max_actor_slots": 2}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -190,6 +190,18 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     }
     cfg.trace_sample = args.f64_or("trace-sample", cfg.trace_sample)?;
     cfg.trace_slow_ms = args.u64_or("trace-slow-ms", cfg.trace_slow_ms)?;
+    // elasticity / pool-sharding knobs: flags override the config file
+    cfg.model_pools = args.usize_or("model-pools", cfg.model_pools)?;
+    cfg.pool_replication =
+        args.usize_or("pool-replication", cfg.pool_replication)?;
+    if args.bool("autoscale") {
+        cfg.autoscale = true;
+    }
+    cfg.scale_every_secs = args.u64_or("scale-every", cfg.scale_every_secs)?;
+    cfg.min_actor_slots = args.usize_or("min-actor-slots", cfg.min_actor_slots)?;
+    cfg.max_actor_slots = args.usize_or("max-actor-slots", cfg.max_actor_slots)?;
+    cfg.min_inf_slots = args.usize_or("min-inf-slots", cfg.min_inf_slots)?;
+    cfg.max_inf_slots = args.usize_or("max-inf-slots", cfg.max_inf_slots)?;
     // fault-injection / chaos knobs: flags override the config file
     cfg.fault_seed = args.u64_or("fault-seed", cfg.fault_seed)?;
     if let Some(s) = args.get("faults") {
@@ -359,6 +371,43 @@ fn final_stats_row(ctrl: &Controller, jsonl: &mut Option<JsonlSink>) {
     }
 }
 
+/// Autoscale follow-through for the one-command procs runner: when the
+/// controller has grown the slot table past the live worker count of a
+/// role, spawn workers for the new slots (the controller admits them as
+/// late joiners).  Scale-downs need no action here — the drained
+/// worker finishes its episode and exits 0 on its own.
+fn fill_grown_slots(
+    ctrl: &Controller,
+    children: &mut Vec<(&'static str, Child)>,
+    exe: &Path,
+    artifacts: &str,
+) -> Result<()> {
+    if !ctrl.cfg.autoscale {
+        return Ok(());
+    }
+    let (mut actors, mut infs) = (0usize, 0usize);
+    for (role, child) in children.iter_mut() {
+        if matches!(child.try_wait(), Ok(None)) {
+            match *role {
+                "actor" => actors += 1,
+                "inf-server" => infs += 1,
+                _ => {}
+            }
+        }
+    }
+    let ds = ctrl.deploy_stats();
+    for _ in actors..ds.actor_slots as usize {
+        println!("autoscale: spawning actor worker for grown slot");
+        children.push(("actor", spawn_worker(exe, "actor", &ctrl.addr, artifacts)?));
+    }
+    for _ in infs..ds.inf_slots as usize {
+        println!("autoscale: spawning inf-server worker for grown slot");
+        children
+            .push(("inf-server", spawn_worker(exe, "inf-server", &ctrl.addr, artifacts)?));
+    }
+    Ok(())
+}
+
 /// `--chaos` supervision: the plain monitor loop plus a deterministic
 /// kill schedule.  Worker kills ride the existing respawn + slot
 /// reassignment path; `kill:pool` retires one in-process replica so
@@ -372,7 +421,7 @@ fn chaos_supervise(
     restart_cfg: &RunConfig,
     hp_layout: &[String],
     hp_default: &[f32],
-    children: &mut [(&'static str, Child)],
+    children: &mut Vec<(&'static str, Child)>,
     events: &[tleague::orchestrator::chaos::ChaosEvent],
     exe: &Path,
     artifacts: &str,
@@ -415,9 +464,15 @@ fn chaos_supervise(
                     println!("chaos[{}ms]: controller back on {}", ev.at_ms, ctrl.addr);
                 }
                 "pool" => match ctrl.chaos_kill_pool() {
-                    Some(addr) => println!(
-                        "chaos[{}ms]: model-pool replica {addr} down",
-                        ev.at_ms
+                    Some((addr, moved, bit_exact)) => println!(
+                        "chaos[{}ms]: model-pool replica {addr} down; rebalanced \
+                         {} blobs / {} bytes across {} agents ({} already in place), \
+                         bit-exact={bit_exact}",
+                        ev.at_ms,
+                        moved.blobs_moved,
+                        moved.bytes_moved,
+                        moved.agents,
+                        moved.blobs_skipped
                     ),
                     None => {
                         println!("chaos[{}ms]: no pool replica to spare", ev.at_ms)
@@ -452,6 +507,10 @@ fn chaos_supervise(
                 if ctrl.learners_done() || sig.load(Ordering::Relaxed) {
                     break;
                 }
+                if ctrl.cfg.autoscale && status.success() {
+                    // a clean mid-run exit is a drained slot, not a death
+                    continue;
+                }
                 anyhow::ensure!(
                     *respawns < respawn_cap,
                     "{role} worker keeps dying ({respawns} respawns); aborting"
@@ -461,6 +520,7 @@ fn chaos_supervise(
                 *respawns += 1;
             }
         }
+        fill_grown_slots(ctrl, children, exe, artifacts)?;
         if Instant::now() >= next_stats {
             next_stats += stats_every;
             let ds = ctrl.deploy_stats();
@@ -549,6 +609,10 @@ fn cmd_run_procs(cfg: RunConfig, args: &Args) -> Result<()> {
                     if ctrl.learners_done() || sig.load(Ordering::Relaxed) {
                         break;
                     }
+                    if ctrl.cfg.autoscale && status.success() {
+                        // a clean mid-run exit is a drained slot
+                        continue;
+                    }
                     anyhow::ensure!(
                         respawns < respawn_cap,
                         "{role} worker keeps dying ({respawns} respawns); aborting"
@@ -558,6 +622,7 @@ fn cmd_run_procs(cfg: RunConfig, args: &Args) -> Result<()> {
                     respawns += 1;
                 }
             }
+            fill_grown_slots(&ctrl, &mut children, &exe, &artifacts)?;
             Ok(())
         })
     } else {
@@ -614,6 +679,14 @@ fn cmd_run_procs(cfg: RunConfig, args: &Args) -> Result<()> {
 /// `run --mode procs` but workers are started by the operator (other
 /// boxes, a compose file — see examples/procs_league.yaml).
 fn cmd_controller(args: &Args) -> Result<()> {
+    // the controller subcommand IS procs mode; default the flag before
+    // validation so e.g. --autoscale (procs-only) passes without the
+    // operator spelling --mode procs (an explicit --mode still wins)
+    let mut args = args.clone();
+    args.flags
+        .entry("mode".into())
+        .or_insert_with(|| "procs".into());
+    let args = &args;
     let mut cfg = build_run_config(args)?;
     cfg.mode = "procs".into();
     // --bind wins; otherwise keep --controller-bind / the config file's
@@ -686,10 +759,16 @@ fn cmd_stats(args: &Args) -> Result<()> {
             other => anyhow::bail!("DeployStats: unexpected reply {other:?}"),
         }
     }
+    // per-replica shard map + storage counters (aggregated PoolStats
+    // would hide which replica holds what — the shard view shows both)
+    let shards = match c.request(&Msg::PoolShardQuery)? {
+        Msg::PoolShardReply(infos) => infos,
+        other => anyhow::bail!("PoolShardQuery: unexpected reply {other:?}"),
+    };
     match c.request(&Msg::StatsQuery)? {
         Msg::StatsReply(r) => {
             if args.bool("json") {
-                println!("{}", telemetry::report_json(&r));
+                println!("{}", pool_json(telemetry::report_json(&r), &shards));
                 return Ok(());
             }
             println!("league: {}", telemetry::summary_line(&r));
@@ -710,10 +789,83 @@ fn cmd_stats(args: &Args) -> Result<()> {
                     }
                 );
             }
+            print_pool_section(&shards);
             Ok(())
         }
         other => anyhow::bail!("StatsQuery: unexpected reply {other:?}"),
     }
+}
+
+/// Human-readable pool section for `stats`: one line per live replica
+/// with its shard ownership and storage counters, plus the aggregate.
+fn print_pool_section(shards: &[tleague::proto::PoolShardInfo]) {
+    if shards.is_empty() {
+        return;
+    }
+    let ver = shards.iter().map(|s| s.map_version).max().unwrap_or(0);
+    println!("  pool[{}] shard map v{ver}:", shards.len());
+    let hit_pct = |hits: u64, reads: u64| {
+        if reads == 0 { 0.0 } else { 100.0 * hits as f64 / reads as f64 }
+    };
+    for s in shards {
+        println!(
+            "    replica {} @ {}: agents={:?} models={} resident={}B \
+             spilled={} reads={} frame-hit={:.0}%",
+            s.replica,
+            s.addr,
+            s.owned_agents,
+            s.models,
+            s.resident_bytes,
+            s.spilled,
+            s.reads,
+            hit_pct(s.frame_hits, s.reads)
+        );
+    }
+    let (models, resident, spilled, reads, hits) = shards.iter().fold(
+        (0u64, 0u64, 0u64, 0u64, 0u64),
+        |(m, b, sp, rd, fh), s| {
+            (
+                m + s.models as u64,
+                b + s.resident_bytes,
+                sp + s.spilled as u64,
+                rd + s.reads,
+                fh + s.frame_hits,
+            )
+        },
+    );
+    println!(
+        "    total: models={models} resident={resident}B spilled={spilled} \
+         reads={reads} frame-hit={:.0}%",
+        hit_pct(hits, reads)
+    );
+}
+
+/// Splice the pool shard view into the `stats --json` payload as a
+/// `pool` array alongside the telemetry `roles` object.
+fn pool_json(
+    report: tleague::util::json::Json,
+    shards: &[tleague::proto::PoolShardInfo],
+) -> tleague::util::json::Json {
+    use tleague::util::json::Json;
+    let arr: Vec<Json> = shards
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .set("replica", s.replica as usize)
+                .set("addr", s.addr.as_str())
+                .set(
+                    "owned_agents",
+                    s.owned_agents.iter().map(|a| *a as usize).collect::<Vec<_>>(),
+                )
+                .set("models", s.models as usize)
+                .set("resident_bytes", s.resident_bytes as f64)
+                .set("spilled", s.spilled as usize)
+                .set("reads", s.reads as f64)
+                .set("frame_hits", s.frame_hits as f64)
+                .set("map_version", s.map_version as f64)
+        })
+        .collect();
+    report.set("pool", arr)
 }
 
 /// Drain the flight recorder of a running league (`tleague trace

@@ -13,8 +13,21 @@
 //! back in on `GetModel`.  Spill files use the `ModelBlob` wire encoding
 //! and are written temp-then-rename, so a crash never leaves a torn
 //! blob (see DESIGN.md §Spill policy).
+//!
+//! Deployments with several replicas run **sharded** (see [`shard`]):
+//! each agent's models live on R owners of a consistent-hash ring
+//! instead of every replica holding everything.  Writes go only to the
+//! owners; a non-owner replies `WrongShard` carrying the current map so
+//! clients self-correct without a coordinator round-trip; reads are
+//! served whenever the data is present (availability during membership
+//! transitions).  [`rebalance`] is the anti-entropy pass run on
+//! membership change — it reuses the `GetModelIfNewer` rev protocol so
+//! only blobs that actually changed hands move.
 
-use crate::proto::{ModelBlob, ModelKey, Msg, TraceCtx, TAG_MODEL, TAG_MODEL_REV};
+use crate::proto::{
+    ModelBlob, ModelKey, Msg, PoolShardInfo, ShardMap, TraceCtx, TAG_MODEL,
+    TAG_MODEL_REV,
+};
 use crate::telemetry::trace;
 use crate::transport::{fault, RepServer, Reply, ReqClient};
 use crate::util::codec::{Enc, Wire};
@@ -25,6 +38,10 @@ use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub mod shard;
+pub use shard::{default_replication, set_default_replication, MapHolder};
 
 /// Memory policy for one replica.  The default (no dir, budget 0) keeps
 /// everything resident forever — the seed behaviour.
@@ -97,6 +114,11 @@ struct Store {
     tick: u64,
     resident: usize,
     opts: PoolOptions,
+    /// anti-entropy bookkeeping: agent → (source replica slot, source
+    /// rev) of the last rebalance transfer.  Lets the next rebalance
+    /// from the same source ask `GetModelIfNewer` with a comparable rev
+    /// and get an O(1) `NotModified` when nothing changed hands.
+    origin: BTreeMap<u32, (u32, u64)>,
 }
 
 impl Store {
@@ -249,6 +271,48 @@ impl Store {
     fn spilled_count(&self) -> usize {
         self.on_disk.keys().filter(|&k| !self.blobs.contains_key(k)).count()
     }
+
+    /// Distinct agents with at least one model here (resident or
+    /// spilled).  `latest` covers them all: every insert path updates it.
+    fn agents(&self) -> Vec<u32> {
+        self.latest.keys().copied().collect()
+    }
+
+    /// Every key stored for `agent` (resident or spilled), no payloads.
+    fn keys_for(&self, agent: u32) -> Vec<ModelKey> {
+        let mut keys: Vec<ModelKey> = self
+            .blobs
+            .keys()
+            .chain(self.on_disk.keys())
+            .filter(|k| k.agent == agent)
+            .copied()
+            .collect();
+        keys.sort_unstable();
+        keys.dedup();
+        keys
+    }
+
+    /// Drop every trace of `agent` — the GC step after a rebalance moved
+    /// its ownership elsewhere.  Reclaims memory AND flips subsequent
+    /// reads for the agent to the `WrongShard` redirect (data absent).
+    fn evict_agent(&mut self, agent: u32) {
+        let keys: Vec<ModelKey> = self.keys_for(agent);
+        for key in keys {
+            if let Some(b) = self.blobs.remove(&key) {
+                self.resident -= blob_cost(&b);
+            }
+            if let Some(f) = self.frames.remove(&key) {
+                self.resident -= f.len();
+            }
+            if let Some(path) = self.on_disk.remove(&key) {
+                std::fs::remove_file(path).ok();
+            }
+            self.revs.remove(&key);
+            self.last_used.remove(&key);
+        }
+        self.latest.remove(&agent);
+        self.origin.remove(&agent);
+    }
 }
 
 /// Which blob a read request resolves to.
@@ -348,6 +412,26 @@ fn model_reply(
     }
 }
 
+/// The sharding hook of one replica: the deployment-shared (map, ring)
+/// holder plus this replica's slot index.
+type ShardRole = Option<(Arc<MapHolder>, u32)>;
+
+/// The availability rule of the sharded pool: a replica SERVES any read
+/// it can answer (even mid-rebalance, even after losing ownership), and
+/// only redirects when the data is absent AND the ring says someone
+/// else owns it — then the reply piggybacks the current map so the
+/// client self-corrects.  Absent data on the rightful owner stays a
+/// plain `NotFound` (the model genuinely does not exist yet).
+fn redirect_if_absent(reply: Reply, agent: u32, sh: &ShardRole) -> Reply {
+    if let (Reply::Msg(Msg::NotFound), Some((holder, slot))) = (&reply, sh) {
+        let (map, ring) = holder.get();
+        if !ring.is_owner(agent, *slot) {
+            return Reply::Msg(Msg::WrongShard((*map).clone()));
+        }
+    }
+    reply
+}
+
 /// One ModelPool replica: a REQ/REP service over the spill-aware store.
 pub struct ModelPoolServer {
     pub addr: String,
@@ -357,6 +441,9 @@ pub struct ModelPoolServer {
     /// `not_modified` / `puts` (hit rate = frame_hits/reads, if-newer
     /// hit rate = not_modified/reads over an interval)
     hub: Arc<MetricsHub>,
+    /// sharded deployments: shared (map, ring) + this replica's slot.
+    /// None = standalone own-everything replica (the seed behaviour).
+    shard: ShardRole,
     _server: RepServer,
 }
 
@@ -366,6 +453,26 @@ impl ModelPoolServer {
     }
 
     pub fn start_with(bind: &str, opts: PoolOptions) -> Result<ModelPoolServer> {
+        Self::start_inner(bind, opts, None)
+    }
+
+    /// One replica of a sharded deployment: `slot` is its index in
+    /// `holder`'s map; writes for agents the ring assigns elsewhere are
+    /// bounced with `WrongShard` + the current map.
+    pub fn start_sharded(
+        bind: &str,
+        opts: PoolOptions,
+        holder: Arc<MapHolder>,
+        slot: u32,
+    ) -> Result<ModelPoolServer> {
+        Self::start_inner(bind, opts, Some((holder, slot)))
+    }
+
+    fn start_inner(
+        bind: &str,
+        opts: PoolOptions,
+        shard: ShardRole,
+    ) -> Result<ModelPoolServer> {
         let store = Arc::new(Mutex::new(Store { opts, ..Store::default() }));
         let stop_flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let hub = Arc::new(MetricsHub::default());
@@ -377,8 +484,17 @@ impl ModelPoolServer {
         let puts = hub.meter("puts");
         let s2 = store.clone();
         let sf = stop_flag.clone();
+        let sh = shard.clone();
         let server = RepServer::serve_frames(bind, move |msg| match msg {
             Msg::PutModel(blob) => {
+                // writes are owner-only: the replication factor is a
+                // real bound, not "R copies plus whoever got written"
+                if let Some((holder, slot)) = &sh {
+                    let (map, ring) = holder.get();
+                    if !ring.is_owner(blob.key.agent, *slot) {
+                        return Reply::Msg(Msg::WrongShard((*map).clone()));
+                    }
+                }
                 s2.lock().unwrap().insert(blob);
                 puts.add(1);
                 Reply::Msg(Msg::Ok)
@@ -386,6 +502,7 @@ impl ModelPoolServer {
             Msg::GetModel { key, trace } => {
                 let t0 = std::time::Instant::now();
                 let reply = model_reply(&s2, Sel::Exact(key), None, &meters);
+                let reply = redirect_if_absent(reply, key.agent, &sh);
                 if let Some(c) = trace {
                     trace::finish_span(
                         c, c.span_id, "pool_get", "model-pool", t0, 0,
@@ -393,9 +510,11 @@ impl ModelPoolServer {
                 }
                 reply
             }
-            Msg::GetLatest { agent } => {
-                model_reply(&s2, Sel::Latest(agent), None, &meters)
-            }
+            Msg::GetLatest { agent } => redirect_if_absent(
+                model_reply(&s2, Sel::Latest(agent), None, &meters),
+                agent,
+                &sh,
+            ),
             Msg::GetModelIfNewer { agent, have_version, have_rev, trace } => {
                 let t0 = std::time::Instant::now();
                 let reply = model_reply(
@@ -404,6 +523,7 @@ impl ModelPoolServer {
                     Some((have_version, have_rev)),
                     &meters,
                 );
+                let reply = redirect_if_absent(reply, agent, &sh);
                 if let Some(c) = trace {
                     trace::finish_span(
                         c, c.span_id, "pool_get", "model-pool", t0, 0,
@@ -411,12 +531,22 @@ impl ModelPoolServer {
                 }
                 reply
             }
+            Msg::GetShardMap => match &sh {
+                Some((holder, _)) => {
+                    Reply::Msg(Msg::ShardMapMsg((*holder.get().0).clone()))
+                }
+                None => Reply::Msg(Msg::Err(
+                    "model_pool: replica is not sharded".into(),
+                )),
+            },
             Msg::PoolStats => {
                 let st = s2.lock().unwrap();
                 Reply::Msg(Msg::PoolStatsReply {
                     resident_bytes: st.resident as u64,
                     models: st.model_count() as u32,
                     spilled: st.spilled_count() as u32,
+                    reads: meters.reads.count(),
+                    frame_hits: meters.frame_hits.count(),
                 })
             }
             Msg::Shutdown => {
@@ -436,6 +566,7 @@ impl ModelPoolServer {
             store,
             stop_flag,
             hub,
+            shard,
             _server: server,
         })
     }
@@ -500,6 +631,91 @@ impl ModelPoolServer {
             assemble_blobs(resident, &spilled)
         }
     }
+
+    /// Direct (in-process) insert bypassing the ownership check — the
+    /// [`rebalance`] ingest path on a destination replica, which is
+    /// usually NOT yet an owner under the map the handler would consult
+    /// mid-transition.
+    pub fn ingest(&self, blob: ModelBlob) {
+        self.store.lock().unwrap().insert(blob);
+    }
+
+    /// Whether `key` is stored here (resident or spilled).
+    pub fn has_key(&self, key: ModelKey) -> bool {
+        let st = self.store.lock().unwrap();
+        st.blobs.contains_key(&key) || st.on_disk.contains_key(&key)
+    }
+
+    /// Distinct agents with at least one model on this replica.
+    pub fn agents(&self) -> Vec<u32> {
+        self.store.lock().unwrap().agents()
+    }
+
+    /// Every key stored for `agent` on this replica (no payloads).
+    pub fn keys_for_agent(&self, agent: u32) -> Vec<ModelKey> {
+        self.store.lock().unwrap().keys_for(agent)
+    }
+
+    /// `agent`'s latest key and its replica-local rev, if present.
+    pub fn latest_with_rev(&self, agent: u32) -> Option<(ModelKey, u64)> {
+        let st = self.store.lock().unwrap();
+        let key = *st.latest.get(&agent)?;
+        Some((key, st.rev(key)))
+    }
+
+    /// Anti-entropy bookkeeping: the (source slot, source rev) of the
+    /// last rebalance transfer of `agent` into this replica.
+    pub fn origin_of(&self, agent: u32) -> Option<(u32, u64)> {
+        self.store.lock().unwrap().origin.get(&agent).copied()
+    }
+
+    pub fn set_origin(&self, agent: u32, src_slot: u32, src_rev: u64) {
+        self.store.lock().unwrap().origin.insert(agent, (src_slot, src_rev));
+    }
+
+    /// Drop every trace of `agent` — rebalance GC on an old owner that
+    /// lost the agent.  Subsequent reads here redirect via `WrongShard`.
+    pub fn evict_agent(&self, agent: u32) {
+        self.store.lock().unwrap().evict_agent(agent);
+    }
+
+    /// Per-replica shard report for the `stats` CLI pool section.
+    pub fn shard_info(&self) -> PoolShardInfo {
+        shard_info_of(&self.store, &self.hub, &self.shard, &self.addr)
+    }
+
+    /// Closure handle for the controller's `PoolShardQuery` arm.
+    pub fn shard_info_fn(&self) -> impl Fn() -> PoolShardInfo + Send + 'static {
+        let store = self.store.clone();
+        let hub = self.hub.clone();
+        let shard = self.shard.clone();
+        let addr = self.addr.clone();
+        move || shard_info_of(&store, &hub, &shard, &addr)
+    }
+}
+
+fn shard_info_of(
+    store: &Mutex<Store>,
+    hub: &MetricsHub,
+    shard: &ShardRole,
+    addr: &str,
+) -> PoolShardInfo {
+    let st = store.lock().unwrap();
+    let (replica, map_version) = match shard {
+        Some((holder, slot)) => (*slot, holder.version()),
+        None => (0, 0),
+    };
+    PoolShardInfo {
+        replica,
+        addr: addr.to_string(),
+        owned_agents: st.agents(),
+        resident_bytes: st.resident as u64,
+        models: st.model_count() as u32,
+        spilled: st.spilled_count() as u32,
+        reads: hub.meter("reads").count(),
+        frame_hits: hub.meter("frame_hits").count(),
+        map_version,
+    }
 }
 
 /// Result of a delta-aware [`ModelPoolClient::get_latest_if_newer`].
@@ -513,25 +729,41 @@ pub enum LatestFetch {
     NotFound,
 }
 
-/// Client over one or more ModelPool replicas: writes go to every
-/// replica, reads go to a random one.
+/// Client over one or more ModelPool replicas.  Routing is shard-aware:
+/// a cached (map, ring) pair — bootstrapped from the address list, kept
+/// fresh by `WrongShard` piggybacks — sends writes to the R owner
+/// replicas of the blob's agent and reads to a random live owner.  A
+/// replica that fails a request is remembered dead for a backoff window
+/// (500 ms doubling to 8 s) so a downed owner is not re-attempted on
+/// every read.
 pub struct ModelPoolClient {
     replicas: Vec<ReqClient>,
-    /// replica pinned for if-newer refreshes: revs are replica-local put
-    /// counters, so bouncing between replicas would make them
+    /// cached placement: replaced whenever a reply (or an off-path
+    /// `GetShardMap`) carries a strictly newer map.
+    map: Mutex<(Arc<ShardMap>, Arc<shard::Ring>)>,
+    /// per-replica dead mark: (retry-after, current backoff ms).  Set on
+    /// transport failure, doubled while failures continue, cleared on
+    /// the first success.  A marked replica is skipped by routing until
+    /// the window expires, so `faults_injected` stays flat under a
+    /// sustained partition instead of climbing on every read.
+    dead: Mutex<Vec<Option<(Instant, u64)>>>,
+    /// replica preferred for if-newer refreshes: revs are replica-local
+    /// put counters, so bouncing between replicas would make them
     /// incomparable and turn every refresh into a full transfer.
     /// Rotated on transport failure so a dead replica doesn't pin every
     /// future refresh to its ~9s reconnect loop.
     sticky: AtomicUsize,
-    /// bumped on every sticky rotation.  Two replicas can hold the SAME
-    /// (version, rev) numbers for DIFFERENT bytes (revs count local
-    /// puts), so rev state learned before a rotation must never be
-    /// echoed at the replacement replica — it could collide into a
-    /// bogus `NotModified` that silently pins stale params.
+    /// bumped on every sticky rotation AND every map install.  Two
+    /// replicas can hold the SAME (version, rev) numbers for DIFFERENT
+    /// bytes (revs count local puts), so rev state learned before a
+    /// rotation or re-route must never be echoed at the replacement
+    /// replica — it could collide into a bogus `NotModified` that
+    /// silently pins stale params.
     generation: AtomicU64,
-    /// agent → generation under which its last `New` rev was learned;
-    /// a mismatch downgrades the next if-newer read to unconditional.
-    have_gen: Mutex<HashMap<u32, u64>>,
+    /// agent → (replica index, generation) under which its last `New`
+    /// rev was learned; any mismatch downgrades the next if-newer read
+    /// to unconditional.
+    have_from: Mutex<HashMap<u32, (usize, u64)>>,
     rng: Mutex<Pcg32>,
 }
 
@@ -539,70 +771,244 @@ pub struct ModelPoolClient {
 /// the same "random" replica sequence (and sticky replicas spread).
 static NEXT_CLIENT: AtomicU64 = AtomicU64::new(0);
 
+const DEAD_BACKOFF_MS: u64 = 500;
+const DEAD_BACKOFF_CAP_MS: u64 = 8_000;
+
 impl ModelPoolClient {
+    /// Connect with the process-default replication factor (installed
+    /// from the run config via [`set_default_replication`]).
     pub fn connect(addrs: &[String]) -> ModelPoolClient {
+        Self::connect_with(addrs, default_replication() as u32)
+    }
+
+    /// Connect with an explicit replication factor.  The bootstrap map
+    /// (version 1) is derived locally from `addrs` + `replication`;
+    /// because placement hashes replica *indices*, every process that
+    /// derives from the same run config lands on the identical ring.
+    pub fn connect_with(addrs: &[String], replication: u32) -> ModelPoolClient {
         assert!(!addrs.is_empty());
         let mut rng = Pcg32::from_label(
             NEXT_CLIENT.fetch_add(1, Ordering::Relaxed),
             "mp-client",
         );
         let sticky = rng.below(addrs.len() as u32) as usize;
+        let map = shard::bootstrap_map(addrs, replication);
+        let ring = Arc::new(shard::Ring::build(&map));
         ModelPoolClient {
             replicas: addrs.iter().map(|a| ReqClient::connect(a)).collect(),
+            map: Mutex::new((Arc::new(map), ring)),
+            dead: Mutex::new(vec![None; addrs.len()]),
             sticky: AtomicUsize::new(sticky),
             generation: AtomicU64::new(0),
-            have_gen: Mutex::new(HashMap::new()),
+            have_from: Mutex::new(HashMap::new()),
             rng: Mutex::new(rng),
         }
     }
 
-    /// Index of the replica currently pinned for if-newer refreshes
+    /// Index of the replica currently preferred for if-newer refreshes
     /// (rotates on transport failure).  Exposed for failover tests and
     /// chaos drills.
     pub fn sticky_index(&self) -> usize {
         self.sticky.load(Ordering::Relaxed) % self.replicas.len()
     }
 
-    fn pick(&self) -> &ReqClient {
-        let i = self.rng.lock().unwrap().below(self.replicas.len() as u32);
-        &self.replicas[i as usize]
+    /// Version of the cached shard map (bootstrap = 1).
+    pub fn map_version(&self) -> u64 {
+        self.map.lock().unwrap().0.version
     }
 
-    /// Write-through to every replica.  The write is durable once at
-    /// least one replica acks: a dead replica must not stall or fail
-    /// the learner's publish cadence (it re-syncs via snapshot preload
-    /// when it returns), so per-replica attempts are bounded instead of
-    /// riding the full reconnect ladder, and only a total miss errors.
-    pub fn put(&self, blob: ModelBlob) -> Result<()> {
-        let mut acks = 0usize;
-        let mut last_err: Option<anyhow::Error> = None;
-        for r in &self.replicas {
-            match r.request_n(&Msg::PutModel(blob.clone()), 4) {
-                Ok(Msg::Ok) => acks += 1,
-                Ok(other) => {
-                    last_err =
-                        Some(anyhow::anyhow!("put: unexpected reply {other:?}"));
-                }
-                Err(e) => last_err = Some(e),
+    /// Replica indices currently inside their dead-backoff window — the
+    /// satellite behaviour the partition tests assert on.
+    pub fn dead_replica_indices(&self) -> Vec<usize> {
+        (0..self.replicas.len()).filter(|&i| self.is_dead(i)).collect()
+    }
+
+    fn map_pair(&self) -> (Arc<ShardMap>, Arc<shard::Ring>) {
+        self.map.lock().unwrap().clone()
+    }
+
+    /// Adopt `map` if strictly newer than the cached one.  A placement
+    /// change invalidates cross-replica rev state (generation bump).
+    fn install_map(&self, map: ShardMap) -> bool {
+        {
+            let mut g = self.map.lock().unwrap();
+            if map.version <= g.0.version {
+                return false;
+            }
+            let ring = Arc::new(shard::Ring::build(&map));
+            *g = (Arc::new(map), ring);
+        }
+        self.generation.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Off-hot-path map refresh: ask any live replica for its current
+    /// map (used when a replica dies or every owner bounced a write).
+    /// Unsharded replicas answer `Err` and are simply skipped.
+    fn refresh_map(&self) {
+        for (i, r) in self.replicas.iter().enumerate() {
+            if self.is_dead(i) {
+                continue;
+            }
+            if let Ok(Msg::ShardMapMsg(map)) = r.request_n(&Msg::GetShardMap, 1)
+            {
+                self.install_map(map);
+                return;
             }
         }
-        if acks == 0 {
-            return Err(last_err
-                .unwrap_or_else(|| anyhow::anyhow!("put: no replicas"))
-                .context("put: no replica acked"));
+    }
+
+    fn mark_dead(&self, idx: usize) {
+        let mut d = self.dead.lock().unwrap();
+        let ms = match d[idx] {
+            Some((_, prev)) => (prev * 2).min(DEAD_BACKOFF_CAP_MS),
+            None => DEAD_BACKOFF_MS,
+        };
+        d[idx] = Some((Instant::now() + Duration::from_millis(ms), ms));
+    }
+
+    fn mark_alive(&self, idx: usize) {
+        self.dead.lock().unwrap()[idx] = None;
+    }
+
+    fn is_dead(&self, idx: usize) -> bool {
+        matches!(
+            self.dead.lock().unwrap()[idx],
+            Some((until, _)) if Instant::now() < until
+        )
+    }
+
+    /// Owner replica indices for `agent` under the cached ring; an
+    /// empty ring (degenerate map) falls back to every replica.
+    fn owner_indices(&self, agent: u32) -> Vec<usize> {
+        let (_, ring) = self.map_pair();
+        let owners: Vec<usize> = ring
+            .owners(agent)
+            .into_iter()
+            .map(|s| s as usize)
+            .filter(|&s| s < self.replicas.len())
+            .collect();
+        if owners.is_empty() {
+            (0..self.replicas.len()).collect()
+        } else {
+            owners
         }
-        if acks < self.replicas.len() {
-            eprintln!(
-                "model_pool: put {} acked by {acks}/{} replicas",
-                blob.key,
-                self.replicas.len()
-            );
+    }
+
+    /// Random owner for a read, preferring replicas that are neither
+    /// locally banned (bounced this request already) nor in their dead
+    /// window.
+    fn pick_owner(&self, agent: u32, banned: &[usize]) -> usize {
+        let owners = self.owner_indices(agent);
+        let fresh: Vec<usize> = owners
+            .iter()
+            .copied()
+            .filter(|i| !banned.contains(i) && !self.is_dead(*i))
+            .collect();
+        let cands = if !fresh.is_empty() {
+            fresh
+        } else {
+            let unbanned: Vec<usize> =
+                owners.iter().copied().filter(|i| !banned.contains(i)).collect();
+            if unbanned.is_empty() { owners } else { unbanned }
+        };
+        let j = self.rng.lock().unwrap().below(cands.len() as u32) as usize;
+        cands[j]
+    }
+
+    /// Write to the R owner replicas of the blob's agent.  The write is
+    /// durable once at least one owner acks: a dead owner must not
+    /// stall or fail the learner's publish cadence (anti-entropy
+    /// re-syncs it), so per-replica attempts are bounded instead of
+    /// riding the full reconnect ladder.  If EVERY owner bounces with
+    /// `WrongShard` (our map is stale), adopt the piggybacked map and
+    /// retry against the new owners.
+    pub fn put(&self, blob: ModelBlob) -> Result<()> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for _round in 0..2 {
+            let owners = self.owner_indices(blob.key.agent);
+            let mut acks = 0usize;
+            let mut newer: Option<ShardMap> = None;
+            for &i in &owners {
+                match self.replicas[i].request_n(&Msg::PutModel(blob.clone()), 4)
+                {
+                    Ok(Msg::Ok) => {
+                        self.mark_alive(i);
+                        acks += 1;
+                    }
+                    Ok(Msg::WrongShard(map)) => newer = Some(map),
+                    Ok(other) => {
+                        last_err = Some(anyhow::anyhow!(
+                            "put: unexpected reply {other:?}"
+                        ));
+                    }
+                    Err(e) => {
+                        self.mark_dead(i);
+                        last_err = Some(e);
+                    }
+                }
+            }
+            if acks > 0 {
+                if acks < owners.len() {
+                    eprintln!(
+                        "model_pool: put {} acked by {acks}/{} owners",
+                        blob.key,
+                        owners.len()
+                    );
+                }
+                return Ok(());
+            }
+            match newer {
+                Some(map) if self.install_map(map) => {}
+                _ => self.refresh_map(),
+            }
         }
-        Ok(())
+        Err(last_err
+            .unwrap_or_else(|| anyhow::anyhow!("put: no owners"))
+            .context("put: no owner acked"))
+    }
+
+    /// Owner-routed read with `WrongShard` self-correction: a bounced
+    /// request installs the piggybacked map and retries against the new
+    /// owners; a transport failure marks the replica dead and tries the
+    /// next owner.
+    fn read_routed(&self, agent: u32, req: &Msg) -> Result<Msg> {
+        let attempts = if self.replicas.len() > 1 { 5 } else { 40 };
+        let mut banned: Vec<usize> = Vec::new();
+        let mut last_err: Option<anyhow::Error> = None;
+        for round in 0..self.replicas.len() + 2 {
+            let idx = self.pick_owner(agent, &banned);
+            match self.replicas[idx].request_n(req, attempts) {
+                Ok(Msg::WrongShard(map)) => {
+                    // no coordinator round-trip: the bounce carries the
+                    // truth.  A non-newer map means we already hold it —
+                    // just avoid this replica for the rest of the call.
+                    if !self.install_map(map) {
+                        banned.push(idx);
+                    }
+                }
+                Ok(reply) => {
+                    self.mark_alive(idx);
+                    if round > 0 {
+                        fault::on_recovery();
+                    }
+                    return Ok(reply);
+                }
+                Err(e) => {
+                    self.mark_dead(idx);
+                    banned.push(idx);
+                    self.refresh_map();
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            anyhow::anyhow!("pool read: no owner answered (routing unresolved)")
+        }))
     }
 
     pub fn get(&self, key: ModelKey) -> Result<Option<ModelBlob>> {
-        match self.pick().request(&Msg::GetModel { key, trace: None })? {
+        match self.read_routed(key.agent, &Msg::GetModel { key, trace: None })? {
             Msg::Model(b) => Ok(Some(b)),
             Msg::NotFound => Ok(None),
             other => bail!("get: unexpected reply {other:?}"),
@@ -610,7 +1016,7 @@ impl ModelPoolClient {
     }
 
     pub fn get_latest(&self, agent: u32) -> Result<Option<ModelBlob>> {
-        match self.pick().request(&Msg::GetLatest { agent })? {
+        match self.read_routed(agent, &Msg::GetLatest { agent })? {
             Msg::Model(b) => Ok(Some(b)),
             Msg::NotFound => Ok(None),
             other => bail!("get_latest: unexpected reply {other:?}"),
@@ -645,19 +1051,20 @@ impl ModelPoolClient {
         // quickly instead of riding the full reconnect ladder
         let attempts = if self.replicas.len() > 1 { 5 } else { 40 };
         let mut last_err = None;
-        for round in 0..self.replicas.len() {
-            let idx = self.sticky.load(Ordering::Relaxed) % self.replicas.len();
+        for round in 0..self.replicas.len() + 1 {
+            let idx = self.refresh_target(agent);
             let gen = self.generation.load(Ordering::Relaxed);
-            // rev state learned under an older generation came from a
-            // different replica and is incomparable: downgrade to an
+            // rev state learned at a different replica or under an
+            // older generation is incomparable: downgrade to an
             // unconditional read rather than risk a colliding, bogus
             // NotModified (see the `generation` field docs)
-            let (hv, hr) =
-                if self.have_gen.lock().unwrap().get(&agent) == Some(&gen) {
-                    (have_version, have_rev)
-                } else {
-                    (0, 0)
-                };
+            let (hv, hr) = if self.have_from.lock().unwrap().get(&agent)
+                == Some(&(idx, gen))
+            {
+                (have_version, have_rev)
+            } else {
+                (0, 0)
+            };
             let req = Msg::GetModelIfNewer {
                 agent,
                 have_version: hv,
@@ -665,14 +1072,24 @@ impl ModelPoolClient {
                 trace,
             };
             match self.replicas[idx].request_n(&req, attempts) {
+                Ok(Msg::WrongShard(map)) => {
+                    // stale placement: adopt the piggybacked map (the
+                    // install bumps the generation, so stale rev state
+                    // cannot leak to the new owner) and retry
+                    self.install_map(map);
+                }
                 Ok(reply) => {
+                    self.mark_alive(idx);
                     if round > 0 {
                         fault::on_recovery();
                     }
                     return match reply {
                         Msg::NotModified => Ok(LatestFetch::NotModified),
                         Msg::ModelRev { rev, blob } => {
-                            self.have_gen.lock().unwrap().insert(agent, gen);
+                            self.have_from
+                                .lock()
+                                .unwrap()
+                                .insert(agent, (idx, gen));
                             Ok(LatestFetch::New { rev, blob })
                         }
                         Msg::NotFound => Ok(LatestFetch::NotFound),
@@ -682,29 +1099,207 @@ impl ModelPoolClient {
                     };
                 }
                 Err(e) => {
-                    // sticky replica unreachable: rotate so refreshes
-                    // don't stay pinned to a dead replica, and bump the
-                    // generation so its rev state is never echoed at
-                    // the replacement
+                    // replica unreachable: mark it dead so routing skips
+                    // it, rotate sticky off it, and bump the generation
+                    // so its rev state is never echoed at a replacement
+                    self.mark_dead(idx);
                     self.sticky
                         .store((idx + 1) % self.replicas.len(), Ordering::Relaxed);
                     self.generation.fetch_add(1, Ordering::Relaxed);
+                    self.refresh_map();
                     last_err = Some(e);
                 }
             }
         }
-        Err(last_err.expect("at least one replica attempted"))
+        Err(last_err.unwrap_or_else(|| {
+            anyhow::anyhow!("get_latest_if_newer: no owner answered")
+        }))
     }
 
-    /// (resident_bytes, models, spilled) of one random replica.
+    /// The replica an if-newer refresh should ask: the sticky replica
+    /// when it owns the agent and is believed live (replica-local revs
+    /// stay comparable), otherwise the first live owner.
+    fn refresh_target(&self, agent: u32) -> usize {
+        let owners = self.owner_indices(agent);
+        let sticky = self.sticky.load(Ordering::Relaxed) % self.replicas.len();
+        if owners.contains(&sticky) && !self.is_dead(sticky) {
+            return sticky;
+        }
+        owners
+            .iter()
+            .copied()
+            .find(|&i| !self.is_dead(i))
+            .or_else(|| owners.first().copied())
+            .unwrap_or(sticky)
+    }
+
+    /// Aggregated (resident_bytes, models, spilled) across every
+    /// reachable replica.  With replication factor R a blob owned by R
+    /// replicas counts R times — the numbers describe the deployment's
+    /// footprint, not the distinct-model count.
     pub fn stats(&self) -> Result<(u64, u32, u32)> {
-        match self.pick().request(&Msg::PoolStats)? {
-            Msg::PoolStatsReply { resident_bytes, models, spilled } => {
-                Ok((resident_bytes, models, spilled))
+        let (mut rb, mut mo, mut sp) = (0u64, 0u32, 0u32);
+        let mut any = false;
+        let mut last_err: Option<anyhow::Error> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if self.is_dead(i) {
+                continue;
             }
-            other => bail!("stats: unexpected reply {other:?}"),
+            match r.request_n(&Msg::PoolStats, 2) {
+                Ok(Msg::PoolStatsReply {
+                    resident_bytes, models, spilled, ..
+                }) => {
+                    self.mark_alive(i);
+                    any = true;
+                    rb += resident_bytes;
+                    mo += models;
+                    sp += spilled;
+                }
+                Ok(other) => {
+                    last_err =
+                        Some(anyhow::anyhow!("stats: unexpected reply {other:?}"));
+                }
+                Err(e) => {
+                    self.mark_dead(i);
+                    last_err = Some(e);
+                }
+            }
+        }
+        if any {
+            Ok((rb, mo, sp))
+        } else {
+            Err(last_err
+                .unwrap_or_else(|| anyhow::anyhow!("stats: no replicas"))
+                .context("stats: no replica answered"))
         }
     }
+}
+
+/// Outcome of one [`rebalance`] pass — surfaced by the `kill:pool`
+/// chaos drill and the elastic bench group.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MoveStats {
+    /// agents whose data actually changed hands
+    pub agents: u32,
+    pub blobs_moved: u32,
+    pub bytes_moved: u64,
+    /// transfers answered `NotModified` by the rev protocol (a prior
+    /// pass already delivered the bytes) — the anti-entropy savings
+    pub blobs_skipped: u32,
+}
+
+fn blob_bytes(b: &ModelBlob) -> u64 {
+    (b.params.len() * 4 + b.hp.len() * 4 + 16) as u64
+}
+
+/// Anti-entropy pass after a shard-map change (`old_map` → `new_map`):
+/// for every agent whose owner set changed, pull its data from a
+/// surviving old owner into each new owner that lacks it — the latest
+/// model via the `GetModelIfNewer` rev protocol (an O(1) `NotModified`
+/// when a previous pass already moved it, tracked per destination in
+/// `Store::origin`), frozen history via plain `GetModel` for keys the
+/// destination is missing.  Agents whose owners are unchanged are not
+/// touched at all, so a rebalance moves only the blobs that actually
+/// changed hands.  Old owners that lost an agent GC it afterwards.
+///
+/// `pools` are the deployment's in-process replica handles indexed by
+/// slot; `live[i]` is false for replicas that are down (tombstoned or
+/// crashed).  Enumeration is in-process; blob payloads move over the
+/// wire from the source replica's service address.
+pub fn rebalance(
+    pools: &[ModelPoolServer],
+    live: &[bool],
+    old_map: &ShardMap,
+    new_map: &ShardMap,
+) -> MoveStats {
+    let is_live = |slot: u32| live.get(slot as usize).copied().unwrap_or(false);
+    let old_ring = shard::Ring::build(old_map);
+    let new_ring = shard::Ring::build(new_map);
+    let mut stats = MoveStats::default();
+    let mut agents: Vec<u32> = Vec::new();
+    for (i, p) in pools.iter().enumerate() {
+        if live.get(i).copied().unwrap_or(false) {
+            agents.extend(p.agents());
+        }
+    }
+    agents.sort_unstable();
+    agents.dedup();
+    let mut srcs: HashMap<u32, ReqClient> = HashMap::new();
+    for agent in agents {
+        let old_owners = old_ring.owners(agent);
+        let new_owners = new_ring.owners(agent);
+        if old_owners == new_owners {
+            continue; // nothing changed hands for this agent
+        }
+        let Some(src) = old_owners.iter().copied().find(|&s| {
+            is_live(s) && pools[s as usize].latest_with_rev(agent).is_some()
+        }) else {
+            continue; // no surviving copy — nothing to transfer
+        };
+        let conn = srcs
+            .entry(src)
+            .or_insert_with(|| ReqClient::connect(&pools[src as usize].addr));
+        let mut touched = false;
+        for &dst in &new_owners {
+            if dst == src || !is_live(dst) {
+                continue;
+            }
+            let dstp = &pools[dst as usize];
+            // latest model: rev-conditional pull.  The source rev is
+            // only comparable if our last transfer came from the same
+            // source slot; otherwise ask unconditionally on the version.
+            let (hv, hr) =
+                match (dstp.latest_with_rev(agent), dstp.origin_of(agent)) {
+                    (Some((k, _)), Some((oslot, orev))) if oslot == src => {
+                        (k.version, orev)
+                    }
+                    (Some((k, _)), _) => (k.version, 0),
+                    _ => (0, 0),
+                };
+            let req = Msg::GetModelIfNewer {
+                agent,
+                have_version: hv,
+                have_rev: hr,
+                trace: None,
+            };
+            match conn.request_n(&req, 4) {
+                Ok(Msg::ModelRev { rev, blob }) => {
+                    stats.blobs_moved += 1;
+                    stats.bytes_moved += blob_bytes(&blob);
+                    dstp.ingest(blob);
+                    dstp.set_origin(agent, src, rev);
+                    touched = true;
+                }
+                Ok(Msg::NotModified) => stats.blobs_skipped += 1,
+                Ok(_) | Err(_) => {}
+            }
+            // frozen history the destination is still missing
+            for key in pools[src as usize].keys_for_agent(agent) {
+                if dstp.has_key(key) {
+                    continue;
+                }
+                if let Ok(Msg::Model(blob)) =
+                    conn.request_n(&Msg::GetModel { key, trace: None }, 4)
+                {
+                    stats.blobs_moved += 1;
+                    stats.bytes_moved += blob_bytes(&blob);
+                    dstp.ingest(blob);
+                    touched = true;
+                }
+            }
+        }
+        if touched {
+            stats.agents += 1;
+        }
+        // GC: survivors that lost ownership of this agent drop it, so
+        // their reads flip to the WrongShard redirect and memory frees
+        for &old in &old_owners {
+            if !new_owners.contains(&old) && is_live(old) {
+                pools[old as usize].evict_agent(agent);
+            }
+        }
+    }
+    stats
 }
 
 #[cfg(test)]
@@ -1082,5 +1677,177 @@ mod tests {
             );
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Sharding contract: non-owners bounce writes with the current map
+    /// piggybacked, serve-or-redirect reads, and the routed client lands
+    /// on owners without ever being bounced.
+    #[test]
+    fn sharded_put_bounces_non_owner_and_reads_redirect() {
+        let holder = Arc::new(MapHolder::new(shard::bootstrap_map(
+            &["a".into(), "b".into(), "c".into()],
+            1,
+        )));
+        let servers: Vec<ModelPoolServer> = (0..3)
+            .map(|i| {
+                ModelPoolServer::start_sharded(
+                    "127.0.0.1:0",
+                    PoolOptions::default(),
+                    holder.clone(),
+                    i,
+                )
+                .unwrap()
+            })
+            .collect();
+        let agent = 5u32;
+        let owner = holder.get().1.primary(agent).unwrap() as usize;
+        let other = (owner + 1) % 3;
+        let raw_owner = ReqClient::connect(&servers[owner].addr);
+        let raw_other = ReqClient::connect(&servers[other].addr);
+        // non-owner bounces the write, piggybacking the current map
+        match raw_other.request(&Msg::PutModel(blob(agent, 1, 1.0))).unwrap() {
+            Msg::WrongShard(map) => {
+                assert_eq!(map.version, 1);
+                assert_eq!(map.replicas.len(), 3);
+            }
+            o => panic!("expected WrongShard, got {o:?}"),
+        }
+        assert!(matches!(
+            raw_owner.request(&Msg::PutModel(blob(agent, 1, 1.0))).unwrap(),
+            Msg::Ok
+        ));
+        // reads: absent on a non-owner → redirect; present → served
+        assert!(matches!(
+            raw_other.request(&Msg::GetLatest { agent }).unwrap(),
+            Msg::WrongShard(_)
+        ));
+        match raw_owner.request(&Msg::GetLatest { agent }).unwrap() {
+            Msg::Model(b) => assert_eq!(b.key.version, 1),
+            o => panic!("expected Model, got {o:?}"),
+        }
+        // replicas serve their map on request
+        assert!(matches!(
+            raw_owner.request(&Msg::GetShardMap).unwrap(),
+            Msg::ShardMapMsg(_)
+        ));
+        // the routed client derives the same placement from the real
+        // address list (index-keyed hashing) — writes go only to the
+        // owner, reads find it, and the map never needed refreshing
+        let addrs: Vec<String> =
+            servers.iter().map(|s| s.addr.clone()).collect();
+        let client = ModelPoolClient::connect_with(&addrs, 1);
+        client.put(blob(agent, 2, 2.0)).unwrap();
+        assert_eq!(client.get_latest(agent).unwrap().unwrap().key.version, 2);
+        assert_eq!(servers[owner].model_count(), 2);
+        for (i, s) in servers.iter().enumerate() {
+            if i != owner {
+                assert_eq!(s.model_count(), 0, "non-owner {i} stored data");
+            }
+        }
+        assert_eq!(client.map_version(), 1, "no bounce should have occurred");
+    }
+
+    /// Satellite: a downed replica is remembered with a backoff expiry —
+    /// routing skips it instead of re-attempting it on every read.
+    #[test]
+    fn dead_replica_backoff_remembers_downed_owner() {
+        let mut s1 = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let s2 = ModelPoolServer::start("127.0.0.1:0").unwrap();
+        let client =
+            ModelPoolClient::connect(&[s1.addr.clone(), s2.addr.clone()]);
+        client.put(blob(0, 1, 1.0)).unwrap();
+        s1.shutdown();
+        std::thread::sleep(Duration::from_millis(400));
+        // every read keeps succeeding; the first one that trips over the
+        // dead replica marks it for the backoff window
+        for _ in 0..16 {
+            assert!(client.get(ModelKey::new(0, 1)).unwrap().is_some());
+            if !client.dead_replica_indices().is_empty() {
+                break;
+            }
+        }
+        assert_eq!(client.dead_replica_indices(), vec![0]);
+        // within the window the dead owner is skipped entirely: reads
+        // route straight to the survivor
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            assert!(client.get(ModelKey::new(0, 1)).unwrap().is_some());
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "reads under partition must not ride the reconnect ladder"
+        );
+    }
+
+    fn pool_union(servers: &[ModelPoolServer], live: &[bool]) -> Vec<ModelBlob> {
+        let mut all: Vec<ModelBlob> = Vec::new();
+        for (i, s) in servers.iter().enumerate() {
+            if live[i] {
+                all.extend(s.all_blobs());
+            }
+        }
+        all.sort_by_key(|b| b.key);
+        all.dedup_by(|a, b| a.key == b.key);
+        all
+    }
+
+    /// The `kill:pool` drill at the storage layer: with R=2, killing a
+    /// replica and rebalancing leaves the survivors' union bit-exact
+    /// with the pre-kill pool, stale-map clients keep reading
+    /// successfully throughout, and a repeated pass moves zero bytes
+    /// (the rev protocol answers NotModified).
+    #[test]
+    fn kill_pool_rebalance_is_bit_exact_and_converges() {
+        let map0 = shard::bootstrap_map(
+            &["a".into(), "b".into(), "c".into()],
+            2,
+        );
+        let holder = Arc::new(MapHolder::new(map0.clone()));
+        let mut servers: Vec<ModelPoolServer> = (0..3)
+            .map(|i| {
+                ModelPoolServer::start_sharded(
+                    "127.0.0.1:0",
+                    PoolOptions::default(),
+                    holder.clone(),
+                    i,
+                )
+                .unwrap()
+            })
+            .collect();
+        let addrs: Vec<String> =
+            servers.iter().map(|s| s.addr.clone()).collect();
+        let client = ModelPoolClient::connect_with(&addrs, 2);
+        for agent in 0..6u32 {
+            client.put(frozen_blob(agent, 1, 64)).unwrap();
+            client.put(blob(agent, 2, agent as f32)).unwrap();
+        }
+        let before = pool_union(&servers, &[true, true, true]);
+        assert_eq!(before.len(), 12);
+        // kill replica 2, publish the tombstoned map, rebalance
+        servers[2].shutdown();
+        std::thread::sleep(Duration::from_millis(400));
+        let live = [true, true, false];
+        let map1 = shard::without_replica(&map0, 2);
+        assert!(holder.install(map1.clone()));
+        let mv = rebalance(&servers, &live, &map0, &map1);
+        assert!(mv.blobs_moved > 0, "victim's keys must change hands");
+        // bit-exact: survivors' union equals the pre-kill pool
+        assert_eq!(pool_union(&servers, &live), before);
+        // the client still holds the v1 map; every read must keep
+        // succeeding (surviving owners stayed owners), self-correcting
+        // to the v2 map along the way
+        for agent in 0..6u32 {
+            let b = client.get_latest(agent).unwrap().unwrap();
+            assert_eq!(b.key.version, 2);
+            assert_eq!(b.params, vec![agent as f32; 8]);
+            assert!(
+                client.get(ModelKey::new(agent, 1)).unwrap().is_some(),
+                "frozen history lost for agent {agent}"
+            );
+        }
+        // a second pass over the same transition is a no-op
+        let mv2 = rebalance(&servers, &live, &map0, &map1);
+        assert_eq!(mv2.bytes_moved, 0, "second pass must move nothing");
+        assert!(mv2.blobs_skipped > 0, "rev protocol must short-circuit");
     }
 }

@@ -1,0 +1,344 @@
+//! Consistent-hash placement for the sharded, replicated ModelPool.
+//!
+//! Every agent's models live on `R` of the `N` replica slots, chosen by
+//! walking a 128-vnode-per-slot hash ring.  Two properties carry the
+//! elastic-league design:
+//!
+//! * **Index-keyed vnodes.**  Ring points hash the replica *slot index*,
+//!   not its address, so the controller, the snapshotter, and every
+//!   worker derive the identical placement from the same [`ShardMap`] —
+//!   address rewriting (`--advertise-host`) cannot split the ring.
+//! * **Tombstones, not compaction.**  A retired replica leaves an empty
+//!   string in `ShardMap::replicas`; the survivors keep their slot
+//!   indices and therefore their ring points.  Removing one replica
+//!   moves exactly the victim's keys (~1/N), and a surviving owner of a
+//!   key is still an owner afterwards — which is why reads keep
+//!   succeeding during `kill:pool` failover even on clients holding the
+//!   stale map.
+
+use crate::proto::ShardMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Ring points per live replica slot: enough that primary-owner load is
+/// balanced within ~25% up to 16 replicas (verified by the property
+/// tests below); lookup stays one binary search over N*128 points.
+pub const VNODES: usize = 128;
+
+/// Process-wide default replication factor, installed from the run
+/// config (`RunConfig::pool_replication` / `RunSlice::pool_replication`)
+/// before any `ModelPoolClient` is built — avoids threading R through
+/// every role constructor.  Effective R is always clamped to the live
+/// replica count.
+static DEFAULT_REPLICATION: AtomicUsize = AtomicUsize::new(2);
+
+pub fn set_default_replication(r: usize) {
+    DEFAULT_REPLICATION.store(r.max(1), Ordering::Relaxed);
+}
+
+pub fn default_replication() -> usize {
+    DEFAULT_REPLICATION.load(Ordering::Relaxed).max(1)
+}
+
+/// splitmix64 finalizer: cheap, deterministic, and well-distributed —
+/// the same arithmetic on every process is the whole point.
+fn mix(z: u64) -> u64 {
+    let z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    let z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+fn vnode_point(slot: u32, vnode: usize) -> u64 {
+    mix((((slot as u64) + 1) << 32) | vnode as u64)
+}
+
+fn key_point(agent: u32) -> u64 {
+    // different domain from vnode points (low 32 bits of the pre-mix
+    // input) so key and vnode streams never collide systematically
+    mix(agent as u64 ^ 0xd1b5_4a32_d192_ed03)
+}
+
+/// The derived lookup structure for one [`ShardMap`] version: sorted
+/// `(point, slot)` ring + the effective replication factor.  Build once
+/// per map install, share via `Arc`.
+#[derive(Debug)]
+pub struct Ring {
+    points: Vec<(u64, u32)>,
+    replication: usize,
+    live: usize,
+}
+
+impl Ring {
+    pub fn build(map: &ShardMap) -> Ring {
+        let live = map.live();
+        let mut points = Vec::with_capacity(live.len() * VNODES);
+        for &slot in &live {
+            for j in 0..VNODES {
+                points.push((vnode_point(slot, j), slot));
+            }
+        }
+        points.sort_unstable();
+        Ring {
+            points,
+            replication: (map.replication as usize).max(1).min(live.len().max(1)),
+            live: live.len(),
+        }
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    /// The R distinct replica slots owning `agent`, primary first:
+    /// clockwise walk from the key's ring point.  Empty ring (a map not
+    /// yet installed) owns nothing — callers treat that as "serve
+    /// everything" so a replica never bounces traffic before the
+    /// controller publishes the bootstrap map.
+    pub fn owners(&self, agent: u32) -> Vec<u32> {
+        if self.points.is_empty() {
+            return Vec::new();
+        }
+        let kp = key_point(agent);
+        let start = self.points.partition_point(|&(p, _)| p < kp);
+        let n = self.points.len();
+        let mut out: Vec<u32> = Vec::with_capacity(self.replication);
+        for k in 0..n {
+            let slot = self.points[(start + k) % n].1;
+            if !out.contains(&slot) {
+                out.push(slot);
+                if out.len() == self.replication {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn primary(&self, agent: u32) -> Option<u32> {
+        self.owners(agent).first().copied()
+    }
+
+    /// Whether `slot` is one of the owners of `agent`.  An empty ring
+    /// (pre-bootstrap) answers true: serve rather than bounce.
+    pub fn is_owner(&self, agent: u32, slot: u32) -> bool {
+        if self.points.is_empty() {
+            return true;
+        }
+        self.owners(agent).contains(&slot)
+    }
+}
+
+/// The shared, versioned (map, ring) pair: one per pool deployment,
+/// `Arc`-cloned into every in-process replica server and the
+/// controller.  `install` only accepts strictly newer maps, so a stale
+/// gossip can never roll placement back.
+pub struct MapHolder {
+    inner: RwLock<(Arc<ShardMap>, Arc<Ring>)>,
+}
+
+impl MapHolder {
+    pub fn new(map: ShardMap) -> MapHolder {
+        let ring = Arc::new(Ring::build(&map));
+        MapHolder { inner: RwLock::new((Arc::new(map), ring)) }
+    }
+
+    /// Current (map, ring); cheap Arc clones.
+    pub fn get(&self) -> (Arc<ShardMap>, Arc<Ring>) {
+        self.inner.read().unwrap().clone()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.inner.read().unwrap().0.version
+    }
+
+    /// Swap in the real replica addresses once ephemeral ports are
+    /// known, keeping the version.  Placement is index-keyed, so the
+    /// ring is identical as long as the live pattern matches — the
+    /// launcher seeds the holder with placeholder addresses (the pool
+    /// servers need it at bind time), then fixes the addresses here.
+    /// Workers derive the same v1 map from the assignment's address
+    /// list, so no version bump is needed or wanted.
+    pub fn set_addrs(&self, addrs: Vec<String>) {
+        let mut g = self.inner.write().unwrap();
+        debug_assert_eq!(g.0.replicas.len(), addrs.len());
+        let mut map = (*g.0).clone();
+        map.replicas = addrs;
+        let ring = Arc::new(Ring::build(&map));
+        *g = (Arc::new(map), ring);
+    }
+
+    /// Install `map` iff it is newer than what we hold.  Returns true
+    /// when installed.
+    pub fn install(&self, map: ShardMap) -> bool {
+        let mut g = self.inner.write().unwrap();
+        if map.version <= g.0.version {
+            return false;
+        }
+        let ring = Arc::new(Ring::build(&map));
+        *g = (Arc::new(map), ring);
+        true
+    }
+}
+
+/// The version-1 map every process derives independently from the
+/// replica address list + replication factor of its run config: same
+/// inputs, same map, no bootstrap round-trip.
+pub fn bootstrap_map(addrs: &[String], replication: u32) -> ShardMap {
+    ShardMap {
+        version: 1,
+        replicas: addrs.to_vec(),
+        replication: replication.max(1).min(addrs.len().max(1) as u32),
+    }
+}
+
+/// `map` with slot `victim` tombstoned and the version bumped — the
+/// membership change published on `kill:pool` failover.
+pub fn without_replica(map: &ShardMap, victim: u32) -> ShardMap {
+    let mut next = map.clone();
+    if let Some(slot) = next.replicas.get_mut(victim as usize) {
+        slot.clear();
+    }
+    next.version += 1;
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map_of(n: usize, r: u32) -> ShardMap {
+        bootstrap_map(
+            &(0..n).map(|i| format!("10.0.0.{i}:9001")).collect::<Vec<_>>(),
+            r,
+        )
+    }
+
+    /// Satellite: primary-owner placement is balanced within 25% of the
+    /// fair share for every fleet size we deploy (2..=16 replicas).
+    #[test]
+    fn placement_balanced_within_25_percent() {
+        const AGENTS: u32 = 4096;
+        for n in 2..=16usize {
+            let ring = Ring::build(&map_of(n, 1));
+            let mut counts = vec![0u32; n];
+            for a in 0..AGENTS {
+                counts[ring.primary(a).unwrap() as usize] += 1;
+            }
+            let fair = AGENTS as f64 / n as f64;
+            for (slot, &c) in counts.iter().enumerate() {
+                let load = c as f64 / fair;
+                assert!(
+                    (0.75..=1.25).contains(&load),
+                    "N={n} slot {slot}: load {load:.3}x fair share (counts {counts:?})"
+                );
+            }
+        }
+    }
+
+    /// Satellite: adding one replica moves only ~1/N of the keys, and
+    /// every moved key moves TO the new replica (nothing reshuffles
+    /// between survivors).
+    #[test]
+    fn adding_replica_moves_about_one_nth() {
+        const KEYS: u32 = 8192;
+        let r6 = Ring::build(&map_of(6, 1));
+        let r7 = Ring::build(&map_of(7, 1));
+        let mut moved = 0u32;
+        for a in 0..KEYS {
+            let (p6, p7) = (r6.primary(a).unwrap(), r7.primary(a).unwrap());
+            if p6 != p7 {
+                moved += 1;
+                assert_eq!(p7, 6, "key {a} moved to survivor {p7}, not the new replica");
+            }
+        }
+        let frac = moved as f64 / KEYS as f64;
+        // fair share is 1/7 ≈ 0.143; allow [0.5x, 2x]
+        assert!(
+            (0.071..=0.286).contains(&frac),
+            "moved {frac:.4} of keys on add (want ~1/7)"
+        );
+    }
+
+    /// Satellite: tombstoning one replica moves exactly the victim's
+    /// keys — survivors' placements are untouched, so a rebalance only
+    /// transfers the blobs that actually changed hands.
+    #[test]
+    fn removing_replica_moves_only_victims_keys() {
+        const KEYS: u32 = 8192;
+        let full = map_of(6, 1);
+        let r6 = Ring::build(&full);
+        let r5 = Ring::build(&without_replica(&full, 2));
+        let (mut moved, mut was_victims) = (0u32, 0u32);
+        for a in 0..KEYS {
+            let p6 = r6.primary(a).unwrap();
+            if p6 == 2 {
+                was_victims += 1;
+            }
+            if p6 != r5.primary(a).unwrap() {
+                moved += 1;
+                assert_eq!(p6, 2, "key {a} moved but was not owned by the victim");
+            }
+        }
+        assert_eq!(moved, was_victims, "survivor placements must be untouched");
+        assert!(moved > 0, "victim owned no keys — ring degenerate");
+    }
+
+    /// The failover invariant `kill:pool` relies on: with R >= 2, every
+    /// surviving old owner of a key is still an owner under the
+    /// tombstoned map, so clients holding the stale map keep reading
+    /// from a live owner.
+    #[test]
+    fn surviving_owners_remain_owners_after_tombstone() {
+        let full = map_of(5, 2);
+        let ring = Ring::build(&full);
+        let after = Ring::build(&without_replica(&full, 4));
+        for a in 0..2048u32 {
+            let old = ring.owners(a);
+            let new = after.owners(a);
+            assert_eq!(new.len(), 2);
+            for slot in old.iter().filter(|&&s| s != 4) {
+                assert!(
+                    new.contains(slot),
+                    "agent {a}: surviving owner {slot} lost ownership ({old:?} -> {new:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn owners_distinct_and_clamped() {
+        // R larger than the live fleet clamps; owners are distinct
+        let ring = Ring::build(&map_of(3, 8));
+        for a in 0..256u32 {
+            let own = ring.owners(a);
+            assert_eq!(own.len(), 3);
+            let mut sorted = own.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "duplicate owners for agent {a}: {own:?}");
+        }
+        // empty ring: serve-everything semantics
+        let empty = Ring::build(&ShardMap::default());
+        assert!(empty.owners(7).is_empty());
+        assert!(empty.is_owner(7, 0));
+    }
+
+    #[test]
+    fn holder_installs_only_newer_maps() {
+        let holder = MapHolder::new(map_of(3, 2));
+        assert_eq!(holder.version(), 1);
+        assert!(!holder.install(map_of(3, 2)), "same version must not install");
+        let v2 = without_replica(&map_of(3, 2), 2);
+        assert!(holder.install(v2.clone()));
+        assert_eq!(holder.version(), 2);
+        assert!(!holder.install(map_of(3, 2)), "older map must not roll back");
+        let (map, ring) = holder.get();
+        assert_eq!(map.live(), vec![0, 1]);
+        assert_eq!(ring.live(), 2);
+    }
+}

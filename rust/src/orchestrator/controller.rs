@@ -20,14 +20,15 @@
 
 use crate::config::RunConfig;
 use crate::league::LeagueStats;
+use crate::model_pool::MoveStats;
 use crate::orchestrator::CoreServices;
-use crate::proto::{LeagueReport, Msg, RunSlice, WorkerAssignment};
+use crate::proto::{LeagueReport, Msg, RoleStats, RunSlice, WorkerAssignment};
 use crate::telemetry::{snapshot_role, trace, LeagueView};
 use crate::transport::RepServer;
 use crate::util::metrics::MetricsHub;
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -83,6 +84,13 @@ struct ActorSlot {
     agent: u32,
     rank: usize,
     was_lost: bool,
+    /// scale-down in progress: the occupant's next heartbeat acks
+    /// stop=true; it finishes its episode, flushes segments, and
+    /// deregisters — which retires the slot
+    draining: bool,
+    /// out of the capacity pool; kept in the table so slot indices (and
+    /// telemetry keys) stay stable.  A later scale-up resurrects it.
+    retired: bool,
 }
 
 #[derive(Default)]
@@ -90,6 +98,8 @@ struct InfSlot {
     worker: Option<u64>,
     addr: Option<String>,
     was_lost: bool,
+    draining: bool,
+    retired: bool,
 }
 
 struct CtrlState {
@@ -123,6 +133,10 @@ pub struct DeployStatsSnap {
     pub learners_done: u32,
     pub learner_steps: u64,
     pub draining: bool,
+    /// current actor capacity: slots neither retired nor draining
+    pub actor_slots: u32,
+    /// current inf-server capacity: slots neither retired nor draining
+    pub inf_slots: u32,
 }
 
 fn stats_of(st: &CtrlState) -> DeployStatsSnap {
@@ -133,7 +147,224 @@ fn stats_of(st: &CtrlState) -> DeployStatsSnap {
         learners_done: st.learners.iter().filter(|l| l.done).count() as u32,
         learner_steps: st.learners.iter().map(|l| l.steps).sum(),
         draining: st.draining,
+        actor_slots: actor_capacity(st) as u32,
+        inf_slots: inf_capacity(st) as u32,
     }
+}
+
+// ---- elastic slot table ------------------------------------------------
+
+/// Slots currently counted as capacity (not retired, not draining).
+fn actor_capacity(st: &CtrlState) -> usize {
+    st.actors.iter().filter(|s| !s.retired && !s.draining).count()
+}
+
+fn inf_capacity(st: &CtrlState) -> usize {
+    st.infs.iter().filter(|s| !s.retired && !s.draining).count()
+}
+
+/// Open up to `n` actor slots without exceeding `max` capacity.
+/// Retired slots are resurrected first (stable indices); genuinely new
+/// slots attach to the least-loaded (agent, rank) pair so scale-ups
+/// spread evenly across learners.  Returns how many slots opened.
+fn grow_actor_slots(
+    st: &mut CtrlState,
+    n: usize,
+    max: usize,
+    lpa: usize,
+) -> usize {
+    let lpa = lpa.max(1);
+    let mut opened = 0;
+    for _ in 0..n {
+        if actor_capacity(st) >= max {
+            break;
+        }
+        if let Some(i) = st.actors.iter().position(|s| s.retired) {
+            let s = &mut st.actors[i];
+            s.retired = false;
+            s.draining = false;
+            s.was_lost = false;
+            opened += 1;
+            continue;
+        }
+        let lanes = st.learners.len().max(1) * lpa;
+        let mut counts = vec![0usize; lanes];
+        for s in st.actors.iter().filter(|s| !s.retired) {
+            let li = s.agent as usize * lpa + s.rank;
+            if li < lanes {
+                counts[li] += 1;
+            }
+        }
+        let li = counts
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, c)| *c)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        st.actors.push(ActorSlot {
+            worker: None,
+            agent: (li / lpa) as u32,
+            rank: li % lpa,
+            was_lost: false,
+            draining: false,
+            retired: false,
+        });
+        opened += 1;
+    }
+    opened
+}
+
+/// Drain up to `n` actor slots, never dropping capacity below `min`.
+/// Empty slots retire immediately; an occupied one (highest index
+/// first) is marked draining — its worker's next heartbeat acks
+/// stop=true, the actor finishes its episode and flushes segments, and
+/// its Deregister retires the slot.  Returns how many slots changed.
+fn drain_actor_slots(st: &mut CtrlState, n: usize, min: usize) -> usize {
+    let mut drained = 0;
+    for _ in 0..n {
+        if actor_capacity(st) <= min {
+            break;
+        }
+        if let Some(i) = st
+            .actors
+            .iter()
+            .rposition(|s| !s.retired && !s.draining && s.worker.is_none())
+        {
+            st.actors[i].retired = true;
+        } else if let Some(i) =
+            st.actors.iter().rposition(|s| !s.retired && !s.draining)
+        {
+            st.actors[i].draining = true;
+        } else {
+            break;
+        }
+        drained += 1;
+    }
+    drained
+}
+
+fn grow_inf_slots(st: &mut CtrlState, n: usize, max: usize) -> usize {
+    let mut opened = 0;
+    for _ in 0..n {
+        if inf_capacity(st) >= max {
+            break;
+        }
+        if let Some(i) = st.infs.iter().position(|s| s.retired) {
+            st.infs[i] = InfSlot::default();
+        } else {
+            st.infs.push(InfSlot::default());
+        }
+        opened += 1;
+    }
+    opened
+}
+
+fn drain_inf_slots(st: &mut CtrlState, n: usize, min: usize) -> usize {
+    let mut drained = 0;
+    for _ in 0..n {
+        if inf_capacity(st) <= min {
+            break;
+        }
+        if let Some(i) = st
+            .infs
+            .iter()
+            .rposition(|s| !s.retired && !s.draining && s.worker.is_none())
+        {
+            st.infs[i].retired = true;
+        } else if let Some(i) =
+            st.infs.iter().rposition(|s| !s.retired && !s.draining)
+        {
+            st.infs[i].draining = true;
+        } else {
+            break;
+        }
+        drained += 1;
+    }
+    drained
+}
+
+// ---- scaling policy ----------------------------------------------------
+
+/// Inf-server batch occupancy above which the serving tier is
+/// saturated (actors queue on inference) and below which it is idle.
+pub const INF_GROW_FILL: f64 = 0.8;
+pub const INF_SHRINK_FILL: f64 = 0.2;
+/// Learner staleness (model versions behind) above which actors
+/// out-produce training, and below which the learner is starved.
+pub const ACTOR_SHRINK_STALENESS: f64 = 3.0;
+pub const ACTOR_GROW_STALENESS: f64 = 1.0;
+
+/// Capacity bounds for one scalable role.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleBounds {
+    pub min: usize,
+    pub max: usize,
+}
+
+/// One policy evaluation, pure for unit testing: league-view signals in,
+/// per-role deltas out (each in {-1, 0, +1}).  A missing signal (no
+/// live slot reporting the gauge yet) never triggers a move.
+pub fn policy_decide(
+    staleness: Option<f64>,
+    batch_fill: Option<f64>,
+    actor_cap: usize,
+    inf_cap: usize,
+    actor_bounds: ScaleBounds,
+    inf_bounds: ScaleBounds,
+) -> (i64, i64) {
+    let mut actor = 0i64;
+    let mut inf = 0i64;
+    if let Some(f) = batch_fill {
+        if f > INF_GROW_FILL && inf_cap < inf_bounds.max {
+            inf = 1;
+        } else if f < INF_SHRINK_FILL && inf_cap > inf_bounds.min {
+            inf = -1;
+        }
+    }
+    if let Some(s) = staleness {
+        if s > ACTOR_SHRINK_STALENESS && actor_cap > actor_bounds.min {
+            actor = -1;
+        } else if s < ACTOR_GROW_STALENESS && actor_cap < actor_bounds.max {
+            actor = 1;
+        }
+    }
+    (actor, inf)
+}
+
+/// Publish one scaling decision into the league view as role
+/// "autoscaler" — it rides the same merge path as worker snapshots, so
+/// every decision shows up in `--stats-jsonl` rows and the `stats` CLI.
+fn note_scale(
+    view: &LeagueView,
+    seq: &AtomicU64,
+    st: &CtrlState,
+    up_a: u64,
+    down_a: u64,
+    up_i: u64,
+    down_i: u64,
+) {
+    let counters: Vec<(String, u64)> = [
+        ("scale_up_actor", up_a),
+        ("scale_down_actor", down_a),
+        ("scale_up_inf", up_i),
+        ("scale_down_inf", down_i),
+    ]
+    .iter()
+    .filter(|(_, v)| *v > 0)
+    .map(|(k, v)| (k.to_string(), *v))
+    .collect();
+    view.ingest(&RoleStats {
+        role: "autoscaler".into(),
+        slot: 0,
+        seq: seq.fetch_add(1, Ordering::Relaxed),
+        interval_ms: 1_000,
+        counters,
+        gauges: vec![
+            ("actor_slots".into(), actor_capacity(st) as f64),
+            ("inf_slots".into(), inf_capacity(st) as f64),
+        ],
+        ..Default::default()
+    });
 }
 
 /// Remove `id` and free its slot.  `lost = true` marks the slot so the
@@ -165,6 +396,13 @@ fn free_slot(st: &mut CtrlState, id: u64, lost: bool, view: &LeagueView) {
                 if lost {
                     s.was_lost = true;
                 }
+                // scale-down completes when the draining occupant goes
+                // away (cleanly or not): the slot leaves the capacity
+                // pool instead of being re-handed out
+                if s.draining {
+                    s.draining = false;
+                    s.retired = true;
+                }
             }
         }
         Role::Inf => {
@@ -174,6 +412,10 @@ fn free_slot(st: &mut CtrlState, id: u64, lost: bool, view: &LeagueView) {
                 s.addr = None;
                 if lost {
                     s.was_lost = true;
+                }
+                if s.draining {
+                    s.draining = false;
+                    s.retired = true;
                 }
             }
         }
@@ -187,6 +429,9 @@ struct Ctx {
     slice: RunSlice,
     learners_per_agent: usize,
     inf_servers: usize,
+    /// with the scaling loop on, surplus workers park in Retry instead
+    /// of being rejected — a later scale-up admits them
+    autoscale: bool,
 }
 
 fn retry(backoff_ms: u32, reason: &str) -> Msg {
@@ -275,12 +520,17 @@ fn handle_register(
             })
         }
         Role::Inf => {
-            if st.infs.is_empty() {
+            if st.infs.is_empty() && !ctx.autoscale {
                 return Msg::Err("this run declares no inf-servers".into());
             }
-            let slot =
-                pick_slot(slot_hint, st.infs.len(), |s| st.infs[s].worker.is_none());
+            let slot = pick_slot(slot_hint, st.infs.len(), |s| {
+                let i = &st.infs[s];
+                i.worker.is_none() && !i.retired && !i.draining
+            });
             let Some(slot) = slot else {
+                // under autoscale this parks the worker in the idle
+                // pool: the next scale-up opens a slot and its retry
+                // lands in it
                 return retry(1_000, "no free inf-server slot");
             };
             let id = admit(st, Role::Inf, slot);
@@ -304,22 +554,38 @@ fn handle_register(
         }
         Role::Actor => {
             // actors need their learner's data port and, when the run
-            // declares inf-servers, the FULL set of serving addresses —
-            // assigning against a partial set would pile every actor
-            // onto whichever inf-server reported ready first (thread
-            // mode brings all InfServers up before any actor spawns)
-            let inf_ready: Vec<String> =
-                st.infs.iter().filter_map(|s| s.addr.clone()).collect();
-            if inf_ready.len() < ctx.inf_servers {
+            // declares inf-servers, the FULL declared set of serving
+            // addresses — assigning against a partial set would pile
+            // every actor onto whichever inf-server reported ready
+            // first.  Slots opened beyond the declared count by the
+            // autoscaler do NOT gate (a freshly grown, still-empty slot
+            // must not stall actor admission); actors spread over
+            // whatever is ready once the new server reports in.
+            let inf_ready: Vec<String> = st
+                .infs
+                .iter()
+                .filter(|s| !s.retired && !s.draining)
+                .filter_map(|s| s.addr.clone())
+                .collect();
+            let need = ctx.inf_servers.min(
+                st.infs.iter().filter(|s| !s.retired && !s.draining).count(),
+            );
+            if inf_ready.len() < need {
                 return retry(300, "waiting for inf-server endpoints");
             }
             let slot = pick_slot(slot_hint, st.actors.len(), |i| {
                 let s = &st.actors[i];
                 s.worker.is_none()
+                    && !s.retired
+                    && !s.draining
                     && st.learners[s.agent as usize].data_addrs.len() > s.rank
             });
             let Some(slot) = slot else {
-                return if st.actors.iter().any(|s| s.worker.is_none()) {
+                return if st
+                    .actors
+                    .iter()
+                    .any(|s| s.worker.is_none() && !s.retired && !s.draining)
+                {
                     retry(300, "waiting for learner data endpoints")
                 } else {
                     retry(1_000, "no free actor slot")
@@ -335,12 +601,13 @@ fn handle_register(
                 (s.agent, s.rank)
             };
             let data_addr = st.learners[agent as usize].data_addrs[rank].clone();
-            // slot-stable mapping over the full set, mirroring thread
-            // mode's `id % inf_addrs.len()` balance
-            let inf_addr = if ctx.inf_servers > 0 {
-                inf_ready[slot % ctx.inf_servers].clone()
-            } else {
+            // slot-stable mapping over every ready server (declared or
+            // autoscaled), mirroring thread mode's
+            // `id % inf_addrs.len()` balance
+            let inf_addr = if inf_ready.is_empty() {
                 String::new()
+            } else {
+                inf_ready[slot % inf_ready.len()].clone()
             };
             Msg::Assign(WorkerAssignment {
                 worker_id: id,
@@ -372,7 +639,8 @@ fn merged_report(view: &LeagueView, pool_hubs: &[Arc<MetricsHub>]) -> LeagueRepo
     view.report()
 }
 
-/// The multi-process control plane: CoreServices + worker registry.
+/// The multi-process control plane: CoreServices + worker registry +
+/// (optionally) the closed-loop autoscaler.
 pub struct Controller {
     pub addr: String,
     pub cfg: RunConfig,
@@ -384,6 +652,12 @@ pub struct Controller {
     server: RepServer,
     reaper_stop: Arc<AtomicBool>,
     reaper: Option<std::thread::JoinHandle<()>>,
+    autoscaler: Option<std::thread::JoinHandle<()>>,
+    actor_bounds: ScaleBounds,
+    inf_bounds: ScaleBounds,
+    /// sequence for "autoscaler" RoleStats rows (shared with the policy
+    /// thread; seq 0 is reserved for "no dedupe")
+    scale_seq: Arc<AtomicU64>,
 }
 
 impl Controller {
@@ -423,10 +697,37 @@ impl Controller {
                         agent,
                         rank,
                         was_lost: false,
+                        draining: false,
+                        retired: false,
                     });
                 }
             }
         }
+        // scaling bounds: explicit knobs win; 0 derives min=1 (an inf
+        // tier only exists when declared) and max = 4x the declared size
+        let initial_actors = cfg.n_agents as usize
+            * cfg.learners_per_agent
+            * cfg.actors_per_learner;
+        let actor_bounds = ScaleBounds {
+            min: if cfg.min_actor_slots > 0 { cfg.min_actor_slots } else { 1 },
+            max: if cfg.max_actor_slots > 0 {
+                cfg.max_actor_slots
+            } else {
+                initial_actors.max(1) * 4
+            },
+        };
+        let inf_bounds = ScaleBounds {
+            min: if cfg.min_inf_slots > 0 {
+                cfg.min_inf_slots
+            } else {
+                usize::from(cfg.inf_servers > 0)
+            },
+            max: if cfg.max_inf_slots > 0 {
+                cfg.max_inf_slots
+            } else {
+                cfg.inf_servers * 4
+            },
+        };
         let state = Arc::new(Mutex::new(CtrlState {
             learners: (0..cfg.n_agents).map(|_| LearnerSlot::default()).collect(),
             actors,
@@ -439,6 +740,24 @@ impl Controller {
             draining: false,
             stop_all: false,
         }));
+        if cfg.autoscale {
+            // honour explicit minimums from the start — a run declaring
+            // min_inf_slots=2 should open both before any signal fires
+            let mut st = state.lock().unwrap();
+            let cur = actor_capacity(&st);
+            if cur < actor_bounds.min {
+                grow_actor_slots(
+                    &mut st,
+                    actor_bounds.min - cur,
+                    actor_bounds.max,
+                    cfg.learners_per_agent,
+                );
+            }
+            let cur = inf_capacity(&st);
+            if cur < inf_bounds.min {
+                grow_inf_slots(&mut st, inf_bounds.min - cur, inf_bounds.max);
+            }
+        }
 
         let adv = cfg.advertise_host.as_deref();
         let ctx = Arc::new(Ctx {
@@ -451,6 +770,7 @@ impl Controller {
             slice: cfg.slice(),
             learners_per_agent: cfg.learners_per_agent,
             inf_servers: cfg.inf_servers,
+            autoscale: cfg.autoscale,
         });
         // a slot whose last snapshot predates the heartbeat timeout is
         // stale even before the reaper frees it
@@ -459,6 +779,9 @@ impl Controller {
         )));
         let pool_hubs: Vec<Arc<MetricsHub>> =
             core.pools.iter().map(|p| p.hub().clone()).collect();
+        let shard_fns: Vec<_> =
+            core.pools.iter().map(|p| p.shard_info_fn()).collect();
+        let pool_live = core.pool_live.clone();
         let s2 = state.clone();
         let v2 = view.clone();
         let lpa = cfg.learners_per_agent;
@@ -523,8 +846,23 @@ impl Controller {
                                 st.learners[slot].steps = steps;
                                 st.learners[slot].done = done;
                             }
+                            // per-slot drain: a scale-down stops just
+                            // this occupant, not the whole role
+                            let slot_draining = match role {
+                                Role::Actor => {
+                                    let s = &st.actors[slot];
+                                    s.draining || s.retired
+                                }
+                                Role::Inf => {
+                                    let s = &st.infs[slot];
+                                    s.draining || s.retired
+                                }
+                                Role::Learner => false,
+                            };
                             Msg::HeartbeatAck {
-                                stop: stop || (draining && role == Role::Actor),
+                                stop: stop
+                                    || (draining && role == Role::Actor)
+                                    || slot_draining,
                             }
                         }
                     }
@@ -542,6 +880,16 @@ impl Controller {
                 // read-only for the same reason: the trace probe copies
                 // the view's span ring + slow log without draining them
                 Msg::TraceQuery => Msg::TraceReply(v2.spans()),
+                // per-replica shard ownership + store stats for the
+                // `stats` CLI pool section; dead replicas are elided
+                Msg::PoolShardQuery => Msg::PoolShardReply(
+                    shard_fns
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| pool_live[*i].load(Ordering::Relaxed))
+                        .map(|(_, f)| f())
+                        .collect(),
+                ),
                 Msg::DeployStats => {
                     let s = stats_of(&st);
                     Msg::DeployStatsReply {
@@ -613,6 +961,124 @@ impl Controller {
                 }
             })?;
 
+        // ---- closed-loop autoscaler ------------------------------------
+        // every scale_every_secs: read the league view's learner
+        // staleness and inf-server batch_fill (slot means), decide via
+        // the pure policy, apply at most one slot move per role, with a
+        // 2x cadence cooldown so a decision's effect is observed before
+        // the next one.
+        let scale_seq = Arc::new(AtomicU64::new(1));
+        let autoscaler = if cfg.autoscale {
+            let s4 = state.clone();
+            let v4 = view.clone();
+            let stop4 = reaper_stop.clone();
+            let seq4 = scale_seq.clone();
+            let every = Duration::from_secs(cfg.scale_every_secs.max(1));
+            let cooldown = every * 2;
+            let lpa2 = cfg.learners_per_agent;
+            Some(
+                std::thread::Builder::new()
+                    .name("ctrl-autoscaler".into())
+                    .spawn(move || {
+                        let mut last_eval = Instant::now();
+                        let mut last_actor: Option<Instant> = None;
+                        let mut last_inf: Option<Instant> = None;
+                        while !stop4.load(Ordering::Relaxed) {
+                            std::thread::sleep(Duration::from_millis(50));
+                            if last_eval.elapsed() < every {
+                                continue;
+                            }
+                            last_eval = Instant::now();
+                            let r = v4.report();
+                            let gauge = |role: &str, k: &str| {
+                                r.roles
+                                    .iter()
+                                    .find(|x| x.role == role)
+                                    .and_then(|x| {
+                                        x.gauges.iter().find(|(n, _)| n == k)
+                                    })
+                                    .map(|(_, v)| *v)
+                            };
+                            let staleness = gauge("learner", "staleness");
+                            let fill = gauge("inf-server", "batch_fill");
+                            let mut st = s4.lock().unwrap();
+                            if st.stop_all || st.draining {
+                                continue;
+                            }
+                            let (da, di) = policy_decide(
+                                staleness,
+                                fill,
+                                actor_capacity(&st),
+                                inf_capacity(&st),
+                                actor_bounds,
+                                inf_bounds,
+                            );
+                            let cooled = |t: &Option<Instant>| {
+                                t.map_or(true, |t| t.elapsed() >= cooldown)
+                            };
+                            let (mut up_a, mut down_a) = (0u64, 0u64);
+                            let (mut up_i, mut down_i) = (0u64, 0u64);
+                            if da != 0 && cooled(&last_actor) {
+                                let n = if da > 0 {
+                                    grow_actor_slots(
+                                        &mut st,
+                                        1,
+                                        actor_bounds.max,
+                                        lpa2,
+                                    )
+                                } else {
+                                    drain_actor_slots(&mut st, 1, actor_bounds.min)
+                                };
+                                if n > 0 {
+                                    if da > 0 {
+                                        up_a = n as u64;
+                                    } else {
+                                        down_a = n as u64;
+                                    }
+                                    last_actor = Some(Instant::now());
+                                }
+                            }
+                            if di != 0 && cooled(&last_inf) {
+                                let n = if di > 0 {
+                                    grow_inf_slots(&mut st, 1, inf_bounds.max)
+                                } else {
+                                    drain_inf_slots(&mut st, 1, inf_bounds.min)
+                                };
+                                if n > 0 {
+                                    if di > 0 {
+                                        up_i = n as u64;
+                                    } else {
+                                        down_i = n as u64;
+                                    }
+                                    last_inf = Some(Instant::now());
+                                }
+                            }
+                            if up_a + down_a + up_i + down_i > 0 {
+                                note_scale(
+                                    &v4, &seq4, &st, up_a, down_a, up_i, down_i,
+                                );
+                                eprintln!(
+                                    "controller: autoscale actors {:+} infs \
+                                     {:+} -> {} actor / {} inf slots \
+                                     (staleness {} batch_fill {})",
+                                    up_a as i64 - down_a as i64,
+                                    up_i as i64 - down_i as i64,
+                                    actor_capacity(&st),
+                                    inf_capacity(&st),
+                                    staleness
+                                        .map(|v| format!("{v:.2}"))
+                                        .unwrap_or_else(|| "n/a".into()),
+                                    fill.map(|v| format!("{v:.2}"))
+                                        .unwrap_or_else(|| "n/a".into()),
+                                );
+                            }
+                        }
+                    })?,
+            )
+        } else {
+            None
+        };
+
         Ok(Controller {
             addr: server.addr.clone(),
             cfg,
@@ -623,7 +1089,60 @@ impl Controller {
             server,
             reaper_stop,
             reaper: Some(reaper),
+            autoscaler,
+            actor_bounds,
+            inf_bounds,
+            scale_seq,
         })
+    }
+
+    /// Operator/test entry into the elastic slot table: grow
+    /// (`delta > 0`) or drain (`delta < 0`) `|delta|` slots of `role`
+    /// ("actor" | "inf-server"), clamped to the configured bounds.  The
+    /// learner topology is fixed by `n_agents` and cannot be scaled.
+    /// Returns how many slots actually changed state; every applied
+    /// change is published as an "autoscaler" telemetry row.
+    pub fn request_scale(&self, role: &str, delta: i64) -> usize {
+        let Some(role) = Role::parse(role) else { return 0 };
+        let mut st = self.state.lock().unwrap();
+        let n = delta.unsigned_abs() as usize;
+        let applied = match (role, delta >= 0) {
+            (Role::Actor, true) => grow_actor_slots(
+                &mut st,
+                n,
+                self.actor_bounds.max,
+                self.cfg.learners_per_agent,
+            ),
+            (Role::Actor, false) => {
+                drain_actor_slots(&mut st, n, self.actor_bounds.min)
+            }
+            (Role::Inf, true) => grow_inf_slots(&mut st, n, self.inf_bounds.max),
+            (Role::Inf, false) => {
+                drain_inf_slots(&mut st, n, self.inf_bounds.min)
+            }
+            (Role::Learner, _) => 0,
+        };
+        if applied > 0 {
+            let a = applied as u64;
+            let (up_a, down_a, up_i, down_i) = match (role, delta >= 0) {
+                (Role::Actor, true) => (a, 0, 0, 0),
+                (Role::Actor, false) => (0, a, 0, 0),
+                (Role::Inf, true) => (0, 0, a, 0),
+                (Role::Inf, false) => (0, 0, 0, a),
+                (Role::Learner, _) => (0, 0, 0, 0),
+            };
+            note_scale(
+                &self.view, &self.scale_seq, &st, up_a, down_a, up_i, down_i,
+            );
+            eprintln!(
+                "controller: scale {} {delta:+} applied {applied} -> {} actor \
+                 / {} inf slots",
+                role.as_str(),
+                actor_capacity(&st),
+                inf_capacity(&st),
+            );
+        }
+        applied
     }
 
     pub fn league(&self) -> &crate::league::LeagueMgrServer {
@@ -702,6 +1221,9 @@ impl Controller {
         if let Some(h) = self.reaper.take() {
             h.join().ok();
         }
+        if let Some(h) = self.autoscaler.take() {
+            h.join().ok();
+        }
         self.server.shutdown();
         // every worker is gone (or timed out): pools hold everything the
         // learners will ever publish, so the final snapshot is complete
@@ -729,23 +1251,24 @@ impl Controller {
         if let Some(h) = self.reaper.take() {
             h.join().ok();
         }
+        if let Some(h) = self.autoscaler.take() {
+            h.join().ok();
+        }
         self.server.shutdown();
         self.core.crash();
     }
 
     /// Chaos drill: kill one in-process ModelPool replica (they live
     /// inside the controller process, so the schedule can't SIGKILL
-    /// them individually).  Stops the highest-index live replica —
-    /// never replica 0, whose store backs the snapshotter — leaving its
-    /// address dead so clients must fail over.  Returns the downed
-    /// replica's address, or None if no replica can be spared.
-    pub fn chaos_kill_pool(&mut self) -> Option<String> {
-        if self.core.pools.len() < 2 {
-            return None;
-        }
-        let mut victim = self.core.pools.pop()?;
-        victim.shutdown();
-        Some(victim.addr.clone())
+    /// them individually) and run the real failover — tombstone the
+    /// shard map, rebalance the survivors back to R owners per agent,
+    /// and verify the union of live stores is bit-exact with the
+    /// pre-kill state.  Stops the highest-index live replica — never
+    /// replica 0, whose spill dir may back a resume.  Returns the
+    /// downed address, the rebalance transfer stats, and the
+    /// bit-exactness verdict; None if no replica can be spared.
+    pub fn chaos_kill_pool(&mut self) -> Option<(String, MoveStats, bool)> {
+        self.core.kill_pool()
     }
 }
 
@@ -1241,5 +1764,214 @@ mod tests {
             other => panic!("{other:?}"),
         };
         assert_eq!(actor.inf_addr, "127.0.0.1:40005");
+    }
+
+    /// The pure policy: thresholds fire in the right direction and the
+    /// bounds clamp both ways.
+    #[test]
+    fn policy_decide_thresholds_and_bounds() {
+        let ab = ScaleBounds { min: 1, max: 8 };
+        let ib = ScaleBounds { min: 1, max: 4 };
+        // saturated inf tier grows; idle one shrinks; mid-band holds
+        assert_eq!(policy_decide(None, Some(0.9), 4, 2, ab, ib), (0, 1));
+        assert_eq!(policy_decide(None, Some(0.1), 4, 2, ab, ib), (0, -1));
+        assert_eq!(policy_decide(None, Some(0.5), 4, 2, ab, ib), (0, 0));
+        // starved learner grows actors; runaway staleness drains them
+        assert_eq!(policy_decide(Some(0.5), None, 4, 2, ab, ib), (1, 0));
+        assert_eq!(policy_decide(Some(5.0), None, 4, 2, ab, ib), (-1, 0));
+        assert_eq!(policy_decide(Some(2.0), None, 4, 2, ab, ib), (0, 0));
+        // bounds clamp: at max nothing grows, at min nothing drains
+        assert_eq!(policy_decide(Some(0.5), Some(0.9), 8, 4, ab, ib), (0, 0));
+        assert_eq!(policy_decide(Some(5.0), Some(0.1), 1, 1, ab, ib), (0, 0));
+        // no signal, no move
+        assert_eq!(policy_decide(None, None, 4, 2, ab, ib), (0, 0));
+    }
+
+    /// The elastic slot table end to end: a late worker is admitted only
+    /// after a scale-up opens a slot; a scale-down drains exactly one
+    /// occupant (per-slot stop ack) and its clean exit retires the slot
+    /// rather than re-handing it out.
+    #[test]
+    fn request_scale_grows_and_drains_actor_slots() {
+        let ctrl = ctrl(1, 0);
+        let c = ReqClient::connect(&ctrl.addr);
+        let learner = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40020".into()],
+        })
+        .unwrap();
+        let a0 = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        // the single declared slot is taken: a late joiner parks
+        assert!(matches!(register(&c, ROLE_ACTOR, -1), Msg::Retry { .. }));
+        assert_eq!(ctrl.deploy_stats().actor_slots, 1);
+
+        // grow: the late joiner's retry now lands in the new slot
+        assert_eq!(ctrl.request_scale(ROLE_ACTOR, 2), 2);
+        assert_eq!(ctrl.deploy_stats().actor_slots, 3);
+        let a1 = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_ne!(a1.slot, a0.slot);
+        assert_eq!(a1.data_addr, "127.0.0.1:40020");
+
+        // drain one: the empty grown slot retires instantly (capacity
+        // 2), and no occupant is told to stop
+        assert_eq!(ctrl.request_scale(ROLE_ACTOR, -1), 1);
+        assert_eq!(ctrl.deploy_stats().actor_slots, 2);
+        match c
+            .request(&Msg::Heartbeat {
+                worker_id: a1.worker_id,
+                steps: 0,
+                done: false,
+                stats: None,
+            })
+            .unwrap()
+        {
+            Msg::HeartbeatAck { stop: false } => {}
+            other => panic!("{other:?}"),
+        }
+
+        // drain again: both remaining slots are occupied, so the
+        // highest-index occupant is told to stop — the other is not
+        assert_eq!(ctrl.request_scale(ROLE_ACTOR, -1), 1);
+        let ack = |id| match c
+            .request(&Msg::Heartbeat {
+                worker_id: id,
+                steps: 0,
+                done: false,
+                stats: None,
+            })
+            .unwrap()
+        {
+            Msg::HeartbeatAck { stop } => stop,
+            other => panic!("{other:?}"),
+        };
+        assert!(ack(a1.worker_id), "draining occupant must be stopped");
+        assert!(!ack(a0.worker_id), "survivor must keep running");
+        // clean exit retires the slot: capacity drops and the slot is
+        // not handed back out even with a hint
+        c.request(&Msg::Deregister { worker_id: a1.worker_id }).unwrap();
+        assert_eq!(ctrl.deploy_stats().actor_slots, 1);
+        match register(&c, ROLE_ACTOR, a1.slot as i64) {
+            Msg::Retry { .. } => {}
+            other => panic!("retired slot was re-handed out: {other:?}"),
+        }
+        // floor: min_actor_slots derives to 1, so the last slot stays
+        assert_eq!(ctrl.request_scale(ROLE_ACTOR, -1), 0);
+        // scaling telemetry rides the normal league view
+        let r = ctrl.telemetry_report();
+        let auto = role(&r, "autoscaler");
+        assert_eq!(total(auto, "scale_up_actor"), 2);
+        assert_eq!(total(auto, "scale_down_actor"), 2);
+    }
+
+    /// A run that declares inf-servers can grow the tier at runtime: the
+    /// late-joining worker parked in Retry is admitted into the new
+    /// slot, and new actors spread over every READY server.
+    #[test]
+    fn scaled_up_inf_slot_admits_late_worker() {
+        let ctrl = ctrl(2, 1);
+        let c = ReqClient::connect(&ctrl.addr);
+        let learner = match register(&c, ROLE_LEARNER, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        c.request(&Msg::WorkerReady {
+            worker_id: learner.worker_id,
+            addrs: vec!["127.0.0.1:40021".into()],
+        })
+        .unwrap();
+        let inf0 = match register(&c, ROLE_INF, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        c.request(&Msg::WorkerReady {
+            worker_id: inf0.worker_id,
+            addrs: vec!["127.0.0.1:40022".into()],
+        })
+        .unwrap();
+        // declared capacity is full: a surplus inf worker parks
+        assert!(matches!(register(&c, ROLE_INF, -1), Msg::Retry { .. }));
+
+        assert_eq!(ctrl.request_scale(ROLE_INF, 1), 1);
+        assert_eq!(ctrl.deploy_stats().inf_slots, 2);
+        // the new, still-empty slot must NOT gate actor admission
+        let a0 = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(a0.inf_addr, "127.0.0.1:40022");
+        // the parked worker's retry lands in the grown slot
+        let inf1 = match register(&c, ROLE_INF, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        assert_ne!(inf1.slot, inf0.slot);
+        c.request(&Msg::WorkerReady {
+            worker_id: inf1.worker_id,
+            addrs: vec!["127.0.0.1:40023".into()],
+        })
+        .unwrap();
+        // slot-stable spread over both ready servers
+        let a1 = match register(&c, ROLE_ACTOR, -1) {
+            Msg::Assign(a) => a,
+            other => panic!("{other:?}"),
+        };
+        let expect = ["127.0.0.1:40022", "127.0.0.1:40023"]
+            [a1.slot as usize % 2];
+        assert_eq!(a1.inf_addr, expect);
+    }
+
+    /// The wire probe behind the `stats` CLI pool section: one
+    /// PoolShardInfo per live replica, consistent shard-map versions,
+    /// and after a kill:pool drill the dead replica is elided while the
+    /// survivors report the bumped map.
+    #[test]
+    fn pool_shard_query_reports_live_replicas() {
+        let mut cfg = RunConfig::default();
+        cfg.env = "rps".into();
+        cfg.mode = "procs".into();
+        cfg.model_pools = 3;
+        cfg.pool_replication = 2;
+        cfg.heartbeat_ms = 50;
+        cfg.heartbeat_timeout_ms = 3_000;
+        let mut ctrl =
+            Controller::start(cfg, vec!["lr".into()], vec![3e-4]).unwrap();
+        let c = ReqClient::connect(&ctrl.addr);
+        let infos = match c.request(&Msg::PoolShardQuery).unwrap() {
+            Msg::PoolShardReply(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(infos.len(), 3);
+        for (i, inf) in infos.iter().enumerate() {
+            assert_eq!(inf.replica, i as u32);
+            assert_eq!(inf.map_version, 1);
+            assert!(!inf.addr.is_empty());
+        }
+        // kill one replica: the probe elides it and survivors hold v2
+        let (addr, _moved, bit_exact) = ctrl.chaos_kill_pool().unwrap();
+        assert_eq!(addr, infos[2].addr);
+        assert!(bit_exact, "empty pools must trivially round-trip");
+        let infos = match c.request(&Msg::PoolShardQuery).unwrap() {
+            Msg::PoolShardReply(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(infos.len(), 2);
+        for inf in &infos {
+            assert_eq!(inf.map_version, 2);
+        }
+        // a second kill still has a survivor to fail over to...
+        let (addr2, _, _) = ctrl.chaos_kill_pool().unwrap();
+        assert_ne!(addr2, addr);
+        // ...but the last live replica is never sacrificed
+        assert!(ctrl.chaos_kill_pool().is_none());
     }
 }

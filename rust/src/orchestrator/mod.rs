@@ -20,13 +20,15 @@ pub mod controller;
 pub mod worker;
 
 use crate::actor::{Actor, ActorConfig, PolicyBackend};
-use crate::checkpoint::{CheckpointMgr, LeagueSnapshot};
+use crate::checkpoint::{merge_shard_models, CheckpointMgr, LeagueSnapshot};
 use crate::config::RunConfig;
 use crate::inference::{InfServer, InfServerConfig};
 use crate::league::{LeagueConfig, LeagueMgrServer, LeagueStats};
 use crate::learner::allreduce::Allreduce;
 use crate::learner::{Learner, LearnerConfig, TrainStats};
-use crate::model_pool::{ModelPoolServer, PoolOptions};
+use crate::model_pool::{
+    self, MapHolder, ModelPoolServer, MoveStats, PoolOptions,
+};
 use crate::proto::LeagueReport;
 use crate::runtime::Engine;
 use crate::telemetry::{snapshot_role, trace, LeagueView};
@@ -55,6 +57,14 @@ pub struct CoreServices {
     pub league: LeagueMgrServer,
     pub pools: Vec<ModelPoolServer>,
     pub pool_addrs: Vec<String>,
+    /// the deployment's shard map: one holder shared by every
+    /// in-process replica, the controller's rebalance path, and the
+    /// snapshotter's placement-aware resume preload
+    pub holder: Arc<MapHolder>,
+    /// per-replica liveness, index == shard slot.  [`kill_pool`]
+    /// (Self::kill_pool) flips a flag instead of removing the server so
+    /// slot indices — and therefore ring placement — stay stable.
+    pub pool_live: Arc<Vec<AtomicBool>>,
     snapshotter: Option<std::thread::JoinHandle<()>>,
     /// raised only after every writer of league/pool state is quiesced,
     /// so the snapshotter's final save is complete
@@ -97,10 +107,24 @@ impl CoreServices {
             .as_ref()
             .or(cfg.resume.as_ref())
             .map(PathBuf::from);
+        // every client built in this process (and, via RunSlice, in the
+        // workers) derives placement with the run's replication factor
+        model_pool::set_default_replication(cfg.effective_replication());
         let bind = format!("{bind_host}:0");
+        // the map exists before the ephemeral ports do: placement is
+        // index-keyed, so placeholder addresses yield the identical
+        // ring and are swapped for the real ones below without a
+        // version bump (workers derive the same v1 map from the
+        // assignment's address list)
+        let placeholders: Vec<String> =
+            (0..cfg.model_pools).map(|i| format!("pending-{i}")).collect();
+        let holder = Arc::new(MapHolder::new(model_pool::shard::bootstrap_map(
+            &placeholders,
+            cfg.effective_replication() as u32,
+        )));
         let pools: Vec<ModelPoolServer> = (0..cfg.model_pools)
             .map(|i| {
-                ModelPoolServer::start_with(
+                ModelPoolServer::start_sharded(
                     &bind,
                     PoolOptions {
                         spill_dir: spill_root
@@ -108,13 +132,28 @@ impl CoreServices {
                             .map(|d| d.join(format!("spill-{i}"))),
                         mem_budget: cfg.pool_mem_budget_bytes,
                     },
+                    holder.clone(),
+                    i as u32,
                 )
             })
             .collect::<Result<_>>()?;
         let pool_addrs: Vec<String> = pools.iter().map(|p| p.addr.clone()).collect();
+        holder.set_addrs(pool_addrs.clone());
+        let pool_live: Arc<Vec<AtomicBool>> =
+            Arc::new(pools.iter().map(|_| AtomicBool::new(true)).collect());
         if let Some(snap) = &resume_snap {
-            for p in &pools {
-                p.preload(&snap.models);
+            // placement-aware preload: each blob lands only on its R
+            // owners, so a resumed deployment starts with exactly the
+            // layout a fresh run converges to
+            let (_, ring) = holder.get();
+            for (i, p) in pools.iter().enumerate() {
+                let mine: Vec<_> = snap
+                    .models
+                    .iter()
+                    .filter(|b| ring.is_owner(b.key.agent, i as u32))
+                    .cloned()
+                    .collect();
+                p.preload(&mine);
             }
         }
 
@@ -145,7 +184,13 @@ impl CoreServices {
             Some(dir) => {
                 let mgr = CheckpointMgr::open(dir, cfg.checkpoint_keep)?;
                 let snap_league = league.snapshot_fn();
-                let snap_blobs = pools[0].blobs_fn();
+                // one blob source per replica: the snapshot is the
+                // deduplicated union of every LIVE shard, so it stays
+                // complete across kill:pool failovers (R >= 2 keeps a
+                // surviving copy of everything)
+                let snap_blob_fns: Vec<_> =
+                    pools.iter().map(|p| p.blobs_fn()).collect();
+                let live2 = pool_live.clone();
                 let stop2 = snap_stop.clone();
                 let skip2 = snap_skip_final.clone();
                 let every = Duration::from_secs(cfg.checkpoint_every_secs);
@@ -155,7 +200,16 @@ impl CoreServices {
                         .spawn(move || {
                             let save = |mgr: &CheckpointMgr| {
                                 let mut snap = snap_league();
-                                snap.models = snap_blobs();
+                                snap.models = merge_shard_models(
+                                    snap_blob_fns
+                                        .iter()
+                                        .enumerate()
+                                        .filter(|(i, _)| {
+                                            live2[*i].load(Ordering::Relaxed)
+                                        })
+                                        .map(|(_, f)| f())
+                                        .collect(),
+                                );
                                 if let Err(e) = mgr.save(&snap) {
                                     eprintln!("snapshot failed: {e:#}");
                                 }
@@ -181,10 +235,64 @@ impl CoreServices {
             league,
             pools,
             pool_addrs,
+            holder,
+            pool_live,
             snapshotter,
             snap_stop,
             snap_skip_final,
         })
+    }
+
+    /// The deduplicated union of every live shard's blobs — the league's
+    /// complete model set regardless of placement.
+    fn live_union(&self) -> Vec<crate::proto::ModelBlob> {
+        merge_shard_models(
+            self.pools
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| self.pool_live[*i].load(Ordering::Relaxed))
+                .map(|(_, p)| p.all_blobs())
+                .collect(),
+        )
+    }
+
+    /// Chaos drill: kill the highest-index live ModelPool replica and
+    /// run the real failover path — close its port, tombstone the shard
+    /// map (version bump; clients learn via `WrongShard` piggyback or
+    /// refresh), rebalance the survivors so every agent is back at R
+    /// owners, and check the union of live stores is bit-exact with the
+    /// pre-kill state (R >= 2 guarantees a surviving copy of every
+    /// blob).  Returns the downed address, the transfer stats, and the
+    /// bit-exactness verdict; None when fewer than two replicas are
+    /// live (replica 0 is never killed — its spill dir may back a
+    /// resume).
+    pub fn kill_pool(&mut self) -> Option<(String, MoveStats, bool)> {
+        let live_idx: Vec<usize> = (0..self.pools.len())
+            .filter(|&i| self.pool_live[i].load(Ordering::Relaxed))
+            .collect();
+        if live_idx.len() < 2 {
+            return None;
+        }
+        let victim = *live_idx.last().unwrap();
+        let before = self.live_union();
+        self.pools[victim].shutdown();
+        self.pool_live[victim].store(false, Ordering::Relaxed);
+        let (old_map, _) = self.holder.get();
+        let new_map = model_pool::shard::without_replica(&old_map, victim as u32);
+        self.holder.install(new_map.clone());
+        let live_flags: Vec<bool> = self
+            .pool_live
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let moved =
+            model_pool::rebalance(&self.pools, &live_flags, &old_map, &new_map);
+        // containment, not equality: a learner may legitimately land a
+        // new model during the failover window — bit-exact means every
+        // PRE-KILL blob survived byte-for-byte, not that writes paused
+        let after = self.live_union();
+        let bit_exact = before.iter().all(|b| after.contains(b));
+        Some((self.pools[victim].addr.clone(), moved, bit_exact))
     }
 
     /// Force a snapshot right now (tests / operator tooling); returns
@@ -196,7 +304,7 @@ impl CoreServices {
             .context("snapshot_now requires cfg.checkpoint_dir")?;
         let mgr = CheckpointMgr::open(dir, cfg.checkpoint_keep)?;
         let mut snap = self.league.snapshot();
-        snap.models = self.pools[0].all_blobs();
+        snap.models = self.live_union();
         mgr.save(&snap)
     }
 

@@ -270,6 +270,12 @@ pub fn run_worker(
         );
         // run-wide tracing knobs arrive with the assignment
         trace::set_slow_ms(asn.run.trace_slow_ms);
+        // ... as does the pool replication factor: every ModelPoolClient
+        // this role builds derives the same shard placement the
+        // controller's replicas enforce
+        crate::model_pool::set_default_replication(
+            asn.run.pool_replication as usize,
+        );
         // ... and so does the fault plan: every process compiles the
         // same seeded plan, scoped here to this worker's role
         fault::set_role(role);

@@ -122,6 +122,48 @@ pub struct ModelBlob {
     pub frozen: bool,
 }
 
+/// Versioned placement map for the sharded ModelPool: which replica
+/// slots exist, and how many copies of each agent's models the ring
+/// keeps.  Placement hashes replica *slot indices* (not addresses), so
+/// every process derives the identical ring from the same map and a
+/// retired replica leaves a tombstone (`""`) instead of shifting the
+/// survivors' slots — removal moves only the victim's keys (see
+/// `model_pool::shard`).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ShardMap {
+    /// bumped on every membership change; clients replace any older map
+    pub version: u64,
+    /// replica address per slot; `""` marks a retired (dead) slot
+    pub replicas: Vec<String>,
+    /// copies kept per agent (effective R = min(replication, live slots))
+    pub replication: u32,
+}
+
+impl ShardMap {
+    /// Slot indices still serving (non-tombstone).
+    pub fn live(&self) -> Vec<u32> {
+        (0..self.replicas.len() as u32)
+            .filter(|&i| !self.replicas[i as usize].is_empty())
+            .collect()
+    }
+}
+
+/// One replica's slice of the `stats` CLI pool section: shard ownership
+/// plus the storage/read counters the operator tunes against.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct PoolShardInfo {
+    pub replica: u32,
+    pub addr: String,
+    /// distinct agents with at least one model resident on this replica
+    pub owned_agents: Vec<u32>,
+    pub resident_bytes: u64,
+    pub models: u32,
+    pub spilled: u32,
+    pub reads: u64,
+    pub frame_hits: u64,
+    pub map_version: u64,
+}
+
 /// One role instance's delta-based metric snapshot for a reporting
 /// interval (the telemetry plane's wire unit, see DESIGN.md §Telemetry
 /// plane).  `counters` are event deltas accumulated over `interval_ms`
@@ -215,6 +257,10 @@ pub struct RunSlice {
     pub shm_dir: String,
     /// event-loop threads per transport server (0 = auto)
     pub net_threads: u32,
+    /// ModelPool copies kept per agent (consistent-hash ring, see
+    /// `model_pool::shard`); workers build their bootstrap shard map
+    /// from this + `pool_addrs`
+    pub pool_replication: u32,
 }
 
 /// A role slot granted to a worker process: which role instance it is,
@@ -272,7 +318,27 @@ pub enum Msg {
     NotModified,
     /// Observability probe: resident memory + spill state of a replica.
     PoolStats,
-    PoolStatsReply { resident_bytes: u64, models: u32, spilled: u32 },
+    PoolStatsReply {
+        resident_bytes: u64,
+        models: u32,
+        spilled: u32,
+        /// lifetime read requests served (GetModel/GetLatest/IfNewer)
+        reads: u64,
+        /// reads answered from the pre-encoded frame cache
+        frame_hits: u64,
+    },
+    /// Ask any replica for the current shard map (client bootstrap /
+    /// refresh after marking a replica dead — off the read hot path).
+    GetShardMap,
+    ShardMapMsg(ShardMap),
+    /// Write/read landed on a non-owner replica that has no data for the
+    /// key: the reply piggybacks the current map so the client corrects
+    /// its cached placement without a coordinator round-trip.
+    WrongShard(ShardMap),
+    /// Controller probe: per-replica shard ownership + storage counters
+    /// (the `stats` CLI pool section).
+    PoolShardQuery,
+    PoolShardReply(Vec<PoolShardInfo>),
     // -- Controller service (multi-process deployment) -----------------------
     /// A worker process announces itself.  `slot_hint` is the slot it is
     /// already running (controller-restart re-adopt) or last held
@@ -506,6 +572,60 @@ fn get_strs(cur: &mut Cursor) -> Result<Vec<String>> {
     (0..n).map(|_| cur.str()).collect()
 }
 
+impl Wire for ShardMap {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u64(self.version);
+        put_strs(buf, &self.replicas);
+        buf.put_u32(self.replication);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(ShardMap {
+            version: cur.u64()?,
+            replicas: get_strs(cur)?,
+            replication: cur.u32()?,
+        })
+    }
+}
+
+fn put_u32s(buf: &mut Vec<u8>, v: &[u32]) {
+    buf.put_u32(v.len() as u32);
+    for x in v {
+        buf.put_u32(*x);
+    }
+}
+
+fn get_u32s(cur: &mut Cursor) -> Result<Vec<u32>> {
+    let n = cur.u32()? as usize;
+    (0..n).map(|_| cur.u32()).collect()
+}
+
+impl Wire for PoolShardInfo {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.put_u32(self.replica);
+        buf.put_str(&self.addr);
+        put_u32s(buf, &self.owned_agents);
+        buf.put_u64(self.resident_bytes);
+        buf.put_u32(self.models);
+        buf.put_u32(self.spilled);
+        buf.put_u64(self.reads);
+        buf.put_u64(self.frame_hits);
+        buf.put_u64(self.map_version);
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        Ok(PoolShardInfo {
+            replica: cur.u32()?,
+            addr: cur.str()?,
+            owned_agents: get_u32s(cur)?,
+            resident_bytes: cur.u64()?,
+            models: cur.u32()?,
+            spilled: cur.u32()?,
+            reads: cur.u64()?,
+            frame_hits: cur.u64()?,
+            map_version: cur.u64()?,
+        })
+    }
+}
+
 fn put_counters(buf: &mut Vec<u8>, v: &[(String, u64)]) {
     buf.put_u32(v.len() as u32);
     for (k, n) in v {
@@ -640,6 +760,7 @@ impl Wire for RunSlice {
         buf.put_str(&self.local_lanes);
         buf.put_str(&self.shm_dir);
         buf.put_u32(self.net_threads);
+        buf.put_u32(self.pool_replication);
     }
     fn decode(cur: &mut Cursor) -> Result<Self> {
         Ok(RunSlice {
@@ -664,6 +785,7 @@ impl Wire for RunSlice {
             local_lanes: cur.str()?,
             shm_dir: cur.str()?,
             net_threads: cur.u32()?,
+            pool_replication: cur.u32()?,
         })
     }
 }
@@ -760,11 +882,30 @@ impl Wire for Msg {
             }
             Msg::NotModified => buf.put_u8(29),
             Msg::PoolStats => buf.put_u8(25),
-            Msg::PoolStatsReply { resident_bytes, models, spilled } => {
+            Msg::PoolStatsReply { resident_bytes, models, spilled, reads, frame_hits } => {
                 buf.put_u8(26);
                 buf.put_u64(*resident_bytes);
                 buf.put_u32(*models);
                 buf.put_u32(*spilled);
+                buf.put_u64(*reads);
+                buf.put_u64(*frame_hits);
+            }
+            Msg::GetShardMap => buf.put_u8(47),
+            Msg::ShardMapMsg(m) => {
+                buf.put_u8(48);
+                m.encode(buf);
+            }
+            Msg::WrongShard(m) => {
+                buf.put_u8(49);
+                m.encode(buf);
+            }
+            Msg::PoolShardQuery => buf.put_u8(50),
+            Msg::PoolShardReply(infos) => {
+                buf.put_u8(51);
+                buf.put_u32(infos.len() as u32);
+                for i in infos {
+                    i.encode(buf);
+                }
             }
             Msg::Register { role, slot_hint } => {
                 buf.put_u8(31);
@@ -889,7 +1030,19 @@ impl Wire for Msg {
                 resident_bytes: cur.u64()?,
                 models: cur.u32()?,
                 spilled: cur.u32()?,
+                reads: cur.u64()?,
+                frame_hits: cur.u64()?,
             },
+            47 => Msg::GetShardMap,
+            48 => Msg::ShardMapMsg(ShardMap::decode(cur)?),
+            49 => Msg::WrongShard(ShardMap::decode(cur)?),
+            50 => Msg::PoolShardQuery,
+            51 => {
+                let n = cur.u32()? as usize;
+                Msg::PoolShardReply(
+                    (0..n).map(|_| PoolShardInfo::decode(cur)).collect::<Result<_>>()?,
+                )
+            }
             30 => Msg::Traj(TrajSegment::decode(cur)?),
             31 => Msg::Register { role: cur.str()?, slot_hint: cur.u64()? as i64 },
             32 => Msg::Assign(WorkerAssignment::decode(cur)?),
@@ -1019,7 +1172,39 @@ mod tests {
                 resident_bytes: 1 << 30,
                 models: 120,
                 spilled: 40,
+                reads: 9_001,
+                frame_hits: 8_000,
             },
+            Msg::GetShardMap,
+            Msg::ShardMapMsg(ShardMap {
+                version: 3,
+                replicas: vec![
+                    "127.0.0.1:9001".into(),
+                    String::new(), // tombstone: retired slot 1
+                    "127.0.0.1:9003".into(),
+                ],
+                replication: 2,
+            }),
+            Msg::WrongShard(ShardMap {
+                version: 4,
+                replicas: vec!["127.0.0.1:9001".into()],
+                replication: 1,
+            }),
+            Msg::PoolShardQuery,
+            Msg::PoolShardReply(vec![
+                PoolShardInfo {
+                    replica: 0,
+                    addr: "127.0.0.1:9001".into(),
+                    owned_agents: vec![0, 2],
+                    resident_bytes: 1 << 20,
+                    models: 12,
+                    spilled: 3,
+                    reads: 400,
+                    frame_hits: 350,
+                    map_version: 3,
+                },
+                PoolShardInfo::default(),
+            ]),
             Msg::Register { role: "actor".into(), slot_hint: -1 },
             Msg::Register { role: "learner".into(), slot_hint: 3 },
             Msg::Assign(WorkerAssignment {
@@ -1054,6 +1239,7 @@ mod tests {
                     local_lanes: "auto".into(),
                     shm_dir: "/dev/shm".into(),
                     net_threads: 2,
+                    pool_replication: 2,
                 },
             }),
             Msg::Retry { backoff_ms: 500, reason: "no free slot".into() },

@@ -90,6 +90,37 @@ subcommands:
                              /dev/shm, else the system temp dir)
     --net-threads N          event-loop threads per transport server
                              (default 0 = auto from the core count)
+   elasticity / pool sharding knobs:
+    --model-pools N          in-process ModelPool replicas behind the
+                             controller (default 1); models are placed
+                             on a consistent-hash ring keyed by agent
+    --pool-replication R     owners per agent key on the ring (default
+                             2, clamped to --model-pools): writes go to
+                             all R owners, reads fail over among them,
+                             so kill:pool keeps every model readable
+    --autoscale              procs mode only: run the closed-loop
+                             scaling policy — grow inf-server slots
+                             when batch fill stays above 0.8, drain
+                             them below 0.2; drain actor slots when
+                             learner staleness exceeds 3.0 periods,
+                             grow them below 1.0.  Late-joining workers
+                             are admitted into grown slots; drained
+                             actors finish their episode and flush
+                             segments before the slot retires.  Every
+                             decision lands in the telemetry stream
+                             (role 'autoscaler' in --stats-jsonl and
+                             `stats`)
+    --scale-every S          seconds between policy evaluations
+                             (default 5; two intervals of cooldown per
+                             role between moves)
+    --min-actor-slots N      lower bound for actor scale-down
+                             (default 1)
+    --max-actor-slots N      upper bound for actor scale-up (default
+                             4x the declared actor count)
+    --min-inf-slots N        lower bound for inf-server scale-down
+                             (default 1 when the spec declares any)
+    --max-inf-slots N        upper bound for inf-server scale-up
+                             (default 4x the declared count)
    fault-injection / chaos knobs:
     --faults <spec>          deterministic fault plan injected inside the
                              transport, comma-separated rules of the form
@@ -131,10 +162,13 @@ subcommands:
                              (learner data ports, inf-server address)
   stats        probe a running controller for the merged league
                telemetry (per-role rates + run totals, including
-               p50/p95/p99 inference queue-wait and row latency)
+               p50/p95/p99 inference queue-wait and row latency) plus
+               the pool shard view: per-replica agent ownership,
+               resident/spilled bytes, frame-cache hit rate, aggregate
     --controller host:port   controller to query
     --deploy                 also print worker/slot deployment counters
     --json                   emit the merged report as one JSON object
+                             (telemetry roles + a `pool` array)
                              instead of the human-readable lines
   trace        drain the flight recorder of a running league (recent +
                slow request spans merged at the controller) and export

@@ -136,6 +136,12 @@ fn chaos_schedule_kills_workers_and_run_completes() {
     assert!(stdout.contains("done:"), "no completion line:\n{stdout}");
     // the schedule actually fired (worker spawn alone outlasts 300ms)
     assert!(stdout.contains("chaos["), "schedule never fired:\n{stdout}");
+    // kill:pool is a real failover now: the survivor re-owns the dead
+    // replica's shards and the rebalanced contents are bit-exact
+    assert!(
+        stdout.contains("bit-exact=true"),
+        "pool failover not bit-exact:\n{stdout}"
+    );
 }
 
 /// Kill-the-controller drill: snapshot, SIGKILL-equivalent crash of the

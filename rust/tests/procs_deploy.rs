@@ -180,6 +180,71 @@ fn killed_actor_worker_is_detected_and_slot_reassigned() {
     kids.expect_clean_exit(Duration::from_secs(30));
 }
 
+/// Elastic slot table end-to-end: a surplus actor worker parks in the
+/// registration retry loop until the operator grows a slot, then is
+/// admitted mid-run; draining the table back down stops exactly one
+/// actor, which finishes its episode, deregisters, and exits 0 — the
+/// run completes with every learner step and no lost episodes.
+#[test]
+fn grown_actor_slot_admits_late_worker_then_drains_cleanly() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let mut ctrl = controller(procs_cfg(16, 1), &engine);
+    let mut kids = Reap(vec![
+        spawn_worker("learner", &ctrl.addr, &dir),
+        spawn_worker("actor", &ctrl.addr, &dir),
+    ]);
+
+    // let the league make real progress first
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while ctrl.deploy_stats().learner_steps < 2 {
+        assert!(Instant::now() < deadline, "league never started");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // a late joiner with no free slot parks in the retry loop; growing
+    // the table admits it
+    kids.0.push(spawn_worker("actor", &ctrl.addr, &dir));
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(ctrl.deploy_stats().workers, 2, "admitted without a slot");
+    assert_eq!(ctrl.request_scale("actor", 1), 1);
+    assert_eq!(ctrl.deploy_stats().actor_slots, 2);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while ctrl.deploy_stats().workers < 3 {
+        assert!(Instant::now() < deadline, "late joiner never admitted");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // drain back down: the occupant of the drained slot acks stop,
+    // finishes its episode, deregisters, and exits on its own
+    let pre_episodes = ctrl.league_stats().episodes;
+    assert_eq!(ctrl.request_scale("actor", -1), 1);
+    assert_eq!(ctrl.deploy_stats().actor_slots, 1);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while ctrl.deploy_stats().workers > 2 {
+        assert!(Instant::now() < deadline, "drained actor never left");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // the drained worker exited 0 (not killed, not crashed)
+    let drained = kids
+        .0
+        .iter_mut()
+        .position(|c| matches!(c.try_wait(), Ok(Some(_))))
+        .expect("one worker exited");
+    let status = kids.0.remove(drained).wait().unwrap();
+    assert!(status.success(), "drained actor exited {status}");
+
+    // the survivors finish the run; nothing was lost in the drain
+    assert!(ctrl.wait(Duration::from_secs(180)), "run did not finish");
+    assert_eq!(ctrl.deploy_stats().learner_steps, 16);
+    assert!(
+        ctrl.league_stats().episodes >= pre_episodes,
+        "episodes lost across drain"
+    );
+    ctrl.shutdown();
+    kids.expect_clean_exit(Duration::from_secs(30));
+}
+
 /// Same seed, same spec → thread mode and procs mode produce the same
 /// pool: identical frozen league keys and identical ModelPool contents
 /// (model count per agent).  Equivalence smoke for the two launch paths.
