@@ -1,16 +1,43 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints (deny warnings), then the tier-1 command.
-# Usage: ./ci.sh [--no-lint]   (--no-lint skips fmt/clippy, e.g. on
-# toolchains without those components)
+# CI gate: formatting, lints (deny warnings), league-lint, then the
+# tier-1 command.
+# Usage: ./ci.sh [--no-lint] [--miri] [--tsan]
+#   --no-lint  skip fmt/clippy (e.g. on toolchains without those components)
+#   --miri     also run `cargo +nightly miri test` on the pure-compute
+#              modules (self-skips when nightly miri is not installed)
+#   --tsan     also run the lib tests under -Zsanitizer=thread
+#              (self-skips when nightly rust-src is not installed)
 set -euo pipefail
 cd "$(dirname "$0")"
 
-if [[ "${1:-}" != "--no-lint" ]]; then
+NO_LINT=0 RUN_MIRI=0 RUN_TSAN=0
+for arg in "$@"; do
+    case "$arg" in
+        --no-lint) NO_LINT=1 ;;
+        --miri) RUN_MIRI=1 ;;
+        --tsan) RUN_TSAN=1 ;;
+        *)
+            echo "usage: ./ci.sh [--no-lint] [--miri] [--tsan]" >&2
+            exit 2
+            ;;
+    esac
+done
+
+if [[ "$NO_LINT" != 1 ]]; then
     echo "== cargo fmt --check"
     cargo fmt --check
     echo "== cargo clippy -D warnings"
     cargo clippy -- -D warnings
 fi
+
+# Project-invariant static analysis (hard gate): proto tag registry,
+# unsafe hygiene, nonblocking regions, unwrap budget.  The self-test
+# first proves the analyzer still flags its seeded-bad fixtures, then
+# the tree walk must come back clean under lint-allow.toml.
+echo "== league-lint --self-test rust/lint-fixtures"
+cargo run -q --release --bin league-lint -- --self-test rust/lint-fixtures
+echo "== league-lint (tree walk, hard fail)"
+cargo run -q --release --bin league-lint
 
 echo "== tier-1: cargo build --release && cargo test -q"
 cargo build --release
@@ -68,6 +95,12 @@ cargo bench --bench bench_main -- transport_scale --json BENCH_pr8.json
 # (see BENCH_pr9.json).
 echo "== bench smoke: cargo bench --bench bench_main -- elastic"
 cargo bench --bench bench_main -- elastic --json BENCH_pr9.json
+
+# Analyzer-cost bench: full-tree league-lint walk + the proto registry
+# parse alone — keeps the hard lint gate measurably cheap
+# (see BENCH_pr10.json).
+echo "== bench smoke: cargo bench --bench bench_main -- lint"
+cargo bench --bench bench_main -- lint --json BENCH_pr10.json
 
 # Lane/TCP equivalence: same seeded request sequence over both paths
 # must be bit-identical (also inside `cargo test` above, rerun by name).
@@ -189,5 +222,36 @@ if [[ -f artifacts/manifest.json ]]; then
     echo "chaos smoke OK"
 else
     echo "(artifacts missing; skipping chaos smoke)"
+fi
+
+# Miri: interpret the pure-compute modules (wire codec, metrics/Hist,
+# shm ring cursor logic) for UB.  mmap-backed shm tests carry
+# cfg_attr(miri, ignore) and self-skip inside the harness.
+if [[ "$RUN_MIRI" == 1 ]]; then
+    if command -v rustup >/dev/null \
+        && rustup toolchain list 2>/dev/null | grep -q nightly \
+        && rustup component list --toolchain nightly --installed 2>/dev/null \
+            | grep -q miri; then
+        echo "== miri: cargo +nightly miri test --lib (codec, metrics, shm)"
+        cargo +nightly miri test --lib -- util::codec util::metrics transport::shm
+    else
+        echo "(nightly miri not installed; skipping miri stage)"
+    fi
+fi
+
+# ThreadSanitizer: lib tests under -Zsanitizer=thread (needs nightly +
+# rust-src to rebuild std instrumented).  Catches data races the
+# OrderedMutex lock-order checks cannot.
+if [[ "$RUN_TSAN" == 1 ]]; then
+    if command -v rustup >/dev/null \
+        && rustup toolchain list 2>/dev/null | grep -q nightly \
+        && rustup component list --toolchain nightly --installed 2>/dev/null \
+            | grep -q rust-src; then
+        echo "== tsan: cargo +nightly test --lib with -Zsanitizer=thread"
+        RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test --lib -q \
+            -Zbuild-std --target "$(uname -m)-unknown-linux-gnu"
+    else
+        echo "(nightly rust-src not installed; skipping tsan stage)"
+    fi
 fi
 echo "CI OK"

@@ -1356,6 +1356,39 @@ fn main() {
         });
     }
 
+    // ---- lint ----------------------------------------------------------
+    // Analyzer cost on the real tree: full-tree walk (lexer + all four
+    // rules per file) and the proto registry parse alone.  Keeping this
+    // measured keeps the CI stage cheap enough to stay a hard gate.
+    println!("\n# league-lint (static analysis over rust/src)");
+    {
+        use tleague::lint;
+
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+        let allow = lint::Allowlist::load(
+            &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("lint-allow.toml"),
+        )
+        .expect("allowlist parses");
+        b.bench("lint/full_tree", "file", || {
+            let (findings, files, _bytes) =
+                lint::lint_tree(&root, &allow).expect("tree walks");
+            assert!(findings.is_empty(), "shipped tree must stay lint-clean");
+            files as u64
+        });
+
+        let proto_src = std::fs::read_to_string(root.join("proto/mod.rs")).unwrap();
+        b.bench("lint/proto_registry_parse", "parse", || {
+            let mut n = 0;
+            for _ in 0..50 {
+                let table = lint::proto_tag_table(&proto_src).expect("table parses");
+                assert!(table.len() >= 42);
+                std::hint::black_box(&table);
+                n += 1;
+            }
+            n
+        });
+    }
+
     println!("\n{} benches run", b.rows.len());
     b.write_json();
 }

@@ -1,0 +1,51 @@
+// Control fixture: exercises every rule's *happy* path — the self-test
+// fails if any rule flags this file.
+// lint: proto-registry
+// lint: netpath
+pub const TAG_A: u8 = 1;
+pub const TAG_B: u8 = 2;
+
+impl Wire for Msg {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Msg::A => buf.put_u8(TAG_A),
+            Msg::B(x) => {
+                buf.put_u8(TAG_B);
+                buf.put_u32(*x);
+            }
+        }
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let tag = cur.u8()?;
+        Ok(match tag {
+            TAG_A => Msg::A,
+            TAG_B => Msg::B(cur.u32()?),
+            t => bail!("unknown tag {t}"),
+        })
+    }
+}
+
+fn open_fd(path: &CStr) -> i32 {
+    // SAFETY: path is NUL-terminated; open() has the declared signature.
+    unsafe { open(path.as_ptr(), 0) }
+}
+
+// lint: nonblocking
+fn try_pump(&mut self) -> bool {
+    // a "blocking" waiver with a reason keeps the listed op legal
+    let g = self.q.lock(); // lint: blocking-ok: sub-microsecond critical section
+    !g.is_empty()
+}
+
+fn on_bytes(b: &[u8]) -> Result<Msg> {
+    // netpath file, but errors are propagated, never unwrapped
+    Msg::from_bytes(b)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_unwraps_are_free() {
+        on_bytes(&[1]).unwrap();
+    }
+}

@@ -1,0 +1,10 @@
+// Seeded-bad fixture: a marked nonblocking fn takes a mutex and sleeps
+// without waivers.
+
+// lint: nonblocking
+fn pump(&mut self) {
+    let mut q = self.queue.lock();
+    if q.is_empty() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}

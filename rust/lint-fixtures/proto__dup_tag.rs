@@ -1,0 +1,21 @@
+// Seeded-bad fixture: two TAG_* consts share a wire value.
+// lint: proto-registry
+pub const TAG_A: u8 = 1;
+pub const TAG_B: u8 = 1;
+
+impl Wire for Msg {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Msg::A => buf.put_u8(TAG_A),
+            Msg::B => buf.put_u8(TAG_B),
+        }
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let tag = cur.u8()?;
+        Ok(match tag {
+            TAG_A => Msg::A,
+            TAG_B => Msg::B,
+            t => bail!("unknown tag {t}"),
+        })
+    }
+}

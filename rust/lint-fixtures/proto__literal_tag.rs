@@ -1,0 +1,21 @@
+// Seeded-bad fixture: encode writes a literal tag byte and decode
+// matches a literal, bypassing the TAG_* registry.
+// lint: proto-registry
+pub const TAG_A: u8 = 1;
+
+impl Wire for Msg {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Msg::A => buf.put_u8(TAG_A),
+            Msg::B => buf.put_u8(2),
+        }
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let tag = cur.u8()?;
+        Ok(match tag {
+            TAG_A => Msg::A,
+            2 => Msg::B,
+            t => bail!("unknown tag {t}"),
+        })
+    }
+}

@@ -1,0 +1,21 @@
+// Seeded-bad fixture: TAG_B is declared and encoded but Msg::decode
+// has no arm for it — a silent "unknown msg tag" at runtime.
+// lint: proto-registry
+pub const TAG_A: u8 = 1;
+pub const TAG_B: u8 = 2;
+
+impl Wire for Msg {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Msg::A => buf.put_u8(TAG_A),
+            Msg::B => buf.put_u8(TAG_B),
+        }
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let tag = cur.u8()?;
+        Ok(match tag {
+            TAG_A => Msg::A,
+            t => bail!("unknown tag {t}"),
+        })
+    }
+}

@@ -1,0 +1,8 @@
+// Seeded-bad fixture: an `unsafe` block with no SAFETY comment within
+// the lookback window.
+
+fn grow(ptr: *mut u8, len: usize) {
+    unsafe {
+        std::ptr::write_bytes(ptr, 0, len);
+    }
+}

@@ -1,0 +1,11 @@
+// Seeded-bad fixture: unwraps on a network path (netpath marker) with
+// no lint-allow.toml entry — fixtures are linted with an empty list.
+// lint: netpath
+
+fn on_bytes(b: &[u8]) -> Msg {
+    Msg::from_bytes(b).unwrap()
+}
+
+fn header(b: &[u8]) -> u32 {
+    u32::from_le_bytes(b[..4].try_into().expect("short header"))
+}

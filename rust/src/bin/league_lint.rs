@@ -1,0 +1,150 @@
+//! league-lint CLI: walk `rust/src`, enforce the project invariants
+//! (proto tag registry, unsafe hygiene, nonblocking regions, unwrap
+//! budget), exit nonzero on any finding.  See DESIGN.md "Correctness
+//! tooling" for the rule set and `lint-allow.toml` format.
+//!
+//! Usage:
+//!   league-lint [--root DIR] [--allow FILE]   lint the tree (CI mode)
+//!   league-lint --check-file FILE [...]       lint one file
+//!   league-lint --self-test DIR               run the fixture suite
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use tleague::lint;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut allow_path = PathBuf::from("lint-allow.toml");
+    let mut check_files: Vec<PathBuf> = Vec::new();
+    let mut self_test: Option<PathBuf> = None;
+
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage("--root needs a directory"),
+            },
+            "--allow" => match it.next() {
+                Some(v) => allow_path = PathBuf::from(v),
+                None => return usage("--allow needs a file"),
+            },
+            "--check-file" => match it.next() {
+                Some(v) => check_files.push(PathBuf::from(v)),
+                None => return usage("--check-file needs a file"),
+            },
+            "--self-test" => match it.next() {
+                Some(v) => self_test = Some(PathBuf::from(v)),
+                None => return usage("--self-test needs a directory"),
+            },
+            "--help" | "-h" => return usage(""),
+            other => return usage(&format!("unknown flag '{other}'")),
+        }
+    }
+
+    if let Some(dir) = self_test {
+        return match lint::self_test(&dir) {
+            Ok(msg) => {
+                println!("league-lint {msg}");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("league-lint self-test FAILED:\n{e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    // The allowlist is optional on disk (treated as empty), but a
+    // malformed one is a hard error — a typo must not allow everything.
+    let allow = if allow_path.exists() {
+        match lint::Allowlist::load(&allow_path) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("league-lint: bad allowlist: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        lint::Allowlist::empty()
+    };
+
+    if !check_files.is_empty() {
+        let mut findings = Vec::new();
+        for p in &check_files {
+            let src = match std::fs::read_to_string(p) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("league-lint: read {}: {e}", p.display());
+                    return ExitCode::FAILURE;
+                }
+            };
+            findings.extend(lint::lint_file(&rel_of(p), &src, &allow));
+        }
+        return exit_of(report(findings, check_files.len()));
+    }
+
+    match lint::lint_tree(&root, &allow) {
+        Ok((findings, files, bytes)) => {
+            let clean = report(findings, files);
+            if clean {
+                println!(
+                    "league-lint OK: {files} files / {bytes} bytes clean ({} allowlisted)",
+                    allow.len()
+                );
+            }
+            exit_of(clean)
+        }
+        Err(e) => {
+            eprintln!("league-lint: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn exit_of(clean: bool) -> ExitCode {
+    if clean {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+/// Rel path used for path-scoped rules: the suffix after `rust/src/`
+/// when present, else the bare file name.
+fn rel_of(p: &Path) -> String {
+    let s = p.to_string_lossy().replace('\\', "/");
+    match s.split_once("rust/src/") {
+        Some((_, rel)) => rel.to_string(),
+        None => p.file_name().map(|f| f.to_string_lossy().to_string()).unwrap_or(s),
+    }
+}
+
+/// Print findings; returns true when clean.
+fn report(findings: Vec<lint::Finding>, files: usize) -> bool {
+    if findings.is_empty() {
+        return true;
+    }
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    eprintln!("league-lint: {} finding(s) across {files} file(s) checked", findings.len());
+    false
+}
+
+fn usage(err: &str) -> ExitCode {
+    if !err.is_empty() {
+        eprintln!("league-lint: {err}");
+    }
+    eprintln!(
+        "usage: league-lint [--root DIR] [--allow FILE]\n       \
+         league-lint --check-file FILE [--check-file FILE ...]\n       \
+         league-lint --self-test FIXTURE_DIR"
+    );
+    if err.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

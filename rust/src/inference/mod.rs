@@ -22,10 +22,11 @@ use crate::runtime::{Engine, Tensor};
 use crate::telemetry::trace;
 use crate::transport::{RepServer, Reply, Responder, ServerOpts};
 use crate::util::metrics::{Meter, MetricsHub};
+use crate::util::sync::OrderedMutex;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 struct Pending {
@@ -171,7 +172,8 @@ impl InfServer {
         // env-slot rows per forward-pass row (2 for team manifests)
         let rows_per_pass = m.n_agents();
         let row_width = rows_per_pass * obs_dim;
-        let queue = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
+        let queue =
+            Arc::new((OrderedMutex::new("inference.queue", Queues::default()), Condvar::new()));
         let q2 = queue.clone();
         // async service: the handler only queues the request — the reply
         // is injected back into the event loop by the batcher thread via
@@ -196,18 +198,13 @@ impl InfServer {
                     }
                     let pass_rows = rows as usize / rows_per_pass;
                     let (lock, cv) = &*q2;
-                    lock.lock()
-                        .unwrap()
-                        .by_key
-                        .entry(key)
-                        .or_default()
-                        .push(Pending {
-                            obs,
-                            rows: pass_rows,
-                            responder,
-                            enqueued: Instant::now(),
-                            trace,
-                        });
+                    lock.lock().by_key.entry(key).or_default().push(Pending {
+                        obs,
+                        rows: pass_rows,
+                        responder,
+                        enqueued: Instant::now(),
+                        trace,
+                    });
                     cv.notify_one();
                 }
                 Msg::Ping => responder.send(Reply::Msg(Msg::Pong)),
@@ -246,7 +243,7 @@ impl InfServer {
                     // max_wait) and dispatch that key partial
                     let (key, batch) = {
                         let (lock, cv) = &*queue;
-                        let mut q = lock.lock().unwrap();
+                        let mut q = lock.lock();
                         loop {
                             if stop2.load(Ordering::Relaxed) {
                                 // fail queued requests instead of leaving
@@ -297,7 +294,7 @@ impl InfServer {
                                     (deadline - now).min(idle)
                                 }
                             };
-                            let (g, _t) = cv.wait_timeout(q, wait).unwrap();
+                            let (g, _t) = lock.wait_timeout(cv, q, wait);
                             q = g;
                         }
                     };

@@ -18,6 +18,7 @@ pub mod eval;
 pub mod inference;
 pub mod league;
 pub mod learner;
+pub mod lint;
 pub mod model_pool;
 pub mod orchestrator;
 pub mod proto;

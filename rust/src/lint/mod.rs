@@ -1,0 +1,1123 @@
+//! league-lint: project-invariant static analysis over `rust/src`.
+//!
+//! The repo carries hand-maintained invariants no generic tool checks —
+//! a literal wire-tag registry, `unsafe` FFI blocks, epoll loop bodies
+//! that must never block, and `.unwrap()` calls sitting on bytes that
+//! arrive off the network.  This module is a zero-dependency rule
+//! engine over a lightweight lexer (comments/strings blanked, no `syn`
+//! — the offline crate set rule) that mechanically enforces them:
+//!
+//! * **proto-conformance** — in files marked `proto-registry` (see
+//!   [`MARK_PROTO`]): `TAG_*` const values must be unique, every const
+//!   must be written by `Msg::encode` and matched by a `Msg::decode`
+//!   arm (and vice versa), and neither side may use a literal tag byte.
+//! * **unsafe-safety** — every `unsafe` token must have a `// SAFETY:`
+//!   comment on the same or one of the few preceding lines.
+//! * **nonblocking** — a function annotated with the [`MARK_NONBLOCK`]
+//!   marker may not call deny-listed blocking ops (`.lock()`,
+//!   `thread::sleep`, `read_frame`, condvar waits, …) unless the line
+//!   carries an explicit [`MARK_BLOCK_OK`] waiver with a reason.
+//! * **unwrap-budget** — `.unwrap()`/`.expect()` in network-facing code
+//!   (`transport/`, `model_pool/`, or files marked [`MARK_NETPATH`])
+//!   is denied unless the file has a budgeted entry in
+//!   `lint-allow.toml` (triage, not grandfathering: the budget is a
+//!   ceiling, new calls past it fail CI).
+//!
+//! The binary (`cargo run --bin league-lint`) walks the tree and exits
+//! nonzero on any finding; `--self-test rust/lint-fixtures` runs the
+//! analyzer's own regression suite of seeded-bad snippets.
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::path::Path;
+
+pub const RULE_PROTO: &str = "proto-conformance";
+pub const RULE_UNSAFE: &str = "unsafe-safety";
+pub const RULE_NONBLOCK: &str = "nonblocking";
+pub const RULE_UNWRAP: &str = "unwrap-budget";
+
+// Markers are assembled with concat! so the lint never matches its own
+// source when it scans itself as part of the tree walk.
+/// Marks a file as a wire-tag registry (proto conformance applies).
+pub const MARK_PROTO: &str = concat!("lint: proto", "-registry");
+/// Marks the next `fn` as a nonblocking region.
+pub const MARK_NONBLOCK: &str = concat!("lint: non", "blocking");
+/// Per-line waiver inside a nonblocking region (give a reason).
+pub const MARK_BLOCK_OK: &str = concat!("lint: blocking", "-ok");
+/// Opts a file outside `transport/`/`model_pool/` into the unwrap rule.
+pub const MARK_NETPATH: &str = concat!("lint: net", "path");
+/// Per-line waiver for the unwrap rule (give a reason).
+pub const MARK_UNWRAP_OK: &str = concat!("lint: unwrap", "-ok");
+const MARK_SAFETY: &str = concat!("SAFETY", ":");
+
+/// How many lines above an `unsafe` token a `SAFETY:` comment may sit
+/// (allows `#[cfg(...)]` attributes between comment and block).
+const SAFETY_LOOKBACK: usize = 6;
+
+/// Ops a `nonblocking`-marked function must not call.
+const BLOCKING_OPS: &[&str] = &[
+    ".lock(",
+    "lock_recover(",
+    "thread::sleep",
+    "read_frame",
+    ".wait(",
+    "wait_timeout",
+    "recv_timeout",
+    ".recv(",
+    ".join(",
+];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: blank comments and string/char literals so rules see code only.
+// ---------------------------------------------------------------------------
+
+/// Return `src` with comments and string/char literal *contents*
+/// replaced by spaces, newlines preserved, so line/column structure
+/// survives but tokens inside comments or strings can't match rules.
+pub fn blank_noncode(src: &str) -> String {
+    let ch: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    let n = ch.len();
+    let blank = |out: &mut String, c: char| out.push(if c == '\n' { '\n' } else { ' ' });
+    while i < n {
+        let c = ch[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && ch[i + 1] == '/' {
+            while i < n && ch[i] != '\n' {
+                blank(&mut out, ch[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && i + 1 < n && ch[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if ch[i] == '/' && i + 1 < n && ch[i + 1] == '*' {
+                    depth += 1;
+                    blank(&mut out, ch[i]);
+                    blank(&mut out, ch[i + 1]);
+                    i += 2;
+                } else if ch[i] == '*' && i + 1 < n && ch[i + 1] == '/' {
+                    depth -= 1;
+                    blank(&mut out, ch[i]);
+                    blank(&mut out, ch[i + 1]);
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    blank(&mut out, ch[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (optionally b-prefixed).
+        if (c == 'r' || (c == 'b' && i + 1 < n && ch[i + 1] == 'r'))
+            && !prev_is_ident(&ch, i)
+        {
+            let r_at = if c == 'b' { i + 1 } else { i };
+            let mut j = r_at + 1;
+            let mut hashes = 0usize;
+            while j < n && ch[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && ch[j] == '"' {
+                // Blank through the closing quote + matching hashes.
+                while i <= j {
+                    blank(&mut out, ch[i]);
+                    i += 1;
+                }
+                'raw: while i < n {
+                    if ch[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && i + 1 + k < n && ch[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                blank(&mut out, ch[i]);
+                                i += 1;
+                            }
+                            break 'raw;
+                        }
+                    }
+                    blank(&mut out, ch[i]);
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Plain string literal.
+        if c == '"' {
+            blank(&mut out, c);
+            i += 1;
+            while i < n {
+                if ch[i] == '\\' && i + 1 < n {
+                    blank(&mut out, ch[i]);
+                    blank(&mut out, ch[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                let done = ch[i] == '"';
+                blank(&mut out, ch[i]);
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: 'x' or '\n' is a literal; 'a (no
+        // closing quote right after) is a lifetime and passes through.
+        if c == '\'' {
+            let is_char = if i + 1 < n && ch[i + 1] == '\\' {
+                true
+            } else {
+                i + 2 < n && ch[i + 2] == '\''
+            };
+            if is_char {
+                blank(&mut out, c);
+                i += 1;
+                while i < n {
+                    if ch[i] == '\\' && i + 1 < n {
+                        blank(&mut out, ch[i]);
+                        blank(&mut out, ch[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    let done = ch[i] == '\'';
+                    blank(&mut out, ch[i]);
+                    i += 1;
+                    if done {
+                        break;
+                    }
+                }
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+fn prev_is_ident(ch: &[char], i: usize) -> bool {
+    i > 0 && (ch[i - 1].is_alphanumeric() || ch[i - 1] == '_')
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does `line` contain `word` with non-identifier characters around it?
+fn has_word(line: &str, word: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || !line[..at].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !line[at + word.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+/// One source file, pre-lexed: raw lines plus comment/string-blanked
+/// code lines (same line count).
+pub struct SrcFile {
+    pub rel: String,
+    pub raw: Vec<String>,
+    pub code: Vec<String>,
+}
+
+impl SrcFile {
+    pub fn parse(rel: &str, src: &str) -> SrcFile {
+        let code = blank_noncode(src);
+        SrcFile {
+            rel: rel.to_string(),
+            raw: src.lines().map(str::to_string).collect(),
+            code: code.lines().map(str::to_string).collect(),
+        }
+    }
+
+    fn finding(&self, line0: usize, rule: &'static str, msg: String) -> Finding {
+        Finding { file: self.rel.clone(), line: line0 + 1, rule, msg }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allowlist (restricted TOML: [[allow]] tables with file/budget/reason).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub budget: usize,
+    pub reason: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: HashMap<String, AllowEntry>,
+}
+
+impl Allowlist {
+    pub fn empty() -> Allowlist {
+        Allowlist::default()
+    }
+
+    pub fn get(&self, rel: &str) -> Option<&AllowEntry> {
+        self.entries.get(rel)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Parse the `lint-allow.toml` format: `[[allow]]` tables with
+    /// `file = "…"`, `budget = N`, `reason = "…"` keys.  Hand-rolled
+    /// (no toml crate offline); rejects unknown keys and duplicates so
+    /// typos fail loudly instead of silently allowing everything.
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        #[derive(Default)]
+        struct Partial {
+            file: Option<String>,
+            budget: Option<usize>,
+            reason: Option<String>,
+        }
+        fn flush(
+            cur: &mut Option<Partial>,
+            entries: &mut HashMap<String, AllowEntry>,
+        ) -> Result<(), String> {
+            if let Some(p) = cur.take() {
+                let file = p.file.ok_or("allow entry missing `file`")?;
+                let budget =
+                    p.budget.ok_or_else(|| format!("entry '{file}' missing `budget`"))?;
+                let reason =
+                    p.reason.ok_or_else(|| format!("entry '{file}' missing `reason`"))?;
+                if entries.insert(file.clone(), AllowEntry { budget, reason }).is_some() {
+                    return Err(format!("duplicate allow entry for '{file}'"));
+                }
+            }
+            Ok(())
+        }
+        let mut entries = HashMap::new();
+        let mut cur: Option<Partial> = None;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[[allow]]" {
+                flush(&mut cur, &mut entries)?;
+                cur = Some(Partial::default());
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", ln + 1))?;
+            let slot = cur
+                .as_mut()
+                .ok_or_else(|| format!("line {}: key outside [[allow]] table", ln + 1))?;
+            let val = val.trim();
+            match key.trim() {
+                "file" => slot.file = Some(unquote(val, ln)?),
+                "budget" => {
+                    slot.budget = Some(
+                        val.parse::<usize>()
+                            .map_err(|_| format!("line {}: bad budget '{val}'", ln + 1))?,
+                    )
+                }
+                "reason" => slot.reason = Some(unquote(val, ln)?),
+                other => return Err(format!("line {}: unknown key '{other}'", ln + 1)),
+            }
+        }
+        flush(&mut cur, &mut entries)?;
+        Ok(Allowlist { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<Allowlist, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Allowlist::parse(&text)
+    }
+}
+
+fn unquote(v: &str, ln: usize) -> Result<String, String> {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!("line {}: expected quoted string, got '{v}'", ln + 1))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: unsafe hygiene.
+// ---------------------------------------------------------------------------
+
+fn check_unsafe(f: &SrcFile, out: &mut Vec<Finding>) {
+    for i in 0..f.code.len() {
+        if !has_word(&f.code[i], "unsafe") {
+            continue;
+        }
+        let lo = i.saturating_sub(SAFETY_LOOKBACK);
+        let documented = (lo..=i).any(|j| f.raw[j].contains(MARK_SAFETY));
+        if !documented {
+            out.push(f.finding(
+                i,
+                RULE_UNSAFE,
+                format!(
+                    "`unsafe` without a `// {MARK_SAFETY}` comment on this or one of the \
+                     {SAFETY_LOOKBACK} preceding lines"
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: nonblocking regions.
+// ---------------------------------------------------------------------------
+
+fn brace_delta(line: &str) -> (i32, i32) {
+    // (opens, closes) on a code line (strings already blanked).
+    let opens = line.matches('{').count() as i32;
+    let closes = line.matches('}').count() as i32;
+    (opens, closes)
+}
+
+fn check_nonblocking(f: &SrcFile, out: &mut Vec<Finding>) {
+    let n = f.raw.len();
+    let mut i = 0;
+    while i < n {
+        if !f.raw[i].contains(MARK_NONBLOCK) {
+            i += 1;
+            continue;
+        }
+        // The marker must sit directly above a fn (attributes and doc
+        // comments between are fine, within a small window).
+        let mut j = i + 1;
+        let mut fn_line = None;
+        while j < n && j <= i + 10 {
+            if has_word(&f.code[j], "fn") {
+                fn_line = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        let Some(fn_line) = fn_line else {
+            out.push(f.finding(
+                i,
+                RULE_NONBLOCK,
+                format!("dangling `{MARK_NONBLOCK}` marker: no fn within 10 lines"),
+            ));
+            i += 1;
+            continue;
+        };
+        // Find the body: first '{' at/after the fn line, then walk to
+        // its matching close.
+        let mut depth = 0i32;
+        let mut started = false;
+        let mut k = fn_line;
+        while k < n {
+            let (o, c) = brace_delta(&f.code[k]);
+            if !started && o > 0 {
+                started = true;
+            }
+            if started {
+                // Inside the body (lines after the opener, and the
+                // remainder of opener/closer lines) check deny list.
+                if depth > 0 || o > 0 {
+                    check_blocking_line(f, k, out);
+                }
+                depth += o - c;
+                if depth <= 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        i = k + 1;
+    }
+}
+
+/// `op` occurrence with identifier-boundary checks on whichever of its
+/// edges are identifier characters — `read_frame` must not match a fn
+/// *named* `try_read_frame`, while `.lock(` still matches `q.lock()`.
+fn contains_op(line: &str, op: &str) -> bool {
+    let start_ident = op.chars().next().is_some_and(is_ident_char);
+    let end_ident = op.chars().next_back().is_some_and(is_ident_char);
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(op) {
+        let at = from + pos;
+        let before_ok =
+            !start_ident || !line[..at].chars().next_back().is_some_and(is_ident_char);
+        let after_ok =
+            !end_ident || !line[at + op.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + op.len();
+    }
+    false
+}
+
+fn check_blocking_line(f: &SrcFile, k: usize, out: &mut Vec<Finding>) {
+    for op in BLOCKING_OPS {
+        if contains_op(&f.code[k], op) && !f.raw[k].contains(MARK_BLOCK_OK) {
+            out.push(f.finding(
+                k,
+                RULE_NONBLOCK,
+                format!(
+                    "blocking op `{op}` inside a `{MARK_NONBLOCK}` region \
+                     (waive with `// {MARK_BLOCK_OK}: <reason>` if provably bounded)"
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: unwrap budget on network/cross-process paths.
+// ---------------------------------------------------------------------------
+
+fn unwrap_in_scope(f: &SrcFile) -> bool {
+    f.rel.starts_with("transport/")
+        || f.rel.starts_with("model_pool/")
+        || f.raw.iter().any(|l| l.contains(MARK_NETPATH))
+}
+
+/// Mark lines inside `#[cfg(test)] mod …` regions (tests may unwrap
+/// freely — a test panic is the desired failure mode).
+fn test_region_mask(f: &SrcFile) -> Vec<bool> {
+    let n = f.code.len();
+    let mut mask = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        if !f.raw[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Find the mod line within a couple of lines, then its region.
+        let mut j = i + 1;
+        while j < n && j <= i + 3 && !has_word(&f.code[j], "mod") {
+            j += 1;
+        }
+        if j >= n || !has_word(&f.code[j], "mod") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut started = false;
+        let mut k = j;
+        while k < n {
+            let (o, c) = brace_delta(&f.code[k]);
+            if !started && o > 0 {
+                started = true;
+            }
+            mask[k] = true;
+            if started {
+                depth += o - c;
+                if depth <= 0 {
+                    break;
+                }
+            }
+            k += 1;
+        }
+        i = k + 1;
+    }
+    mask
+}
+
+fn check_unwrap(f: &SrcFile, allow: &Allowlist, out: &mut Vec<Finding>) {
+    let mask = test_region_mask(f);
+    let mut hits: Vec<usize> = Vec::new();
+    for (i, code) in f.code.iter().enumerate() {
+        if mask[i] || f.raw[i].contains(MARK_UNWRAP_OK) {
+            continue;
+        }
+        let count = code.matches(".unwrap()").count() + code.matches(".expect(").count();
+        for _ in 0..count {
+            hits.push(i);
+        }
+    }
+    if hits.is_empty() {
+        return;
+    }
+    let first = hits[0];
+    match allow.get(&f.rel) {
+        None => out.push(f.finding(
+            first,
+            RULE_UNWRAP,
+            format!(
+                "{} .unwrap()/.expect() call(s) on a network/cross-process path with no \
+                 lint-allow.toml entry for '{}'",
+                hits.len(),
+                f.rel
+            ),
+        )),
+        Some(entry) if hits.len() > entry.budget => out.push(f.finding(
+            first,
+            RULE_UNWRAP,
+            format!(
+                "{} .unwrap()/.expect() call(s) exceed the allowlisted budget of {} for \
+                 '{}' — handle the error or raise the budget with a reason",
+                hits.len(),
+                entry.budget,
+                f.rel
+            ),
+        )),
+        Some(_) => {}
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: proto conformance (tag registry files).
+// ---------------------------------------------------------------------------
+
+/// Parse the `TAG_*` const table out of (already-lexed or raw) proto
+/// source: `(name, value, line0)` triples in declaration order.
+fn parse_tag_consts(code: &[String]) -> Result<Vec<(String, u8, usize)>, String> {
+    let mut tags = Vec::new();
+    for (i, line) in code.iter().enumerate() {
+        let Some(pos) = line.find("const TAG_") else { continue };
+        let rest = &line[pos + "const ".len()..];
+        let name_end = rest.find(':').ok_or_else(|| format!("line {}: malformed const", i + 1))?;
+        let name = rest[..name_end].trim().to_string();
+        let eq = rest.find('=').ok_or_else(|| format!("line {}: const without value", i + 1))?;
+        let val = rest[eq + 1..].trim().trim_end_matches(';').trim();
+        let value: u8 = val
+            .parse()
+            .map_err(|_| {
+                format!("line {}: tag const {name} has non-literal value '{val}'", i + 1)
+            })?;
+        tags.push((name, value, i));
+    }
+    Ok(tags)
+}
+
+/// Public tag-table API for cross-checking tests: `(name, value)` pairs
+/// from `src`, or an error if the table is malformed.
+pub fn proto_tag_table(src: &str) -> Result<Vec<(String, u8)>, String> {
+    let code: Vec<String> = blank_noncode(src).lines().map(str::to_string).collect();
+    let tags = parse_tag_consts(&code)?;
+    Ok(tags.into_iter().map(|(n, v, _)| (n, v)).collect())
+}
+
+/// Locate the body line range (start..=end, body lines only) of the
+/// first `needle` at/after `from`, by brace matching.
+fn body_of(code: &[String], from: usize, needle: &str) -> Option<(usize, usize)> {
+    let n = code.len();
+    let mut at = from;
+    while at < n && !code[at].contains(needle) {
+        at += 1;
+    }
+    if at >= n {
+        return None;
+    }
+    let mut depth = 0i32;
+    let mut started = false;
+    let mut k = at;
+    while k < n {
+        let (o, c) = brace_delta(&code[k]);
+        if !started && o > 0 {
+            started = true;
+        }
+        if started {
+            depth += o - c;
+            if depth <= 0 {
+                return Some((at, k));
+            }
+        }
+        k += 1;
+    }
+    None
+}
+
+fn check_proto(f: &SrcFile, out: &mut Vec<Finding>) {
+    let tags = match parse_tag_consts(&f.code) {
+        Ok(t) => t,
+        Err(e) => {
+            out.push(f.finding(0, RULE_PROTO, e));
+            return;
+        }
+    };
+    let mut by_value: HashMap<u8, &str> = HashMap::new();
+    for (name, value, line) in &tags {
+        if let Some(prev) = by_value.insert(*value, name) {
+            out.push(f.finding(
+                *line,
+                RULE_PROTO,
+                format!("duplicate wire tag {value}: {name} collides with {prev}"),
+            ));
+        }
+    }
+    let names: HashSet<&str> = tags.iter().map(|(n, _, _)| n.as_str()).collect();
+
+    let Some((impl_at, impl_end)) = body_of(&f.code, 0, "impl Wire for Msg") else {
+        out.push(f.finding(
+            0,
+            RULE_PROTO,
+            "proto-registry file without an `impl Wire for Msg` block".into(),
+        ));
+        return;
+    };
+
+    // Encode side: every put_u8(TAG_*) collects; put_u8(<integer>) is a
+    // literal tag byte and always a violation inside Msg::encode.
+    let mut encoded: HashMap<String, usize> = HashMap::new();
+    if let Some((enc_at, enc_end)) = body_of(&f.code, impl_at, "fn encode") {
+        for i in enc_at..=enc_end.min(impl_end) {
+            let code = &f.code[i];
+            let mut from = 0;
+            while let Some(pos) = code[from..].find("put_u8(") {
+                let at = from + pos + "put_u8(".len();
+                let Some(close) = code[at..].find(')') else { break };
+                let arg = code[at..at + close].trim();
+                if !arg.is_empty() && arg.chars().all(|c| c.is_ascii_digit()) {
+                    out.push(f.finding(
+                        i,
+                        RULE_PROTO,
+                        format!("literal tag byte {arg} in Msg::encode — use a TAG_* const"),
+                    ));
+                } else if arg.starts_with("TAG_") {
+                    encoded.entry(arg.to_string()).or_insert(i);
+                }
+                from = at + close;
+            }
+        }
+    } else {
+        out.push(f.finding(impl_at, RULE_PROTO, "impl Wire for Msg without fn encode".into()));
+    }
+
+    // Decode side: arms of the `match tag` block at depth 1 must be
+    // TAG_* idents (or a lowercase fallback binding), never literals.
+    let mut decoded: HashMap<String, usize> = HashMap::new();
+    if let Some((dec_at, dec_end)) = body_of(&f.code, impl_at, "fn decode") {
+        if let Some((match_at, match_end)) = body_of(&f.code, dec_at, "match tag") {
+            let mut depth = 0i32;
+            for i in match_at..=match_end.min(dec_end) {
+                let at_arm_depth = depth == 1;
+                let (o, c) = brace_delta(&f.code[i]);
+                depth += o - c;
+                let trimmed = f.code[i].trim();
+                let is_arm = (at_arm_depth || i == match_at) && trimmed.contains("=>");
+                if !is_arm || i == match_at {
+                    continue;
+                }
+                let head = trimmed.split("=>").next().unwrap_or("").trim();
+                if !head.is_empty() && head.chars().all(|c| c.is_ascii_digit()) {
+                    out.push(f.finding(
+                        i,
+                        RULE_PROTO,
+                        format!("literal tag {head} in Msg::decode arm — use a TAG_* const"),
+                    ));
+                } else if head.starts_with("TAG_") {
+                    decoded.entry(head.to_string()).or_insert(i);
+                }
+            }
+        } else {
+            out.push(f.finding(dec_at, RULE_PROTO, "fn decode without a `match tag` block".into()));
+        }
+    } else {
+        out.push(f.finding(impl_at, RULE_PROTO, "impl Wire for Msg without fn decode".into()));
+    }
+
+    // Symmetry: const table == encode set == decode set.
+    for (name, _, line) in &tags {
+        if !encoded.contains_key(name.as_str()) {
+            out.push(f.finding(
+                *line,
+                RULE_PROTO,
+                format!("{name} declared but never written by Msg::encode"),
+            ));
+        }
+        if !decoded.contains_key(name.as_str()) {
+            out.push(f.finding(
+                *line,
+                RULE_PROTO,
+                format!("{name} declared but has no Msg::decode arm"),
+            ));
+        }
+    }
+    for (name, line) in &encoded {
+        if !names.contains(name.as_str()) {
+            out.push(f.finding(
+                *line,
+                RULE_PROTO,
+                format!("{name} written by Msg::encode but not in the tag const table"),
+            ));
+        }
+    }
+    for (name, line) in &decoded {
+        if !names.contains(name.as_str()) {
+            out.push(f.finding(
+                *line,
+                RULE_PROTO,
+                format!("{name} matched by Msg::decode but not in the tag const table"),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers.
+// ---------------------------------------------------------------------------
+
+/// Lint one file (path shown as `rel`, which also selects path-scoped
+/// rules like the transport unwrap budget).
+pub fn lint_file(rel: &str, src: &str, allow: &Allowlist) -> Vec<Finding> {
+    let f = SrcFile::parse(rel, src);
+    let mut out = Vec::new();
+    check_unsafe(&f, &mut out);
+    check_nonblocking(&f, &mut out);
+    if unwrap_in_scope(&f) {
+        check_unwrap(&f, allow, &mut out);
+    }
+    if f.raw.iter().any(|l| l.contains(MARK_PROTO)) {
+        check_proto(&f, &mut out);
+    }
+    out
+}
+
+fn walk(dir: &Path, files: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?
+        .collect::<Result<_, _>>()
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    entries.sort_by_key(|e| e.path());
+    for ent in entries {
+        let p = ent.path();
+        if p.is_dir() {
+            walk(&p, files)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            files.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (rel paths computed against it).
+/// Returns findings plus the number of (files, bytes) scanned.
+pub fn lint_tree(root: &Path, allow: &Allowlist) -> Result<(Vec<Finding>, usize, u64), String> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut out = Vec::new();
+    let mut bytes = 0u64;
+    for p in &files {
+        let rel = p
+            .strip_prefix(root)
+            .map_err(|e| format!("strip_prefix: {e}"))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            std::fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        bytes += src.len() as u64;
+        out.extend(lint_file(&rel, &src, allow));
+    }
+    Ok((out, files.len(), bytes))
+}
+
+/// The analyzer's own regression suite: every fixture under `dir` named
+/// `<rule>__<desc>.rs` must produce at least one finding of that rule
+/// (prefix `clean` must produce none).  Fixtures are linted with an
+/// empty allowlist and opt into scoped rules via markers.
+pub fn self_test(dir: &Path) -> Result<String, String> {
+    let mut files = Vec::new();
+    walk(dir, &mut files)?;
+    if files.is_empty() {
+        return Err(format!("no fixtures under {}", dir.display()));
+    }
+    let allow = Allowlist::empty();
+    let mut failures = Vec::new();
+    let mut checked = 0usize;
+    for p in &files {
+        let name = p.file_stem().map(|s| s.to_string_lossy().to_string()).unwrap_or_default();
+        let prefix = name.split("__").next().unwrap_or("").to_string();
+        let want: Option<&'static str> = match prefix.as_str() {
+            "clean" => None,
+            "proto" => Some(RULE_PROTO),
+            "unsafe" => Some(RULE_UNSAFE),
+            "nonblocking" => Some(RULE_NONBLOCK),
+            "unwrap" => Some(RULE_UNWRAP),
+            other => {
+                failures.push(format!("{name}.rs: unknown fixture prefix '{other}'"));
+                continue;
+            }
+        };
+        let src =
+            std::fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        let findings = lint_file(&format!("fixtures/{name}.rs"), &src, &allow);
+        checked += 1;
+        match want {
+            None => {
+                if !findings.is_empty() {
+                    failures.push(format!(
+                        "{name}.rs: expected clean, got {} finding(s): {}",
+                        findings.len(),
+                        findings[0]
+                    ));
+                }
+            }
+            Some(rule) => {
+                if !findings.iter().any(|f| f.rule == rule) {
+                    failures.push(format!(
+                        "{name}.rs: expected a [{rule}] finding, got {:?}",
+                        findings.iter().map(|f| f.rule).collect::<Vec<_>>()
+                    ));
+                }
+            }
+        }
+    }
+    if failures.is_empty() {
+        Ok(format!("self-test OK: {checked} fixture(s) behaved as seeded"))
+    } else {
+        Err(failures.join("\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_str(rel: &str, src: &str) -> Vec<Finding> {
+        lint_file(rel, src, &Allowlist::empty())
+    }
+
+    #[test]
+    fn lexer_blanks_comments_and_strings() {
+        let src = "let a = \"unsafe\"; // unsafe here\nlet b = 'x'; /* .lock() */ let c = 1;";
+        let out = blank_noncode(src);
+        assert!(!out.contains("unsafe"));
+        assert!(!out.contains(".lock()"));
+        assert!(out.contains("let a ="));
+        assert!(out.contains("let c = 1;"));
+        assert_eq!(out.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn lexer_keeps_lifetimes() {
+        let out = blank_noncode("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(out.contains("'a str"));
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings() {
+        let out = blank_noncode("let s = r#\"unsafe { \" } \"#; let t = 2;");
+        assert!(!out.contains("unsafe"));
+        assert!(out.contains("let t = 2;"));
+    }
+
+    #[test]
+    fn unsafe_without_safety_flags() {
+        let src = "fn f() {\n    unsafe { g(); }\n}\n";
+        let got = lint_str("x.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].rule, RULE_UNSAFE);
+        assert_eq!(got[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_with_nearby_safety_passes() {
+        let src = format!(
+            "fn f() {{\n    // {MARK_SAFETY} fd is owned\n    #[cfg(unix)]\n    \
+             unsafe {{ g(); }}\n}}\n"
+        );
+        assert!(lint_str("x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_comment_ignored() {
+        let src = "// this mentions unsafe code\nfn f() {}\n";
+        assert!(lint_str("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn nonblocking_region_denies_lock() {
+        let src = format!(
+            "// {MARK_NONBLOCK}\nfn pump(&mut self) {{\n    let g = self.q.lock();\n}}\n"
+        );
+        let got = lint_str("x.rs", &src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].rule, RULE_NONBLOCK);
+    }
+
+    #[test]
+    fn nonblocking_waiver_passes() {
+        let src = format!(
+            "// {MARK_NONBLOCK}\nfn pump(&mut self) {{\n    let g = self.q.lock(); \
+             // {MARK_BLOCK_OK}: sub-us critical section\n}}\n"
+        );
+        assert!(lint_str("x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn nonblocking_op_needs_ident_boundary() {
+        // A fn *named* try_read_frame is not a call to read_frame…
+        let ok = format!(
+            "// {MARK_NONBLOCK}\nfn try_read_frame(&self) -> Result<bool> {{\n    \
+             Ok(false)\n}}\n"
+        );
+        assert!(lint_str("x.rs", &ok).is_empty());
+        // …but an actual read_frame call inside the region is.
+        let bad = format!(
+            "// {MARK_NONBLOCK}\nfn pump(&mut self) {{\n    read_frame(s, buf)?;\n}}\n"
+        );
+        let got = lint_str("x.rs", &bad);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].rule, RULE_NONBLOCK);
+    }
+
+    #[test]
+    fn nonblocking_scope_ends_at_fn_close() {
+        let src = format!(
+            "// {MARK_NONBLOCK}\nfn pump() {{\n    let x = 1;\n}}\n\nfn other() {{\n    \
+             std::thread::sleep(d);\n}}\n"
+        );
+        assert!(lint_str("x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_on_netpath_needs_listing() {
+        let src = "fn f(b: &[u8]) {\n    let m = Msg::from_bytes(b).unwrap();\n}\n";
+        let got = lint_str("transport/x.rs", src);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].rule, RULE_UNWRAP);
+        // Same file outside the scoped paths: no finding.
+        assert!(lint_str("league/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_budget_is_a_ceiling() {
+        let allow = Allowlist::parse(
+            "[[allow]]\nfile = \"transport/x.rs\"\nbudget = 1\nreason = \"t\"\n",
+        )
+        .unwrap();
+        let one = "fn f() {\n    a().unwrap();\n}\n";
+        let two = "fn f() {\n    a().unwrap();\n    b().expect(\"x\");\n}\n";
+        assert!(lint_file("transport/x.rs", one, &allow).is_empty());
+        let got = lint_file("transport/x.rs", two, &allow);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].rule, RULE_UNWRAP);
+    }
+
+    #[test]
+    fn unwrap_in_test_mod_ignored() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                   a().unwrap();\n    }\n}\n";
+        assert!(lint_str("transport/x.rs", src).is_empty());
+    }
+
+    const PROTO_OK: &str = "\
+pub const TAG_A: u8 = 1;
+pub const TAG_B: u8 = 2;
+impl Wire for Msg {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Msg::A => buf.put_u8(TAG_A),
+            Msg::B(x) => {
+                buf.put_u8(TAG_B);
+                buf.put_u32(*x);
+            }
+        }
+    }
+    fn decode(cur: &mut Cursor) -> Result<Self> {
+        let tag = cur.u8()?;
+        Ok(match tag {
+            TAG_A => Msg::A,
+            TAG_B => Msg::B(cur.u32()?),
+            t => bail!(\"unknown tag {t}\"),
+        })
+    }
+}
+";
+
+    fn with_marker(src: &str) -> String {
+        format!("// {MARK_PROTO}\n{src}")
+    }
+
+    #[test]
+    fn proto_conformant_registry_passes() {
+        let got = lint_str("proto/mod.rs", &with_marker(PROTO_OK));
+        assert!(got.is_empty(), "{got:?}");
+    }
+
+    #[test]
+    fn proto_duplicate_tag_flags() {
+        let src = with_marker(&PROTO_OK.replace("TAG_B: u8 = 2", "TAG_B: u8 = 1"));
+        let got = lint_str("proto/mod.rs", &src);
+        assert!(got.iter().any(|f| f.rule == RULE_PROTO && f.msg.contains("duplicate")));
+    }
+
+    #[test]
+    fn proto_missing_decode_arm_flags() {
+        let src = with_marker(&PROTO_OK.replace("            TAG_B => Msg::B(cur.u32()?),\n", ""));
+        let got = lint_str("proto/mod.rs", &src);
+        assert!(
+            got.iter().any(|f| f.rule == RULE_PROTO && f.msg.contains("no Msg::decode arm")),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn proto_literal_tag_flags() {
+        let src = with_marker(&PROTO_OK.replace("buf.put_u8(TAG_A)", "buf.put_u8(1)"));
+        let got = lint_str("proto/mod.rs", &src);
+        assert!(
+            got.iter().any(|f| f.rule == RULE_PROTO && f.msg.contains("literal tag byte")),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn proto_literal_decode_arm_flags() {
+        let src = with_marker(
+            &PROTO_OK.replace("            TAG_A => Msg::A,", "            1 => Msg::A,"),
+        );
+        let got = lint_str("proto/mod.rs", &src);
+        assert!(
+            got.iter().any(|f| f.rule == RULE_PROTO && f.msg.contains("literal tag 1")),
+            "{got:?}"
+        );
+    }
+
+    #[test]
+    fn proto_tag_table_parses() {
+        let t = proto_tag_table(PROTO_OK).unwrap();
+        assert_eq!(t, vec![("TAG_A".to_string(), 1), ("TAG_B".to_string(), 2)]);
+    }
+
+    #[test]
+    fn allowlist_rejects_malformed() {
+        assert!(Allowlist::parse("[[allow]]\nbudget = 3\nreason = \"x\"\n").is_err());
+        assert!(Allowlist::parse("file = \"a\"\n").is_err());
+        assert!(Allowlist::parse("[[allow]]\nfile = \"a\"\nbudget = x\nreason = \"r\"\n").is_err());
+        let dup = "[[allow]]\nfile = \"a\"\nbudget = 1\nreason = \"r\"\n\
+                   [[allow]]\nfile = \"a\"\nbudget = 2\nreason = \"r\"\n";
+        assert!(Allowlist::parse(dup).is_err());
+    }
+}

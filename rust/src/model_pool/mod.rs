@@ -33,11 +33,12 @@ use crate::transport::{fault, RepServer, Reply, ReqClient};
 use crate::util::codec::{Enc, Wire};
 use crate::util::metrics::{Meter, MetricsHub};
 use crate::util::rng::Pcg32;
+use crate::util::sync::OrderedMutex;
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 pub mod shard;
@@ -347,14 +348,14 @@ enum Found {
 /// encoded once OUTSIDE the lock ("respond ... instantaneously") and
 /// the frame is published for subsequent readers.
 fn model_reply(
-    store: &Mutex<Store>,
+    store: &OrderedMutex<Store>,
     sel: Sel,
     have: Option<(u32, u64)>,
     m: &ReadMeters,
 ) -> Reply {
     m.reads.add(1);
     let (key, rev, found) = {
-        let mut st = store.lock().unwrap();
+        let mut st = store.lock();
         let key = match sel {
             Sel::Exact(k) => k,
             Sel::Latest(agent) => match st.latest.get(&agent) {
@@ -391,7 +392,7 @@ fn model_reply(
                 Vec::with_capacity(24 + blob.params.len() * 4 + blob.hp.len() * 4);
             blob.encode(&mut buf);
             let frame: Arc<[u8]> = buf.into();
-            let mut st = store.lock().unwrap();
+            let mut st = store.lock();
             st.encodes += 1;
             // publish unless a concurrent re-put or spill superseded it;
             // the reply itself stays valid either way (REQ/REP snapshot)
@@ -435,7 +436,7 @@ fn redirect_if_absent(reply: Reply, agent: u32, sh: &ShardRole) -> Reply {
 /// One ModelPool replica: a REQ/REP service over the spill-aware store.
 pub struct ModelPoolServer {
     pub addr: String,
-    store: Arc<Mutex<Store>>,
+    store: Arc<OrderedMutex<Store>>,
     stop_flag: Arc<std::sync::atomic::AtomicBool>,
     /// telemetry registry: meters `reads` / `frame_hits` /
     /// `not_modified` / `puts` (hit rate = frame_hits/reads, if-newer
@@ -473,7 +474,8 @@ impl ModelPoolServer {
         opts: PoolOptions,
         shard: ShardRole,
     ) -> Result<ModelPoolServer> {
-        let store = Arc::new(Mutex::new(Store { opts, ..Store::default() }));
+        let store =
+            Arc::new(OrderedMutex::new("model_pool.store", Store { opts, ..Store::default() }));
         let stop_flag = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let hub = Arc::new(MetricsHub::default());
         let meters = ReadMeters {
@@ -495,7 +497,7 @@ impl ModelPoolServer {
                         return Reply::Msg(Msg::WrongShard((*map).clone()));
                     }
                 }
-                s2.lock().unwrap().insert(blob);
+                s2.lock().insert(blob);
                 puts.add(1);
                 Reply::Msg(Msg::Ok)
             }
@@ -540,7 +542,7 @@ impl ModelPoolServer {
                 )),
             },
             Msg::PoolStats => {
-                let st = s2.lock().unwrap();
+                let st = s2.lock();
                 Reply::Msg(Msg::PoolStatsReply {
                     resident_bytes: st.resident as u64,
                     models: st.model_count() as u32,
@@ -590,34 +592,34 @@ impl ModelPoolServer {
     /// Reply-frame (re)builds since start.  A frame-cache hit does not
     /// move this — the zero-encode invariant tests and benches assert.
     pub fn frame_encodes(&self) -> u64 {
-        self.store.lock().unwrap().encodes
+        self.store.lock().encodes
     }
 
     pub fn model_count(&self) -> usize {
-        self.store.lock().unwrap().model_count()
+        self.store.lock().model_count()
     }
 
     /// Bytes currently held in memory (excludes spilled blobs).
     pub fn resident_bytes(&self) -> usize {
-        self.store.lock().unwrap().resident
+        self.store.lock().resident
     }
 
     /// Blobs whose only copy is on disk.
     pub fn spilled_count(&self) -> usize {
-        self.store.lock().unwrap().spilled_count()
+        self.store.lock().spilled_count()
     }
 
     /// Everything this replica stores, for snapshotting.  Spilled blobs
     /// are read from disk after the store lock is released.
     pub fn all_blobs(&self) -> Vec<ModelBlob> {
-        let (resident, spilled) = self.store.lock().unwrap().snapshot_parts();
+        let (resident, spilled) = self.store.lock().snapshot_parts();
         assemble_blobs(resident, &spilled)
     }
 
     /// Restore path: bulk-load snapshot blobs.  `latest` lands on the
     /// highest version per agent regardless of load order.
     pub fn preload(&self, blobs: &[ModelBlob]) {
-        let mut st = self.store.lock().unwrap();
+        let mut st = self.store.lock();
         for b in blobs {
             st.insert(b.clone());
         }
@@ -627,7 +629,7 @@ impl ModelPoolServer {
     pub fn blobs_fn(&self) -> impl Fn() -> Vec<ModelBlob> + Send + 'static {
         let store = self.store.clone();
         move || {
-            let (resident, spilled) = store.lock().unwrap().snapshot_parts();
+            let (resident, spilled) = store.lock().snapshot_parts();
             assemble_blobs(resident, &spilled)
         }
     }
@@ -637,28 +639,28 @@ impl ModelPoolServer {
     /// usually NOT yet an owner under the map the handler would consult
     /// mid-transition.
     pub fn ingest(&self, blob: ModelBlob) {
-        self.store.lock().unwrap().insert(blob);
+        self.store.lock().insert(blob);
     }
 
     /// Whether `key` is stored here (resident or spilled).
     pub fn has_key(&self, key: ModelKey) -> bool {
-        let st = self.store.lock().unwrap();
+        let st = self.store.lock();
         st.blobs.contains_key(&key) || st.on_disk.contains_key(&key)
     }
 
     /// Distinct agents with at least one model on this replica.
     pub fn agents(&self) -> Vec<u32> {
-        self.store.lock().unwrap().agents()
+        self.store.lock().agents()
     }
 
     /// Every key stored for `agent` on this replica (no payloads).
     pub fn keys_for_agent(&self, agent: u32) -> Vec<ModelKey> {
-        self.store.lock().unwrap().keys_for(agent)
+        self.store.lock().keys_for(agent)
     }
 
     /// `agent`'s latest key and its replica-local rev, if present.
     pub fn latest_with_rev(&self, agent: u32) -> Option<(ModelKey, u64)> {
-        let st = self.store.lock().unwrap();
+        let st = self.store.lock();
         let key = *st.latest.get(&agent)?;
         Some((key, st.rev(key)))
     }
@@ -666,17 +668,17 @@ impl ModelPoolServer {
     /// Anti-entropy bookkeeping: the (source slot, source rev) of the
     /// last rebalance transfer of `agent` into this replica.
     pub fn origin_of(&self, agent: u32) -> Option<(u32, u64)> {
-        self.store.lock().unwrap().origin.get(&agent).copied()
+        self.store.lock().origin.get(&agent).copied()
     }
 
     pub fn set_origin(&self, agent: u32, src_slot: u32, src_rev: u64) {
-        self.store.lock().unwrap().origin.insert(agent, (src_slot, src_rev));
+        self.store.lock().origin.insert(agent, (src_slot, src_rev));
     }
 
     /// Drop every trace of `agent` — rebalance GC on an old owner that
     /// lost the agent.  Subsequent reads here redirect via `WrongShard`.
     pub fn evict_agent(&self, agent: u32) {
-        self.store.lock().unwrap().evict_agent(agent);
+        self.store.lock().evict_agent(agent);
     }
 
     /// Per-replica shard report for the `stats` CLI pool section.
@@ -695,12 +697,12 @@ impl ModelPoolServer {
 }
 
 fn shard_info_of(
-    store: &Mutex<Store>,
+    store: &OrderedMutex<Store>,
     hub: &MetricsHub,
     shard: &ShardRole,
     addr: &str,
 ) -> PoolShardInfo {
-    let st = store.lock().unwrap();
+    let st = store.lock();
     let (replica, map_version) = match shard {
         Some((holder, slot)) => (*slot, holder.version()),
         None => (0, 0),
@@ -740,13 +742,13 @@ pub struct ModelPoolClient {
     replicas: Vec<ReqClient>,
     /// cached placement: replaced whenever a reply (or an off-path
     /// `GetShardMap`) carries a strictly newer map.
-    map: Mutex<(Arc<ShardMap>, Arc<shard::Ring>)>,
+    map: OrderedMutex<(Arc<ShardMap>, Arc<shard::Ring>)>,
     /// per-replica dead mark: (retry-after, current backoff ms).  Set on
     /// transport failure, doubled while failures continue, cleared on
     /// the first success.  A marked replica is skipped by routing until
     /// the window expires, so `faults_injected` stays flat under a
     /// sustained partition instead of climbing on every read.
-    dead: Mutex<Vec<Option<(Instant, u64)>>>,
+    dead: OrderedMutex<Vec<Option<(Instant, u64)>>>,
     /// replica preferred for if-newer refreshes: revs are replica-local
     /// put counters, so bouncing between replicas would make them
     /// incomparable and turn every refresh into a full transfer.
@@ -763,8 +765,8 @@ pub struct ModelPoolClient {
     /// agent → (replica index, generation) under which its last `New`
     /// rev was learned; any mismatch downgrades the next if-newer read
     /// to unconditional.
-    have_from: Mutex<HashMap<u32, (usize, u64)>>,
-    rng: Mutex<Pcg32>,
+    have_from: OrderedMutex<HashMap<u32, (usize, u64)>>,
+    rng: OrderedMutex<Pcg32>,
 }
 
 /// Distinct RNG stream per client so co-located clients don't all pick
@@ -796,12 +798,12 @@ impl ModelPoolClient {
         let ring = Arc::new(shard::Ring::build(&map));
         ModelPoolClient {
             replicas: addrs.iter().map(|a| ReqClient::connect(a)).collect(),
-            map: Mutex::new((Arc::new(map), ring)),
-            dead: Mutex::new(vec![None; addrs.len()]),
+            map: OrderedMutex::new("pool_client.map", (Arc::new(map), ring)),
+            dead: OrderedMutex::new("pool_client.dead", vec![None; addrs.len()]),
             sticky: AtomicUsize::new(sticky),
             generation: AtomicU64::new(0),
-            have_from: Mutex::new(HashMap::new()),
-            rng: Mutex::new(rng),
+            have_from: OrderedMutex::new("pool_client.have_from", HashMap::new()),
+            rng: OrderedMutex::new("pool_client.rng", rng),
         }
     }
 
@@ -814,7 +816,7 @@ impl ModelPoolClient {
 
     /// Version of the cached shard map (bootstrap = 1).
     pub fn map_version(&self) -> u64 {
-        self.map.lock().unwrap().0.version
+        self.map.lock().0.version
     }
 
     /// Replica indices currently inside their dead-backoff window — the
@@ -824,14 +826,14 @@ impl ModelPoolClient {
     }
 
     fn map_pair(&self) -> (Arc<ShardMap>, Arc<shard::Ring>) {
-        self.map.lock().unwrap().clone()
+        self.map.lock().clone()
     }
 
     /// Adopt `map` if strictly newer than the cached one.  A placement
     /// change invalidates cross-replica rev state (generation bump).
     fn install_map(&self, map: ShardMap) -> bool {
         {
-            let mut g = self.map.lock().unwrap();
+            let mut g = self.map.lock();
             if map.version <= g.0.version {
                 return false;
             }
@@ -859,7 +861,7 @@ impl ModelPoolClient {
     }
 
     fn mark_dead(&self, idx: usize) {
-        let mut d = self.dead.lock().unwrap();
+        let mut d = self.dead.lock();
         let ms = match d[idx] {
             Some((_, prev)) => (prev * 2).min(DEAD_BACKOFF_CAP_MS),
             None => DEAD_BACKOFF_MS,
@@ -868,12 +870,12 @@ impl ModelPoolClient {
     }
 
     fn mark_alive(&self, idx: usize) {
-        self.dead.lock().unwrap()[idx] = None;
+        self.dead.lock()[idx] = None;
     }
 
     fn is_dead(&self, idx: usize) -> bool {
         matches!(
-            self.dead.lock().unwrap()[idx],
+            self.dead.lock()[idx],
             Some((until, _)) if Instant::now() < until
         )
     }
@@ -912,7 +914,7 @@ impl ModelPoolClient {
                 owners.iter().copied().filter(|i| !banned.contains(i)).collect();
             if unbanned.is_empty() { owners } else { unbanned }
         };
-        let j = self.rng.lock().unwrap().below(cands.len() as u32) as usize;
+        let j = self.rng.lock().below(cands.len() as u32) as usize;
         cands[j]
     }
 
@@ -1058,9 +1060,7 @@ impl ModelPoolClient {
             // older generation is incomparable: downgrade to an
             // unconditional read rather than risk a colliding, bogus
             // NotModified (see the `generation` field docs)
-            let (hv, hr) = if self.have_from.lock().unwrap().get(&agent)
-                == Some(&(idx, gen))
-            {
+            let (hv, hr) = if self.have_from.lock().get(&agent) == Some(&(idx, gen)) {
                 (have_version, have_rev)
             } else {
                 (0, 0)
@@ -1086,10 +1086,7 @@ impl ModelPoolClient {
                     return match reply {
                         Msg::NotModified => Ok(LatestFetch::NotModified),
                         Msg::ModelRev { rev, blob } => {
-                            self.have_from
-                                .lock()
-                                .unwrap()
-                                .insert(agent, (idx, gen));
+                            self.have_from.lock().insert(agent, (idx, gen));
                             Ok(LatestFetch::New { rev, blob })
                         }
                         Msg::NotFound => Ok(LatestFetch::NotFound),

@@ -26,10 +26,11 @@ use crate::proto::{LeagueReport, Msg, RoleStats, RunSlice, WorkerAssignment};
 use crate::telemetry::{snapshot_role, trace, LeagueView};
 use crate::transport::RepServer;
 use crate::util::metrics::MetricsHub;
+use crate::util::sync::OrderedMutex;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 pub const ROLE_LEARNER: &str = "learner";
@@ -645,7 +646,7 @@ pub struct Controller {
     pub addr: String,
     pub cfg: RunConfig,
     core: CoreServices,
-    state: Arc<Mutex<CtrlState>>,
+    state: Arc<OrderedMutex<CtrlState>>,
     /// merged telemetry (worker heartbeat snapshots + local pool hubs)
     view: Arc<LeagueView>,
     pool_hubs: Vec<Arc<MetricsHub>>,
@@ -728,22 +729,25 @@ impl Controller {
                 cfg.inf_servers * 4
             },
         };
-        let state = Arc::new(Mutex::new(CtrlState {
-            learners: (0..cfg.n_agents).map(|_| LearnerSlot::default()).collect(),
-            actors,
-            infs: (0..cfg.inf_servers).map(|_| InfSlot::default()).collect(),
-            workers: HashMap::new(),
-            stats_seq: HashMap::new(),
-            next_worker: 1,
-            lost: 0,
-            reassigned: 0,
-            draining: false,
-            stop_all: false,
-        }));
+        let state = Arc::new(OrderedMutex::new(
+            "controller.state",
+            CtrlState {
+                learners: (0..cfg.n_agents).map(|_| LearnerSlot::default()).collect(),
+                actors,
+                infs: (0..cfg.inf_servers).map(|_| InfSlot::default()).collect(),
+                workers: HashMap::new(),
+                stats_seq: HashMap::new(),
+                next_worker: 1,
+                lost: 0,
+                reassigned: 0,
+                draining: false,
+                stop_all: false,
+            },
+        ));
         if cfg.autoscale {
             // honour explicit minimums from the start — a run declaring
             // min_inf_slots=2 should open both before any signal fires
-            let mut st = state.lock().unwrap();
+            let mut st = state.lock();
             let cur = actor_capacity(&st);
             if cur < actor_bounds.min {
                 grow_actor_slots(
@@ -786,7 +790,7 @@ impl Controller {
         let v2 = view.clone();
         let lpa = cfg.learners_per_agent;
         let server = RepServer::serve(&cfg.controller_bind, move |msg| {
-            let mut st = s2.lock().unwrap();
+            let mut st = s2.lock();
             match msg {
                 Msg::Register { role, slot_hint } => {
                     handle_register(&mut st, &ctx, &role, slot_hint)
@@ -924,7 +928,7 @@ impl Controller {
                     std::thread::sleep(Duration::from_millis(
                         (timeout.as_millis() as u64 / 10).clamp(10, 250),
                     ));
-                    let mut st = s3.lock().unwrap();
+                    let mut st = s3.lock();
                     let dead: Vec<u64> = st
                         .workers
                         .iter()
@@ -1001,7 +1005,7 @@ impl Controller {
                             };
                             let staleness = gauge("learner", "staleness");
                             let fill = gauge("inf-server", "batch_fill");
-                            let mut st = s4.lock().unwrap();
+                            let mut st = s4.lock();
                             if st.stop_all || st.draining {
                                 continue;
                             }
@@ -1104,7 +1108,7 @@ impl Controller {
     /// change is published as an "autoscaler" telemetry row.
     pub fn request_scale(&self, role: &str, delta: i64) -> usize {
         let Some(role) = Role::parse(role) else { return 0 };
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let n = delta.unsigned_abs() as usize;
         let applied = match (role, delta >= 0) {
             (Role::Actor, true) => grow_actor_slots(
@@ -1158,7 +1162,7 @@ impl Controller {
     }
 
     pub fn deploy_stats(&self) -> DeployStatsSnap {
-        stats_of(&self.state.lock().unwrap())
+        stats_of(&self.state.lock())
     }
 
     /// Merged league telemetry: worker heartbeat snapshots plus the
@@ -1174,7 +1178,7 @@ impl Controller {
     }
 
     pub fn learners_done(&self) -> bool {
-        let st = self.state.lock().unwrap();
+        let st = self.state.lock();
         !st.learners.is_empty() && st.learners.iter().all(|l| l.done)
     }
 
@@ -1193,7 +1197,7 @@ impl Controller {
     fn wait_workers(&self, pred: impl Fn(&CtrlState) -> bool, grace: Duration) {
         let start = Instant::now();
         while start.elapsed() < grace {
-            if pred(&self.state.lock().unwrap()) {
+            if pred(&self.state.lock()) {
                 return;
             }
             std::thread::sleep(Duration::from_millis(25));
@@ -1210,12 +1214,12 @@ impl Controller {
         if self.reaper.is_none() {
             return; // already shut down
         }
-        self.state.lock().unwrap().draining = true;
+        self.state.lock().draining = true;
         self.wait_workers(
             |st| !st.workers.values().any(|w| w.role == Role::Actor),
             Duration::from_secs(10),
         );
-        self.state.lock().unwrap().stop_all = true;
+        self.state.lock().stop_all = true;
         self.wait_workers(|st| st.workers.is_empty(), Duration::from_secs(10));
         self.reaper_stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.reaper.take() {

@@ -9,12 +9,60 @@ use crate::util::codec::{Cursor, Enc, Wire};
 use crate::util::metrics::HistDelta;
 use anyhow::{bail, Result};
 
-/// Wire tag of `Msg::Model`.  Public so the ModelPool frame cache can
-/// prepend the tag to a pre-encoded `ModelBlob` without re-encoding the
-/// params (see `transport::Reply::Framed`).
+// lint: proto-registry — league-lint checks this const table against
+// the `Msg::encode`/`Msg::decode` arms below: tag values must be
+// unique, every const must appear on both sides, and neither side may
+// use a literal tag byte.  Add new tags HERE, never inline.
+//
+// Tag ranges: 0-4 control, 10-14 league, 20-29 model pool, 30 data
+// port, 31-39 deployment, 40-41 inference, 42-45 stats/trace, 46 shm
+// lanes, 47-51 pool sharding.
+pub const TAG_OK: u8 = 0;
+pub const TAG_ERR: u8 = 1;
+pub const TAG_PING: u8 = 2;
+pub const TAG_PONG: u8 = 3;
+pub const TAG_SHUTDOWN: u8 = 4;
+pub const TAG_REQUEST_ACTOR_TASK: u8 = 10;
+pub const TAG_TASK: u8 = 11;
+pub const TAG_REPORT_OUTCOME: u8 = 12;
+pub const TAG_REQUEST_LEARNER_TASK: u8 = 13;
+pub const TAG_NOTIFY_PERIOD_DONE: u8 = 14;
+pub const TAG_PUT_MODEL: u8 = 20;
+pub const TAG_GET_MODEL: u8 = 21;
+pub const TAG_GET_LATEST: u8 = 22;
+/// Wire tag of `Msg::Model`.  The ModelPool frame cache prepends this
+/// to a pre-encoded `ModelBlob` without re-encoding the params (see
+/// `transport::Reply::Framed`).
 pub const TAG_MODEL: u8 = 23;
+pub const TAG_NOT_FOUND: u8 = 24;
+pub const TAG_POOL_STATS: u8 = 25;
+pub const TAG_POOL_STATS_REPLY: u8 = 26;
+pub const TAG_GET_MODEL_IF_NEWER: u8 = 27;
 /// Wire tag of `Msg::ModelRev` (same frame-cache trick, plus a rev head).
 pub const TAG_MODEL_REV: u8 = 28;
+pub const TAG_NOT_MODIFIED: u8 = 29;
+pub const TAG_TRAJ: u8 = 30;
+pub const TAG_REGISTER: u8 = 31;
+pub const TAG_ASSIGN: u8 = 32;
+pub const TAG_RETRY: u8 = 33;
+pub const TAG_HEARTBEAT: u8 = 34;
+pub const TAG_HEARTBEAT_ACK: u8 = 35;
+pub const TAG_WORKER_READY: u8 = 36;
+pub const TAG_DEREGISTER: u8 = 37;
+pub const TAG_DEPLOY_STATS: u8 = 38;
+pub const TAG_DEPLOY_STATS_REPLY: u8 = 39;
+pub const TAG_INFER_REQ: u8 = 40;
+pub const TAG_INFER_RESP: u8 = 41;
+pub const TAG_STATS_QUERY: u8 = 42;
+pub const TAG_STATS_REPLY: u8 = 43;
+pub const TAG_TRACE_QUERY: u8 = 44;
+pub const TAG_TRACE_REPLY: u8 = 45;
+pub const TAG_SHM_HELLO: u8 = 46;
+pub const TAG_GET_SHARD_MAP: u8 = 47;
+pub const TAG_SHARD_MAP: u8 = 48;
+pub const TAG_WRONG_SHARD: u8 = 49;
+pub const TAG_POOL_SHARD_QUERY: u8 = 50;
+pub const TAG_POOL_SHARD_REPLY: u8 = 51;
 
 /// Identifies a model: which learning agent produced it + version number.
 /// Version 0 is the seed (random init or imitation-learned) policy.
@@ -822,54 +870,54 @@ impl Wire for WorkerAssignment {
 impl Wire for Msg {
     fn encode(&self, buf: &mut Vec<u8>) {
         match self {
-            Msg::Ok => buf.put_u8(0),
+            Msg::Ok => buf.put_u8(TAG_OK),
             Msg::Err(s) => {
-                buf.put_u8(1);
+                buf.put_u8(TAG_ERR);
                 buf.put_str(s);
             }
-            Msg::Ping => buf.put_u8(2),
-            Msg::Pong => buf.put_u8(3),
-            Msg::Shutdown => buf.put_u8(4),
+            Msg::Ping => buf.put_u8(TAG_PING),
+            Msg::Pong => buf.put_u8(TAG_PONG),
+            Msg::Shutdown => buf.put_u8(TAG_SHUTDOWN),
             Msg::RequestActorTask { actor_id } => {
-                buf.put_u8(10);
+                buf.put_u8(TAG_REQUEST_ACTOR_TASK);
                 buf.put_str(actor_id);
             }
             Msg::Task(t) => {
-                buf.put_u8(11);
+                buf.put_u8(TAG_TASK);
                 t.encode(buf);
             }
             Msg::ReportOutcome(o) => {
-                buf.put_u8(12);
+                buf.put_u8(TAG_REPORT_OUTCOME);
                 o.encode(buf);
             }
             Msg::RequestLearnerTask { learner_id } => {
-                buf.put_u8(13);
+                buf.put_u8(TAG_REQUEST_LEARNER_TASK);
                 buf.put_u32(*learner_id);
             }
             Msg::NotifyPeriodDone { key } => {
-                buf.put_u8(14);
+                buf.put_u8(TAG_NOTIFY_PERIOD_DONE);
                 key.encode(buf);
             }
             Msg::PutModel(b) => {
-                buf.put_u8(20);
+                buf.put_u8(TAG_PUT_MODEL);
                 b.encode(buf);
             }
             Msg::GetModel { key, trace } => {
-                buf.put_u8(21);
+                buf.put_u8(TAG_GET_MODEL);
                 key.encode(buf);
                 put_trace(buf, trace);
             }
             Msg::GetLatest { agent } => {
-                buf.put_u8(22);
+                buf.put_u8(TAG_GET_LATEST);
                 buf.put_u32(*agent);
             }
             Msg::Model(b) => {
                 buf.put_u8(TAG_MODEL);
                 b.encode(buf);
             }
-            Msg::NotFound => buf.put_u8(24),
+            Msg::NotFound => buf.put_u8(TAG_NOT_FOUND),
             Msg::GetModelIfNewer { agent, have_version, have_rev, trace } => {
-                buf.put_u8(27);
+                buf.put_u8(TAG_GET_MODEL_IF_NEWER);
                 buf.put_u32(*agent);
                 buf.put_u32(*have_version);
                 buf.put_u64(*have_rev);
@@ -880,74 +928,71 @@ impl Wire for Msg {
                 buf.put_u64(*rev);
                 blob.encode(buf);
             }
-            Msg::NotModified => buf.put_u8(29),
-            Msg::PoolStats => buf.put_u8(25),
+            Msg::NotModified => buf.put_u8(TAG_NOT_MODIFIED),
+            Msg::PoolStats => buf.put_u8(TAG_POOL_STATS),
             Msg::PoolStatsReply { resident_bytes, models, spilled, reads, frame_hits } => {
-                buf.put_u8(26);
+                buf.put_u8(TAG_POOL_STATS_REPLY);
                 buf.put_u64(*resident_bytes);
                 buf.put_u32(*models);
                 buf.put_u32(*spilled);
                 buf.put_u64(*reads);
                 buf.put_u64(*frame_hits);
             }
-            Msg::GetShardMap => buf.put_u8(47),
+            Msg::GetShardMap => buf.put_u8(TAG_GET_SHARD_MAP),
             Msg::ShardMapMsg(m) => {
-                buf.put_u8(48);
+                buf.put_u8(TAG_SHARD_MAP);
                 m.encode(buf);
             }
             Msg::WrongShard(m) => {
-                buf.put_u8(49);
+                buf.put_u8(TAG_WRONG_SHARD);
                 m.encode(buf);
             }
-            Msg::PoolShardQuery => buf.put_u8(50),
+            Msg::PoolShardQuery => buf.put_u8(TAG_POOL_SHARD_QUERY),
             Msg::PoolShardReply(infos) => {
-                buf.put_u8(51);
+                buf.put_u8(TAG_POOL_SHARD_REPLY);
                 buf.put_u32(infos.len() as u32);
                 for i in infos {
                     i.encode(buf);
                 }
             }
             Msg::Register { role, slot_hint } => {
-                buf.put_u8(31);
+                buf.put_u8(TAG_REGISTER);
                 buf.put_str(role);
                 buf.put_u64(*slot_hint as u64);
             }
             Msg::Assign(a) => {
-                buf.put_u8(32);
+                buf.put_u8(TAG_ASSIGN);
                 a.encode(buf);
             }
             Msg::Retry { backoff_ms, reason } => {
-                buf.put_u8(33);
+                buf.put_u8(TAG_RETRY);
                 buf.put_u32(*backoff_ms);
                 buf.put_str(reason);
             }
             Msg::Heartbeat { worker_id, steps, done, stats } => {
-                buf.put_u8(34);
+                buf.put_u8(TAG_HEARTBEAT);
                 buf.put_u64(*worker_id);
                 buf.put_u64(*steps);
                 buf.put_u8(*done as u8);
-                match stats {
-                    Some(s) => {
-                        buf.put_u8(1);
-                        s.encode(buf);
-                    }
-                    None => buf.put_u8(0),
+                buf.put_u8(stats.is_some() as u8);
+                if let Some(s) = stats {
+                    s.encode(buf);
                 }
             }
             Msg::HeartbeatAck { stop } => {
-                buf.put_u8(35);
+                buf.put_u8(TAG_HEARTBEAT_ACK);
                 buf.put_u8(*stop as u8);
             }
             Msg::WorkerReady { worker_id, addrs } => {
-                buf.put_u8(36);
+                buf.put_u8(TAG_WORKER_READY);
                 buf.put_u64(*worker_id);
                 put_strs(buf, addrs);
             }
             Msg::Deregister { worker_id } => {
-                buf.put_u8(37);
+                buf.put_u8(TAG_DEREGISTER);
                 buf.put_u64(*worker_id);
             }
-            Msg::DeployStats => buf.put_u8(38),
+            Msg::DeployStats => buf.put_u8(TAG_DEPLOY_STATS),
             Msg::DeployStatsReply {
                 workers,
                 lost,
@@ -956,7 +1001,7 @@ impl Wire for Msg {
                 learner_steps,
                 draining,
             } => {
-                buf.put_u8(39);
+                buf.put_u8(TAG_DEPLOY_STATS_REPLY);
                 buf.put_u32(*workers);
                 buf.put_u32(*lost);
                 buf.put_u32(*reassigned);
@@ -965,33 +1010,33 @@ impl Wire for Msg {
                 buf.put_u8(*draining as u8);
             }
             Msg::Traj(t) => {
-                buf.put_u8(30);
+                buf.put_u8(TAG_TRAJ);
                 t.encode(buf);
             }
-            Msg::StatsQuery => buf.put_u8(42),
+            Msg::StatsQuery => buf.put_u8(TAG_STATS_QUERY),
             Msg::StatsReply(r) => {
-                buf.put_u8(43);
+                buf.put_u8(TAG_STATS_REPLY);
                 r.encode(buf);
             }
-            Msg::TraceQuery => buf.put_u8(44),
+            Msg::TraceQuery => buf.put_u8(TAG_TRACE_QUERY),
             Msg::TraceReply(spans) => {
-                buf.put_u8(45);
+                buf.put_u8(TAG_TRACE_REPLY);
                 put_spans(buf, spans);
             }
             Msg::InferReq { key, obs, rows, trace } => {
-                buf.put_u8(40);
+                buf.put_u8(TAG_INFER_REQ);
                 key.encode(buf);
                 buf.put_f32s(obs);
                 buf.put_u32(*rows);
                 put_trace(buf, trace);
             }
             Msg::InferResp { logits, value } => {
-                buf.put_u8(41);
+                buf.put_u8(TAG_INFER_RESP);
                 buf.put_f32s(logits);
                 buf.put_f32s(value);
             }
             Msg::ShmHello { path } => {
-                buf.put_u8(46);
+                buf.put_u8(TAG_SHM_HELLO);
                 buf.put_str(path);
             }
         }
@@ -1000,22 +1045,22 @@ impl Wire for Msg {
     fn decode(cur: &mut Cursor) -> Result<Self> {
         let tag = cur.u8()?;
         Ok(match tag {
-            0 => Msg::Ok,
-            1 => Msg::Err(cur.str()?),
-            2 => Msg::Ping,
-            3 => Msg::Pong,
-            4 => Msg::Shutdown,
-            10 => Msg::RequestActorTask { actor_id: cur.str()? },
-            11 => Msg::Task(TaskSpec::decode(cur)?),
-            12 => Msg::ReportOutcome(MatchOutcome::decode(cur)?),
-            13 => Msg::RequestLearnerTask { learner_id: cur.u32()? },
-            14 => Msg::NotifyPeriodDone { key: ModelKey::decode(cur)? },
-            20 => Msg::PutModel(ModelBlob::decode(cur)?),
-            21 => Msg::GetModel { key: ModelKey::decode(cur)?, trace: get_trace(cur)? },
-            22 => Msg::GetLatest { agent: cur.u32()? },
+            TAG_OK => Msg::Ok,
+            TAG_ERR => Msg::Err(cur.str()?),
+            TAG_PING => Msg::Ping,
+            TAG_PONG => Msg::Pong,
+            TAG_SHUTDOWN => Msg::Shutdown,
+            TAG_REQUEST_ACTOR_TASK => Msg::RequestActorTask { actor_id: cur.str()? },
+            TAG_TASK => Msg::Task(TaskSpec::decode(cur)?),
+            TAG_REPORT_OUTCOME => Msg::ReportOutcome(MatchOutcome::decode(cur)?),
+            TAG_REQUEST_LEARNER_TASK => Msg::RequestLearnerTask { learner_id: cur.u32()? },
+            TAG_NOTIFY_PERIOD_DONE => Msg::NotifyPeriodDone { key: ModelKey::decode(cur)? },
+            TAG_PUT_MODEL => Msg::PutModel(ModelBlob::decode(cur)?),
+            TAG_GET_MODEL => Msg::GetModel { key: ModelKey::decode(cur)?, trace: get_trace(cur)? },
+            TAG_GET_LATEST => Msg::GetLatest { agent: cur.u32()? },
             TAG_MODEL => Msg::Model(ModelBlob::decode(cur)?),
-            24 => Msg::NotFound,
-            27 => Msg::GetModelIfNewer {
+            TAG_NOT_FOUND => Msg::NotFound,
+            TAG_GET_MODEL_IF_NEWER => Msg::GetModelIfNewer {
                 agent: cur.u32()?,
                 have_version: cur.u32()?,
                 have_rev: cur.u64()?,
@@ -1024,30 +1069,30 @@ impl Wire for Msg {
             TAG_MODEL_REV => {
                 Msg::ModelRev { rev: cur.u64()?, blob: ModelBlob::decode(cur)? }
             }
-            29 => Msg::NotModified,
-            25 => Msg::PoolStats,
-            26 => Msg::PoolStatsReply {
+            TAG_NOT_MODIFIED => Msg::NotModified,
+            TAG_POOL_STATS => Msg::PoolStats,
+            TAG_POOL_STATS_REPLY => Msg::PoolStatsReply {
                 resident_bytes: cur.u64()?,
                 models: cur.u32()?,
                 spilled: cur.u32()?,
                 reads: cur.u64()?,
                 frame_hits: cur.u64()?,
             },
-            47 => Msg::GetShardMap,
-            48 => Msg::ShardMapMsg(ShardMap::decode(cur)?),
-            49 => Msg::WrongShard(ShardMap::decode(cur)?),
-            50 => Msg::PoolShardQuery,
-            51 => {
+            TAG_GET_SHARD_MAP => Msg::GetShardMap,
+            TAG_SHARD_MAP => Msg::ShardMapMsg(ShardMap::decode(cur)?),
+            TAG_WRONG_SHARD => Msg::WrongShard(ShardMap::decode(cur)?),
+            TAG_POOL_SHARD_QUERY => Msg::PoolShardQuery,
+            TAG_POOL_SHARD_REPLY => {
                 let n = cur.u32()? as usize;
                 Msg::PoolShardReply(
                     (0..n).map(|_| PoolShardInfo::decode(cur)).collect::<Result<_>>()?,
                 )
             }
-            30 => Msg::Traj(TrajSegment::decode(cur)?),
-            31 => Msg::Register { role: cur.str()?, slot_hint: cur.u64()? as i64 },
-            32 => Msg::Assign(WorkerAssignment::decode(cur)?),
-            33 => Msg::Retry { backoff_ms: cur.u32()?, reason: cur.str()? },
-            34 => Msg::Heartbeat {
+            TAG_TRAJ => Msg::Traj(TrajSegment::decode(cur)?),
+            TAG_REGISTER => Msg::Register { role: cur.str()?, slot_hint: cur.u64()? as i64 },
+            TAG_ASSIGN => Msg::Assign(WorkerAssignment::decode(cur)?),
+            TAG_RETRY => Msg::Retry { backoff_ms: cur.u32()?, reason: cur.str()? },
+            TAG_HEARTBEAT => Msg::Heartbeat {
                 worker_id: cur.u64()?,
                 steps: cur.u64()?,
                 done: cur.u8()? != 0,
@@ -1056,11 +1101,11 @@ impl Wire for Msg {
                     _ => Some(RoleStats::decode(cur)?),
                 },
             },
-            35 => Msg::HeartbeatAck { stop: cur.u8()? != 0 },
-            36 => Msg::WorkerReady { worker_id: cur.u64()?, addrs: get_strs(cur)? },
-            37 => Msg::Deregister { worker_id: cur.u64()? },
-            38 => Msg::DeployStats,
-            39 => Msg::DeployStatsReply {
+            TAG_HEARTBEAT_ACK => Msg::HeartbeatAck { stop: cur.u8()? != 0 },
+            TAG_WORKER_READY => Msg::WorkerReady { worker_id: cur.u64()?, addrs: get_strs(cur)? },
+            TAG_DEREGISTER => Msg::Deregister { worker_id: cur.u64()? },
+            TAG_DEPLOY_STATS => Msg::DeployStats,
+            TAG_DEPLOY_STATS_REPLY => Msg::DeployStatsReply {
                 workers: cur.u32()?,
                 lost: cur.u32()?,
                 reassigned: cur.u32()?,
@@ -1068,29 +1113,33 @@ impl Wire for Msg {
                 learner_steps: cur.u64()?,
                 draining: cur.u8()? != 0,
             },
-            42 => Msg::StatsQuery,
-            43 => Msg::StatsReply(LeagueReport::decode(cur)?),
-            44 => Msg::TraceQuery,
-            45 => Msg::TraceReply(get_spans(cur)?),
-            40 => Msg::InferReq {
+            TAG_STATS_QUERY => Msg::StatsQuery,
+            TAG_STATS_REPLY => Msg::StatsReply(LeagueReport::decode(cur)?),
+            TAG_TRACE_QUERY => Msg::TraceQuery,
+            TAG_TRACE_REPLY => Msg::TraceReply(get_spans(cur)?),
+            TAG_INFER_REQ => Msg::InferReq {
                 key: ModelKey::decode(cur)?,
                 obs: cur.f32s()?,
                 rows: cur.u32()?,
                 trace: get_trace(cur)?,
             },
-            41 => Msg::InferResp { logits: cur.f32s()?, value: cur.f32s()? },
-            46 => Msg::ShmHello { path: cur.str()? },
+            TAG_INFER_RESP => Msg::InferResp { logits: cur.f32s()?, value: cur.f32s()? },
+            TAG_SHM_HELLO => Msg::ShmHello { path: cur.str()? },
             t => bail!("unknown msg tag {t}"),
         })
     }
 }
 
-#[cfg(test)]
-mod tests {
+#[doc(hidden)]
+pub mod testkit {
+    //! Deterministic sample constructors covering every `Msg` variant.
+    //! Not test-gated: shared by the proto unit tests, the lint
+    //! cross-check test (`rust/tests/lint_invariants.rs`), and the
+    //! `lint` bench group.
     use super::*;
     use crate::util::rng::Pcg32;
 
-    fn sample_traj(rng: &mut Pcg32) -> TrajSegment {
+    pub fn sample_traj(rng: &mut Pcg32) -> TrajSegment {
         let t = 1 + rng.below(8);
         let na = 1 + rng.below(2);
         let d = 1 + rng.below(16) as usize;
@@ -1116,8 +1165,9 @@ mod tests {
         }
     }
 
-    #[test]
-    fn msg_roundtrip_all_variants() {
+    /// At least one instance of every `Msg` variant (optional fields
+    /// covered both present and absent).
+    pub fn sample_msgs() -> Vec<Msg> {
         let mut rng = Pcg32::new(3, 1);
         let traj = sample_traj(&mut rng);
         let blob = ModelBlob {
@@ -1338,7 +1388,17 @@ mod tests {
             Msg::InferResp { logits: vec![1.0, 2.0], value: vec![0.3] },
             Msg::ShmHello { path: "/dev/shm/tleague-lane-1-0".into() },
         ];
-        for m in msgs {
+        msgs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrip_all_variants() {
+        for m in testkit::sample_msgs() {
             let bytes = m.to_bytes();
             let back = Msg::from_bytes(&bytes).unwrap();
             assert_eq!(m, back);
@@ -1348,7 +1408,7 @@ mod tests {
     #[test]
     fn traj_roundtrip_fuzz() {
         crate::util::proptest::forall(200, "traj-roundtrip", |rng| {
-            let t = sample_traj(rng);
+            let t = testkit::sample_traj(rng);
             let back = TrajSegment::from_bytes(&t.to_bytes())
                 .map_err(|e| e.to_string())?;
             crate::prop_assert_eq!(t, back);

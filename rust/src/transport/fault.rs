@@ -29,6 +29,7 @@
 
 use crate::util::metrics::Meter;
 use crate::util::rng::Pcg32;
+use crate::util::sync::lock_recover;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -150,8 +151,7 @@ pub fn parse_spec(spec: &str) -> Result<Vec<FaultRule>> {
 /// disables injection entirely.
 pub fn install(seed: u64, rules: Vec<FaultRule>) {
     let on = !rules.is_empty();
-    *PLAN.lock().unwrap() =
-        Some(PlanState { seed, rules, streams: HashMap::new() });
+    *lock_recover(&PLAN) = Some(PlanState { seed, rules, streams: HashMap::new() });
     ENABLED.store(on, Ordering::Relaxed);
 }
 
@@ -164,13 +164,13 @@ pub fn install_spec(seed: u64, spec: &str) -> Result<()> {
 /// Remove the plan; [`check`] returns to its one-atomic-load fast path.
 pub fn clear() {
     ENABLED.store(false, Ordering::Relaxed);
-    *PLAN.lock().unwrap() = None;
+    *lock_recover(&PLAN) = None;
 }
 
 /// Name this process's role for site descriptors (`"actor"`,
 /// `"learner"`, `"controller"`, ...).  Workers call it on assignment.
 pub fn set_role(role: &str) {
-    *ROLE.lock().unwrap() = role.to_string();
+    *lock_recover(&ROLE) = role.to_string();
 }
 
 /// True when a non-empty plan is installed (one relaxed load).

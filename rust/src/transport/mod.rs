@@ -21,6 +21,7 @@ pub mod shm;
 use crate::proto::Msg;
 use crate::util::codec::Wire;
 use crate::util::metrics::Meter;
+use crate::util::sync::lock_recover;
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
 use std::io::{IoSlice, Read, Write as IoWrite};
@@ -349,7 +350,7 @@ fn deliver(inner: RespondTo, reply: Reply) {
     match inner {
         RespondTo::Loop { token, shared, bytes_out } => {
             let frame = encode_reply(reply, &bytes_out);
-            shared.inbox.lock().unwrap().push(Inject::Reply { token, frame });
+            lock_recover(&shared.inbox).push(Inject::Reply { token, frame });
             shared.wake.wake();
         }
         RespondTo::Lane { srv, bytes_out, stop } => {
@@ -468,7 +469,7 @@ impl EventLoop {
             // injected work first, every iteration — wakes coalesce, so
             // the inbox is authoritative, not the eventfd
             let inbox: Vec<Inject> =
-                std::mem::take(&mut *self.shared.inbox.lock().unwrap());
+                std::mem::take(&mut *lock_recover(&self.shared.inbox));
             for inj in inbox {
                 match inj {
                     Inject::Conn(s) => self.register_conn(s),
@@ -519,7 +520,7 @@ impl EventLoop {
                         self.register_conn(stream);
                     } else {
                         let peer = &self.peers[self.rr];
-                        peer.inbox.lock().unwrap().push(Inject::Conn(stream));
+                        lock_recover(&peer.inbox).push(Inject::Conn(stream));
                         peer.wake.wake();
                     }
                 }
@@ -580,6 +581,7 @@ impl EventLoop {
 
     /// Exact-read state machine: header bytes, then payload bytes, then
     /// dispatch; greedy until WouldBlock.  Returns true to close.
+    // lint: nonblocking
     fn drive_read(&mut self, conn: &mut Conn, token: u64) -> bool {
         loop {
             let res = if !conn.in_payload {
@@ -630,6 +632,7 @@ impl EventLoop {
 
     /// One complete frame is in `conn.payload`: run fault checks,
     /// decode, dispatch to the service.  Returns true to close.
+    // lint: nonblocking
     fn on_frame(&self, conn: &mut Conn, token: u64) -> bool {
         match &self.kind {
             Kind::Rep { service, lanes } => {
@@ -637,7 +640,9 @@ impl EventLoop {
                 let tag = conn.payload.first().copied().unwrap_or(0);
                 match fault::check(fault::SITE_REP, &conn.laddr, tag) {
                     fault::Verdict::Pass => {}
-                    fault::Verdict::Delay(d) => std::thread::sleep(d),
+                    fault::Verdict::Delay(d) => {
+                        std::thread::sleep(d) // lint: blocking-ok: seeded fault delay
+                    }
                     fault::Verdict::Drop | fault::Verdict::Reject => return true,
                     fault::Verdict::Truncate => {
                         // claim a longer reply than we send, then die —
@@ -683,7 +688,9 @@ impl EventLoop {
                     conn.payload.first().copied().unwrap_or(0),
                 ) {
                     fault::Verdict::Pass => {}
-                    fault::Verdict::Delay(d) => std::thread::sleep(d),
+                    fault::Verdict::Delay(d) => {
+                        std::thread::sleep(d) // lint: blocking-ok: seeded fault delay
+                    }
                     // swallow just this frame
                     fault::Verdict::Truncate => return false,
                     fault::Verdict::Drop | fault::Verdict::Reject => return true,
@@ -727,6 +734,7 @@ impl EventLoop {
 
     /// Greedy write of the outbound queue, resuming partial frames at
     /// their recorded offset.  Returns true to close.
+    // lint: nonblocking
     fn flush_conn(conn: &mut Conn) -> bool {
         loop {
             let Some(front) = conn.out.front_mut() else {
@@ -767,6 +775,7 @@ impl EventLoop {
 
     /// Keep epoll interest in sync with what the conn can make progress
     /// on: EPOLLIN unless paused, EPOLLOUT only while output is queued.
+    // lint: nonblocking
     fn update_interest(&self, conn: &mut Conn) {
         let mut want = 0u32;
         if !conn.paused {
@@ -783,6 +792,7 @@ impl EventLoop {
     }
 
     /// Re-offer parked pull frames to the queue; unpause on success.
+    // lint: nonblocking
     fn retry_parked(&mut self) {
         let tx = match &self.kind {
             Kind::Pull { tx, .. } => tx.clone(),
@@ -819,6 +829,7 @@ impl EventLoop {
 
     /// Enforce FRAME_STALL_DEADLINE for conns stuck mid-frame — the
     /// event-loop equivalent of `read_full`'s stall tracking.
+    // lint: nonblocking
     fn sweep_stalls(&mut self) {
         let stale: Vec<u64> = self
             .conns
@@ -941,12 +952,12 @@ impl LaneHub {
             laddr: self.laddr.clone(),
             dead: AtomicBool::new(false),
         });
-        self.lanes.lock().unwrap().push(srv);
+        lock_recover(&self.lanes).push(srv);
         Msg::Ok
     }
 
     fn ensure_thread(self: &Arc<Self>) -> bool {
-        let mut h = self.handle.lock().unwrap();
+        let mut h = lock_recover(&self.handle);
         if h.is_some() {
             return true;
         }
@@ -967,7 +978,7 @@ impl LaneHub {
         let mut buf = Vec::new();
         let mut idle = 0u32;
         while !self.stop.load(Ordering::Relaxed) {
-            let lanes: Vec<Arc<LaneSrv>> = self.lanes.lock().unwrap().clone();
+            let lanes: Vec<Arc<LaneSrv>> = lock_recover(&self.lanes).clone();
             if lanes.is_empty() {
                 std::thread::sleep(Duration::from_millis(5));
                 continue;
@@ -1009,7 +1020,7 @@ impl LaneHub {
                 }
             }
             {
-                let mut guard = self.lanes.lock().unwrap();
+                let mut guard = lock_recover(&self.lanes);
                 if guard.iter().any(|s| s.dead.load(Ordering::Relaxed)) {
                     guard.retain(|s| !s.dead.load(Ordering::Relaxed));
                 }
@@ -1025,7 +1036,7 @@ impl LaneHub {
                 }
             }
         }
-        for srv in self.lanes.lock().unwrap().iter() {
+        for srv in lock_recover(&self.lanes).iter() {
             srv.lane.tx.set_closed();
             srv.lane.rx.set_closed();
         }
@@ -1066,7 +1077,7 @@ impl LaneHub {
     }
 
     fn join(&self) {
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        if let Some(h) = lock_recover(&self.handle).take() {
             h.join().ok();
         }
     }
@@ -1401,7 +1412,7 @@ impl ReqClient {
         let payload = msg.to_bytes();
         let tag = payload.first().copied().unwrap_or(0);
         let lanes_wanted = self.lanes_wanted();
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_recover(&self.inner);
         let mut last_err = None;
         let mut failures = 0u32;
         for attempt in 0..attempts {
@@ -1418,7 +1429,7 @@ impl ReqClient {
                         std::thread::sleep(Duration::from_millis(
                             25 * (attempt + 1).min(10),
                         ));
-                        guard = self.inner.lock().unwrap();
+                        guard = lock_recover(&self.inner);
                         continue;
                     }
                 }
@@ -1669,7 +1680,7 @@ impl PushClient {
     pub fn push(&self, msg: &Msg) -> Result<()> {
         let payload = msg.to_bytes();
         let tag = payload.first().copied().unwrap_or(0);
-        let mut guard = self.stream.lock().unwrap();
+        let mut guard = lock_recover(&self.stream);
         let mut failures = 0u32;
         for attempt in 0..40 {
             match Self::push_once(&mut guard, &self.addr, &payload, tag) {
@@ -1686,7 +1697,7 @@ impl PushClient {
                     std::thread::sleep(Duration::from_millis(
                         25 * (attempt + 1).min(10),
                     ));
-                    guard = self.stream.lock().unwrap();
+                    guard = lock_recover(&self.stream);
                 }
             }
         }
@@ -1701,7 +1712,7 @@ impl PushClient {
     pub fn try_push(&self, msg: &Msg) -> Result<()> {
         let payload = msg.to_bytes();
         let tag = payload.first().copied().unwrap_or(0);
-        let mut guard = self.stream.lock().unwrap();
+        let mut guard = lock_recover(&self.stream);
         Self::push_once(&mut guard, &self.addr, &payload, tag)?;
         self.bytes_out.add(payload.len() as u64 + 4);
         Ok(())

@@ -82,6 +82,8 @@ pub struct Poller {
 
 impl Poller {
     pub fn new() -> Result<Poller> {
+        // SAFETY: epoll_create1 takes no pointers; the returned fd is
+        // owned by the Poller and closed exactly once in Drop.
         let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
         if epfd < 0 {
             return Err(os_err("epoll_create1"));
@@ -91,6 +93,8 @@ impl Poller {
 
     fn ctl(&self, op: i32, fd: i32, token: u64, interest: u32) -> Result<()> {
         let mut ev = EpollEvent { events: interest, data: token };
+        // SAFETY: `ev` is a live repr(C) value for the duration of the
+        // call; the kernel copies it and keeps no reference.
         let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
         if rc < 0 {
             return Err(os_err("epoll_ctl"));
@@ -118,6 +122,10 @@ impl Poller {
     pub fn wait(&self, out: &mut Vec<(u64, u32)>, timeout_ms: i32) -> Result<()> {
         out.clear();
         let mut evs = [EpollEvent { events: 0, data: 0 }; 128];
+        // SAFETY: `evs` is a stack array of repr(C) events and
+        // `maxevents` is its exact length, so the kernel writes in
+        // bounds; entries beyond the returned count stay initialized
+        // (zeroed above).
         let n = unsafe {
             epoll_wait(self.epfd, evs.as_mut_ptr(), evs.len() as i32, timeout_ms)
         };
@@ -138,6 +146,8 @@ impl Poller {
 
 impl Drop for Poller {
     fn drop(&mut self) {
+        // SAFETY: the Poller exclusively owns `epfd` (never exposed),
+        // so this is the single close of a valid descriptor.
         unsafe {
             close(self.epfd);
         }
@@ -153,6 +163,8 @@ pub struct WakeFd {
 
 impl WakeFd {
     pub fn new() -> Result<WakeFd> {
+        // SAFETY: eventfd takes no pointers; the fd is owned by the
+        // WakeFd and closed exactly once in Drop.
         let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
         if fd < 0 {
             return Err(os_err("eventfd"));
@@ -168,6 +180,8 @@ impl WakeFd {
     /// EAGAIN) still leave the fd readable, so errors are ignored.
     pub fn wake(&self) {
         let one = 1u64.to_ne_bytes();
+        // SAFETY: writes 8 bytes from a live stack buffer of exactly
+        // that size to an fd this WakeFd owns.
         unsafe {
             let _ = write(self.fd, one.as_ptr(), one.len());
         }
@@ -176,6 +190,8 @@ impl WakeFd {
     /// Reset the counter so the fd stops polling readable.
     pub fn drain(&self) {
         let mut buf = [0u8; 8];
+        // SAFETY: reads at most 8 bytes into a live stack buffer of
+        // exactly that size from an fd this WakeFd owns.
         unsafe {
             let _ = read(self.fd, buf.as_mut_ptr(), buf.len());
         }
@@ -184,17 +200,26 @@ impl WakeFd {
 
 impl Drop for WakeFd {
     fn drop(&mut self) {
+        // SAFETY: the WakeFd exclusively owns `fd`; this is its single
+        // close.  `raw()` borrowers are loop-local registrations that
+        // are deregistered before the owning Arc drops.
         unsafe {
             close(self.fd);
         }
     }
 }
 
+// SAFETY: WakeFd is an immutable i32 fd; eventfd read/write are atomic
+// kernel ops, safe from any thread concurrently.
 unsafe impl Send for WakeFd {}
+// SAFETY: see Send — `wake`/`drain` take &self and race benignly (the
+// counter saturates; the fd simply stays readable).
 unsafe impl Sync for WakeFd {}
 
 fn set_buf_opt(fd: i32, opt: i32, bytes: usize) -> Result<()> {
     let val = bytes as i32;
+    // SAFETY: passes a pointer to a live i32 with its exact size; the
+    // kernel copies the value during the call.
     let rc = unsafe {
         setsockopt(
             fd,
@@ -226,6 +251,7 @@ pub fn set_rcvbuf(fd: i32, bytes: usize) -> Result<()> {
 /// 4096-connection row is skipped when this is too low).
 pub fn nofile_limit() -> u64 {
     let mut r = Rlimit { rlim_cur: 0, rlim_max: 0 };
+    // SAFETY: `r` is a live repr(C) struct the kernel fills in bounds.
     let rc = unsafe { getrlimit(RLIMIT_NOFILE, &mut r) };
     if rc < 0 {
         return 0;

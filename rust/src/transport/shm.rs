@@ -71,10 +71,12 @@ pub struct ShmRing {
     unlink: Option<PathBuf>,
 }
 
-// The raw pointer is to a MAP_SHARED region; all cross-thread access
-// goes through the atomic header words and the Release/Acquire cursor
-// protocol above.
+// SAFETY: the raw pointer is to a MAP_SHARED region that stays mapped
+// for the ring's lifetime; all cross-thread access goes through the
+// atomic header words and the Release/Acquire cursor protocol above.
 unsafe impl Send for ShmRing {}
+// SAFETY: see Send — &self methods only touch the mapping via atomics
+// or inside the cursor-protocol exclusive windows.
 unsafe impl Sync for ShmRing {}
 
 impl ShmRing {
@@ -85,6 +87,9 @@ impl ShmRing {
             .write(true)
             .open(path)
             .with_context(|| format!("open ring {}", path.display()))?;
+        // SAFETY: mmap with a null hint maps `len` bytes of the open
+        // file; arguments are plain values and the fd outlives the
+        // call.  The result is validated before use below.
         let base = unsafe {
             mmap(
                 std::ptr::null_mut(),
@@ -164,14 +169,20 @@ impl ShmRing {
     }
 
     fn at_u64(&self, off: usize) -> &AtomicU64 {
+        // SAFETY: `off` is one of the 8-aligned header offsets inside
+        // the 64-byte header; the mapping outlives &self, and shared
+        // mutation is done by the kernel/peer only through atomics.
         unsafe { &*(self.base.add(off) as *const AtomicU64) }
     }
 
     fn at_u32(&self, off: usize) -> &AtomicU32 {
+        // SAFETY: same as `at_u64` — aligned header word, live mapping.
         unsafe { &*(self.base.add(off) as *const AtomicU32) }
     }
 
     fn data(&self) -> *mut u8 {
+        // SAFETY: HDR is within the mapping (map_len = HDR + cap,
+        // validated at open/create).
         unsafe { self.base.add(HDR) }
     }
 
@@ -179,6 +190,10 @@ impl ShmRing {
     fn copy_in(&self, at: u64, src: &[u8]) {
         let off = (at & self.mask) as usize;
         let first = src.len().min(self.cap as usize - off);
+        // SAFETY: both chunks stay inside [data, data+cap) by
+        // construction (`off < cap`, `first <= cap - off`); writers
+        // hold the exclusive producer window granted by the cursor
+        // protocol, so ranges never overlap live reader bytes.
         unsafe {
             std::ptr::copy_nonoverlapping(src.as_ptr(), self.data().add(off), first);
             if first < src.len() {
@@ -195,6 +210,8 @@ impl ShmRing {
     fn copy_out(&self, at: u64, dst: &mut [u8]) {
         let off = (at & self.mask) as usize;
         let first = dst.len().min(self.cap as usize - off);
+        // SAFETY: mirror of `copy_in` — in-bounds chunks inside the
+        // consumer's exclusive window, into a caller-owned buffer.
         unsafe {
             std::ptr::copy_nonoverlapping(self.data().add(off), dst.as_mut_ptr(), first);
             if first < dst.len() {
@@ -221,6 +238,7 @@ impl ShmRing {
 
     /// [`try_write_frame`](Self::try_write_frame) from scattered parts
     /// (a `Reply::Framed` head + shared tail) without a staging concat.
+    // lint: nonblocking
     pub fn try_write_frame_parts(&self, parts: &[&[u8]]) -> Result<bool> {
         let total: usize = parts.iter().map(|p| p.len()).sum();
         let rec = total as u64 + 4;
@@ -243,6 +261,7 @@ impl ShmRing {
     }
 
     /// Try to pop one record into `buf`.  `Ok(false)` = ring empty.
+    // lint: nonblocking
     pub fn try_read_frame(&self, buf: &mut Vec<u8>) -> Result<bool> {
         let tail = self.at_u64(OFF_TAIL).load(Ordering::Relaxed);
         let head = self.at_u64(OFF_HEAD).load(Ordering::Acquire);
@@ -288,6 +307,8 @@ impl ShmRing {
 
 impl Drop for ShmRing {
     fn drop(&mut self) {
+        // SAFETY: unmaps the exact region this ring mapped; &mut self
+        // guarantees no outstanding borrows of the mapping.
         unsafe {
             munmap(self.base, self.map_len);
         }
@@ -383,6 +404,7 @@ mod tests {
     /// Frames survive many laps of the cursor, including records that
     /// straddle the wrap point, byte-for-byte.
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed mmap FFI is outside Miri's model")]
     fn wraparound_preserves_frames() {
         let r = ring(4096); // real capacity: 4096
         let mut buf = Vec::new();
@@ -403,6 +425,7 @@ mod tests {
     /// Writer-faster-than-reader: the ring refuses writes when full and
     /// accepts again after a drain, never overwriting unread data.
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed mmap FFI is outside Miri's model")]
     fn full_ring_applies_backpressure() {
         let r = ring(4096);
         let payload = [7u8; 1000]; // 1004-byte records
@@ -427,6 +450,7 @@ mod tests {
     /// One-side-crash detection: a beat that keeps advancing is never
     /// stale; a frozen beat is, once the deadline passes.
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed mmap FFI is outside Miri's model")]
     fn stale_heartbeat_detected() {
         let r = ring(4096);
         let timeout = Duration::from_millis(40);
@@ -452,6 +476,7 @@ mod tests {
     /// A payload that can never fit errors instead of blocking forever;
     /// the closed flag crosses the mapping.
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed mmap FFI is outside Miri's model")]
     fn oversize_rejected_and_close_flag_crosses() {
         let r = ring(4096);
         assert!(r.try_write_frame(&[0u8; 8192]).is_err());
@@ -463,6 +488,7 @@ mod tests {
     /// Lane plumbing: attach sees create's rings with directions
     /// swapped, and frames cross between the two mappings.
     #[test]
+    #[cfg_attr(miri, ignore = "file-backed mmap FFI is outside Miri's model")]
     fn lane_create_attach_roundtrip() {
         let (client, base) =
             ShmLane::create(&std::env::temp_dir(), 4096).unwrap();

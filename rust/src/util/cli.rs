@@ -184,6 +184,20 @@ subcommands:
     (SIGINT/SIGTERM or a wire Shutdown message stops it cleanly)
   league-mgr   standalone LeagueMgr (same shutdown paths)
     --bind host:port --n-agents N --n-opponents N --game-mgr <name> --seed S
+
+dev tooling (separate binary, run by ci.sh as a hard gate):
+  league-lint  project-invariant static analyzer: proto tag registry
+               conformance, unsafe-block SAFETY hygiene, nonblocking
+               region enforcement, and the network-path unwrap budget
+               (cargo run --bin league-lint; see DESIGN.md
+               'Correctness tooling')
+    --root <dir>             tree to lint (default rust/src)
+    --allow <file>           unwrap-budget allowlist (default
+                             lint-allow.toml; missing = empty,
+                             malformed = hard error)
+    --check-file <f>         lint the given file(s) instead of the tree
+    --self-test <dir>        run the analyzer's seeded-bad fixture
+                             suite (rust/lint-fixtures)
 ";
 
 #[derive(Debug, Default, Clone)]

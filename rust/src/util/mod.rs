@@ -1,5 +1,6 @@
 //! Substrate utilities the offline crate set lacks: RNG, JSON, CLI
-//! parsing, binary codec, metrics, and a property-testing harness.
+//! parsing, binary codec, metrics, lock-order-checked sync primitives,
+//! and a property-testing harness.
 
 pub mod cli;
 pub mod codec;
@@ -8,3 +9,4 @@ pub mod metrics;
 pub mod proptest;
 pub mod rng;
 pub mod signal;
+pub mod sync;

@@ -21,6 +21,9 @@ fn install_handlers() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    // SAFETY: `signal` is the libc symbol with its exact C signature;
+    // `on_signal` is `extern "C"` and only performs an async-signal-safe
+    // atomic store, and it outlives the process (a fn item).
     unsafe {
         let _ = signal(SIGINT, on_signal);
         let _ = signal(SIGTERM, on_signal);

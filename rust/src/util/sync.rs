@@ -1,0 +1,337 @@
+//! Concurrency-correctness primitives: poison recovery + lock-order
+//! checking.
+//!
+//! `lock_recover` replaces panic-on-poison `.lock().unwrap()` on server
+//! request paths: a worker thread that panicked while holding a mutex
+//! poisons it, and without recovery every subsequent request into that
+//! mutex panics too, wedging the whole server.  The data under our
+//! mutexes is always left consistent at panic sites (inserts and reads
+//! are atomic at the Store level), so recovery is `into_inner` plus a
+//! once-logged process-wide counter.
+//!
+//! `OrderedMutex` is the runtime half of the league-lint concurrency
+//! harness: in debug builds every acquisition records a held-before
+//! edge between lock *classes* (the `&'static str` name passed to
+//! `new`, not the instance) into a process-global acquisition graph,
+//! and an acquisition that would close a cycle — a lock-order
+//! inversion, i.e. a potential deadlock — panics with both orders
+//! spelled out, even if the schedule that would actually deadlock was
+//! never hit.  Release builds compile down to a plain `Mutex` +
+//! `lock_recover` with zero tracking.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, Once, WaitTimeoutResult};
+use std::time::Duration;
+
+static POISON_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+static POISON_LOG: Once = Once::new();
+
+/// Lock `m`, recovering from poisoning instead of panicking.  The first
+/// recovery in the process logs to stderr; every recovery bumps the
+/// [`poison_recoveries`] counter so telemetry can surface it.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+fn note_poison() {
+    POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+    POISON_LOG.call_once(|| {
+        eprintln!(
+            "warn: recovered a poisoned lock (a thread panicked while holding it); \
+             further recoveries are counted silently"
+        );
+    });
+}
+
+/// Process-wide count of poisoned-lock recoveries (0 in a healthy run).
+pub fn poison_recoveries() -> u64 {
+    POISON_RECOVERIES.load(Ordering::Relaxed)
+}
+
+#[cfg(debug_assertions)]
+mod order {
+    //! The global lock-acquisition graph.  Nodes are lock classes; a
+    //! directed edge a→b is recorded the first time some thread
+    //! acquires b while holding a.  Acquiring `b` while holding `a`
+    //! when a path b→…→a already exists would make the order cyclic,
+    //! so it panics before blocking on the inner mutex (reporting the
+    //! inversion even on schedules that would not deadlock today).
+
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    struct Graph {
+        names: Vec<&'static str>,
+        ids: HashMap<&'static str, usize>,
+        /// edges[a] = classes observed acquired while a was held.
+        edges: Vec<Vec<usize>>,
+    }
+
+    impl Graph {
+        /// Is `to` reachable from `from` over recorded edges?
+        fn reaches(&self, from: usize, to: usize) -> bool {
+            let mut seen = vec![false; self.names.len()];
+            let mut stack = vec![from];
+            while let Some(n) = stack.pop() {
+                if n == to {
+                    return true;
+                }
+                if seen[n] {
+                    continue;
+                }
+                seen[n] = true;
+                stack.extend(self.edges[n].iter().copied());
+            }
+            false
+        }
+    }
+
+    fn graph() -> &'static Mutex<Graph> {
+        static G: OnceLock<Mutex<Graph>> = OnceLock::new();
+        G.get_or_init(|| {
+            Mutex::new(Graph { names: Vec::new(), ids: HashMap::new(), edges: Vec::new() })
+        })
+    }
+
+    thread_local! {
+        /// Classes held by this thread, in acquisition order.
+        static HELD: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub fn class_id(name: &'static str) -> usize {
+        let mut g = super::lock_recover(graph());
+        if let Some(&id) = g.ids.get(name) {
+            return id;
+        }
+        let id = g.names.len();
+        g.names.push(name);
+        g.ids.insert(name, id);
+        g.edges.push(Vec::new());
+        id
+    }
+
+    /// Record held→class edges; panic if one would create a cycle.
+    /// Called BEFORE blocking on the inner mutex so the inversion is
+    /// reported instead of deadlocking.
+    pub fn on_acquire(class: usize) {
+        let held: Vec<usize> = HELD.with(|h| h.borrow().clone());
+        if !held.is_empty() {
+            let mut g = super::lock_recover(graph());
+            for &hc in &held {
+                if hc == class || g.edges[hc].contains(&class) {
+                    continue;
+                }
+                if g.reaches(class, hc) {
+                    let (a, b) = (g.names[hc], g.names[class]);
+                    drop(g);
+                    panic!(
+                        "lock-order inversion: acquiring '{b}' while holding '{a}', \
+                         but the recorded global order already requires '{b}' before '{a}'"
+                    );
+                }
+                g.edges[hc].push(class);
+            }
+        }
+        HELD.with(|h| h.borrow_mut().push(class));
+    }
+
+    pub fn on_release(class: usize) {
+        HELD.with(|h| {
+            let mut v = h.borrow_mut();
+            if let Some(pos) = v.iter().rposition(|&c| c == class) {
+                v.remove(pos);
+            }
+        });
+    }
+}
+
+/// A mutex with (debug-only) global lock-order checking and built-in
+/// poison recovery.  `name` identifies the lock *class* — every
+/// instance created with the same name shares one node in the
+/// acquisition graph, so per-slot or per-shard instances don't blow the
+/// graph up.
+pub struct OrderedMutex<T> {
+    name: &'static str,
+    #[cfg(debug_assertions)]
+    class: usize,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    pub fn new(name: &'static str, value: T) -> OrderedMutex<T> {
+        OrderedMutex {
+            name,
+            #[cfg(debug_assertions)]
+            class: order::class_id(name),
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// Acquire, recovering from poisoning.  In debug builds, panics if
+    /// this acquisition inverts the recorded global lock order.
+    pub fn lock(&self) -> OrderedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        order::on_acquire(self.class);
+        OrderedGuard {
+            guard: Some(lock_recover(&self.inner)),
+            #[cfg(debug_assertions)]
+            class: self.class,
+        }
+    }
+
+    /// `Condvar::wait_timeout` against this mutex.  The wait re-acquires
+    /// the same class it released, so the held-set bookkeeping carries
+    /// through unchanged.
+    pub fn wait_timeout<'a>(
+        &self,
+        cv: &Condvar,
+        mut g: OrderedGuard<'a, T>,
+        dur: Duration,
+    ) -> (OrderedGuard<'a, T>, WaitTimeoutResult) {
+        let inner = g.guard.take().expect("guard already consumed");
+        let (inner, res) = match cv.wait_timeout(inner, dur) {
+            Ok(pair) => pair,
+            Err(poisoned) => {
+                note_poison();
+                poisoned.into_inner()
+            }
+        };
+        g.guard = Some(inner);
+        (g, res)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "OrderedMutex({})", self.name)
+    }
+}
+
+/// Guard returned by [`OrderedMutex::lock`]; releases the class from the
+/// thread's held set on drop.
+pub struct OrderedGuard<'a, T> {
+    /// `Option` only so `wait_timeout` can hand the inner guard to the
+    /// condvar and put it back; always `Some` outside that window.
+    guard: Option<MutexGuard<'a, T>>,
+    #[cfg(debug_assertions)]
+    class: usize,
+}
+
+impl<T> Deref for OrderedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard consumed")
+    }
+}
+
+impl<T> DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard consumed")
+    }
+}
+
+impl<T> Drop for OrderedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        order::on_release(self.class);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_recovers_poison() {
+        let m = Arc::new(Mutex::new(5u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 5);
+        assert!(poison_recoveries() >= 1);
+    }
+
+    #[test]
+    fn ordered_mutex_basic() {
+        let m = OrderedMutex::new("sync-test-basic", 1u32);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 2);
+        assert_eq!(m.name(), "sync-test-basic");
+    }
+
+    #[test]
+    fn consistent_order_is_fine() {
+        let a = OrderedMutex::new("sync-test-co-a", ());
+        let b = OrderedMutex::new("sync-test-co-b", ());
+        for _ in 0..3 {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+    }
+
+    #[test]
+    fn same_class_instances_do_not_self_edge() {
+        // Two instances of one class held together must not create a
+        // self-loop (per-shard locks of the same kind).
+        let a = OrderedMutex::new("sync-test-same", 0u8);
+        let b = OrderedMutex::new("sync-test-same", 0u8);
+        let _ga = a.lock();
+        let _gb = b.lock();
+    }
+
+    #[test]
+    fn detects_lock_order_inversion() {
+        let a = Arc::new(OrderedMutex::new("sync-test-inv-a", ()));
+        let b = Arc::new(OrderedMutex::new("sync-test-inv-b", ()));
+        // Establish a→b on another thread.
+        {
+            let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+            std::thread::spawn(move || {
+                let _ga = a.lock();
+                let _gb = b.lock();
+            })
+            .join()
+            .unwrap();
+        }
+        // b→a closes the cycle: must panic in debug builds.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _gb = b.lock();
+            let _ga = a.lock();
+        }));
+        if cfg!(debug_assertions) {
+            assert!(res.is_err(), "inversion went undetected");
+        } else {
+            assert!(res.is_ok());
+        }
+    }
+
+    #[test]
+    fn wait_timeout_round_trips_guard() {
+        let m = OrderedMutex::new("sync-test-cv", 0u32);
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (mut g, res) = m.wait_timeout(&cv, g, Duration::from_millis(5));
+        assert!(res.timed_out());
+        *g += 1;
+        drop(g);
+        assert_eq!(*m.lock(), 1);
+    }
+}

@@ -1,0 +1,90 @@
+//! Cross-checks between the live wire protocol and league-lint's view
+//! of it, plus the analyzer's own fixture suite.  The point: the lint's
+//! tag table is parsed *lexically* from proto/mod.rs, so these tests
+//! pin the lexical view to runtime behavior — if either drifts (a new
+//! variant, a renumbered tag, a decode arm dropped), something here or
+//! in `league-lint` itself goes red.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use tleague::lint;
+use tleague::proto::testkit;
+use tleague::util::codec::Wire;
+
+fn proto_src() -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src/proto/mod.rs");
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+/// The lexical tag table parses, has no duplicate values, and every
+/// name follows the TAG_ convention.
+#[test]
+fn tag_table_parses_and_is_unique() {
+    let table = lint::proto_tag_table(&proto_src()).expect("tag table");
+    assert!(table.len() >= 42, "expected the full registry, got {}", table.len());
+    let values: BTreeSet<u8> = table.iter().map(|(_, v)| *v).collect();
+    assert_eq!(values.len(), table.len(), "duplicate wire tag values");
+    for (name, _) in &table {
+        assert!(name.starts_with("TAG_"), "non-conventional const {name}");
+    }
+}
+
+/// Property: every Msg variant round-trips encode → decode → encode
+/// bit-exactly, and the first byte of each encoding is a value from the
+/// lexical tag table.
+#[test]
+fn every_variant_roundtrips_under_table_tags() {
+    let table = lint::proto_tag_table(&proto_src()).expect("tag table");
+    let values: BTreeSet<u8> = table.iter().map(|(_, v)| *v).collect();
+    let msgs = testkit::sample_msgs();
+    assert!(msgs.len() >= 42, "sample set shrank to {}", msgs.len());
+    for (i, msg) in msgs.iter().enumerate() {
+        let bytes = msg.to_bytes();
+        let tag = *bytes.first().unwrap_or_else(|| panic!("sample {i} encoded empty"));
+        assert!(values.contains(&tag), "sample {i} ({msg:?}) used unregistered tag {tag}");
+        let decoded = tleague::proto::Msg::from_bytes(&bytes)
+            .unwrap_or_else(|e| panic!("sample {i} ({msg:?}) failed decode: {e}"));
+        let re = decoded.to_bytes();
+        assert_eq!(bytes, re, "sample {i} ({msg:?}) re-encoded differently");
+    }
+}
+
+/// Coverage: the sample set exercises EVERY registered tag, so a new
+/// tag const without a testkit sample fails here rather than shipping
+/// untested.
+#[test]
+fn sample_set_covers_every_tag() {
+    let table = lint::proto_tag_table(&proto_src()).expect("tag table");
+    let declared: BTreeSet<u8> = table.iter().map(|(_, v)| *v).collect();
+    let observed: BTreeSet<u8> =
+        testkit::sample_msgs().iter().filter_map(|m| m.to_bytes().first().copied()).collect();
+    let unexercised: Vec<u8> = declared.difference(&observed).copied().collect();
+    assert!(unexercised.is_empty(), "tags with no testkit sample: {unexercised:?}");
+    let unregistered: Vec<u8> = observed.difference(&declared).copied().collect();
+    assert!(unregistered.is_empty(), "samples using unregistered tags: {unregistered:?}");
+}
+
+/// The seeded-bad fixture suite behaves as labeled (each `<rule>__*.rs`
+/// is flagged by that rule; `clean__*.rs` is clean).
+#[test]
+fn fixture_suite_behaves_as_seeded() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/lint-fixtures");
+    let msg = lint::self_test(&dir).expect("fixture suite");
+    assert!(msg.contains("self-test OK"), "{msg}");
+}
+
+/// The shipped tree is lint-clean under the checked-in allowlist — the
+/// same invariant the CI stage enforces, runnable via `cargo test`.
+#[test]
+fn shipped_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let allow = lint::Allowlist::load(&root.join("lint-allow.toml")).expect("allowlist");
+    let (findings, files, _) = lint::lint_tree(&root.join("rust/src"), &allow).expect("walk");
+    assert!(files > 20, "walked only {files} files — wrong root?");
+    assert!(
+        findings.is_empty(),
+        "league-lint findings on the shipped tree:\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
